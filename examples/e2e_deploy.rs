@@ -1,0 +1,119 @@
+//! END-TO-END VALIDATION DRIVER (the run recorded in EXPERIMENTS.md §E2E).
+//!
+//! Proves all three layers of the stack compose on one real workload:
+//!
+//!   1. msf-CNN optimizer (L3) plans a 4 kB deployment of the quickstart
+//!      CNN — the same architecture `python/compile/` AOT-lowered with
+//!      Pallas kernels (L1) inside a JAX graph (L2) into `artifacts/`.
+//!   2. The pure-Rust executor runs vanilla + fused plans under a tracked
+//!      arena, verifying numerics and the measured peak-RAM cut.
+//!   3. The PJRT runtime loads the HLO artifacts (same weights via
+//!      `weights.json`) and must agree with the Rust executor.
+//!   4. The serving coordinator then handles 200 batched requests on the
+//!      fused artifact and reports latency/throughput.
+//!
+//! ```sh
+//! make artifacts && cargo run --offline --release --example e2e_deploy
+//! ```
+
+use msf_cnn::coordinator::{InferenceServer, ServerConfig};
+use msf_cnn::exec::Engine;
+use msf_cnn::graph::FusionDag;
+use msf_cnn::memory::Arena;
+use msf_cnn::ops::{ParamGen, Tensor};
+use msf_cnn::optimizer::{minimize_ram_unconstrained, vanilla_setting};
+use msf_cnn::report::kb;
+use msf_cnn::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    println!("== msf-CNN end-to-end validation ==\n");
+
+    // --- Stage 1: plan -------------------------------------------------
+    let engine = Engine::quickstart_from_artifacts(&artifacts)?;
+    let model = engine.model().clone();
+    let dag = FusionDag::build(&model, None);
+    let fused = minimize_ram_unconstrained(&dag).expect("setting");
+    let vanilla = vanilla_setting(&dag);
+    println!("[1] optimizer: vanilla {:.3} kB -> fused {} @ {:.3} kB (F={:.2})",
+        kb(vanilla.cost.peak_ram), fused.describe(), kb(fused.cost.peak_ram), fused.cost.overhead);
+
+    // --- Stage 2: execute with tracked RAM -----------------------------
+    let x: Vec<f32> = ParamGen::new(2024).fill(32 * 32 * 3, 2.0);
+    let input = Tensor::from_data(32, 32, 3, x.clone());
+    let mut a1 = Arena::unbounded();
+    let rv = engine.run(&vanilla, &input, &mut a1)?;
+    let mut a2 = Arena::unbounded();
+    let rf = engine.run(&fused, &input, &mut a2)?;
+    let exec_diff = rv
+        .output
+        .iter()
+        .zip(&rf.output)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!(
+        "[2] executor: measured peaks {:.3} kB (vanilla) vs {:.3} kB (fused), Δlogits {exec_diff:.2e}",
+        kb(rv.peak_ram),
+        kb(rf.peak_ram)
+    );
+    assert!(exec_diff < 1e-3, "fused execution must be numerically invisible");
+    assert!(rf.peak_ram < rv.peak_ram, "fusion must cut measured RAM");
+
+    // --- Stage 3: cross-check against the XLA artifacts ----------------
+    let mut rt = Runtime::open(&artifacts)?;
+    let xla_vanilla = rt.run_f32("model_vanilla", &x)?;
+    let xla_fused = rt.run_f32("model_fused", &x)?;
+    let stack_diff = xla_vanilla
+        .iter()
+        .zip(&rv.output)
+        .chain(xla_fused.iter().zip(&rf.output))
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!(
+        "[3] PJRT artifacts (Pallas->JAX->HLO) agree with Rust executor: Δ {stack_diff:.2e}"
+    );
+    assert!(stack_diff < 1e-2, "three-layer stack disagrees");
+
+    // --- Stage 4: serve -------------------------------------------------
+    let server = InferenceServer::start(
+        &artifacts,
+        ServerConfig { entry: "model_fused".into(), queue_cap: 128, batch_max: 8 },
+    )?;
+    let handle = server.handle();
+    handle.infer(x.clone())?; // warm
+    let t0 = std::time::Instant::now();
+    let mut threads = Vec::new();
+    for t in 0..4u64 {
+        let h = server.handle();
+        threads.push(std::thread::spawn(move || {
+            let mut gen = ParamGen::new(31 + t);
+            let mut ok = 0;
+            for _ in 0..50 {
+                if h.infer(gen.fill(32 * 32 * 3, 2.0)).is_ok() {
+                    ok += 1;
+                }
+            }
+            ok
+        }));
+    }
+    let ok: usize = threads.into_iter().map(|j| j.join().unwrap()).sum();
+    let dt = t0.elapsed();
+    let stats = handle.metrics().stats().expect("stats");
+    println!(
+        "[4] coordinator: {ok}/200 requests, {:.0} req/s, p50 {:.0} us, p99 {:.0} us",
+        ok as f64 / dt.as_secs_f64(),
+        stats.p50_us,
+        stats.p99_us
+    );
+    assert_eq!(ok, 200);
+    drop(handle);
+    server.shutdown();
+
+    println!(
+        "\nE2E PASS: optimizer -> tracked executor -> PJRT artifacts -> serving, \
+         RAM cut {:.1}% at F={:.2}.",
+        100.0 * (1.0 - rf.peak_ram as f64 / rv.peak_ram as f64),
+        fused.cost.overhead
+    );
+    Ok(())
+}

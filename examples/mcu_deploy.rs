@@ -1,0 +1,87 @@
+//! Deployment advisor: pick a board, find the best fusion setting that
+//! fits its RAM, and simulate the result — the paper's §8 workflow
+//! ("users can produce optimal CNN fusion configurations tailored to
+//! specific industrial hardware requirements").
+//!
+//! ```sh
+//! cargo run --offline --release --example mcu_deploy
+//! ```
+
+use msf_cnn::exec::Engine;
+use msf_cnn::graph::FusionDag;
+use msf_cnn::mcu::{estimate_latency_ms, BOARDS};
+use msf_cnn::memory::Arena;
+use msf_cnn::ops::{ParamGen, Tensor};
+use msf_cnn::optimizer::minimize_macs;
+use msf_cnn::report::kb;
+use msf_cnn::zoo;
+
+fn main() {
+    let models = zoo::paper_models();
+    println!("Deployment matrix: best (lowest-latency) setting that fits each board.\n");
+    println!(
+        "{:<18} {:>10}  {:<12} {:>11} {:>7} {:>12}",
+        "board", "RAM", "model", "peak RAM", "F", "latency"
+    );
+    println!("{}", "-".repeat(76));
+
+    for board in BOARDS {
+        for (label, model) in &models {
+            let dag = FusionDag::build(model, None);
+            // P2 with the board's physical RAM as the budget: the fastest
+            // plan that fits.
+            match minimize_macs(&dag, board.ram_bytes()) {
+                None => {
+                    println!(
+                        "{:<18} {:>7} kB  {:<12} {:>11} {:>7} {:>12}",
+                        board.name, board.ram_kb, label, "-", "-", "OOM"
+                    );
+                }
+                Some(s) => {
+                    let lat = estimate_latency_ms(model, &s, board);
+                    println!(
+                        "{:<18} {:>7} kB  {:<12} {:>8.1} kB {:>7.2} {:>9.1} ms",
+                        board.name,
+                        board.ram_kb,
+                        label,
+                        kb(s.cost.peak_ram),
+                        s.cost.overhead,
+                        lat.total_ms
+                    );
+                }
+            }
+        }
+    }
+
+    // Deep dive: deploy the VWW model on the mid-range board and *execute*
+    // the plan against the board budget to prove it truly fits.
+    let board = msf_cnn::mcu::board_by_name("nucleo-f412zg").unwrap();
+    let model = zoo::mcunet_vww5();
+    let dag = FusionDag::build(&model, None);
+    let setting = minimize_macs(&dag, board.ram_bytes()).expect("fits 256 kB");
+    println!(
+        "\nExecuting {} on {} ({} kB budget): setting {}",
+        model.name,
+        board.name,
+        board.ram_kb,
+        setting.describe()
+    );
+    let engine = Engine::new(model.clone());
+    let shape = model.shapes[0];
+    let input = Tensor::from_data(
+        shape.h as usize,
+        shape.w as usize,
+        shape.c as usize,
+        ParamGen::new(3).fill(shape.elems() as usize, 2.0),
+    );
+    let mut arena = Arena::with_budget(board.ram_bytes());
+    match engine.run(&setting, &input, &mut arena) {
+        Ok(r) => println!(
+            "fits: measured peak {:.3} kB of {} kB; logits[0..2] = {:?}",
+            kb(r.peak_ram),
+            board.ram_kb,
+            &r.output[..2]
+        ),
+        Err(oom) => println!("unexpected {oom}"),
+    }
+}

@@ -1,0 +1,80 @@
+//! Optimize the paper's three evaluation models under the full constraint
+//! grids — the workload behind Table 1 / Fig. 4 — and print the frontier.
+//!
+//! ```sh
+//! cargo run --offline --release --example optimize_zoo
+//! ```
+
+use msf_cnn::graph::FusionDag;
+use msf_cnn::optimizer::{
+    heuristic_head_fusion, minimize_macs, minimize_ram, minimize_ram_unconstrained,
+    streamnet_single_block, vanilla_setting,
+};
+use msf_cnn::report::{kb, F_MAX_GRID, P_MAX_GRID_KB};
+use msf_cnn::zoo;
+
+fn main() {
+    for (label, model) in zoo::paper_models() {
+        let t0 = std::time::Instant::now();
+        let dag = FusionDag::build(&model, None);
+        println!(
+            "\n=== {label} ({}; {} layers, {} fusion candidates, built in {:.1} ms)",
+            model.name,
+            model.num_layers(),
+            dag.num_edges(),
+            t0.elapsed().as_secs_f64() * 1e3
+        );
+
+        let v = vanilla_setting(&dag);
+        let h = heuristic_head_fusion(&dag);
+        let sn = streamnet_single_block(&dag, None).unwrap();
+        println!("  vanilla          {:>9.3} kB  F=1.00", kb(v.cost.peak_ram));
+        println!(
+            "  MCUNetV2 heur.   {:>9.3} kB  F={:.2}",
+            kb(h.cost.peak_ram),
+            h.cost.overhead
+        );
+        println!(
+            "  StreamNet 1-blk  {:>9.3} kB  F={:.2}",
+            kb(sn.cost.peak_ram),
+            sn.cost.overhead
+        );
+
+        println!("  -- P1: minimize RAM s.t. F <= F_max");
+        for &f_max in F_MAX_GRID {
+            let s = if f_max.is_infinite() {
+                minimize_ram_unconstrained(&dag)
+            } else {
+                minimize_ram(&dag, f_max)
+            };
+            match s {
+                Some(s) => println!(
+                    "     F_max={:<5}  {:>9.3} kB  F={:.2}  {} blocks  {}",
+                    if f_max.is_infinite() { "inf".into() } else { format!("{f_max}") },
+                    kb(s.cost.peak_ram),
+                    s.cost.overhead,
+                    s.num_fused_blocks(),
+                    s.describe()
+                ),
+                None => println!("     F_max={f_max:<5}  (no solution)"),
+            }
+        }
+
+        println!("  -- P2: minimize MACs s.t. P <= P_max");
+        for &p_kb in P_MAX_GRID_KB {
+            match minimize_macs(&dag, p_kb * 1000) {
+                Some(s) => println!(
+                    "     P_max={p_kb:>3}kB  {:>9.3} kB  F={:.2}  {} blocks",
+                    kb(s.cost.peak_ram),
+                    s.cost.overhead,
+                    s.num_fused_blocks()
+                ),
+                None => println!("     P_max={p_kb:>3}kB  (no solution)"),
+            }
+        }
+        println!(
+            "  [whole grid solved in {:.0} ms — paper: \"few seconds\"]",
+            t0.elapsed().as_secs_f64() * 1e3
+        );
+    }
+}

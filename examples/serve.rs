@@ -1,0 +1,63 @@
+//! Serving: the L3 coordinator driving the AOT-compiled PJRT artifacts —
+//! Python is not involved at any point in this binary.
+//!
+//! ```sh
+//! make artifacts   # once, build-time Python
+//! cargo run --offline --release --example serve
+//! ```
+
+use msf_cnn::coordinator::{InferenceServer, ServerConfig};
+use msf_cnn::ops::ParamGen;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let server = InferenceServer::start(
+        &artifacts,
+        ServerConfig { entry: "model_fused".into(), queue_cap: 128, batch_max: 8 },
+    )?;
+    let handle = server.handle();
+
+    // Warm the compile cache with one request.
+    let mut gen = ParamGen::new(42);
+    handle.infer(gen.fill(32 * 32 * 3, 2.0))?;
+
+    // Drive 400 requests from 4 client threads.
+    let t0 = std::time::Instant::now();
+    let mut clients = Vec::new();
+    for t in 0..4u64 {
+        let h = server.handle();
+        clients.push(std::thread::spawn(move || {
+            let mut gen = ParamGen::new(1000 + t);
+            let mut ok = 0usize;
+            for _ in 0..100 {
+                match h.infer(gen.fill(32 * 32 * 3, 2.0)) {
+                    Ok(logits) => {
+                        assert_eq!(logits.len(), 10);
+                        ok += 1;
+                    }
+                    Err(_) => std::thread::sleep(std::time::Duration::from_millis(1)),
+                }
+            }
+            ok
+        }));
+    }
+    let ok: usize = clients.into_iter().map(|c| c.join().unwrap()).sum();
+    let dt = t0.elapsed();
+
+    let metrics = handle.metrics();
+    let stats = metrics.stats().expect("requests completed");
+    println!("served {ok}/400 requests in {:.2} s", dt.as_secs_f64());
+    println!("throughput: {:.1} req/s", ok as f64 / dt.as_secs_f64());
+    println!(
+        "latency: mean {:.0} us, p50 {:.0} us, p99 {:.0} us, max {:.0} us",
+        stats.mean_us, stats.p50_us, stats.p99_us, stats.max_us
+    );
+    println!(
+        "micro-batches: {}, backpressure rejections: {}",
+        metrics.batches(),
+        metrics.rejections()
+    );
+    drop(handle);
+    server.shutdown();
+    Ok(())
+}

@@ -1,0 +1,104 @@
+"""Single-layer Pallas conv2d kernel (tiled over output rows).
+
+TPU mapping of the paper's per-layer compute: the grid walks row-tiles of
+the output feature map; each grid step holds one input row-band plus one
+output row-tile in VMEM and contracts over the K×K window with MXU-shaped
+``[rows·W, Cin] @ [Cin, Cout]`` matmuls (one per kernel tap, unrolled —
+taps are static so XLA fuses them into a single loop nest).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered to plain HLO. Real-TPU VMEM/MXU
+behaviour is estimated analytically in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv_rows(x_band: jnp.ndarray, w: jnp.ndarray, stride: int, out_rows: int, wo: int) -> jnp.ndarray:
+    """Convolve a band of input rows into ``out_rows`` output rows.
+
+    x_band: [rows_in, W, Cin] (already padded), w: [K, K, Cin, Cout].
+    Returns [out_rows, wo, Cout].
+    """
+    k = w.shape[0]
+    cout = w.shape[3]
+    acc = jnp.zeros((out_rows, wo, cout), jnp.float32)
+    # Static unroll over kernel taps: each tap is one strided slice + matmul.
+    for ki in range(k):
+        for kj in range(k):
+            # rows ki, ki+stride, ... ; cols kj, kj+stride, ...
+            patch = jax.lax.slice(
+                x_band,
+                (ki, kj, 0),
+                (ki + (out_rows - 1) * stride + 1, kj + (wo - 1) * stride + 1, x_band.shape[2]),
+                (stride, stride, 1),
+            )  # [out_rows, wo, Cin]
+            acc = acc + jax.lax.dot_general(
+                patch,
+                w[ki, kj],
+                (((2,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+    return acc
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, stride: int, tile_rows: int, act: bool):
+    i = pl.program_id(0)
+    k = w_ref.shape[0]
+    wo = o_ref.shape[1]
+    # Input row band covering this output row-tile (+ halo of k-stride rows).
+    row0 = i * tile_rows * stride
+    band_rows = (tile_rows - 1) * stride + k
+    x_band = x_ref[pl.dslice(row0, band_rows)]
+    out = _conv_rows(x_band, w_ref[...], stride, tile_rows, wo)
+    out = out + b_ref[...]
+    if act:
+        out = jnp.clip(out, 0.0, 6.0)
+    o_ref[...] = out
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding", "act", "tile_rows"))
+def conv2d(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    stride: int = 1,
+    padding: int = 0,
+    act: bool = False,
+    tile_rows: int = 4,
+) -> jnp.ndarray:
+    """Pallas conv2d. x: [H, W, Cin], w: [K, K, Cin, Cout], b: [Cout]."""
+    h, w_in, _cin = x.shape
+    k, _, _, cout = w.shape
+    if padding:
+        x = jnp.pad(x, ((padding, padding), (padding, padding), (0, 0)))
+        h, w_in = h + 2 * padding, w_in + 2 * padding
+    ho = (h - k) // stride + 1
+    wo = (w_in - k) // stride + 1
+    tile_rows = min(tile_rows, ho)
+    # Pad output rows up to a multiple of the tile; pad input rows to match
+    # the last tile's halo so the in-kernel dynamic slice stays in bounds.
+    n_tiles = -(-ho // tile_rows)
+    ho_pad = n_tiles * tile_rows
+    rows_needed = (ho_pad - 1) * stride + k
+    if rows_needed > h:
+        x = jnp.pad(x, ((0, rows_needed - h), (0, 0), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_kernel, stride=stride, tile_rows=tile_rows, act=act),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec(x.shape, lambda i: (0, 0, 0)),  # full input resident
+            pl.BlockSpec(w.shape, lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec(b.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile_rows, wo, cout), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((ho_pad, wo, cout), jnp.float32),
+        interpret=True,
+    )(x, w, b)
+    return out[:ho]

@@ -1,0 +1,80 @@
+"""Single-layer depthwise-conv Pallas kernel (row-tiled).
+
+Same structure as ``conv2d.py`` but with the per-channel contraction of
+the MobileNetV2/MCUNet depthwise stage: each tap contributes
+``patch * w[ky, kx]`` broadcast over channels — on TPU this is a VPU
+(vector) op rather than an MXU matmul, which is exactly why dw layers are
+bandwidth-bound and fuse so profitably with their neighboring pointwise
+convs (the L3 optimizer sees this as cheap MACs vs large maps).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, stride: int, tile_rows: int, act: bool):
+    i = pl.program_id(0)
+    k = w_ref.shape[0]
+    wo = o_ref.shape[1]
+    c = o_ref.shape[2]
+    row0 = i * tile_rows * stride
+    band_rows = (tile_rows - 1) * stride + k
+    x_band = x_ref[pl.dslice(row0, band_rows)]
+    acc = jnp.zeros((tile_rows, wo, c), jnp.float32)
+    for ky in range(k):
+        for kx in range(k):
+            patch = jax.lax.slice(
+                x_band,
+                (ky, kx, 0),
+                (ky + (tile_rows - 1) * stride + 1, kx + (wo - 1) * stride + 1, c),
+                (stride, stride, 1),
+            )
+            acc = acc + patch * w_ref[ky, kx]
+    acc = acc + b_ref[...]
+    if act:
+        acc = jnp.clip(acc, 0.0, 6.0)
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding", "act", "tile_rows"))
+def dwconv2d(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    stride: int = 1,
+    padding: int = 0,
+    act: bool = False,
+    tile_rows: int = 4,
+) -> jnp.ndarray:
+    """Pallas depthwise conv. x: [H, W, C], w: [K, K, C], b: [C]."""
+    h, w_in, c = x.shape
+    k = w.shape[0]
+    if padding:
+        x = jnp.pad(x, ((padding, padding), (padding, padding), (0, 0)))
+        h, w_in = h + 2 * padding, w_in + 2 * padding
+    ho = (h - k) // stride + 1
+    wo = (w_in - k) // stride + 1
+    tile_rows = min(tile_rows, ho)
+    n_tiles = -(-ho // tile_rows)
+    ho_pad = n_tiles * tile_rows
+    rows_needed = (ho_pad - 1) * stride + k
+    if rows_needed > h:
+        x = jnp.pad(x, ((0, rows_needed - h), (0, 0), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_kernel, stride=stride, tile_rows=tile_rows, act=act),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec(x.shape, lambda i: (0, 0, 0)),
+            pl.BlockSpec(w.shape, lambda i: (0, 0, 0)),
+            pl.BlockSpec(b.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile_rows, wo, c), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((ho_pad, wo, c), jnp.float32),
+        interpret=True,
+    )(x, w, b)
+    return out[:ho]

@@ -1,0 +1,174 @@
+"""Patch-based multi-stage fused conv pyramid — the paper's hot-spot kernel.
+
+This is the TPU re-think of msf-CNN's fusion block (DESIGN.md
+§Hardware-Adaptation): instead of threadblock tiles in GPU shared memory /
+MCU SRAM patches, the grid walks **row-bands of the final layer's output**
+and each grid step computes the whole pyramid for its band inside VMEM:
+
+    input row-band  --conv L0-->  band  --conv L1-->  ...  --conv Ln-->  output tile
+
+Only the band pyramid is live at any step, which is exactly the paper's
+peak-RAM argument (Eq. 5): ``P = I_band + O_band (+ cache)``. Rows are the
+streaming axis, matching the paper's H-cache orientation (full rows are the
+cache unit). This kernel uses the *fully-recompute* variant in-kernel — the
+overlap rows of each band are recomputed, which is the compute-overhead `F`
+the optimizer (L3) trades off; the H-cached execution variant is measured
+in the Rust executor where RAM accounting lives.
+
+Layers are a static tuple of ``LayerCfg`` (shape/stride/act/depthwise);
+weights arrive as runtime arrays. Per-layer padding must be zero inside a
+fusion block (pre-pad the block input instead) — the same restriction the
+analytical model in ``rust/src/fusion`` applies.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+class LayerCfg(NamedTuple):
+    """Static per-layer config for a fusion block member."""
+
+    k: int
+    stride: int
+    act: bool
+    depthwise: bool
+
+
+def _conv_band(x_band, w, b, stride: int, out_rows: int, act: bool):
+    """Standard conv of a row band. x_band: [rows_in, W, Cin] -> [out_rows, wo, Cout]."""
+    k = w.shape[0]
+    wo = (x_band.shape[1] - k) // stride + 1
+    cout = w.shape[3]
+    acc = jnp.zeros((out_rows, wo, cout), jnp.float32)
+    for ki in range(k):
+        for kj in range(k):
+            patch = jax.lax.slice(
+                x_band,
+                (ki, kj, 0),
+                (ki + (out_rows - 1) * stride + 1, kj + (wo - 1) * stride + 1, x_band.shape[2]),
+                (stride, stride, 1),
+            )
+            acc = acc + jax.lax.dot_general(
+                patch, w[ki, kj], (((2,), (0,)), ((), ())), preferred_element_type=jnp.float32
+            )
+    acc = acc + b
+    if act:
+        acc = jnp.clip(acc, 0.0, 6.0)
+    return acc
+
+
+def _dwconv_band(x_band, w, b, stride: int, out_rows: int, act: bool):
+    """Depthwise conv of a row band. x_band: [rows_in, W, C], w: [K, K, C]."""
+    k = w.shape[0]
+    wo = (x_band.shape[1] - k) // stride + 1
+    c = x_band.shape[2]
+    acc = jnp.zeros((out_rows, wo, c), jnp.float32)
+    for ki in range(k):
+        for kj in range(k):
+            patch = jax.lax.slice(
+                x_band,
+                (ki, kj, 0),
+                (ki + (out_rows - 1) * stride + 1, kj + (wo - 1) * stride + 1, c),
+                (stride, stride, 1),
+            )
+            acc = acc + patch * w[ki, kj]  # [out_rows, wo, C] * [C]
+    acc = acc + b
+    if act:
+        acc = jnp.clip(acc, 0.0, 6.0)
+    return acc
+
+
+def band_rows_needed(cfgs: tuple[LayerCfg, ...], out_rows: int) -> list[int]:
+    """Back-propagate the receptive row count through the pyramid.
+
+    Returns ``rows[i]`` = rows of layer i's *input* band needed to produce
+    ``out_rows`` rows of the final output (the paper's tile-size recursion
+    behind Eq. 11/12).
+    """
+    rows = out_rows
+    needed = []
+    for cfg in reversed(cfgs):
+        rows = (rows - 1) * cfg.stride + cfg.k
+        needed.append(rows)
+    return list(reversed(needed))
+
+
+def _kernel(*refs, cfgs: tuple[LayerCfg, ...], tile_rows: int, strides_prod: tuple[int, ...]):
+    x_ref = refs[0]
+    o_ref = refs[-1]
+    wb_refs = refs[1:-1]  # alternating w, b per layer
+    i = pl.program_id(0)
+
+    rows_needed = band_rows_needed(cfgs, tile_rows)
+    # Row offset of this tile's receptive field in the (pre-padded) input:
+    # the final tile starts at output row i*tile_rows; each layer multiplies
+    # the row offset by its stride going backwards.
+    row0 = i * tile_rows * strides_prod[0]
+
+    band = x_ref[pl.dslice(row0 * 1, rows_needed[0])]
+    out_rows = tile_rows
+    # Compute per-layer band output row counts forward.
+    row_counts = rows_needed[1:] + [tile_rows]
+    for li, cfg in enumerate(cfgs):
+        w = wb_refs[2 * li][...]
+        b = wb_refs[2 * li + 1][...]
+        fn = _dwconv_band if cfg.depthwise else _conv_band
+        band = fn(band, w, b, cfg.stride, row_counts[li], cfg.act)
+    o_ref[...] = band[:out_rows]
+
+
+@functools.partial(jax.jit, static_argnames=("cfgs", "tile_rows"))
+def fused_pyramid(
+    x: jnp.ndarray,
+    params: tuple[jnp.ndarray, ...],
+    cfgs: tuple[LayerCfg, ...],
+    tile_rows: int = 2,
+) -> jnp.ndarray:
+    """Run a fusion block of convs patch-by-patch.
+
+    x: [H, W, Cin]; params: flat (w0, b0, w1, b1, ...) matching ``cfgs``.
+    Returns the final layer's full output, identical (up to f32 assoc.) to
+    running the stack layer-by-layer (``ref.pyramid_ref``).
+    """
+    h, w_in, _ = x.shape
+    # Forward shape inference to get final output dims.
+    ho, wo, cout = h, w_in, x.shape[2]
+    for li, cfg in enumerate(cfgs):
+        warr = params[2 * li]
+        ho = (ho - cfg.k) // cfg.stride + 1
+        wo = (wo - cfg.k) // cfg.stride + 1
+        cout = warr.shape[2] if cfg.depthwise else warr.shape[3]
+    tile_rows = min(tile_rows, ho)
+    n_tiles = -(-ho // tile_rows)
+    ho_pad = n_tiles * tile_rows
+
+    # Cumulative stride products: offset multiplier from final-output rows
+    # back to each layer's input rows (index 0 = model input).
+    sp = [1]
+    for cfg in reversed(cfgs):
+        sp.insert(0, sp[0] * cfg.stride)
+
+    # Pad input rows so the last (padded) tile's receptive field is in bounds.
+    rows_in_needed = (ho_pad - tile_rows) * sp[0] + band_rows_needed(cfgs, tile_rows)[0]
+    if rows_in_needed > h:
+        x = jnp.pad(x, ((0, rows_in_needed - h), (0, 0), (0, 0)))
+
+    in_specs = [pl.BlockSpec(x.shape, lambda i: (0, 0, 0))]
+    for p in params:
+        in_specs.append(pl.BlockSpec(p.shape, lambda i, _n=len(p.shape): tuple([0] * _n)))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, cfgs=cfgs, tile_rows=tile_rows, strides_prod=tuple(sp)),
+        grid=(n_tiles,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((tile_rows, wo, cout), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((ho_pad, wo, cout), jnp.float32),
+        interpret=True,
+    )(x, *params)
+    return out[:ho]

@@ -1,0 +1,46 @@
+"""Iterative global average pooling (paper Fig. 2).
+
+Standard global pooling needs the whole H×W×C input resident; the paper's
+iterative form receives a few rows per step and updates a running sum, so
+live memory is one row-band + the C-sized accumulator (≈2% of the original
+for a 7×7 map). Here the grid streams row-chunks and the output block is
+the accumulator that persists across grid steps — the exact computation
+order the Rust executor's `ops::pool::GlobalPoolIter` mirrors.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref, *, inv_n: float):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    chunk = x_ref[...]  # [chunk_rows, W, C]
+    o_ref[...] += jnp.sum(chunk, axis=(0, 1)) * inv_n
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_rows",))
+def global_avg_pool_iter(x: jnp.ndarray, chunk_rows: int = 1) -> jnp.ndarray:
+    """Iterative global average pool. x: [H, W, C] -> [C]."""
+    h, w, c = x.shape
+    if h % chunk_rows != 0:
+        pad = chunk_rows - h % chunk_rows
+        x = jnp.pad(x, ((0, pad), (0, 0), (0, 0)))  # zero rows add nothing
+    n_chunks = x.shape[0] // chunk_rows
+    return pl.pallas_call(
+        functools.partial(_kernel, inv_n=1.0 / float(h * w)),
+        grid=(n_chunks,),
+        in_specs=[pl.BlockSpec((chunk_rows, w, c), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((c,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((c,), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32))

@@ -1,0 +1,136 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+is pytest-checked against the matching function here (see
+``python/tests/test_kernel.py``), and the fused patch-based pyramid is
+additionally checked against layer-by-layer execution of the same stack.
+
+All tensors are NHWC with the batch dim dropped (HWC) — the TinyML setting
+is single-image inference — and f32. Quantization effects are modeled at
+L3 (the Rust executor sizes tensors as int8); numerics here stay in f32 so
+the oracle is exact.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def relu6(x: jnp.ndarray) -> jnp.ndarray:
+    """Clipped ReLU used throughout the MobileNetV2 family."""
+    return jnp.clip(x, 0.0, 6.0)
+
+
+def conv2d_ref(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray | None = None,
+    stride: int = 1,
+    padding: int = 0,
+    act: bool = False,
+) -> jnp.ndarray:
+    """Reference conv. x: [H, W, Cin], w: [K, K, Cin, Cout], b: [Cout].
+
+    ``padding`` is symmetric spatial zero-padding (the paper's ``p``).
+    """
+    lhs = x[None].astype(jnp.float32)  # [1, H, W, Cin]
+    out = jax.lax.conv_general_dilated(
+        lhs,
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )[0]
+    if b is not None:
+        out = out + b
+    if act:
+        out = relu6(out)
+    return out
+
+
+def dwconv2d_ref(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray | None = None,
+    stride: int = 1,
+    padding: int = 0,
+    act: bool = False,
+) -> jnp.ndarray:
+    """Depthwise conv. x: [H, W, C], w: [K, K, C] (one filter per channel)."""
+    c = x.shape[-1]
+    lhs = x[None].astype(jnp.float32)
+    rhs = w[:, :, None, :].astype(jnp.float32)  # [K, K, 1, C] with HWIO + groups=C
+    out = jax.lax.conv_general_dilated(
+        lhs,
+        rhs,
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )[0]
+    if b is not None:
+        out = out + b
+    if act:
+        out = relu6(out)
+    return out
+
+
+def pyramid_ref(x: jnp.ndarray, layers: list[dict]) -> jnp.ndarray:
+    """Run a conv stack layer-by-layer (the *vanilla*, unfused execution).
+
+    ``layers`` is a list of dicts with keys: ``w``, ``b``, ``stride``,
+    ``padding``, ``act``, and optional ``depthwise``.
+    """
+    out = x
+    for ly in layers:
+        fn = dwconv2d_ref if ly.get("depthwise", False) else conv2d_ref
+        out = fn(
+            out,
+            ly["w"],
+            ly.get("b"),
+            stride=ly.get("stride", 1),
+            padding=ly.get("padding", 0),
+            act=ly.get("act", False),
+        )
+    return out
+
+
+def global_avg_pool_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Global average pool. x: [H, W, C] -> [C]."""
+    return jnp.mean(x.astype(jnp.float32), axis=(0, 1))
+
+
+def dense_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Dense layer. x: [D], w: [D, F], b: [F]."""
+    out = x.astype(jnp.float32) @ w.astype(jnp.float32)
+    if b is not None:
+        out = out + b
+    return out
+
+
+def maxpool2d_ref(x: jnp.ndarray, k: int = 2, stride: int | None = None) -> jnp.ndarray:
+    """Max pool. x: [H, W, C]."""
+    stride = stride or k
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(k, k, 1),
+        window_strides=(stride, stride, 1),
+        padding="VALID",
+    )
+
+
+def avgpool2d_ref(x: jnp.ndarray, k: int = 2, stride: int | None = None) -> jnp.ndarray:
+    """Average pool. x: [H, W, C]."""
+    stride = stride or k
+    summed = jax.lax.reduce_window(
+        x.astype(jnp.float32),
+        0.0,
+        jax.lax.add,
+        window_dimensions=(k, k, 1),
+        window_strides=(stride, stride, 1),
+        padding="VALID",
+    )
+    return summed / float(k * k)

@@ -1,0 +1,93 @@
+"""L2: the quickstart CNN in JAX, calling the L1 Pallas kernels.
+
+The model is deliberately small — it is the end-to-end *wiring proof* of
+the three-layer stack (Pallas kernel → JAX graph → HLO text → Rust PJRT),
+not the paper's evaluation models (those live in ``rust/src/zoo`` where the
+analytical optimizer operates). The exact same architecture is defined in
+``rust/src/zoo/quickstart.rs``; the Rust executor cross-checks its own
+pure-Rust inference against these artifacts.
+
+Architecture (VALID convs so the fusion block needs no per-layer padding):
+
+    input  32×32×3
+    conv0  3×3 s1  3→8,  relu6  ┐
+    conv1  3×3 s2  8→16, relu6  ├─ fusion-block candidates
+    conv2  3×3 s2 16→32, relu6  ┘
+    global-avg-pool → 32
+    dense  32→10
+
+Two entry points are lowered: ``forward_vanilla`` (layer-by-layer, full
+feature maps — the paper's "vanilla") and ``forward_fused`` (all three
+convs as one patch-based pyramid + iterative pooling + iterative dense —
+an msf-CNN fusion setting). Weights are baked into the HLO as constants
+(deterministic seed) so the Rust side feeds only the image.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from .kernels.conv2d import conv2d
+from .kernels.fused_conv import LayerCfg, fused_pyramid
+from .kernels.iter_dense import dense_iter
+from .kernels.iter_pool import global_avg_pool_iter
+from .kernels import ref
+
+INPUT_SHAPE = (32, 32, 3)
+NUM_CLASSES = 10
+
+# (k, stride, cin, cout, act) — keep in sync with rust/src/zoo/quickstart.rs
+CONV_CFG = [
+    (3, 1, 3, 8, True),
+    (3, 2, 8, 16, True),
+    (3, 2, 16, 32, True),
+]
+DENSE_IN, DENSE_OUT = 32, NUM_CLASSES
+SEED = 0x5F3C
+
+
+def init_params(seed: int = SEED) -> dict[str, jnp.ndarray]:
+    """Deterministic He-scaled weights; baked into the AOT artifacts."""
+    rng = np.random.default_rng(seed)
+    params: dict[str, jnp.ndarray] = {}
+    for i, (k, _s, cin, cout, _a) in enumerate(CONV_CFG):
+        scale = np.sqrt(2.0 / (k * k * cin))
+        params[f"w{i}"] = jnp.asarray(rng.standard_normal((k, k, cin, cout)) * scale, jnp.float32)
+        params[f"b{i}"] = jnp.asarray(rng.standard_normal(cout) * 0.01, jnp.float32)
+    params["wd"] = jnp.asarray(
+        rng.standard_normal((DENSE_IN, DENSE_OUT)) * np.sqrt(1.0 / DENSE_IN), jnp.float32
+    )
+    params["bd"] = jnp.asarray(rng.standard_normal(DENSE_OUT) * 0.01, jnp.float32)
+    return params
+
+
+def forward_vanilla(x: jnp.ndarray, params: dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """Layer-by-layer inference via the single-layer Pallas conv kernel."""
+    out = x
+    for i, (_k, s, _cin, _cout, act) in enumerate(CONV_CFG):
+        out = conv2d(out, params[f"w{i}"], params[f"b{i}"], stride=s, act=act)
+    pooled = global_avg_pool_iter(out, chunk_rows=out.shape[0])  # whole map = common pooling
+    return ref.dense_ref(pooled, params["wd"], params["bd"])
+
+
+def forward_fused(x: jnp.ndarray, params: dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """msf-CNN fusion setting: one 3-conv pyramid + iterative pool/dense."""
+    cfgs = tuple(LayerCfg(k, s, act, False) for (k, s, _ci, _co, act) in CONV_CFG)
+    flat: list[jnp.ndarray] = []
+    for i in range(len(CONV_CFG)):
+        flat += [params[f"w{i}"], params[f"b{i}"]]
+    out = fused_pyramid(x, tuple(flat), cfgs, tile_rows=2)
+    pooled = global_avg_pool_iter(out, chunk_rows=1)  # row-streamed (Fig. 2)
+    return dense_iter(pooled, params["wd"], params["bd"], chunk=8)
+
+
+def forward_ref(x: jnp.ndarray, params: dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """Pure-jnp oracle for both entry points."""
+    layers = [
+        dict(w=params[f"w{i}"], b=params[f"b{i}"], stride=s, act=act)
+        for i, (_k, s, _ci, _co, act) in enumerate(CONV_CFG)
+    ]
+    out = ref.pyramid_ref(x, layers)
+    pooled = ref.global_avg_pool_ref(out)
+    return ref.dense_ref(pooled, params["wd"], params["bd"])

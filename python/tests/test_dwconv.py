@@ -1,0 +1,53 @@
+"""Standalone depthwise Pallas kernel vs the jnp oracle."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.dwconv import dwconv2d
+
+RTOL, ATOL = 1e-4, 1e-4
+
+
+def rnd(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    h=st.integers(6, 18),
+    w=st.integers(6, 18),
+    c=st.sampled_from([1, 8, 16]),
+    k=st.sampled_from([3, 5]),
+    stride=st.sampled_from([1, 2]),
+    padding=st.sampled_from([0, 1, 2]),
+    act=st.booleans(),
+    tile_rows=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dwconv_matches_ref(h, w, c, k, stride, padding, act, tile_rows, seed):
+    if h + 2 * padding < k or w + 2 * padding < k:
+        return
+    rng = np.random.default_rng(seed)
+    x = rnd(rng, h, w, c)
+    wk = rnd(rng, k, k, c)
+    b = rnd(rng, c)
+    got = dwconv2d(x, wk, b, stride=stride, padding=padding, act=act, tile_rows=tile_rows)
+    exp = ref.dwconv2d_ref(x, wk, b, stride=stride, padding=padding, act=act)
+    np.testing.assert_allclose(got, exp, rtol=RTOL, atol=ATOL)
+
+
+def test_dwconv_mbv2_shape():
+    """The MBV2 depthwise stage shape: 3x3 s2 p1 on an even map."""
+    rng = np.random.default_rng(5)
+    x = rnd(rng, 16, 16, 24)
+    wk = rnd(rng, 3, 3, 24)
+    b = rnd(rng, 24)
+    out = dwconv2d(x, wk, b, stride=2, padding=1, act=True)
+    assert out.shape == (8, 8, 24)
+    np.testing.assert_allclose(
+        out, ref.dwconv2d_ref(x, wk, b, stride=2, padding=1, act=True), rtol=RTOL, atol=ATOL
+    )

@@ -1,0 +1,201 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes/strides/tile sizes; every kernel output must be
+allclose to ``ref.py``. The fused pyramid is additionally checked against
+layer-by-layer execution of the same stack (the fused-vs-vanilla identity
+the whole paper rests on).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.conv2d import conv2d
+from compile.kernels.fused_conv import LayerCfg, band_rows_needed, fused_pyramid
+from compile.kernels.iter_dense import dense_iter
+from compile.kernels.iter_pool import global_avg_pool_iter
+
+RTOL, ATOL = 1e-4, 1e-4
+HYP = dict(max_examples=25, deadline=None)
+
+
+def rnd(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+# ---------------------------------------------------------------- conv2d
+
+@settings(**HYP)
+@given(
+    h=st.integers(6, 20),
+    w=st.integers(6, 20),
+    cin=st.sampled_from([1, 3, 8]),
+    cout=st.sampled_from([4, 16]),
+    k=st.sampled_from([1, 3, 5]),
+    stride=st.sampled_from([1, 2]),
+    padding=st.sampled_from([0, 1]),
+    act=st.booleans(),
+    tile_rows=st.sampled_from([1, 2, 4, 7]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_matches_ref(h, w, cin, cout, k, stride, padding, act, tile_rows, seed):
+    if h + 2 * padding < k or w + 2 * padding < k:
+        return
+    rng = np.random.default_rng(seed)
+    x = rnd(rng, h, w, cin)
+    wk = rnd(rng, k, k, cin, cout)
+    b = rnd(rng, cout)
+    got = conv2d(x, wk, b, stride=stride, padding=padding, act=act, tile_rows=tile_rows)
+    exp = ref.conv2d_ref(x, wk, b, stride=stride, padding=padding, act=act)
+    np.testing.assert_allclose(got, exp, rtol=RTOL, atol=ATOL)
+
+
+def test_conv2d_1x1_pointwise():
+    rng = np.random.default_rng(7)
+    x, wk, b = rnd(rng, 9, 9, 16), rnd(rng, 1, 1, 16, 4), rnd(rng, 4)
+    np.testing.assert_allclose(
+        conv2d(x, wk, b), ref.conv2d_ref(x, wk, b), rtol=RTOL, atol=ATOL
+    )
+
+
+def test_conv2d_output_shape_with_stride_and_pad():
+    rng = np.random.default_rng(1)
+    x, wk, b = rnd(rng, 15, 11, 3), rnd(rng, 3, 3, 3, 2), rnd(rng, 2)
+    out = conv2d(x, wk, b, stride=2, padding=1)
+    assert out.shape == ((15 + 2 - 3) // 2 + 1, (11 + 2 - 3) // 2 + 1, 2)
+
+
+# ---------------------------------------------------------- fused pyramid
+
+def _mk_stack(rng, cin, specs):
+    """specs: list of (k, stride, cout_or_None_for_dw, act)."""
+    cfgs, params, layers = [], [], []
+    c = cin
+    for (k, s, cout, act) in specs:
+        dw = cout is None
+        if dw:
+            w = rnd(rng, k, k, c)
+        else:
+            w = rnd(rng, k, k, c, cout)
+            c = cout
+        b = rnd(rng, c)
+        cfgs.append(LayerCfg(k, s, act, dw))
+        params += [w, b]
+        layers.append(dict(w=w, b=b, stride=s, act=act, depthwise=dw))
+    return tuple(cfgs), tuple(params), layers
+
+
+@settings(**HYP)
+@given(
+    h=st.integers(10, 24),
+    w=st.integers(10, 24),
+    tile_rows=st.sampled_from([1, 2, 3, 5]),
+    depth=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_pyramid_matches_layerwise(h, w, tile_rows, depth, seed):
+    rng = np.random.default_rng(seed)
+    choices = [(3, 1, 6, True), (3, 2, 4, False), (1, 1, 8, True), (3, 1, None, True)]
+    specs = [choices[rng.integers(len(choices))] for _ in range(depth)]
+    # Ensure spatial dims stay >= kernel through the stack.
+    hh, ww = h, w
+    ok = True
+    for (k, s, _c, _a) in specs:
+        if hh < k or ww < k:
+            ok = False
+            break
+        hh, ww = (hh - k) // s + 1, (ww - k) // s + 1
+    if not ok:
+        return
+    cfgs, params, layers = _mk_stack(rng, 3, specs)
+    xin = rnd(rng, h, w, 3)
+    got = fused_pyramid(xin, params, cfgs, tile_rows=tile_rows)
+    exp = ref.pyramid_ref(xin, layers)
+    np.testing.assert_allclose(got, exp, rtol=RTOL, atol=ATOL)
+
+
+def test_fused_pyramid_strided_downsampling():
+    rng = np.random.default_rng(3)
+    cfgs, params, layers = _mk_stack(
+        rng, 3, [(3, 2, 8, True), (3, 2, 16, True)]
+    )
+    x = rnd(rng, 21, 21, 3)
+    got = fused_pyramid(x, params, cfgs, tile_rows=2)
+    exp = ref.pyramid_ref(x, layers)
+    assert got.shape == exp.shape
+    np.testing.assert_allclose(got, exp, rtol=RTOL, atol=ATOL)
+
+
+def test_fused_pyramid_depthwise_mix():
+    rng = np.random.default_rng(4)
+    cfgs, params, layers = _mk_stack(
+        rng, 4, [(1, 1, 12, True), (3, 1, None, True), (1, 1, 6, False)]
+    )
+    x = rnd(rng, 12, 12, 4)
+    got = fused_pyramid(x, params, cfgs, tile_rows=3)
+    exp = ref.pyramid_ref(x, layers)
+    np.testing.assert_allclose(got, exp, rtol=RTOL, atol=ATOL)
+
+
+def test_band_rows_needed_recursion():
+    # Two 3x3 s1 layers: 1 output row needs 3 rows mid, 5 rows input.
+    cfgs = (LayerCfg(3, 1, False, False), LayerCfg(3, 1, False, False))
+    assert band_rows_needed(cfgs, 1) == [5, 3]
+    # Stride-2 layer doubles the step: (r-1)*2 + 3.
+    cfgs = (LayerCfg(3, 2, False, False),)
+    assert band_rows_needed(cfgs, 4) == [9]
+
+
+# ------------------------------------------------------- iterative pooling
+
+@settings(**HYP)
+@given(
+    h=st.integers(1, 16),
+    w=st.integers(1, 16),
+    c=st.sampled_from([1, 8, 32]),
+    chunk=st.sampled_from([1, 2, 3]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_iter_pool_matches_ref(h, w, c, chunk, seed):
+    rng = np.random.default_rng(seed)
+    x = rnd(rng, h, w, c)
+    got = global_avg_pool_iter(x, chunk_rows=chunk)
+    np.testing.assert_allclose(got, ref.global_avg_pool_ref(x), rtol=RTOL, atol=ATOL)
+
+
+def test_iter_pool_7x7_paper_case():
+    """The paper's Fig. 2 example: 7×7 map streamed row-by-row."""
+    rng = np.random.default_rng(9)
+    x = rnd(rng, 7, 7, 64)
+    np.testing.assert_allclose(
+        global_avg_pool_iter(x, chunk_rows=1), ref.global_avg_pool_ref(x),
+        rtol=RTOL, atol=ATOL,
+    )
+
+
+# --------------------------------------------------------- iterative dense
+
+@settings(**HYP)
+@given(
+    d=st.integers(1, 128),
+    f=st.sampled_from([1, 10, 64]),
+    chunk=st.sampled_from([1, 4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_iter_dense_matches_ref(d, f, chunk, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = rnd(rng, d), rnd(rng, d, f), rnd(rng, f)
+    got = dense_iter(x, w, b, chunk=chunk)
+    np.testing.assert_allclose(got, ref.dense_ref(x, w, b), rtol=RTOL, atol=ATOL)
+
+
+def test_iter_dense_1024_to_256_paper_case():
+    """The paper's Fig. 3 example: 1024→256 dense."""
+    rng = np.random.default_rng(11)
+    x, w, b = rnd(rng, 1024), rnd(rng, 1024, 256), rnd(rng, 256)
+    got = dense_iter(x, w, b, chunk=32)
+    np.testing.assert_allclose(got, ref.dense_ref(x, w, b), rtol=1e-3, atol=1e-3)

@@ -1,0 +1,97 @@
+"""L2 model tests: vanilla vs fused vs pure-jnp oracle, and AOT manifest
+shape consistency.
+
+The key identity: ``forward_fused`` (one 3-conv patch-based pyramid +
+iterative pool/dense) must produce the same logits as ``forward_vanilla``
+(layer-by-layer, full feature maps) and as the jnp oracle — msf-CNN's
+fusion is a *schedule* transform, never a numerics transform.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.aot import build_entries, to_hlo_text
+import jax
+
+RTOL, ATOL = 1e-3, 1e-3
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params()
+
+
+@pytest.fixture(scope="module")
+def image():
+    rng = np.random.default_rng(42)
+    return jnp.asarray(rng.standard_normal(model.INPUT_SHAPE), jnp.float32)
+
+
+def test_vanilla_matches_oracle(params, image):
+    got = model.forward_vanilla(image, params)
+    exp = model.forward_ref(image, params)
+    assert got.shape == (model.NUM_CLASSES,)
+    np.testing.assert_allclose(got, exp, rtol=RTOL, atol=ATOL)
+
+
+def test_fused_matches_vanilla(params, image):
+    fused = model.forward_fused(image, params)
+    vanilla = model.forward_vanilla(image, params)
+    np.testing.assert_allclose(fused, vanilla, rtol=RTOL, atol=ATOL)
+
+
+def test_fused_matches_oracle_many_inputs(params):
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        x = jnp.asarray(rng.standard_normal(model.INPUT_SHAPE), jnp.float32)
+        np.testing.assert_allclose(
+            model.forward_fused(x, params), model.forward_ref(x, params),
+            rtol=RTOL, atol=ATOL,
+        )
+
+
+def test_init_params_deterministic():
+    p1, p2 = model.init_params(), model.init_params()
+    for k in p1:
+        np.testing.assert_array_equal(p1[k], p2[k])
+
+
+def test_conv_cfg_shapes_consistent(params):
+    """The conv chain's channel plumbing must be self-consistent."""
+    cin = model.INPUT_SHAPE[2]
+    for i, (k, _s, ci, co, _a) in enumerate(model.CONV_CFG):
+        assert ci == cin, f"layer {i} cin mismatch"
+        assert params[f"w{i}"].shape == (k, k, ci, co)
+        cin = co
+    assert model.DENSE_IN == cin
+
+
+def test_aot_entries_lower_to_hlo_text():
+    """Every AOT entry point must lower to parseable HLO text containing an
+    ENTRY computation (what HloModuleProto::from_text_file consumes)."""
+    for name, (fn, example_args) in build_entries().items():
+        text = to_hlo_text(jax.jit(fn).lower(*example_args))
+        assert "ENTRY" in text, name
+        assert "HloModule" in text, name
+
+
+def test_artifacts_manifest_consistent():
+    """If artifacts were built, the manifest must describe real files with
+    the shapes the model defines."""
+    adir = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    mpath = os.path.join(adir, "manifest.json")
+    if not os.path.exists(mpath):
+        pytest.skip("artifacts not built")
+    manifest = json.load(open(mpath))
+    for name in ("model_vanilla", "model_fused"):
+        ent = manifest[name]
+        assert os.path.exists(os.path.join(adir, ent["file"]))
+        assert ent["inputs"][0]["shape"] == list(model.INPUT_SHAPE)
+        assert ent["outputs"][0]["shape"] == [model.NUM_CLASSES]

@@ -1,0 +1,87 @@
+//! Executor hot-path benchmarks: vanilla vs fused end-to-end inference on
+//! the tracked engine, per-block patch execution, and the iterative
+//! pool/dense rewrites (Figs. 2–3 compute-cost side: "without any
+//! computation overhead").
+
+use msf_cnn::exec::Engine;
+use msf_cnn::graph::FusionDag;
+use msf_cnn::memory::Arena;
+use msf_cnn::ops::{
+    dense, global_avg_pool, DenseIter, FusedBlock, GlobalPoolIter, LayerParams, ParamGen, Tensor,
+};
+use msf_cnn::optimizer::{minimize_ram_unconstrained, vanilla_setting};
+use msf_cnn::util::bench::Bencher;
+use msf_cnn::zoo;
+
+fn input_for(m: &msf_cnn::model::ModelChain, seed: u64) -> Tensor {
+    let s = m.shapes[0];
+    Tensor::from_data(
+        s.h as usize,
+        s.w as usize,
+        s.c as usize,
+        ParamGen::new(seed).fill(s.elems() as usize, 2.0),
+    )
+}
+
+fn main() {
+    let b = Bencher::default();
+    let quick = Bencher::quick();
+    println!("== executor benches ==");
+
+    // End-to-end engine runs (quickstart & vww5).
+    for name in ["quickstart", "kws", "mn2-vww5"] {
+        let m = zoo::by_name(name).unwrap();
+        let dag = FusionDag::build(&m, None);
+        let engine = Engine::new(m.clone());
+        let x = input_for(&m, 1);
+        let v = vanilla_setting(&dag);
+        let f = minimize_ram_unconstrained(&dag).unwrap();
+        let bench = if name == "mn2-vww5" { &quick } else { &b };
+        bench.run(&format!("engine-vanilla/{name}"), || {
+            let mut arena = Arena::unbounded();
+            engine.run(&v, &x, &mut arena).unwrap().macs
+        });
+        bench.run(&format!("engine-fused-minram/{name}"), || {
+            let mut arena = Arena::unbounded();
+            engine.run(&f, &x, &mut arena).unwrap().macs
+        });
+    }
+
+    // Isolated fused-block pyramid.
+    let m = zoo::quickstart();
+    let params: Vec<LayerParams> = m
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| LayerParams::for_layer(l, i))
+        .collect();
+    let x = input_for(&m, 2);
+    b.run("fused-block-3conv/quickstart", || {
+        FusedBlock::new(&m, 0, 3, &params).run(&x).1.macs
+    });
+
+    // Iterative vs common pooling (7x7x448, the paper's Fig. 2 scale).
+    let map = Tensor::from_data(7, 7, 448, ParamGen::new(3).fill(7 * 7 * 448, 1.0));
+    b.run("global-pool-common/7x7x448", || global_avg_pool(&map));
+    b.run("global-pool-iterative/7x7x448", || {
+        let mut it = GlobalPoolIter::new(448, 7, 7);
+        for y in 0..7 {
+            it.push_rows(&map.row_band(y, 1));
+        }
+        it.finish()
+    });
+
+    // Iterative vs common dense (1024 -> 256, the paper's Fig. 3 scale).
+    let mut g = ParamGen::new(4);
+    let xv = g.fill(1024, 1.0);
+    let w = g.fill(1024 * 256, 0.1);
+    let bias = g.fill(256, 0.1);
+    b.run("dense-common/1024x256", || dense(&xv, &w, &bias, 256));
+    b.run("dense-iterative/1024x256", || {
+        let mut it = DenseIter::new(1024, &bias);
+        for (i, &xi) in xv.iter().enumerate() {
+            it.push(&[xi], &w[i * 256..(i + 1) * 256]);
+        }
+        it.finish()
+    });
+}

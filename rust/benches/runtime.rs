@@ -1,0 +1,66 @@
+//! PJRT runtime + serving benchmarks: artifact compile time, single-shot
+//! execution latency per entry point, and coordinator throughput. Skips
+//! politely when `artifacts/` has not been built.
+
+use msf_cnn::coordinator::{InferenceServer, ServerConfig};
+use msf_cnn::ops::ParamGen;
+use msf_cnn::runtime::Runtime;
+use msf_cnn::util::bench::Bencher;
+
+fn main() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("artifacts/ not built (run `make artifacts`); skipping runtime benches");
+        return;
+    }
+    let b = Bencher::default();
+    println!("== runtime benches ==");
+
+    // Compile cost per entry (cold clients each time).
+    let quick = Bencher::quick();
+    for entry in ["model_vanilla", "model_fused", "conv2d"] {
+        quick.run(&format!("compile/{entry}"), || {
+            let mut rt = Runtime::open(&dir).unwrap();
+            rt.load(entry).unwrap();
+        });
+    }
+
+    // Hot execution latency.
+    let mut rt = Runtime::open(&dir).unwrap();
+    let img = ParamGen::new(5).fill(32 * 32 * 3, 2.0);
+    for entry in ["model_vanilla", "model_fused"] {
+        rt.load(entry).unwrap();
+        b.run(&format!("execute/{entry}"), || rt.run_f32(entry, &img).unwrap());
+    }
+    let pool_in = ParamGen::new(6).fill(7 * 7 * 32, 1.0);
+    rt.load("iter_pool").unwrap();
+    b.run("execute/iter_pool", || rt.run_f32("iter_pool", &pool_in).unwrap());
+
+    // Coordinator throughput (4 client threads, 200 requests).
+    let server = InferenceServer::start(&dir, ServerConfig::default()).unwrap();
+    let handle = server.handle();
+    handle.infer(img.clone()).unwrap(); // warm
+    quick.run("serve-200-requests-4-clients", || {
+        let mut joins = Vec::new();
+        for t in 0..4u64 {
+            let h = server.handle();
+            joins.push(std::thread::spawn(move || {
+                let mut gen = ParamGen::new(50 + t);
+                for _ in 0..50 {
+                    let _ = h.infer(gen.fill(32 * 32 * 3, 2.0));
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+    });
+    if let Some(stats) = handle.metrics().stats() {
+        println!(
+            "serving latency: mean {:.0} us, p50 {:.0} us, p99 {:.0} us over {} requests",
+            stats.mean_us, stats.p50_us, stats.p99_us, stats.count
+        );
+    }
+    drop(handle);
+    server.shutdown();
+}

@@ -1,0 +1,52 @@
+//! Search-space scaling (paper App. D): the pruned P1 search must scale
+//! polynomially (O(V³)) where exhaustive enumeration scales as 2^{V-2}.
+//! Prints both series over growing synthetic chains so the crossover is
+//! visible in the bench log.
+
+use msf_cnn::graph::{enumerate_paths, FusionDag};
+use msf_cnn::model::{Activation, Layer, ModelChain, TensorShape};
+use msf_cnn::optimizer::{exhaustive_p1, minimize_ram};
+use msf_cnn::util::bench::Bencher;
+
+fn chain(n: usize) -> ModelChain {
+    let layers = (0..n)
+        .map(|i| {
+            let s = if i % 3 == 2 { 2 } else { 1 };
+            Layer::conv(format!("c{i}"), 3, s, 1, 4, 4, Activation::Relu6)
+        })
+        .collect();
+    ModelChain::new(format!("chain{n}"), TensorShape::new(96, 96, 4), layers)
+}
+
+fn main() {
+    println!("== search scaling (App. D: O(2^V) exhaustive vs O(V^3) pruned) ==");
+    let quick = Bencher::quick();
+
+    // Path-count growth (the 2^{V-2} fact itself).
+    for n in [4usize, 8, 12, 16] {
+        let dag = FusionDag::build(&chain(n), None);
+        let paths = enumerate_paths(&dag).len();
+        println!("chain n={n:<3} edges={:<5} complete-paths={paths}", dag.num_edges());
+    }
+
+    // Exhaustive blows up quickly; stop where it stays sane.
+    for n in [6usize, 10, 14] {
+        let dag = FusionDag::build(&chain(n), None);
+        quick.run(&format!("exhaustive-p1/n={n}"), || exhaustive_p1(&dag, 1.3));
+    }
+
+    // The pruned solver keeps scaling to real model depths.
+    for n in [6usize, 14, 24, 40, 54, 80] {
+        let dag = FusionDag::build(&chain(n), None);
+        quick.run(&format!("pruned-p1/n={n}"), || minimize_ram(&dag, 1.3));
+    }
+
+    // Ablation: depth-capped DAGs (smaller search spaces, DESIGN.md §ablations).
+    let m = chain(54);
+    for cap in [4usize, 8, 16] {
+        let dag = FusionDag::build(&m, Some(cap));
+        quick.run(&format!("pruned-p1/n=54,depth-cap={cap}"), || {
+            minimize_ram(&dag, 1.3)
+        });
+    }
+}

@@ -1,0 +1,38 @@
+//! Regenerates every paper table & figure and times each generator —
+//! `cargo bench` therefore *prints the reproduction itself* (the rows the
+//! paper reports) alongside its cost.
+
+use msf_cnn::report;
+use msf_cnn::util::bench::Bencher;
+
+fn main() {
+    println!("== paper tables & figures (regenerated) ==\n");
+    let (_, t1) = report::table1();
+    println!("{t1}");
+    let (_, t2) = report::table2();
+    println!("{t2}");
+    let (_, t3) = report::table3();
+    println!("{t3}");
+    let (_, t5) = report::table5();
+    println!("{t5}");
+    let (_, f2) = report::fig2_pooling();
+    println!("{f2}");
+    let (_, f3) = report::fig3_dense();
+    println!("{f3}");
+    let (_, f4) = report::fig4_series();
+    println!("Fig 4 series (CSV):\n{f4}");
+    let (_, ab1) = report::ablation_cache_schemes();
+    println!("{ab1}");
+    let qm = msf_cnn::zoo::quickstart();
+    let (_, ab2) = report::ablation_output_granularity(&qm, 0, 3);
+    println!("{ab2}");
+
+    println!("== generator timings ==");
+    let b = Bencher::quick();
+    b.run("table1", report::table1);
+    b.run("table2", report::table2);
+    b.run("table3", report::table3);
+    b.run("table5", report::table5);
+    b.run("fig4", report::fig4_series);
+    b.run("ablation-cache-schemes", report::ablation_cache_schemes);
+}

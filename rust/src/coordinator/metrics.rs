@@ -1,0 +1,85 @@
+//! Request metrics: counts, latency percentiles, throughput.
+
+use std::time::Duration;
+
+/// Latency summary over a set of completed requests.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencyStats {
+    pub count: usize,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub max_us: f64,
+}
+
+/// Accumulates per-request latencies; cheap to snapshot.
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    samples_us: Vec<f64>,
+    batches: usize,
+    queue_full_rejections: usize,
+}
+
+impl Metrics {
+    pub fn record(&mut self, latency: Duration) {
+        self.samples_us.push(latency.as_secs_f64() * 1e6);
+    }
+
+    pub fn record_batch(&mut self, _size: usize) {
+        self.batches += 1;
+    }
+
+    pub fn record_rejection(&mut self) {
+        self.queue_full_rejections += 1;
+    }
+
+    pub fn rejections(&self) -> usize {
+        self.queue_full_rejections
+    }
+
+    pub fn batches(&self) -> usize {
+        self.batches
+    }
+
+    pub fn stats(&self) -> Option<LatencyStats> {
+        if self.samples_us.is_empty() {
+            return None;
+        }
+        let mut v = self.samples_us.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| -> f64 {
+            let idx = ((v.len() as f64 - 1.0) * p).round() as usize;
+            v[idx]
+        };
+        Some(LatencyStats {
+            count: v.len(),
+            mean_us: v.iter().sum::<f64>() / v.len() as f64,
+            p50_us: pct(0.50),
+            p99_us: pct(0.99),
+            max_us: *v.last().unwrap(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut m = Metrics::default();
+        for i in 1..=100 {
+            m.record(Duration::from_micros(i));
+        }
+        let s = m.stats().unwrap();
+        assert_eq!(s.count, 100);
+        assert!(s.p50_us <= s.p99_us);
+        assert!(s.p99_us <= s.max_us);
+        assert!((s.p50_us - 50.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn empty_stats_none() {
+        assert!(Metrics::default().stats().is_none());
+    }
+}

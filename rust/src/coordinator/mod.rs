@@ -1,0 +1,16 @@
+//! Serving coordinator — the L3 request path.
+//!
+//! msf-CNN's contribution is the offline optimizer (L3 at *deploy* time);
+//! at *request* time the coordinator is a thin driver per the paper's
+//! deployment story: a bounded queue with backpressure and a dedicated
+//! executor thread that owns the PJRT runtime (XLA handles are not
+//! `Send`, so the runtime never crosses threads) and drains the queue in
+//! micro-batches. Python is never on this path — artifacts were
+//! AOT-compiled at build time. Built on std threads/channels (offline
+//! environment; DESIGN.md §Substitutions).
+
+mod metrics;
+mod server;
+
+pub use metrics::{LatencyStats, Metrics};
+pub use server::{InferenceServer, Pending, ServerConfig, ServerHandle};

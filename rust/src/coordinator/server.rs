@@ -1,0 +1,206 @@
+//! The inference server: bounded-queue front door + dedicated executor
+//! thread that owns the (non-`Send`) PJRT runtime.
+//!
+//! Built on std threads + channels (tokio is unavailable in the offline
+//! build — DESIGN.md §Substitutions); the architecture is identical to the
+//! async version: submitters get a future-like [`Pending`] reply handle,
+//! the bounded queue applies backpressure, and a single executor thread
+//! drains micro-batches.
+
+use std::sync::mpsc as std_mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::Runtime;
+
+use super::metrics::Metrics;
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Artifact entry point to serve (e.g. `"model_fused"`).
+    pub entry: String,
+    /// Bounded queue depth; senders get backpressure errors beyond this.
+    pub queue_cap: usize,
+    /// Max requests drained per executor wakeup (micro-batch).
+    pub batch_max: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self { entry: "model_fused".into(), queue_cap: 256, batch_max: 8 }
+    }
+}
+
+struct Request {
+    input: Vec<f32>,
+    enqueued: Instant,
+    reply: std_mpsc::SyncSender<Result<Vec<f32>>>,
+}
+
+/// Reply handle for one submitted request.
+pub struct Pending {
+    rx: std_mpsc::Receiver<Result<Vec<f32>>>,
+}
+
+impl Pending {
+    /// Block until the executor replies.
+    pub fn wait(self) -> Result<Vec<f32>> {
+        self.rx.recv().map_err(|_| anyhow!("server dropped request"))?
+    }
+
+    /// Non-blocking poll; `None` while still in flight.
+    pub fn poll(&self) -> Option<Result<Vec<f32>>> {
+        match self.rx.try_recv() {
+            Ok(r) => Some(r),
+            Err(std_mpsc::TryRecvError::Empty) => None,
+            Err(std_mpsc::TryRecvError::Disconnected) => {
+                Some(Err(anyhow!("server dropped request")))
+            }
+        }
+    }
+}
+
+/// Handle for submitting requests; cheap to clone.
+#[derive(Clone)]
+pub struct ServerHandle {
+    tx: std_mpsc::SyncSender<Request>,
+    metrics: Arc<Mutex<Metrics>>,
+}
+
+impl ServerHandle {
+    /// Submit one inference; errors immediately when the queue is full
+    /// (backpressure). Await the result via [`Pending::wait`].
+    pub fn submit(&self, input: Vec<f32>) -> Result<Pending> {
+        let (reply_tx, reply_rx) = std_mpsc::sync_channel(1);
+        let req = Request { input, enqueued: Instant::now(), reply: reply_tx };
+        match self.tx.try_send(req) {
+            Ok(()) => Ok(Pending { rx: reply_rx }),
+            Err(std_mpsc::TrySendError::Full(_)) => {
+                self.metrics.lock().unwrap().record_rejection();
+                Err(anyhow!("queue full (backpressure)"))
+            }
+            Err(std_mpsc::TrySendError::Disconnected(_)) => Err(anyhow!("server stopped")),
+        }
+    }
+
+    /// Submit and block for the reply.
+    pub fn infer(&self, input: Vec<f32>) -> Result<Vec<f32>> {
+        self.submit(input)?.wait()
+    }
+
+    pub fn metrics(&self) -> Metrics {
+        self.metrics.lock().unwrap().clone()
+    }
+}
+
+/// The running server: executor thread + handle factory.
+pub struct InferenceServer {
+    handle: ServerHandle,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl InferenceServer {
+    /// Start serving `config.entry` from the artifact directory. The
+    /// runtime is created *inside* the executor thread (PJRT handles are
+    /// not `Send`); startup errors surface through the first request.
+    pub fn start(
+        artifact_dir: impl Into<std::path::PathBuf>,
+        config: ServerConfig,
+    ) -> Result<Self> {
+        let dir = artifact_dir.into();
+        let (tx, rx) = std_mpsc::sync_channel::<Request>(config.queue_cap);
+        let metrics = Arc::new(Mutex::new(Metrics::default()));
+        let metrics_w = metrics.clone();
+        let entry = config.entry.clone();
+        let batch_max = config.batch_max.max(1);
+
+        let worker = std::thread::Builder::new()
+            .name("msfcnn-executor".into())
+            .spawn(move || {
+                let mut rt = match Runtime::open(&dir) {
+                    Ok(rt) => rt,
+                    Err(e) => {
+                        while let Ok(req) = rx.recv() {
+                            let _ = req.reply.send(Err(anyhow!("runtime init failed: {e:#}")));
+                        }
+                        return;
+                    }
+                };
+                if let Err(e) = rt.load(&entry) {
+                    while let Ok(req) = rx.recv() {
+                        let _ = req.reply.send(Err(anyhow!("load '{entry}': {e:#}")));
+                    }
+                    return;
+                }
+                // Drain loop: block for one, then opportunistically batch.
+                while let Ok(first) = rx.recv() {
+                    let mut batch = vec![first];
+                    while batch.len() < batch_max {
+                        match rx.try_recv() {
+                            Ok(req) => batch.push(req),
+                            Err(_) => break,
+                        }
+                    }
+                    metrics_w.lock().unwrap().record_batch(batch.len());
+                    for req in batch {
+                        let res = rt.run_f32(&entry, &req.input);
+                        let latency = req.enqueued.elapsed();
+                        metrics_w.lock().unwrap().record(latency);
+                        let _ = req.reply.send(res);
+                    }
+                }
+            })?;
+
+        let handle = ServerHandle { tx, metrics };
+        Ok(Self { handle, worker: Some(worker) })
+    }
+
+    pub fn handle(&self) -> ServerHandle {
+        self.handle.clone()
+    }
+
+    /// Stop accepting requests and join the executor thread. (Any
+    /// outstanding `ServerHandle` clones keep the queue open; drop them
+    /// first for a clean join.)
+    pub fn shutdown(mut self) {
+        let ServerHandle { tx, metrics } = self.handle.clone();
+        drop(tx);
+        drop(metrics);
+        // Drop our own handle (closes the last in-struct sender).
+        self.handle = ServerHandle {
+            tx: std_mpsc::sync_channel(1).0,
+            metrics: Arc::new(Mutex::new(Metrics::default())),
+        };
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_defaults_sane() {
+        let c = ServerConfig::default();
+        assert!(c.queue_cap > 0);
+        assert!(c.batch_max > 0);
+        assert_eq!(c.entry, "model_fused");
+    }
+
+    #[test]
+    fn startup_error_surfaces_via_request() {
+        let server =
+            InferenceServer::start("/nonexistent-artifacts", ServerConfig::default()).unwrap();
+        let h = server.handle();
+        let err = h.infer(vec![0.0; 4]).unwrap_err();
+        assert!(format!("{err:#}").contains("runtime init failed"), "{err:#}");
+        drop(h);
+        server.shutdown();
+    }
+}

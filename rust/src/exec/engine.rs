@@ -1,0 +1,455 @@
+//! End-to-end execution of a fusion setting over the pure-Rust ops,
+//! with every buffer routed through the tracking [`Arena`].
+//!
+//! RAM accounting mirrors the analytical convention (`fusion::ram`):
+//! boundary tensors and fusion band buffers are arena-allocated with
+//! int8-element sizing (`ModelChain::elem_bytes`); iterative-tail
+//! accumulators are 4-byte floats. The measured `Arena::peak_bytes` is the
+//! number the integration tests reconcile against the optimizer's Eq. 5–6
+//! prediction, and `macs` against Eq. 12–15.
+
+use crate::memory::{AllocId, Arena, OomError};
+use crate::model::{LayerKind, ModelChain};
+use crate::ops::{
+    avg_pool2d, conv2d, dense, dwconv2d, global_avg_pool, max_pool2d, DenseIter, FusedBlock,
+    GlobalPoolIter, LayerParams, Tensor,
+};
+use crate::optimizer::FusionSetting;
+
+/// Per-span execution record.
+#[derive(Debug, Clone, Copy)]
+pub struct SpanStat {
+    pub a: usize,
+    pub b: usize,
+    pub fused: bool,
+    pub macs: u64,
+    /// Arena live bytes at this span's own peak.
+    pub live_peak: u64,
+}
+
+/// Result of one inference run.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    /// Final activations (logits for classifier models).
+    pub output: Vec<f32>,
+    /// Arena high-water mark (bytes, int8-element sizing).
+    pub peak_ram: u64,
+    /// MACs actually performed.
+    pub macs: u64,
+    pub spans: Vec<SpanStat>,
+}
+
+/// Deterministic-weight inference engine for a model chain.
+pub struct Engine {
+    model: ModelChain,
+    params: Vec<LayerParams>,
+}
+
+impl Engine {
+    /// Engine with deterministic per-layer parameters (same generator the
+    /// tests and the vanilla path use, so fused == vanilla bit-for-bit).
+    pub fn new(model: ModelChain) -> Self {
+        let params = model
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| LayerParams::for_layer(l, i))
+            .collect();
+        Self { model, params }
+    }
+
+    /// Engine with explicit parameters (`params[i]` for layer `i`).
+    pub fn with_params(model: ModelChain, params: Vec<LayerParams>) -> Self {
+        assert_eq!(params.len(), model.num_layers());
+        Self { model, params }
+    }
+
+    /// Load the parameters `python/compile/aot.py` baked into the
+    /// artifacts (`weights.json`) for the [`crate::zoo::quickstart`]
+    /// model, enabling bit-comparable cross-checks between this executor
+    /// and the XLA artifacts.
+    pub fn quickstart_from_artifacts(dir: impl AsRef<std::path::Path>) -> anyhow::Result<Self> {
+        use crate::util::json::Json;
+        let model = crate::zoo::quickstart();
+        let text = std::fs::read_to_string(dir.as_ref().join("weights.json"))?;
+        let root = Json::parse(&text).map_err(|e| anyhow::anyhow!("weights.json: {e}"))?;
+        let flat = |key: &str| -> anyhow::Result<Vec<f32>> {
+            Ok(root
+                .get(key)
+                .and_then(|v| v.get("data"))
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow::anyhow!("missing '{key}' in weights.json"))?
+                .iter()
+                .map(|x| x.as_f64().unwrap_or(0.0) as f32)
+                .collect())
+        };
+        let mut params = Vec::new();
+        for (i, l) in model.layers.iter().enumerate() {
+            let p = match l.kind {
+                LayerKind::Conv2d => LayerParams {
+                    weights: flat(&format!("w{i}"))?,
+                    bias: flat(&format!("b{i}"))?,
+                },
+                LayerKind::Dense => LayerParams { weights: flat("wd")?, bias: flat("bd")? },
+                _ => LayerParams { weights: vec![], bias: vec![] },
+            };
+            params.push(p);
+        }
+        Ok(Self::with_params(model, params))
+    }
+
+    pub fn model(&self) -> &ModelChain {
+        &self.model
+    }
+
+    pub fn params(&self) -> &[LayerParams] {
+        &self.params
+    }
+
+    /// Execute `setting` on `input`. The arena enforces the board budget
+    /// (if any) and measures the peak; `Err` is the paper's OOM cell.
+    pub fn run(
+        &self,
+        setting: &FusionSetting,
+        input: &Tensor,
+        arena: &mut Arena,
+    ) -> Result<RunReport, OomError> {
+        assert_eq!(input.shape(), self.model.shapes[0], "input shape mismatch");
+        let eb = self.model.elem_bytes as u64;
+        let mut spans_out = Vec::new();
+        let mut total_macs = 0u64;
+
+        // Current boundary tensor + its arena allocation (None = streamed).
+        let mut cur: Tensor = input.clone();
+        let mut cur_alloc: Option<AllocId> = None;
+
+        // Residual stashes: boundary index -> (tensor, alloc).
+        let mut stash: Vec<Option<(Tensor, AllocId)>> = vec![None; self.model.num_layers() + 1];
+
+        // v_0 is materialized only if the first span is a single layer
+        // (fused heads stream the input — the decoupling property).
+        let first_fused = setting.spans.first().map(|&(a, b, _)| b - a > 1).unwrap_or(false);
+        if !first_fused {
+            cur_alloc = Some(arena.alloc(self.model.tensor_bytes(0), "v0:input")?);
+        }
+
+        for (si, &(a, b, iter_tail)) in setting.spans.iter().enumerate() {
+            let span_live_before = arena.live_bytes();
+            let fused = b - a > 1;
+            let mut span_macs = 0u64;
+
+            // Stash the current tensor if a later layer skips from here.
+            if self
+                .model
+                .layers
+                .iter()
+                .enumerate()
+                .any(|(j, l)| l.residual_from == Some(a) && (j >= b || !fused) && j >= a)
+            {
+                // Only needed when the skip crosses span boundaries; skips
+                // inside one fused span are handled by the block executor.
+                let crosses = self
+                    .model
+                    .layers
+                    .iter()
+                    .enumerate()
+                    .any(|(j, l)| l.residual_from == Some(a) && !(fused && j < b));
+                if crosses {
+                    let id = arena.alloc(self.model.tensor_bytes(a), format!("stash:v{a}"))?;
+                    stash[a] = Some((cur.clone(), id));
+                }
+            }
+
+            if fused {
+                // With an iterative tail the edge jumps to the output node;
+                // the conv pyramid itself ends at the GlobalAvgPool index.
+                let conv_end = if iter_tail {
+                    (a..b)
+                        .find(|&i| {
+                            matches!(self.model.layers[i].kind, LayerKind::GlobalAvgPool)
+                        })
+                        .expect("iterative-tail edge without GlobalAvgPool")
+                } else {
+                    b
+                };
+                let block = FusedBlock::new(&self.model, a, conv_end, &self.params);
+                // Band buffers live for the whole block.
+                let band_bytes: u64 = {
+                    // Account band bytes analytically-equivalently: actual
+                    // preallocated band buffer elements × elem size.
+                    let t = crate::fusion::band_heights(&self.model, a, conv_end, 1);
+                    (0..conv_end - a)
+                        .map(|idx| {
+                            let s = self.model.input_of(a + idx);
+                            t[idx] as u64 * s.w as u64 * s.c as u64 * eb
+                        })
+                        .sum::<u64>()
+                        + self.model.output_of(conv_end - 1).w as u64
+                            * self.model.output_of(conv_end - 1).c as u64
+                            * eb
+                };
+                let band_alloc = arena.alloc(band_bytes, format!("bands:{a}..{conv_end}"))?;
+
+                if iter_tail {
+                    // Stream final rows into iterative pool -> dense chain.
+                    let out_shape = self.model.output_of(conv_end - 1);
+                    let gp = conv_end; // GlobalAvgPool layer index
+                    let mut pool = GlobalPoolIter::new(
+                        out_shape.c as usize,
+                        out_shape.h as usize,
+                        out_shape.w as usize,
+                    );
+                    let pool_alloc = arena.alloc(4 * out_shape.c as u64, "iter-pool-acc")?;
+                    let stats = block.run_streaming(&cur, |_r, row| {
+                        pool.push_rows(row);
+                    });
+                    span_macs += stats.macs + out_shape.elems();
+                    let mut vec_act = pool.finish();
+                    arena.free(pool_alloc);
+                    // Iterative dense chain for every trailing Dense layer.
+                    for li in gp + 1..b {
+                        let l = &self.model.layers[li];
+                        let p = &self.params[li];
+                        let dout = l.cout as usize;
+                        let acc_alloc = arena.alloc(4 * dout as u64, format!("iter-dense:{li}"))?;
+                        let mut it = DenseIter::new(vec_act.len(), &p.bias);
+                        for (i, &x) in vec_act.iter().enumerate() {
+                            it.push(&[x], &p.weights[i * dout..(i + 1) * dout]);
+                        }
+                        span_macs += (vec_act.len() * dout) as u64;
+                        vec_act = it.finish();
+                        arena.free(acc_alloc);
+                    }
+                    if let Some(id) = cur_alloc.take() {
+                        arena.free(id);
+                    }
+                    arena.free(band_alloc);
+                    cur = Tensor::vector(vec_act);
+                    cur_alloc = Some(arena.alloc(4 * cur.c as u64, "logits")?);
+                } else {
+                    let out_id =
+                        arena.alloc(self.model.tensor_bytes(b), format!("v{b}"))?;
+                    let (out, stats) = block.run(&cur);
+                    span_macs += stats.macs;
+                    if let Some(id) = cur_alloc.take() {
+                        arena.free(id);
+                    }
+                    arena.free(band_alloc);
+                    cur = out;
+                    cur_alloc = Some(out_id);
+                }
+            } else {
+                // Single layer.
+                let li = a;
+                let l = &self.model.layers[li];
+                let p = &self.params[li];
+                let (out, out_id): (Tensor, Option<AllocId>) = match l.kind {
+                    LayerKind::Conv2d => {
+                        let id = arena.alloc(self.model.tensor_bytes(b), format!("v{b}"))?;
+                        span_macs += self.model.layer_macs(li);
+                        (
+                            conv2d(
+                                &cur,
+                                &p.weights,
+                                &p.bias,
+                                l.k as usize,
+                                l.stride as usize,
+                                l.padding as usize,
+                                l.cout as usize,
+                                l.act,
+                            ),
+                            Some(id),
+                        )
+                    }
+                    LayerKind::DwConv2d => {
+                        let id = arena.alloc(self.model.tensor_bytes(b), format!("v{b}"))?;
+                        span_macs += self.model.layer_macs(li);
+                        (
+                            dwconv2d(
+                                &cur,
+                                &p.weights,
+                                &p.bias,
+                                l.k as usize,
+                                l.stride as usize,
+                                l.padding as usize,
+                                l.act,
+                            ),
+                            Some(id),
+                        )
+                    }
+                    LayerKind::AvgPool => {
+                        let id = arena.alloc(self.model.tensor_bytes(b), format!("v{b}"))?;
+                        span_macs += self.model.layer_macs(li);
+                        (avg_pool2d(&cur, l.k as usize, l.stride as usize), Some(id))
+                    }
+                    LayerKind::MaxPool => {
+                        let id = arena.alloc(self.model.tensor_bytes(b), format!("v{b}"))?;
+                        span_macs += self.model.layer_macs(li);
+                        (max_pool2d(&cur, l.k as usize, l.stride as usize), Some(id))
+                    }
+                    LayerKind::GlobalAvgPool => {
+                        let id = arena.alloc(4 * l.cout as u64, format!("v{b}:gap"))?;
+                        span_macs += cur.elems() as u64;
+                        (Tensor::vector(global_avg_pool(&cur)), Some(id))
+                    }
+                    LayerKind::Dense => {
+                        let id = arena.alloc(4 * l.cout as u64, format!("v{b}:fc"))?;
+                        span_macs += self.model.layer_macs(li);
+                        (
+                            Tensor::vector(dense(
+                                &cur.data,
+                                &p.weights,
+                                &p.bias,
+                                l.cout as usize,
+                            )),
+                            Some(id),
+                        )
+                    }
+                };
+                let mut out = out;
+                // Cross-span residual add.
+                if let Some(src) = l.residual_from {
+                    if let Some((st, sid)) = stash[src].take() {
+                        for (o, s) in out.data.iter_mut().zip(&st.data) {
+                            *o += s;
+                        }
+                        arena.free(sid);
+                    }
+                }
+                if let Some(id) = cur_alloc.take() {
+                    arena.free(id);
+                }
+                cur = out;
+                cur_alloc = out_id;
+            }
+
+            total_macs += span_macs;
+            spans_out.push(SpanStat {
+                a,
+                b,
+                fused,
+                macs: span_macs,
+                live_peak: arena.peak_bytes().max(span_live_before),
+            });
+            let _ = si;
+        }
+
+        if let Some(id) = cur_alloc.take() {
+            arena.free(id);
+        }
+        // Any leftover stash (skip whose consumer was inside a fused span).
+        for s in stash.into_iter().flatten() {
+            arena.free(s.1);
+        }
+
+        Ok(RunReport {
+            output: cur.data,
+            peak_ram: arena.peak_bytes(),
+            macs: total_macs,
+            spans: spans_out,
+        })
+    }
+
+    /// Run the vanilla (unfused) path — convenience for comparisons.
+    pub fn run_vanilla(
+        &self,
+        input: &Tensor,
+        arena: &mut Arena,
+    ) -> Result<RunReport, OomError> {
+        let dag = crate::graph::FusionDag::build(&self.model, None);
+        let vanilla = crate::optimizer::vanilla_setting(&dag);
+        self.run(&vanilla, input, arena)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::FusionDag;
+    use crate::memory::Arena;
+    use crate::ops::ParamGen;
+    use crate::optimizer::{minimize_ram_unconstrained, vanilla_setting};
+    use crate::zoo;
+
+    fn rand_input(model: &ModelChain, seed: u64) -> Tensor {
+        let s = model.shapes[0];
+        let mut g = ParamGen::new(seed);
+        Tensor::from_data(
+            s.h as usize,
+            s.w as usize,
+            s.c as usize,
+            g.fill(s.elems() as usize, 2.0),
+        )
+    }
+
+    #[test]
+    fn fused_setting_matches_vanilla_numerics() {
+        let m = zoo::quickstart();
+        let engine = Engine::new(m.clone());
+        let x = rand_input(&m, 11);
+        let dag = FusionDag::build(&m, None);
+        let fused = minimize_ram_unconstrained(&dag).unwrap();
+        assert!(fused.num_fused_blocks() >= 1);
+
+        let mut a1 = Arena::unbounded();
+        let mut a2 = Arena::unbounded();
+        let rv = engine.run(&vanilla_setting(&dag), &x, &mut a1).unwrap();
+        let rf = engine.run(&fused, &x, &mut a2).unwrap();
+        assert_eq!(rv.output.len(), rf.output.len());
+        for (a, b) in rv.output.iter().zip(&rf.output) {
+            assert!((a - b).abs() < 1e-3, "vanilla {a} vs fused {b}");
+        }
+        assert!(rf.peak_ram < rv.peak_ram, "fusion must reduce measured peak");
+    }
+
+    #[test]
+    fn vanilla_measured_peak_matches_analytic() {
+        let m = zoo::quickstart();
+        let engine = Engine::new(m.clone());
+        let x = rand_input(&m, 3);
+        let mut arena = Arena::unbounded();
+        let r = engine.run_vanilla(&x, &mut arena).unwrap();
+        // Measured live set is I+O per layer: identical to Eq. 5 vanilla.
+        assert_eq!(r.peak_ram, m.vanilla_peak_ram());
+    }
+
+    #[test]
+    fn budget_enforced_as_oom() {
+        let m = zoo::quickstart();
+        let engine = Engine::new(m.clone());
+        let x = rand_input(&m, 4);
+        let mut arena = Arena::with_budget(64); // absurdly small
+        assert!(engine.run_vanilla(&x, &mut arena).is_err());
+    }
+
+    #[test]
+    fn residual_model_fused_vs_vanilla() {
+        let m = zoo::mcunet_vww5();
+        let engine = Engine::new(m.clone());
+        let x = rand_input(&m, 7);
+        let dag = FusionDag::build(&m, None);
+        let fused = minimize_ram_unconstrained(&dag).unwrap();
+        let mut a1 = Arena::unbounded();
+        let mut a2 = Arena::unbounded();
+        let rv = engine.run(&vanilla_setting(&dag), &x, &mut a1).unwrap();
+        let rf = engine.run(&fused, &x, &mut a2).unwrap();
+        let max_out = rv
+            .output
+            .iter()
+            .zip(&rf.output)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_out < 1e-2, "diff {max_out}");
+        assert!(rf.peak_ram < rv.peak_ram / 2, "paper: >50% RAM reduction");
+    }
+
+    #[test]
+    fn no_leaks_after_run() {
+        let m = zoo::tiny_cnn();
+        let engine = Engine::new(m.clone());
+        let x = rand_input(&m, 9);
+        let mut arena = Arena::unbounded();
+        engine.run_vanilla(&x, &mut arena).unwrap();
+        assert_eq!(arena.live_bytes(), 0, "live: {:?}", arena.live_labels());
+    }
+}

@@ -1,0 +1,6 @@
+//! Plan executor: runs a [`FusionSetting`] end-to-end with numerics +
+//! tracked RAM — the measurement half of the reproduction.
+
+mod engine;
+
+pub use engine::{Engine, RunReport, SpanStat};

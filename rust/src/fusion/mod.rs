@@ -1,0 +1,115 @@
+//! Fusion-block analytics — the paper's Appendices B & C made executable.
+//!
+//! A *fusion block* spans layers `[a, b)` of a [`ModelChain`] and executes
+//! them patch-by-patch under the **H-cache** scheme (paper §4): horizontal
+//! overlaps are cached (each horizontal window position is computed once),
+//! vertical overlaps between successive row-bands are recomputed. The
+//! streaming unit is a full-width row band; the block emits one final
+//! output row per iteration (the paper fixes "output elements per
+//! iteration" to one — §9 Parameter Space).
+//!
+//! Submodules:
+//! * [`tiles`]  — receptive band recursion (the `t_i` of Eq. 11/12)
+//! * [`hcache`] — cache buffer sizing (Eq. 11)
+//! * [`macs`]   — fused MAC counts (Eq. 12–15; see note on the Eq. 14
+//!   `c_out`/`c_in` typo in `macs.rs`)
+//! * [`ram`]    — peak-RAM encoding of single layers and blocks (Eq. 5–6)
+
+pub mod hcache;
+pub mod macs;
+pub mod ram;
+pub mod scheme;
+pub mod tiles;
+
+pub use hcache::{block_cache_bytes, layer_cache_bytes};
+pub use macs::{block_macs, fused_layer_macs};
+pub use ram::{block_peak_ram, block_peak_ram_scheme, single_layer_ram, EdgeCost};
+pub use scheme::{scheme_block_macs, scheme_cache_bytes, CacheScheme};
+pub use tiles::{band_heights, stride_products};
+
+use crate::model::ModelChain;
+
+/// Fully analyzed fusion block candidate: layers `[a, b)` of `model`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockSpan {
+    pub a: usize,
+    pub b: usize,
+}
+
+impl BlockSpan {
+    pub fn new(a: usize, b: usize) -> Self {
+        assert!(b > a, "empty span");
+        Self { a, b }
+    }
+
+    pub fn len(&self) -> usize {
+        self.b - self.a
+    }
+
+    pub fn is_single(&self) -> bool {
+        self.len() == 1
+    }
+
+    /// Edge cost (RAM + MACs) of this span in `model`, under H-cache fusion
+    /// when `len() > 1`. `iterative_tail` marks that the block's output
+    /// streams straight into an iterative pool/dense tail (§7), so the full
+    /// output map is never materialized.
+    pub fn cost(&self, model: &ModelChain, iterative_tail: bool) -> EdgeCost {
+        self.cost_scheme(model, iterative_tail, CacheScheme::HCache)
+    }
+
+    /// [`Self::cost`] under an explicit cache scheme (§9 ablations).
+    pub fn cost_scheme(
+        &self,
+        model: &ModelChain,
+        iterative_tail: bool,
+        scheme: CacheScheme,
+    ) -> EdgeCost {
+        if self.is_single() {
+            EdgeCost {
+                ram_bytes: single_layer_ram(model, self.a),
+                macs: model.layer_macs(self.a),
+            }
+        } else {
+            EdgeCost {
+                ram_bytes: block_peak_ram_scheme(model, self.a, self.b, iterative_tail, scheme),
+                macs: scheme_block_macs(model, self.a, self.b, scheme),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Activation, Layer, ModelChain, TensorShape};
+
+    fn two_convs() -> ModelChain {
+        ModelChain::new(
+            "t",
+            TensorShape::new(16, 16, 3),
+            vec![
+                Layer::conv("c0", 3, 1, 0, 3, 8, Activation::Relu6),
+                Layer::conv("c1", 3, 1, 0, 8, 4, Activation::Relu6),
+            ],
+        )
+    }
+
+    #[test]
+    fn single_span_cost_is_vanilla() {
+        let m = two_convs();
+        let c = BlockSpan::new(0, 1).cost(&m, false);
+        assert_eq!(c.macs, m.layer_macs(0));
+        assert_eq!(c.ram_bytes, m.tensor_bytes(0) + m.tensor_bytes(1));
+    }
+
+    #[test]
+    fn fused_span_trades_ram_for_macs() {
+        let m = two_convs();
+        let vanilla_peak = m.vanilla_peak_ram();
+        let fused = BlockSpan::new(0, 2).cost(&m, false);
+        let vanilla_macs = m.total_macs();
+        assert!(fused.ram_bytes < vanilla_peak, "fusion must cut peak RAM");
+        assert!(fused.macs >= vanilla_macs, "H-cache recompute can only add MACs");
+    }
+}

@@ -1,0 +1,141 @@
+//! Peak-RAM encoding of edges (paper Eq. 5–6).
+//!
+//! Edge RAM convention (context-free per edge, as the paper's DAG
+//! requires — Eq. 6 takes a max over edge weights):
+//!
+//! * **Single layer** `[a, a+1)`:  `P = I_full + O_full (+ residual stash)`
+//!   — both boundary maps materialized (Eq. 5 with `Buf = 0`).
+//! * **Fusion block** `[a, b)`:
+//!   `P = I_strip + O + Buf (+ residual stash inside the block)` where
+//!   - `I_strip` = the first layer's live input band
+//!     (`t_a × w_a × c_a` rows of the source — streamed, so the *full*
+//!     input never occupies RAM; this is how fusion "decouples input size
+//!     from memory usage"),
+//!   - `O` = the full output map `v_b` **unless** the block's tail streams
+//!     into the iterative pool/dense rewrite (§7), in which case `O` is
+//!     just the accumulator chain (`c_last + Σ dense outs`, 4-byte accs),
+//!   - `Buf` = Eq. 11 H-cache bytes ([`super::hcache`]).
+//!
+//! The producer of `v_a` counts the full `v_a` in *its* edge weight, so a
+//! path's max-over-edges still sees every materialized tensor.
+
+use crate::model::ModelChain;
+
+use super::tiles::band_heights;
+
+/// RAM+MAC weight attached to a DAG edge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EdgeCost {
+    pub ram_bytes: u64,
+    pub macs: u64,
+}
+
+/// Eq. 5 for an unfused layer: full input + full output + residual stash.
+pub fn single_layer_ram(model: &ModelChain, li: usize) -> u64 {
+    model.tensor_bytes(li) + model.tensor_bytes(li + 1) + model.residual_stash_bytes(li)
+}
+
+/// Eq. 5 for fusion block `[a, b)` under H-cache.
+pub fn block_peak_ram(model: &ModelChain, a: usize, b: usize, iterative_tail: bool) -> u64 {
+    block_peak_ram_scheme(model, a, b, iterative_tail, super::CacheScheme::HCache)
+}
+
+/// Eq. 5 under an explicit cache scheme (§9 "Caching Paradigm").
+pub fn block_peak_ram_scheme(
+    model: &ModelChain,
+    a: usize,
+    b: usize,
+    iterative_tail: bool,
+    scheme: super::CacheScheme,
+) -> u64 {
+    let eb = model.elem_bytes as u64;
+    let t = band_heights(model, a, b, 1);
+    let first_in = model.input_of(a);
+    let l0 = &model.layers[a];
+    // Live input window of the first layer: a `t_0`-wide, `k_0`-tall tile
+    // of the (streamed) source — the same Eq. 11 strip every cached layer
+    // keeps; the first layer's window is the block's I term (which is why
+    // Eq. 11 sets Buf_1 = 0 instead of charging it twice).
+    let t0 = t[0].min(first_in.w + 2 * l0.padding) as u64;
+    let i_strip = t0 * l0.k.min(first_in.h + 2 * l0.padding) as u64 * first_in.c as u64 * eb;
+
+    let o_bytes = if iterative_tail {
+        // §7: output rows stream into iterative global-pool + dense; only
+        // f32 accumulators live (pool acc of c_last + each dense output).
+        let c_last = model.output_of(b - 1).c as u64;
+        let dense_outs: u64 = model.layers[b..]
+            .iter()
+            .filter(|l| matches!(l.kind, crate::model::LayerKind::Dense))
+            .map(|l| l.cout as u64)
+            .sum();
+        4 * (c_last + dense_outs)
+    } else {
+        model.tensor_bytes(b)
+    };
+
+    let stash: u64 = (a..b).map(|i| model.residual_stash_bytes(i)).max().unwrap_or(0);
+    i_strip + o_bytes + super::scheme_cache_bytes(model, a, b, scheme) + stash
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Activation, Layer, ModelChain, TensorShape};
+
+    fn chain() -> ModelChain {
+        ModelChain::new(
+            "r",
+            TensorShape::new(32, 32, 3),
+            vec![
+                Layer::conv("c0", 3, 1, 0, 3, 8, Activation::Relu6), // v1 = 30x30x8
+                Layer::conv("c1", 3, 2, 0, 8, 16, Activation::Relu6), // v2 = 14x14x16
+                Layer::global_pool("gp", 16),
+                Layer::dense("fc", 16, 10),
+            ],
+        )
+    }
+
+    #[test]
+    fn single_layer_is_io_sum() {
+        let m = chain();
+        assert_eq!(single_layer_ram(&m, 0), 32 * 32 * 3 + 30 * 30 * 8);
+    }
+
+    #[test]
+    fn fused_head_drops_input_map() {
+        let m = chain();
+        let fused = block_peak_ram(&m, 0, 2, false);
+        // Tile model (Eq. 11): tiles for 1 output elem: c1 tile 3, c0 tile
+        // (3-1)*1+3 = 5. I_strip = 5*3*3 = 45; Buf(c1) = 3*3*8 = 72;
+        // O = 14*14*16 = 3136 (materialized block output).
+        assert_eq!(fused, 45 + 72 + 3136);
+        assert!(fused < single_layer_ram(&m, 0));
+    }
+
+    #[test]
+    fn iterative_tail_shrinks_output_term() {
+        let m = chain();
+        let solid = block_peak_ram(&m, 0, 2, false);
+        let streamed = block_peak_ram(&m, 0, 2, true);
+        // O term becomes 4*(16 + 10) = 104 instead of 3136.
+        assert_eq!(solid - streamed, 3136 - 104);
+    }
+
+    #[test]
+    fn input_size_decoupling() {
+        // Doubling the input image must not change the fused block's RAM
+        // except via the (band × width) strip — the paper's larger-input
+        // enablement claim.
+        let small = chain();
+        let big = ModelChain::new(
+            "r2",
+            TensorShape::new(64, 64, 3),
+            small.layers.clone(),
+        );
+        let rs = block_peak_ram(&small, 0, 2, true);
+        let rb = block_peak_ram(&big, 0, 2, true);
+        // Full-map vanilla grows ~4x; the fused strip terms only ~2x (width).
+        assert!(rb < 3 * rs);
+        assert!(big.vanilla_peak_ram() > 3 * small.vanilla_peak_ram());
+    }
+}

@@ -1,0 +1,166 @@
+//! Cache-scheme taxonomy (paper §2, after DeFiNES; §9 "Caching Paradigm").
+//!
+//! The paper evaluates the **H-cache** point of the DeFiNES spectrum and
+//! names the other two as future work; all three are implemented here so
+//! the ablation bench (`cargo bench` → `tables`) can show the
+//! cache-vs-recompute trade-off the paper describes: "enhanced caching
+//! progressively reduces compute redundancy but proportionally increases
+//! RAM usage".
+//!
+//! * [`CacheScheme::FullyRecompute`] — no caches (`Buf = 0`); every
+//!   overlapping element of every tile pyramid is recomputed on both
+//!   axes.
+//! * [`CacheScheme::HCache`] — the paper's default: horizontal overlaps
+//!   cached (Eq. 11 strips), vertical overlaps recomputed (Eq. 12–15).
+//! * [`CacheScheme::FullyCache`] — full line buffers per layer: no
+//!   recompute at all (fused MACs = vanilla MACs), at the cost of
+//!   full-width `w×k×c` caches.
+
+use crate::model::{LayerKind, ModelChain};
+
+use super::tiles::band_heights;
+
+/// Intra-block caching strategy for a fusion block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CacheScheme {
+    /// No fusion cache; recompute every overlap (DeFiNES "fully-recompute").
+    FullyRecompute,
+    /// Cache horizontal strips, recompute vertical overlap (the paper's
+    /// working point — "a good trade-off between buffer size and
+    /// recompute cost on MCUs", §4).
+    #[default]
+    HCache,
+    /// Cache everything that would otherwise be recomputed
+    /// (DeFiNES "fully-cache"): line buffers of the full map width.
+    FullyCache,
+}
+
+impl CacheScheme {
+    pub const ALL: [CacheScheme; 3] =
+        [CacheScheme::FullyRecompute, CacheScheme::HCache, CacheScheme::FullyCache];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CacheScheme::FullyRecompute => "fully-recompute",
+            CacheScheme::HCache => "h-cache",
+            CacheScheme::FullyCache => "fully-cache",
+        }
+    }
+}
+
+/// Cache bytes of block `[a, b)` under `scheme`.
+pub fn scheme_cache_bytes(model: &ModelChain, a: usize, b: usize, scheme: CacheScheme) -> u64 {
+    match scheme {
+        CacheScheme::FullyRecompute => 0,
+        CacheScheme::HCache => super::hcache::block_cache_bytes(model, a, b),
+        CacheScheme::FullyCache => {
+            // Full-width line buffers: w × k × c_in per non-first layer.
+            (a + 1..b)
+                .map(|li| {
+                    let l = &model.layers[li];
+                    let inp = model.input_of(li);
+                    (inp.w + 2 * l.padding) as u64
+                        * l.k as u64
+                        * l.cin as u64
+                        * model.elem_bytes as u64
+                })
+                .sum()
+        }
+    }
+}
+
+/// Fused MACs of block `[a, b)` under `scheme`.
+pub fn scheme_block_macs(model: &ModelChain, a: usize, b: usize, scheme: CacheScheme) -> u64 {
+    match scheme {
+        // Caches eliminate all recompute: fused == vanilla MACs.
+        CacheScheme::FullyCache => (a..b).map(|li| model.layer_macs(li)).sum(),
+        CacheScheme::HCache => super::macs::block_macs(model, a, b),
+        CacheScheme::FullyRecompute => {
+            // Square t_i × t_i tile pyramid recomputed per final output
+            // element: both axes pay the overlap.
+            let t = band_heights(model, a, b, 1);
+            let out = model.output_of(b - 1);
+            let n_tiles = out.h as u64 * out.w as u64;
+            (0..b - a)
+                .map(|idx| {
+                    let li = a + idx;
+                    let l = &model.layers[li];
+                    if !matches!(
+                        l.kind,
+                        LayerKind::Conv2d
+                            | LayerKind::DwConv2d
+                            | LayerKind::AvgPool
+                            | LayerKind::MaxPool
+                    ) {
+                        return model.layer_macs(li);
+                    }
+                    let inp = model.input_of(li);
+                    let t_i = t[idx]
+                        .min(inp.h + 2 * l.padding)
+                        .min(inp.w + 2 * l.padding);
+                    let per_axis = ((t_i - l.k) / l.stride + 1) as u64;
+                    let out_elems_per_tile = per_axis * per_axis * l.cout as u64;
+                    n_tiles * out_elems_per_tile * l.macs_per_out_elem()
+                })
+                .sum()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Activation, Layer, ModelChain, TensorShape};
+
+    fn chain() -> ModelChain {
+        ModelChain::new(
+            "s",
+            TensorShape::new(24, 24, 3),
+            vec![
+                Layer::conv("c0", 3, 1, 1, 3, 8, Activation::Relu6),
+                Layer::conv("c1", 3, 1, 1, 8, 8, Activation::Relu6),
+                Layer::conv("c2", 3, 2, 1, 8, 16, Activation::Relu6),
+            ],
+        )
+    }
+
+    #[test]
+    fn cache_bytes_ordering() {
+        // More caching => more RAM: FR <= HC <= FC (DeFiNES trade-off).
+        let m = chain();
+        let fr = scheme_cache_bytes(&m, 0, 3, CacheScheme::FullyRecompute);
+        let hc = scheme_cache_bytes(&m, 0, 3, CacheScheme::HCache);
+        let fc = scheme_cache_bytes(&m, 0, 3, CacheScheme::FullyCache);
+        assert_eq!(fr, 0);
+        assert!(hc > fr);
+        assert!(fc > hc, "full-width line buffers exceed tile strips");
+    }
+
+    #[test]
+    fn macs_ordering() {
+        // More caching => less recompute: FR >= HC >= FC == vanilla.
+        let m = chain();
+        let fr = scheme_block_macs(&m, 0, 3, CacheScheme::FullyRecompute);
+        let hc = scheme_block_macs(&m, 0, 3, CacheScheme::HCache);
+        let fc = scheme_block_macs(&m, 0, 3, CacheScheme::FullyCache);
+        let vanilla: u64 = (0..3).map(|i| m.layer_macs(i)).sum();
+        assert_eq!(fc, vanilla);
+        assert!(hc >= fc);
+        assert!(fr > hc, "fully-recompute must pay both axes");
+    }
+
+    #[test]
+    fn hcache_is_the_default() {
+        assert_eq!(CacheScheme::default(), CacheScheme::HCache);
+        assert_eq!(CacheScheme::ALL.len(), 3);
+    }
+
+    #[test]
+    fn single_layer_blocks_degenerate_consistently() {
+        // Depth-1 "block": every scheme should cost vanilla MACs.
+        let m = chain();
+        for scheme in CacheScheme::ALL {
+            assert_eq!(scheme_block_macs(&m, 1, 2, scheme), m.layer_macs(1), "{scheme:?}");
+        }
+    }
+}

@@ -1,0 +1,80 @@
+//! Receptive row-band recursion through a fusion block.
+//!
+//! With one final-output row emitted per iteration, layer `i`'s input must
+//! supply a band of `t_i` rows where (walking backwards through the block)
+//!
+//! ```text
+//! t_last_out = 1
+//! t_i = (t_{i+1}^{in-rows-as-output} - 1) * stride_i + k_i
+//! ```
+//!
+//! This is the same recursion the L1 Pallas kernel uses
+//! (`python/compile/kernels/fused_conv.py::band_rows_needed`) — kept in
+//! lockstep by the cross-layer test in `rust/tests/fusion_vs_kernel.rs`.
+
+use crate::model::ModelChain;
+
+/// `t[i]` = input band height (rows) at layer `a+i` of block `[a, b)` to
+/// produce `out_rows` rows of the block's final output.
+pub fn band_heights(model: &ModelChain, a: usize, b: usize, out_rows: u32) -> Vec<u32> {
+    assert!(b > a && b <= model.num_layers());
+    let mut rows = out_rows;
+    let mut t = vec![0u32; b - a];
+    for (idx, li) in (a..b).enumerate().rev() {
+        let l = &model.layers[li];
+        rows = (rows - 1) * l.stride + l.k;
+        t[idx] = rows;
+    }
+    t
+}
+
+/// `sp[i]` = vertical step (rows) the band advances at layer `a+i`'s input
+/// when the block's final output advances by one row: the product of the
+/// strides of layers `a+i .. b`.
+pub fn stride_products(model: &ModelChain, a: usize, b: usize) -> Vec<u32> {
+    let mut sp = vec![1u32; b - a + 1];
+    for (idx, li) in (a..b).enumerate().rev() {
+        sp[idx] = sp[idx + 1] * model.layers[li].stride;
+    }
+    sp.truncate(b - a);
+    sp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Activation, Layer, ModelChain, TensorShape};
+
+    fn stack(strides: &[u32], ks: &[u32]) -> ModelChain {
+        let mut layers = Vec::new();
+        let mut c = 3;
+        for (i, (&s, &k)) in strides.iter().zip(ks).enumerate() {
+            layers.push(Layer::conv(format!("c{i}"), k, s, 0, c, c + 1, Activation::None));
+            c += 1;
+        }
+        ModelChain::new("s", TensorShape::new(64, 64, 3), layers)
+    }
+
+    #[test]
+    fn matches_python_kernel_recursion() {
+        // Mirror of test_band_rows_needed_recursion in test_kernel.py:
+        // two 3x3 s1 layers -> [5, 3]; one 3x3 s2 layer, 4 out rows -> [9].
+        let m = stack(&[1, 1], &[3, 3]);
+        assert_eq!(band_heights(&m, 0, 2, 1), vec![5, 3]);
+        let m = stack(&[2], &[3]);
+        assert_eq!(band_heights(&m, 0, 1, 4), vec![9]);
+    }
+
+    #[test]
+    fn stride_products_multiply_backwards() {
+        let m = stack(&[2, 1, 2], &[3, 3, 3]);
+        assert_eq!(stride_products(&m, 0, 3), vec![4, 2, 2]);
+        assert_eq!(stride_products(&m, 1, 3), vec![2, 2]);
+    }
+
+    #[test]
+    fn single_layer_band_is_kernel() {
+        let m = stack(&[1], &[5]);
+        assert_eq!(band_heights(&m, 0, 1, 1), vec![5]);
+    }
+}

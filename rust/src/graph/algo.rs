@@ -1,0 +1,208 @@
+//! Graph algorithms for the fusion DAG (paper §6, App. D).
+//!
+//! All paths run `v_0 → v_n` on a DAG whose edges always advance the node
+//! index, so topological-order DP gives the Dijkstra results in O(E) —
+//! we keep the heap-free DP (the nodes *are* the topological order), which
+//! is both simpler and faster than Dijkstra+Fibonacci for this graph
+//! family while preserving the paper's complexity bounds.
+
+use super::dag::FusionDag;
+
+/// Aggregate cost of a complete compute path (Eq. 6 and Eq. 7).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PathCost {
+    /// `max` of edge RAM along the path (Eq. 6).
+    pub peak_ram: u64,
+    /// `sum` of edge MACs along the path (Eq. 7).
+    pub macs: u64,
+}
+
+/// Cost of an explicit edge-index path.
+pub fn path_cost(dag: &FusionDag, path: &[usize]) -> PathCost {
+    let mut peak = 0u64;
+    let mut macs = 0u64;
+    for &e in path {
+        peak = peak.max(dag.edges[e].cost.ram_bytes);
+        macs += dag.edges[e].cost.macs;
+    }
+    PathCost { peak_ram: peak, macs }
+}
+
+/// Shortest (min-MAC-sum) complete path, `None` if `v_n` unreachable.
+/// Topological DP: O(V + E).
+pub fn min_sum_path(dag: &FusionDag) -> Option<Vec<usize>> {
+    let n = dag.n_nodes;
+    let mut dist = vec![u64::MAX; n];
+    let mut prev: Vec<Option<usize>> = vec![None; n];
+    dist[0] = 0;
+    for v in 0..n {
+        if dist[v] == u64::MAX {
+            continue;
+        }
+        for &e in &dag.out[v] {
+            let edge = &dag.edges[e];
+            let nd = dist[v].saturating_add(edge.cost.macs);
+            if nd < dist[edge.b] {
+                dist[edge.b] = nd;
+                prev[edge.b] = Some(e);
+            }
+        }
+    }
+    reconstruct(dag, &prev, n - 1)
+}
+
+/// Minimax (min over paths of max edge RAM) complete path — the modified
+/// Dijkstra of §6.1's unconstrained P1. Topological DP with `max` as the
+/// accumulation. Tie-break on lower MAC sum so the returned setting is the
+/// cheapest among equally-small-RAM paths (matches the paper's "compress
+/// RAM without incurring overhead where possible" observation).
+pub fn minimax_path(dag: &FusionDag) -> Option<Vec<usize>> {
+    let n = dag.n_nodes;
+    let mut best: Vec<(u64, u64)> = vec![(u64::MAX, u64::MAX); n]; // (bottleneck, macs)
+    let mut prev: Vec<Option<usize>> = vec![None; n];
+    best[0] = (0, 0);
+    for v in 0..n {
+        if best[v].0 == u64::MAX {
+            continue;
+        }
+        for &e in &dag.out[v] {
+            let edge = &dag.edges[e];
+            let cand = (
+                best[v].0.max(edge.cost.ram_bytes),
+                best[v].1.saturating_add(edge.cost.macs),
+            );
+            if cand < best[edge.b] {
+                best[edge.b] = cand;
+                prev[edge.b] = Some(e);
+            }
+        }
+    }
+    reconstruct(dag, &prev, n - 1)
+}
+
+fn reconstruct(dag: &FusionDag, prev: &[Option<usize>], target: usize) -> Option<Vec<usize>> {
+    let mut path = Vec::new();
+    let mut v = target;
+    while v != 0 {
+        let e = prev[v]?;
+        path.push(e);
+        v = dag.edges[e].a;
+    }
+    path.reverse();
+    Some(path)
+}
+
+/// Enumerate *all* complete compute paths (App. D: up to `2^{V-2}` on a
+/// complete DAG). Only for tests/small models — the exhaustive baseline the
+/// pruned optimizer is property-checked against.
+pub fn enumerate_paths(dag: &FusionDag) -> Vec<Vec<usize>> {
+    let mut all = Vec::new();
+    let mut stack = vec![(0usize, Vec::new())];
+    while let Some((v, path)) = stack.pop() {
+        if v == dag.n_nodes - 1 {
+            all.push(path);
+            continue;
+        }
+        for &e in &dag.out[v] {
+            let mut p = path.clone();
+            p.push(e);
+            stack.push((dag.edges[e].b, p));
+        }
+    }
+    all
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fusion::EdgeCost;
+    use crate::graph::DagEdge;
+
+    /// Hand-built DAG matching the paper's Figure 1b topology: 5 nodes,
+    /// four single-layer edges plus two fusion candidates.
+    fn fig1b() -> FusionDag {
+        let mk = |a: usize, b: usize, ram: u64, macs: u64| DagEdge {
+            a,
+            b,
+            cost: EdgeCost { ram_bytes: ram, macs },
+            iterative_tail: false,
+        };
+        let edges = vec![
+            mk(0, 1, 100, 10), // e1
+            mk(1, 2, 80, 12),  // e2
+            mk(2, 3, 60, 8),   // e3
+            mk(3, 4, 30, 5),   // e4
+            mk(0, 3, 40, 45),  // e5: fusion of layers 0..3
+            mk(1, 4, 35, 50),  // e6: fusion of layers 1..4
+        ];
+        let mut out = vec![Vec::new(); 5];
+        for (i, e) in edges.iter().enumerate() {
+            out[e.a].push(i);
+        }
+        FusionDag { n_nodes: 5, out, edges, vanilla_macs: 35 }
+    }
+
+    #[test]
+    fn min_sum_picks_vanilla_when_cheapest() {
+        let dag = fig1b();
+        let p = min_sum_path(&dag).unwrap();
+        assert_eq!(p, vec![0, 1, 2, 3]); // all singles: 35 MACs
+        assert_eq!(path_cost(&dag, &p).macs, 35);
+    }
+
+    #[test]
+    fn minimax_prefers_fused_low_ram_route() {
+        let dag = fig1b();
+        let p = minimax_path(&dag).unwrap();
+        // e5 (ram 40) then e4 via e3? e5: 0->3 (40), e4: 3->4 (30) => peak 40.
+        assert_eq!(path_cost(&dag, &p).peak_ram, 40);
+        assert_eq!(p, vec![4, 3]);
+    }
+
+    #[test]
+    fn enumerate_counts_all_routes() {
+        let dag = fig1b();
+        let all = enumerate_paths(&dag);
+        // Routes: 1-2-3-4, 1-2-(e6), (e5)-4 => 3 complete paths.
+        assert_eq!(all.len(), 3);
+    }
+
+    #[test]
+    fn path_cost_is_max_and_sum() {
+        let dag = fig1b();
+        let c = path_cost(&dag, &[0, 1, 2, 3]);
+        assert_eq!(c.peak_ram, 100);
+        assert_eq!(c.macs, 35);
+    }
+
+    #[test]
+    fn unreachable_target_returns_none() {
+        let mut dag = fig1b();
+        dag.out[3].clear(); // cut e4
+        dag.out[1].retain(|&e| e != 5); // cut e6
+        assert!(min_sum_path(&dag).is_none());
+        assert!(minimax_path(&dag).is_none());
+    }
+
+    #[test]
+    fn complete_dag_path_count_is_2_pow_v_minus_2() {
+        // App. D induction: complete DAG on V nodes has 2^{V-2} paths.
+        for v in 2..9usize {
+            let mut edges = Vec::new();
+            let mut out = vec![Vec::new(); v];
+            for a in 0..v {
+                for b in a + 1..v {
+                    out[a].push(edges.len());
+                    edges.push(DagEdge {
+                        a,
+                        b,
+                        cost: EdgeCost { ram_bytes: 1, macs: 1 },
+                        iterative_tail: false,
+                    });
+                }
+            }
+            let dag = FusionDag { n_nodes: v, out, edges, vanilla_macs: 1 };
+            assert_eq!(enumerate_paths(&dag).len(), 1 << (v - 2));
+        }
+    }
+}

@@ -1,0 +1,209 @@
+//! DAG construction from a [`ModelChain`] (paper §5.1–5.3).
+
+use crate::fusion::{BlockSpan, CacheScheme, EdgeCost};
+use crate::model::ModelChain;
+
+/// One edge of the inverted dataflow graph: layers `[a, b)` executed as a
+/// single layer (`b == a+1`) or as an H-cache fusion block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DagEdge {
+    pub a: usize,
+    pub b: usize,
+    pub cost: EdgeCost,
+    /// Block streams its tail into the iterative pool/dense rewrite (§7).
+    pub iterative_tail: bool,
+}
+
+/// The fusion-candidate DAG of a model: `n_layers + 1` nodes, one edge per
+/// single layer plus one per fusable span (`ModelChain::fusable_span`).
+#[derive(Debug, Clone)]
+pub struct FusionDag {
+    pub n_nodes: usize,
+    /// Adjacency: `out[i]` lists indices into `edges` of edges leaving `v_i`.
+    pub out: Vec<Vec<usize>>,
+    pub edges: Vec<DagEdge>,
+    pub vanilla_macs: u64,
+}
+
+impl FusionDag {
+    /// Build the full candidate graph. `max_depth` caps fusion-block length
+    /// (None = unbounded, the paper's default); depth pruning is used by
+    /// ablations and the scaling bench.
+    pub fn build(model: &ModelChain, max_depth: Option<usize>) -> Self {
+        Self::build_with_scheme(model, max_depth, CacheScheme::HCache)
+    }
+
+    /// [`Self::build`] under an explicit intra-block cache scheme
+    /// (§9 "Caching Paradigm" ablation).
+    pub fn build_with_scheme(
+        model: &ModelChain,
+        max_depth: Option<usize>,
+        scheme: CacheScheme,
+    ) -> Self {
+        let n_layers = model.num_layers();
+        let n_nodes = n_layers + 1;
+        let mut edges = Vec::new();
+        let mut out = vec![Vec::new(); n_nodes];
+
+        for a in 0..n_layers {
+            // Single-layer edge always exists.
+            let single = BlockSpan::new(a, a + 1);
+            out[a].push(edges.len());
+            edges.push(DagEdge {
+                a,
+                b: a + 1,
+                cost: single.cost(model, false),
+                iterative_tail: false,
+            });
+
+            // Fusion-block candidates [a, b).
+            let depth_cap = max_depth.unwrap_or(n_layers);
+            for b in a + 2..=n_layers.min(a + depth_cap) {
+                if !model.fusable_span(a, b) {
+                    // Spans only grow; a non-streamable layer at the end
+                    // blocks all longer spans too.
+                    if !model.layers[b - 1].kind.streamable() {
+                        break;
+                    }
+                    continue;
+                }
+                let span = BlockSpan::new(a, b);
+                out[a].push(edges.len());
+                edges.push(DagEdge {
+                    a,
+                    b,
+                    cost: span.cost_scheme(model, false, scheme),
+                    iterative_tail: false,
+                });
+                // §7: when the rest of the chain is exactly
+                // [GlobalPool, Dense*], add a candidate that streams the
+                // block's rows straight into the iterative tail — one edge
+                // jumping to the output node, never materializing v_b.
+                if model.iterative_tail_at(b) {
+                    let tail_macs: u64 =
+                        (b..n_layers).map(|i| model.layer_macs(i)).sum();
+                    out[a].push(edges.len());
+                    edges.push(DagEdge {
+                        a,
+                        b: n_layers,
+                        cost: EdgeCost {
+                            ram_bytes: crate::fusion::ram::block_peak_ram_scheme(
+                                model, a, b, true, scheme,
+                            ),
+                            macs: crate::fusion::scheme_block_macs(model, a, b, scheme)
+                                + tail_macs,
+                        },
+                        iterative_tail: true,
+                    });
+                }
+            }
+        }
+        Self {
+            n_nodes,
+            out,
+            edges,
+            vanilla_macs: model.total_macs(),
+        }
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// A subgraph with the given edges removed (paper Eq. 9's iterative
+    /// max-RAM-edge elimination). O(E); edges keep their indices via a
+    /// keep-mask so paths remain comparable across iterations.
+    pub fn without_edges(&self, remove: &[usize]) -> Self {
+        let mut g = self.clone();
+        let mut dead = vec![false; g.edges.len()];
+        for &e in remove {
+            dead[e] = true;
+        }
+        for adj in g.out.iter_mut() {
+            adj.retain(|&e| !dead[e]);
+        }
+        g
+    }
+
+    /// Indices of all edges whose RAM equals the current maximum (the
+    /// elimination set of Eq. 9).
+    pub fn max_ram_edges(&self) -> Vec<usize> {
+        let live: Vec<usize> = self.out.iter().flatten().copied().collect();
+        let max = live
+            .iter()
+            .map(|&e| self.edges[e].cost.ram_bytes)
+            .max()
+            .unwrap_or(0);
+        live.into_iter()
+            .filter(|&e| self.edges[e].cost.ram_bytes == max)
+            .collect()
+    }
+
+    /// Max RAM over live edges (None if graph is empty).
+    pub fn max_live_ram(&self) -> Option<u64> {
+        self.out
+            .iter()
+            .flatten()
+            .map(|&e| self.edges[e].cost.ram_bytes)
+            .max()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Activation, Layer, TensorShape};
+
+    fn conv_chain(n: usize) -> ModelChain {
+        let layers = (0..n)
+            .map(|i| Layer::conv(format!("c{i}"), 3, 1, 1, 3, 3, Activation::Relu6))
+            .collect();
+        ModelChain::new("c", TensorShape::new(24, 24, 3), layers)
+    }
+
+    #[test]
+    fn complete_dag_edge_count() {
+        // n fully-fusable layers: edges = n singles + C(n,2) fused spans...
+        // spans [a,b) with b-a>=2: count = n*(n+1)/2 total pairs minus n
+        // singles... for n=4: singles 4, spans (0,2..4),(1,3..4),(2,4) = 3+2+1=6.
+        let dag = FusionDag::build(&conv_chain(4), None);
+        assert_eq!(dag.num_edges(), 4 + 6);
+        assert_eq!(dag.n_nodes, 5);
+    }
+
+    #[test]
+    fn depth_cap_prunes_long_spans() {
+        let dag = FusionDag::build(&conv_chain(4), Some(2));
+        // singles 4 + spans of exactly 2: (0,2),(1,3),(2,4) = 3.
+        assert_eq!(dag.num_edges(), 7);
+    }
+
+    #[test]
+    fn nonfusable_tail_stops_span_growth() {
+        let m = ModelChain::new(
+            "t",
+            TensorShape::new(8, 8, 3),
+            vec![
+                Layer::conv("c0", 3, 1, 1, 3, 4, Activation::Relu6),
+                Layer::conv("c1", 3, 1, 1, 4, 8, Activation::Relu6),
+                Layer::global_pool("gp", 8),
+                Layer::dense("fc", 8, 2),
+            ],
+        );
+        let dag = FusionDag::build(&m, None);
+        // 4 singles + (0,2) fused + the (0,4) iterative-tail candidate
+        // (gp/fc not streamable, but §7 lets them fuse as a tail).
+        assert_eq!(dag.num_edges(), 6);
+        let tail = dag.edges.iter().find(|e| e.iterative_tail).unwrap();
+        assert_eq!((tail.a, tail.b), (0, 4));
+    }
+
+    #[test]
+    fn removal_keeps_indices_stable() {
+        let dag = FusionDag::build(&conv_chain(3), None);
+        let worst = dag.max_ram_edges();
+        let sub = dag.without_edges(&worst);
+        assert!(sub.max_live_ram().unwrap() < dag.max_live_ram().unwrap());
+        assert_eq!(sub.edges.len(), dag.edges.len()); // mask, not compaction
+    }
+}

@@ -1,0 +1,14 @@
+//! Inverted dataflow DAG (paper §5) and the graph algorithms §6 relies on.
+//!
+//! Nodes are tensor boundaries `v_0..v_n`; edges are single layers or
+//! candidate fusion blocks, weighted with `(ram_bytes, macs)`
+//! ([`crate::fusion::EdgeCost`]). A *complete compute path* `v_0 → v_n`
+//! is a fusion setting (paper §5.1).
+
+mod algo;
+mod dag;
+
+pub use algo::{
+    enumerate_paths, min_sum_path, minimax_path, path_cost, PathCost,
+};
+pub use dag::{DagEdge, FusionDag};

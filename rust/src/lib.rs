@@ -1,0 +1,47 @@
+//! # msf-CNN — Patch-based Multi-Stage Fusion for TinyML
+//!
+//! Reproduction of Huang & Baccelli, *msf-CNN: Patch-based Multi-Stage
+//! Fusion with Convolutional Neural Networks for TinyML* (NeurIPS 2025),
+//! as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the paper's contribution: CNN chain IR
+//!   ([`model`], [`zoo`]), H-cache fusion analytics ([`fusion`]), the
+//!   inverted dataflow DAG ([`graph`]), the P1/P2 constrained optimizers
+//!   and baselines ([`optimizer`]), a pure-Rust patch-based executor with
+//!   RAM tracking ([`ops`], [`memory`], [`exec`]), an MCU board/latency
+//!   simulator ([`mcu`]), the PJRT artifact runtime ([`runtime`]), an
+//!   async serving coordinator ([`coordinator`]), and the paper's
+//!   table/figure renderers ([`report`]).
+//! * **L2/L1 (build-time Python)** — `python/compile/`: a JAX model whose
+//!   hot ops are Pallas kernels (patch-based fused pyramid, iterative
+//!   pooling/dense), AOT-lowered to HLO text in `artifacts/`.
+//!
+//! Quickstart:
+//!
+//! ```no_run
+//! use msf_cnn::graph::FusionDag;
+//! use msf_cnn::optimizer::{minimize_macs, minimize_ram_unconstrained};
+//! use msf_cnn::zoo;
+//!
+//! let model = zoo::mbv2(0.35, 144, 1000);
+//! let dag = FusionDag::build(&model, None);
+//! let min_ram = minimize_ram_unconstrained(&dag).unwrap();
+//! println!("min peak RAM: {} kB (F={:.2})",
+//!          min_ram.cost.peak_ram as f64 / 1000.0, min_ram.cost.overhead);
+//! let budget = minimize_macs(&dag, 64_000).unwrap(); // fit a 64 kB MCU
+//! println!("64 kB setting: {}", budget.describe());
+//! ```
+
+pub mod coordinator;
+pub mod exec;
+pub mod fusion;
+pub mod graph;
+pub mod mcu;
+pub mod memory;
+pub mod model;
+pub mod ops;
+pub mod optimizer;
+pub mod report;
+pub mod runtime;
+pub mod util;
+pub mod zoo;

@@ -1,0 +1,318 @@
+//! `msfcnn` — CLI for the msf-CNN reproduction.
+//!
+//! ```text
+//! msfcnn zoo [--model NAME]
+//! msfcnn optimize --model NAME [--f-max F|inf | --p-max-kb N] [--baselines]
+//! msfcnn simulate --model NAME [--f-max F|inf | --p-max-kb N] [--board B]
+//! msfcnn tables [--which 1|2|3|5|fig2|fig3|fig4|all]
+//! msfcnn serve [--artifacts DIR] [--entry NAME] [--requests N]
+//! ```
+//!
+//! (Arg parsing is hand-rolled — `clap` is unavailable in the offline
+//! vendor set; DESIGN.md §Substitutions.)
+
+use anyhow::{anyhow, bail, Result};
+
+use msf_cnn::exec::Engine;
+use msf_cnn::graph::FusionDag;
+use msf_cnn::mcu::{board_by_name, estimate_latency_ms, BOARDS};
+use msf_cnn::memory::Arena;
+use msf_cnn::ops::{ParamGen, Tensor};
+use msf_cnn::optimizer::{
+    heuristic_head_fusion, minimize_macs, minimize_macs_unconstrained, minimize_ram,
+    minimize_ram_unconstrained, streamnet_single_block, vanilla_setting, FusionSetting,
+};
+use msf_cnn::report;
+use msf_cnn::zoo;
+
+const USAGE: &str = "\
+msfcnn — patch-based multi-stage fusion for TinyML (msf-CNN reproduction)
+
+USAGE:
+  msfcnn zoo [--model NAME]
+  msfcnn optimize --model NAME [--f-max F|inf | --p-max-kb N] [--baselines]
+  msfcnn simulate --model NAME [--f-max F|inf | --p-max-kb N] [--board BOARD] [--trace]
+  msfcnn tables [--which 1|2|3|5|fig2|fig3|fig4|all]
+  msfcnn serve [--artifacts DIR] [--entry NAME] [--requests N]
+";
+
+/// Tiny flag parser: `--key value` and boolean `--key` pairs.
+struct Args {
+    flags: std::collections::BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self> {
+        let mut flags = std::collections::BTreeMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("unexpected argument '{a}'\n\n{USAGE}"))?;
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                flags.insert(key.to_string(), argv[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        }
+        Ok(Self { flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("bad --{key} '{v}': {e}")),
+        }
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+fn parse_f_max(s: &str) -> Result<f64> {
+    if s.eq_ignore_ascii_case("inf") {
+        Ok(f64::INFINITY)
+    } else {
+        s.parse::<f64>().map_err(|e| anyhow!("bad f-max '{s}': {e}"))
+    }
+}
+
+fn pick_setting(dag: &FusionDag, args: &Args) -> Result<FusionSetting> {
+    match (args.get("f-max"), args.get("p-max-kb")) {
+        (Some(f), None) => {
+            let f = parse_f_max(f)?;
+            let s = if f.is_infinite() {
+                minimize_ram_unconstrained(dag)
+            } else {
+                minimize_ram(dag, f)
+            };
+            s.ok_or_else(|| anyhow!("no feasible P1 solution"))
+        }
+        (None, Some(p)) => {
+            let p: u64 = p.parse()?;
+            minimize_macs(dag, p * 1000).ok_or_else(|| anyhow!("no solution under {p} kB"))
+        }
+        (None, None) => Ok(vanilla_setting(dag)),
+        (Some(_), Some(_)) => bail!("choose either --f-max (P1) or --p-max-kb (P2)"),
+    }
+}
+
+fn model_arg(args: &Args) -> Result<msf_cnn::model::ModelChain> {
+    let name = args.get("model").ok_or_else(|| anyhow!("--model required\n\n{USAGE}"))?;
+    zoo::by_name(name).ok_or_else(|| {
+        anyhow!("unknown model '{name}' (known: {})", zoo::MODEL_NAMES.join(", "))
+    })
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().map(|s| s.as_str()) else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+
+    match cmd {
+        "zoo" => match args.get("model") {
+            None => {
+                println!("models: {}", zoo::MODEL_NAMES.join(", "));
+                println!("\nboards (paper Table 4):");
+                for b in BOARDS {
+                    println!(
+                        "  {:<18} {:<20} {:>4} MHz  {:>4} kB RAM  {:>5} kB flash",
+                        b.name, b.mcu, b.mhz, b.ram_kb, b.flash_kb
+                    );
+                }
+            }
+            Some(_) => {
+                let m = model_arg(&args)?;
+                println!("{}: {} layers", m.name, m.num_layers());
+                println!(
+                    "vanilla peak RAM {:.3} kB, total MACs {}",
+                    report::kb(m.vanilla_peak_ram()),
+                    m.total_macs()
+                );
+                print!("{}", m.describe());
+            }
+        },
+        "optimize" => {
+            let m = model_arg(&args)?;
+            let dag = FusionDag::build(&m, None);
+            println!(
+                "{}: {} nodes, {} edges, vanilla peak {:.3} kB",
+                m.name,
+                dag.n_nodes,
+                dag.num_edges(),
+                report::kb(m.vanilla_peak_ram())
+            );
+            let s = if !args.has("f-max") && !args.has("p-max-kb") {
+                minimize_macs_unconstrained(&dag).ok_or_else(|| anyhow!("no complete path?!"))?
+            } else {
+                pick_setting(&dag, &args)?
+            };
+            println!(
+                "setting {}  peak RAM {:.3} kB  F {:.3}  ({} fused blocks)",
+                s.describe(),
+                report::kb(s.cost.peak_ram),
+                s.cost.overhead,
+                s.num_fused_blocks()
+            );
+            if args.has("baselines") {
+                for (name, b) in [
+                    ("vanilla", Some(vanilla_setting(&dag))),
+                    ("heuristic", Some(heuristic_head_fusion(&dag))),
+                    ("streamnet", streamnet_single_block(&dag, None)),
+                ] {
+                    if let Some(b) = b {
+                        println!(
+                            "  {name:<10} peak {:.3} kB  F {:.3}",
+                            report::kb(b.cost.peak_ram),
+                            b.cost.overhead
+                        );
+                    }
+                }
+            }
+        }
+        "simulate" => {
+            let m = model_arg(&args)?;
+            let dag = FusionDag::build(&m, None);
+            let s = pick_setting(&dag, &args)?;
+            let engine = Engine::new(m.clone());
+            let mut gen = ParamGen::new(42);
+            let shape = m.shapes[0];
+            let input = Tensor::from_data(
+                shape.h as usize,
+                shape.w as usize,
+                shape.c as usize,
+                gen.fill(shape.elems() as usize, 2.0),
+            );
+            let mut arena = match args.get("board") {
+                Some(bn) => {
+                    let b = board_by_name(bn).ok_or_else(|| anyhow!("unknown board '{bn}'"))?;
+                    Arena::with_budget(b.ram_bytes())
+                }
+                None => Arena::unbounded(),
+            };
+            if args.has("trace") {
+                arena.enable_trace();
+            }
+            println!(
+                "setting {}  predicted peak {:.3} kB",
+                s.describe(),
+                report::kb(s.cost.peak_ram)
+            );
+            match engine.run(&s, &input, &mut arena) {
+                Ok(r) => {
+                    println!(
+                        "measured peak {:.3} kB, {} MACs, output[0..4] = {:?}",
+                        report::kb(r.peak_ram),
+                        r.macs,
+                        &r.output[..r.output.len().min(4)]
+                    );
+                    if let Some(bn) = args.get("board") {
+                        let b = board_by_name(bn).unwrap();
+                        let lat = estimate_latency_ms(&m, &s, b);
+                        println!(
+                            "{}: simulated latency {:.1} ms (mac {:.0}c flash {:.0}c ovh {:.0}c)",
+                            b.name,
+                            lat.total_ms,
+                            lat.mac_cycles,
+                            lat.flash_cycles,
+                            lat.overhead_cycles
+                        );
+                    }
+                    if args.has("trace") {
+                        println!("\nRAM over time (one row per alloc/free, # = live bytes):");
+                        let peak = arena.peak_bytes().max(1);
+                        for (label, delta, live) in arena.trace() {
+                            let bars = (*live as f64 / peak as f64 * 50.0) as usize;
+                            println!(
+                                "  {:>10} {:>+9}  |{:<50}| {:.1} kB",
+                                label,
+                                delta,
+                                "#".repeat(bars),
+                                *live as f64 / 1000.0
+                            );
+                        }
+                    }
+                }
+                Err(oom) => println!("OOM: {oom}"),
+            }
+        }
+        "tables" => {
+            let which = args.get("which").unwrap_or("all");
+            let all = which == "all";
+            if all || which == "1" {
+                println!("{}", report::table1().1);
+            }
+            if all || which == "2" {
+                println!("{}", report::table2().1);
+            }
+            if all || which == "3" {
+                println!("{}", report::table3().1);
+            }
+            if all || which == "5" {
+                println!("{}", report::table5().1);
+            }
+            if all || which == "fig2" {
+                println!("{}", report::fig2_pooling().1);
+            }
+            if all || which == "fig3" {
+                println!("{}", report::fig3_dense().1);
+            }
+            if all || which == "fig4" {
+                println!("Fig 4 series (CSV):\n{}", report::fig4_series().1);
+            }
+            if all || which == "ablations" {
+                println!("{}", report::ablation_cache_schemes().1);
+                let m = zoo::quickstart();
+                println!("{}", report::ablation_output_granularity(&m, 0, 3).1);
+            }
+        }
+        "serve" => {
+            use msf_cnn::coordinator::{InferenceServer, ServerConfig};
+            let artifacts = args.get("artifacts").unwrap_or("artifacts").to_string();
+            let entry = args.get("entry").unwrap_or("model_fused").to_string();
+            let requests = args.get_usize("requests", 100)?;
+            let server = InferenceServer::start(
+                &artifacts,
+                ServerConfig { entry: entry.clone(), ..Default::default() },
+            )?;
+            let handle = server.handle();
+            let mut gen = ParamGen::new(123);
+            let input_len = 32 * 32 * 3;
+            let mut ok = 0usize;
+            let t0 = std::time::Instant::now();
+            for _ in 0..requests {
+                let input = gen.fill(input_len, 2.0);
+                if handle.infer(input).is_ok() {
+                    ok += 1;
+                }
+            }
+            let dt = t0.elapsed();
+            if let Some(stats) = handle.metrics().stats() {
+                println!(
+                    "{ok}/{requests} ok in {:.2}s ({:.1} req/s); p50 {:.0}us p99 {:.0}us",
+                    dt.as_secs_f64(),
+                    ok as f64 / dt.as_secs_f64(),
+                    stats.p50_us,
+                    stats.p99_us
+                );
+            }
+            drop(handle);
+            server.shutdown();
+        }
+        other => {
+            bail!("unknown command '{other}'\n\n{USAGE}");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Board catalog — paper Table 4, verbatim.
+
+/// Instruction-set family; drives the per-ISA MAC throughput of the
+/// latency model (Cortex-M7 is dual-issue with DSP MAC; Xtensa LX7 has a
+/// MAC16; single-issue RV32IMC does multiply+add sequences).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Isa {
+    CortexM7,
+    CortexM4,
+    Xtensa,
+    RiscV,
+}
+
+/// One evaluation board (paper Table 4).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Board {
+    pub name: &'static str,
+    pub mcu: &'static str,
+    pub isa: Isa,
+    pub mhz: u32,
+    pub ram_kb: u32,
+    pub flash_kb: u32,
+}
+
+impl Board {
+    pub fn ram_bytes(&self) -> u64 {
+        self.ram_kb as u64 * 1024
+    }
+
+    pub fn flash_bytes(&self) -> u64 {
+        self.flash_kb as u64 * 1024
+    }
+}
+
+/// Paper Table 4, in paper order.
+pub const BOARDS: &[Board] = &[
+    Board { name: "nucleo-f767zi", mcu: "STM32F767ZI", isa: Isa::CortexM7, mhz: 216, ram_kb: 512, flash_kb: 2048 },
+    Board { name: "stm32f746g-disco", mcu: "STM32F746NG", isa: Isa::CortexM7, mhz: 216, ram_kb: 320, flash_kb: 1024 },
+    Board { name: "nucleo-f412zg", mcu: "STM32F412ZG", isa: Isa::CortexM4, mhz: 100, ram_kb: 256, flash_kb: 1024 },
+    Board { name: "esp32s3-devkit", mcu: "ESP32-S3-WROOM-1N8", isa: Isa::Xtensa, mhz: 240, ram_kb: 512, flash_kb: 8192 },
+    Board { name: "esp32c3-devkit", mcu: "ESP32C3-MINI", isa: Isa::RiscV, mhz: 160, ram_kb: 384, flash_kb: 4096 },
+    Board { name: "hifive1b", mcu: "SiFive FE310-G002", isa: Isa::RiscV, mhz: 320, ram_kb: 16, flash_kb: 4096 },
+];
+
+pub fn board_by_name(name: &str) -> Option<&'static Board> {
+    BOARDS.iter().find(|b| b.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table4_complete() {
+        assert_eq!(BOARDS.len(), 6);
+        let f767 = board_by_name("nucleo-f767zi").unwrap();
+        assert_eq!(f767.mhz, 216);
+        assert_eq!(f767.ram_kb, 512);
+        let hifive = board_by_name("hifive1b").unwrap();
+        assert_eq!(hifive.ram_kb, 16, "the 16 kB board that OOMs in Table 3");
+    }
+
+    #[test]
+    fn lookup_misses_are_none() {
+        assert!(board_by_name("arduino-uno").is_none());
+    }
+}

@@ -1,0 +1,183 @@
+//! Cycle-level latency model for fused CNN inference on MCUs.
+//!
+//! The paper measures wall-clock on six boards; we model it as
+//!
+//! ```text
+//! cycles = MACs · cpm(ISA)
+//!        + flash_refetch_bytes · fpb(ISA)
+//!        + iterations · TILE_OVERHEAD
+//! latency_ms = cycles / (MHz · 1000)
+//! ```
+//!
+//! * `cpm` — cycles per MAC of the int8 conv inner loop, calibrated per
+//!   ISA against the *vanilla* rows of paper Table 5 (Cortex-M7 ≈ 10,
+//!   single-issue RISC-V/Xtensa much higher — which reproduces the paper's
+//!   esp32s3-vs-esp32c3 crossover on MN2-320K);
+//! * `flash_refetch` — §8.3's observation: fused blocks refetch their
+//!   weights from flash **once per band iteration** (recomputation
+//!   disrupts the weight cache), vanilla layers read weights once;
+//! * `TILE_OVERHEAD` — per-iteration loop/bookkeeping cost.
+//!
+//! Absolute milliseconds are testbed-specific; the model is calibrated so
+//! orderings, ratios, and crossovers (who wins, F vs measured-overhead
+//! divergence) match the paper — see EXPERIMENTS.md.
+
+use crate::model::ModelChain;
+use crate::optimizer::FusionSetting;
+
+use super::boards::{Board, Isa};
+
+/// Per-iteration loop/bookkeeping cycles of the band scheduler.
+pub const TILE_OVERHEAD_CYCLES: u64 = 400;
+
+/// Per-ISA cost constants.
+#[derive(Debug, Clone, Copy)]
+pub struct LatencyModel {
+    /// Cycles per multiply-accumulate (int8 conv inner loop, weights warm).
+    pub cycles_per_mac: f64,
+    /// Multiplier on `cycles_per_mac` *inside fusion blocks*: per-patch
+    /// recomputation refetches weights from flash and "disrupts cache
+    /// hits" (§8.3), slowing every MAC of the fused inner loop — this is
+    /// why the paper measures wall-clock overhead well above the F factor
+    /// (2–5x at min-RAM, §8.1).
+    pub fused_mac_multiplier: f64,
+    /// Cycles per weight byte fetched from flash (refetch path).
+    pub flash_cycles_per_byte: f64,
+}
+
+impl LatencyModel {
+    /// Calibrated against the vanilla/min-RAM rows of paper Tables 3 & 5:
+    /// vanilla latencies set the `cycles_per_mac` scale; the min-RAM
+    /// latency inflation (2–5x) sets the fused multiplier; XIP-from-SPI
+    /// parts (ESP32, SiFive) pay more on both axes, which reproduces the
+    /// paper's esp32c3-vs-esp32s3 crossover on MN2-320K.
+    pub fn for_isa(isa: Isa) -> Self {
+        match isa {
+            Isa::CortexM7 => Self {
+                cycles_per_mac: 10.0,
+                fused_mac_multiplier: 1.55,
+                flash_cycles_per_byte: 8.0,
+            },
+            Isa::CortexM4 => Self {
+                cycles_per_mac: 12.5,
+                fused_mac_multiplier: 1.6,
+                flash_cycles_per_byte: 10.0,
+            },
+            // ESP32-S3 Xtensa: higher clock but slower int8 path + SPI flash.
+            Isa::Xtensa => Self {
+                cycles_per_mac: 38.0,
+                fused_mac_multiplier: 2.4,
+                flash_cycles_per_byte: 30.0,
+            },
+            // ESP32-C3 / SiFive single-issue RV32IMC, XIP from SPI flash.
+            Isa::RiscV => Self {
+                cycles_per_mac: 25.0,
+                fused_mac_multiplier: 2.3,
+                flash_cycles_per_byte: 28.0,
+            },
+        }
+    }
+}
+
+/// Latency decomposition (all in cycles; `total_ms` scaled by the clock).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencyBreakdown {
+    pub mac_cycles: f64,
+    pub flash_cycles: f64,
+    pub overhead_cycles: f64,
+    pub total_ms: f64,
+}
+
+/// Estimate inference latency of `setting` for `model` on `board`.
+pub fn estimate_latency_ms(
+    model: &ModelChain,
+    setting: &FusionSetting,
+    board: &Board,
+) -> LatencyBreakdown {
+    let lm = LatencyModel::for_isa(board.isa);
+    let mut mac_cycles = 0.0;
+    let mut flash_cycles = 0.0;
+    let mut overhead_cycles = 0.0;
+
+    for &(a, b, _iter_tail) in &setting.spans {
+        let span_params: u64 = (a..b).map(|i| model.layers[i].param_bytes()).sum();
+        if b - a == 1 {
+            mac_cycles += model.layer_macs(a) as f64 * lm.cycles_per_mac;
+            flash_cycles += span_params as f64 * lm.flash_cycles_per_byte;
+        } else {
+            let macs = crate::fusion::block_macs(model, a, b);
+            mac_cycles += macs as f64 * lm.cycles_per_mac * lm.fused_mac_multiplier;
+            // One band iteration per final-output row; the whole block's
+            // weights stream from flash every iteration (§8.3).
+            let iterations = model.output_of(b - 1).h as u64;
+            flash_cycles += (span_params * iterations) as f64 * lm.flash_cycles_per_byte;
+            overhead_cycles += (iterations * TILE_OVERHEAD_CYCLES) as f64;
+        }
+    }
+
+    let total_cycles = mac_cycles + flash_cycles + overhead_cycles;
+    LatencyBreakdown {
+        mac_cycles,
+        flash_cycles,
+        overhead_cycles,
+        total_ms: total_cycles / (board.mhz as f64 * 1000.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::FusionDag;
+    use crate::mcu::board_by_name;
+    use crate::optimizer::{minimize_ram_unconstrained, vanilla_setting};
+    use crate::zoo;
+
+    #[test]
+    fn fused_is_slower_than_vanilla() {
+        let m = zoo::mcunet_vww5();
+        let dag = FusionDag::build(&m, None);
+        let b = board_by_name("nucleo-f767zi").unwrap();
+        let v = estimate_latency_ms(&m, &vanilla_setting(&dag), b);
+        let f = estimate_latency_ms(&m, &minimize_ram_unconstrained(&dag).unwrap(), b);
+        assert!(f.total_ms > v.total_ms, "fusion trades latency for RAM");
+    }
+
+    #[test]
+    fn clock_scales_latency_within_isa() {
+        let m = zoo::tiny_cnn();
+        let dag = FusionDag::build(&m, None);
+        let s = vanilla_setting(&dag);
+        let f767 = estimate_latency_ms(&m, &s, board_by_name("nucleo-f767zi").unwrap());
+        let f412 = estimate_latency_ms(&m, &s, board_by_name("nucleo-f412zg").unwrap());
+        assert!(f412.total_ms > f767.total_ms, "100 MHz M4 slower than 216 MHz M7");
+    }
+
+    #[test]
+    fn esp32c3_beats_s3_on_big_models() {
+        // Paper §8.1: RISC-V esp32c3 @160 MHz edges out Xtensa esp32s3
+        // @240 MHz on MN2-320K despite the lower clock.
+        let m = zoo::mcunet_320k();
+        let dag = FusionDag::build(&m, None);
+        let s = minimize_ram_unconstrained(&dag).unwrap();
+        let s3 = estimate_latency_ms(&m, &s, board_by_name("esp32s3-devkit").unwrap());
+        let c3 = estimate_latency_ms(&m, &s, board_by_name("esp32c3-devkit").unwrap());
+        assert!(c3.total_ms < s3.total_ms);
+    }
+
+    #[test]
+    fn measured_overhead_exceeds_f_factor() {
+        // §8.3: wall-clock overhead > F because of flash refetch.
+        let m = zoo::mcunet_vww5();
+        let dag = FusionDag::build(&m, None);
+        let b = board_by_name("nucleo-f767zi").unwrap();
+        let v = vanilla_setting(&dag);
+        let f = minimize_ram_unconstrained(&dag).unwrap();
+        let lat_ratio = estimate_latency_ms(&m, &f, b).total_ms
+            / estimate_latency_ms(&m, &v, b).total_ms;
+        assert!(
+            lat_ratio > f.cost.overhead,
+            "latency ratio {lat_ratio:.2} should exceed F={:.2}",
+            f.cost.overhead
+        );
+    }
+}

@@ -1,0 +1,8 @@
+//! MCU substrate: the board catalog (paper Table 4) and the latency model
+//! used to regenerate Tables 3 and 5 without physical hardware.
+
+mod boards;
+mod latency;
+
+pub use boards::{board_by_name, Board, Isa, BOARDS};
+pub use latency::{estimate_latency_ms, LatencyBreakdown, LatencyModel};

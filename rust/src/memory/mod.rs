@@ -1,0 +1,198 @@
+//! Tracking arena allocator — the MCU RAM-pool model.
+//!
+//! The executor ([`crate::exec`]) routes every tensor/cache allocation
+//! through an [`Arena`], which tracks the live-byte watermark and enforces
+//! a board's RAM budget. This is how the repo *measures* peak RAM (to be
+//! checked against the analytical Eq. 5–6 predictions) instead of merely
+//! predicting it.
+
+mod planner;
+
+pub use planner::{plan_pool, PlannedBuffer, PoolPlan};
+
+use std::collections::HashMap;
+
+/// Handle to a live arena allocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct AllocId(u64);
+
+/// Out-of-memory against the configured budget.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OomError {
+    pub requested: u64,
+    pub live: u64,
+    pub budget: u64,
+    pub label: String,
+}
+
+impl std::fmt::Display for OomError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "OOM: alloc '{}' of {} B with {} B live exceeds budget {} B",
+            self.label, self.requested, self.live, self.budget
+        )
+    }
+}
+
+impl std::error::Error for OomError {}
+
+/// A RAM pool with live-set tracking, peak watermark, and optional budget.
+#[derive(Debug)]
+pub struct Arena {
+    budget: Option<u64>,
+    live: u64,
+    peak: u64,
+    next_id: u64,
+    allocs: HashMap<AllocId, (u64, String)>,
+    /// (label, bytes, live_after) event log for post-mortem RAM profiles.
+    trace: Vec<(String, i64, u64)>,
+    trace_enabled: bool,
+}
+
+impl Arena {
+    /// Unbounded arena (peak measurement only).
+    pub fn unbounded() -> Self {
+        Self::new(None)
+    }
+
+    /// Arena with a hard budget (a board's RAM size).
+    pub fn with_budget(budget_bytes: u64) -> Self {
+        Self::new(Some(budget_bytes))
+    }
+
+    fn new(budget: Option<u64>) -> Self {
+        Self {
+            budget,
+            live: 0,
+            peak: 0,
+            next_id: 0,
+            allocs: HashMap::new(),
+            trace: Vec::new(),
+            trace_enabled: false,
+        }
+    }
+
+    /// Record every alloc/free for RAM-over-time profiles (`msfcnn simulate
+    /// --trace`).
+    pub fn enable_trace(&mut self) {
+        self.trace_enabled = true;
+    }
+
+    pub fn alloc(&mut self, bytes: u64, label: impl Into<String>) -> Result<AllocId, OomError> {
+        let label = label.into();
+        if let Some(budget) = self.budget {
+            if self.live + bytes > budget {
+                return Err(OomError {
+                    requested: bytes,
+                    live: self.live,
+                    budget,
+                    label,
+                });
+            }
+        }
+        self.live += bytes;
+        self.peak = self.peak.max(self.live);
+        let id = AllocId(self.next_id);
+        self.next_id += 1;
+        if self.trace_enabled {
+            self.trace.push((label.clone(), bytes as i64, self.live));
+        }
+        self.allocs.insert(id, (bytes, label));
+        Ok(id)
+    }
+
+    pub fn free(&mut self, id: AllocId) {
+        if let Some((bytes, label)) = self.allocs.remove(&id) {
+            self.live -= bytes;
+            if self.trace_enabled {
+                self.trace.push((label, -(bytes as i64), self.live));
+            }
+        }
+    }
+
+    pub fn live_bytes(&self) -> u64 {
+        self.live
+    }
+
+    /// High-water mark since construction (or last [`reset_peak`]).
+    pub fn peak_bytes(&self) -> u64 {
+        self.peak
+    }
+
+    pub fn reset_peak(&mut self) {
+        self.peak = self.live;
+    }
+
+    pub fn budget(&self) -> Option<u64> {
+        self.budget
+    }
+
+    /// The alloc/free event log (label, signed bytes, live-after).
+    pub fn trace(&self) -> &[(String, i64, u64)] {
+        &self.trace
+    }
+
+    /// Labels of currently-live allocations (leak diagnostics in tests).
+    pub fn live_labels(&self) -> Vec<&str> {
+        self.allocs.values().map(|(_, l)| l.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_tracks_watermark() {
+        let mut a = Arena::unbounded();
+        let x = a.alloc(100, "x").unwrap();
+        let y = a.alloc(50, "y").unwrap();
+        a.free(x);
+        let _z = a.alloc(20, "z").unwrap();
+        assert_eq!(a.peak_bytes(), 150);
+        assert_eq!(a.live_bytes(), 70);
+        a.free(y);
+        assert_eq!(a.live_bytes(), 20);
+    }
+
+    #[test]
+    fn budget_enforced() {
+        let mut a = Arena::with_budget(128);
+        let _x = a.alloc(100, "x").unwrap();
+        let err = a.alloc(29, "y").unwrap_err();
+        assert_eq!(err.live, 100);
+        assert_eq!(err.budget, 128);
+        assert!(a.alloc(28, "y2").is_ok());
+    }
+
+    #[test]
+    fn double_free_is_noop() {
+        let mut a = Arena::unbounded();
+        let x = a.alloc(10, "x").unwrap();
+        a.free(x);
+        a.free(x);
+        assert_eq!(a.live_bytes(), 0);
+    }
+
+    #[test]
+    fn trace_records_events() {
+        let mut a = Arena::unbounded();
+        a.enable_trace();
+        let x = a.alloc(10, "t").unwrap();
+        a.free(x);
+        assert_eq!(a.trace().len(), 2);
+        assert_eq!(a.trace()[0], ("t".to_string(), 10, 10));
+        assert_eq!(a.trace()[1], ("t".to_string(), -10, 0));
+    }
+
+    #[test]
+    fn reset_peak_rebases_to_live() {
+        let mut a = Arena::unbounded();
+        let x = a.alloc(100, "x").unwrap();
+        a.free(x);
+        let _y = a.alloc(10, "y").unwrap();
+        a.reset_peak();
+        assert_eq!(a.peak_bytes(), 10);
+    }
+}

@@ -1,0 +1,158 @@
+//! Scheduling-based memory planner — the §10 "Memory Optimization for CNN
+//! layers" baseline family (TinyEngine / vMCU / MoDeL): reuse one RAM pool
+//! across tensor lifetimes by offset assignment, **without** changing the
+//! execution order or tiling. The paper's contrast: such planners "still
+//! generate a complete output tensor for each layer", so their floor is
+//! the largest I+O pair — exactly where patch-based fusion keeps winning.
+//!
+//! Greedy best-fit offset assignment over lifetime intervals (the classic
+//! offset-calculation heuristic).
+
+use crate::model::ModelChain;
+
+/// One planned buffer: the boundary tensor `v_i`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlannedBuffer {
+    pub tensor: usize,
+    pub offset: u64,
+    pub bytes: u64,
+    /// Alive during layer steps `[birth, death]` (inclusive).
+    pub birth: usize,
+    pub death: usize,
+}
+
+/// Result of planning a model's vanilla execution into one pool.
+#[derive(Debug, Clone)]
+pub struct PoolPlan {
+    pub buffers: Vec<PlannedBuffer>,
+    pub pool_bytes: u64,
+}
+
+/// Lifetime of boundary tensor `v_i` in layer steps: born when produced
+/// (step `i-1`; the input is born at step 0), dies after its last
+/// consumer (layer `i`, or a later residual add).
+fn lifetime(model: &ModelChain, i: usize) -> (usize, usize) {
+    let birth = i.saturating_sub(1);
+    let mut death = i.min(model.num_layers() - 1);
+    for (j, l) in model.layers.iter().enumerate() {
+        if l.residual_from == Some(i) {
+            death = death.max(j);
+        }
+    }
+    (birth, death)
+}
+
+/// Plan the vanilla execution of `model` into a single reused pool.
+pub fn plan_pool(model: &ModelChain) -> PoolPlan {
+    let n = model.num_layers();
+    // Tensors v_0..v_n with sizes and lifetimes.
+    let mut tensors: Vec<(usize, u64, usize, usize)> = (0..=n)
+        .map(|i| {
+            let (b, d) = lifetime(model, i);
+            (i, model.tensor_bytes(i), b, d)
+        })
+        .collect();
+    // Classic heuristic: place big tensors first.
+    tensors.sort_by(|a, b| b.1.cmp(&a.1));
+
+    let mut placed: Vec<PlannedBuffer> = Vec::new();
+    for (tensor, bytes, birth, death) in tensors {
+        if bytes == 0 {
+            continue;
+        }
+        // Collect forbidden intervals from overlapping-lifetime buffers.
+        let mut overlaps: Vec<(u64, u64)> = placed
+            .iter()
+            .filter(|p| !(p.death < birth || death < p.birth))
+            .map(|p| (p.offset, p.offset + p.bytes))
+            .collect();
+        overlaps.sort();
+        // First gap that fits (best-fit on a sorted free list).
+        let mut offset = 0u64;
+        for (lo, hi) in overlaps {
+            if offset + bytes <= lo {
+                break;
+            }
+            offset = offset.max(hi);
+        }
+        placed.push(PlannedBuffer { tensor, offset, bytes, birth, death });
+    }
+    let pool_bytes = placed.iter().map(|p| p.offset + p.bytes).max().unwrap_or(0);
+    PoolPlan { buffers: placed, pool_bytes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::FusionDag;
+    use crate::optimizer::minimize_ram_unconstrained;
+    use crate::zoo;
+
+    fn assert_no_live_overlap(plan: &PoolPlan) {
+        for (i, a) in plan.buffers.iter().enumerate() {
+            for b in plan.buffers.iter().skip(i + 1) {
+                let lifetimes_overlap = !(a.death < b.birth || b.death < a.birth);
+                let space_overlap = a.offset < b.offset + b.bytes && b.offset < a.offset + a.bytes;
+                assert!(
+                    !(lifetimes_overlap && space_overlap),
+                    "buffers v{} and v{} collide",
+                    a.tensor,
+                    b.tensor
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn plan_is_collision_free_and_bounded() {
+        for name in ["quickstart", "lenet", "kws", "mn2-vww5"] {
+            let m = zoo::by_name(name).unwrap();
+            let plan = plan_pool(&m);
+            assert_no_live_overlap(&plan);
+            // Lower bound: the largest I+O pair must coexist.
+            assert!(plan.pool_bytes >= m.vanilla_peak_ram());
+            // Upper bound: never worse than keeping everything alive.
+            let total: u64 = (0..=m.num_layers()).map(|i| m.tensor_bytes(i)).sum();
+            assert!(plan.pool_bytes <= total);
+        }
+    }
+
+    #[test]
+    fn planner_floor_equals_biggest_io_pair() {
+        // The §10 contrast: a scheduling-based planner cannot go below the
+        // largest adjacent I+O pair (full maps still materialize)...
+        let m = zoo::mcunet_vww5();
+        let plan = plan_pool(&m);
+        assert_eq!(plan.pool_bytes, m.vanilla_peak_ram());
+    }
+
+    #[test]
+    fn fusion_beats_the_planner() {
+        // ...while msf-CNN's patch-based execution goes far below it.
+        for (_, m) in zoo::paper_models() {
+            let plan = plan_pool(&m);
+            let dag = FusionDag::build(&m, None);
+            let msf = minimize_ram_unconstrained(&dag).unwrap();
+            assert!(
+                (msf.cost.peak_ram as f64) < 0.5 * plan.pool_bytes as f64,
+                "{}: fusion {} vs planner {}",
+                m.name,
+                msf.cost.peak_ram,
+                plan.pool_bytes
+            );
+        }
+    }
+
+    #[test]
+    fn residual_lifetimes_respected() {
+        let m = zoo::mcunet_vww5();
+        let plan = plan_pool(&m);
+        // Every skip source must stay allocated until its consumer.
+        for (j, l) in m.layers.iter().enumerate() {
+            if let Some(src) = l.residual_from {
+                let buf = plan.buffers.iter().find(|p| p.tensor == src).unwrap();
+                assert!(buf.death >= j, "v{src} freed before skip consumer {j}");
+            }
+        }
+    }
+}

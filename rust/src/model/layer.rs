@@ -1,0 +1,285 @@
+//! Layer definitions: the operator vocabulary of the paper's model zoo
+//! (MobileNetV2 / MCUNet family) plus the pooling/dense tail.
+
+use super::TensorShape;
+
+/// Pointwise nonlinearity applied after a layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activation {
+    None,
+    Relu,
+    Relu6,
+}
+
+/// Operator kind. `streamable()` kinds can join a patch-based fusion block
+/// (they consume a bounded spatial window per output element).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    /// Standard convolution (`k×k×cin` per output element).
+    Conv2d,
+    /// Depthwise convolution (`k×k` per output element, cin == cout).
+    DwConv2d,
+    /// Average pooling window.
+    AvgPool,
+    /// Max pooling window.
+    MaxPool,
+    /// Global average pooling (HW→1). Rewritten to iterative form (§7).
+    GlobalAvgPool,
+    /// Fully connected. Rewritten to iterative form (§7).
+    Dense,
+}
+
+impl LayerKind {
+    /// Whether the op can live inside a patch-based fusion block.
+    pub fn streamable(self) -> bool {
+        matches!(
+            self,
+            LayerKind::Conv2d | LayerKind::DwConv2d | LayerKind::AvgPool | LayerKind::MaxPool
+        )
+    }
+}
+
+/// One layer of the chain. Spatial params are meaningless (set to 1/0) for
+/// `GlobalAvgPool` and `Dense`.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+    pub k: u32,
+    pub stride: u32,
+    pub padding: u32,
+    pub cin: u32,
+    pub cout: u32,
+    pub act: Activation,
+    /// `Some(j)` ⇒ the *input* tensor of layer `j` is added to this layer's
+    /// output (MobileNetV2 inverted-residual skip).
+    pub residual_from: Option<usize>,
+}
+
+impl Layer {
+    pub fn conv(
+        name: impl Into<String>,
+        k: u32,
+        stride: u32,
+        padding: u32,
+        cin: u32,
+        cout: u32,
+        act: Activation,
+    ) -> Self {
+        Self {
+            name: name.into(),
+            kind: LayerKind::Conv2d,
+            k,
+            stride,
+            padding,
+            cin,
+            cout,
+            act,
+            residual_from: None,
+        }
+    }
+
+    pub fn dwconv(
+        name: impl Into<String>,
+        k: u32,
+        stride: u32,
+        padding: u32,
+        c: u32,
+        act: Activation,
+    ) -> Self {
+        Self {
+            name: name.into(),
+            kind: LayerKind::DwConv2d,
+            k,
+            stride,
+            padding,
+            cin: c,
+            cout: c,
+            act,
+            residual_from: None,
+        }
+    }
+
+    /// 1×1 (pointwise) convolution — the expand/project ops of MBV2 blocks.
+    pub fn pointwise(name: impl Into<String>, cin: u32, cout: u32, act: Activation) -> Self {
+        Self::conv(name, 1, 1, 0, cin, cout, act)
+    }
+
+    pub fn avg_pool(name: impl Into<String>, k: u32, stride: u32, c: u32) -> Self {
+        Self {
+            name: name.into(),
+            kind: LayerKind::AvgPool,
+            k,
+            stride,
+            padding: 0,
+            cin: c,
+            cout: c,
+            act: Activation::None,
+            residual_from: None,
+        }
+    }
+
+    pub fn max_pool(name: impl Into<String>, k: u32, stride: u32, c: u32) -> Self {
+        Self {
+            name: name.into(),
+            kind: LayerKind::MaxPool,
+            k,
+            stride,
+            padding: 0,
+            cin: c,
+            cout: c,
+            act: Activation::None,
+            residual_from: None,
+        }
+    }
+
+    pub fn global_pool(name: impl Into<String>, c: u32) -> Self {
+        Self {
+            name: name.into(),
+            kind: LayerKind::GlobalAvgPool,
+            k: 1,
+            stride: 1,
+            padding: 0,
+            cin: c,
+            cout: c,
+            act: Activation::None,
+            residual_from: None,
+        }
+    }
+
+    pub fn dense(name: impl Into<String>, din: u32, dout: u32) -> Self {
+        Self {
+            name: name.into(),
+            kind: LayerKind::Dense,
+            k: 1,
+            stride: 1,
+            padding: 0,
+            cin: din,
+            cout: dout,
+            act: Activation::None,
+            residual_from: None,
+        }
+    }
+
+    pub fn with_residual(mut self, from: usize) -> Self {
+        self.residual_from = Some(from);
+        self
+    }
+
+    /// Shape inference; `Err` when the layer cannot consume `input`.
+    pub fn output_shape(&self, input: TensorShape) -> Result<TensorShape, String> {
+        if input.c != self.cin && !matches!(self.kind, LayerKind::Dense) {
+            return Err(format!(
+                "channel mismatch: input c={} but layer cin={}",
+                input.c, self.cin
+            ));
+        }
+        match self.kind {
+            LayerKind::Conv2d | LayerKind::DwConv2d | LayerKind::AvgPool | LayerKind::MaxPool => {
+                let h = TensorShape::conv_out(input.h, self.k, self.stride, self.padding)
+                    .ok_or_else(|| format!("spatial underflow: h={} k={}", input.h, self.k))?;
+                let w = TensorShape::conv_out(input.w, self.k, self.stride, self.padding)
+                    .ok_or_else(|| format!("spatial underflow: w={} k={}", input.w, self.k))?;
+                Ok(TensorShape::new(h, w, self.cout))
+            }
+            LayerKind::GlobalAvgPool => Ok(TensorShape::vec(self.cout)),
+            LayerKind::Dense => {
+                if input.elems() != self.cin as u64 {
+                    return Err(format!(
+                        "dense input elems {} != cin {}",
+                        input.elems(),
+                        self.cin
+                    ));
+                }
+                Ok(TensorShape::vec(self.cout))
+            }
+        }
+    }
+
+    /// MACs per output element for this op.
+    pub fn macs_per_out_elem(&self) -> u64 {
+        match self.kind {
+            LayerKind::Conv2d => self.k as u64 * self.k as u64 * self.cin as u64,
+            LayerKind::DwConv2d => self.k as u64 * self.k as u64,
+            // Pooling adds, counted as 1 op per window element (the paper
+            // counts conv MACs; pools are negligible but nonzero).
+            LayerKind::AvgPool | LayerKind::MaxPool => self.k as u64 * self.k as u64,
+            LayerKind::GlobalAvgPool => 1, // one add per input element, per channel amortized
+            LayerKind::Dense => self.cin as u64,
+        }
+    }
+
+    /// Vanilla MAC count of this layer for given input/output shapes.
+    pub fn macs(&self, input: TensorShape, output: TensorShape) -> u64 {
+        match self.kind {
+            LayerKind::GlobalAvgPool => input.elems(),
+            _ => output.elems() * self.macs_per_out_elem(),
+        }
+    }
+
+    /// Bytes of parameters (int8 weights + 4-byte bias per cout), for flash
+    /// footprint and the refetch term of the MCU latency model.
+    pub fn param_bytes(&self) -> u64 {
+        let weights = match self.kind {
+            LayerKind::Conv2d => self.k as u64 * self.k as u64 * self.cin as u64 * self.cout as u64,
+            LayerKind::DwConv2d => self.k as u64 * self.k as u64 * self.cin as u64,
+            LayerKind::Dense => self.cin as u64 * self.cout as u64,
+            _ => 0,
+        };
+        let bias = match self.kind {
+            LayerKind::Conv2d | LayerKind::DwConv2d | LayerKind::Dense => 4 * self.cout as u64,
+            _ => 0,
+        };
+        weights + bias
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_shape_and_macs() {
+        let l = Layer::conv("c", 3, 2, 1, 3, 16, Activation::Relu6);
+        let out = l.output_shape(TensorShape::new(32, 32, 3)).unwrap();
+        assert_eq!(out, TensorShape::new(16, 16, 16));
+        assert_eq!(l.macs(TensorShape::new(32, 32, 3), out), 16 * 16 * 16 * 27);
+    }
+
+    #[test]
+    fn dwconv_preserves_channels() {
+        let l = Layer::dwconv("d", 3, 1, 1, 8, Activation::Relu6);
+        let out = l.output_shape(TensorShape::new(10, 10, 8)).unwrap();
+        assert_eq!(out, TensorShape::new(10, 10, 8));
+        assert_eq!(l.macs_per_out_elem(), 9);
+    }
+
+    #[test]
+    fn channel_mismatch_rejected() {
+        let l = Layer::conv("c", 3, 1, 0, 4, 8, Activation::None);
+        assert!(l.output_shape(TensorShape::new(8, 8, 3)).is_err());
+    }
+
+    #[test]
+    fn dense_elems_checked() {
+        let l = Layer::dense("fc", 32, 10);
+        assert!(l.output_shape(TensorShape::vec(32)).is_ok());
+        assert!(l.output_shape(TensorShape::vec(33)).is_err());
+    }
+
+    #[test]
+    fn pointwise_is_1x1_conv() {
+        let l = Layer::pointwise("pw", 8, 16, Activation::None);
+        assert_eq!(l.k, 1);
+        let out = l.output_shape(TensorShape::new(5, 5, 8)).unwrap();
+        assert_eq!(out, TensorShape::new(5, 5, 16));
+    }
+
+    #[test]
+    fn param_bytes() {
+        let l = Layer::conv("c", 3, 1, 0, 4, 8, Activation::None);
+        assert_eq!(l.param_bytes(), 3 * 3 * 4 * 8 + 4 * 8);
+        let d = Layer::dwconv("d", 3, 1, 1, 8, Activation::None);
+        assert_eq!(d.param_bytes(), 3 * 3 * 8 + 4 * 8);
+    }
+}

@@ -1,0 +1,235 @@
+//! CNN model intermediate representation.
+//!
+//! msf-CNN operates on the *chain view* of a CNN (paper §4: "without loss
+//! of generality, we only discuss fusion blocks of convolutions"): an
+//! ordered list of layers `L0..L{n-1}` with tensor boundaries `v0..vn`.
+//! [`ModelChain`] owns the layers and the inferred boundary shapes; the
+//! fusion analytics ([`crate::fusion`]) and the DAG builder
+//! ([`crate::graph`]) consume it.
+
+mod layer;
+mod shapes;
+
+pub use layer::{Activation, Layer, LayerKind};
+pub use shapes::TensorShape;
+
+/// A CNN as an ordered layer chain with inferred tensor boundaries.
+///
+/// `shapes[i]` is the input tensor of `layers[i]`; `shapes[n]` is the model
+/// output. Residual (skip) connections are carried as an attribute on the
+/// consuming layer (`Layer::residual_from`) — the chain order is still the
+/// execution order, matching how the paper's models (MobileNetV2 family)
+/// linearize.
+#[derive(Debug, Clone)]
+pub struct ModelChain {
+    pub name: String,
+    pub layers: Vec<Layer>,
+    pub shapes: Vec<TensorShape>,
+    /// Bytes per tensor element (1 = int8 quantized, the TinyML default).
+    pub elem_bytes: u32,
+}
+
+impl ModelChain {
+    /// Build a chain from an input shape and layer list, inferring every
+    /// boundary shape. Panics if a layer is inconsistent with its input
+    /// (catching zoo construction bugs early).
+    pub fn new(name: impl Into<String>, input: TensorShape, layers: Vec<Layer>) -> Self {
+        let mut shapes = Vec::with_capacity(layers.len() + 1);
+        shapes.push(input);
+        for (i, layer) in layers.iter().enumerate() {
+            let inp = *shapes.last().unwrap();
+            let out = layer
+                .output_shape(inp)
+                .unwrap_or_else(|e| panic!("layer {i} ({}): {e}", layer.name));
+            shapes.push(out);
+        }
+        Self { name: name.into(), layers, shapes, elem_bytes: 1 }
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Input tensor shape of layer `i`.
+    pub fn input_of(&self, i: usize) -> TensorShape {
+        self.shapes[i]
+    }
+
+    /// Output tensor shape of layer `i`.
+    pub fn output_of(&self, i: usize) -> TensorShape {
+        self.shapes[i + 1]
+    }
+
+    /// Size in bytes of boundary tensor `v_i` (int8-quantized by default).
+    pub fn tensor_bytes(&self, i: usize) -> u64 {
+        self.shapes[i].elems() * self.elem_bytes as u64
+    }
+
+    /// MAC count of a single (unfused, *vanilla*) layer.
+    pub fn layer_macs(&self, i: usize) -> u64 {
+        self.layers[i].macs(self.shapes[i], self.shapes[i + 1])
+    }
+
+    /// Total vanilla MACs for a full inference.
+    pub fn total_macs(&self) -> u64 {
+        (0..self.layers.len()).map(|i| self.layer_macs(i)).sum()
+    }
+
+    /// Vanilla peak RAM (bytes): max over layers of input+output (+residual
+    /// stash), the paper's un-fused baseline.
+    pub fn vanilla_peak_ram(&self) -> u64 {
+        (0..self.layers.len())
+            .map(|i| {
+                self.tensor_bytes(i)
+                    + self.tensor_bytes(i + 1)
+                    + self.residual_stash_bytes(i)
+            })
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Extra bytes held live across layer `i` because a later layer adds a
+    /// skip connection whose source tensor spans `i`.
+    pub fn residual_stash_bytes(&self, i: usize) -> u64 {
+        self.layers
+            .iter()
+            .enumerate()
+            .filter_map(|(j, l)| l.residual_from.map(|src| (j, src)))
+            .filter(|&(j, src)| src < i && i <= j)
+            .map(|(_, src)| self.tensor_bytes(src))
+            .sum()
+    }
+
+    /// Whether layers `[a, b)` may form a fusion block: all spatially
+    /// streamable (conv / depthwise / pool), at least 2 layers, and no skip
+    /// connection crossing into or out of the span.
+    pub fn fusable_span(&self, a: usize, b: usize) -> bool {
+        if b <= a + 1 || b > self.layers.len() {
+            return false;
+        }
+        if !self.layers[a..b].iter().all(|l| l.kind.streamable()) {
+            return false;
+        }
+        // A skip edge (src -> j) must lie entirely inside or outside [a, b).
+        for (j, l) in self.layers.iter().enumerate() {
+            if let Some(src) = l.residual_from {
+                let j_in = a <= j && j < b;
+                // The stashed tensor is the *input* of layer src.
+                let src_in = a < src && src < b || (src == a && j_in && j < b);
+                let src_inside = a <= src && src < b;
+                if j_in != src_inside {
+                    return false;
+                }
+                let _ = (j_in, src_in);
+            }
+        }
+        true
+    }
+
+    /// True if the model tail after boundary `t` is exactly
+    /// `[GlobalPool, Dense*]` — the pattern the paper rewrites into
+    /// iterative form (§7) so it fuses with an upstream fusion block.
+    pub fn iterative_tail_at(&self, t: usize) -> bool {
+        if t >= self.layers.len() {
+            return false;
+        }
+        matches!(self.layers[t].kind, LayerKind::GlobalAvgPool)
+            && self.layers[t + 1..]
+                .iter()
+                .all(|l| matches!(l.kind, LayerKind::Dense))
+    }
+
+    /// Human-readable one-line summary per layer (for `msfcnn zoo`).
+    pub fn describe(&self) -> String {
+        let mut s = String::new();
+        for (i, l) in self.layers.iter().enumerate() {
+            let inp = self.shapes[i];
+            let out = self.shapes[i + 1];
+            s.push_str(&format!(
+                "{i:3}  {:<24} {:>12} -> {:<12} k={} s={} p={}{}\n",
+                l.name,
+                inp.to_string(),
+                out.to_string(),
+                l.k,
+                l.stride,
+                l.padding,
+                l.residual_from.map(|r| format!("  +skip(v{r})")).unwrap_or_default(),
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ModelChain {
+        ModelChain::new(
+            "tiny",
+            TensorShape::new(8, 8, 3),
+            vec![
+                Layer::conv("c0", 3, 1, 0, 3, 4, Activation::Relu6),
+                Layer::conv("c1", 3, 1, 0, 4, 8, Activation::Relu6),
+                Layer::global_pool("gp", 8),
+                Layer::dense("fc", 8, 10),
+            ],
+        )
+    }
+
+    #[test]
+    fn shape_inference_chains() {
+        let m = tiny();
+        assert_eq!(m.shapes[1], TensorShape::new(6, 6, 4));
+        assert_eq!(m.shapes[2], TensorShape::new(4, 4, 8));
+        assert_eq!(m.shapes[3], TensorShape::new(1, 1, 8));
+        assert_eq!(m.shapes[4], TensorShape::new(1, 1, 10));
+    }
+
+    #[test]
+    fn vanilla_peak_is_max_io_pair() {
+        let m = tiny();
+        // v0=192, v1=144, v2=128, v3=8, v4=10 bytes (int8).
+        assert_eq!(m.vanilla_peak_ram(), 192 + 144);
+    }
+
+    #[test]
+    fn macs_of_conv() {
+        let m = tiny();
+        // c0: 6*6*4 outputs, each k^2*cin = 27 MACs.
+        assert_eq!(m.layer_macs(0), 6 * 6 * 4 * 27);
+    }
+
+    #[test]
+    fn fusable_span_rules() {
+        let m = tiny();
+        assert!(m.fusable_span(0, 2)); // two convs
+        assert!(!m.fusable_span(0, 1)); // single layer is not a block
+        assert!(!m.fusable_span(1, 3)); // global pool not streamable as conv
+    }
+
+    #[test]
+    fn iterative_tail_detected() {
+        let m = tiny();
+        assert!(m.iterative_tail_at(2));
+        assert!(!m.iterative_tail_at(1));
+        assert!(!m.iterative_tail_at(3));
+    }
+
+    #[test]
+    fn residual_stash_accounted() {
+        let m = ModelChain::new(
+            "res",
+            TensorShape::new(8, 8, 4),
+            vec![
+                Layer::conv("c0", 3, 1, 1, 4, 4, Activation::Relu6),
+                Layer::conv("c1", 3, 1, 1, 4, 4, Activation::None).with_residual(0),
+            ],
+        );
+        // While c0 runs, v0 must also survive for the skip into c1.
+        assert_eq!(m.residual_stash_bytes(0), 0); // src==0, j==1: stash spans layers in (0..1)
+        let peak = m.vanilla_peak_ram();
+        // c1's edge: I(v1) + O(v2) + stash(v0)
+        assert_eq!(peak, 256 + 256 + 256);
+    }
+}

@@ -1,0 +1,61 @@
+//! Tensor shape arithmetic (HWC, single-image inference).
+
+use std::fmt;
+
+/// Spatial+channel shape of a boundary tensor. `h == w == 1` for vectors
+/// (post-global-pool / dense activations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TensorShape {
+    pub h: u32,
+    pub w: u32,
+    pub c: u32,
+}
+
+impl TensorShape {
+    pub const fn new(h: u32, w: u32, c: u32) -> Self {
+        Self { h, w, c }
+    }
+
+    /// Vector shape (1×1×d) for dense activations.
+    pub const fn vec(d: u32) -> Self {
+        Self { h: 1, w: 1, c: d }
+    }
+
+    pub fn elems(&self) -> u64 {
+        self.h as u64 * self.w as u64 * self.c as u64
+    }
+
+    /// Output spatial size of a window op: `floor((n + 2p - k)/s) + 1`.
+    pub fn conv_out(n: u32, k: u32, stride: u32, padding: u32) -> Option<u32> {
+        let padded = n + 2 * padding;
+        if padded < k || stride == 0 {
+            return None;
+        }
+        Some((padded - k) / stride + 1)
+    }
+}
+
+impl fmt::Display for TensorShape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}x{}x{}", self.h, self.w, self.c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_out_basic() {
+        assert_eq!(TensorShape::conv_out(32, 3, 1, 0), Some(30));
+        assert_eq!(TensorShape::conv_out(32, 3, 2, 1), Some(16));
+        assert_eq!(TensorShape::conv_out(2, 3, 1, 0), None);
+        assert_eq!(TensorShape::conv_out(3, 3, 1, 0), Some(1));
+    }
+
+    #[test]
+    fn elems_and_vec() {
+        assert_eq!(TensorShape::new(4, 5, 6).elems(), 120);
+        assert_eq!(TensorShape::vec(10).elems(), 10);
+    }
+}

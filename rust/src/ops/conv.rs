@@ -1,0 +1,171 @@
+//! Standard and depthwise convolution (HWC, zero padding).
+//!
+//! Weight layout matches the Python side: conv `[k][k][cin][cout]`,
+//! depthwise `[k][k][c]` — so artifact cross-checks can share weights.
+
+use crate::model::Activation;
+
+use super::{activate, Tensor};
+
+/// Standard conv2d. `w` is `[k,k,cin,cout]` flattened, `b` is `[cout]`.
+pub fn conv2d(
+    x: &Tensor,
+    w: &[f32],
+    b: &[f32],
+    k: usize,
+    stride: usize,
+    padding: usize,
+    cout: usize,
+    act: Activation,
+) -> Tensor {
+    let cin = x.c;
+    debug_assert_eq!(w.len(), k * k * cin * cout);
+    debug_assert_eq!(b.len(), cout);
+    let ho = (x.h + 2 * padding - k) / stride + 1;
+    let wo = (x.w + 2 * padding - k) / stride + 1;
+    let mut out = Tensor::zeros(ho, wo, cout);
+
+    for oy in 0..ho {
+        for ox in 0..wo {
+            let base = (oy * wo + ox) * cout;
+            let acc = &mut out.data[base..base + cout];
+            acc.copy_from_slice(b);
+            for ky in 0..k {
+                let sy = (oy * stride + ky) as isize - padding as isize;
+                if sy < 0 || sy as usize >= x.h {
+                    continue;
+                }
+                for kx in 0..k {
+                    let sx = (ox * stride + kx) as isize - padding as isize;
+                    if sx < 0 || sx as usize >= x.w {
+                        continue;
+                    }
+                    let xoff = ((sy as usize) * x.w + sx as usize) * cin;
+                    let woff = (ky * k + kx) * cin * cout;
+                    for ci in 0..cin {
+                        let xv = x.data[xoff + ci];
+                        let wrow = &w[woff + ci * cout..woff + (ci + 1) * cout];
+                        for (a, wv) in acc.iter_mut().zip(wrow) {
+                            *a += xv * wv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    activate(&mut out.data, act);
+    out
+}
+
+/// Depthwise conv2d. `w` is `[k,k,c]` flattened, `b` is `[c]`.
+pub fn dwconv2d(
+    x: &Tensor,
+    w: &[f32],
+    b: &[f32],
+    k: usize,
+    stride: usize,
+    padding: usize,
+    act: Activation,
+) -> Tensor {
+    let c = x.c;
+    debug_assert_eq!(w.len(), k * k * c);
+    debug_assert_eq!(b.len(), c);
+    let ho = (x.h + 2 * padding - k) / stride + 1;
+    let wo = (x.w + 2 * padding - k) / stride + 1;
+    let mut out = Tensor::zeros(ho, wo, c);
+
+    for oy in 0..ho {
+        for ox in 0..wo {
+            let base = (oy * wo + ox) * c;
+            out.data[base..base + c].copy_from_slice(b);
+            for ky in 0..k {
+                let sy = (oy * stride + ky) as isize - padding as isize;
+                if sy < 0 || sy as usize >= x.h {
+                    continue;
+                }
+                for kx in 0..k {
+                    let sx = (ox * stride + kx) as isize - padding as isize;
+                    if sx < 0 || sx as usize >= x.w {
+                        continue;
+                    }
+                    let xoff = ((sy as usize) * x.w + sx as usize) * c;
+                    let woff = (ky * k + kx) * c;
+                    for ci in 0..c {
+                        out.data[base + ci] += x.data[xoff + ci] * w[woff + ci];
+                    }
+                }
+            }
+        }
+    }
+    activate(&mut out.data, act);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_1x1_conv() {
+        // 1x1 conv with identity weights returns the input.
+        let x = Tensor::from_data(2, 2, 2, vec![1., 2., 3., 4., 5., 6., 7., 8.]);
+        let w = vec![1., 0., 0., 1.]; // [1,1,2,2] identity
+        let out = conv2d(&x, &w, &[0., 0.], 1, 1, 0, 2, Activation::None);
+        assert_eq!(out.data, x.data);
+    }
+
+    #[test]
+    fn known_3x3_sum_kernel() {
+        // All-ones 3x3 kernel on all-ones input, no padding: every output
+        // element is 9 (cin=1, cout=1).
+        let x = Tensor::from_data(4, 4, 1, vec![1.0; 16]);
+        let w = vec![1.0; 9];
+        let out = conv2d(&x, &w, &[0.0], 3, 1, 0, 1, Activation::None);
+        assert_eq!(out.h, 2);
+        assert!(out.data.iter().all(|&v| (v - 9.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn padding_shrinks_border_sums() {
+        let x = Tensor::from_data(3, 3, 1, vec![1.0; 9]);
+        let w = vec![1.0; 9];
+        let out = conv2d(&x, &w, &[0.0], 3, 1, 1, 1, Activation::None);
+        assert_eq!(out.h, 3);
+        assert_eq!(out.at(0, 0, 0), 4.0); // corner sees 2x2 window
+        assert_eq!(out.at(1, 1, 0), 9.0); // center sees all 9
+        assert_eq!(out.at(0, 1, 0), 6.0); // edge sees 2x3
+    }
+
+    #[test]
+    fn stride_subsamples() {
+        let x = Tensor::from_data(5, 5, 1, (0..25).map(|i| i as f32).collect());
+        let w = vec![1.0]; // 1x1 identity
+        let out = conv2d(&x, &w, &[0.0], 1, 2, 0, 1, Activation::None);
+        assert_eq!(out.h, 3);
+        assert_eq!(out.at(1, 1, 0), x.at(2, 2, 0));
+    }
+
+    #[test]
+    fn dwconv_is_per_channel() {
+        // Two channels, channel 1 weighted 0: stays bias.
+        let x = Tensor::from_data(3, 3, 2, (0..18).map(|i| i as f32).collect());
+        let mut w = vec![0.0; 9 * 2];
+        for ky in 0..3 {
+            for kx in 0..3 {
+                w[(ky * 3 + kx) * 2] = 1.0; // channel 0: sum kernel
+            }
+        }
+        let out = dwconv2d(&x, &w, &[0.0, 7.0], 3, 1, 0, Activation::None);
+        assert_eq!(out.h, 1);
+        let ch0_sum: f32 = (0..9).map(|i| x.data[i * 2]).sum();
+        assert_eq!(out.at(0, 0, 0), ch0_sum);
+        assert_eq!(out.at(0, 0, 1), 7.0);
+    }
+
+    #[test]
+    fn relu6_applied() {
+        let x = Tensor::from_data(1, 1, 1, vec![100.0]);
+        let out = conv2d(&x, &[1.0], &[0.0], 1, 1, 0, 1, Activation::Relu6);
+        assert_eq!(out.data[0], 6.0);
+    }
+}

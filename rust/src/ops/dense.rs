@@ -1,0 +1,107 @@
+//! Dense layer: common matvec and the paper's iterative form (Fig. 3).
+
+/// Common dense: `y = x·W + b`, `w` laid out `[din][dout]` row-major
+/// (column `w(n)` of the paper's Fig. 3 is `w[n*dout..]`).
+pub fn dense(x: &[f32], w: &[f32], b: &[f32], dout: usize) -> Vec<f32> {
+    debug_assert_eq!(w.len(), x.len() * dout);
+    let mut y = b.to_vec();
+    for (i, &xi) in x.iter().enumerate() {
+        let row = &w[i * dout..(i + 1) * dout];
+        for (yj, wj) in y.iter_mut().zip(row) {
+            *yj += xi * wj;
+        }
+    }
+    y
+}
+
+/// Iterative dense (paper Fig. 3): consumes the input vector element by
+/// element (or in chunks), accumulating `x[i] · w(i)` into the output —
+/// live memory is the `dout` accumulator plus one weight column instead of
+/// the whole input vector (20% of the common form for 1024→256).
+///
+/// Mirrors `python/compile/kernels/iter_dense.py`.
+#[derive(Debug, Clone)]
+pub struct DenseIter {
+    acc: Vec<f32>,
+    next_idx: usize,
+    din: usize,
+}
+
+impl DenseIter {
+    pub fn new(din: usize, b: &[f32]) -> Self {
+        Self { acc: b.to_vec(), next_idx: 0, din }
+    }
+
+    /// Feed the next chunk of input elements with the matching weight rows
+    /// (`w_rows` = `[chunk][dout]` slice of the weight matrix).
+    pub fn push(&mut self, x_chunk: &[f32], w_rows: &[f32]) {
+        let dout = self.acc.len();
+        debug_assert_eq!(w_rows.len(), x_chunk.len() * dout);
+        for (i, &xi) in x_chunk.iter().enumerate() {
+            let row = &w_rows[i * dout..(i + 1) * dout];
+            for (a, wv) in self.acc.iter_mut().zip(row) {
+                *a += xi * wv;
+            }
+        }
+        self.next_idx += x_chunk.len();
+    }
+
+    /// RAM held by the accumulator (the §7 footprint).
+    pub fn state_bytes(&self) -> u64 {
+        (self.acc.len() * 4) as u64
+    }
+
+    pub fn finish(self) -> Vec<f32> {
+        assert_eq!(self.next_idx, self.din, "short/over-fed dense");
+        self.acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::ParamGen;
+
+    #[test]
+    fn dense_known_values() {
+        // x=[1,2], W=[[1,0],[0,1]] (din=2,dout=2), b=[10,20].
+        let y = dense(&[1.0, 2.0], &[1., 0., 0., 1.], &[10., 20.], 2);
+        assert_eq!(y, vec![11.0, 22.0]);
+    }
+
+    #[test]
+    fn iterative_matches_common() {
+        let mut g = ParamGen::new(5);
+        let din = 100;
+        let dout = 24;
+        let x = g.fill(din, 1.0);
+        let w = g.fill(din * dout, 0.3);
+        let b = g.fill(dout, 0.1);
+        let common = dense(&x, &w, &b, dout);
+        let mut it = DenseIter::new(din, &b);
+        for chunk in 0..(din / 10) {
+            let lo = chunk * 10;
+            it.push(&x[lo..lo + 10], &w[lo * dout..(lo + 10) * dout]);
+        }
+        let iter = it.finish();
+        for (a, b) in common.iter().zip(&iter) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn iterative_paper_ratio() {
+        // Fig. 3: 1024 -> 256 dense compresses live activation memory to
+        // ~20%: acc (256) vs input+acc (1024+256) -> 256/1280 = 20%.
+        let it = DenseIter::new(1024, &vec![0.0; 256]);
+        let common_live = (1024 + 256) * 4;
+        assert_eq!(it.state_bytes() as usize * 5, common_live);
+    }
+
+    #[test]
+    #[should_panic(expected = "short/over-fed")]
+    fn short_feed_panics() {
+        let it = DenseIter::new(8, &[0.0; 2]);
+        it.finish();
+    }
+}

@@ -1,0 +1,593 @@
+//! Patch-based fused execution of a layer span — the measured counterpart
+//! of the analytical model in [`crate::fusion`].
+//!
+//! One iteration produces **one row of the block's final output** (the
+//! paper fixes output elements per iteration to one, §9). Per iteration
+//! the required input row band is derived by walking the receptive-field
+//! recursion backwards (including per-layer zero padding), then the band
+//! pyramid is computed layer by layer entirely inside preallocated band
+//! buffers — the H-cache scheme: horizontal positions are computed once
+//! per band (full-width rows), vertical overlap between consecutive bands
+//! is recomputed. Numerics are bit-comparable to layer-by-layer execution;
+//! MACs are counted as performed so tests can reconcile the Eq. 12–15
+//! predictions against reality.
+//!
+//! This mirrors the L1 Pallas kernel
+//! (`python/compile/kernels/fused_conv.py`) — same streaming axis, same
+//! recursion — so the three layers of the stack implement one schedule.
+
+use crate::model::{Layer, LayerKind, ModelChain};
+
+use super::{activate, LayerParams, Tensor};
+
+/// Row range in *unpadded* coordinates of a boundary tensor; `start` may be
+/// negative / extend past the map (zero padding rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BandRange {
+    pub start: isize,
+    pub rows: usize,
+}
+
+/// Input rows of `layer` needed to produce output rows `out`.
+fn required_input(layer: &Layer, out: BandRange) -> BandRange {
+    let s = layer.stride as isize;
+    let p = layer.padding as isize;
+    BandRange {
+        start: out.start * s - p,
+        rows: (out.rows - 1) * layer.stride as usize + layer.k as usize,
+    }
+}
+
+/// The per-layer band buffers of a fusion block — the executor's concrete
+/// "H-cache" state. `bands[i]` holds the input band of block layer `i`;
+/// `bands[depth]` holds the final output rows of one iteration.
+pub struct HCache {
+    pub bands: Vec<Tensor>,
+    /// Unpadded row ranges each band currently represents.
+    pub ranges: Vec<BandRange>,
+}
+
+impl HCache {
+    /// Total bytes of all band buffers (the measured counterpart of the
+    /// Eq. 11 `Buf` + input-strip terms).
+    pub fn bytes(&self) -> u64 {
+        self.bands.iter().map(|b| (b.elems() * 4) as u64).sum()
+    }
+}
+
+/// Statistics of one fused-block execution.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BlockStats {
+    /// Multiply-accumulates actually performed.
+    pub macs: u64,
+    /// Bytes of band buffers held live during the block.
+    pub cache_bytes: u64,
+    /// Iterations (final output rows) executed.
+    pub iterations: u64,
+}
+
+/// Executes layers `[a, b)` of `model` patch-by-patch.
+pub struct FusedBlock<'m> {
+    model: &'m ModelChain,
+    a: usize,
+    b: usize,
+    params: &'m [LayerParams],
+}
+
+impl<'m> FusedBlock<'m> {
+    /// `params[i]` must be the parameters of model layer `i` (absolute
+    /// indexing, same generator as the vanilla path).
+    pub fn new(model: &'m ModelChain, a: usize, b: usize, params: &'m [LayerParams]) -> Self {
+        assert!(model.fusable_span(a, b), "span [{a},{b}) is not fusable");
+        Self { model, a, b, params }
+    }
+
+    /// Per-iteration band row ranges for final output row `r`:
+    /// `ranges[depth]` = the output row, `ranges[0]` = input band of the
+    /// first layer.
+    fn ranges_for(&self, r: usize) -> Vec<BandRange> {
+        let depth = self.b - self.a;
+        let mut ranges = vec![BandRange { start: 0, rows: 0 }; depth + 1];
+        ranges[depth] = BandRange { start: r as isize, rows: 1 };
+        for idx in (0..depth).rev() {
+            ranges[idx] = required_input(&self.model.layers[self.a + idx], ranges[idx + 1]);
+        }
+        ranges
+    }
+
+    /// Run the block over `source` (the full `v_a` map — *streamed*: only
+    /// `row_band` slices are read, never the whole map at once), calling
+    /// `sink(row_index, row_tensor)` for each produced final output row.
+    /// Returns execution stats.
+    pub fn run_streaming(
+        &self,
+        source: &Tensor,
+        mut sink: impl FnMut(usize, &Tensor),
+    ) -> BlockStats {
+        let out_shape = self.model.output_of(self.b - 1);
+        let h_out = out_shape.h as usize;
+        let depth = self.b - self.a;
+        let mut stats = BlockStats::default();
+
+        // Preallocate band buffers (sizes are iteration-invariant).
+        let ranges0 = self.ranges_for(0);
+        let mut cache = HCache {
+            bands: (0..=depth)
+                .map(|idx| {
+                    let shape = if idx < depth {
+                        self.model.input_of(self.a + idx)
+                    } else {
+                        out_shape
+                    };
+                    Tensor::zeros(ranges0[idx].rows, shape.w as usize, shape.c as usize)
+                })
+                .collect(),
+            ranges: ranges0,
+        };
+        stats.cache_bytes = cache.bytes();
+
+        // Perf iteration 1: reuse one ranges vector and the preallocated
+        // first band across iterations - zero allocations in the hot loop.
+        let mut ranges = cache.ranges.clone();
+        for r in 0..h_out {
+            ranges[depth] = BandRange { start: r as isize, rows: 1 };
+            for idx in (0..depth).rev() {
+                ranges[idx] = required_input(&self.model.layers[self.a + idx], ranges[idx + 1]);
+            }
+            // Materialize the first band from the streamed source.
+            source.row_band_into(ranges[0].start, ranges[0].rows, &mut cache.bands[0]);
+            cache.ranges.copy_from_slice(&ranges);
+
+            for idx in 0..depth {
+                let li = self.a + idx;
+                let layer = &self.model.layers[li];
+                let out_rows = ranges[idx + 1].rows;
+                let h_map = if idx + 1 < depth {
+                    self.model.input_of(li + 1).h as usize
+                } else {
+                    h_out
+                };
+                let (head, tail) = cache.bands.split_at_mut(idx + 1);
+                let in_band = &head[idx];
+                let out_band = &mut tail[0];
+                // Only rows inside the real map are computed; rows that are
+                // the next layer's padding are zero-filled without work
+                // (keeps measured MACs aligned with Eq. 12–15 and skips
+                // wasted convolution at the map edges).
+                let r_out = ranges[idx + 1];
+                let lo = (-r_out.start).max(0) as usize;
+                let hi = (h_map as isize - r_out.start).clamp(0, r_out.rows as isize) as usize;
+                stats.macs += band_layer(
+                    layer,
+                    &self.params[li],
+                    in_band,
+                    out_band,
+                    lo,
+                    hi.max(lo),
+                );
+                // Zero rows that fall outside the real map: they are the
+                // next layer's padding rows and must be exactly 0.
+                zero_outside(out_band, r_out, h_map);
+                let _ = out_rows;
+                // Residual add from inside the block (stride-1 spans):
+                // src < current layer, so its band lives in `head`.
+                if let Some(src) = layer.residual_from {
+                    if src >= self.a && src < self.b {
+                        let src_idx = src - self.a;
+                        add_aligned(&head[src_idx], ranges[src_idx], out_band, ranges[idx + 1]);
+                    }
+                }
+            }
+            sink(r, &cache.bands[depth]);
+            stats.iterations += 1;
+        }
+        stats
+    }
+
+    /// Convenience: run the block and materialize the full output map.
+    pub fn run(&self, source: &Tensor) -> (Tensor, BlockStats) {
+        let out_shape = self.model.output_of(self.b - 1);
+        let mut out = Tensor::from_shape(out_shape);
+        let wo = out.w;
+        let co = out.c;
+        let stats = self.run_streaming(source, |r, row| {
+            let dst = r * wo * co;
+            out.data[dst..dst + wo * co].copy_from_slice(&row.data[..wo * co]);
+        });
+        (out, stats)
+    }
+}
+
+/// Compute band-local output rows `[row_lo, row_hi)` of `layer` from
+/// `in_band` into `out_band` (vertical padding pre-materialized in the
+/// band; horizontal padding applied here). Returns MACs performed.
+fn band_layer(
+    layer: &Layer,
+    params: &LayerParams,
+    in_band: &Tensor,
+    out_band: &mut Tensor,
+    row_lo: usize,
+    row_hi: usize,
+) -> u64 {
+    let k = layer.k as usize;
+    let s = layer.stride as usize;
+    let p = layer.padding as usize;
+    let cin = in_band.c;
+    let wo = (in_band.w + 2 * p - k) / s + 1;
+    debug_assert!(out_band.w == wo && out_band.h >= row_hi);
+    let cout = out_band.c;
+
+    match layer.kind {
+        LayerKind::Conv2d if k == 1 && p == 0 && s == 1 => {
+            // Perf iteration 2: pointwise fast path - a row-level GEMV
+            // with no window bookkeeping. The MBV2/MCUNet expand/project
+            // layers put most MACs here.
+            let w = &params.weights; // [cin][cout]
+            for oy in row_lo..row_hi {
+                for ox in 0..wo {
+                    let base = (oy * wo + ox) * cout;
+                    let acc = &mut out_band.data[base..base + cout];
+                    acc.copy_from_slice(&params.bias);
+                    let xoff = (oy * in_band.w + ox) * cin;
+                    for ci in 0..cin {
+                        let xv = in_band.data[xoff + ci];
+                        if xv == 0.0 {
+                            continue; // relu sparsity: skip dead activations
+                        }
+                        let wrow = &w[ci * cout..(ci + 1) * cout];
+                        for (a, wv) in acc.iter_mut().zip(wrow) {
+                            *a += xv * wv;
+                        }
+                    }
+                }
+            }
+            let slice = &mut out_band.data[row_lo * wo * cout..row_hi * wo * cout];
+            activate(slice, layer.act);
+            ((row_hi - row_lo) * wo * cout * cin) as u64
+        }
+        LayerKind::Conv2d => {
+            let w = &params.weights;
+            for oy in row_lo..row_hi {
+                for ox in 0..wo {
+                    let base = (oy * wo + ox) * cout;
+                    out_band.data[base..base + cout].copy_from_slice(&params.bias);
+                    for ky in 0..k {
+                        let sy = oy * s + ky; // vertical pad already in band
+                        for kx in 0..k {
+                            let sx = (ox * s + kx) as isize - p as isize;
+                            if sx < 0 || sx as usize >= in_band.w {
+                                continue;
+                            }
+                            let xoff = (sy * in_band.w + sx as usize) * cin;
+                            let woff = (ky * k + kx) * cin * cout;
+                            for ci in 0..cin {
+                                let xv = in_band.data[xoff + ci];
+                                let wrow = &w[woff + ci * cout..woff + (ci + 1) * cout];
+                                for (acc, wv) in
+                                    out_band.data[base..base + cout].iter_mut().zip(wrow)
+                                {
+                                    *acc += xv * wv;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            let slice = &mut out_band.data[row_lo * wo * cout..row_hi * wo * cout];
+            activate(slice, layer.act);
+            ((row_hi - row_lo) * wo * cout * k * k * cin) as u64
+        }
+        LayerKind::DwConv2d => {
+            // Perf iteration 3: split interior columns (no horizontal
+            // clamping possible) from the two padded edges, removing the
+            // per-element bounds branch from the k*k inner loop.
+            let w = &params.weights;
+            // Interior: ox*s + kx - p in [0, w) for all kx in [0, k).
+            let ox_lo = (p + s - 1) / s; // first ox with ox*s - p >= 0
+            let ox_hi = if in_band.w + p >= k {
+                ((in_band.w + p - k) / s + 1).min(wo)
+            } else {
+                0
+            };
+            for oy in row_lo..row_hi {
+                let edge = |out_band: &mut Tensor, ox: usize| {
+                    let base = (oy * wo + ox) * cout;
+                    out_band.data[base..base + cout].copy_from_slice(&params.bias);
+                    for ky in 0..k {
+                        let sy = oy * s + ky;
+                        for kx in 0..k {
+                            let sx = (ox * s + kx) as isize - p as isize;
+                            if sx < 0 || sx as usize >= in_band.w {
+                                continue;
+                            }
+                            let xoff = (sy * in_band.w + sx as usize) * cin;
+                            let woff = (ky * k + kx) * cin;
+                            for ci in 0..cin {
+                                out_band.data[base + ci] +=
+                                    in_band.data[xoff + ci] * w[woff + ci];
+                            }
+                        }
+                    }
+                };
+                for ox in 0..ox_lo.min(wo) {
+                    edge(out_band, ox);
+                }
+                for ox in ox_lo..ox_hi {
+                    let base = (oy * wo + ox) * cout;
+                    out_band.data[base..base + cout].copy_from_slice(&params.bias);
+                    let x0 = ox * s - p;
+                    for ky in 0..k {
+                        let sy = oy * s + ky;
+                        let row = (sy * in_band.w + x0) * cin;
+                        let wrow = ky * k * cin;
+                        let acc = &mut out_band.data[base..base + cout];
+                        for kx in 0..k {
+                            let xs = &in_band.data[row + kx * cin..row + (kx + 1) * cin];
+                            let ws = &w[wrow + kx * cin..wrow + (kx + 1) * cin];
+                            for ((a, xv), wv) in acc.iter_mut().zip(xs).zip(ws) {
+                                *a += xv * wv;
+                            }
+                        }
+                    }
+                }
+                for ox in ox_hi.max(ox_lo)..wo {
+                    edge(out_band, ox);
+                }
+            }
+            let slice = &mut out_band.data[row_lo * wo * cout..row_hi * wo * cout];
+            activate(slice, layer.act);
+            ((row_hi - row_lo) * wo * cout * k * k) as u64
+        }
+        LayerKind::AvgPool | LayerKind::MaxPool => {
+            let is_avg = matches!(layer.kind, LayerKind::AvgPool);
+            let inv = 1.0 / (k * k) as f32;
+            for oy in row_lo..row_hi {
+                for ox in 0..wo {
+                    let base = (oy * wo + ox) * cout;
+                    for ci in 0..cout {
+                        out_band.data[base + ci] =
+                            if is_avg { 0.0 } else { f32::NEG_INFINITY };
+                    }
+                    for ky in 0..k {
+                        let sy = oy * s + ky;
+                        for kx in 0..k {
+                            let sx = ox * s + kx; // pools are unpadded here
+                            let xoff = (sy * in_band.w + sx) * cin;
+                            for ci in 0..cout {
+                                let v = in_band.data[xoff + ci];
+                                let acc = &mut out_band.data[base + ci];
+                                if is_avg {
+                                    *acc += v * inv;
+                                } else {
+                                    *acc = acc.max(v);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            ((row_hi - row_lo) * wo * cout * k * k) as u64
+        }
+        _ => unreachable!("non-streamable layer inside fused block"),
+    }
+}
+
+/// Zero band rows whose absolute index lies outside `[0, h_map)`.
+fn zero_outside(band: &mut Tensor, range: BandRange, h_map: usize) {
+    for row in 0..range.rows {
+        let abs = range.start + row as isize;
+        if abs < 0 || abs as usize >= h_map {
+            let off = row * band.w * band.c;
+            band.data[off..off + band.w * band.c].fill(0.0);
+        }
+    }
+}
+
+/// `dst[rows of dst_range] += src[same absolute rows]` (residual add).
+fn add_aligned(src: &Tensor, src_range: BandRange, dst: &mut Tensor, dst_range: BandRange) {
+    debug_assert_eq!(src.w, dst.w);
+    debug_assert_eq!(src.c, dst.c);
+    let rowlen = dst.w * dst.c;
+    for row in 0..dst_range.rows {
+        let abs = dst_range.start + row as isize;
+        let s_row = abs - src_range.start;
+        if s_row < 0 || s_row as usize >= src_range.rows {
+            continue; // outside the stashed band: padding rows, add 0
+        }
+        let soff = s_row as usize * rowlen;
+        let doff = row * rowlen;
+        for i in 0..rowlen {
+            dst.data[doff + i] += src.data[soff + i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::TensorShape;
+    use crate::ops::{conv2d, dwconv2d, ParamGen};
+
+    fn run_vanilla(model: &ModelChain, params: &[LayerParams], input: &Tensor) -> Tensor {
+        let mut cur = input.clone();
+        let mut stash: Vec<Option<Tensor>> = vec![None; model.num_layers() + 1];
+        for (i, l) in model.layers.iter().enumerate() {
+            for (j, ll) in model.layers.iter().enumerate() {
+                if ll.residual_from == Some(i) && j >= i {
+                    stash[i] = Some(cur.clone());
+                }
+            }
+            let mut out = match l.kind {
+                LayerKind::Conv2d => conv2d(
+                    &cur,
+                    &params[i].weights,
+                    &params[i].bias,
+                    l.k as usize,
+                    l.stride as usize,
+                    l.padding as usize,
+                    l.cout as usize,
+                    l.act,
+                ),
+                LayerKind::DwConv2d => dwconv2d(
+                    &cur,
+                    &params[i].weights,
+                    &params[i].bias,
+                    l.k as usize,
+                    l.stride as usize,
+                    l.padding as usize,
+                    l.act,
+                ),
+                LayerKind::AvgPool => crate::ops::avg_pool2d(&cur, l.k as usize, l.stride as usize),
+                LayerKind::MaxPool => crate::ops::max_pool2d(&cur, l.k as usize, l.stride as usize),
+                _ => break,
+            };
+            if let Some(src) = l.residual_from {
+                let st = stash[src].as_ref().expect("stash");
+                for (o, s) in out.data.iter_mut().zip(&st.data) {
+                    *o += s;
+                }
+            }
+            cur = out;
+        }
+        cur
+    }
+
+    fn rand_input(shape: TensorShape, seed: u64) -> Tensor {
+        let mut g = ParamGen::new(seed);
+        let n = shape.elems() as usize;
+        Tensor::from_data(
+            shape.h as usize,
+            shape.w as usize,
+            shape.c as usize,
+            g.fill(n, 2.0),
+        )
+    }
+
+    fn params_for(model: &ModelChain) -> Vec<LayerParams> {
+        model
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| LayerParams::for_layer(l, i))
+            .collect()
+    }
+
+    #[test]
+    fn fused_equals_vanilla_valid_convs() {
+        use crate::model::{Activation, Layer};
+        let m = ModelChain::new(
+            "t",
+            TensorShape::new(17, 13, 3),
+            vec![
+                Layer::conv("c0", 3, 1, 0, 3, 6, Activation::Relu6),
+                Layer::conv("c1", 3, 2, 0, 6, 4, Activation::None),
+            ],
+        );
+        let p = params_for(&m);
+        let x = rand_input(m.shapes[0], 1);
+        let expect = run_vanilla(&m, &p, &x);
+        let (got, stats) = FusedBlock::new(&m, 0, 2, &p).run(&x);
+        assert_eq!(got.shape(), expect.shape());
+        assert!(got.max_abs_diff(&expect) < 1e-4);
+        assert_eq!(stats.iterations as u32, m.output_of(1).h);
+    }
+
+    #[test]
+    fn fused_equals_vanilla_with_padding_and_dw() {
+        use crate::model::{Activation, Layer};
+        let m = ModelChain::new(
+            "t",
+            TensorShape::new(16, 16, 4),
+            vec![
+                Layer::conv("c0", 3, 2, 1, 4, 8, Activation::Relu6),
+                Layer::dwconv("d1", 3, 1, 1, 8, Activation::Relu6),
+                Layer::pointwise("p2", 8, 6, Activation::None),
+            ],
+        );
+        let p = params_for(&m);
+        let x = rand_input(m.shapes[0], 2);
+        let expect = run_vanilla(&m, &p, &x);
+        let (got, _) = FusedBlock::new(&m, 0, 3, &p).run(&x);
+        assert!(got.max_abs_diff(&expect) < 1e-4, "diff {}", got.max_abs_diff(&expect));
+    }
+
+    #[test]
+    fn fused_equals_vanilla_with_pool_member() {
+        use crate::model::{Activation, Layer};
+        let m = ModelChain::new(
+            "t",
+            TensorShape::new(12, 12, 2),
+            vec![
+                Layer::conv("c0", 3, 1, 0, 2, 4, Activation::Relu),
+                Layer::avg_pool("pl", 2, 2, 4),
+            ],
+        );
+        let p = params_for(&m);
+        let x = rand_input(m.shapes[0], 3);
+        let expect = run_vanilla(&m, &p, &x);
+        let (got, _) = FusedBlock::new(&m, 0, 2, &p).run(&x);
+        assert!(got.max_abs_diff(&expect) < 1e-4);
+    }
+
+    #[test]
+    fn fused_handles_internal_residual() {
+        use crate::model::{Activation, Layer};
+        let m = ModelChain::new(
+            "res",
+            TensorShape::new(10, 10, 6),
+            vec![
+                Layer::pointwise("expand", 6, 12, Activation::Relu6),
+                Layer::dwconv("dw", 3, 1, 1, 12, Activation::Relu6),
+                Layer::pointwise("project", 12, 6, Activation::None).with_residual(0),
+            ],
+        );
+        let p = params_for(&m);
+        let x = rand_input(m.shapes[0], 4);
+        let expect = run_vanilla(&m, &p, &x);
+        let (got, _) = FusedBlock::new(&m, 0, 3, &p).run(&x);
+        assert!(got.max_abs_diff(&expect) < 1e-4, "diff {}", got.max_abs_diff(&expect));
+    }
+
+    #[test]
+    fn fused_macs_match_analytical_model() {
+        use crate::model::{Activation, Layer};
+        let m = ModelChain::new(
+            "t",
+            TensorShape::new(20, 20, 3),
+            vec![
+                Layer::conv("c0", 3, 1, 1, 3, 6, Activation::Relu6),
+                Layer::conv("c1", 3, 1, 1, 6, 4, Activation::Relu6),
+            ],
+        );
+        let p = params_for(&m);
+        let x = rand_input(m.shapes[0], 5);
+        let (_, stats) = FusedBlock::new(&m, 0, 2, &p).run(&x);
+        let predicted = crate::fusion::block_macs(&m, 0, 2);
+        let ratio = stats.macs as f64 / predicted as f64;
+        assert!(
+            (0.9..=1.1).contains(&ratio),
+            "measured {} vs predicted {predicted} (ratio {ratio})",
+            stats.macs
+        );
+    }
+
+    #[test]
+    fn deep_stride_chain_correct() {
+        use crate::model::{Activation, Layer};
+        let m = ModelChain::new(
+            "deep",
+            TensorShape::new(33, 29, 3),
+            vec![
+                Layer::conv("c0", 3, 2, 1, 3, 4, Activation::Relu6),
+                Layer::conv("c1", 3, 1, 0, 4, 4, Activation::Relu6),
+                Layer::conv("c2", 3, 2, 1, 4, 8, Activation::None),
+                Layer::conv("c3", 1, 1, 0, 8, 5, Activation::Relu6),
+            ],
+        );
+        let p = params_for(&m);
+        let x = rand_input(m.shapes[0], 6);
+        let expect = run_vanilla(&m, &p, &x);
+        let (got, _) = FusedBlock::new(&m, 0, 4, &p).run(&x);
+        assert!(got.max_abs_diff(&expect) < 1e-4, "diff {}", got.max_abs_diff(&expect));
+    }
+}

@@ -1,0 +1,128 @@
+//! Pure-Rust tensor operator substrate — the on-device inference engine
+//! the paper builds on microTVM, rebuilt here so fused execution can be
+//! *measured* (numerics + tracked RAM), not just predicted.
+//!
+//! Everything is f32 HWC single-image (numerics match the L1/L2 Python
+//! oracles; the int8 *sizing* used by the analytical model is a property
+//! of [`crate::model::ModelChain::elem_bytes`], not of these kernels).
+
+mod conv;
+mod dense;
+mod fused_block;
+mod pool;
+mod quant;
+mod tensor;
+
+pub use conv::{conv2d, dwconv2d};
+pub use dense::{dense, DenseIter};
+pub use fused_block::{FusedBlock, HCache};
+pub use pool::{avg_pool2d, global_avg_pool, max_pool2d, GlobalPoolIter};
+pub use quant::{qconv2d, QParams, QTensor};
+pub use tensor::Tensor;
+
+use crate::model::{Activation, Layer, LayerKind};
+
+/// Apply a layer's activation in place.
+pub fn activate(buf: &mut [f32], act: Activation) {
+    match act {
+        Activation::None => {}
+        Activation::Relu => {
+            for v in buf.iter_mut() {
+                *v = v.max(0.0);
+            }
+        }
+        Activation::Relu6 => {
+            for v in buf.iter_mut() {
+                *v = v.clamp(0.0, 6.0);
+            }
+        }
+    }
+}
+
+/// Deterministic per-layer parameters for reproducible runs: a tiny
+/// xorshift-based generator seeded from the layer index (the executor and
+/// all tests draw weights through this, so fused-vs-vanilla comparisons
+/// are exact and repeatable without a `rand` dependency).
+pub struct ParamGen {
+    state: u64,
+}
+
+impl ParamGen {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed.wrapping_mul(0x9E3779B97F4A7C15) | 1 }
+    }
+
+    /// Uniform in [-0.5, 0.5), scaled by `scale`.
+    pub fn next(&mut self, scale: f32) -> f32 {
+        // xorshift64*
+        self.state ^= self.state >> 12;
+        self.state ^= self.state << 25;
+        self.state ^= self.state >> 27;
+        let r = self.state.wrapping_mul(0x2545F4914F6CDD1D);
+        let unit = (r >> 11) as f32 / (1u64 << 53) as f32; // [0,1)
+        (unit - 0.5) * scale
+    }
+
+    pub fn fill(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| self.next(scale)).collect()
+    }
+}
+
+/// Weights (+bias) of one layer, generated deterministically.
+#[derive(Debug, Clone)]
+pub struct LayerParams {
+    pub weights: Vec<f32>,
+    pub bias: Vec<f32>,
+}
+
+impl LayerParams {
+    /// He-ish scaled deterministic parameters for layer `li` of a chain.
+    pub fn for_layer(layer: &Layer, li: usize) -> Self {
+        let mut gen = ParamGen::new(0x5F3C ^ ((li as u64) << 32) ^ li as u64);
+        let (n_w, fan_in) = match layer.kind {
+            LayerKind::Conv2d => (
+                (layer.k * layer.k * layer.cin * layer.cout) as usize,
+                (layer.k * layer.k * layer.cin) as usize,
+            ),
+            LayerKind::DwConv2d => (
+                (layer.k * layer.k * layer.cin) as usize,
+                (layer.k * layer.k) as usize,
+            ),
+            LayerKind::Dense => ((layer.cin * layer.cout) as usize, layer.cin as usize),
+            _ => (0, 1),
+        };
+        let scale = (2.0 / fan_in.max(1) as f32).sqrt();
+        let weights = gen.fill(n_w, scale);
+        let bias = gen.fill(layer.cout as usize, 0.02);
+        Self { weights, bias }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paramgen_is_deterministic() {
+        let a: Vec<f32> = ParamGen::new(7).fill(16, 1.0);
+        let b: Vec<f32> = ParamGen::new(7).fill(16, 1.0);
+        assert_eq!(a, b);
+        let c: Vec<f32> = ParamGen::new(8).fill(16, 1.0);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn paramgen_range() {
+        let v = ParamGen::new(3).fill(10_000, 2.0);
+        assert!(v.iter().all(|x| *x >= -1.0 && *x < 1.0));
+        let mean: f32 = v.iter().sum::<f32>() / v.len() as f32;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+    }
+
+    #[test]
+    fn activate_relu6_clamps() {
+        let mut buf = vec![-1.0, 0.5, 7.0];
+        activate(&mut buf, Activation::Relu6);
+        assert_eq!(buf, vec![0.0, 0.5, 6.0]);
+    }
+}

@@ -1,0 +1,161 @@
+//! Pooling ops: windowed avg/max, common global pooling, and the paper's
+//! iterative global pooling (Fig. 2).
+
+use super::Tensor;
+
+pub fn avg_pool2d(x: &Tensor, k: usize, stride: usize) -> Tensor {
+    let ho = (x.h - k) / stride + 1;
+    let wo = (x.w - k) / stride + 1;
+    let mut out = Tensor::zeros(ho, wo, x.c);
+    let inv = 1.0 / (k * k) as f32;
+    for oy in 0..ho {
+        for ox in 0..wo {
+            for ky in 0..k {
+                for kx in 0..k {
+                    let xoff = ((oy * stride + ky) * x.w + ox * stride + kx) * x.c;
+                    let base = (oy * wo + ox) * x.c;
+                    for ci in 0..x.c {
+                        out.data[base + ci] += x.data[xoff + ci] * inv;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+pub fn max_pool2d(x: &Tensor, k: usize, stride: usize) -> Tensor {
+    let ho = (x.h - k) / stride + 1;
+    let wo = (x.w - k) / stride + 1;
+    let mut out = Tensor::zeros(ho, wo, x.c);
+    out.data.fill(f32::NEG_INFINITY);
+    for oy in 0..ho {
+        for ox in 0..wo {
+            for ky in 0..k {
+                for kx in 0..k {
+                    let xoff = ((oy * stride + ky) * x.w + ox * stride + kx) * x.c;
+                    let base = (oy * wo + ox) * x.c;
+                    for ci in 0..x.c {
+                        out.data[base + ci] = out.data[base + ci].max(x.data[xoff + ci]);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Common (whole-map) global average pooling: `[H,W,C] -> [C]`.
+pub fn global_avg_pool(x: &Tensor) -> Vec<f32> {
+    let mut acc = vec![0.0f32; x.c];
+    for y in 0..x.h {
+        for xx in 0..x.w {
+            let off = (y * x.w + xx) * x.c;
+            for ci in 0..x.c {
+                acc[ci] += x.data[off + ci];
+            }
+        }
+    }
+    let inv = 1.0 / (x.h * x.w) as f32;
+    for v in acc.iter_mut() {
+        *v *= inv;
+    }
+    acc
+}
+
+/// Iterative global average pooling (paper Fig. 2): receives row bands and
+/// updates a running C-sized accumulator — live memory is `C` floats
+/// instead of the whole `H×W×C` map (≈2% for a 7×7 map).
+///
+/// Mirrors `python/compile/kernels/iter_pool.py`.
+#[derive(Debug, Clone)]
+pub struct GlobalPoolIter {
+    acc: Vec<f32>,
+    seen_elems: usize,
+    total_elems: usize,
+}
+
+impl GlobalPoolIter {
+    /// `total_rows × w` spatial elements expected, `c` channels.
+    pub fn new(c: usize, total_rows: usize, w: usize) -> Self {
+        Self { acc: vec![0.0; c], seen_elems: 0, total_elems: total_rows * w }
+    }
+
+    /// Feed a row band `[rows, w, c]`.
+    pub fn push_rows(&mut self, band: &Tensor) {
+        assert_eq!(band.c, self.acc.len());
+        for y in 0..band.h {
+            for x in 0..band.w {
+                let off = (y * band.w + x) * band.c;
+                for ci in 0..band.c {
+                    self.acc[ci] += band.data[off + ci];
+                }
+            }
+        }
+        self.seen_elems += band.h * band.w;
+    }
+
+    /// RAM held by the accumulator (the §7 footprint).
+    pub fn state_bytes(&self) -> u64 {
+        (self.acc.len() * 4) as u64
+    }
+
+    /// Finish; panics if fed a different number of elements than declared.
+    pub fn finish(self) -> Vec<f32> {
+        assert_eq!(self.seen_elems, self.total_elems, "short/over-fed pooling");
+        let inv = 1.0 / self.total_elems as f32;
+        self.acc.into_iter().map(|v| v * inv).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ramp(h: usize, w: usize, c: usize) -> Tensor {
+        Tensor::from_data(h, w, c, (0..h * w * c).map(|i| i as f32 * 0.1).collect())
+    }
+
+    #[test]
+    fn avg_pool_2x2() {
+        let x = Tensor::from_data(2, 2, 1, vec![1., 2., 3., 4.]);
+        let out = avg_pool2d(&x, 2, 2);
+        assert_eq!(out.data, vec![2.5]);
+    }
+
+    #[test]
+    fn max_pool_2x2() {
+        let x = Tensor::from_data(2, 2, 1, vec![1., 7., 3., 4.]);
+        let out = max_pool2d(&x, 2, 2);
+        assert_eq!(out.data, vec![7.0]);
+    }
+
+    #[test]
+    fn iterative_matches_common_pool() {
+        let x = ramp(7, 7, 16);
+        let common = global_avg_pool(&x);
+        let mut it = GlobalPoolIter::new(16, 7, 7);
+        for y in 0..7 {
+            it.push_rows(&x.row_band(y as isize, 1));
+        }
+        let iter = it.finish();
+        for (a, b) in common.iter().zip(&iter) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn iterative_state_is_tiny() {
+        // Paper Fig. 2: 7x7 map -> accumulator is ~2% of the map.
+        let it = GlobalPoolIter::new(16, 7, 7);
+        let map_bytes = 7 * 7 * 16 * 4u64;
+        assert!(it.state_bytes() * 49 == map_bytes);
+    }
+
+    #[test]
+    #[should_panic(expected = "short/over-fed")]
+    fn short_feed_panics() {
+        let it = GlobalPoolIter::new(4, 3, 3);
+        it.finish();
+    }
+}

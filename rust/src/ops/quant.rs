@@ -1,0 +1,219 @@
+//! int8 quantization substrate — the numeric regime the paper's RAM
+//! accounting assumes ("quantized ResNet-34", int8 tensor sizing).
+//!
+//! Symmetric-affine per-tensor scheme (TFLite-style): `real = scale ·
+//! (q - zero_point)`, int8 activations/weights, i32 accumulators, with a
+//! requantization step after each op. The executor runs f32 for oracle
+//! exactness; this module proves the int8 path stays within quantization
+//! error of it, which is what licenses `elem_bytes = 1` in Eq. 5.
+
+use super::Tensor;
+
+/// Per-tensor affine quantization parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QParams {
+    pub scale: f32,
+    pub zero_point: i32,
+}
+
+impl QParams {
+    /// Parameters covering `[lo, hi]` with int8 range (asymmetric).
+    pub fn from_range(lo: f32, hi: f32) -> Self {
+        let lo = lo.min(0.0);
+        let hi = hi.max(f32::EPSILON);
+        let scale = (hi - lo) / 255.0;
+        let zero_point = (-128.0 - lo / scale).round().clamp(-128.0, 127.0) as i32;
+        Self { scale, zero_point }
+    }
+
+    /// Parameters for observed data.
+    pub fn observe(data: &[f32]) -> Self {
+        let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+        for &v in data {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        if !lo.is_finite() || !hi.is_finite() {
+            return Self { scale: 1.0, zero_point: 0 };
+        }
+        Self::from_range(lo, hi)
+    }
+
+    #[inline]
+    pub fn quantize(&self, v: f32) -> i8 {
+        ((v / self.scale).round() as i32 + self.zero_point).clamp(-128, 127) as i8
+    }
+
+    #[inline]
+    pub fn dequantize(&self, q: i8) -> f32 {
+        (q as i32 - self.zero_point) as f32 * self.scale
+    }
+}
+
+/// An int8-quantized HWC tensor.
+#[derive(Debug, Clone)]
+pub struct QTensor {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub data: Vec<i8>,
+    pub qp: QParams,
+}
+
+impl QTensor {
+    pub fn quantize(t: &Tensor) -> Self {
+        let qp = QParams::observe(&t.data);
+        Self {
+            h: t.h,
+            w: t.w,
+            c: t.c,
+            data: t.data.iter().map(|&v| qp.quantize(v)).collect(),
+            qp,
+        }
+    }
+
+    pub fn dequantize(&self) -> Tensor {
+        Tensor::from_data(
+            self.h,
+            self.w,
+            self.c,
+            self.data.iter().map(|&q| self.qp.dequantize(q)).collect(),
+        )
+    }
+
+    /// RAM bytes of the quantized activation (what Eq. 5 sizes).
+    pub fn bytes(&self) -> u64 {
+        self.data.len() as u64
+    }
+}
+
+/// int8 conv2d with i32 accumulation and f32 requantization — the MCU
+/// inner loop the latency model's `cycles_per_mac` abstracts.
+/// `w_q`/`b` follow the same `[k,k,cin,cout]` layout as the f32 path.
+#[allow(clippy::too_many_arguments)]
+pub fn qconv2d(
+    x: &QTensor,
+    w_q: &[i8],
+    w_qp: QParams,
+    bias: &[f32],
+    k: usize,
+    stride: usize,
+    padding: usize,
+    cout: usize,
+    out_qp: QParams,
+    relu6: bool,
+) -> QTensor {
+    let cin = x.c;
+    let ho = (x.h + 2 * padding - k) / stride + 1;
+    let wo = (x.w + 2 * padding - k) / stride + 1;
+    let mut out = vec![0i8; ho * wo * cout];
+    let x_zp = x.qp.zero_point;
+    let w_zp = w_qp.zero_point;
+    let real_scale = x.qp.scale * w_qp.scale;
+
+    for oy in 0..ho {
+        for ox in 0..wo {
+            for co in 0..cout {
+                let mut acc: i32 = 0;
+                for ky in 0..k {
+                    let sy = (oy * stride + ky) as isize - padding as isize;
+                    if sy < 0 || sy as usize >= x.h {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let sx = (ox * stride + kx) as isize - padding as isize;
+                        if sx < 0 || sx as usize >= x.w {
+                            continue;
+                        }
+                        let xoff = ((sy as usize) * x.w + sx as usize) * cin;
+                        let woff = (ky * k + kx) * cin * cout;
+                        for ci in 0..cin {
+                            let xv = x.data[xoff + ci] as i32 - x_zp;
+                            let wv = w_q[woff + ci * cout + co] as i32 - w_zp;
+                            acc += xv * wv;
+                        }
+                    }
+                }
+                let mut real = acc as f32 * real_scale + bias[co];
+                if relu6 {
+                    real = real.clamp(0.0, 6.0);
+                }
+                out[(oy * wo + ox) * cout + co] = out_qp.quantize(real);
+            }
+        }
+    }
+    QTensor { h: ho, w: wo, c: cout, data: out, qp: out_qp }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Activation;
+    use crate::ops::{conv2d, ParamGen};
+
+    #[test]
+    fn quantize_roundtrip_error_bounded() {
+        let mut g = ParamGen::new(1);
+        let t = Tensor::from_data(4, 4, 3, g.fill(48, 4.0));
+        let q = QTensor::quantize(&t);
+        let back = q.dequantize();
+        let max_err = t.max_abs_diff(&back);
+        // Error bounded by half a quantization step.
+        assert!(max_err <= q.qp.scale * 0.51, "err {max_err} scale {}", q.qp.scale);
+    }
+
+    #[test]
+    fn qparams_cover_range() {
+        let qp = QParams::from_range(-1.0, 3.0);
+        assert_eq!(qp.quantize(-1.0), -128);
+        assert_eq!(qp.quantize(3.0), 127);
+        assert!((qp.dequantize(qp.quantize(0.0))).abs() < qp.scale);
+    }
+
+    #[test]
+    fn int8_activation_is_quarter_of_f32() {
+        let t = Tensor::zeros(8, 8, 4);
+        let q = QTensor::quantize(&t);
+        assert_eq!(q.bytes() * 4, (t.elems() * 4) as u64);
+    }
+
+    #[test]
+    fn qconv_matches_f32_conv_within_quant_error() {
+        let mut g = ParamGen::new(7);
+        let x = Tensor::from_data(10, 10, 3, g.fill(300, 2.0));
+        let w = g.fill(3 * 3 * 3 * 8, 0.6);
+        let b = g.fill(8, 0.1);
+        let f32_out = conv2d(&x, &w, &b, 3, 1, 1, 8, Activation::Relu6);
+
+        let xq = QTensor::quantize(&x);
+        let w_qp = QParams::observe(&w);
+        let w_q: Vec<i8> = w.iter().map(|&v| w_qp.quantize(v)).collect();
+        let out_qp = QParams::observe(&f32_out.data);
+        let q_out = qconv2d(&xq, &w_q, w_qp, &b, 3, 1, 1, 8, out_qp, true);
+        let deq = q_out.dequantize();
+
+        assert_eq!(deq.shape(), f32_out.shape());
+        // int8 conv error: dominated by input/weight quantization noise,
+        // amplified by the k²·cin accumulation; a small multiple of the
+        // output step covers it.
+        let tol = 6.0 * out_qp.scale + 0.05;
+        let max_err = deq.max_abs_diff(&f32_out);
+        assert!(max_err < tol, "max_err {max_err} vs tol {tol}");
+    }
+
+    #[test]
+    fn qconv_zero_points_cancel_on_constant_input() {
+        // A constant input through an all-ones 1x1 kernel must reproduce
+        // the constant (x scale/zp bookkeeping is exact for exact values).
+        let t = Tensor::from_data(2, 2, 1, vec![1.0; 4]);
+        let xq = QTensor::quantize(&t);
+        let w_qp = QParams::from_range(0.0, 1.0);
+        let w_q = vec![w_qp.quantize(1.0)];
+        let out_qp = QParams::from_range(0.0, 2.0);
+        let out = qconv2d(&xq, &w_q, w_qp, &[0.0], 1, 1, 0, 1, out_qp, false);
+        let deq = out.dequantize();
+        for v in &deq.data {
+            assert!((v - 1.0).abs() < 0.03, "{v}");
+        }
+    }
+}

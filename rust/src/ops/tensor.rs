@@ -1,0 +1,128 @@
+//! Minimal HWC f32 tensor with row-band views for the patch executor.
+
+use crate::model::TensorShape;
+
+/// Dense HWC f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(h: usize, w: usize, c: usize) -> Self {
+        Self { h, w, c, data: vec![0.0; h * w * c] }
+    }
+
+    pub fn from_shape(s: TensorShape) -> Self {
+        Self::zeros(s.h as usize, s.w as usize, s.c as usize)
+    }
+
+    pub fn from_data(h: usize, w: usize, c: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), h * w * c, "data length mismatch");
+        Self { h, w, c, data }
+    }
+
+    /// 1-D vector tensor (dense activations).
+    pub fn vector(data: Vec<f32>) -> Self {
+        let c = data.len();
+        Self { h: 1, w: 1, c, data }
+    }
+
+    #[inline]
+    pub fn at(&self, y: usize, x: usize, ch: usize) -> f32 {
+        self.data[(y * self.w + x) * self.c + ch]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, y: usize, x: usize, ch: usize) -> &mut f32 {
+        &mut self.data[(y * self.w + x) * self.c + ch]
+    }
+
+    /// Zero-padded read: out-of-bounds coordinates return 0 (conv padding).
+    #[inline]
+    pub fn at_padded(&self, y: isize, x: isize, ch: usize) -> f32 {
+        if y < 0 || x < 0 || y as usize >= self.h || x as usize >= self.w {
+            0.0
+        } else {
+            self.at(y as usize, x as usize, ch)
+        }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn shape(&self) -> TensorShape {
+        TensorShape::new(self.h as u32, self.w as u32, self.c as u32)
+    }
+
+    /// Copy rows `[y0, y0+rows)` into a new tensor (clamped, zero-filled
+    /// beyond the bottom edge) — the streaming read of a row band.
+    pub fn row_band(&self, y0: isize, rows: usize) -> Tensor {
+        let mut out = Tensor::zeros(rows, self.w, self.c);
+        self.row_band_into(y0, rows, &mut out);
+        out
+    }
+
+    /// Allocation-free variant of [`Self::row_band`]: fill `dst` (same
+    /// width/channels, `dst.h >= rows`) — the fused executor's per-
+    /// iteration streaming read reuses one buffer (§Perf iteration 1).
+    pub fn row_band_into(&self, y0: isize, rows: usize, dst: &mut Tensor) {
+        debug_assert!(dst.w == self.w && dst.c == self.c && dst.h >= rows);
+        let rowlen = self.w * self.c;
+        for r in 0..rows {
+            let sy = y0 + r as isize;
+            let dsts = &mut dst.data[r * rowlen..(r + 1) * rowlen];
+            if sy < 0 || sy as usize >= self.h {
+                dsts.fill(0.0);
+                continue;
+            }
+            let src = sy as usize * rowlen;
+            dsts.copy_from_slice(&self.data[src..src + rowlen]);
+        }
+    }
+
+    /// Max |a-b| against another tensor (test helper).
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.data.len(), other.data.len());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_roundtrip() {
+        let mut t = Tensor::zeros(3, 4, 2);
+        *t.at_mut(1, 2, 1) = 5.0;
+        assert_eq!(t.at(1, 2, 1), 5.0);
+        assert_eq!(t.data[(1 * 4 + 2) * 2 + 1], 5.0);
+    }
+
+    #[test]
+    fn padded_reads_zero_outside() {
+        let mut t = Tensor::zeros(2, 2, 1);
+        *t.at_mut(0, 0, 0) = 3.0;
+        assert_eq!(t.at_padded(-1, 0, 0), 0.0);
+        assert_eq!(t.at_padded(0, 5, 0), 0.0);
+        assert_eq!(t.at_padded(0, 0, 0), 3.0);
+    }
+
+    #[test]
+    fn row_band_clamps_and_zero_fills() {
+        let t = Tensor::from_data(3, 1, 1, vec![1.0, 2.0, 3.0]);
+        let band = t.row_band(2, 3);
+        assert_eq!(band.data, vec![3.0, 0.0, 0.0]);
+        let band = t.row_band(-1, 2);
+        assert_eq!(band.data, vec![0.0, 1.0]);
+    }
+}

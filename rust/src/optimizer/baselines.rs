@@ -1,0 +1,171 @@
+//! Comparator settings: vanilla, the MCUNetV2-style head-fusion heuristic,
+//! and a StreamNet-style single-block brute force (§8's baselines).
+
+use crate::graph::FusionDag;
+
+use super::{FusionSetting, OptResult};
+
+/// The un-fused model: every edge a single layer.
+pub fn vanilla_setting(dag: &FusionDag) -> FusionSetting {
+    let mut path = Vec::new();
+    for v in 0..dag.n_nodes - 1 {
+        let e = dag.out[v]
+            .iter()
+            .copied()
+            .find(|&e| dag.edges[e].b == v + 1)
+            .expect("single-layer edge always present");
+        path.push(e);
+    }
+    FusionSetting::from_path(dag, path)
+}
+
+/// MCUNetV2's heuristic (§2, §6.3): fuse only the *head* of the network —
+/// pick the single prefix block `[0, b)` that minimizes the setting's peak
+/// RAM, executing every later layer unfused. Simple, but blind to interior
+/// RAM peaks, which is exactly where msf-CNN finds better solutions.
+pub fn heuristic_head_fusion(dag: &FusionDag) -> FusionSetting {
+    let mut best: Option<FusionSetting> = None;
+    for &e in &dag.out[0] {
+        let b = dag.edges[e].b;
+        if b == 1 && dag.edges[e].a == 0 && dag.out[0].len() > 1 {
+            // Also consider pure vanilla below via b == 1 case naturally.
+        }
+        let mut path = vec![e];
+        let mut v = b;
+        while v < dag.n_nodes - 1 {
+            let single = dag.out[v]
+                .iter()
+                .copied()
+                .find(|&se| dag.edges[se].b == v + 1)
+                .expect("single-layer edge always present");
+            path.push(single);
+            v += 1;
+        }
+        let s = FusionSetting::from_path(dag, path);
+        let better = match &best {
+            None => true,
+            Some(cur) => (s.cost.peak_ram, s.cost.macs) < (cur.cost.peak_ram, cur.cost.macs),
+        };
+        if better {
+            best = Some(s);
+        }
+    }
+    best.expect("at least the vanilla prefix exists")
+}
+
+/// StreamNet-style brute force: exactly **one** fusion block anywhere in
+/// the chain (2-D tensor cache ≈ our H-cache), position and depth chosen
+/// by exhaustive sweep to minimize peak RAM; ties toward fewer MACs.
+/// Optionally capped by a RAM limit (`None` ⇒ unconstrained minimum).
+pub fn streamnet_single_block(dag: &FusionDag, p_max_bytes: Option<u64>) -> OptResult {
+    let mut best: Option<FusionSetting> = None;
+    // Candidate blocks: every fused edge; plus the pure vanilla path.
+    let mut candidates: Vec<Option<usize>> = dag
+        .edges
+        .iter()
+        .enumerate()
+        .filter(|(_, e)| e.b - e.a > 1)
+        .map(|(i, _)| Some(i))
+        .collect();
+    candidates.push(None); // vanilla
+
+    for cand in candidates {
+        let mut path = Vec::new();
+        let mut v = 0usize;
+        while v < dag.n_nodes - 1 {
+            let next = match cand {
+                Some(fe) if dag.edges[fe].a == v => fe,
+                _ => dag.out[v]
+                    .iter()
+                    .copied()
+                    .find(|&se| dag.edges[se].b == v + 1)
+                    .expect("single-layer edge always present"),
+            };
+            path.push(next);
+            v = dag.edges[next].b;
+        }
+        let s = FusionSetting::from_path(dag, path);
+        if let Some(pm) = p_max_bytes {
+            if s.cost.peak_ram > pm {
+                continue;
+            }
+        }
+        let better = match &best {
+            None => true,
+            Some(cur) => (s.cost.peak_ram, s.cost.macs) < (cur.cost.peak_ram, cur.cost.macs),
+        };
+        if better {
+            best = Some(s);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Activation, Layer, ModelChain, TensorShape};
+    use crate::optimizer::minimize_ram_unconstrained;
+
+    fn model() -> ModelChain {
+        ModelChain::new(
+            "b",
+            TensorShape::new(32, 32, 3),
+            vec![
+                Layer::conv("c0", 3, 1, 1, 3, 8, Activation::Relu6),
+                Layer::conv("c1", 3, 2, 1, 8, 16, Activation::Relu6),
+                Layer::conv("c2", 3, 1, 1, 16, 16, Activation::Relu6),
+                Layer::conv("c3", 3, 2, 1, 16, 32, Activation::Relu6),
+                Layer::global_pool("gp", 32),
+                Layer::dense("fc", 32, 10),
+            ],
+        )
+    }
+
+    #[test]
+    fn vanilla_has_no_fused_blocks_and_f_1() {
+        let m = model();
+        let dag = FusionDag::build(&m, None);
+        let v = vanilla_setting(&dag);
+        assert_eq!(v.num_fused_blocks(), 0);
+        assert!((v.cost.overhead - 1.0).abs() < 1e-12);
+        assert_eq!(v.cost.peak_ram, m.vanilla_peak_ram());
+    }
+
+    #[test]
+    fn heuristic_beats_vanilla_on_head_heavy_model() {
+        let m = model();
+        let dag = FusionDag::build(&m, None);
+        let h = heuristic_head_fusion(&dag);
+        assert!(h.cost.peak_ram < m.vanilla_peak_ram());
+    }
+
+    #[test]
+    fn msf_beats_or_ties_all_baselines() {
+        // The paper's headline: the multi-stage search dominates both the
+        // head heuristic and single-block StreamNet on peak RAM.
+        let dag = FusionDag::build(&model(), None);
+        let msf = minimize_ram_unconstrained(&dag).unwrap();
+        let h = heuristic_head_fusion(&dag);
+        let sn = streamnet_single_block(&dag, None).unwrap();
+        assert!(msf.cost.peak_ram <= h.cost.peak_ram);
+        assert!(msf.cost.peak_ram <= sn.cost.peak_ram);
+    }
+
+    #[test]
+    fn streamnet_uses_at_most_one_block() {
+        let dag = FusionDag::build(&model(), None);
+        let sn = streamnet_single_block(&dag, None).unwrap();
+        assert!(sn.num_fused_blocks() <= 1);
+    }
+
+    #[test]
+    fn streamnet_respects_ram_cap() {
+        let dag = FusionDag::build(&model(), None);
+        let unconstrained = streamnet_single_block(&dag, None).unwrap();
+        if let Some(s) = streamnet_single_block(&dag, Some(unconstrained.cost.peak_ram)) {
+            assert!(s.cost.peak_ram <= unconstrained.cost.peak_ram);
+        }
+        assert!(streamnet_single_block(&dag, Some(1)).is_none());
+    }
+}

@@ -1,0 +1,99 @@
+//! Exact exhaustive optimizers — `O(2^{V-2})` enumeration (App. D).
+//!
+//! Used only in tests and ablation benches: the property suite asserts the
+//! polynomial-time P1/P2 solvers match these on every small random model.
+
+use crate::graph::{enumerate_paths, path_cost, FusionDag};
+
+use super::{FusionSetting, OptResult};
+
+/// Exact P1: enumerate all complete paths, keep those with `F ≤ f_max`,
+/// return min peak-RAM (ties toward fewer MACs).
+pub fn exhaustive_p1(dag: &FusionDag, f_max: f64) -> OptResult {
+    let budget = (f_max * dag.vanilla_macs as f64).floor() as u64;
+    enumerate_paths(dag)
+        .into_iter()
+        .map(|p| {
+            let c = path_cost(dag, &p);
+            (c.peak_ram, c.macs, p)
+        })
+        .filter(|&(_, macs, _)| macs <= budget)
+        .min_by_key(|&(ram, macs, _)| (ram, macs))
+        .map(|(_, _, p)| FusionSetting::from_path(dag, p))
+}
+
+/// Exact P2: enumerate, keep `P ≤ p_max`, return min MACs (ties toward
+/// lower RAM).
+pub fn exhaustive_p2(dag: &FusionDag, p_max_bytes: u64) -> OptResult {
+    enumerate_paths(dag)
+        .into_iter()
+        .map(|p| {
+            let c = path_cost(dag, &p);
+            (c.peak_ram, c.macs, p)
+        })
+        .filter(|&(ram, _, _)| ram <= p_max_bytes)
+        .min_by_key(|&(ram, macs, _)| (macs, ram))
+        .map(|(_, _, p)| FusionSetting::from_path(dag, p))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Activation, Layer, ModelChain, TensorShape};
+    use crate::optimizer::{minimize_macs, minimize_ram};
+
+    fn model(n: usize) -> ModelChain {
+        let mut layers = Vec::new();
+        let mut c = 3u32;
+        for i in 0..n {
+            let (s, co) = if i % 2 == 1 { (2, c * 2) } else { (1, c) };
+            layers.push(Layer::conv(format!("c{i}"), 3, s, 1, c, co, Activation::Relu6));
+            c = co;
+        }
+        ModelChain::new("x", TensorShape::new(40, 40, 3), layers)
+    }
+
+    #[test]
+    fn p2_matches_exhaustive() {
+        let m = model(6);
+        let dag = FusionDag::build(&m, None);
+        for p_max in [2_000u64, 8_000, 20_000, 100_000] {
+            let fast = minimize_macs(&dag, p_max);
+            let slow = exhaustive_p2(&dag, p_max);
+            match (fast, slow) {
+                (None, None) => {}
+                (Some(f), Some(s)) => {
+                    assert_eq!(f.cost.macs, s.cost.macs, "P_max={p_max}");
+                }
+                (f, s) => panic!("feasibility mismatch at P_max={p_max}: {f:?} vs {s:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn p1_feasible_and_bounded_by_exhaustive() {
+        // The paper's pruning heuristic is exact on the RAM axis in our
+        // tests; at minimum it must stay feasible and within the candidate
+        // set's envelope.
+        let m = model(6);
+        let dag = FusionDag::build(&m, None);
+        for f_max in [1.05f64, 1.2, 1.5, 3.0] {
+            let fast = minimize_ram(&dag, f_max);
+            let slow = exhaustive_p1(&dag, f_max);
+            match (&fast, &slow) {
+                (None, None) => {}
+                (Some(f), Some(s)) => {
+                    assert!(f.cost.overhead <= f_max + 1e-9);
+                    assert!(
+                        f.cost.peak_ram >= s.cost.peak_ram,
+                        "pruned search cannot beat the exact optimum"
+                    );
+                }
+                (None, Some(_)) => {
+                    panic!("pruned P1 missed a feasible solution at F_max={f_max}")
+                }
+                (Some(_), None) => panic!("pruned P1 fabricated a solution at F_max={f_max}"),
+            }
+        }
+    }
+}

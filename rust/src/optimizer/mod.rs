@@ -1,0 +1,34 @@
+//! Fusion-setting optimizers (paper §6) and baselines.
+//!
+//! * [`p1`] — minimize peak RAM s.t. compute-overhead `F ≤ F_max`
+//!   (minimax path; constrained variant prunes max-RAM edges iteratively,
+//!   Eq. 8–10, O(V³) worst case).
+//! * [`p2`] — minimize MACs s.t. peak RAM `P ≤ P_max`
+//!   (filter over-limit edges, then shortest path).
+//! * [`baselines`] — vanilla, MCUNetV2-style head-fusion heuristic,
+//!   StreamNet-style single-block brute force.
+//! * [`exhaustive`] — exact enumeration (tests/property-checks only).
+
+mod baselines;
+mod exhaustive;
+mod p1;
+mod p2;
+mod setting;
+
+pub use baselines::{heuristic_head_fusion, streamnet_single_block, vanilla_setting};
+pub use exhaustive::{exhaustive_p1, exhaustive_p2};
+pub use p1::{minimize_ram, minimize_ram_unconstrained};
+pub use p2::{minimize_macs, minimize_macs_unconstrained};
+pub use setting::{FusionSetting, SettingCost};
+
+use crate::graph::FusionDag;
+
+/// Shared outcome type: a concrete fusion setting with its encoded costs,
+/// or `None` when no complete path satisfies the constraints (the paper's
+/// "(No Solution)" cells in Table 1).
+pub type OptResult = Option<FusionSetting>;
+
+/// Compute-overhead factor `F = C_S / C_vanilla` (§5.3).
+pub fn overhead_factor(dag: &FusionDag, macs: u64) -> f64 {
+    macs as f64 / dag.vanilla_macs as f64
+}

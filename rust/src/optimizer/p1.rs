@@ -1,0 +1,126 @@
+//! Problem P1: minimize peak RAM subject to a compute-cost limit (§6.1).
+
+use crate::graph::{minimax_path, min_sum_path, FusionDag};
+
+use super::{FusionSetting, OptResult};
+
+/// Unconstrained P1 (`F_max = ∞`): the minimax-path solution.
+pub fn minimize_ram_unconstrained(dag: &FusionDag) -> OptResult {
+    minimax_path(dag).map(|p| FusionSetting::from_path(dag, p))
+}
+
+/// Constrained P1 via the paper's pruning strategy (Eq. 8–10):
+///
+/// 1. `G_0 = G`; candidate `S_i` = min-MAC path of `G_i`;
+/// 2. `G_{i+1}` = `G_i` minus all edges of maximal RAM;
+/// 3. stop when `v_n` becomes unreachable;
+/// 4. among candidates with `F ≤ F_max`, return the one with the smallest
+///    peak RAM (ties broken toward fewer MACs).
+///
+/// Worst case O(V³): up to E = O(V²) elimination rounds × O(E) DP.
+pub fn minimize_ram(dag: &FusionDag, f_max: f64) -> OptResult {
+    let mac_budget = (f_max * dag.vanilla_macs as f64).floor() as u64;
+    let mut g = dag.clone();
+    let mut best: Option<FusionSetting> = None;
+
+    loop {
+        match min_sum_path(&g) {
+            None => break, // target unreachable: all candidates collected
+            Some(path) => {
+                let s = FusionSetting::from_path(dag, path);
+                if s.cost.macs <= mac_budget {
+                    let better = match &best {
+                        None => true,
+                        Some(b) => {
+                            (s.cost.peak_ram, s.cost.macs) < (b.cost.peak_ram, b.cost.macs)
+                        }
+                    };
+                    if better {
+                        best = Some(s);
+                    }
+                }
+                // Eq. 9: drop every edge at the current max RAM.
+                let worst = g.max_ram_edges();
+                if worst.is_empty() {
+                    break;
+                }
+                g = g.without_edges(&worst);
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Activation, Layer, ModelChain, TensorShape};
+
+    fn model() -> ModelChain {
+        ModelChain::new(
+            "p1",
+            TensorShape::new(32, 32, 3),
+            vec![
+                Layer::conv("c0", 3, 1, 1, 3, 8, Activation::Relu6),
+                Layer::conv("c1", 3, 2, 1, 8, 16, Activation::Relu6),
+                Layer::conv("c2", 3, 1, 1, 16, 16, Activation::Relu6),
+                Layer::conv("c3", 3, 2, 1, 16, 32, Activation::Relu6),
+                Layer::global_pool("gp", 32),
+                Layer::dense("fc", 32, 10),
+            ],
+        )
+    }
+
+    #[test]
+    fn unconstrained_beats_vanilla() {
+        let m = model();
+        let dag = FusionDag::build(&m, None);
+        let s = minimize_ram_unconstrained(&dag).unwrap();
+        assert!(s.cost.peak_ram < m.vanilla_peak_ram());
+        assert!(s.num_fused_blocks() >= 1);
+    }
+
+    #[test]
+    fn constraint_is_respected() {
+        let m = model();
+        let dag = FusionDag::build(&m, None);
+        for f_max in [1.05, 1.2, 1.5, 2.0] {
+            if let Some(s) = minimize_ram(&dag, f_max) {
+                assert!(
+                    s.cost.overhead <= f_max + 1e-9,
+                    "F={} > F_max={f_max}",
+                    s.cost.overhead
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn looser_budget_never_hurts() {
+        let m = model();
+        let dag = FusionDag::build(&m, None);
+        let tight = minimize_ram(&dag, 1.1).map(|s| s.cost.peak_ram);
+        let loose = minimize_ram(&dag, 2.0).map(|s| s.cost.peak_ram);
+        if let (Some(t), Some(l)) = (tight, loose) {
+            assert!(l <= t, "loose {l} > tight {t}");
+        }
+    }
+
+    #[test]
+    fn f_max_one_returns_vanilla_or_free_fusion() {
+        let m = model();
+        let dag = FusionDag::build(&m, None);
+        let s = minimize_ram(&dag, 1.0).expect("vanilla path always satisfies F=1");
+        assert!(s.cost.overhead <= 1.0 + 1e-9);
+        // RAM can still beat vanilla via zero-overhead fusion (iterative tail).
+        assert!(s.cost.peak_ram <= m.vanilla_peak_ram());
+    }
+
+    #[test]
+    fn huge_budget_matches_unconstrained() {
+        let dag = FusionDag::build(&model(), None);
+        let c = minimize_ram(&dag, 1e9).unwrap();
+        let u = minimize_ram_unconstrained(&dag).unwrap();
+        assert_eq!(c.cost.peak_ram, u.cost.peak_ram);
+    }
+}

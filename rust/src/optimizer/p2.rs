@@ -1,0 +1,90 @@
+//! Problem P2: minimize compute cost subject to a RAM limit (§6.2).
+
+use crate::graph::{min_sum_path, FusionDag};
+
+use super::{FusionSetting, OptResult};
+
+/// Unconstrained P2 (`P_max = ∞`): plain shortest (min-MAC) path.
+pub fn minimize_macs_unconstrained(dag: &FusionDag) -> OptResult {
+    min_sum_path(dag).map(|p| FusionSetting::from_path(dag, p))
+}
+
+/// Constrained P2: eliminate every edge whose RAM exceeds `p_max_bytes`
+/// (so all remaining paths automatically satisfy the limit — §6.2), then
+/// take the shortest path. `None` ⇒ the paper's "(No Solution)".
+pub fn minimize_macs(dag: &FusionDag, p_max_bytes: u64) -> OptResult {
+    let over: Vec<usize> = (0..dag.edges.len())
+        .filter(|&e| dag.edges[e].cost.ram_bytes > p_max_bytes)
+        .collect();
+    let g = dag.without_edges(&over);
+    min_sum_path(&g).map(|p| FusionSetting::from_path(dag, p))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Activation, Layer, ModelChain, TensorShape};
+
+    fn model() -> ModelChain {
+        ModelChain::new(
+            "p2",
+            TensorShape::new(32, 32, 3),
+            vec![
+                Layer::conv("c0", 3, 1, 1, 3, 8, Activation::Relu6),
+                Layer::conv("c1", 3, 2, 1, 8, 16, Activation::Relu6),
+                Layer::conv("c2", 3, 1, 1, 16, 16, Activation::Relu6),
+                Layer::conv("c3", 3, 2, 1, 16, 32, Activation::Relu6),
+                Layer::global_pool("gp", 32),
+                Layer::dense("fc", 32, 10),
+            ],
+        )
+    }
+
+    #[test]
+    fn unconstrained_is_vanilla_or_better() {
+        let m = model();
+        let dag = FusionDag::build(&m, None);
+        let s = minimize_macs_unconstrained(&dag).unwrap();
+        assert!(s.cost.macs <= m.total_macs());
+    }
+
+    #[test]
+    fn ram_limit_respected() {
+        let m = model();
+        let dag = FusionDag::build(&m, None);
+        for p_max in [4_000u64, 8_000, 16_000, 64_000] {
+            if let Some(s) = minimize_macs(&dag, p_max) {
+                assert!(s.cost.peak_ram <= p_max);
+            }
+        }
+    }
+
+    #[test]
+    fn infeasible_limit_returns_none() {
+        let dag = FusionDag::build(&model(), None);
+        assert!(minimize_macs(&dag, 16).is_none()); // 16 bytes: hopeless
+    }
+
+    #[test]
+    fn tighter_limit_costs_more_macs() {
+        let m = model();
+        let dag = FusionDag::build(&m, None);
+        let u = minimize_macs_unconstrained(&dag).unwrap();
+        // Force below the unconstrained solution's RAM: more recompute.
+        if let Some(t) = minimize_macs(&dag, u.cost.peak_ram / 2) {
+            assert!(t.cost.macs >= u.cost.macs);
+            assert!(t.cost.peak_ram <= u.cost.peak_ram / 2);
+        }
+    }
+
+    #[test]
+    fn duality_with_p1() {
+        // P2's solution at P_max = P1(F_max=inf).peak_ram must exist and
+        // cost no more MACs than the P1 solution (it optimizes MACs there).
+        let dag = FusionDag::build(&model(), None);
+        let p1 = super::super::minimize_ram_unconstrained(&dag).unwrap();
+        let p2 = minimize_macs(&dag, p1.cost.peak_ram).unwrap();
+        assert!(p2.cost.macs <= p1.cost.macs);
+        assert!(p2.cost.peak_ram <= p1.cost.peak_ram);
+    }
+}

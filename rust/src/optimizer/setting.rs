@@ -1,0 +1,100 @@
+//! A concrete fusion setting: the optimizer's output, the executor's input.
+
+use crate::graph::{path_cost, FusionDag};
+
+/// Cost summary of a setting (Eq. 6–7 plus the overhead factor F).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SettingCost {
+    pub peak_ram: u64,
+    pub macs: u64,
+    /// `F = macs / vanilla_macs` (§5.3).
+    pub overhead: f64,
+}
+
+/// A complete compute path through the fusion DAG, i.e. a partition of the
+/// layer chain into single layers and fusion blocks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FusionSetting {
+    /// Edge indices into the originating [`FusionDag`], in execution order.
+    pub path: Vec<usize>,
+    /// `(a, b, iterative_tail)` spans, in execution order.
+    pub spans: Vec<(usize, usize, bool)>,
+    pub cost: SettingCost,
+}
+
+impl FusionSetting {
+    pub fn from_path(dag: &FusionDag, path: Vec<usize>) -> Self {
+        let pc = path_cost(dag, &path);
+        let spans = path
+            .iter()
+            .map(|&e| {
+                let edge = &dag.edges[e];
+                (edge.a, edge.b, edge.iterative_tail)
+            })
+            .collect();
+        Self {
+            path,
+            spans,
+            cost: SettingCost {
+                peak_ram: pc.peak_ram,
+                macs: pc.macs,
+                overhead: pc.macs as f64 / dag.vanilla_macs as f64,
+            },
+        }
+    }
+
+    /// Number of multi-layer fusion blocks in the setting.
+    pub fn num_fused_blocks(&self) -> usize {
+        self.spans.iter().filter(|(a, b, _)| b - a > 1).count()
+    }
+
+    /// Compact human-readable form, e.g. `[0..5|5|5..9*]` (`*` = iterative
+    /// tail, `|`-separated spans).
+    pub fn describe(&self) -> String {
+        let parts: Vec<String> = self
+            .spans
+            .iter()
+            .map(|&(a, b, it)| {
+                let star = if it { "*" } else { "" };
+                if b - a == 1 {
+                    format!("{a}{star}")
+                } else {
+                    format!("{a}..{b}{star}")
+                }
+            })
+            .collect();
+        format!("[{}]", parts.join("|"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Activation, Layer, ModelChain, TensorShape};
+
+    #[test]
+    fn from_path_reconstructs_spans() {
+        let m = ModelChain::new(
+            "s",
+            TensorShape::new(16, 16, 3),
+            vec![
+                Layer::conv("c0", 3, 1, 0, 3, 4, Activation::Relu6),
+                Layer::conv("c1", 3, 1, 0, 4, 4, Activation::Relu6),
+                Layer::conv("c2", 3, 1, 0, 4, 4, Activation::Relu6),
+            ],
+        );
+        let dag = FusionDag::build(&m, None);
+        // Find the edge (0,2) then single 2.
+        let e02 = (0..dag.edges.len())
+            .find(|&e| dag.edges[e].a == 0 && dag.edges[e].b == 2)
+            .unwrap();
+        let e2 = (0..dag.edges.len())
+            .find(|&e| dag.edges[e].a == 2 && dag.edges[e].b == 3)
+            .unwrap();
+        let s = FusionSetting::from_path(&dag, vec![e02, e2]);
+        assert_eq!(s.spans, vec![(0, 2, false), (2, 3, false)]);
+        assert_eq!(s.num_fused_blocks(), 1);
+        assert_eq!(s.describe(), "[0..2|2]");
+        assert!(s.cost.overhead >= 1.0);
+    }
+}

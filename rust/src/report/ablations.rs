@@ -1,0 +1,168 @@
+//! Ablations for the design choices DESIGN.md calls out — the paper's §9
+//! "Discussion" axes, made measurable.
+
+use crate::fusion::CacheScheme;
+use crate::fusion::tiles::band_heights;
+use crate::graph::FusionDag;
+use crate::model::ModelChain;
+use crate::optimizer::minimize_ram_unconstrained;
+use crate::zoo;
+
+use super::{kb, render};
+
+/// §9 "Caching Paradigm": min peak RAM + F per DeFiNES cache scheme.
+#[derive(Debug, Clone)]
+pub struct SchemeRow {
+    pub scheme: CacheScheme,
+    /// Per paper model: (min peak RAM kB, overhead F).
+    pub cells: Vec<(f64, f64)>,
+}
+
+pub fn ablation_cache_schemes() -> (Vec<SchemeRow>, String) {
+    let models = zoo::paper_models();
+    let mut rows = Vec::new();
+    for scheme in CacheScheme::ALL {
+        let cells = models
+            .iter()
+            .map(|(_, m)| {
+                let dag = FusionDag::build_with_scheme(m, None, scheme);
+                let s = minimize_ram_unconstrained(&dag).expect("path");
+                (kb(s.cost.peak_ram), s.cost.overhead)
+            })
+            .collect();
+        rows.push(SchemeRow { scheme, cells });
+    }
+    let grid: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            let mut v = vec![r.scheme.name().to_string()];
+            for &(ram, f) in &r.cells {
+                v.push(format!("{ram:.3}"));
+                v.push(format!("{f:.2}"));
+            }
+            v
+        })
+        .collect();
+    let text = format!(
+        "Ablation (§9 caching paradigm): unconstrained min peak RAM per scheme\n{}",
+        render(
+            &["scheme", "MBV2 RAM", "F", "vww5 RAM", "F", "320K RAM", "F"],
+            &grid
+        )
+    );
+    (rows, text)
+}
+
+/// §9 "Parameter Space": the paper fixes output elements per iteration to
+/// one; sweep the output rows per iteration for a representative fusion
+/// block and show the buffer-vs-recompute trade-off it controls.
+#[derive(Debug, Clone)]
+pub struct GranularityRow {
+    pub out_rows: u32,
+    pub buf_bytes: u64,
+    pub overhead: f64,
+}
+
+pub fn ablation_output_granularity(model: &ModelChain, a: usize, b: usize) -> (Vec<GranularityRow>, String) {
+    let vanilla: u64 = (a..b).map(|i| model.layer_macs(i)).sum();
+    let mut rows = Vec::new();
+    for out_rows in [1u32, 2, 4, 8] {
+        let t = band_heights(model, a, b, out_rows);
+        // Buf with larger bands: each cached layer keeps its (clamped)
+        // t_i × k_i × c_i strip — Eq. 11 with the wider tile.
+        let buf: u64 = (1..b - a)
+            .map(|idx| {
+                let li = a + idx;
+                let l = &model.layers[li];
+                let inp = model.input_of(li);
+                t[idx].min(inp.w + 2 * l.padding) as u64
+                    * l.k as u64
+                    * l.cin as u64
+                    * model.elem_bytes as u64
+            })
+            .sum();
+        // MACs: the band advances `out_rows × stride_product` input rows
+        // per iteration, so fewer, taller bands => less vertical overlap
+        // recomputed (Eq. 12 with a taller tile and larger tile stride).
+        let sp = crate::fusion::stride_products(model, a, b);
+        let macs: u64 = (0..b - a)
+            .map(|idx| {
+                let li = a + idx;
+                let l = &model.layers[li];
+                let inp = model.input_of(li);
+                let out = model.output_of(li);
+                let h = inp.h + 2 * l.padding;
+                let t_i = t[idx].min(h);
+                let step = (out_rows * sp[idx]).max(1);
+                // ceil so partial bands at the bottom edge are counted...
+                let n_vert = if h >= t_i { (h - t_i + step - 1) / step + 1 } else { 1 };
+                let rows_per_band = (t_i - l.k) / l.stride + 1;
+                // ...and never below full coverage (F >= 1 per layer).
+                let rows_total =
+                    (n_vert as u64 * rows_per_band as u64).max(out.h as u64);
+                rows_total * out.w as u64 * out.c as u64 * l.macs_per_out_elem()
+            })
+            .sum();
+        rows.push(GranularityRow {
+            out_rows,
+            buf_bytes: buf,
+            overhead: macs as f64 / vanilla as f64,
+        });
+    }
+    let grid: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                format!("{}", r.out_rows),
+                format!("{}", r.buf_bytes),
+                format!("{:.3}", r.overhead),
+            ]
+        })
+        .collect();
+    let text = format!(
+        "Ablation (§9 parameter space): output rows/iteration for block [{a},{b}) of {}\n{}",
+        model.name,
+        render(&["out rows", "Buf bytes", "F (block)"], &grid)
+    );
+    (rows, text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheme_tradeoff_direction() {
+        // DeFiNES: more caching => lower F; RAM minima move accordingly.
+        let (rows, text) = ablation_cache_schemes();
+        assert_eq!(rows.len(), 3);
+        for model_idx in 0..3 {
+            let f_fr = rows[0].cells[model_idx].1; // fully-recompute
+            let f_hc = rows[1].cells[model_idx].1; // h-cache
+            let f_fc = rows[2].cells[model_idx].1; // fully-cache
+            assert!(f_fr >= f_hc - 1e-9, "model {model_idx}: {f_fr} < {f_hc}");
+            assert!(f_hc >= f_fc - 1e-9, "model {model_idx}: {f_hc} < {f_fc}");
+            // Fully-cache eliminates recompute entirely.
+            assert!(f_fc <= 1.0 + 1e-9);
+        }
+        assert!(text.contains("fully-cache"));
+    }
+
+    #[test]
+    fn granularity_tradeoff_direction() {
+        // Taller iteration bands: bigger Buf, less vertical recompute.
+        let m = zoo::quickstart();
+        let (rows, _) = ablation_output_granularity(&m, 0, 3);
+        for w in rows.windows(2) {
+            assert!(w[1].buf_bytes >= w[0].buf_bytes, "Buf must grow with band height");
+            assert!(
+                w[1].overhead <= w[0].overhead + 1e-9,
+                "recompute must shrink with band height: {} -> {}",
+                w[0].overhead,
+                w[1].overhead
+            );
+        }
+        // out_rows=1 is the paper's working point; F > 1 there.
+        assert!(rows[0].overhead > 1.0);
+    }
+}

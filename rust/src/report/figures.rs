@@ -1,0 +1,160 @@
+//! Paper figures 2, 3, 4 (as data series / CSV).
+
+use crate::graph::FusionDag;
+use crate::mcu::{board_by_name, estimate_latency_ms};
+use crate::optimizer::{minimize_macs, minimize_ram, minimize_ram_unconstrained};
+use crate::zoo;
+
+use super::{kb, render, F_MAX_GRID, P_MAX_GRID_KB};
+
+/// Generic (label, x, y) figure point.
+#[derive(Debug, Clone)]
+pub struct FigRow {
+    pub label: String,
+    pub x: f64,
+    pub y: f64,
+}
+
+/// Fig. 2: common vs iterative global pooling RAM over map sizes.
+/// Returns (rows, text); `y` = live bytes, two series per size.
+pub fn fig2_pooling() -> (Vec<FigRow>, String) {
+    let mut rows = Vec::new();
+    let mut grid = Vec::new();
+    for (h, c) in [(4u64, 64u64), (7, 64), (7, 448), (14, 160)] {
+        // Element counts (dtype-agnostic), matching the paper's "2% of the
+        // original" framing: the whole resident map vs the accumulator
+        // (the streamed rows come from the upstream fusion block).
+        let common = h * h * c; // full H×W×C map resident
+        let iterative = c; // C-sized running accumulator
+        rows.push(FigRow { label: format!("common {h}x{h}x{c}"), x: (h * h * c) as f64, y: common as f64 });
+        rows.push(FigRow { label: format!("iter {h}x{h}x{c}"), x: (h * h * c) as f64, y: iterative as f64 });
+        grid.push(vec![
+            format!("{h}x{h}x{c}"),
+            format!("{common}"),
+            format!("{iterative}"),
+            format!("{:.1}%", 100.0 * iterative as f64 / common as f64),
+        ]);
+    }
+    let text = format!(
+        "Fig 2: global pooling RAM, common vs iterative (bytes)\n{}",
+        render(&["map", "common", "iterative", "ratio"], &grid)
+    );
+    (rows, text)
+}
+
+/// Fig. 3: common vs iterative dense RAM over layer sizes.
+pub fn fig3_dense() -> (Vec<FigRow>, String) {
+    let mut rows = Vec::new();
+    let mut grid = Vec::new();
+    for (din, dout) in [(256u64, 64u64), (1024, 256), (448, 1000), (160, 2)] {
+        // Element counts: common holds the full input vector + output;
+        // iterative holds the accumulator + the current input element
+        // (paper: 1024→256 compresses to 20% = 256/1280).
+        let common = din + dout;
+        let iterative = dout + 1;
+        rows.push(FigRow { label: format!("common {din}->{dout}"), x: din as f64, y: common as f64 });
+        rows.push(FigRow { label: format!("iter {din}->{dout}"), x: din as f64, y: iterative as f64 });
+        grid.push(vec![
+            format!("{din}->{dout}"),
+            format!("{common}"),
+            format!("{iterative}"),
+            format!("{:.1}%", 100.0 * iterative as f64 / common as f64),
+        ]);
+    }
+    let text = format!(
+        "Fig 3: dense layer RAM, common vs iterative (bytes, f32 activations)\n{}",
+        render(&["layer", "common", "iterative", "ratio"], &grid)
+    );
+    (rows, text)
+}
+
+/// Fig. 4: RAM–latency trade-off on nucleo-f767zi. Returns per-model
+/// series (P1 sweep + P2 sweep) and a CSV string.
+pub fn fig4_series() -> (Vec<FigRow>, String) {
+    let board = board_by_name("nucleo-f767zi").unwrap();
+    let mut rows = Vec::new();
+    let mut csv = String::from("model,problem,constraint,ram_kb,latency_ms\n");
+
+    for (label, model) in zoo::paper_models() {
+        let dag = FusionDag::build(&model, None);
+        for &f_max in F_MAX_GRID {
+            let s = if f_max.is_infinite() {
+                minimize_ram_unconstrained(&dag)
+            } else {
+                minimize_ram(&dag, f_max)
+            };
+            if let Some(s) = s {
+                let lat = estimate_latency_ms(&model, &s, board).total_ms;
+                rows.push(FigRow {
+                    label: format!("{label}/P1"),
+                    x: kb(s.cost.peak_ram),
+                    y: lat,
+                });
+                csv.push_str(&format!(
+                    "{label},P1,{f_max},{:.3},{lat:.1}\n",
+                    kb(s.cost.peak_ram)
+                ));
+            }
+        }
+        for &p_kb in P_MAX_GRID_KB {
+            if let Some(s) = minimize_macs(&dag, p_kb * 1000) {
+                let lat = estimate_latency_ms(&model, &s, board).total_ms;
+                rows.push(FigRow {
+                    label: format!("{label}/P2"),
+                    x: kb(s.cost.peak_ram),
+                    y: lat,
+                });
+                csv.push_str(&format!(
+                    "{label},P2,{p_kb}kB,{:.3},{lat:.1}\n",
+                    kb(s.cost.peak_ram)
+                ));
+            }
+        }
+    }
+    (rows, csv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_paper_ratio_7x7() {
+        // Paper: 7x7 pooling compresses to ~2% of the original.
+        let (rows, _) = fig2_pooling();
+        let common = rows.iter().find(|r| r.label == "common 7x7x448").unwrap();
+        let iter = rows.iter().find(|r| r.label == "iter 7x7x448").unwrap();
+        let ratio = iter.y / common.y;
+        assert!(ratio < 0.05, "ratio {ratio}");
+    }
+
+    #[test]
+    fn fig3_paper_ratio_1024_256() {
+        // Paper: 1024->256 dense compresses to ~20%.
+        let (rows, _) = fig3_dense();
+        let common = rows.iter().find(|r| r.label == "common 1024->256").unwrap();
+        let iter = rows.iter().find(|r| r.label == "iter 1024->256").unwrap();
+        let ratio = iter.y / common.y;
+        assert!((0.15..0.25).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn fig4_tradeoff_direction() {
+        // Across each model's P1 series, lower RAM should pair with
+        // higher latency at the extremes.
+        let (rows, csv) = fig4_series();
+        assert!(csv.lines().count() > 10);
+        for (label, _) in zoo::paper_models() {
+            let series: Vec<&FigRow> = rows
+                .iter()
+                .filter(|r| r.label == format!("{label}/P1"))
+                .collect();
+            if series.len() >= 2 {
+                let first = series.first().unwrap(); // loosest F in grid order
+                let last = series.last().unwrap(); // F = inf
+                assert!(last.x <= first.x, "{label}: RAM should shrink");
+                assert!(last.y >= first.y, "{label}: latency should grow");
+            }
+        }
+    }
+}

@@ -1,0 +1,80 @@
+//! Table/figure renderers: regenerate every table and figure of the
+//! paper's evaluation from the optimizer + MCU simulator.
+//!
+//! Each generator returns structured rows (testable) plus a
+//! formatted-table `String` (what `msfcnn tables` and the benches print).
+
+mod ablations;
+mod figures;
+mod tables;
+
+pub use ablations::{
+    ablation_cache_schemes, ablation_output_granularity, GranularityRow, SchemeRow,
+};
+pub use figures::{fig2_pooling, fig3_dense, fig4_series, FigRow};
+pub use tables::{
+    table1, table2, table3, table5, Table1Row, Table2Row, Table3Row, Table5Row,
+};
+
+/// The constraint grids used throughout the paper's evaluation (§6.3).
+pub const F_MAX_GRID: &[f64] = &[1.1, 1.2, 1.3, 1.4, 1.5, f64::INFINITY];
+pub const P_MAX_GRID_KB: &[u64] = &[16, 32, 64, 128, 256];
+
+/// kB with the paper's convention (1 kB = 1000 B, matching e.g.
+/// "309.76 kB" = 309 760 B).
+pub fn kb(bytes: u64) -> f64 {
+    bytes as f64 / 1000.0
+}
+
+/// Render a grid of cells as an aligned text table.
+pub fn render(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:<w$}", c, w = widths.get(i).copied().unwrap_or(c.len())))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    let hdr: Vec<String> = headers.iter().map(|s| s.to_string()).collect();
+    out.push_str(&fmt_row(&hdr, &widths));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kb_matches_paper_convention() {
+        assert_eq!(kb(309_760), 309.76);
+        assert_eq!(kb(96_000), 96.0);
+    }
+
+    #[test]
+    fn render_aligns_columns() {
+        let s = render(
+            &["a", "bb"],
+            &[vec!["x".into(), "y".into()], vec!["long".into(), "z".into()]],
+        );
+        assert!(s.contains("a     bb"));
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+    }
+}

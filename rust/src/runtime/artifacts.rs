@@ -1,0 +1,123 @@
+//! `artifacts/manifest.json` parsing (written by `python/compile/aot.py`),
+//! via the in-tree JSON parser (`util::json`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Shape+dtype of one tensor as recorded by the AOT step.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    fn from_json(v: &Json) -> Result<Self> {
+        let shape = v
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("tensor spec missing 'shape'"))?
+            .iter()
+            .map(|x| x.as_usize().ok_or_else(|| anyhow!("non-numeric dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = v
+            .get("dtype")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("tensor spec missing 'dtype'"))?
+            .to_string();
+        Ok(Self { shape, dtype })
+    }
+
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT entry point.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EntrySpec {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The whole manifest: entry name → spec.
+#[derive(Debug, Clone, Default)]
+pub struct ArtifactManifest {
+    pub entries: BTreeMap<String, EntrySpec>,
+}
+
+impl ArtifactManifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {:?}", path.as_ref()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let root = Json::parse(text).map_err(|e| anyhow!("manifest.json: {e}"))?;
+        let obj = root.as_obj().ok_or_else(|| anyhow!("manifest is not an object"))?;
+        let mut entries = BTreeMap::new();
+        for (name, v) in obj {
+            let file = v
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("entry '{name}' missing 'file'"))?
+                .to_string();
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                v.get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("entry '{name}' missing '{key}'"))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            entries.insert(
+                name.clone(),
+                EntrySpec { file, inputs: parse_specs("inputs")?, outputs: parse_specs("outputs")? },
+            );
+        }
+        Ok(Self { entries })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_shape() {
+        let json = r#"{
+            "model_vanilla": {
+                "file": "model_vanilla.hlo.txt",
+                "inputs": [{"shape": [32, 32, 3], "dtype": "float32"}],
+                "outputs": [{"shape": [10], "dtype": "float32"}]
+            }
+        }"#;
+        let m = ArtifactManifest::parse(json).unwrap();
+        let e = &m.entries["model_vanilla"];
+        assert_eq!(e.inputs[0].shape, vec![32, 32, 3]);
+        assert_eq!(e.outputs[0].shape, vec![10]);
+        assert_eq!(e.inputs[0].elems(), 3072);
+    }
+
+    #[test]
+    fn rejects_malformed_entries() {
+        assert!(ArtifactManifest::parse(r#"{"x": {"inputs": []}}"#).is_err());
+        assert!(ArtifactManifest::parse("[1,2]").is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        let p = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json");
+        if std::path::Path::new(p).exists() {
+            let m = ArtifactManifest::load(p).unwrap();
+            assert!(m.entries.contains_key("model_vanilla"));
+            assert!(m.entries.contains_key("model_fused"));
+        }
+    }
+}

@@ -1,0 +1,111 @@
+//! PJRT artifact runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the XLA CPU client.
+//!
+//! HLO *text* is the interchange format (not serialized protos): jax ≥ 0.5
+//! emits 64-bit instruction ids which xla_extension 0.5.1 rejects; the
+//! text parser reassigns ids. See `/opt/xla-example/README.md` and
+//! `python/compile/aot.py`.
+//!
+//! Python never runs at request time: `make artifacts` is build-time only,
+//! and this module is the entire model-execution path of the serving
+//! coordinator.
+
+mod artifacts;
+
+pub use artifacts::{ArtifactManifest, EntrySpec, TensorSpec};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+/// A compiled artifact ready to execute.
+pub struct LoadedModel {
+    pub name: String,
+    pub spec: EntrySpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedModel {
+    /// Execute with a single f32 input tensor (flattened, row-major).
+    /// Returns the flattened f32 outputs (artifacts are lowered with
+    /// `return_tuple=True`, so the single result is a 1-tuple).
+    pub fn run_f32(&self, input: &[f32]) -> Result<Vec<f32>> {
+        let spec = &self.spec.inputs[0];
+        let expect: usize = spec.shape.iter().product::<usize>();
+        if input.len() != expect {
+            return Err(anyhow!(
+                "input length {} != expected {} for {:?}",
+                input.len(),
+                expect,
+                spec.shape
+            ));
+        }
+        let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(input).reshape(&dims)?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// The artifact runtime: one PJRT CPU client, many compiled entry points.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: ArtifactManifest,
+    loaded: HashMap<String, LoadedModel>,
+}
+
+impl Runtime {
+    /// Open `artifacts/` (reads `manifest.json`; compiles lazily).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = ArtifactManifest::load(dir.join("manifest.json"))
+            .context("artifacts not built? run `make artifacts`")?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self { client, dir, manifest, loaded: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    /// Entry-point names available in the manifest.
+    pub fn entries(&self) -> Vec<&str> {
+        self.manifest.entries.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Load + compile an entry point (cached).
+    pub fn load(&mut self, name: &str) -> Result<&LoadedModel> {
+        if !self.loaded.contains_key(name) {
+            let spec = self
+                .manifest
+                .entries
+                .get(name)
+                .ok_or_else(|| anyhow!("unknown artifact entry '{name}'"))?
+                .clone();
+            let path = self.dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile '{name}': {e:?}"))?;
+            self.loaded.insert(
+                name.to_string(),
+                LoadedModel { name: name.to_string(), spec, exe },
+            );
+        }
+        Ok(&self.loaded[name])
+    }
+
+    /// Load + run in one call.
+    pub fn run_f32(&mut self, name: &str, input: &[f32]) -> Result<Vec<f32>> {
+        self.load(name)?;
+        self.loaded[name].run_f32(input)
+    }
+}

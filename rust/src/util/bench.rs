@@ -1,0 +1,119 @@
+//! Micro-benchmark harness (offline stand-in for `criterion`).
+//!
+//! Warmup + timed iterations with mean/median/p95 and a black-box sink to
+//! defeat dead-code elimination. Used by every `rust/benches/*.rs` target
+//! (`harness = false`).
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// Summary of one benchmark case.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchResult {
+    pub iters: u32,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn mean_us(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e6
+    }
+}
+
+/// Benchmark runner with configurable budget.
+pub struct Bencher {
+    pub warmup_iters: u32,
+    pub min_iters: u32,
+    pub max_iters: u32,
+    pub target_time: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 1000,
+            target_time: Duration::from_secs(2),
+        }
+    }
+}
+
+impl Bencher {
+    /// Quick profile for slow end-to-end cases.
+    pub fn quick() -> Self {
+        Self {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 50,
+            target_time: Duration::from_millis(800),
+        }
+    }
+
+    /// Run `f`, black-boxing its output; prints a criterion-like line.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            black_box(f());
+        }
+        let mut samples: Vec<Duration> = Vec::new();
+        let t_start = Instant::now();
+        while (samples.len() < self.min_iters as usize)
+            || (samples.len() < self.max_iters as usize && t_start.elapsed() < self.target_time)
+        {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed());
+        }
+        samples.sort();
+        let n = samples.len();
+        let mean = samples.iter().sum::<Duration>() / n as u32;
+        let result = BenchResult {
+            iters: n as u32,
+            mean,
+            median: samples[n / 2],
+            p95: samples[((n - 1) as f64 * 0.95) as usize],
+            min: samples[0],
+        };
+        println!(
+            "bench {name:<44} {:>10} mean  {:>10} median  {:>10} p95  ({} iters)",
+            fmt_dur(result.mean),
+            fmt_dur(result.median),
+            fmt_dur(result.p95),
+            n
+        );
+        result
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let us = d.as_secs_f64() * 1e6;
+    if us < 1000.0 {
+        format!("{us:.1}us")
+    } else if us < 1_000_000.0 {
+        format!("{:.2}ms", us / 1000.0)
+    } else {
+        format!("{:.2}s", us / 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_orders_stats() {
+        let b = Bencher {
+            warmup_iters: 1,
+            min_iters: 5,
+            max_iters: 10,
+            target_time: Duration::from_millis(10),
+        };
+        let r = b.run("noop", || 1 + 1);
+        assert!(r.iters >= 5);
+        assert!(r.min <= r.median);
+        assert!(r.median <= r.p95);
+    }
+}

@@ -1,0 +1,8 @@
+//! In-tree utilities replacing crates unavailable in the offline build
+//! (DESIGN.md §Substitutions): a minimal JSON parser (↔ `serde_json`),
+//! a micro-benchmark harness (↔ `criterion`), and a seeded property-test
+//! runner (↔ `proptest`).
+
+pub mod bench;
+pub mod json;
+pub mod prop;

@@ -1,0 +1,98 @@
+//! Seeded property-test runner (offline stand-in for `proptest`).
+//!
+//! Deterministic xorshift generation with per-case seeds: a failing case
+//! prints its seed so it can be replayed exactly. No shrinking — cases are
+//! kept small by construction.
+
+use crate::ops::ParamGen;
+
+/// Random-value source handed to each property case.
+pub struct Gen {
+    inner: ParamGen,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Self { inner: ParamGen::new(seed), seed }
+    }
+
+    /// Uniform usize in `[lo, hi]` (inclusive).
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi >= lo);
+        let unit = self.inner.next(1.0) + 0.5; // [0, 1)
+        lo + ((hi - lo + 1) as f64 * unit as f64) as usize
+    }
+
+    pub fn u32_in(&mut self, lo: u32, hi: u32) -> u32 {
+        self.usize_in(lo as usize, hi as usize) as u32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.inner.next(1.0) > 0.0
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (self.inner.next(1.0) + 0.5) * (hi - lo)
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0, xs.len() - 1)]
+    }
+
+    pub fn vec_f32(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| self.inner.next(scale)).collect()
+    }
+}
+
+/// Run `cases` seeded property checks; panics with the replay seed on the
+/// first failure. `f` returns `Err(msg)` to fail a case.
+pub fn check(name: &str, cases: u32, mut f: impl FnMut(&mut Gen) -> Result<(), String>) {
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ ((case as u64) << 17) ^ case as u64;
+        let mut g = Gen::new(seed);
+        if let Err(msg) = f(&mut g) {
+            panic!("property '{name}' failed (case {case}, replay seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Replay one property case by seed (debugging helper).
+pub fn replay(seed: u64, mut f: impl FnMut(&mut Gen) -> Result<(), String>) {
+    let mut g = Gen::new(seed);
+    if let Err(msg) = f(&mut g) {
+        panic!("replay {seed:#x} failed: {msg}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn usize_in_bounds() {
+        check("bounds", 200, |g| {
+            let v = g.usize_in(3, 9);
+            if (3..=9).contains(&v) {
+                Ok(())
+            } else {
+                Err(format!("{v} out of [3,9]"))
+            }
+        });
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Gen::new(42);
+        let mut b = Gen::new(42);
+        for _ in 0..32 {
+            assert_eq!(a.usize_in(0, 1000), b.usize_in(0, 1000));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn failure_reports_seed() {
+        check("always-fails", 1, |_| Err("nope".into()));
+    }
+}

@@ -1,0 +1,160 @@
+//! MobileNetV2 generator (Sandler et al., CVPR 2018) with width multiplier.
+
+use crate::model::{Activation, Layer, ModelChain, TensorShape};
+
+/// Channel rounding used by the MobileNet family: round to the nearest
+/// multiple of `divisor`, never dropping below 90% of the request.
+pub fn make_divisible(v: f64, divisor: u32) -> u32 {
+    let d = divisor as f64;
+    let new_v = ((v + d / 2.0) / d).floor() * d;
+    let new_v = new_v.max(d);
+    if new_v < 0.9 * v {
+        (new_v + d) as u32
+    } else {
+        new_v as u32
+    }
+}
+
+/// Inverted-residual bottleneck schedule: (expand ratio t, channels c,
+/// repeats n, first stride s).
+const SCHEDULE: &[(u32, u32, u32, u32)] = &[
+    (1, 16, 1, 1),
+    (6, 24, 2, 2),
+    (6, 32, 3, 2),
+    (6, 64, 4, 2),
+    (6, 96, 3, 1),
+    (6, 160, 3, 2),
+    (6, 320, 1, 1),
+];
+
+/// Build MobileNetV2 at `width` multiplier for a square `input` resolution
+/// and `classes` outputs. `mbv2(0.35, 144, 1000)` is the paper's
+/// MBV2-w0.35 evaluation model.
+pub fn mbv2(width: f64, input: u32, classes: u32) -> ModelChain {
+    let mut layers: Vec<Layer> = Vec::new();
+    let wm = |c: u32| make_divisible(c as f64 * width, 8);
+
+    let first = wm(32);
+    layers.push(Layer::conv("stem", 3, 2, 1, 3, first, Activation::Relu6));
+
+    let mut cin = first;
+    for (bi, &(t, c, n, s)) in SCHEDULE.iter().enumerate() {
+        let cout = wm(c);
+        for r in 0..n {
+            let stride = if r == 0 { s } else { 1 };
+            let hidden = cin * t;
+            let tag = format!("b{bi}.{r}");
+            let block_start = layers.len();
+            if t != 1 {
+                layers.push(Layer::pointwise(
+                    format!("{tag}.expand"),
+                    cin,
+                    hidden,
+                    Activation::Relu6,
+                ));
+            }
+            layers.push(Layer::dwconv(
+                format!("{tag}.dw"),
+                3,
+                stride,
+                1,
+                hidden,
+                Activation::Relu6,
+            ));
+            let mut project =
+                Layer::pointwise(format!("{tag}.project"), hidden, cout, Activation::None);
+            // Identity residual when shapes match (stride 1, same channels).
+            if stride == 1 && cin == cout {
+                project = project.with_residual(block_start);
+            }
+            layers.push(project);
+            cin = cout;
+        }
+    }
+
+    // TinyML convention (MCUNet/TinyEngine): the final 1×1 conv also scales
+    // with the width multiplier (1280·w), unlike the server-side variant.
+    let last = make_divisible(1280.0 * width, 8).max(wm(320) * 2);
+    layers.push(Layer::pointwise("head", cin, last, Activation::Relu6));
+    layers.push(Layer::global_pool("pool", last));
+    layers.push(Layer::dense("fc", last, classes));
+
+    ModelChain::new(
+        format!("mbv2-w{width}@{input}"),
+        TensorShape::new(input, input, 3),
+        layers,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::LayerKind;
+
+    #[test]
+    fn make_divisible_matches_reference_values() {
+        assert_eq!(make_divisible(32.0 * 0.35, 8), 16); // 11.2 -> 8 < 10.08 -> 16
+        assert_eq!(make_divisible(16.0 * 0.35, 8), 8);
+        assert_eq!(make_divisible(24.0 * 0.35, 8), 8);
+        assert_eq!(make_divisible(64.0 * 0.35, 8), 24);
+        assert_eq!(make_divisible(160.0 * 0.35, 8), 56);
+        assert_eq!(make_divisible(320.0 * 0.35, 8), 112);
+        assert_eq!(make_divisible(1280.0 * 0.35, 8), 448);
+    }
+
+    #[test]
+    fn w035_at_144_shapes() {
+        let m = mbv2(0.35, 144, 1000);
+        // Stem: 144 -> 72; strides 2,2,2,1,2 across stages -> final map 5x5.
+        assert_eq!(m.shapes[1].h, 72);
+        let pre_pool = m.shapes[m.shapes.len() - 3];
+        assert_eq!((pre_pool.h, pre_pool.w, pre_pool.c), (5, 5, 448));
+        assert_eq!(m.shapes.last().unwrap().c, 1000);
+    }
+
+    #[test]
+    fn block_counts() {
+        let m = mbv2(0.35, 144, 1000);
+        // 17 bottlenecks: 1 with t=1 (2 layers) + 16 with t=6 (3 layers)
+        // + stem + head + pool + fc = 2 + 48 + 4 = 54 layers.
+        assert_eq!(m.num_layers(), 54);
+        let n_dw = m
+            .layers
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::DwConv2d))
+            .count();
+        assert_eq!(n_dw, 17);
+    }
+
+    #[test]
+    fn residuals_only_on_matching_shapes() {
+        let m = mbv2(0.35, 144, 1000);
+        for (j, l) in m.layers.iter().enumerate() {
+            if let Some(src) = l.residual_from {
+                assert_eq!(m.input_of(src), m.output_of(j), "skip at layer {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn vanilla_peak_is_input_dominated() {
+        let m = mbv2(0.35, 144, 1000);
+        let peak = m.vanilla_peak_ram();
+        // Early layers dominate (the paper's MCUNetV2 §2 observation):
+        // peak must equal one of the first few boundary pairs.
+        let early_peak: u64 = (0..6)
+            .map(|i| m.tensor_bytes(i) + m.tensor_bytes(i + 1) + m.residual_stash_bytes(i))
+            .max()
+            .unwrap();
+        assert_eq!(peak, early_peak);
+        assert!(peak > 100_000, "MBV2-w0.35@144 peak should be ~100-300 kB, got {peak}");
+    }
+
+    #[test]
+    fn width_one_is_bigger_than_w035() {
+        let a = mbv2(1.0, 144, 1000);
+        let b = mbv2(0.35, 144, 1000);
+        assert!(a.vanilla_peak_ram() > b.vanilla_peak_ram());
+        assert!(a.total_macs() > b.total_macs());
+    }
+}

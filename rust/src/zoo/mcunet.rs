@@ -1,0 +1,151 @@
+//! MCUNetV2 model reconstructions.
+//!
+//! The paper evaluates MCUNetV2-VWW-5fps (input 80×80×3, vanilla peak
+//! 96 kB) and MCUNetV2-320KB-ImageNet (input 176×176×3, vanilla peak
+//! 309.76 kB). The full NAS-derived layer lists are not published in the
+//! paper; we reconstruct MBV2-family backbones whose **vanilla peak RAM
+//! matches the reported values exactly**:
+//!
+//! * vww5: `80²·3 + 40²·48 = 96 000 B` (stem edge; the stride-2 depthwise
+//!   that follows peaks at the same value).
+//! * 320k: `88²·16 + 88²·24 = 309 760 B` (the b0 expand edge).
+//!
+//! Every downstream number (Tables 1/2/3/5) is normalized against this
+//! vanilla footprint, so matching it anchors the comparisons; residual
+//! architecture deltas are documented in EXPERIMENTS.md.
+
+use crate::model::{Activation, Layer, ModelChain, TensorShape};
+
+/// Append one inverted-residual block (expand ratio `t`, output channels
+/// `cout`, stride `s`, depthwise kernel `k`). Returns the output channels.
+fn bottleneck(
+    layers: &mut Vec<Layer>,
+    tag: &str,
+    cin: u32,
+    cout: u32,
+    t: u32,
+    s: u32,
+    k: u32,
+) -> u32 {
+    let hidden = cin * t;
+    let start = layers.len();
+    if t != 1 {
+        layers.push(Layer::pointwise(format!("{tag}.expand"), cin, hidden, Activation::Relu6));
+    }
+    layers.push(Layer::dwconv(format!("{tag}.dw"), k, s, (k - 1) / 2, hidden, Activation::Relu6));
+    let mut project = Layer::pointwise(format!("{tag}.project"), hidden, cout, Activation::None);
+    if s == 1 && cin == cout {
+        project = project.with_residual(start);
+    }
+    layers.push(project);
+    cout
+}
+
+/// MCUNetV2-VWW-5fps reconstruction: 80×80×3 input, 2 classes
+/// (visual wake words: person / no person), vanilla peak RAM = 96 kB.
+pub fn mcunet_vww5() -> ModelChain {
+    let mut layers = Vec::new();
+    // Wide stem, immediately downsampled — peak edges:
+    //   stem:  80²·3 + 40²·48 = 96 000 B
+    //   b0.dw: 40²·48 + 20²·48 = 96 000 B
+    layers.push(Layer::conv("stem", 3, 2, 1, 3, 48, Activation::Relu6));
+    layers.push(Layer::dwconv("b0.dw", 3, 2, 1, 48, Activation::Relu6));
+    layers.push(Layer::pointwise("b0.project", 48, 16, Activation::None));
+    let mut c = 16; // 20×20×16
+    c = bottleneck(&mut layers, "b1", c, 24, 3, 1, 3);
+    c = bottleneck(&mut layers, "b2", c, 24, 3, 1, 3); // residual
+    c = bottleneck(&mut layers, "b3", c, 40, 4, 2, 5); // -> 10x10
+    c = bottleneck(&mut layers, "b4", c, 40, 4, 1, 5); // residual
+    c = bottleneck(&mut layers, "b5", c, 48, 4, 1, 3);
+    c = bottleneck(&mut layers, "b6", c, 96, 4, 2, 5); // -> 5x5
+    c = bottleneck(&mut layers, "b7", c, 96, 4, 1, 3); // residual
+    layers.push(Layer::pointwise("head", c, 160, Activation::Relu6));
+    layers.push(Layer::global_pool("pool", 160));
+    layers.push(Layer::dense("fc", 160, 2));
+    ModelChain::new("mcunet-vww5@80", TensorShape::new(80, 80, 3), layers)
+}
+
+/// MCUNetV2-320KB-ImageNet reconstruction: 176×176×3 input, 1000 classes,
+/// vanilla peak RAM = 309.76 kB (88²·16 + 88²·24 at the b0 expand edge).
+pub fn mcunet_320k() -> ModelChain {
+    let mut layers = Vec::new();
+    layers.push(Layer::conv("stem", 3, 2, 1, 3, 16, Activation::Relu6)); // -> 88x88x16
+    // b0: the peak edge — pw 16->24 at 88²: 123 904 + 185 856 = 309 760 B.
+    layers.push(Layer::pointwise("b0.expand", 16, 24, Activation::Relu6));
+    layers.push(Layer::dwconv("b0.dw", 3, 2, 1, 24, Activation::Relu6)); // -> 44x44
+    layers.push(Layer::pointwise("b0.project", 24, 16, Activation::None));
+    let mut c = 16; // 44×44×16
+    c = bottleneck(&mut layers, "b1", c, 24, 3, 1, 3);
+    c = bottleneck(&mut layers, "b2", c, 24, 2, 1, 3); // residual (t=2: the
+    // dw edge at 44²·72 with the skip stash would exceed the 309.76 kB peak)
+    c = bottleneck(&mut layers, "b3", c, 40, 3, 2, 5); // -> 22x22
+    c = bottleneck(&mut layers, "b4", c, 40, 4, 1, 5); // residual
+    c = bottleneck(&mut layers, "b5", c, 48, 4, 1, 3);
+    c = bottleneck(&mut layers, "b6", c, 96, 4, 2, 5); // -> 11x11
+    c = bottleneck(&mut layers, "b7", c, 96, 4, 1, 3); // residual
+    c = bottleneck(&mut layers, "b8", c, 160, 4, 2, 5); // -> 6x6
+    c = bottleneck(&mut layers, "b9", c, 160, 4, 1, 3); // residual
+    layers.push(Layer::pointwise("head", c, 448, Activation::Relu6));
+    layers.push(Layer::global_pool("pool", 448));
+    layers.push(Layer::dense("fc", 448, 1000));
+    ModelChain::new("mcunet-320k@176", TensorShape::new(176, 176, 3), layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vww5_vanilla_peak_matches_paper() {
+        let m = mcunet_vww5();
+        assert_eq!(m.vanilla_peak_ram(), 96_000, "paper Table 1: 96 kB");
+    }
+
+    #[test]
+    fn mn320k_vanilla_peak_matches_paper() {
+        let m = mcunet_320k();
+        assert_eq!(m.vanilla_peak_ram(), 309_760, "paper Table 1: 309.76 kB");
+    }
+
+    #[test]
+    fn vww5_tail_is_iterative_rewritable() {
+        let m = mcunet_vww5();
+        let gp = m
+            .layers
+            .iter()
+            .position(|l| matches!(l.kind, crate::model::LayerKind::GlobalAvgPool))
+            .unwrap();
+        assert!(m.iterative_tail_at(gp));
+    }
+
+    #[test]
+    fn input_shapes_match_paper() {
+        assert_eq!(mcunet_vww5().shapes[0], TensorShape::new(80, 80, 3));
+        assert_eq!(mcunet_320k().shapes[0], TensorShape::new(176, 176, 3));
+    }
+
+    #[test]
+    fn residual_shapes_consistent() {
+        for m in [mcunet_vww5(), mcunet_320k()] {
+            for (j, l) in m.layers.iter().enumerate() {
+                if let Some(src) = l.residual_from {
+                    assert_eq!(m.input_of(src), m.output_of(j), "{} layer {j}", m.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn head_layers_dominate_ram() {
+        // MCUNetV2's §2 observation that motivates fusion in the first
+        // place: the peak lives in the first few layers.
+        for m in [mcunet_vww5(), mcunet_320k()] {
+            let peak = m.vanilla_peak_ram();
+            let head_peak: u64 = (0..4)
+                .map(|i| m.tensor_bytes(i) + m.tensor_bytes(i + 1) + m.residual_stash_bytes(i))
+                .max()
+                .unwrap();
+            assert_eq!(peak, head_peak, "{}", m.name);
+        }
+    }
+}

@@ -1,0 +1,111 @@
+//! ResNet generator — the paper's §1 motivating example: "even a single
+//! convolutional layer in quantized ResNet-34 consumes around 414.72 KiB
+//! in RAM", i.e. far beyond RFC 7228 constrained-node budgets.
+//!
+//! Standard ResNet-34 at 224×224: stem 7×7/2 → 64ch, maxpool/2, then
+//! basic blocks [3, 4, 6, 3] at 64/128/256/512 channels with stride-2
+//! stage transitions, global pool, fc-1000.
+
+use crate::model::{Activation, Layer, ModelChain, TensorShape};
+
+/// Append one basic block (two 3×3 convs + identity skip when shapes
+/// match). Returns the output channel count.
+fn basic_block(layers: &mut Vec<Layer>, tag: &str, cin: u32, cout: u32, stride: u32) -> u32 {
+    let start = layers.len();
+    layers.push(Layer::conv(format!("{tag}.conv1"), 3, stride, 1, cin, cout, Activation::Relu));
+    let mut conv2 = Layer::conv(format!("{tag}.conv2"), 3, 1, 1, cout, cout, Activation::Relu);
+    if stride == 1 && cin == cout {
+        conv2 = conv2.with_residual(start);
+    }
+    layers.push(conv2);
+    cout
+}
+
+/// ResNet-34 (He et al. 2016) at a square `input` resolution.
+pub fn resnet34(input: u32, classes: u32) -> ModelChain {
+    let mut layers = Vec::new();
+    layers.push(Layer::conv("stem", 7, 2, 3, 3, 64, Activation::Relu));
+    layers.push(Layer::max_pool("pool1", 2, 2, 64));
+    let mut c = 64;
+    for (stage, &(cout, n, s)) in [(64u32, 3u32, 1u32), (128, 4, 2), (256, 6, 2), (512, 3, 2)]
+        .iter()
+        .enumerate()
+    {
+        for r in 0..n {
+            let stride = if r == 0 { s } else { 1 };
+            c = basic_block(&mut layers, &format!("s{stage}.b{r}"), c, cout, stride);
+        }
+    }
+    layers.push(Layer::global_pool("gap", c));
+    layers.push(Layer::dense("fc", c, classes));
+    ModelChain::new(format!("resnet34@{input}"), TensorShape::new(input, input, 3), layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::FusionDag;
+    use crate::optimizer::minimize_ram_unconstrained;
+
+    #[test]
+    fn paper_intro_claim_single_layer_ram() {
+        // §1: a single conv layer of int8 ResNet-34 needs ~414.72 KiB.
+        // 414.72 kB = 414 720 B = 2 × (56·56·64 + 56·56·? ) ... precisely:
+        // the stage-1 3x3 conv at 56×56×64 -> 56×56×64 costs
+        // I + O = 2·56²·64 = 401 408 B ≈ 392 KiB; the paper's 414.72 kB
+        // (= 2·57.6²·... ) matches the 112×112 stem output pair at int8:
+        // none lands exactly — what must hold is the *magnitude*: some
+        // single layer needs hundreds of kB, dwarfing RFC-7228 budgets.
+        let m = resnet34(224, 1000);
+        let worst = (0..m.num_layers())
+            .map(|i| m.tensor_bytes(i) + m.tensor_bytes(i + 1))
+            .max()
+            .unwrap();
+        assert!(
+            worst > 400_000,
+            "worst single ResNet-34 layer should exceed 400 kB, got {worst}"
+        );
+        assert!(m.vanilla_peak_ram() > 400_000);
+    }
+
+    #[test]
+    fn shapes_and_depth() {
+        let m = resnet34(224, 1000);
+        // stem 224->112, pool ->56, stages keep 56/28/14/7.
+        assert_eq!(m.shapes[1].h, 112);
+        assert_eq!(m.shapes[2].h, 56);
+        let pre_pool = m.shapes[m.shapes.len() - 3];
+        assert_eq!((pre_pool.h, pre_pool.c), (7, 512));
+        // 2 stem ops + 2*(3+4+6+3) convs + pool + fc = 36 layers.
+        assert_eq!(m.num_layers(), 36);
+    }
+
+    #[test]
+    fn fusion_rescues_resnet_for_mcus() {
+        // The paper's implicit §1 promise: fusion brings such a layer
+        // within MCU reach. On ResNet-34@96 the identity skips bound the
+        // fusable spans (each basic block fuses, but spans cannot cross
+        // skip boundaries), so the cut is smaller than on the MBV2 family:
+        // ~63% here, landing the model inside a 256 kB Cortex-M4 budget.
+        let m = resnet34(96, 100);
+        let dag = FusionDag::build(&m, None);
+        let s = minimize_ram_unconstrained(&dag).unwrap();
+        assert!(
+            (s.cost.peak_ram as f64) < 0.4 * m.vanilla_peak_ram() as f64,
+            "{} vs {}",
+            s.cost.peak_ram,
+            m.vanilla_peak_ram()
+        );
+        assert!(s.cost.peak_ram < 256 * 1024, "must fit the M4 class");
+    }
+
+    #[test]
+    fn residual_shapes_consistent() {
+        let m = resnet34(224, 1000);
+        for (j, l) in m.layers.iter().enumerate() {
+            if let Some(src) = l.residual_from {
+                assert_eq!(m.input_of(src), m.output_of(j), "skip at {j}");
+            }
+        }
+    }
+}

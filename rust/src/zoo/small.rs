@@ -1,0 +1,117 @@
+//! Small models: the AOT quickstart model and test/example networks.
+
+use crate::model::{Activation, Layer, ModelChain, TensorShape};
+
+/// The exact model `python/compile/model.py` lowers into `artifacts/`
+/// (kept in lockstep — see `CONV_CFG` there and
+/// `rust/tests/artifacts_roundtrip.rs`):
+///
+/// ```text
+/// 32×32×3 → conv3x3 s1 3→8 relu6 → conv3x3 s2 8→16 relu6
+///         → conv3x3 s2 16→32 relu6 → global-pool → dense 32→10
+/// ```
+pub fn quickstart() -> ModelChain {
+    ModelChain::new(
+        "quickstart",
+        TensorShape::new(32, 32, 3),
+        vec![
+            Layer::conv("conv0", 3, 1, 0, 3, 8, Activation::Relu6),
+            Layer::conv("conv1", 3, 2, 0, 8, 16, Activation::Relu6),
+            Layer::conv("conv2", 3, 2, 0, 16, 32, Activation::Relu6),
+            Layer::global_pool("pool", 32),
+            Layer::dense("fc", 32, 10),
+        ],
+    )
+}
+
+/// Minimal 2-conv net for unit tests and doc examples.
+pub fn tiny_cnn() -> ModelChain {
+    ModelChain::new(
+        "tiny",
+        TensorShape::new(16, 16, 3),
+        vec![
+            Layer::conv("c0", 3, 1, 1, 3, 8, Activation::Relu6),
+            Layer::conv("c1", 3, 2, 1, 8, 16, Activation::Relu6),
+            Layer::global_pool("gp", 16),
+            Layer::dense("fc", 16, 4),
+        ],
+    )
+}
+
+/// LeNet-5-style net (28×28 grayscale): classic conv/pool alternation —
+/// exercises pooling layers inside fusion blocks.
+pub fn lenet() -> ModelChain {
+    ModelChain::new(
+        "lenet",
+        TensorShape::new(28, 28, 1),
+        vec![
+            Layer::conv("c1", 5, 1, 2, 1, 6, Activation::Relu),
+            Layer::avg_pool("s2", 2, 2, 6),
+            Layer::conv("c3", 5, 1, 0, 6, 16, Activation::Relu),
+            Layer::avg_pool("s4", 2, 2, 16),
+            Layer::conv("c5", 5, 1, 0, 16, 120, Activation::Relu),
+            Layer::global_pool("gp", 120),
+            Layer::dense("f6", 120, 84),
+            Layer::dense("out", 84, 10),
+        ],
+    )
+}
+
+/// Keyword-spotting CNN over a 49×10 MFCC "image" (the paper's §1 audio
+/// use-case family): tall non-square input exercises the H/W asymmetry of
+/// the row-band analytics.
+pub fn kws_cnn() -> ModelChain {
+    ModelChain::new(
+        "kws",
+        TensorShape::new(49, 10, 1),
+        vec![
+            Layer::conv("c0", 3, 1, 1, 1, 16, Activation::Relu6),
+            Layer::dwconv("dw1", 3, 1, 1, 16, Activation::Relu6),
+            Layer::pointwise("pw1", 16, 32, Activation::Relu6),
+            Layer::dwconv("dw2", 3, 2, 1, 32, Activation::Relu6),
+            Layer::pointwise("pw2", 32, 48, Activation::Relu6),
+            Layer::global_pool("gp", 48),
+            Layer::dense("fc", 48, 12),
+        ],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quickstart_matches_python_model() {
+        // Shapes mirrored from python/compile/model.py CONV_CFG.
+        let m = quickstart();
+        assert_eq!(m.shapes[1], TensorShape::new(30, 30, 8));
+        assert_eq!(m.shapes[2], TensorShape::new(14, 14, 16));
+        assert_eq!(m.shapes[3], TensorShape::new(6, 6, 32));
+        assert_eq!(*m.shapes.last().unwrap(), TensorShape::vec(10));
+    }
+
+    #[test]
+    fn all_small_models_build() {
+        for m in [quickstart(), tiny_cnn(), lenet(), kws_cnn()] {
+            assert!(m.num_layers() >= 4);
+            assert!(m.vanilla_peak_ram() > 0);
+            assert!(m.total_macs() > 0);
+        }
+    }
+
+    #[test]
+    fn lenet_pools_are_fusable() {
+        let m = lenet();
+        assert!(m.fusable_span(0, 4)); // conv,pool,conv,pool
+    }
+
+    #[test]
+    fn kws_nonsquare_shapes() {
+        let m = kws_cnn();
+        assert_eq!(m.shapes[0].h, 49);
+        assert_eq!(m.shapes[0].w, 10);
+        // dw2 stride 2: 49 -> 25, 10 -> 5.
+        assert_eq!(m.shapes[4].h, 25);
+        assert_eq!(m.shapes[4].w, 5);
+    }
+}

@@ -1,0 +1,116 @@
+//! Cross-stack integration: the AOT HLO artifacts (L1 Pallas → L2 JAX →
+//! HLO text) loaded and executed by the Rust PJRT runtime (L3), and
+//! cross-checked against the pure-Rust executor running the *same weights*
+//! (`artifacts/weights.json`).
+//!
+//! These tests skip (not fail) when `artifacts/` has not been built —
+//! `make artifacts` is the build-time Python step.
+
+use msf_cnn::exec::Engine;
+use msf_cnn::graph::FusionDag;
+use msf_cnn::memory::Arena;
+use msf_cnn::ops::{ParamGen, Tensor};
+use msf_cnn::optimizer::{minimize_ram_unconstrained, vanilla_setting};
+use msf_cnn::runtime::Runtime;
+use msf_cnn::zoo;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn quickstart_input(seed: u64) -> Vec<f32> {
+    ParamGen::new(seed).fill(32 * 32 * 3, 2.0)
+}
+
+#[test]
+fn manifest_lists_all_entries() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::open(&dir).unwrap();
+    for entry in ["model_vanilla", "model_fused", "fused_block", "conv2d", "iter_pool", "iter_dense"]
+    {
+        assert!(rt.manifest().entries.contains_key(entry), "missing {entry}");
+    }
+}
+
+#[test]
+fn fused_artifact_matches_vanilla_artifact() {
+    // The msf-CNN schedule transform must be numerically invisible:
+    // the fused HLO module and the vanilla HLO module agree on logits.
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::open(&dir).unwrap();
+    for seed in [1u64, 2, 3] {
+        let x = quickstart_input(seed);
+        let v = rt.run_f32("model_vanilla", &x).unwrap();
+        let f = rt.run_f32("model_fused", &x).unwrap();
+        assert_eq!(v.len(), 10);
+        assert_eq!(f.len(), 10);
+        for (a, b) in v.iter().zip(&f) {
+            assert!((a - b).abs() < 1e-3, "vanilla {a} vs fused {b}");
+        }
+    }
+}
+
+#[test]
+fn rust_executor_matches_xla_artifacts() {
+    // Same weights, three implementations of the same network:
+    // XLA-compiled JAX (+Pallas) vs the pure-Rust patch executor.
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::open(&dir).unwrap();
+    let engine = Engine::quickstart_from_artifacts(&dir).unwrap();
+    let dag = FusionDag::build(engine.model(), None);
+
+    for seed in [7u64, 8] {
+        let x = quickstart_input(seed);
+        let xla_out = rt.run_f32("model_vanilla", &x).unwrap();
+
+        let input = Tensor::from_data(32, 32, 3, x.clone());
+        let mut arena = Arena::unbounded();
+        let rust_vanilla = engine.run(&vanilla_setting(&dag), &input, &mut arena).unwrap();
+        let mut arena2 = Arena::unbounded();
+        let fused_setting = minimize_ram_unconstrained(&dag).unwrap();
+        let rust_fused = engine.run(&fused_setting, &input, &mut arena2).unwrap();
+
+        for (i, ((xv, rv), rf)) in xla_out
+            .iter()
+            .zip(&rust_vanilla.output)
+            .zip(&rust_fused.output)
+            .enumerate()
+        {
+            assert!((xv - rv).abs() < 1e-2, "logit {i}: xla {xv} vs rust-vanilla {rv}");
+            assert!((xv - rf).abs() < 1e-2, "logit {i}: xla {xv} vs rust-fused {rf}");
+        }
+    }
+}
+
+#[test]
+fn kernel_artifacts_execute() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::open(&dir).unwrap();
+
+    // iter_pool: [7,7,32] -> [32]; mean of a constant map is the constant.
+    let x = vec![0.5f32; 7 * 7 * 32];
+    let out = rt.run_f32("iter_pool", &x).unwrap();
+    assert_eq!(out.len(), 32);
+    for v in &out {
+        assert!((v - 0.5).abs() < 1e-5);
+    }
+
+    // iter_dense: [32] -> [10]; just shape+finiteness (weights baked).
+    let out = rt.run_f32("iter_dense", &vec![0.1f32; 32]).unwrap();
+    assert_eq!(out.len(), 10);
+    assert!(out.iter().all(|v| v.is_finite()));
+
+    // conv2d: [32,32,3] -> [30,30,8] with relu6 => all in [0, 6].
+    let out = rt.run_f32("conv2d", &quickstart_input(5)).unwrap();
+    assert_eq!(out.len(), 30 * 30 * 8);
+    assert!(out.iter().all(|v| (0.0..=6.0).contains(v)));
+}
+
+#[test]
+fn runtime_rejects_wrong_input_shape() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::open(&dir).unwrap();
+    assert!(rt.run_f32("model_vanilla", &[0.0; 7]).is_err());
+    assert!(rt.run_f32("nonexistent_entry", &[0.0; 7]).is_err());
+}

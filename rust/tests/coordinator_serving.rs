@@ -1,0 +1,120 @@
+//! End-to-end serving integration: the coordinator driving the PJRT
+//! runtime on the AOT artifacts — queue, batching, backpressure, metrics.
+//! Skips when artifacts are absent.
+
+use msf_cnn::coordinator::{InferenceServer, ServerConfig};
+use msf_cnn::ops::ParamGen;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+#[test]
+fn serves_fused_model_end_to_end() {
+    let Some(dir) = artifacts_dir() else { return };
+    let server = InferenceServer::start(&dir, ServerConfig::default()).unwrap();
+    let handle = server.handle();
+    let mut gen = ParamGen::new(7);
+
+    let mut outputs = Vec::new();
+    for _ in 0..20 {
+        let logits = handle.infer(gen.fill(32 * 32 * 3, 2.0)).unwrap();
+        assert_eq!(logits.len(), 10);
+        assert!(logits.iter().all(|v| v.is_finite()));
+        outputs.push(logits);
+    }
+    // Different inputs -> different logits (the model is actually running).
+    assert_ne!(outputs[0], outputs[1]);
+
+    let metrics = handle.metrics();
+    let stats = metrics.stats().unwrap();
+    assert_eq!(stats.count, 20);
+    assert!(stats.p50_us > 0.0);
+    drop(handle);
+    server.shutdown();
+}
+
+#[test]
+fn fused_and_vanilla_entries_agree_through_server() {
+    let Some(dir) = artifacts_dir() else { return };
+    let fused = InferenceServer::start(
+        &dir,
+        ServerConfig { entry: "model_fused".into(), ..Default::default() },
+    )
+    .unwrap();
+    let vanilla = InferenceServer::start(
+        &dir,
+        ServerConfig { entry: "model_vanilla".into(), ..Default::default() },
+    )
+    .unwrap();
+    let (hf, hv) = (fused.handle(), vanilla.handle());
+    let mut gen = ParamGen::new(9);
+    for _ in 0..5 {
+        let x = gen.fill(32 * 32 * 3, 2.0);
+        let a = hf.infer(x.clone()).unwrap();
+        let b = hv.infer(x).unwrap();
+        for (f, v) in a.iter().zip(&b) {
+            assert!((f - v).abs() < 1e-3, "fused {f} vs vanilla {v}");
+        }
+    }
+    drop(hf);
+    drop(hv);
+    fused.shutdown();
+    vanilla.shutdown();
+}
+
+#[test]
+fn concurrent_submitters_all_complete() {
+    let Some(dir) = artifacts_dir() else { return };
+    let server = InferenceServer::start(&dir, ServerConfig::default()).unwrap();
+    let mut joins = Vec::new();
+    for t in 0..4u64 {
+        let h = server.handle();
+        joins.push(std::thread::spawn(move || {
+            let mut gen = ParamGen::new(100 + t);
+            let mut ok = 0;
+            for _ in 0..10 {
+                if h.infer(gen.fill(32 * 32 * 3, 2.0)).is_ok() {
+                    ok += 1;
+                }
+            }
+            ok
+        }));
+    }
+    let total: usize = joins.into_iter().map(|j| j.join().unwrap()).sum();
+    assert_eq!(total, 40);
+    let m = server.handle().metrics();
+    assert!(m.batches() >= 1);
+    server.shutdown();
+}
+
+#[test]
+fn tiny_queue_applies_backpressure() {
+    let Some(dir) = artifacts_dir() else { return };
+    let server = InferenceServer::start(
+        &dir,
+        ServerConfig { queue_cap: 1, batch_max: 1, ..Default::default() },
+    )
+    .unwrap();
+    let handle = server.handle();
+    let mut gen = ParamGen::new(11);
+    // Flood with async submissions; some must bounce off the 1-deep queue.
+    let mut pendings = Vec::new();
+    let mut rejected = 0;
+    for _ in 0..64 {
+        match handle.submit(gen.fill(32 * 32 * 3, 2.0)) {
+            Ok(p) => pendings.push(p),
+            Err(_) => rejected += 1,
+        }
+    }
+    for p in pendings {
+        let _ = p.wait();
+    }
+    // Either we saw rejections live, or the metrics recorded none because
+    // the executor kept pace — both acceptable; what must hold is that
+    // rejections are *counted* consistently.
+    assert_eq!(handle.metrics().rejections(), rejected);
+    drop(handle);
+    server.shutdown();
+}
