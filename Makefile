@@ -1,0 +1,35 @@
+# msf-CNN reproduction — build / verify entry points.
+#
+# `make verify` is the regression gate: tier-1 (release build + tests)
+# plus clippy when the component is installed. CI runs the same target
+# (.github/workflows/ci.yml), so the seed suite can't silently rot again.
+
+CARGO ?= cargo
+
+.PHONY: verify build test clippy bench artifacts clean
+
+verify: build test clippy
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+clippy:
+	@if $(CARGO) clippy --version >/dev/null 2>&1; then \
+		$(CARGO) clippy --all-targets -- -D warnings; \
+	else \
+		echo "cargo clippy unavailable; skipping lint"; \
+	fi
+
+bench:
+	$(CARGO) bench
+
+# Build-time Python: AOT-lower the JAX/Pallas model to HLO-text artifacts
+# (requires jax; the Rust suite skips artifact tests when absent).
+artifacts:
+	cd python/compile && python3 aot.py --out ../../artifacts/model.hlo.txt
+
+clean:
+	$(CARGO) clean

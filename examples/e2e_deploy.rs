@@ -24,8 +24,9 @@ use msf_cnn::ops::{ParamGen, Tensor};
 use msf_cnn::optimizer::{minimize_ram_unconstrained, vanilla_setting};
 use msf_cnn::report::kb;
 use msf_cnn::runtime::Runtime;
+use msf_cnn::util::error::Result;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
     println!("== msf-CNN end-to-end validation ==\n");
 

@@ -1,80 +1,87 @@
 //! Optimize the paper's three evaluation models under the full constraint
-//! grids — the workload behind Table 1 / Fig. 4 — and print the frontier.
+//! grids — the workload behind Table 1 / Fig. 4 — as one parallel
+//! [`PlanBatch`] sweep, and print the frontier.
 //!
 //! ```sh
 //! cargo run --offline --release --example optimize_zoo
 //! ```
 
-use msf_cnn::graph::FusionDag;
-use msf_cnn::optimizer::{
-    heuristic_head_fusion, minimize_macs, minimize_ram, minimize_ram_unconstrained,
-    streamnet_single_block, vanilla_setting,
-};
+use msf_cnn::optimizer::{PlanBatch, PlanOutcome};
 use msf_cnn::report::{kb, F_MAX_GRID, P_MAX_GRID_KB};
 use msf_cnn::zoo;
 
 fn main() {
-    for (label, model) in zoo::paper_models() {
-        let t0 = std::time::Instant::now();
-        let dag = FusionDag::build(&model, None);
-        println!(
-            "\n=== {label} ({}; {} layers, {} fusion candidates, built in {:.1} ms)",
-            model.name,
-            model.num_layers(),
-            dag.num_edges(),
-            t0.elapsed().as_secs_f64() * 1e3
-        );
+    // One batch over all models × (baselines + P1 grid + P2 grid): every
+    // cell is an independent solve, so the whole sweep fans out across
+    // the worker pool with a shared per-model edge-cost memo.
+    let mut batch = PlanBatch::new();
+    let models = zoo::paper_models();
+    let p_grid_bytes: Vec<u64> = P_MAX_GRID_KB.iter().map(|&p| p * 1000).collect();
+    for (label, model) in &models {
+        let idx = batch.add_model(*label, model.clone());
+        batch.push_grid(idx, F_MAX_GRID, &p_grid_bytes);
+    }
+    let per_model = 3 + F_MAX_GRID.len() + P_MAX_GRID_KB.len();
 
-        let v = vanilla_setting(&dag);
-        let h = heuristic_head_fusion(&dag);
-        let sn = streamnet_single_block(&dag, None).unwrap();
-        println!("  vanilla          {:>9.3} kB  F=1.00", kb(v.cost.peak_ram));
-        println!(
-            "  MCUNetV2 heur.   {:>9.3} kB  F={:.2}",
-            kb(h.cost.peak_ram),
-            h.cost.overhead
-        );
-        println!(
-            "  StreamNet 1-blk  {:>9.3} kB  F={:.2}",
-            kb(sn.cost.peak_ram),
-            sn.cost.overhead
-        );
+    let t0 = std::time::Instant::now();
+    let serial = batch.solve_serial();
+    let t_serial = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    let outcomes = batch.solve();
+    let t_parallel = t1.elapsed();
+
+    // The parallel sweep must be bit-identical to the serial path.
+    for (s, p) in serial.iter().zip(&outcomes) {
+        let same = match (&s.setting, &p.setting) {
+            (None, None) => true,
+            (Some(a), Some(b)) => a.spans == b.spans && a.cost.peak_ram == b.cost.peak_ram,
+            _ => false,
+        };
+        assert!(same, "parallel sweep diverged from serial");
+    }
+
+    let fmt = |o: &PlanOutcome| -> String {
+        match &o.setting {
+            None => "(no solution)".into(),
+            Some(s) => format!(
+                "{:>9.3} kB  F={:.2}  {} blocks  {}",
+                kb(s.cost.peak_ram),
+                s.cost.overhead,
+                s.num_fused_blocks(),
+                s.describe()
+            ),
+        }
+    };
+
+    for (mi, (label, model)) in models.iter().enumerate() {
+        let block = &outcomes[mi * per_model..(mi + 1) * per_model];
+        println!("\n=== {label} ({}; {} layers)", model.name, model.num_layers());
+        println!("  vanilla          {}", fmt(&block[0]));
+        println!("  MCUNetV2 heur.   {}", fmt(&block[1]));
+        println!("  StreamNet 1-blk  {}", fmt(&block[2]));
 
         println!("  -- P1: minimize RAM s.t. F <= F_max");
-        for &f_max in F_MAX_GRID {
-            let s = if f_max.is_infinite() {
-                minimize_ram_unconstrained(&dag)
-            } else {
-                minimize_ram(&dag, f_max)
-            };
-            match s {
-                Some(s) => println!(
-                    "     F_max={:<5}  {:>9.3} kB  F={:.2}  {} blocks  {}",
-                    if f_max.is_infinite() { "inf".into() } else { format!("{f_max}") },
-                    kb(s.cost.peak_ram),
-                    s.cost.overhead,
-                    s.num_fused_blocks(),
-                    s.describe()
-                ),
-                None => println!("     F_max={f_max:<5}  (no solution)"),
-            }
+        for (fi, &f_max) in F_MAX_GRID.iter().enumerate() {
+            let label = if f_max.is_infinite() { "inf".into() } else { format!("{f_max}") };
+            println!("     F_max={label:<5}  {}", fmt(&block[3 + fi]));
         }
 
         println!("  -- P2: minimize MACs s.t. P <= P_max");
-        for &p_kb in P_MAX_GRID_KB {
-            match minimize_macs(&dag, p_kb * 1000) {
-                Some(s) => println!(
-                    "     P_max={p_kb:>3}kB  {:>9.3} kB  F={:.2}  {} blocks",
-                    kb(s.cost.peak_ram),
-                    s.cost.overhead,
-                    s.num_fused_blocks()
-                ),
-                None => println!("     P_max={p_kb:>3}kB  (no solution)"),
-            }
+        for (pi, &p_kb) in P_MAX_GRID_KB.iter().enumerate() {
+            println!(
+                "     P_max={p_kb:>3}kB  {}",
+                fmt(&block[3 + F_MAX_GRID.len() + pi])
+            );
         }
-        println!(
-            "  [whole grid solved in {:.0} ms — paper: \"few seconds\"]",
-            t0.elapsed().as_secs_f64() * 1e3
-        );
+        // Sanity: every outcome in this block is for this model.
+        assert!(block.iter().all(|o| o.job.model == mi));
     }
+
+    println!(
+        "\n[{} configurations: serial {:.1} ms, parallel {:.1} ms ({:.2}x) — paper: \"few seconds\"]",
+        outcomes.len(),
+        t_serial.as_secs_f64() * 1e3,
+        t_parallel.as_secs_f64() * 1e3,
+        t_serial.as_secs_f64() / t_parallel.as_secs_f64().max(1e-9),
+    );
 }

@@ -1,62 +1,98 @@
-//! Serving: the L3 coordinator driving the AOT-compiled PJRT artifacts —
-//! Python is not involved at any point in this binary.
+//! Serving: the L3 coordinator driving a **registry of named plans** —
+//! several models served concurrently, each by its own executor thread
+//! draining per-model micro-batches.
+//!
+//! Engine-backed plans (optimizer output run by the pure-Rust tracked
+//! executor) need no artifacts; when `artifacts/` has been built
+//! (`make artifacts`), the AOT quickstart entry is registered as a third
+//! model behind the same front door.
 //!
 //! ```sh
-//! make artifacts   # once, build-time Python
 //! cargo run --offline --release --example serve
 //! ```
 
-use msf_cnn::coordinator::{InferenceServer, ServerConfig};
+use msf_cnn::coordinator::{ModelSpec, MultiModelServer};
+use msf_cnn::graph::FusionDag;
 use msf_cnn::ops::ParamGen;
+use msf_cnn::optimizer::minimize_ram_unconstrained;
+use msf_cnn::util::error::Result;
+use msf_cnn::zoo;
 
-fn main() -> anyhow::Result<()> {
+fn engine_spec(id: &str, model: msf_cnn::model::ModelChain) -> ModelSpec {
+    let dag = FusionDag::build(&model, None);
+    let setting = minimize_ram_unconstrained(&dag).expect("min-RAM plan");
+    ModelSpec::engine(id, model, setting)
+}
+
+fn main() -> Result<()> {
     let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
-    let server = InferenceServer::start(
-        &artifacts,
-        ServerConfig { entry: "model_fused".into(), queue_cap: 128, batch_max: 8 },
-    )?;
-    let handle = server.handle();
 
-    // Warm the compile cache with one request.
-    let mut gen = ParamGen::new(42);
-    handle.infer(gen.fill(32 * 32 * 3, 2.0))?;
+    // The plan registry: two engine-backed zoo models, plus the AOT
+    // artifact entry when it exists.
+    let mut specs = vec![
+        engine_spec("quickstart", zoo::quickstart()),
+        engine_spec("kws", zoo::kws_cnn()),
+    ];
+    let have_artifacts = std::path::Path::new(&artifacts).join("manifest.json").exists();
+    if have_artifacts {
+        specs.push(ModelSpec::artifact("aot-fused", &artifacts, "model_fused"));
+    }
+    let ids: Vec<String> = specs.iter().map(|s| s.id.clone()).collect();
+    println!("registry: {}", ids.join(", "));
 
-    // Drive 400 requests from 4 client threads.
+    let server = MultiModelServer::start(specs)?;
+
+    // Drive 100 requests per model from 2 client threads each.
     let t0 = std::time::Instant::now();
     let mut clients = Vec::new();
-    for t in 0..4u64 {
-        let h = server.handle();
-        clients.push(std::thread::spawn(move || {
-            let mut gen = ParamGen::new(1000 + t);
-            let mut ok = 0usize;
-            for _ in 0..100 {
-                match h.infer(gen.fill(32 * 32 * 3, 2.0)) {
-                    Ok(logits) => {
-                        assert_eq!(logits.len(), 10);
-                        ok += 1;
+    for (mi, id) in ids.iter().enumerate() {
+        let input_len = match id.as_str() {
+            "kws" => 49 * 10,
+            _ => 32 * 32 * 3,
+        };
+        for t in 0..2u64 {
+            let h = server.bound_handle(id.clone());
+            clients.push(std::thread::spawn(move || {
+                let mut gen = ParamGen::new(1000 + 100 * mi as u64 + t);
+                let mut ok = 0usize;
+                for _ in 0..50 {
+                    match h.infer(gen.fill(input_len, 2.0)) {
+                        Ok(logits) => {
+                            assert!(logits.iter().all(|v| v.is_finite()));
+                            ok += 1;
+                        }
+                        Err(_) => std::thread::sleep(std::time::Duration::from_millis(1)),
                     }
-                    Err(_) => std::thread::sleep(std::time::Duration::from_millis(1)),
                 }
-            }
-            ok
-        }));
+                ok
+            }));
+        }
     }
     let ok: usize = clients.into_iter().map(|c| c.join().unwrap()).sum();
     let dt = t0.elapsed();
+    let total = 100 * ids.len();
+    println!("served {ok}/{total} requests in {:.2} s ({:.1} req/s)",
+        dt.as_secs_f64(), ok as f64 / dt.as_secs_f64());
 
+    let handle = server.handle();
     let metrics = handle.metrics();
-    let stats = metrics.stats().expect("requests completed");
-    println!("served {ok}/400 requests in {:.2} s", dt.as_secs_f64());
-    println!("throughput: {:.1} req/s", ok as f64 / dt.as_secs_f64());
-    println!(
-        "latency: mean {:.0} us, p50 {:.0} us, p99 {:.0} us, max {:.0} us",
-        stats.mean_us, stats.p50_us, stats.p99_us, stats.max_us
-    );
-    println!(
-        "micro-batches: {}, backpressure rejections: {}",
-        metrics.batches(),
-        metrics.rejections()
-    );
+    for (id, m) in metrics.per_model() {
+        match m.stats() {
+            Some(stats) => println!(
+                "  {id:<12} {} done | p50 {:>6.0} us  p99 {:>6.0} us | {} micro-batches | \
+                 queue depth {} | {} rejections | {} shutdown drops",
+                stats.count,
+                stats.p50_us,
+                stats.p99_us,
+                m.batches(),
+                m.queue_depth(),
+                m.rejections(),
+                m.shutdown_drops()
+            ),
+            // e.g. a stale artifacts/ dir whose backend failed to init.
+            None => println!("  {id:<12} no completed requests"),
+        }
+    }
     drop(handle);
     server.shutdown();
     Ok(())

@@ -1,5 +1,8 @@
-//! Request metrics: counts, latency percentiles, throughput.
+//! Request metrics, per registered model: counts, latency percentiles,
+//! queue depth, backpressure rejections, and shutdown drops — plus
+//! aggregate views across the whole registry.
 
+use std::collections::BTreeMap;
 use std::time::Duration;
 
 /// Latency summary over a set of completed requests.
@@ -12,17 +15,55 @@ pub struct LatencyStats {
     pub max_us: f64,
 }
 
-/// Accumulates per-request latencies; cheap to snapshot.
-#[derive(Debug, Default, Clone)]
-pub struct Metrics {
-    samples_us: Vec<f64>,
-    batches: usize,
-    queue_full_rejections: usize,
+fn stats_of(samples: &[f64]) -> Option<LatencyStats> {
+    if samples.is_empty() {
+        return None;
+    }
+    let mut v = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| -> f64 {
+        let idx = ((v.len() as f64 - 1.0) * p).round() as usize;
+        v[idx]
+    };
+    Some(LatencyStats {
+        count: v.len(),
+        mean_us: v.iter().sum::<f64>() / v.len() as f64,
+        p50_us: pct(0.50),
+        p99_us: pct(0.99),
+        max_us: *v.last().unwrap(),
+    })
 }
 
-impl Metrics {
+/// Cap on retained latency samples per model: percentiles/max are
+/// computed over a ring of the most recent samples so a long-running
+/// server's metrics stay O(1) in memory; `count` and `mean` stay exact
+/// over the full lifetime.
+const SAMPLE_WINDOW: usize = 4096;
+
+/// Per-model accumulator.
+#[derive(Debug, Default, Clone)]
+pub struct ModelMetrics {
+    samples_us: Vec<f64>,
+    next_sample: usize,
+    completed: usize,
+    sum_us: f64,
+    batches: usize,
+    queue_full_rejections: usize,
+    shutdown_drops: usize,
+    queue_depth: usize,
+}
+
+impl ModelMetrics {
     pub fn record(&mut self, latency: Duration) {
-        self.samples_us.push(latency.as_secs_f64() * 1e6);
+        let us = latency.as_secs_f64() * 1e6;
+        self.completed += 1;
+        self.sum_us += us;
+        if self.samples_us.len() < SAMPLE_WINDOW {
+            self.samples_us.push(us);
+        } else {
+            self.samples_us[self.next_sample] = us;
+            self.next_sample = (self.next_sample + 1) % SAMPLE_WINDOW;
+        }
     }
 
     pub fn record_batch(&mut self, _size: usize) {
@@ -33,31 +74,100 @@ impl Metrics {
         self.queue_full_rejections += 1;
     }
 
+    /// A queued request discarded by the shutdown drain (it received a
+    /// structured `ServeError::ShuttingDown` reply, never a result).
+    pub fn record_shutdown_drop(&mut self) {
+        self.shutdown_drops += 1;
+    }
+
+    pub(crate) fn queue_inc(&mut self) {
+        self.queue_depth += 1;
+    }
+
+    pub(crate) fn queue_dec(&mut self) {
+        self.queue_depth = self.queue_depth.saturating_sub(1);
+    }
+
+    /// Requests currently enqueued (submitted, not yet popped by the
+    /// model's executor).
+    pub fn queue_depth(&self) -> usize {
+        self.queue_depth
+    }
+
     pub fn rejections(&self) -> usize {
         self.queue_full_rejections
+    }
+
+    pub fn shutdown_drops(&self) -> usize {
+        self.shutdown_drops
     }
 
     pub fn batches(&self) -> usize {
         self.batches
     }
 
+    /// Total requests completed over the model's lifetime (exact, not
+    /// capped by the sample window).
+    pub fn completed(&self) -> usize {
+        self.completed
+    }
+
+    /// Latency summary: `count`/`mean_us` are exact lifetime values;
+    /// percentiles and `max_us` come from the recent-sample window.
     pub fn stats(&self) -> Option<LatencyStats> {
-        if self.samples_us.is_empty() {
-            return None;
-        }
-        let mut v = self.samples_us.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let pct = |p: f64| -> f64 {
-            let idx = ((v.len() as f64 - 1.0) * p).round() as usize;
-            v[idx]
-        };
-        Some(LatencyStats {
-            count: v.len(),
-            mean_us: v.iter().sum::<f64>() / v.len() as f64,
-            p50_us: pct(0.50),
-            p99_us: pct(0.99),
-            max_us: *v.last().unwrap(),
-        })
+        let mut s = stats_of(&self.samples_us)?;
+        s.count = self.completed;
+        s.mean_us = self.sum_us / self.completed as f64;
+        Some(s)
+    }
+}
+
+/// Metrics for the whole registry; cheap to snapshot. Aggregate accessors
+/// ([`Self::stats`], [`Self::rejections`], …) fold over every model, so
+/// single-model callers keep working unchanged.
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    models: BTreeMap<String, ModelMetrics>,
+}
+
+impl Metrics {
+    /// Per-model view (`None` if the model never saw traffic or isn't
+    /// registered).
+    pub fn model(&self, id: &str) -> Option<&ModelMetrics> {
+        self.models.get(id)
+    }
+
+    pub(crate) fn model_mut(&mut self, id: &str) -> &mut ModelMetrics {
+        self.models.entry(id.to_string()).or_default()
+    }
+
+    /// Iterate `(model_id, metrics)` in id order.
+    pub fn per_model(&self) -> impl Iterator<Item = (&str, &ModelMetrics)> {
+        self.models.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    pub fn rejections(&self) -> usize {
+        self.models.values().map(ModelMetrics::rejections).sum()
+    }
+
+    pub fn shutdown_drops(&self) -> usize {
+        self.models.values().map(ModelMetrics::shutdown_drops).sum()
+    }
+
+    pub fn batches(&self) -> usize {
+        self.models.values().map(ModelMetrics::batches).sum()
+    }
+
+    /// Latency stats pooled across every model (`count`/`mean_us` exact
+    /// lifetime values, percentiles over the per-model sample windows).
+    pub fn stats(&self) -> Option<LatencyStats> {
+        let all: Vec<f64> =
+            self.models.values().flat_map(|m| m.samples_us.iter().copied()).collect();
+        let mut s = stats_of(&all)?;
+        s.count = self.models.values().map(|m| m.completed).sum();
+        s.mean_us =
+            self.models.values().map(|m| m.sum_us).sum::<f64>() / s.count.max(1) as f64;
+        Some(s)
     }
 }
 
@@ -69,7 +179,7 @@ mod tests {
     fn percentiles_ordered() {
         let mut m = Metrics::default();
         for i in 1..=100 {
-            m.record(Duration::from_micros(i));
+            m.model_mut("a").record(Duration::from_micros(i));
         }
         let s = m.stats().unwrap();
         assert_eq!(s.count, 100);
@@ -81,5 +191,56 @@ mod tests {
     #[test]
     fn empty_stats_none() {
         assert!(Metrics::default().stats().is_none());
+        assert!(ModelMetrics::default().stats().is_none());
+    }
+
+    #[test]
+    fn per_model_isolation_and_aggregates() {
+        let mut m = Metrics::default();
+        m.model_mut("a").record(Duration::from_micros(10));
+        m.model_mut("a").record_batch(1);
+        m.model_mut("b").record(Duration::from_micros(30));
+        m.model_mut("b").record(Duration::from_micros(50));
+        m.model_mut("b").record_rejection();
+        m.model_mut("b").record_shutdown_drop();
+
+        assert_eq!(m.model("a").unwrap().completed(), 1);
+        assert_eq!(m.model("b").unwrap().completed(), 2);
+        assert_eq!(m.model("a").unwrap().rejections(), 0);
+        assert_eq!(m.rejections(), 1);
+        assert_eq!(m.shutdown_drops(), 1);
+        assert_eq!(m.batches(), 1);
+        assert_eq!(m.stats().unwrap().count, 3);
+        let ids: Vec<&str> = m.per_model().map(|(id, _)| id).collect();
+        assert_eq!(ids, vec!["a", "b"]);
+    }
+
+    #[test]
+    fn sample_window_caps_memory_but_counts_stay_exact() {
+        let mut m = ModelMetrics::default();
+        let total = SAMPLE_WINDOW + 1000;
+        for i in 0..total {
+            m.record(Duration::from_micros(i as u64 + 1));
+        }
+        assert_eq!(m.completed(), total);
+        let s = m.stats().unwrap();
+        assert_eq!(s.count, total);
+        // Mean is exact over the lifetime: sum of 1..=total over total.
+        let exact_mean = (1..=total as u64).sum::<u64>() as f64 / total as f64;
+        assert!((s.mean_us - exact_mean).abs() < 1e-6, "{} vs {exact_mean}", s.mean_us);
+        // Percentiles come from the recent window only.
+        assert!(s.p50_us >= 1000.0);
+    }
+
+    #[test]
+    fn queue_depth_saturates_at_zero() {
+        let mut m = ModelMetrics::default();
+        m.queue_inc();
+        m.queue_inc();
+        m.queue_dec();
+        assert_eq!(m.queue_depth(), 1);
+        m.queue_dec();
+        m.queue_dec();
+        assert_eq!(m.queue_depth(), 0);
     }
 }

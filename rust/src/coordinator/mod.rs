@@ -1,16 +1,25 @@
 //! Serving coordinator — the L3 request path.
 //!
 //! msf-CNN's contribution is the offline optimizer (L3 at *deploy* time);
-//! at *request* time the coordinator is a thin driver per the paper's
-//! deployment story: a bounded queue with backpressure and a dedicated
-//! executor thread that owns the PJRT runtime (XLA handles are not
-//! `Send`, so the runtime never crosses threads) and drains the queue in
-//! micro-batches. Python is never on this path — artifacts were
-//! AOT-compiled at build time. Built on std threads/channels (offline
-//! environment; DESIGN.md §Substitutions).
+//! at *request* time the coordinator routes traffic across a **registry
+//! of named plans** ([`MultiModelServer`]): each registered model gets a
+//! bounded queue with backpressure and a dedicated executor thread that
+//! owns its runtime (XLA-style handles are not `Send`, so runtimes never
+//! cross threads) and drains per-model micro-batches. Backends are either
+//! AOT artifacts ([`ModelBackend::Artifact`]) or pure-Rust fusion plans
+//! ([`ModelBackend::Engine`]), so many zoo models can be served
+//! concurrently without a Python step. [`Metrics`] reports queue depth,
+//! latency percentiles, rejections, and shutdown drops per model;
+//! shutdown drains queued requests with structured
+//! [`ServeError::ShuttingDown`] replies instead of dropping them.
+//! [`InferenceServer`] keeps the original single-model surface. Built on
+//! std threads/channels (offline environment; DESIGN.md §Substitutions).
 
 mod metrics;
 mod server;
 
-pub use metrics::{LatencyStats, Metrics};
-pub use server::{InferenceServer, Pending, ServerConfig, ServerHandle};
+pub use metrics::{LatencyStats, Metrics, ModelMetrics};
+pub use server::{
+    BoundHandle, InferenceServer, ModelBackend, ModelSpec, MultiModelServer, Pending,
+    ServeError, ServerConfig, ServerHandle,
+};

@@ -1,24 +1,92 @@
-//! The inference server: bounded-queue front door + dedicated executor
-//! thread that owns the (non-`Send`) PJRT runtime.
+//! The inference server: a registry of named plans, each with a bounded
+//! front-door queue and a dedicated executor thread that owns its
+//! (non-`Send`) runtime and drains per-model micro-batches.
 //!
 //! Built on std threads + channels (tokio is unavailable in the offline
-//! build — DESIGN.md §Substitutions); the architecture is identical to the
-//! async version: submitters get a future-like [`Pending`] reply handle,
-//! the bounded queue applies backpressure, and a single executor thread
-//! drains micro-batches.
+//! build — DESIGN.md §Substitutions); the architecture mirrors the async
+//! version: submitters tag a request with a model id and get a
+//! future-like [`Pending`] reply handle, each model's bounded queue
+//! applies backpressure independently, and the executor pool (one thread
+//! per registered model) drains micro-batches. Shutdown is explicit:
+//! queued requests are drained with a structured
+//! [`ServeError::ShuttingDown`] reply and counted in the per-model
+//! [`Metrics`] — never silently dropped.
 
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc as std_mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
-
+use crate::exec::Engine;
+use crate::memory::Arena;
+use crate::model::ModelChain;
+use crate::ops::Tensor;
+use crate::optimizer::FusionSetting;
 use crate::runtime::Runtime;
+use crate::util::error::{Error, Result};
 
 use super::metrics::Metrics;
 
-/// Server configuration.
+/// How often a blocked executor re-checks the shutdown flag; bounds
+/// shutdown latency without requiring every handle clone to be dropped.
+const STOP_POLL: Duration = Duration::from_millis(25);
+
+/// What executes a registered model's requests.
+#[derive(Debug, Clone)]
+pub enum ModelBackend {
+    /// An AOT artifact entry run by the [`Runtime`].
+    Artifact { dir: PathBuf, entry: String },
+    /// A fusion plan run by the pure-Rust tracked executor — serves any
+    /// zoo model without artifacts (and is what the tests register).
+    Engine { model: ModelChain, setting: FusionSetting },
+}
+
+/// One entry of the server's model registry.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    /// Registry key; `submit` routes on this.
+    pub id: String,
+    pub backend: ModelBackend,
+    /// Bounded queue depth; senders get backpressure errors beyond this.
+    pub queue_cap: usize,
+    /// Max requests drained per executor wakeup (micro-batch).
+    pub batch_max: usize,
+}
+
+impl ModelSpec {
+    pub fn artifact(
+        id: impl Into<String>,
+        dir: impl Into<PathBuf>,
+        entry: impl Into<String>,
+    ) -> Self {
+        Self {
+            id: id.into(),
+            backend: ModelBackend::Artifact { dir: dir.into(), entry: entry.into() },
+            queue_cap: 256,
+            batch_max: 8,
+        }
+    }
+
+    pub fn engine(id: impl Into<String>, model: ModelChain, setting: FusionSetting) -> Self {
+        Self {
+            id: id.into(),
+            backend: ModelBackend::Engine { model, setting },
+            queue_cap: 256,
+            batch_max: 8,
+        }
+    }
+
+    pub fn with_queue(mut self, queue_cap: usize, batch_max: usize) -> Self {
+        self.queue_cap = queue_cap;
+        self.batch_max = batch_max;
+        self
+    }
+}
+
+/// Single-model server configuration (the [`InferenceServer`] wrapper).
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
     /// Artifact entry point to serve (e.g. `"model_fused"`).
@@ -35,72 +103,453 @@ impl Default for ServerConfig {
     }
 }
 
+/// Structured request-path error: every reply states which model and why.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// `submit` named a model id that is not in the registry.
+    UnknownModel { model_id: String },
+    /// The model's bounded queue is full (backpressure).
+    QueueFull { model_id: String },
+    /// The server is stopping; queued requests are drained with this
+    /// reply (and counted as `shutdown_drops` in [`Metrics`]).
+    ShuttingDown { model_id: String },
+    /// The model's backend failed to initialize.
+    BackendInit { model_id: String, detail: String },
+    /// The backend ran and failed.
+    Failed { model_id: String, detail: String },
+    /// The executor disappeared without replying (should not happen in
+    /// orderly shutdown — the drain path replies `ShuttingDown` instead).
+    Dropped { model_id: String },
+}
+
+impl ServeError {
+    pub fn model_id(&self) -> &str {
+        match self {
+            ServeError::UnknownModel { model_id }
+            | ServeError::QueueFull { model_id }
+            | ServeError::ShuttingDown { model_id }
+            | ServeError::BackendInit { model_id, .. }
+            | ServeError::Failed { model_id, .. }
+            | ServeError::Dropped { model_id } => model_id,
+        }
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::UnknownModel { model_id } => {
+                write!(f, "unknown model '{model_id}' (not registered)")
+            }
+            ServeError::QueueFull { model_id } => {
+                write!(f, "queue full for model '{model_id}' (backpressure)")
+            }
+            ServeError::ShuttingDown { model_id } => write!(
+                f,
+                "server shutting down: request for model '{model_id}' drained without execution"
+            ),
+            ServeError::BackendInit { model_id, detail } => {
+                write!(f, "runtime init failed for model '{model_id}': {detail}")
+            }
+            ServeError::Failed { model_id, detail } => {
+                write!(f, "inference failed for model '{model_id}': {detail}")
+            }
+            ServeError::Dropped { model_id } => {
+                write!(f, "server dropped request for model '{model_id}'")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+impl From<ServeError> for Error {
+    fn from(e: ServeError) -> Self {
+        Error::msg(e)
+    }
+}
+
 struct Request {
     input: Vec<f32>,
     enqueued: Instant,
-    reply: std_mpsc::SyncSender<Result<Vec<f32>>>,
+    reply: std_mpsc::SyncSender<Result<Vec<f32>, ServeError>>,
 }
 
 /// Reply handle for one submitted request.
 pub struct Pending {
-    rx: std_mpsc::Receiver<Result<Vec<f32>>>,
+    rx: std_mpsc::Receiver<Result<Vec<f32>, ServeError>>,
+    model_id: String,
 }
 
 impl Pending {
     /// Block until the executor replies.
-    pub fn wait(self) -> Result<Vec<f32>> {
-        self.rx.recv().map_err(|_| anyhow!("server dropped request"))?
+    pub fn wait(self) -> Result<Vec<f32>, ServeError> {
+        self.rx
+            .recv()
+            .unwrap_or_else(|_| Err(ServeError::Dropped { model_id: self.model_id.clone() }))
     }
 
     /// Non-blocking poll; `None` while still in flight.
-    pub fn poll(&self) -> Option<Result<Vec<f32>>> {
+    pub fn poll(&self) -> Option<Result<Vec<f32>, ServeError>> {
         match self.rx.try_recv() {
             Ok(r) => Some(r),
             Err(std_mpsc::TryRecvError::Empty) => None,
             Err(std_mpsc::TryRecvError::Disconnected) => {
-                Some(Err(anyhow!("server dropped request")))
+                Some(Err(ServeError::Dropped { model_id: self.model_id.clone() }))
             }
         }
     }
 }
 
-/// Handle for submitting requests; cheap to clone.
+/// Submit-side state of one model's queue. `inflight` counts submits
+/// between their shutdown check and the end of `try_send`, so the
+/// executor's shutdown drain can wait out racing submitters instead of
+/// leaking their requests (see `drain_shutdown`).
+#[derive(Clone)]
+struct QueueEntry {
+    tx: std_mpsc::SyncSender<Request>,
+    inflight: Arc<AtomicUsize>,
+}
+
+/// Handle for submitting requests to any registered model; cheap to clone.
 #[derive(Clone)]
 pub struct ServerHandle {
-    tx: std_mpsc::SyncSender<Request>,
+    queues: BTreeMap<String, QueueEntry>,
     metrics: Arc<Mutex<Metrics>>,
+    stopping: Arc<AtomicBool>,
 }
 
 impl ServerHandle {
-    /// Submit one inference; errors immediately when the queue is full
-    /// (backpressure). Await the result via [`Pending::wait`].
-    pub fn submit(&self, input: Vec<f32>) -> Result<Pending> {
+    /// Submit one inference for `model_id`; errors immediately when the
+    /// model is unknown, the server is stopping, or the model's queue is
+    /// full (backpressure). Await the result via [`Pending::wait`].
+    pub fn submit(&self, model_id: &str, input: Vec<f32>) -> Result<Pending, ServeError> {
+        let entry = self
+            .queues
+            .get(model_id)
+            .ok_or_else(|| ServeError::UnknownModel { model_id: model_id.into() })?;
+        entry.inflight.fetch_add(1, Ordering::SeqCst);
+        let result = self.submit_inner(entry, model_id, input);
+        entry.inflight.fetch_sub(1, Ordering::SeqCst);
+        result
+    }
+
+    fn submit_inner(
+        &self,
+        entry: &QueueEntry,
+        model_id: &str,
+        input: Vec<f32>,
+    ) -> Result<Pending, ServeError> {
+        // Checked *after* the in-flight increment: a submit that read
+        // `stopping == false` is guaranteed visible to the shutdown drain
+        // until its send completes.
+        if self.stopping.load(Ordering::SeqCst) {
+            return Err(ServeError::ShuttingDown { model_id: model_id.into() });
+        }
         let (reply_tx, reply_rx) = std_mpsc::sync_channel(1);
         let req = Request { input, enqueued: Instant::now(), reply: reply_tx };
-        match self.tx.try_send(req) {
-            Ok(()) => Ok(Pending { rx: reply_rx }),
+        // Count the queue slot before sending so the executor's decrement
+        // can never observe a request its increment hasn't recorded.
+        self.metrics.lock().unwrap().model_mut(model_id).queue_inc();
+        match entry.tx.try_send(req) {
+            Ok(()) => Ok(Pending { rx: reply_rx, model_id: model_id.into() }),
             Err(std_mpsc::TrySendError::Full(_)) => {
-                self.metrics.lock().unwrap().record_rejection();
-                Err(anyhow!("queue full (backpressure)"))
+                let mut m = self.metrics.lock().unwrap();
+                let mm = m.model_mut(model_id);
+                mm.queue_dec();
+                mm.record_rejection();
+                Err(ServeError::QueueFull { model_id: model_id.into() })
             }
-            Err(std_mpsc::TrySendError::Disconnected(_)) => Err(anyhow!("server stopped")),
+            Err(std_mpsc::TrySendError::Disconnected(_)) => {
+                self.metrics.lock().unwrap().model_mut(model_id).queue_dec();
+                Err(ServeError::ShuttingDown { model_id: model_id.into() })
+            }
         }
     }
 
     /// Submit and block for the reply.
-    pub fn infer(&self, input: Vec<f32>) -> Result<Vec<f32>> {
-        self.submit(input)?.wait()
+    pub fn infer(&self, model_id: &str, input: Vec<f32>) -> Result<Vec<f32>, ServeError> {
+        self.submit(model_id, input)?.wait()
     }
 
+    /// Snapshot of the per-model + aggregate metrics.
     pub fn metrics(&self) -> Metrics {
         self.metrics.lock().unwrap().clone()
     }
+
+    /// Registered model ids, sorted.
+    pub fn model_ids(&self) -> Vec<String> {
+        self.queues.keys().cloned().collect()
+    }
 }
 
-/// The running server: executor thread + handle factory.
+/// A handle bound to one model id (the single-model ergonomic surface).
+#[derive(Clone)]
+pub struct BoundHandle {
+    inner: ServerHandle,
+    model_id: String,
+}
+
+impl BoundHandle {
+    pub fn submit(&self, input: Vec<f32>) -> Result<Pending, ServeError> {
+        self.inner.submit(&self.model_id, input)
+    }
+
+    pub fn infer(&self, input: Vec<f32>) -> Result<Vec<f32>, ServeError> {
+        self.inner.infer(&self.model_id, input)
+    }
+
+    pub fn metrics(&self) -> Metrics {
+        self.inner.metrics()
+    }
+}
+
+/// The model's executor-side state: backend created *inside* the worker
+/// thread (PJRT-style handles are not `Send`).
+enum RunningBackend {
+    Engine { engine: Engine, setting: FusionSetting },
+    Artifact { rt: Runtime, entry: String },
+}
+
+impl RunningBackend {
+    fn init(backend: ModelBackend) -> Result<Self, String> {
+        match backend {
+            ModelBackend::Engine { model, setting } => {
+                Ok(RunningBackend::Engine { engine: Engine::new(model), setting })
+            }
+            ModelBackend::Artifact { dir, entry } => {
+                // `ServeError::BackendInit` supplies the "runtime init
+                // failed" framing; keep only the cause here.
+                let mut rt = Runtime::open(&dir).map_err(|e| format!("{e:#}"))?;
+                rt.load(&entry).map_err(|e| format!("load '{entry}': {e:#}"))?;
+                Ok(RunningBackend::Artifact { rt, entry })
+            }
+        }
+    }
+
+    fn run(&mut self, input: &[f32]) -> Result<Vec<f32>, String> {
+        match self {
+            RunningBackend::Engine { engine, setting } => {
+                let shape = engine.model().shapes[0];
+                if input.len() as u64 != shape.elems() {
+                    return Err(format!(
+                        "input length {} != expected {} for {shape}",
+                        input.len(),
+                        shape.elems()
+                    ));
+                }
+                let t = Tensor::from_data(
+                    shape.h as usize,
+                    shape.w as usize,
+                    shape.c as usize,
+                    input.to_vec(),
+                );
+                let mut arena = Arena::unbounded();
+                engine
+                    .run(setting, &t, &mut arena)
+                    .map(|r| r.output)
+                    .map_err(|e| e.to_string())
+            }
+            RunningBackend::Artifact { rt, entry } => {
+                rt.run_f32(entry, input).map_err(|e| format!("{e:#}"))
+            }
+        }
+    }
+}
+
+/// The running registry: one executor thread per registered model.
+pub struct MultiModelServer {
+    handle: Option<ServerHandle>,
+    workers: Vec<JoinHandle<()>>,
+    stopping: Arc<AtomicBool>,
+}
+
+impl MultiModelServer {
+    /// Start an executor per spec. Backend initialization happens inside
+    /// each executor thread; init errors surface through that model's
+    /// requests as [`ServeError::BackendInit`].
+    pub fn start(specs: Vec<ModelSpec>) -> Result<Self> {
+        if specs.is_empty() {
+            return Err(crate::anyhow!("empty model registry"));
+        }
+        let metrics = Arc::new(Mutex::new(Metrics::default()));
+        let stopping = Arc::new(AtomicBool::new(false));
+        let mut queues = BTreeMap::new();
+        let mut workers = Vec::new();
+
+        for spec in specs {
+            if queues.contains_key(&spec.id) {
+                return Err(crate::anyhow!("duplicate model id '{}'", spec.id));
+            }
+            // Pre-register the metrics entry so zero-traffic models still
+            // show up in per-model reports.
+            metrics.lock().unwrap().model_mut(&spec.id);
+            let (tx, rx) = std_mpsc::sync_channel::<Request>(spec.queue_cap.max(1));
+            let inflight = Arc::new(AtomicUsize::new(0));
+            queues.insert(spec.id.clone(), QueueEntry { tx, inflight: inflight.clone() });
+            let metrics_w = metrics.clone();
+            let stopping_w = stopping.clone();
+            let name = format!("msfcnn-exec-{}", spec.id);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(name)
+                    .spawn(move || worker_loop(spec, rx, inflight, metrics_w, stopping_w))?,
+            );
+        }
+
+        Ok(Self {
+            handle: Some(ServerHandle { queues, metrics, stopping: stopping.clone() }),
+            workers,
+            stopping,
+        })
+    }
+
+    pub fn handle(&self) -> ServerHandle {
+        self.handle.as_ref().expect("server running").clone()
+    }
+
+    /// Handle bound to one registered model.
+    pub fn bound_handle(&self, model_id: impl Into<String>) -> BoundHandle {
+        BoundHandle { inner: self.handle(), model_id: model_id.into() }
+    }
+
+    /// Stop accepting requests, drain every queue with structured
+    /// [`ServeError::ShuttingDown`] replies (recorded as `shutdown_drops`
+    /// in the metrics), and join the executors. Outstanding handle clones
+    /// stay valid for metrics but all further submits fail fast.
+    pub fn shutdown(mut self) {
+        self.stopping.store(true, Ordering::SeqCst);
+        self.handle.take(); // drop our queue senders
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Reply a structured `ShuttingDown` to one drained request.
+fn reply_shutdown(req: Request, metrics: &Mutex<Metrics>, id: &str) {
+    {
+        let mut m = metrics.lock().unwrap();
+        let mm = m.model_mut(id);
+        mm.queue_dec();
+        mm.record_shutdown_drop();
+    }
+    let _ = req.reply.send(Err(ServeError::ShuttingDown { model_id: id.to_string() }));
+}
+
+/// Terminal drain: once the worker decided to exit, empty the queue with
+/// structured replies and wait out any submit racing with the shutdown
+/// flag (its `inflight` increment is visible before its `stopping` check,
+/// so observing `inflight == 0` *before* an empty sweep proves no further
+/// request can arrive).
+fn drain_shutdown(
+    rx: &std_mpsc::Receiver<Request>,
+    inflight: &AtomicUsize,
+    metrics: &Mutex<Metrics>,
+    id: &str,
+) {
+    loop {
+        let quiescent = inflight.load(Ordering::SeqCst) == 0;
+        let mut got = false;
+        while let Ok(req) = rx.try_recv() {
+            got = true;
+            reply_shutdown(req, metrics, id);
+        }
+        if quiescent && !got {
+            break;
+        }
+        std::thread::yield_now();
+    }
+}
+
+fn worker_loop(
+    spec: ModelSpec,
+    rx: std_mpsc::Receiver<Request>,
+    inflight: Arc<AtomicUsize>,
+    metrics: Arc<Mutex<Metrics>>,
+    stopping: Arc<AtomicBool>,
+) {
+    let id = spec.id.clone();
+    let batch_max = spec.batch_max.max(1);
+
+    let mut backend = match RunningBackend::init(spec.backend) {
+        Ok(b) => b,
+        Err(detail) => {
+            // Reply the structured init failure to everything that ever
+            // arrives, until shutdown or all senders drop.
+            loop {
+                match rx.recv_timeout(STOP_POLL) {
+                    Ok(req) => {
+                        metrics.lock().unwrap().model_mut(&id).queue_dec();
+                        let _ = req.reply.send(Err(ServeError::BackendInit {
+                            model_id: id.clone(),
+                            detail: detail.clone(),
+                        }));
+                    }
+                    Err(std_mpsc::RecvTimeoutError::Timeout) => {
+                        if stopping.load(Ordering::SeqCst) {
+                            break;
+                        }
+                    }
+                    Err(std_mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            drain_shutdown(&rx, &inflight, &metrics, &id);
+            return;
+        }
+    };
+
+    loop {
+        let first = match rx.recv_timeout(STOP_POLL) {
+            Ok(req) => req,
+            Err(std_mpsc::RecvTimeoutError::Timeout) => {
+                if stopping.load(Ordering::SeqCst) {
+                    break;
+                }
+                continue;
+            }
+            Err(std_mpsc::RecvTimeoutError::Disconnected) => break,
+        };
+        if stopping.load(Ordering::SeqCst) {
+            // Shutdown: structured replies, never silent drops. The rest
+            // of the queue is emptied by the terminal drain below.
+            reply_shutdown(first, &metrics, &id);
+            break;
+        }
+        // Drain loop: block for one, then opportunistically micro-batch.
+        let mut batch = vec![first];
+        while batch.len() < batch_max {
+            match rx.try_recv() {
+                Ok(req) => batch.push(req),
+                Err(_) => break,
+            }
+        }
+        {
+            let mut m = metrics.lock().unwrap();
+            let mm = m.model_mut(&id);
+            mm.record_batch(batch.len());
+            for _ in &batch {
+                mm.queue_dec();
+            }
+        }
+        for req in batch {
+            let res = backend
+                .run(&req.input)
+                .map_err(|detail| ServeError::Failed { model_id: id.clone(), detail });
+            metrics.lock().unwrap().model_mut(&id).record(req.enqueued.elapsed());
+            let _ = req.reply.send(res);
+        }
+    }
+    // Closes the submit/shutdown race: no request that made it into the
+    // queue is ever dropped without a structured reply.
+    drain_shutdown(&rx, &inflight, &metrics, &id);
+}
+
+/// Single-model wrapper over [`MultiModelServer`]: serves one artifact
+/// entry, registry key = entry name (the original seed API).
 pub struct InferenceServer {
-    handle: ServerHandle,
-    worker: Option<JoinHandle<()>>,
+    inner: MultiModelServer,
+    entry: String,
 }
 
 impl InferenceServer {
@@ -111,73 +560,20 @@ impl InferenceServer {
         artifact_dir: impl Into<std::path::PathBuf>,
         config: ServerConfig,
     ) -> Result<Self> {
-        let dir = artifact_dir.into();
-        let (tx, rx) = std_mpsc::sync_channel::<Request>(config.queue_cap);
-        let metrics = Arc::new(Mutex::new(Metrics::default()));
-        let metrics_w = metrics.clone();
-        let entry = config.entry.clone();
-        let batch_max = config.batch_max.max(1);
-
-        let worker = std::thread::Builder::new()
-            .name("msfcnn-executor".into())
-            .spawn(move || {
-                let mut rt = match Runtime::open(&dir) {
-                    Ok(rt) => rt,
-                    Err(e) => {
-                        while let Ok(req) = rx.recv() {
-                            let _ = req.reply.send(Err(anyhow!("runtime init failed: {e:#}")));
-                        }
-                        return;
-                    }
-                };
-                if let Err(e) = rt.load(&entry) {
-                    while let Ok(req) = rx.recv() {
-                        let _ = req.reply.send(Err(anyhow!("load '{entry}': {e:#}")));
-                    }
-                    return;
-                }
-                // Drain loop: block for one, then opportunistically batch.
-                while let Ok(first) = rx.recv() {
-                    let mut batch = vec![first];
-                    while batch.len() < batch_max {
-                        match rx.try_recv() {
-                            Ok(req) => batch.push(req),
-                            Err(_) => break,
-                        }
-                    }
-                    metrics_w.lock().unwrap().record_batch(batch.len());
-                    for req in batch {
-                        let res = rt.run_f32(&entry, &req.input);
-                        let latency = req.enqueued.elapsed();
-                        metrics_w.lock().unwrap().record(latency);
-                        let _ = req.reply.send(res);
-                    }
-                }
-            })?;
-
-        let handle = ServerHandle { tx, metrics };
-        Ok(Self { handle, worker: Some(worker) })
+        let spec = ModelSpec::artifact(&config.entry, artifact_dir, &config.entry)
+            .with_queue(config.queue_cap, config.batch_max);
+        let inner = MultiModelServer::start(vec![spec])?;
+        Ok(Self { inner, entry: config.entry })
     }
 
-    pub fn handle(&self) -> ServerHandle {
-        self.handle.clone()
+    pub fn handle(&self) -> BoundHandle {
+        self.inner.bound_handle(&self.entry)
     }
 
-    /// Stop accepting requests and join the executor thread. (Any
-    /// outstanding `ServerHandle` clones keep the queue open; drop them
-    /// first for a clean join.)
-    pub fn shutdown(mut self) {
-        let ServerHandle { tx, metrics } = self.handle.clone();
-        drop(tx);
-        drop(metrics);
-        // Drop our own handle (closes the last in-struct sender).
-        self.handle = ServerHandle {
-            tx: std_mpsc::sync_channel(1).0,
-            metrics: Arc::new(Mutex::new(Metrics::default())),
-        };
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
+    /// Stop accepting requests, drain the queue with structured replies,
+    /// and join the executor thread.
+    pub fn shutdown(self) {
+        self.inner.shutdown()
     }
 }
 
@@ -200,7 +596,34 @@ mod tests {
         let h = server.handle();
         let err = h.infer(vec![0.0; 4]).unwrap_err();
         assert!(format!("{err:#}").contains("runtime init failed"), "{err:#}");
+        assert_eq!(err.model_id(), "model_fused");
         drop(h);
         server.shutdown();
+    }
+
+    #[test]
+    fn unknown_model_is_structured() {
+        let m = crate::zoo::tiny_cnn();
+        let dag = crate::graph::FusionDag::build(&m, None);
+        let setting = crate::optimizer::vanilla_setting(&dag);
+        let server =
+            MultiModelServer::start(vec![ModelSpec::engine("tiny", m, setting)]).unwrap();
+        let h = server.handle();
+        let err = h.submit("nope", vec![0.0; 4]).unwrap_err();
+        assert_eq!(err, ServeError::UnknownModel { model_id: "nope".into() });
+        drop(h);
+        server.shutdown();
+    }
+
+    #[test]
+    fn duplicate_ids_rejected() {
+        let m = crate::zoo::tiny_cnn();
+        let dag = crate::graph::FusionDag::build(&m, None);
+        let setting = crate::optimizer::vanilla_setting(&dag);
+        let specs = vec![
+            ModelSpec::engine("m", m.clone(), setting.clone()),
+            ModelSpec::engine("m", m, setting),
+        ];
+        assert!(MultiModelServer::start(specs).is_err());
     }
 }

@@ -68,17 +68,19 @@ impl Engine {
     /// artifacts (`weights.json`) for the [`crate::zoo::quickstart`]
     /// model, enabling bit-comparable cross-checks between this executor
     /// and the XLA artifacts.
-    pub fn quickstart_from_artifacts(dir: impl AsRef<std::path::Path>) -> anyhow::Result<Self> {
+    pub fn quickstart_from_artifacts(
+        dir: impl AsRef<std::path::Path>,
+    ) -> crate::util::error::Result<Self> {
         use crate::util::json::Json;
         let model = crate::zoo::quickstart();
         let text = std::fs::read_to_string(dir.as_ref().join("weights.json"))?;
-        let root = Json::parse(&text).map_err(|e| anyhow::anyhow!("weights.json: {e}"))?;
-        let flat = |key: &str| -> anyhow::Result<Vec<f32>> {
+        let root = Json::parse(&text).map_err(|e| crate::anyhow!("weights.json: {e}"))?;
+        let flat = |key: &str| -> crate::util::error::Result<Vec<f32>> {
             Ok(root
                 .get(key)
                 .and_then(|v| v.get("data"))
                 .and_then(Json::as_arr)
-                .ok_or_else(|| anyhow::anyhow!("missing '{key}' in weights.json"))?
+                .ok_or_else(|| crate::anyhow!("missing '{key}' in weights.json"))?
                 .iter()
                 .map(|x| x.as_f64().unwrap_or(0.0) as f32)
                 .collect())

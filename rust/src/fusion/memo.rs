@@ -1,0 +1,153 @@
+//! Shared edge-cost memo for repeated DAG builds (the PlanBatch fast path).
+//!
+//! Eq. 5/11/12 edge costs depend only on `(a, b, iterative_tail, scheme)`
+//! for a fixed model, yet every [`crate::graph::FusionDag::build`] call
+//! recomputes all of them from scratch. A [`CostMemo`] caches the results
+//! behind a mutex so concurrent planner workers sweeping many budgets over
+//! the same model ([`crate::optimizer::PlanBatch`]) pay for each edge once.
+//!
+//! A memo is **per model**: keys carry no model identity, so sharing one
+//! across models silently mixes costs. `PlanBatch` allocates one per
+//! distinct model.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::model::ModelChain;
+
+use super::{scheme_block_macs, BlockSpan, CacheScheme, EdgeCost};
+
+/// Cost of the DAG edge for span `[a, b)` of `model`: single layer when
+/// `b == a + 1`, H-cache-family fusion block otherwise. With
+/// `iterative_tail`, the block streams into the §7 pool/dense rewrite and
+/// the cost includes the tail layers' MACs (the edge jumps to the output
+/// node). This is the single source of truth the DAG builder and the memo
+/// both use.
+pub fn span_edge_cost(
+    model: &ModelChain,
+    a: usize,
+    b: usize,
+    iterative_tail: bool,
+    scheme: CacheScheme,
+) -> EdgeCost {
+    if !iterative_tail {
+        BlockSpan::new(a, b).cost_scheme(model, false, scheme)
+    } else {
+        let n = model.num_layers();
+        let tail_macs: u64 = (b..n).map(|i| model.layer_macs(i)).sum();
+        EdgeCost {
+            ram_bytes: super::ram::block_peak_ram_scheme(model, a, b, true, scheme),
+            macs: scheme_block_macs(model, a, b, scheme) + tail_macs,
+        }
+    }
+}
+
+/// Thread-shared memo of [`span_edge_cost`] results for **one** model,
+/// keyed by `(a, b, iterative_tail, scheme)`.
+#[derive(Debug, Default)]
+pub struct CostMemo {
+    map: Mutex<HashMap<(usize, usize, bool, CacheScheme), EdgeCost>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl CostMemo {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Memoized [`span_edge_cost`]. The analytical model runs outside the
+    /// lock, so concurrent misses may compute the same edge twice — both
+    /// arrive at the same pure result, and solver time dominates anyway.
+    pub fn edge_cost(
+        &self,
+        model: &ModelChain,
+        a: usize,
+        b: usize,
+        iterative_tail: bool,
+        scheme: CacheScheme,
+    ) -> EdgeCost {
+        let key = (a, b, iterative_tail, scheme);
+        if let Some(c) = self.map.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return *c;
+        }
+        let c = span_edge_cost(model, a, b, iterative_tail, scheme);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.map.lock().unwrap().insert(key, c);
+        c
+    }
+
+    /// `(hits, misses)` counters — the PlanBatch bench reports reuse.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Activation, Layer, TensorShape};
+
+    fn chain() -> ModelChain {
+        ModelChain::new(
+            "m",
+            TensorShape::new(24, 24, 3),
+            vec![
+                Layer::conv("c0", 3, 1, 1, 3, 8, Activation::Relu6),
+                Layer::conv("c1", 3, 2, 1, 8, 16, Activation::Relu6),
+                Layer::conv("c2", 3, 1, 1, 16, 16, Activation::Relu6),
+                Layer::global_pool("gp", 16),
+                Layer::dense("fc", 16, 10),
+            ],
+        )
+    }
+
+    #[test]
+    fn memo_matches_direct_computation() {
+        let m = chain();
+        let memo = CostMemo::new();
+        for (a, b, tail) in [(0usize, 1usize, false), (0, 2, false), (0, 3, false), (0, 3, true)] {
+            for scheme in CacheScheme::ALL {
+                let direct = span_edge_cost(&m, a, b, tail, scheme);
+                assert_eq!(memo.edge_cost(&m, a, b, tail, scheme), direct);
+                // Second lookup is a hit and returns the same cost.
+                assert_eq!(memo.edge_cost(&m, a, b, tail, scheme), direct);
+            }
+        }
+        let (hits, misses) = memo.stats();
+        assert_eq!(misses, 12);
+        assert_eq!(hits, 12);
+    }
+
+    #[test]
+    fn tail_cost_includes_tail_macs() {
+        let m = chain();
+        let plain = span_edge_cost(&m, 0, 3, false, CacheScheme::HCache);
+        let tail = span_edge_cost(&m, 0, 3, true, CacheScheme::HCache);
+        let tail_macs: u64 = (3..5).map(|i| m.layer_macs(i)).sum();
+        assert_eq!(tail.macs, plain.macs + tail_macs);
+        assert!(tail.ram_bytes < plain.ram_bytes, "streamed tail drops the output map");
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        let m = chain();
+        let memo = CostMemo::new();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..8 {
+                        memo.edge_cost(&m, 0, 3, false, CacheScheme::HCache);
+                    }
+                });
+            }
+        });
+        let direct = span_edge_cost(&m, 0, 3, false, CacheScheme::HCache);
+        assert_eq!(memo.edge_cost(&m, 0, 3, false, CacheScheme::HCache), direct);
+        let (hits, misses) = memo.stats();
+        assert_eq!(hits + misses, 33);
+        assert!(hits >= 29, "concurrent misses are bounded by the thread count");
+    }
+}

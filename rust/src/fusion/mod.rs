@@ -14,15 +14,19 @@
 //! * [`macs`]   — fused MAC counts (Eq. 12–15; see note on the Eq. 14
 //!   `c_out`/`c_in` typo in `macs.rs`)
 //! * [`ram`]    — peak-RAM encoding of single layers and blocks (Eq. 5–6)
+//! * [`memo`]   — thread-shared per-model edge-cost memo for repeated DAG
+//!   builds (the [`crate::optimizer::PlanBatch`] fast path)
 
 pub mod hcache;
 pub mod macs;
+pub mod memo;
 pub mod ram;
 pub mod scheme;
 pub mod tiles;
 
 pub use hcache::{block_cache_bytes, layer_cache_bytes};
 pub use macs::{block_macs, fused_layer_macs};
+pub use memo::{span_edge_cost, CostMemo};
 pub use ram::{block_peak_ram, block_peak_ram_scheme, single_layer_ram, EdgeCost};
 pub use scheme::{scheme_block_macs, scheme_cache_bytes, CacheScheme};
 pub use tiles::{band_heights, stride_products};

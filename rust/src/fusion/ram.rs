@@ -52,12 +52,16 @@ pub fn block_peak_ram_scheme(
     let t = band_heights(model, a, b, 1);
     let first_in = model.input_of(a);
     let l0 = &model.layers[a];
-    // Live input window of the first layer: a `t_0`-wide, `k_0`-tall tile
+    // Live input window of the first layer: a `t_0`-row, `k_0`-column tile
     // of the (streamed) source — the same Eq. 11 strip every cached layer
     // keeps; the first layer's window is the block's I term (which is why
-    // Eq. 11 sets Buf_1 = 0 instead of charging it twice).
-    let t0 = t[0].min(first_in.w + 2 * l0.padding) as u64;
-    let i_strip = t0 * l0.k.min(first_in.h + 2 * l0.padding) as u64 * first_in.c as u64 * eb;
+    // Eq. 11 sets Buf_1 = 0 instead of charging it twice). `t_0` counts
+    // *rows* (band height), so it clamps against the padded map height;
+    // the kernel extent `k_0` spans columns and clamps against the padded
+    // width — non-square inputs (e.g. 49×10 KWS spectrograms) hit the two
+    // clamps differently.
+    let t0 = t[0].min(first_in.h + 2 * l0.padding) as u64;
+    let i_strip = t0 * l0.k.min(first_in.w + 2 * l0.padding) as u64 * first_in.c as u64 * eb;
 
     let o_bytes = if iterative_tail {
         // §7: output rows stream into iterative global-pool + dense; only

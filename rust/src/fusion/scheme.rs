@@ -21,7 +21,7 @@ use crate::model::{LayerKind, ModelChain};
 use super::tiles::band_heights;
 
 /// Intra-block caching strategy for a fusion block.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
 pub enum CacheScheme {
     /// No fusion cache; recompute every overlap (DeFiNES "fully-recompute").
     FullyRecompute,

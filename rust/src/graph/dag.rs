@@ -1,6 +1,6 @@
 //! DAG construction from a [`ModelChain`] (paper §5.1–5.3).
 
-use crate::fusion::{BlockSpan, CacheScheme, EdgeCost};
+use crate::fusion::{span_edge_cost, CacheScheme, CostMemo, EdgeCost};
 use crate::model::ModelChain;
 
 /// One edge of the inverted dataflow graph: layers `[a, b)` executed as a
@@ -40,19 +40,47 @@ impl FusionDag {
         max_depth: Option<usize>,
         scheme: CacheScheme,
     ) -> Self {
+        Self::build_inner(model, max_depth, scheme, None)
+    }
+
+    /// [`Self::build_with_scheme`] drawing edge costs from a shared
+    /// per-model [`CostMemo`], so repeated builds over the same model
+    /// (budget sweeps, [`crate::optimizer::PlanBatch`] workers) stop
+    /// recomputing Eq. 5/11/12 from scratch. The memo must belong to
+    /// `model` — keys carry no model identity.
+    pub fn build_with_memo(
+        model: &ModelChain,
+        max_depth: Option<usize>,
+        scheme: CacheScheme,
+        memo: &CostMemo,
+    ) -> Self {
+        Self::build_inner(model, max_depth, scheme, Some(memo))
+    }
+
+    fn build_inner(
+        model: &ModelChain,
+        max_depth: Option<usize>,
+        scheme: CacheScheme,
+        memo: Option<&CostMemo>,
+    ) -> Self {
         let n_layers = model.num_layers();
         let n_nodes = n_layers + 1;
         let mut edges = Vec::new();
         let mut out = vec![Vec::new(); n_nodes];
+        let cost_of = |a: usize, b: usize, tail: bool| -> EdgeCost {
+            match memo {
+                Some(m) => m.edge_cost(model, a, b, tail, scheme),
+                None => span_edge_cost(model, a, b, tail, scheme),
+            }
+        };
 
         for a in 0..n_layers {
             // Single-layer edge always exists.
-            let single = BlockSpan::new(a, a + 1);
             out[a].push(edges.len());
             edges.push(DagEdge {
                 a,
                 b: a + 1,
-                cost: single.cost(model, false),
+                cost: cost_of(a, a + 1, false),
                 iterative_tail: false,
             });
 
@@ -67,12 +95,11 @@ impl FusionDag {
                     }
                     continue;
                 }
-                let span = BlockSpan::new(a, b);
                 out[a].push(edges.len());
                 edges.push(DagEdge {
                     a,
                     b,
-                    cost: span.cost_scheme(model, false, scheme),
+                    cost: cost_of(a, b, false),
                     iterative_tail: false,
                 });
                 // §7: when the rest of the chain is exactly
@@ -80,19 +107,11 @@ impl FusionDag {
                 // block's rows straight into the iterative tail — one edge
                 // jumping to the output node, never materializing v_b.
                 if model.iterative_tail_at(b) {
-                    let tail_macs: u64 =
-                        (b..n_layers).map(|i| model.layer_macs(i)).sum();
                     out[a].push(edges.len());
                     edges.push(DagEdge {
                         a,
                         b: n_layers,
-                        cost: EdgeCost {
-                            ram_bytes: crate::fusion::ram::block_peak_ram_scheme(
-                                model, a, b, true, scheme,
-                            ),
-                            macs: crate::fusion::scheme_block_macs(model, a, b, scheme)
-                                + tail_macs,
-                        },
+                        cost: cost_of(a, b, true),
                         iterative_tail: true,
                     });
                 }
@@ -196,6 +215,22 @@ mod tests {
         assert_eq!(dag.num_edges(), 6);
         let tail = dag.edges.iter().find(|e| e.iterative_tail).unwrap();
         assert_eq!((tail.a, tail.b), (0, 4));
+    }
+
+    #[test]
+    fn memo_build_is_identical_and_reuses_costs() {
+        use crate::fusion::CostMemo;
+        let m = conv_chain(5);
+        let memo = CostMemo::new();
+        let plain = FusionDag::build(&m, None);
+        let cached = FusionDag::build_with_memo(&m, None, CacheScheme::HCache, &memo);
+        let again = FusionDag::build_with_memo(&m, None, CacheScheme::HCache, &memo);
+        assert_eq!(plain.edges, cached.edges);
+        assert_eq!(cached.edges, again.edges);
+        // The second build hits the memo for every edge.
+        let (hits, misses) = memo.stats();
+        assert_eq!(misses, plain.num_edges() as u64);
+        assert_eq!(hits, plain.num_edges() as u64);
     }
 
     #[test]

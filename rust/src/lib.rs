@@ -1,16 +1,17 @@
 //! # msf-CNN — Patch-based Multi-Stage Fusion for TinyML
 //!
 //! Reproduction of Huang & Baccelli, *msf-CNN: Patch-based Multi-Stage
-//! Fusion with Convolutional Neural Networks for TinyML* (NeurIPS 2025),
-//! as a three-layer Rust + JAX + Pallas system:
+//! Fusion with Convolutional Neural Networks for TinyML*
+//! (arXiv 2505.11483, cs.LG 2025), as a three-layer Rust + JAX + Pallas
+//! system:
 //!
 //! * **L3 (this crate)** — the paper's contribution: CNN chain IR
 //!   ([`model`], [`zoo`]), H-cache fusion analytics ([`fusion`]), the
 //!   inverted dataflow DAG ([`graph`]), the P1/P2 constrained optimizers
 //!   and baselines ([`optimizer`]), a pure-Rust patch-based executor with
 //!   RAM tracking ([`ops`], [`memory`], [`exec`]), an MCU board/latency
-//!   simulator ([`mcu`]), the PJRT artifact runtime ([`runtime`]), an
-//!   async serving coordinator ([`coordinator`]), and the paper's
+//!   simulator ([`mcu`]), the artifact runtime ([`runtime`]), a
+//!   multi-model serving coordinator ([`coordinator`]), and the paper's
 //!   table/figure renderers ([`report`]).
 //! * **L2/L1 (build-time Python)** — `python/compile/`: a JAX model whose
 //!   hot ops are Pallas kernels (patch-based fused pyramid, iterative
@@ -30,6 +31,49 @@
 //!          min_ram.cost.peak_ram as f64 / 1000.0, min_ram.cost.overhead);
 //! let budget = minimize_macs(&dag, 64_000).unwrap(); // fit a 64 kB MCU
 //! println!("64 kB setting: {}", budget.describe());
+//! ```
+//!
+//! ## Scaling surfaces
+//!
+//! * **Batch planning** — [`optimizer::PlanBatch`] solves a whole
+//!   `(model, board, budget)` grid concurrently on a scoped worker pool
+//!   with shared per-model edge-cost memos ([`fusion::CostMemo`]),
+//!   bit-identical to the serial sweep:
+//!
+//! ```no_run
+//! use msf_cnn::optimizer::{PlanBatch, PlanJob, PlanObjective};
+//! use msf_cnn::zoo;
+//!
+//! let mut batch = PlanBatch::new();
+//! let idx = batch.add_model("kws", zoo::kws_cnn());
+//! batch.push(PlanJob::new(idx, PlanObjective::MinRam { f_max: f64::INFINITY }));
+//! batch.push(PlanJob::new(idx, PlanObjective::MinMacs { p_max_bytes: 16_000 }));
+//! for outcome in batch.solve() {
+//!     if let Some(s) = outcome.setting {
+//!         println!("{:?} -> {}", outcome.job.objective, s.describe());
+//!     }
+//! }
+//! ```
+//!
+//! * **Multi-model serving** — [`coordinator::MultiModelServer`] routes
+//!   requests across a registry of named plans (artifact- or
+//!   engine-backed), one executor thread + bounded queue per model, with
+//!   per-model metrics and a structured shutdown drain:
+//!
+//! ```no_run
+//! use msf_cnn::coordinator::{ModelSpec, MultiModelServer};
+//! use msf_cnn::graph::FusionDag;
+//! use msf_cnn::optimizer::minimize_ram_unconstrained;
+//! use msf_cnn::zoo;
+//!
+//! let model = zoo::quickstart();
+//! let plan = minimize_ram_unconstrained(&FusionDag::build(&model, None)).unwrap();
+//! let server = MultiModelServer::start(vec![
+//!     ModelSpec::engine("quickstart", model, plan),
+//! ]).unwrap();
+//! let logits = server.handle().infer("quickstart", vec![0.0; 32 * 32 * 3]).unwrap();
+//! # drop(logits);
+//! server.shutdown();
 //! ```
 
 pub mod coordinator;

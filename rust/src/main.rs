@@ -11,7 +11,8 @@
 //! (Arg parsing is hand-rolled — `clap` is unavailable in the offline
 //! vendor set; DESIGN.md §Substitutions.)
 
-use anyhow::{anyhow, bail, Result};
+use msf_cnn::util::error::Result;
+use msf_cnn::{anyhow, bail};
 
 use msf_cnn::exec::Engine;
 use msf_cnn::graph::FusionDag;

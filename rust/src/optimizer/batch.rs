@@ -1,0 +1,332 @@
+//! `PlanBatch`: parallel fusion planning over many `(model, board,
+//! budget)` configurations.
+//!
+//! The MCUNet-style co-design workload is a *sweep* — many models × many
+//! boards × many RAM/compute budgets — and every cell is an independent
+//! P1/P2 solve. `PlanBatch` runs the whole sweep on a
+//! [`std::thread::scope`] worker pool in two phases:
+//!
+//! 1. one DAG build per distinct model, backed by the batch's
+//!    *persistent* per-model [`CostMemo`]: within a solve the DAG is
+//!    shared by every job, and across solves (bench iterations, repeated
+//!    table generation, scheme sweeps on the same batch) rebuilds draw
+//!    every Eq. 5/11/12 edge cost from the memo instead of recomputing;
+//! 2. all jobs drained from a lock-free index queue, each solving against
+//!    the (immutable, shared) DAG of its model.
+//!
+//! Every job runs the *same* solver functions on the *same* DAG the
+//! serial path uses, so [`PlanBatch::solve`] is bit-identical to
+//! [`PlanBatch::solve_serial`] — asserted by `benches/plan_batch.rs` and
+//! the `plan_batch_parallel_matches_serial` property test.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::fusion::{CacheScheme, CostMemo};
+use crate::graph::FusionDag;
+use crate::mcu::Board;
+use crate::model::ModelChain;
+
+use super::{
+    heuristic_head_fusion, minimize_macs, minimize_ram, minimize_ram_unconstrained,
+    streamnet_single_block, vanilla_setting, FusionSetting,
+};
+
+/// What one configuration solves for.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PlanObjective {
+    /// P1: minimize peak RAM s.t. `F ≤ f_max` (`f64::INFINITY` ⇒ the
+    /// unconstrained minimax path).
+    MinRam { f_max: f64 },
+    /// P2: minimize MACs s.t. peak RAM `≤ p_max_bytes`.
+    MinMacs { p_max_bytes: u64 },
+    /// The un-fused baseline.
+    Vanilla,
+    /// MCUNetV2-style head-fusion heuristic baseline.
+    Heuristic,
+    /// StreamNet-style single-block baseline.
+    StreamNet,
+}
+
+/// One planning configuration: a model (by index into the batch's model
+/// list), an optional target board (reporting / board-derived budgets),
+/// and an objective.
+#[derive(Debug, Clone)]
+pub struct PlanJob {
+    pub model: usize,
+    pub board: Option<&'static Board>,
+    pub objective: PlanObjective,
+}
+
+impl PlanJob {
+    pub fn new(model: usize, objective: PlanObjective) -> Self {
+        Self { model, board: None, objective }
+    }
+
+    /// P2 job fitting `board`'s physical RAM (the deployment-advisor cell).
+    pub fn fit_board(model: usize, board: &'static Board) -> Self {
+        Self {
+            model,
+            board: Some(board),
+            objective: PlanObjective::MinMacs { p_max_bytes: board.ram_bytes() },
+        }
+    }
+}
+
+/// Result of one job, in the order the jobs were pushed.
+#[derive(Debug, Clone)]
+pub struct PlanOutcome {
+    pub job: PlanJob,
+    /// `None` is the paper's "(No Solution)" cell.
+    pub setting: Option<FusionSetting>,
+}
+
+/// A batch of planning configurations over a set of models.
+#[derive(Debug, Default)]
+pub struct PlanBatch {
+    models: Vec<(String, ModelChain)>,
+    /// One persistent edge-cost memo per model (same index), reused
+    /// across every [`Self::solve`] call on this batch.
+    memos: Vec<CostMemo>,
+    jobs: Vec<PlanJob>,
+    scheme: CacheScheme,
+    max_depth: Option<usize>,
+}
+
+impl PlanBatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Batch under a non-default cache scheme / fusion-depth cap
+    /// (§9 ablations).
+    pub fn with_scheme(scheme: CacheScheme, max_depth: Option<usize>) -> Self {
+        Self { scheme, max_depth, ..Self::default() }
+    }
+
+    /// Register a model; the returned index is what [`PlanJob::model`]
+    /// refers to.
+    pub fn add_model(&mut self, label: impl Into<String>, model: ModelChain) -> usize {
+        self.models.push((label.into(), model));
+        self.memos.push(CostMemo::new());
+        self.models.len() - 1
+    }
+
+    /// Queue one configuration. Panics if the model index is unknown.
+    pub fn push(&mut self, job: PlanJob) {
+        assert!(job.model < self.models.len(), "unknown model index {}", job.model);
+        self.jobs.push(job);
+    }
+
+    /// Convenience: queue the full paper constraint grid (baselines + P1
+    /// F-grid + P2 P-grid) for one model.
+    pub fn push_grid(&mut self, model: usize, f_grid: &[f64], p_grid_bytes: &[u64]) {
+        self.push(PlanJob::new(model, PlanObjective::Vanilla));
+        self.push(PlanJob::new(model, PlanObjective::Heuristic));
+        self.push(PlanJob::new(model, PlanObjective::StreamNet));
+        for &f_max in f_grid {
+            self.push(PlanJob::new(model, PlanObjective::MinRam { f_max }));
+        }
+        for &p in p_grid_bytes {
+            self.push(PlanJob::new(model, PlanObjective::MinMacs { p_max_bytes: p }));
+        }
+    }
+
+    pub fn models(&self) -> &[(String, ModelChain)] {
+        &self.models
+    }
+
+    /// Aggregate `(hits, misses)` of the per-model edge-cost memos — the
+    /// reuse the bench reports.
+    pub fn memo_stats(&self) -> (u64, u64) {
+        self.memos.iter().map(CostMemo::stats).fold((0, 0), |(h, m), (h2, m2)| (h + h2, m + m2))
+    }
+
+    pub fn jobs(&self) -> &[PlanJob] {
+        &self.jobs
+    }
+
+    /// Solve every job on a worker pool sized to the machine.
+    pub fn solve(&self) -> Vec<PlanOutcome> {
+        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        self.solve_with_threads(threads)
+    }
+
+    /// Solve every job on `threads` scoped workers. Outcomes preserve job
+    /// order and are bit-identical to [`Self::solve_serial`].
+    pub fn solve_with_threads(&self, threads: usize) -> Vec<PlanOutcome> {
+        let threads = threads.max(1);
+
+        // Phase 1: one DAG per distinct model, built in parallel from the
+        // batch's persistent memos (first solve populates them; repeated
+        // solves rebuild every edge from cache).
+        let dag_slots: Vec<Mutex<Option<FusionDag>>> =
+            self.models.iter().map(|_| Mutex::new(None)).collect();
+        let next_model = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..threads.min(self.models.len().max(1)) {
+                s.spawn(|| loop {
+                    let i = next_model.fetch_add(1, Ordering::Relaxed);
+                    if i >= self.models.len() {
+                        break;
+                    }
+                    let dag = FusionDag::build_with_memo(
+                        &self.models[i].1,
+                        self.max_depth,
+                        self.scheme,
+                        &self.memos[i],
+                    );
+                    *dag_slots[i].lock().unwrap() = Some(dag);
+                });
+            }
+        });
+        let dags: Vec<FusionDag> = dag_slots
+            .into_iter()
+            .map(|slot| slot.into_inner().unwrap().expect("dag built"))
+            .collect();
+
+        // Phase 2: drain the job queue.
+        let out_slots: Vec<Mutex<Option<PlanOutcome>>> =
+            self.jobs.iter().map(|_| Mutex::new(None)).collect();
+        let next_job = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..threads.min(self.jobs.len().max(1)) {
+                s.spawn(|| loop {
+                    let j = next_job.fetch_add(1, Ordering::Relaxed);
+                    if j >= self.jobs.len() {
+                        break;
+                    }
+                    let job = self.jobs[j].clone();
+                    let setting = solve_one(&dags[job.model], &job);
+                    *out_slots[j].lock().unwrap() = Some(PlanOutcome { job, setting });
+                });
+            }
+        });
+        out_slots
+            .into_iter()
+            .map(|slot| slot.into_inner().unwrap().expect("job solved"))
+            .collect()
+    }
+
+    /// The reference serial sweep: one thread, no memo — exactly what a
+    /// loop over `FusionDag::build` + `minimize_*` would do.
+    pub fn solve_serial(&self) -> Vec<PlanOutcome> {
+        let dags: Vec<FusionDag> = self
+            .models
+            .iter()
+            .map(|(_, m)| FusionDag::build_with_scheme(m, self.max_depth, self.scheme))
+            .collect();
+        self.jobs
+            .iter()
+            .map(|job| PlanOutcome { job: job.clone(), setting: solve_one(&dags[job.model], job) })
+            .collect()
+    }
+}
+
+fn solve_one(dag: &FusionDag, job: &PlanJob) -> Option<FusionSetting> {
+    match job.objective {
+        PlanObjective::MinRam { f_max } => {
+            if f_max.is_infinite() {
+                minimize_ram_unconstrained(dag)
+            } else {
+                minimize_ram(dag, f_max)
+            }
+        }
+        PlanObjective::MinMacs { p_max_bytes } => minimize_macs(dag, p_max_bytes),
+        PlanObjective::Vanilla => Some(vanilla_setting(dag)),
+        PlanObjective::Heuristic => Some(heuristic_head_fusion(dag)),
+        PlanObjective::StreamNet => streamnet_single_block(dag, None),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::zoo;
+
+    fn zoo_batch() -> PlanBatch {
+        let mut batch = PlanBatch::new();
+        for name in ["quickstart", "tiny", "kws", "lenet"] {
+            let idx = batch.add_model(name, zoo::by_name(name).unwrap());
+            batch.push_grid(
+                idx,
+                &[1.1, 1.3, f64::INFINITY],
+                &[4_000, 16_000, 64_000],
+            );
+        }
+        batch
+    }
+
+    fn assert_same(a: &[PlanOutcome], b: &[PlanOutcome]) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.job.model, y.job.model);
+            assert_eq!(x.job.objective, y.job.objective);
+            match (&x.setting, &y.setting) {
+                (None, None) => {}
+                (Some(s), Some(t)) => {
+                    assert_eq!(s.spans, t.spans, "model {} {:?}", x.job.model, x.job.objective);
+                    assert_eq!(s.cost.peak_ram, t.cost.peak_ram);
+                    assert_eq!(s.cost.macs, t.cost.macs);
+                }
+                (s, t) => panic!("feasibility mismatch: {s:?} vs {t:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial_bit_for_bit() {
+        let batch = zoo_batch();
+        let serial = batch.solve_serial();
+        for threads in [1, 2, 8] {
+            assert_same(&serial, &batch.solve_with_threads(threads));
+        }
+        assert_same(&serial, &batch.solve());
+    }
+
+    #[test]
+    fn outcomes_preserve_job_order() {
+        let batch = zoo_batch();
+        let out = batch.solve();
+        assert_eq!(out.len(), batch.jobs().len());
+        for (o, j) in out.iter().zip(batch.jobs()) {
+            assert_eq!(o.job.model, j.model);
+            assert_eq!(o.job.objective, j.objective);
+        }
+    }
+
+    #[test]
+    fn repeated_solves_hit_the_memo() {
+        let batch = zoo_batch();
+        let first = batch.solve();
+        let (hits_after_first, misses) = batch.memo_stats();
+        assert!(misses > 0, "first solve populates the memos");
+        let second = batch.solve();
+        let (hits_after_second, misses_after_second) = batch.memo_stats();
+        assert_eq!(misses_after_second, misses, "second solve recomputes nothing");
+        assert!(
+            hits_after_second >= hits_after_first + misses,
+            "second solve draws every edge from the memo"
+        );
+        assert_same(&first, &second);
+    }
+
+    #[test]
+    fn fit_board_jobs_respect_board_ram() {
+        let board = crate::mcu::board_by_name("hifive1b").unwrap();
+        let mut batch = PlanBatch::new();
+        let idx = batch.add_model("quickstart", zoo::quickstart());
+        batch.push(PlanJob::fit_board(idx, board));
+        let out = batch.solve();
+        let s = out[0].setting.as_ref().expect("quickstart fits 16 kB");
+        assert!(s.cost.peak_ram <= board.ram_bytes());
+        assert_eq!(out[0].job.board.unwrap().name, "hifive1b");
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown model index")]
+    fn pushing_unknown_model_panics() {
+        let mut batch = PlanBatch::new();
+        batch.push(PlanJob::new(3, PlanObjective::Vanilla));
+    }
+}

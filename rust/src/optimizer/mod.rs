@@ -8,14 +8,20 @@
 //! * [`baselines`] — vanilla, MCUNetV2-style head-fusion heuristic,
 //!   StreamNet-style single-block brute force.
 //! * [`exhaustive`] — exact enumeration (tests/property-checks only).
+//! * [`batch`] — [`PlanBatch`]: the P1/P2 sweep over many
+//!   `(model, board, budget)` configurations, parallelized on a scoped
+//!   worker pool with shared per-model edge-cost memos; bit-identical to
+//!   the serial path.
 
 mod baselines;
+mod batch;
 mod exhaustive;
 mod p1;
 mod p2;
 mod setting;
 
 pub use baselines::{heuristic_head_fusion, streamnet_single_block, vanilla_setting};
+pub use batch::{PlanBatch, PlanJob, PlanObjective, PlanOutcome};
 pub use exhaustive::{exhaustive_p1, exhaustive_p2};
 pub use p1::{minimize_ram, minimize_ram_unconstrained};
 pub use p2::{minimize_macs, minimize_macs_unconstrained};

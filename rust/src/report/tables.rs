@@ -1,15 +1,59 @@
 //! Paper tables 1, 2, 3, 5.
+//!
+//! The constraint-grid tables (1 and 5) are generated through
+//! [`PlanBatch`]: the whole model × budget grid is one parallel sweep
+//! (bit-identical to the serial solves the rows used to make one by one).
 
 use crate::graph::FusionDag;
 use crate::mcu::{estimate_latency_ms, Board, BOARDS};
 use crate::model::ModelChain;
 use crate::optimizer::{
-    heuristic_head_fusion, minimize_macs, minimize_ram, minimize_ram_unconstrained,
-    streamnet_single_block, vanilla_setting, FusionSetting,
+    heuristic_head_fusion, minimize_ram_unconstrained, streamnet_single_block,
+    vanilla_setting, FusionSetting, PlanBatch, PlanJob, PlanObjective, PlanOutcome,
 };
 use crate::zoo;
 
 use super::{kb, render, F_MAX_GRID, P_MAX_GRID_KB};
+
+/// Row specs (section, constraint label, objective) for a grid table, and
+/// the row-major `PlanBatch` outcomes for `models × specs`.
+fn solve_grid(
+    models: &[(&'static str, ModelChain)],
+    specs: &[(&'static str, String, PlanObjective)],
+) -> Vec<PlanOutcome> {
+    let mut batch = PlanBatch::new();
+    for (label, m) in models {
+        batch.add_model(*label, m.clone());
+    }
+    for (_, _, objective) in specs {
+        for mi in 0..models.len() {
+            batch.push(PlanJob::new(mi, *objective));
+        }
+    }
+    batch.solve()
+}
+
+fn grid_specs(with_streamnet: bool) -> Vec<(&'static str, String, PlanObjective)> {
+    let mut specs: Vec<(&'static str, String, PlanObjective)> = vec![
+        ("Vanilla", "-".into(), PlanObjective::Vanilla),
+        ("Heuristic", "-".into(), PlanObjective::Heuristic),
+    ];
+    if with_streamnet {
+        specs.push(("StreamNet", "-".into(), PlanObjective::StreamNet));
+    }
+    for &f_max in F_MAX_GRID {
+        let label = if f_max.is_infinite() { "Inf".into() } else { format!("{f_max}") };
+        specs.push(("P1: F_max", label, PlanObjective::MinRam { f_max }));
+    }
+    for &p_kb in P_MAX_GRID_KB {
+        specs.push((
+            "P2: P_max",
+            format!("{p_kb} kB"),
+            PlanObjective::MinMacs { p_max_bytes: p_kb * 1000 },
+        ));
+    }
+    specs
+}
 
 /// One row of Table 1 (per model column pair).
 #[derive(Debug, Clone)]
@@ -20,52 +64,30 @@ pub struct Table1Row {
     pub cells: Vec<Option<(f64, f64)>>,
 }
 
-/// Table 1: analytical optimizer results under the constraint grids.
+/// Table 1: analytical optimizer results under the constraint grids, via
+/// one parallel [`PlanBatch`] sweep.
 pub fn table1() -> (Vec<Table1Row>, String) {
     let models = zoo::paper_models();
-    let dags: Vec<FusionDag> = models.iter().map(|(_, m)| FusionDag::build(m, None)).collect();
-    let mut rows = Vec::new();
+    let specs = grid_specs(false);
+    let outcomes = solve_grid(&models, &specs);
+    let n = models.len();
 
-    let cell = |s: &FusionSetting| Some((kb(s.cost.peak_ram), s.cost.overhead));
-
-    rows.push(Table1Row {
-        section: "Vanilla",
-        constraint: "-".into(),
-        cells: dags.iter().map(|d| cell(&vanilla_setting(d))).collect(),
-    });
-    rows.push(Table1Row {
-        section: "Heuristic",
-        constraint: "-".into(),
-        cells: dags.iter().map(|d| cell(&heuristic_head_fusion(d))).collect(),
-    });
-    for &f_max in F_MAX_GRID {
-        let label = if f_max.is_infinite() { "Inf".into() } else { format!("{f_max}") };
-        rows.push(Table1Row {
-            section: "P1: F_max",
-            constraint: label,
-            cells: dags
-                .iter()
-                .map(|d| {
-                    let s = if f_max.is_infinite() {
-                        minimize_ram_unconstrained(d)
-                    } else {
-                        minimize_ram(d, f_max)
-                    };
-                    s.as_ref().and_then(|s| cell(s))
+    let rows: Vec<Table1Row> = specs
+        .iter()
+        .enumerate()
+        .map(|(ri, (section, constraint, _))| Table1Row {
+            section: *section,
+            constraint: constraint.clone(),
+            cells: (0..n)
+                .map(|mi| {
+                    outcomes[ri * n + mi]
+                        .setting
+                        .as_ref()
+                        .map(|s| (kb(s.cost.peak_ram), s.cost.overhead))
                 })
                 .collect(),
-        });
-    }
-    for &p_kb in P_MAX_GRID_KB {
-        rows.push(Table1Row {
-            section: "P2: P_max",
-            constraint: format!("{p_kb} kB"),
-            cells: dags
-                .iter()
-                .map(|d| minimize_macs(d, p_kb * 1000).as_ref().and_then(|s| cell(s)))
-                .collect(),
-        });
-    }
+        })
+        .collect();
 
     let mut grid = Vec::new();
     for r in &rows {
@@ -216,66 +238,41 @@ pub struct Table5Row {
     pub cells: Vec<Option<(f64, f64)>>,
 }
 
-/// Table 5: optimal settings on nucleo-f767zi (RAM kB, latency ms).
+/// Table 5: optimal settings on nucleo-f767zi (RAM kB, latency ms), via
+/// one parallel [`PlanBatch`] sweep.
 pub fn table5() -> (Vec<Table5Row>, String) {
     let board = crate::mcu::board_by_name("nucleo-f767zi").unwrap();
     let models = zoo::paper_models();
-    let dags: Vec<(&ModelChain, FusionDag)> = models
-        .iter()
-        .map(|(_, m)| (m, FusionDag::build(m, None)))
-        .collect();
+    let specs = grid_specs(true);
+    let outcomes = solve_grid(&models, &specs);
+    let n = models.len();
 
     let eval = |m: &ModelChain, s: &FusionSetting| -> (f64, f64) {
         (kb(s.cost.peak_ram), estimate_latency_ms(m, s, board).total_ms)
     };
 
-    let mut rows = Vec::new();
-    rows.push(Table5Row {
-        section: "Vanilla",
-        constraint: "-".into(),
-        cells: dags.iter().map(|(m, d)| Some(eval(m, &vanilla_setting(d)))).collect(),
-    });
-    rows.push(Table5Row {
-        section: "MCUNetV2",
-        constraint: "-".into(),
-        cells: dags.iter().map(|(m, d)| Some(eval(m, &heuristic_head_fusion(d)))).collect(),
-    });
-    rows.push(Table5Row {
-        section: "StreamNet",
-        constraint: "-".into(),
-        cells: dags
-            .iter()
-            .map(|(m, d)| streamnet_single_block(d, None).map(|s| eval(m, &s)))
-            .collect(),
-    });
-    for &f_max in F_MAX_GRID {
-        let label = if f_max.is_infinite() { "Inf".into() } else { format!("{f_max}") };
-        rows.push(Table5Row {
-            section: "P1",
-            constraint: label,
-            cells: dags
-                .iter()
-                .map(|(m, d)| {
-                    let s = if f_max.is_infinite() {
-                        minimize_ram_unconstrained(d)
-                    } else {
-                        minimize_ram(d, f_max)
-                    };
-                    s.map(|s| eval(m, &s))
+    let rows: Vec<Table5Row> = specs
+        .iter()
+        .enumerate()
+        .map(|(ri, (section, constraint, _))| Table5Row {
+            // Table 5 uses the paper's method names for its sections.
+            section: match *section {
+                "Heuristic" => "MCUNetV2",
+                "P1: F_max" => "P1",
+                "P2: P_max" => "P2",
+                other => other,
+            },
+            constraint: constraint.clone(),
+            cells: (0..n)
+                .map(|mi| {
+                    outcomes[ri * n + mi]
+                        .setting
+                        .as_ref()
+                        .map(|s| eval(&models[mi].1, s))
                 })
                 .collect(),
-        });
-    }
-    for &p_kb in P_MAX_GRID_KB {
-        rows.push(Table5Row {
-            section: "P2",
-            constraint: format!("{p_kb} kB"),
-            cells: dags
-                .iter()
-                .map(|(m, d)| minimize_macs(d, p_kb * 1000).map(|s| eval(m, &s)))
-                .collect(),
-        });
-    }
+        })
+        .collect();
 
     let grid: Vec<Vec<String>> = rows
         .iter()

@@ -4,8 +4,8 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
-
+use crate::anyhow;
+use crate::util::error::{Context, Result};
 use crate::util::json::Json;
 
 /// Shape+dtype of one tensor as recorded by the AOT step.

@@ -1,70 +1,59 @@
-//! PJRT artifact runtime: loads the HLO-text artifacts produced by
-//! `python/compile/aot.py` and executes them on the XLA CPU client.
+//! Artifact runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes their entry points.
 //!
-//! HLO *text* is the interchange format (not serialized protos): jax ≥ 0.5
-//! emits 64-bit instruction ids which xla_extension 0.5.1 rejects; the
-//! text parser reassigns ids. See `/opt/xla-example/README.md` and
-//! `python/compile/aot.py`.
+//! The native PJRT/XLA bindings are unavailable in the offline vendor set
+//! (DESIGN.md §Substitutions), so this runtime executes each manifest
+//! entry with the in-tree reference interpreter instead: the same
+//! `weights.json` the AOT step bakes into the artifacts is loaded into
+//! the pure-Rust executor ([`crate::exec::Engine`]), whose numerics are
+//! cross-checked against the XLA outputs in
+//! `rust/tests/artifacts_roundtrip.rs` whenever a native build exists.
+//! The API (open → load → run_f32, manifest-driven shape checks) is the
+//! PJRT surface, so swapping the native client back in is a drop-in.
 //!
-//! Python never runs at request time: `make artifacts` is build-time only,
-//! and this module is the entire model-execution path of the serving
-//! coordinator.
+//! Python never runs at request time: `make artifacts` is build-time
+//! only, and this module is the entire model-execution path of the
+//! serving coordinator.
 
 mod artifacts;
 
 pub use artifacts::{ArtifactManifest, EntrySpec, TensorSpec};
 
-use std::collections::HashMap;
+use std::collections::HashSet;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, Context, Result};
+use crate::exec::Engine;
+use crate::graph::FusionDag;
+use crate::ops::{conv2d, dense, FusedBlock, Tensor};
+use crate::optimizer::{minimize_ram_unconstrained, vanilla_setting, FusionSetting};
+use crate::util::error::{Context, Result};
+use crate::{anyhow, bail};
 
-/// A compiled artifact ready to execute.
-pub struct LoadedModel {
-    pub name: String,
-    pub spec: EntrySpec,
-    exe: xla::PjRtLoadedExecutable,
-}
-
-impl LoadedModel {
-    /// Execute with a single f32 input tensor (flattened, row-major).
-    /// Returns the flattened f32 outputs (artifacts are lowered with
-    /// `return_tuple=True`, so the single result is a 1-tuple).
-    pub fn run_f32(&self, input: &[f32]) -> Result<Vec<f32>> {
-        let spec = &self.spec.inputs[0];
-        let expect: usize = spec.shape.iter().product::<usize>();
-        if input.len() != expect {
-            return Err(anyhow!(
-                "input length {} != expected {} for {:?}",
-                input.len(),
-                expect,
-                spec.shape
-            ));
-        }
-        let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
-        let lit = xla::Literal::vec1(input).reshape(&dims)?;
-        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<f32>()?)
-    }
-}
-
-/// The artifact runtime: one PJRT CPU client, many compiled entry points.
+/// The artifact runtime: one manifest, many executable entry points.
 pub struct Runtime {
-    client: xla::PjRtClient,
     dir: PathBuf,
     manifest: ArtifactManifest,
-    loaded: HashMap<String, LoadedModel>,
+    /// Quickstart engine with the artifact weights (lazily loaded).
+    engine: Option<Engine>,
+    vanilla: Option<FusionSetting>,
+    fused: Option<FusionSetting>,
+    loaded: HashSet<String>,
 }
 
 impl Runtime {
-    /// Open `artifacts/` (reads `manifest.json`; compiles lazily).
+    /// Open `artifacts/` (reads `manifest.json`; loads weights lazily).
     pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         let manifest = ArtifactManifest::load(dir.join("manifest.json"))
             .context("artifacts not built? run `make artifacts`")?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Self { client, dir, manifest, loaded: HashMap::new() })
+        Ok(Self {
+            dir,
+            manifest,
+            engine: None,
+            vanilla: None,
+            fused: None,
+            loaded: HashSet::new(),
+        })
     }
 
     pub fn manifest(&self) -> &ArtifactManifest {
@@ -76,36 +65,146 @@ impl Runtime {
         self.manifest.entries.keys().map(|s| s.as_str()).collect()
     }
 
-    /// Load + compile an entry point (cached).
-    pub fn load(&mut self, name: &str) -> Result<&LoadedModel> {
-        if !self.loaded.contains_key(name) {
-            let spec = self
-                .manifest
-                .entries
-                .get(name)
-                .ok_or_else(|| anyhow!("unknown artifact entry '{name}'"))?
-                .clone();
-            let path = self.dir.join(&spec.file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-            )
-            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compile '{name}': {e:?}"))?;
-            self.loaded.insert(
-                name.to_string(),
-                LoadedModel { name: name.to_string(), spec, exe },
-            );
+    fn ensure_engine(&mut self) -> Result<&Engine> {
+        if self.engine.is_none() {
+            let engine = Engine::quickstart_from_artifacts(&self.dir)?;
+            let dag = FusionDag::build(engine.model(), None);
+            self.vanilla = Some(vanilla_setting(&dag));
+            self.fused =
+                Some(minimize_ram_unconstrained(&dag).ok_or_else(|| anyhow!("no fused plan"))?);
+            self.engine = Some(engine);
         }
-        Ok(&self.loaded[name])
+        Ok(self.engine.as_ref().unwrap())
     }
 
-    /// Load + run in one call.
+    /// Load an entry point: validates it exists in the manifest and has an
+    /// offline interpretation, and loads the artifact weights (cached).
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.loaded.contains(name) {
+            return Ok(());
+        }
+        if !self.manifest.entries.contains_key(name) {
+            bail!("unknown artifact entry '{name}'");
+        }
+        match name {
+            "model_vanilla" | "model_fused" | "conv2d" | "fused_block" | "iter_dense" => {
+                self.ensure_engine().map_err(|e| e.wrap(format!("load '{name}'")))?;
+            }
+            "iter_pool" => {}
+            other => bail!(
+                "entry '{other}' has no offline interpretation (native PJRT unavailable)"
+            ),
+        }
+        self.loaded.insert(name.to_string());
+        Ok(())
+    }
+
+    /// Execute an entry with a single flattened f32 input tensor; returns
+    /// the flattened f32 output. Input length is validated against the
+    /// manifest's recorded shape.
     pub fn run_f32(&mut self, name: &str, input: &[f32]) -> Result<Vec<f32>> {
         self.load(name)?;
-        self.loaded[name].run_f32(input)
+        let spec = &self.manifest.entries[name];
+        let expect = spec.inputs[0].elems();
+        if input.len() != expect {
+            bail!(
+                "input length {} != expected {} for {:?}",
+                input.len(),
+                expect,
+                spec.inputs[0].shape
+            );
+        }
+
+        match name {
+            "model_vanilla" | "model_fused" => {
+                let setting = if name == "model_fused" {
+                    self.fused.clone().unwrap()
+                } else {
+                    self.vanilla.clone().unwrap()
+                };
+                let engine = self.engine.as_ref().unwrap();
+                let s = engine.model().shapes[0];
+                let t = Tensor::from_data(
+                    s.h as usize,
+                    s.w as usize,
+                    s.c as usize,
+                    input.to_vec(),
+                );
+                let mut arena = crate::memory::Arena::unbounded();
+                let r = engine.run(&setting, &t, &mut arena)?;
+                Ok(r.output)
+            }
+            "conv2d" => {
+                let engine = self.engine.as_ref().unwrap();
+                let model = engine.model();
+                let l = &model.layers[0];
+                let p = &engine.params()[0];
+                let s = model.shapes[0];
+                let t = Tensor::from_data(
+                    s.h as usize,
+                    s.w as usize,
+                    s.c as usize,
+                    input.to_vec(),
+                );
+                let out = conv2d(
+                    &t,
+                    &p.weights,
+                    &p.bias,
+                    l.k as usize,
+                    l.stride as usize,
+                    l.padding as usize,
+                    l.cout as usize,
+                    l.act,
+                );
+                Ok(out.data)
+            }
+            "fused_block" => {
+                let engine = self.engine.as_ref().unwrap();
+                let model = engine.model();
+                // The artifact's fused pyramid spans the streamable conv
+                // prefix of the quickstart chain.
+                let conv_end = model
+                    .layers
+                    .iter()
+                    .position(|l| !l.kind.streamable())
+                    .unwrap_or(model.num_layers());
+                let s = model.shapes[0];
+                let t = Tensor::from_data(
+                    s.h as usize,
+                    s.w as usize,
+                    s.c as usize,
+                    input.to_vec(),
+                );
+                let block = FusedBlock::new(model, 0, conv_end, engine.params());
+                let (out, _stats) = block.run(&t);
+                Ok(out.data)
+            }
+            "iter_pool" => {
+                // Global average pool over the manifest-declared HWC map.
+                let shape = &spec.inputs[0].shape;
+                if shape.len() != 3 {
+                    bail!("iter_pool expects an HWC input, got {shape:?}");
+                }
+                let (h, w, c) = (shape[0], shape[1], shape[2]);
+                let mut acc = vec![0.0f32; c];
+                for (i, v) in input.iter().enumerate() {
+                    acc[i % c] += v;
+                }
+                let n = (h * w) as f32;
+                for a in acc.iter_mut() {
+                    *a /= n;
+                }
+                Ok(acc)
+            }
+            "iter_dense" => {
+                let engine = self.engine.as_ref().unwrap();
+                let model = engine.model();
+                let li = model.num_layers() - 1;
+                let l = &model.layers[li];
+                let p = &engine.params()[li];
+                Ok(dense(input, &p.weights, &p.bias, l.cout as usize))
+            }
+            other => bail!("entry '{other}' has no offline interpretation"),
+        }
     }
 }

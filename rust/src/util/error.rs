@@ -1,0 +1,164 @@
+//! Minimal error handling replacing `anyhow` (unavailable in the offline
+//! vendor set — DESIGN.md §Substitutions).
+//!
+//! Mirrors the subset of the `anyhow` API this crate uses: an opaque
+//! string-backed [`Error`], the [`crate::anyhow!`] / [`crate::bail!`]
+//! macros, a [`Context`] extension trait, and a defaulted [`Result`]
+//! alias. Context frames prepend to the message the way `anyhow`'s
+//! `{:#}` formatting renders its chain, so messages like
+//! `"reading manifest: No such file"` come out identically.
+
+use std::fmt;
+
+/// Opaque error: a message plus outer context frames.
+pub struct Error {
+    msg: String,
+    context: Vec<String>,
+}
+
+impl Error {
+    /// Build from anything printable (the `anyhow::Error::msg` shape).
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Self { msg: m.to_string(), context: Vec::new() }
+    }
+
+    /// Wrap with an outer context frame (printed before the cause).
+    pub fn wrap(mut self, c: impl fmt::Display) -> Self {
+        self.context.push(c.to_string());
+        self
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for c in self.context.iter().rev() {
+            write!(f, "{c}: ")?;
+        }
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    // Debug = Display: anyhow prints the context chain either way.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(self, f)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::msg(e)
+    }
+}
+
+impl From<std::num::ParseIntError> for Error {
+    fn from(e: std::num::ParseIntError) -> Self {
+        Error::msg(e)
+    }
+}
+
+impl From<std::num::ParseFloatError> for Error {
+    fn from(e: std::num::ParseFloatError) -> Self {
+        Error::msg(e)
+    }
+}
+
+impl From<crate::memory::OomError> for Error {
+    fn from(e: crate::memory::OomError) -> Self {
+        Error::msg(e)
+    }
+}
+
+impl From<String> for Error {
+    fn from(s: String) -> Self {
+        Error::msg(s)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Self {
+        Error::msg(s)
+    }
+}
+
+/// `Result` defaulted to [`Error`], like `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow::Context` stand-in: attach context to any displayable error.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).wrap(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Format an [`Error`] message, like `anyhow::anyhow!`.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => { $crate::util::error::Error::msg(format!($($arg)*)) };
+}
+
+/// Early-return with a formatted [`Error`], like `anyhow::bail!`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err($crate::anyhow!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prints_context_outermost_first() {
+        let e = Error::msg("root cause").wrap("inner").wrap("outer");
+        assert_eq!(e.to_string(), "outer: inner: root cause");
+        assert_eq!(format!("{e:#}"), "outer: inner: root cause");
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = crate::anyhow!("bad value {}", 42);
+        assert_eq!(e.to_string(), "bad value 42");
+        fn fails() -> Result<()> {
+            crate::bail!("nope: {}", "reason");
+        }
+        assert_eq!(fails().unwrap_err().to_string(), "nope: reason");
+    }
+
+    #[test]
+    fn context_trait_on_results_and_options() {
+        let r: std::result::Result<(), &str> = Err("io broke");
+        assert_eq!(r.context("reading file").unwrap_err().to_string(), "reading file: io broke");
+        let o: Option<u32> = None;
+        assert_eq!(o.with_context(|| "missing key").unwrap_err().to_string(), "missing key");
+    }
+
+    #[test]
+    fn std_conversions() {
+        fn parse(s: &str) -> Result<u64> {
+            Ok(s.parse::<u64>()?)
+        }
+        assert!(parse("12").is_ok());
+        assert!(parse("x").is_err());
+    }
+}

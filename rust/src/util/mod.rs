@@ -1,8 +1,9 @@
 //! In-tree utilities replacing crates unavailable in the offline build
 //! (DESIGN.md §Substitutions): a minimal JSON parser (↔ `serde_json`),
-//! a micro-benchmark harness (↔ `criterion`), and a seeded property-test
-//! runner (↔ `proptest`).
+//! a micro-benchmark harness (↔ `criterion`), a seeded property-test
+//! runner (↔ `proptest`), and an opaque error type (↔ `anyhow`).
 
 pub mod bench;
+pub mod error;
 pub mod json;
 pub mod prop;

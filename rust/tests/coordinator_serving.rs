@@ -1,14 +1,230 @@
-//! End-to-end serving integration: the coordinator driving the PJRT
-//! runtime on the AOT artifacts — queue, batching, backpressure, metrics.
-//! Skips when artifacts are absent.
+//! Serving integration: the multi-model coordinator driving engine-backed
+//! plans (always) and the AOT artifact runtime (when `artifacts/` has
+//! been built) — registry routing, per-model queues/micro-batches,
+//! backpressure, structured shutdown drain, and per-model metrics.
 
-use msf_cnn::coordinator::{InferenceServer, ServerConfig};
+use msf_cnn::coordinator::{
+    InferenceServer, ModelSpec, MultiModelServer, ServeError, ServerConfig,
+};
+use msf_cnn::graph::FusionDag;
+use msf_cnn::model::ModelChain;
 use msf_cnn::ops::ParamGen;
+use msf_cnn::optimizer::minimize_ram_unconstrained;
+use msf_cnn::zoo;
 
 fn artifacts_dir() -> Option<std::path::PathBuf> {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     dir.join("manifest.json").exists().then_some(dir)
 }
+
+/// Engine-backed spec: the model's min-RAM plan run by the pure-Rust
+/// executor — no artifacts required.
+fn engine_spec(id: &str, model: ModelChain) -> ModelSpec {
+    let dag = FusionDag::build(&model, None);
+    let setting = minimize_ram_unconstrained(&dag).expect("min-RAM plan");
+    ModelSpec::engine(id, model, setting)
+}
+
+fn input_for(model: &ModelChain, seed: u64) -> Vec<f32> {
+    ParamGen::new(seed).fill(model.shapes[0].elems() as usize, 2.0)
+}
+
+// ---------------------------------------------------------------- multi-model
+
+#[test]
+fn serves_two_models_concurrently_with_per_model_metrics() {
+    let quickstart = zoo::quickstart();
+    let kws = zoo::kws_cnn();
+    let server = MultiModelServer::start(vec![
+        engine_spec("quickstart", quickstart.clone()),
+        engine_spec("kws", kws.clone()),
+    ])
+    .unwrap();
+    let handle = server.handle();
+    assert_eq!(handle.model_ids(), vec!["kws".to_string(), "quickstart".to_string()]);
+
+    // 2 client threads per model, 8 blocking requests each, all in flight
+    // against both executors at once.
+    let mut joins = Vec::new();
+    for (id, model, out_len) in
+        [("quickstart", &quickstart, 10usize), ("kws", &kws, 12usize)]
+    {
+        for t in 0..2u64 {
+            let h = server.handle();
+            let model = model.clone();
+            joins.push(std::thread::spawn(move || {
+                for r in 0..8u64 {
+                    let logits = h.infer(id, input_for(&model, 100 * t + r)).unwrap();
+                    assert_eq!(logits.len(), out_len, "{id}");
+                    assert!(logits.iter().all(|v| v.is_finite()));
+                }
+            }));
+        }
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+
+    let metrics = handle.metrics();
+    for id in ["quickstart", "kws"] {
+        let m = metrics.model(id).unwrap_or_else(|| panic!("metrics for {id}"));
+        assert_eq!(m.completed(), 16, "{id}");
+        assert!(m.batches() >= 1, "{id}");
+        assert_eq!(m.queue_depth(), 0, "{id}");
+        assert_eq!(m.rejections(), 0, "{id}");
+        assert_eq!(m.shutdown_drops(), 0, "{id}");
+        let stats = m.stats().unwrap();
+        assert_eq!(stats.count, 16);
+        assert!(stats.p50_us > 0.0);
+    }
+    assert_eq!(metrics.stats().unwrap().count, 32);
+    drop(handle);
+    server.shutdown();
+}
+
+#[test]
+fn engine_backed_model_replies_match_direct_execution() {
+    use msf_cnn::exec::Engine;
+    use msf_cnn::memory::Arena;
+    use msf_cnn::ops::Tensor;
+
+    let model = zoo::tiny_cnn();
+    let dag = FusionDag::build(&model, None);
+    let setting = minimize_ram_unconstrained(&dag).unwrap();
+    let server = MultiModelServer::start(vec![ModelSpec::engine(
+        "tiny",
+        model.clone(),
+        setting.clone(),
+    )])
+    .unwrap();
+    let h = server.handle();
+
+    let x = input_for(&model, 9);
+    let served = h.infer("tiny", x.clone()).unwrap();
+
+    let engine = Engine::new(model.clone());
+    let s0 = model.shapes[0];
+    let t = Tensor::from_data(s0.h as usize, s0.w as usize, s0.c as usize, x);
+    let mut arena = Arena::unbounded();
+    let direct = engine.run(&setting, &t, &mut arena).unwrap();
+    assert_eq!(served, direct.output, "server must run the registered plan verbatim");
+
+    drop(h);
+    server.shutdown();
+}
+
+#[test]
+fn unknown_model_and_bad_input_are_structured() {
+    let model = zoo::tiny_cnn();
+    let server = MultiModelServer::start(vec![engine_spec("tiny", model)]).unwrap();
+    let h = server.handle();
+
+    // Registered models are visible in metrics before any traffic…
+    let m0 = h.metrics();
+    assert_eq!(m0.model("tiny").unwrap().completed(), 0);
+    // …and unregistered ids never pollute the registry.
+    let err = h.submit("resnet-900", vec![0.0; 4]).unwrap_err();
+    assert!(h.metrics().model("resnet-900").is_none());
+    assert_eq!(err, ServeError::UnknownModel { model_id: "resnet-900".into() });
+
+    let err = h.infer("tiny", vec![0.0; 7]).unwrap_err();
+    match &err {
+        ServeError::Failed { model_id, detail } => {
+            assert_eq!(model_id, "tiny");
+            assert!(detail.contains("input length"), "{detail}");
+        }
+        other => panic!("expected Failed, got {other:?}"),
+    }
+    drop(h);
+    server.shutdown();
+}
+
+#[test]
+fn shutdown_drains_queue_with_structured_replies() {
+    // A heavy model and a serial (batch_max = 1) executor: shut down with
+    // the queue still loaded and require every queued request to get an
+    // explicit ShuttingDown reply, counted in the per-model metrics —
+    // not the old opaque "server dropped request".
+    let model = zoo::mcunet_vww5();
+    let spec = engine_spec("vww5", model.clone()).with_queue(64, 1);
+    let server = MultiModelServer::start(vec![spec]).unwrap();
+    let handle = server.handle();
+
+    let total = 24usize;
+    let mut pendings = Vec::new();
+    for i in 0..total {
+        pendings.push(handle.submit("vww5", input_for(&model, i as u64)).unwrap());
+    }
+    server.shutdown();
+
+    let mut ok = 0usize;
+    let mut drained = 0usize;
+    for p in pendings {
+        match p.wait() {
+            Ok(out) => {
+                assert!(out.iter().all(|v| v.is_finite()));
+                ok += 1;
+            }
+            Err(ServeError::ShuttingDown { model_id }) => {
+                assert_eq!(model_id, "vww5");
+                drained += 1;
+            }
+            Err(other) => panic!("unexpected reply: {other}"),
+        }
+    }
+    assert_eq!(ok + drained, total);
+    assert!(drained >= 1, "shutdown should have found queued requests");
+
+    let m = handle.metrics();
+    let mm = m.model("vww5").unwrap();
+    assert_eq!(mm.shutdown_drops(), drained);
+    assert_eq!(mm.completed(), ok);
+    assert_eq!(mm.queue_depth(), 0, "drain must account every queued slot");
+
+    // Post-shutdown submits fail fast with the structured error.
+    let err = handle.submit("vww5", input_for(&model, 99)).unwrap_err();
+    assert!(matches!(err, ServeError::ShuttingDown { .. }));
+}
+
+#[test]
+fn per_model_backpressure_is_isolated() {
+    let busy = zoo::mcunet_vww5();
+    let idle = zoo::tiny_cnn();
+    let server = MultiModelServer::start(vec![
+        engine_spec("busy", busy.clone()).with_queue(1, 1),
+        engine_spec("idle", idle.clone()).with_queue(64, 8),
+    ])
+    .unwrap();
+    let handle = server.handle();
+
+    let mut pendings = Vec::new();
+    let mut rejected = 0usize;
+    for i in 0..32 {
+        match handle.submit("busy", input_for(&busy, i)) {
+            Ok(p) => pendings.push(p),
+            Err(ServeError::QueueFull { model_id }) => {
+                assert_eq!(model_id, "busy");
+                rejected += 1;
+            }
+            Err(other) => panic!("unexpected submit error: {other}"),
+        }
+    }
+    // The idle model is unaffected by the busy model's backpressure.
+    let logits = handle.infer("idle", input_for(&idle, 7)).unwrap();
+    assert_eq!(logits.len(), 4);
+
+    for p in pendings {
+        let _ = p.wait();
+    }
+    let m = handle.metrics();
+    assert_eq!(m.model("busy").unwrap().rejections(), rejected);
+    assert_eq!(m.model("idle").map(|mm| mm.rejections()).unwrap_or(0), 0);
+    assert_eq!(m.rejections(), rejected);
+    drop(handle);
+    server.shutdown();
+}
+
+// ------------------------------------------------------- artifact-backed path
 
 #[test]
 fn serves_fused_model_end_to_end() {

@@ -1,0 +1,128 @@
+//! Regression tests for the Eq. 5 `I_strip` term on non-square inputs.
+//!
+//! `block_peak_ram_scheme` builds the first layer's live input window as a
+//! `t_0`-row × `k_0`-column tile. `t_0` counts *rows* (band height), so it
+//! must clamp against the padded map **height**, and the kernel extent
+//! `k_0` spans columns, clamping against the padded **width**. The seed
+//! had the two clamps swapped, which corrupted Eq. 5 for tall-thin
+//! KWS-style spectrogram inputs (49×10) whenever a deep block's receptive
+//! band `t_0` exceeded the padded width: the strip was silently truncated
+//! to the *width*, under-predicting the peak. These tests fail on the
+//! pre-fix code and pin the corrected analytics against the executor's
+//! arena measurement.
+
+use msf_cnn::exec::Engine;
+use msf_cnn::fusion::{band_heights, block_cache_bytes, block_peak_ram};
+use msf_cnn::graph::FusionDag;
+use msf_cnn::memory::Arena;
+use msf_cnn::model::{Activation, Layer, ModelChain, TensorShape};
+use msf_cnn::ops::{ParamGen, Tensor};
+use msf_cnn::optimizer::{minimize_ram_unconstrained, FusionSetting};
+use msf_cnn::zoo;
+
+/// KWS-style tall-thin chain whose 3-layer receptive band (`t_0 = 15`)
+/// exceeds the padded width (12) but not the padded height (51) — the
+/// exact configuration the pre-fix h/w swap truncated.
+fn tall_thin() -> ModelChain {
+    ModelChain::new(
+        "kws-like",
+        TensorShape::new(49, 10, 1),
+        vec![
+            Layer::conv("c0", 3, 2, 1, 1, 4, Activation::Relu6),
+            Layer::conv("c1", 3, 2, 1, 4, 4, Activation::Relu6),
+            Layer::conv("c2", 3, 2, 1, 4, 4, Activation::Relu6),
+        ],
+    )
+}
+
+#[test]
+fn band_exceeding_width_is_not_truncated() {
+    let m = tall_thin();
+    // Receptive bands through [0,3): t = [15, 7, 3] rows.
+    assert_eq!(band_heights(&m, 0, 3, 1), vec![15, 7, 3]);
+    // I_strip = t0(=15, < padded height 51) × k0(=3, < padded width 12)
+    //         × c0(=1) = 45 bytes. The pre-fix swap clamped t0 by the
+    // padded *width* (12), yielding 36 and under-predicting the block.
+    // O = v3 = 7×2×4 = 56; Buf = 7·3·4 + 3·3·4 = 120.
+    assert_eq!(block_cache_bytes(&m, 0, 3), 120);
+    assert_eq!(block_peak_ram(&m, 0, 3, false), 45 + 56 + 120);
+}
+
+#[test]
+fn analytical_cost_tracks_arena_measurement() {
+    // Execute the [0,3) block and pin the measured-vs-predicted
+    // relationship on the non-square chain: the full-width band executor
+    // holds at least the analytical tile model, and both sides beat the
+    // vanilla footprint.
+    let m = tall_thin();
+    let dag = FusionDag::build(&m, None);
+    let e03 = (0..dag.edges.len())
+        .find(|&e| dag.edges[e].a == 0 && dag.edges[e].b == 3 && !dag.edges[e].iterative_tail)
+        .expect("fused span [0,3) exists");
+    let setting = FusionSetting::from_path(&dag, vec![e03]);
+    assert_eq!(setting.cost.peak_ram, 45 + 56 + 120);
+
+    let engine = Engine::new(m.clone());
+    let s0 = m.shapes[0];
+    let input = Tensor::from_data(
+        s0.h as usize,
+        s0.w as usize,
+        s0.c as usize,
+        ParamGen::new(21).fill(s0.elems() as usize, 2.0),
+    );
+    let mut arena = Arena::unbounded();
+    let r = engine.run(&setting, &input, &mut arena).unwrap();
+    assert!(
+        r.peak_ram >= setting.cost.peak_ram,
+        "measured {} < predicted {}",
+        r.peak_ram,
+        setting.cost.peak_ram
+    );
+    assert!(r.peak_ram < m.vanilla_peak_ram());
+}
+
+#[test]
+fn kws_zoo_model_reconciles() {
+    // The real 49×10 KWS spectrogram model: min-RAM plan must stay within
+    // the band/tile structural factor of the measurement (the
+    // exec_reconcile envelope) — with the pre-fix under-prediction the
+    // analytical side shrinks and the envelope drifts.
+    let m = zoo::kws_cnn();
+    let dag = FusionDag::build(&m, None);
+    let s = minimize_ram_unconstrained(&dag).unwrap();
+    let engine = Engine::new(m.clone());
+    let s0 = m.shapes[0];
+    let input = Tensor::from_data(
+        s0.h as usize,
+        s0.w as usize,
+        s0.c as usize,
+        ParamGen::new(5).fill(s0.elems() as usize, 2.0),
+    );
+    let mut arena = Arena::unbounded();
+    let r = engine.run(&s, &input, &mut arena).unwrap();
+    assert!(r.peak_ram >= s.cost.peak_ram);
+    assert!(r.peak_ram < m.vanilla_peak_ram());
+    assert!(r.peak_ram <= s.cost.peak_ram * (m.shapes[0].w as u64).max(8));
+}
+
+#[test]
+fn transposed_input_clamps_on_its_own_height() {
+    // Rotate the spectrogram (10×49): now the padded *height* (12) is the
+    // binding clamp for the same 3-layer band, and the strip widens to the
+    // full kernel over the long axis — the two orientations must not
+    // produce mirrored (swapped-clamp) results.
+    let tall = tall_thin();
+    let wide = ModelChain::new(
+        "kws-rot",
+        TensorShape::new(10, 49, 1),
+        tall.layers.clone(),
+    );
+    // t0 = 15 clamps to the padded height 10 + 2 = 12.
+    let t = band_heights(&wide, 0, 3, 1);
+    assert_eq!(t[0], 15);
+    let strip_rows = (t[0] as u64).min(10 + 2);
+    let strip = strip_rows * 3 * 1;
+    let o = wide.tensor_bytes(3);
+    let buf = block_cache_bytes(&wide, 0, 3);
+    assert_eq!(block_peak_ram(&wide, 0, 3, false), strip + o + buf);
+}

@@ -24,12 +24,21 @@ use msf_cnn::util::prop::{check, Gen};
 
 /// A random fusable CNN chain: 3-7 conv/dw/pool layers + optional
 /// pool/dense tail, sized so exhaustive enumeration stays tractable.
+/// Inputs deliberately cover square, mildly rectangular, and KWS-style
+/// tall-thin / wide-short aspect ratios so the Eq. 5/11 h-vs-w clamps are
+/// exercised off the square happy path.
 fn random_chain(g: &mut Gen) -> ModelChain {
     let depth = g.usize_in(3, 7);
     let mut layers: Vec<Layer> = Vec::new();
     let mut c = *g.pick(&[1u32, 3, 4]);
-    let mut h = g.u32_in(14, 28);
-    let mut w = g.u32_in(14, 28);
+    let (mut h, mut w) = match g.usize_in(0, 3) {
+        // Tall-thin spectrogram (49×10-like): bands outgrow the width.
+        0 => (g.u32_in(40, 56), g.u32_in(8, 12)),
+        // Wide-short (rotated spectrogram).
+        1 => (g.u32_in(8, 12), g.u32_in(40, 56)),
+        // Square-ish / mildly rectangular.
+        _ => (g.u32_in(14, 28), g.u32_in(14, 28)),
+    };
     let input = TensorShape::new(h, w, c);
     for i in 0..depth {
         let kind = g.usize_in(0, 9);
@@ -247,6 +256,90 @@ fn budgets_are_monotone() {
         {
             if loose.cost.peak_ram > tight.cost.peak_ram {
                 return Err("P1 not monotone".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn nonsquare_dwconv_chain_matches_exhaustive() {
+    // Deterministic KWS-family chains (tall-thin input, depthwise +
+    // pointwise layers, stride-2 downsampling) checked against exhaustive
+    // enumeration across both constraint grids — the off-square,
+    // off-plain-conv corner the random generator only sometimes hits.
+    for (hh, ww) in [(49u32, 10u32), (10, 49)] {
+        let m = ModelChain::new(
+            "kws-prop",
+            TensorShape::new(hh, ww, 1),
+            vec![
+                Layer::conv("c0", 3, 1, 1, 1, 8, Activation::Relu6),
+                Layer::dwconv("dw1", 3, 2, 1, 8, Activation::Relu6),
+                Layer::conv("pw1", 1, 1, 0, 8, 16, Activation::Relu6),
+                Layer::dwconv("dw2", 3, 2, 1, 16, Activation::Relu6),
+                Layer::global_pool("gp", 16),
+                Layer::dense("fc", 16, 6),
+            ],
+        );
+        let dag = FusionDag::build(&m, None);
+        for p_max in [1_000u64, 2_000, 4_000, m.vanilla_peak_ram()] {
+            match (minimize_macs(&dag, p_max), exhaustive_p2(&dag, p_max)) {
+                (None, None) => {}
+                (Some(f), Some(s)) => {
+                    assert_eq!(f.cost.macs, s.cost.macs, "{hh}x{ww} P_max={p_max}")
+                }
+                (f, s) => panic!("{hh}x{ww} P_max={p_max}: {f:?} vs {s:?}"),
+            }
+        }
+        for f_max in [1.05f64, 1.3, 2.0] {
+            match (minimize_ram(&dag, f_max), exhaustive_p1(&dag, f_max)) {
+                (None, None) => {}
+                (Some(f), Some(s)) => {
+                    assert!(f.cost.overhead <= f_max + 1e-9, "{hh}x{ww}");
+                    assert!(f.cost.peak_ram >= s.cost.peak_ram, "pruned beat exact?!");
+                }
+                (f, s) => panic!("{hh}x{ww} F_max={f_max}: {f:?} vs {s:?}"),
+            }
+        }
+    }
+}
+
+#[test]
+fn plan_batch_parallel_matches_serial_on_random_models() {
+    use msf_cnn::optimizer::{PlanBatch, PlanJob, PlanObjective};
+    check("plan-batch-equivalence", 8, |g| {
+        let mut batch = PlanBatch::new();
+        for i in 0..3 {
+            let m = random_chain(g);
+            let p_mid = (m.vanilla_peak_ram() as f64 * 0.4) as u64;
+            let idx = batch.add_model(format!("rand{i}"), m);
+            batch.push(PlanJob::new(idx, PlanObjective::Vanilla));
+            batch.push(PlanJob::new(idx, PlanObjective::Heuristic));
+            batch.push(PlanJob::new(idx, PlanObjective::StreamNet));
+            batch.push(PlanJob::new(idx, PlanObjective::MinRam { f_max: 1.2 }));
+            batch.push(PlanJob::new(idx, PlanObjective::MinRam { f_max: f64::INFINITY }));
+            batch.push(PlanJob::new(idx, PlanObjective::MinMacs { p_max_bytes: p_mid }));
+        }
+        let serial = batch.solve_serial();
+        let parallel = batch.solve_with_threads(4);
+        if serial.len() != parallel.len() {
+            return Err("length mismatch".into());
+        }
+        for (s, p) in serial.iter().zip(&parallel) {
+            let same = match (&s.setting, &p.setting) {
+                (None, None) => true,
+                (Some(a), Some(b)) => {
+                    a.spans == b.spans
+                        && a.cost.peak_ram == b.cost.peak_ram
+                        && a.cost.macs == b.cost.macs
+                }
+                _ => false,
+            };
+            if !same {
+                return Err(format!(
+                    "parallel diverged on model {} {:?}",
+                    s.job.model, s.job.objective
+                ));
             }
         }
         Ok(())
