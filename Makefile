@@ -1,14 +1,15 @@
 # msf-CNN reproduction — build / verify entry points.
 #
 # `make verify` is the regression gate: tier-1 (release build + tests)
-# plus clippy when the component is installed. CI runs the same target
-# (.github/workflows/ci.yml), so the seed suite can't silently rot again.
+# plus clippy -D warnings and rustfmt --check when the components are
+# installed. CI runs the same target (.github/workflows/ci.yml), so the
+# seed suite can't silently rot again.
 
 CARGO ?= cargo
 
-.PHONY: verify build test clippy bench artifacts clean
+.PHONY: verify build test clippy fmt bench artifacts clean
 
-verify: build test clippy
+verify: build test clippy fmt
 
 build:
 	$(CARGO) build --release
@@ -21,6 +22,13 @@ clippy:
 		$(CARGO) clippy --all-targets -- -D warnings; \
 	else \
 		echo "cargo clippy unavailable; skipping lint"; \
+	fi
+
+fmt:
+	@if $(CARGO) fmt --version >/dev/null 2>&1; then \
+		$(CARGO) fmt --all -- --check; \
+	else \
+		echo "cargo fmt unavailable; skipping format check"; \
 	fi
 
 bench:

@@ -1,18 +1,17 @@
 //! Audio keyword spotting on the smallest board in the catalog — the
 //! paper's §1 motivating use-case family ("sequence time series analysis
 //! (e.g. audio application)"): a depthwise-separable CNN over a 49×10
-//! MFCC spectrogram, deployed to the 16 kB SiFive HiFive1.
+//! MFCC spectrogram, deployed to the 16 kB SiFive HiFive1 through the
+//! Planner pipeline.
 //!
 //! ```sh
 //! cargo run --offline --release --example audio_kws
 //! ```
 
-use msf_cnn::exec::Engine;
-use msf_cnn::graph::FusionDag;
+use msf_cnn::backend::{EngineBackend, InferBackend};
 use msf_cnn::mcu::{board_by_name, estimate_latency_ms};
-use msf_cnn::memory::Arena;
-use msf_cnn::ops::{ParamGen, Tensor};
-use msf_cnn::optimizer::{minimize_macs, vanilla_setting};
+use msf_cnn::ops::ParamGen;
+use msf_cnn::optimizer::{strategy, Constraint, Constraints, Planner};
 use msf_cnn::report::kb;
 use msf_cnn::zoo;
 
@@ -28,45 +27,44 @@ fn main() {
         board.ram_kb
     );
 
-    let dag = FusionDag::build(&model, None);
-    let vanilla = vanilla_setting(&dag);
-    let fits_vanilla = vanilla.cost.peak_ram <= board.ram_bytes();
+    let mut planner = Planner::for_model(model.clone());
+    let vanilla = planner
+        .plan_with(&strategy::Vanilla, Constraints::none())
+        .expect("vanilla always exists");
+    let fits_vanilla = vanilla.cost().peak_ram <= board.ram_bytes();
     println!(
         "vanilla: {:.3} kB -> {}",
-        kb(vanilla.cost.peak_ram),
+        kb(vanilla.cost().peak_ram),
         if fits_vanilla { "fits" } else { "OOM on the HiFive1" }
     );
 
-    // Find the fastest setting that fits the 16 kB budget.
-    let setting = minimize_macs(&dag, board.ram_bytes())
+    // Find the fastest setting that fits the 16 kB budget (problem P2).
+    let plan = planner
+        .plan_with(
+            &strategy::P2,
+            Constraints::none().with(Constraint::Ram(board.ram_bytes())),
+        )
         .expect("msf-CNN should squeeze KWS into 16 kB");
-    let lat = estimate_latency_ms(&model, &setting, board);
+    let lat = estimate_latency_ms(&model, &plan.setting, board);
     println!(
         "msf-CNN: {} -> {:.3} kB at F={:.2}, simulated {:.1} ms/frame on {}",
-        setting.describe(),
-        kb(setting.cost.peak_ram),
-        setting.cost.overhead,
+        plan.setting.describe(),
+        kb(plan.cost().peak_ram),
+        plan.cost().overhead,
         lat.total_ms,
         board.name
     );
-    assert!(setting.cost.peak_ram <= board.ram_bytes());
+    assert!(plan.cost().peak_ram <= board.ram_bytes());
 
-    // Execute a synthetic MFCC frame under the board budget to prove it.
-    let engine = Engine::new(model.clone());
-    let shape = model.shapes[0];
-    let frame = Tensor::from_data(
-        shape.h as usize,
-        shape.w as usize,
-        shape.c as usize,
-        ParamGen::new(99).fill(shape.elems() as usize, 2.0),
-    );
+    // Execute a synthetic MFCC frame behind the backend trait to prove it.
     // The tracked executor runs full-width f32 band pyramids (its live
     // set sits above the Eq. 11 tile model by the documented W/t factor
-    // - see EXPERIMENTS.md), so execute unbounded and report both sides.
-    let mut arena = Arena::unbounded();
-    let report = engine.run(&setting, &frame, &mut arena).expect("runs");
-    let best = report
-        .output
+    // - see EXPERIMENTS.md), so report both sides.
+    let mut backend = EngineBackend::from_plan(&plan).expect("zoo model");
+    let shape = backend.model().shapes[0];
+    let frame = ParamGen::new(99).fill(shape.elems() as usize, 2.0);
+    let logits = backend.run(&frame).expect("runs");
+    let best = logits
         .iter()
         .enumerate()
         .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
@@ -74,8 +72,8 @@ fn main() {
     println!(
         "executed: analytical plan {:.3} kB (fits 16 kB), band-executor measured {:.3} kB; \
          predicted keyword class {} (logit {:.3})",
-        kb(setting.cost.peak_ram),
-        kb(report.peak_ram),
+        kb(backend.peak_ram()),
+        kb(backend.measured_peak().unwrap_or(0)),
         best.0,
         best.1
     );

@@ -1,14 +1,16 @@
 //! END-TO-END VALIDATION DRIVER (the run recorded in EXPERIMENTS.md §E2E).
 //!
-//! Proves all three layers of the stack compose on one real workload:
+//! Proves all three layers of the stack compose on one real workload,
+//! through the unified Planner/Backend surface:
 //!
-//!   1. msf-CNN optimizer (L3) plans a 4 kB deployment of the quickstart
-//!      CNN — the same architecture `python/compile/` AOT-lowered with
-//!      Pallas kernels (L1) inside a JAX graph (L2) into `artifacts/`.
-//!   2. The pure-Rust executor runs vanilla + fused plans under a tracked
-//!      arena, verifying numerics and the measured peak-RAM cut.
-//!   3. The PJRT runtime loads the HLO artifacts (same weights via
-//!      `weights.json`) and must agree with the Rust executor.
+//!   1. The `Planner` (L3) solves vanilla + min-RAM plans of the
+//!      quickstart CNN — the same architecture `python/compile/`
+//!      AOT-lowered with Pallas kernels (L1) inside a JAX graph (L2)
+//!      into `artifacts/`.
+//!   2. Both plans execute behind `InferBackend` (engine side) with
+//!      tracked RAM, verifying numerics and the measured peak-RAM cut.
+//!   3. The artifact runtime serves the same weights behind the same
+//!      trait and must agree with the engine side.
 //!   4. The serving coordinator then handles 200 batched requests on the
 //!      fused artifact and reports latency/throughput.
 //!
@@ -16,14 +18,12 @@
 //! make artifacts && cargo run --offline --release --example e2e_deploy
 //! ```
 
+use msf_cnn::backend::{ArtifactBackend, EngineBackend, InferBackend};
 use msf_cnn::coordinator::{InferenceServer, ServerConfig};
 use msf_cnn::exec::Engine;
-use msf_cnn::graph::FusionDag;
-use msf_cnn::memory::Arena;
-use msf_cnn::ops::{ParamGen, Tensor};
-use msf_cnn::optimizer::{minimize_ram_unconstrained, vanilla_setting};
+use msf_cnn::ops::ParamGen;
+use msf_cnn::optimizer::{strategy, Constraints, Planner};
 use msf_cnn::report::kb;
-use msf_cnn::runtime::Runtime;
 use msf_cnn::util::error::Result;
 
 fn main() -> Result<()> {
@@ -32,48 +32,61 @@ fn main() -> Result<()> {
 
     // --- Stage 1: plan -------------------------------------------------
     let engine = Engine::quickstart_from_artifacts(&artifacts)?;
-    let model = engine.model().clone();
-    let dag = FusionDag::build(&model, None);
-    let fused = minimize_ram_unconstrained(&dag).expect("setting");
-    let vanilla = vanilla_setting(&dag);
-    println!("[1] optimizer: vanilla {:.3} kB -> fused {} @ {:.3} kB (F={:.2})",
-        kb(vanilla.cost.peak_ram), fused.describe(), kb(fused.cost.peak_ram), fused.cost.overhead);
+    let mut planner = Planner::for_model(engine.model().clone());
+    let fused = planner.plan()?;
+    let vanilla = planner.plan_with(&strategy::Vanilla, Constraints::none())?;
+    println!(
+        "[1] planner: vanilla {:.3} kB -> fused {} @ {:.3} kB (F={:.2})",
+        kb(vanilla.cost().peak_ram),
+        fused.setting.describe(),
+        kb(fused.cost().peak_ram),
+        fused.cost().overhead
+    );
 
     // --- Stage 2: execute with tracked RAM -----------------------------
     let x: Vec<f32> = ParamGen::new(2024).fill(32 * 32 * 3, 2.0);
-    let input = Tensor::from_data(32, 32, 3, x.clone());
-    let mut a1 = Arena::unbounded();
-    let rv = engine.run(&vanilla, &input, &mut a1)?;
-    let mut a2 = Arena::unbounded();
-    let rf = engine.run(&fused, &input, &mut a2)?;
-    let exec_diff = rv
-        .output
+    let engine_vanilla = Engine::quickstart_from_artifacts(&artifacts)?;
+    let mut bv = EngineBackend::with_engine(engine_vanilla, vanilla.setting.clone());
+    let mut bf = EngineBackend::with_engine(engine, fused.setting.clone());
+    let out_vanilla = bv.run(&x)?;
+    let out_fused = bf.run(&x)?;
+    let peak_vanilla = bv.measured_peak().expect("tracked");
+    let peak_fused = bf.measured_peak().expect("tracked");
+    let exec_diff = out_vanilla
         .iter()
-        .zip(&rf.output)
+        .zip(&out_fused)
         .map(|(a, b)| (a - b).abs())
         .fold(0.0f32, f32::max);
     println!(
         "[2] executor: measured peaks {:.3} kB (vanilla) vs {:.3} kB (fused), Δlogits {exec_diff:.2e}",
-        kb(rv.peak_ram),
-        kb(rf.peak_ram)
+        kb(peak_vanilla),
+        kb(peak_fused)
     );
     assert!(exec_diff < 1e-3, "fused execution must be numerically invisible");
-    assert!(rf.peak_ram < rv.peak_ram, "fusion must cut measured RAM");
+    assert!(peak_fused < peak_vanilla, "fusion must cut measured RAM");
 
     // --- Stage 3: cross-check against the XLA artifacts ----------------
-    let mut rt = Runtime::open(&artifacts)?;
-    let xla_vanilla = rt.run_f32("model_vanilla", &x)?;
-    let xla_fused = rt.run_f32("model_fused", &x)?;
+    let mut xla_vanilla_backend = ArtifactBackend::open(&artifacts, "model_vanilla")?;
+    let mut xla_fused_backend = ArtifactBackend::open(&artifacts, "model_fused")?;
+    let xla_vanilla = xla_vanilla_backend.run(&x)?;
+    let xla_fused = xla_fused_backend.run(&x)?;
     let stack_diff = xla_vanilla
         .iter()
-        .zip(&rv.output)
-        .chain(xla_fused.iter().zip(&rf.output))
+        .zip(&out_vanilla)
+        .chain(xla_fused.iter().zip(&out_fused))
         .map(|(a, b)| (a - b).abs())
         .fold(0.0f32, f32::max);
     println!(
-        "[3] PJRT artifacts (Pallas->JAX->HLO) agree with Rust executor: Δ {stack_diff:.2e}"
+        "[3] PJRT artifacts (Pallas->JAX->HLO) agree with the engine backend: Δ {stack_diff:.2e} \
+         (artifact plan peak {:.3} kB)",
+        kb(xla_fused_backend.peak_ram())
     );
     assert!(stack_diff < 1e-2, "three-layer stack disagrees");
+    assert_eq!(
+        xla_fused_backend.peak_ram(),
+        fused.cost().peak_ram,
+        "both backends must report the same analytic plan peak"
+    );
 
     // --- Stage 4: serve -------------------------------------------------
     let server = InferenceServer::start(
@@ -111,10 +124,10 @@ fn main() -> Result<()> {
     server.shutdown();
 
     println!(
-        "\nE2E PASS: optimizer -> tracked executor -> PJRT artifacts -> serving, \
+        "\nE2E PASS: planner -> engine backend -> PJRT artifacts -> serving, \
          RAM cut {:.1}% at F={:.2}.",
-        100.0 * (1.0 - rf.peak_ram as f64 / rv.peak_ram as f64),
-        fused.cost.overhead
+        100.0 * (1.0 - peak_fused as f64 / peak_vanilla as f64),
+        fused.cost().overhead
     );
     Ok(())
 }

@@ -3,21 +3,24 @@
 //! ("users can produce optimal CNN fusion configurations tailored to
 //! specific industrial hardware requirements").
 //!
+//! One `Planner` per model serves the whole board column: every P2 solve
+//! shares the model's DAG and memoized edge costs.
+//!
 //! ```sh
 //! cargo run --offline --release --example mcu_deploy
 //! ```
 
-use msf_cnn::exec::Engine;
-use msf_cnn::graph::FusionDag;
+use msf_cnn::backend::{EngineBackend, InferBackend};
 use msf_cnn::mcu::{estimate_latency_ms, BOARDS};
-use msf_cnn::memory::Arena;
-use msf_cnn::ops::{ParamGen, Tensor};
-use msf_cnn::optimizer::minimize_macs;
+use msf_cnn::ops::ParamGen;
+use msf_cnn::optimizer::{strategy, Constraint, Constraints, Planner};
 use msf_cnn::report::kb;
 use msf_cnn::zoo;
 
 fn main() {
     let models = zoo::paper_models();
+    let mut planners: Vec<Planner> =
+        models.iter().map(|(_, m)| Planner::for_model(m.clone())).collect();
     println!("Deployment matrix: best (lowest-latency) setting that fits each board.\n");
     println!(
         "{:<18} {:>10}  {:<12} {:>11} {:>7} {:>12}",
@@ -26,26 +29,26 @@ fn main() {
     println!("{}", "-".repeat(76));
 
     for board in BOARDS {
-        for (label, model) in &models {
-            let dag = FusionDag::build(model, None);
+        for ((label, model), planner) in models.iter().zip(planners.iter_mut()) {
             // P2 with the board's physical RAM as the budget: the fastest
             // plan that fits.
-            match minimize_macs(&dag, board.ram_bytes()) {
-                None => {
+            let c = Constraints::none().with(Constraint::Ram(board.ram_bytes()));
+            match planner.plan_with(&strategy::P2, c) {
+                Err(_) => {
                     println!(
                         "{:<18} {:>7} kB  {:<12} {:>11} {:>7} {:>12}",
                         board.name, board.ram_kb, label, "-", "-", "OOM"
                     );
                 }
-                Some(s) => {
-                    let lat = estimate_latency_ms(model, &s, board);
+                Ok(plan) => {
+                    let lat = estimate_latency_ms(model, &plan.setting, board);
                     println!(
                         "{:<18} {:>7} kB  {:<12} {:>8.1} kB {:>7.2} {:>9.1} ms",
                         board.name,
                         board.ram_kb,
                         label,
-                        kb(s.cost.peak_ram),
-                        s.cost.overhead,
+                        kb(plan.cost().peak_ram),
+                        plan.cost().overhead,
                         lat.total_ms
                     );
                 }
@@ -54,34 +57,38 @@ fn main() {
     }
 
     // Deep dive: deploy the VWW model on the mid-range board and *execute*
-    // the plan against the board budget to prove it truly fits.
+    // the plan behind the backend trait to prove it truly fits. The
+    // planner warmed by the matrix above re-solves from its memoized DAG.
     let board = msf_cnn::mcu::board_by_name("nucleo-f412zg").unwrap();
-    let model = zoo::mcunet_vww5();
-    let dag = FusionDag::build(&model, None);
-    let setting = minimize_macs(&dag, board.ram_bytes()).expect("fits 256 kB");
+    let vww_idx = models
+        .iter()
+        .position(|(label, _)| *label == "MN2-vww5")
+        .expect("vww5 is a paper model");
+    let plan = planners[vww_idx]
+        .plan_with(
+            &strategy::P2,
+            Constraints::none().with(Constraint::Ram(board.ram_bytes())),
+        )
+        .expect("fits 256 kB");
     println!(
         "\nExecuting {} on {} ({} kB budget): setting {}",
-        model.name,
+        plan.model,
         board.name,
         board.ram_kb,
-        setting.describe()
+        plan.setting.describe()
     );
-    let engine = Engine::new(model.clone());
-    let shape = model.shapes[0];
-    let input = Tensor::from_data(
-        shape.h as usize,
-        shape.w as usize,
-        shape.c as usize,
-        ParamGen::new(3).fill(shape.elems() as usize, 2.0),
-    );
-    let mut arena = Arena::with_budget(board.ram_bytes());
-    match engine.run(&setting, &input, &mut arena) {
-        Ok(r) => println!(
-            "fits: measured peak {:.3} kB of {} kB; logits[0..2] = {:?}",
-            kb(r.peak_ram),
+    let mut backend = EngineBackend::from_plan(&plan).expect("zoo model");
+    let shape = backend.model().shapes[0];
+    let input = ParamGen::new(3).fill(shape.elems() as usize, 2.0);
+    match backend.run(&input) {
+        Ok(logits) => println!(
+            "fits: analytic peak {:.3} kB of {} kB (measured band executor {:.3} kB); \
+             logits[0..2] = {:?}",
+            kb(backend.peak_ram()),
             board.ram_kb,
-            &r.output[..2]
+            kb(backend.measured_peak().unwrap_or(0)),
+            &logits[..2]
         ),
-        Err(oom) => println!("unexpected {oom}"),
+        Err(e) => println!("unexpected {e}"),
     }
 }

@@ -1,73 +1,84 @@
-//! Quickstart: optimize a small CNN with msf-CNN and execute the plan.
+//! Quickstart: plan a small CNN with the `Planner` pipeline and execute
+//! the plan through the unified backend trait.
 //!
 //! ```sh
 //! cargo run --offline --release --example quickstart
 //! ```
 
-use msf_cnn::exec::Engine;
-use msf_cnn::graph::FusionDag;
-use msf_cnn::memory::Arena;
-use msf_cnn::ops::{ParamGen, Tensor};
-use msf_cnn::optimizer::{minimize_macs, minimize_ram_unconstrained, vanilla_setting};
+use msf_cnn::backend::{EngineBackend, InferBackend};
+use msf_cnn::optimizer::{strategy, Constraint, Constraints, Planner};
+use msf_cnn::ops::ParamGen;
 use msf_cnn::report::kb;
 use msf_cnn::zoo;
 
 fn main() {
-    // 1. Pick a model from the zoo (the same CNN the AOT artifacts bake).
+    // 1. Pick a model from the zoo (the same CNN the AOT artifacts bake)
+    //    and open a planning pipeline: the planner owns the fusion DAG
+    //    and the per-model edge-cost memo, so every solve below shares
+    //    them.
     let model = zoo::quickstart();
     println!("model: {} ({} layers)", model.name, model.num_layers());
     println!("vanilla peak RAM: {:.3} kB\n", kb(model.vanilla_peak_ram()));
+    let mut planner = Planner::for_model(model);
+    {
+        let dag = planner.dag();
+        println!(
+            "DAG: {} nodes, {} edges (single layers + fusion candidates)",
+            dag.n_nodes,
+            dag.num_edges()
+        );
+    }
 
-    // 2. Build the fusion-candidate DAG (paper §5).
-    let dag = FusionDag::build(&model, None);
-    println!(
-        "DAG: {} nodes, {} edges (single layers + fusion candidates)",
-        dag.n_nodes,
-        dag.num_edges()
-    );
-
-    // 3. Solve the two dual problems (paper §6).
-    let min_ram = minimize_ram_unconstrained(&dag).expect("complete path");
+    // 2. Solve the two dual problems (paper §6) — strategies are
+    //    interchangeable on the same planner.
+    let min_ram = planner.plan().expect("complete path"); // default: P1
     println!(
         "P1 (min RAM, F_max=inf):   {}  ->  {:.3} kB at F={:.2}",
-        min_ram.describe(),
-        kb(min_ram.cost.peak_ram),
-        min_ram.cost.overhead
+        min_ram.setting.describe(),
+        kb(min_ram.cost().peak_ram),
+        min_ram.cost().overhead
     );
-    let budget = minimize_macs(&dag, 4_000).expect("4 kB budget is feasible here");
+    let budget = planner
+        .plan_with(
+            &strategy::P2,
+            Constraints::none().with(Constraint::Ram(4_000)),
+        )
+        .expect("4 kB budget is feasible here");
     println!(
         "P2 (min MACs, P_max=4kB):  {}  ->  {:.3} kB at F={:.2}\n",
-        budget.describe(),
-        kb(budget.cost.peak_ram),
-        budget.cost.overhead
+        budget.setting.describe(),
+        kb(budget.cost().peak_ram),
+        budget.cost().overhead
     );
+    let vanilla = planner
+        .plan_with(&strategy::Vanilla, Constraints::none())
+        .expect("vanilla always exists");
 
-    // 4. Execute both plans with tracked RAM and compare numerics.
-    let engine = Engine::new(model.clone());
-    let input = Tensor::from_data(32, 32, 3, ParamGen::new(1).fill(32 * 32 * 3, 2.0));
+    // 3. Execute both plans behind the unified backend trait and compare
+    //    numerics + measured RAM.
+    let mut fused_backend = EngineBackend::from_plan(&min_ram).expect("zoo model");
+    let mut vanilla_backend = EngineBackend::from_plan(&vanilla).expect("zoo model");
+    let input = ParamGen::new(1).fill(32 * 32 * 3, 2.0);
 
-    let mut a_vanilla = Arena::unbounded();
-    let vanilla = engine
-        .run(&vanilla_setting(&dag), &input, &mut a_vanilla)
-        .expect("vanilla run");
-    let mut a_fused = Arena::unbounded();
-    let fused = engine.run(&min_ram, &input, &mut a_fused).expect("fused run");
+    let out_vanilla = vanilla_backend.run(&input).expect("vanilla run");
+    let out_fused = fused_backend.run(&input).expect("fused run");
 
-    let max_diff = vanilla
-        .output
+    let max_diff = out_vanilla
         .iter()
-        .zip(&fused.output)
+        .zip(&out_fused)
         .map(|(a, b)| (a - b).abs())
         .fold(0.0f32, f32::max);
-    println!("executed vanilla: peak {:.3} kB measured", kb(vanilla.peak_ram));
-    println!("executed fused:   peak {:.3} kB measured", kb(fused.peak_ram));
+    let peak_vanilla = vanilla_backend.measured_peak().expect("tracked");
+    let peak_fused = fused_backend.measured_peak().expect("tracked");
+    println!("executed vanilla: peak {:.3} kB measured", kb(peak_vanilla));
+    println!("executed fused:   peak {:.3} kB measured", kb(peak_fused));
     println!(
         "max |logit diff| fused vs vanilla: {max_diff:.2e} (schedule transform, not a numerics transform)"
     );
     assert!(max_diff < 1e-3);
     println!(
         "\nRAM saved: {:.1}% — paid for with {:.0}% extra MACs.",
-        100.0 * (1.0 - fused.peak_ram as f64 / vanilla.peak_ram as f64),
-        100.0 * (min_ram.cost.overhead - 1.0)
+        100.0 * (1.0 - peak_fused as f64 / peak_vanilla as f64),
+        100.0 * (min_ram.cost().overhead - 1.0)
     );
 }

@@ -2,36 +2,38 @@
 //! several models served concurrently, each by its own executor thread
 //! draining per-model micro-batches.
 //!
-//! Engine-backed plans (optimizer output run by the pure-Rust tracked
-//! executor) need no artifacts; when `artifacts/` has been built
-//! (`make artifacts`), the AOT quickstart entry is registered as a third
-//! model behind the same front door.
+//! Plans come from the `Planner` pipeline: one is registered in-memory,
+//! one round-trips through a plan JSON on disk (the deploy artifact a
+//! fleet would ship), and — when `artifacts/` has been built
+//! (`make artifacts`) — the AOT quickstart entry joins as a third model
+//! behind the same front door.
 //!
 //! ```sh
 //! cargo run --offline --release --example serve
 //! ```
 
 use msf_cnn::coordinator::{ModelSpec, MultiModelServer};
-use msf_cnn::graph::FusionDag;
 use msf_cnn::ops::ParamGen;
-use msf_cnn::optimizer::minimize_ram_unconstrained;
+use msf_cnn::optimizer::{Plan, Planner};
 use msf_cnn::util::error::Result;
 use msf_cnn::zoo;
-
-fn engine_spec(id: &str, model: msf_cnn::model::ModelChain) -> ModelSpec {
-    let dag = FusionDag::build(&model, None);
-    let setting = minimize_ram_unconstrained(&dag).expect("min-RAM plan");
-    ModelSpec::engine(id, model, setting)
-}
 
 fn main() -> Result<()> {
     let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
 
-    // The plan registry: two engine-backed zoo models, plus the AOT
-    // artifact entry when it exists.
+    // Plan the registry through the one pipeline.
+    let quickstart_plan = Planner::for_model(zoo::quickstart()).plan()?;
+    let kws_plan = Planner::for_model(zoo::kws_cnn()).plan()?;
+
+    // The kws plan takes the full deploy round-trip: save to disk, load
+    // back, register from the file — serving never re-runs the optimizer.
+    let plan_path = std::env::temp_dir().join("msfcnn-serve-example.plan.json");
+    kws_plan.save(&plan_path)?;
+    println!("kws plan persisted: {}", Plan::load(&plan_path)?.describe());
+
     let mut specs = vec![
-        engine_spec("quickstart", zoo::quickstart()),
-        engine_spec("kws", zoo::kws_cnn()),
+        ModelSpec::plan("quickstart", quickstart_plan),
+        ModelSpec::plan_file("kws", &plan_path)?,
     ];
     let have_artifacts = std::path::Path::new(&artifacts).join("manifest.json").exists();
     if have_artifacts {
@@ -95,5 +97,6 @@ fn main() -> Result<()> {
     }
     drop(handle);
     server.shutdown();
+    let _ = std::fs::remove_file(&plan_path);
     Ok(())
 }

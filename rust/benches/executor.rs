@@ -4,12 +4,11 @@
 //! computation overhead").
 
 use msf_cnn::exec::Engine;
-use msf_cnn::graph::FusionDag;
 use msf_cnn::memory::Arena;
 use msf_cnn::ops::{
     dense, global_avg_pool, DenseIter, FusedBlock, GlobalPoolIter, LayerParams, ParamGen, Tensor,
 };
-use msf_cnn::optimizer::{minimize_ram_unconstrained, vanilla_setting};
+use msf_cnn::optimizer::{strategy, Constraints, Planner};
 use msf_cnn::util::bench::Bencher;
 use msf_cnn::zoo;
 
@@ -31,11 +30,14 @@ fn main() {
     // End-to-end engine runs (quickstart & vww5).
     for name in ["quickstart", "kws", "mn2-vww5"] {
         let m = zoo::by_name(name).unwrap();
-        let dag = FusionDag::build(&m, None);
         let engine = Engine::new(m.clone());
         let x = input_for(&m, 1);
-        let v = vanilla_setting(&dag);
-        let f = minimize_ram_unconstrained(&dag).unwrap();
+        let mut planner = Planner::for_model(m.clone());
+        let f = planner.setting().unwrap();
+        let v = planner
+            .plan_with(&strategy::Vanilla, Constraints::none())
+            .unwrap()
+            .setting;
         let bench = if name == "mn2-vww5" { &quick } else { &b };
         bench.run(&format!("engine-vanilla/{name}"), || {
             let mut arena = Arena::unbounded();

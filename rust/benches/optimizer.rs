@@ -1,13 +1,12 @@
 //! Optimizer benchmarks: DAG construction and P1/P2 solve times on the
 //! paper's three evaluation models — substantiating §6's "this process
 //! can be done in few seconds" (we target milliseconds) and App. D's
-//! polynomial-time claim.
+//! polynomial-time claim. Solvers run through the [`PlanStrategy`] trait
+//! objects the planner dispatches on.
 
-use msf_cnn::graph::FusionDag;
-use msf_cnn::optimizer::{
-    heuristic_head_fusion, minimize_macs, minimize_ram, minimize_ram_unconstrained,
-    streamnet_single_block,
-};
+use msf_cnn::graph::{DagOptions, FusionDag};
+use msf_cnn::optimizer::strategy::{HeadFusion, P1, P2, StreamNet};
+use msf_cnn::optimizer::{Constraint, Constraints, PlanStrategy};
 use msf_cnn::util::bench::Bencher;
 use msf_cnn::zoo;
 
@@ -15,40 +14,44 @@ fn main() {
     let b = Bencher::default();
     println!("== optimizer benches (paper §6 / App. D) ==");
 
+    let none = Constraints::none();
     for (label, model) in zoo::paper_models() {
-        b.run(&format!("dag-build/{label}"), || FusionDag::build(&model, None));
+        b.run(&format!("dag-build/{label}"), || {
+            FusionDag::build(&model, DagOptions::default())
+        });
 
-        let dag = FusionDag::build(&model, None);
+        let dag = FusionDag::build(&model, DagOptions::default());
         b.run(&format!("p1-unconstrained/{label}"), || {
-            minimize_ram_unconstrained(&dag).unwrap()
+            P1.solve(&dag, &none).unwrap()
         });
+        let f13 = none.with(Constraint::Overhead(1.3));
         b.run(&format!("p1-constrained-F1.3/{label}"), || {
-            minimize_ram(&dag, 1.3)
+            P1.solve(&dag, &f13)
         });
-        b.run(&format!("p2-64kB/{label}"), || minimize_macs(&dag, 64_000));
+        let p64 = none.with(Constraint::Ram(64_000));
+        b.run(&format!("p2-64kB/{label}"), || P2.solve(&dag, &p64));
         b.run(&format!("baseline-heuristic/{label}"), || {
-            heuristic_head_fusion(&dag)
+            HeadFusion.solve(&dag, &none)
         });
         b.run(&format!("baseline-streamnet/{label}"), || {
-            streamnet_single_block(&dag, None)
+            StreamNet.solve(&dag, &none)
         });
     }
 
     // The full Table-1 grid per model — the paper's end-user operation.
     for (label, model) in zoo::paper_models() {
-        let dag = FusionDag::build(&model, None);
+        let dag = FusionDag::build(&model, DagOptions::default());
         b.run(&format!("full-constraint-grid/{label}"), || {
             let mut acc = 0u64;
-            for f_max in [1.1, 1.2, 1.3, 1.4, 1.5] {
-                if let Some(s) = minimize_ram(&dag, f_max) {
+            for f_max in [1.1, 1.2, 1.3, 1.4, 1.5, f64::INFINITY] {
+                let c = none.with(Constraint::Overhead(f_max));
+                if let Some(s) = P1.solve(&dag, &c) {
                     acc ^= s.cost.peak_ram;
                 }
             }
-            if let Some(s) = minimize_ram_unconstrained(&dag) {
-                acc ^= s.cost.peak_ram;
-            }
             for p in [16u64, 32, 64, 128, 256] {
-                if let Some(s) = minimize_macs(&dag, p * 1000) {
+                let c = none.with(Constraint::Ram(p * 1000));
+                if let Some(s) = P2.solve(&dag, &c) {
                     acc ^= s.cost.macs;
                 }
             }

@@ -3,8 +3,11 @@
 //! substantiating that the parallel coordinator path wins wall-clock on
 //! multi-core while staying bit-identical to the serial solver.
 
+use msf_cnn::graph::{DagOptions, FusionDag};
 use msf_cnn::mcu::BOARDS;
-use msf_cnn::optimizer::{PlanBatch, PlanJob, PlanOutcome};
+use msf_cnn::optimizer::{
+    strategy, Constraint, Constraints, PlanBatch, PlanJob, Planner, PlanOutcome,
+};
 use msf_cnn::report::{F_MAX_GRID, P_MAX_GRID_KB};
 use msf_cnn::util::bench::Bencher;
 use msf_cnn::zoo;
@@ -77,5 +80,96 @@ fn main() {
     // lie about usable cores; the line above is the acceptance evidence.
     if threads > 1 && speedup <= 1.0 {
         println!("WARN: parallel sweep did not beat serial — constrained CPU environment?");
+    }
+
+    facade_overhead(&b);
+}
+
+/// The grid of P1/P2 solves both facade variants run per model.
+fn solve_grid_direct(dag: &FusionDag) -> u64 {
+    #![allow(deprecated)]
+    use msf_cnn::optimizer::{minimize_macs, minimize_ram, minimize_ram_unconstrained};
+    let mut acc = 0u64;
+    for &f_max in F_MAX_GRID {
+        let s = if f_max.is_infinite() {
+            minimize_ram_unconstrained(dag)
+        } else {
+            minimize_ram(dag, f_max)
+        };
+        if let Some(s) = s {
+            acc ^= s.cost.peak_ram;
+        }
+    }
+    for &p_kb in P_MAX_GRID_KB {
+        if let Some(s) = minimize_macs(dag, p_kb * 1000) {
+            acc ^= s.cost.macs;
+        }
+    }
+    acc
+}
+
+fn solve_grid_facade(planner: &mut Planner) -> u64 {
+    let mut acc = 0u64;
+    for &f_max in F_MAX_GRID {
+        let c = Constraints::none().with(Constraint::Overhead(f_max));
+        if let Ok(p) = planner.plan_with(&strategy::P1, c) {
+            acc ^= p.cost().peak_ram;
+        }
+    }
+    for &p_kb in P_MAX_GRID_KB {
+        let c = Constraints::none().with(Constraint::Ram(p_kb * 1000));
+        if let Ok(p) = planner.plan_with(&strategy::P2, c) {
+            acc ^= p.cost().macs;
+        }
+    }
+    acc
+}
+
+/// Planner-facade overhead: the builder path (DAG ownership, memoized
+/// edge costs, `Plan` assembly) versus raw `minimize_*` free-function
+/// calls, on the full paper constraint grid. Cold = a fresh planner per
+/// iteration (worst case); warm = the intended reuse pattern.
+fn facade_overhead(b: &Bencher) {
+    println!("== planner facade vs direct free functions ==");
+    let models = zoo::paper_models();
+
+    // Identical outcomes first: the facade must solve the same grid.
+    for (_, m) in &models {
+        let dag = FusionDag::build(m, DagOptions::default());
+        let mut planner = Planner::for_model(m.clone());
+        assert_eq!(
+            solve_grid_direct(&dag),
+            solve_grid_facade(&mut planner),
+            "facade diverged from the direct path on {}",
+            m.name
+        );
+    }
+
+    let rd = b.run("facade/direct-free-fns", || {
+        models
+            .iter()
+            .map(|(_, m)| solve_grid_direct(&FusionDag::build(m, DagOptions::default())))
+            .fold(0u64, |a, x| a ^ x)
+    });
+    let rc = b.run("facade/planner-cold", || {
+        models
+            .iter()
+            .map(|(_, m)| solve_grid_facade(&mut Planner::for_model(m.clone())))
+            .fold(0u64, |a, x| a ^ x)
+    });
+    let mut warm: Vec<Planner> =
+        models.iter().map(|(_, m)| Planner::for_model(m.clone())).collect();
+    let rw = b.run("facade/planner-warm", || {
+        warm.iter_mut().map(solve_grid_facade).fold(0u64, |a, x| a ^ x)
+    });
+
+    let cold_ratio = rc.mean.as_secs_f64() / rd.mean.as_secs_f64().max(1e-12);
+    let warm_ratio = rw.mean.as_secs_f64() / rd.mean.as_secs_f64().max(1e-12);
+    println!(
+        "facade overhead: cold {cold_ratio:.2}x, warm {warm_ratio:.2}x vs direct \
+         (1.00x = free; warm < 1 ⇒ the shared memo wins)"
+    );
+    if cold_ratio > 1.1 {
+        println!("WARN: cold planner facade exceeded 10% overhead vs direct calls");
     }
 }

@@ -3,9 +3,10 @@
 //! Prints both series over growing synthetic chains so the crossover is
 //! visible in the bench log.
 
-use msf_cnn::graph::{enumerate_paths, FusionDag};
+use msf_cnn::graph::{enumerate_paths, DagOptions, FusionDag};
 use msf_cnn::model::{Activation, Layer, ModelChain, TensorShape};
-use msf_cnn::optimizer::{exhaustive_p1, minimize_ram};
+use msf_cnn::optimizer::strategy::P1;
+use msf_cnn::optimizer::{exhaustive_p1, Constraint, Constraints, PlanStrategy};
 use msf_cnn::util::bench::Bencher;
 
 fn chain(n: usize) -> ModelChain {
@@ -22,31 +23,33 @@ fn main() {
     println!("== search scaling (App. D: O(2^V) exhaustive vs O(V^3) pruned) ==");
     let quick = Bencher::quick();
 
+    let f13 = Constraints::none().with(Constraint::Overhead(1.3));
+
     // Path-count growth (the 2^{V-2} fact itself).
     for n in [4usize, 8, 12, 16] {
-        let dag = FusionDag::build(&chain(n), None);
+        let dag = FusionDag::build(&chain(n), DagOptions::default());
         let paths = enumerate_paths(&dag).len();
         println!("chain n={n:<3} edges={:<5} complete-paths={paths}", dag.num_edges());
     }
 
     // Exhaustive blows up quickly; stop where it stays sane.
     for n in [6usize, 10, 14] {
-        let dag = FusionDag::build(&chain(n), None);
+        let dag = FusionDag::build(&chain(n), DagOptions::default());
         quick.run(&format!("exhaustive-p1/n={n}"), || exhaustive_p1(&dag, 1.3));
     }
 
     // The pruned solver keeps scaling to real model depths.
     for n in [6usize, 14, 24, 40, 54, 80] {
-        let dag = FusionDag::build(&chain(n), None);
-        quick.run(&format!("pruned-p1/n={n}"), || minimize_ram(&dag, 1.3));
+        let dag = FusionDag::build(&chain(n), DagOptions::default());
+        quick.run(&format!("pruned-p1/n={n}"), || P1.solve(&dag, &f13));
     }
 
     // Ablation: depth-capped DAGs (smaller search spaces, DESIGN.md §ablations).
     let m = chain(54);
     for cap in [4usize, 8, 16] {
-        let dag = FusionDag::build(&m, Some(cap));
+        let dag = FusionDag::build(&m, DagOptions::default().max_depth(cap));
         quick.run(&format!("pruned-p1/n=54,depth-cap={cap}"), || {
-            minimize_ram(&dag, 1.3)
+            P1.solve(&dag, &f13)
         });
     }
 }

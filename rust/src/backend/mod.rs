@@ -1,0 +1,272 @@
+//! [`InferBackend`]: one execution surface for every way a plan can run.
+//!
+//! The crate has two executors — the pure-Rust tracked engine
+//! ([`crate::exec::Engine`]) and the AOT-artifact runtime
+//! ([`crate::runtime::Runtime`]) — with historically incompatible entry
+//! points that the coordinator, the reports, and every example re-stitched
+//! by hand. This module unifies them behind one trait:
+//! `run(&input) -> logits` plus `peak_ram()` (the analytic Eq. 5–6 peak of
+//! the plan being served).
+//!
+//! [`BackendSpec`] is the serializable *description* of a backend
+//! (registry entries must cross threads; live runtimes must not —
+//! PJRT-style handles are not `Send`). [`BackendSpec::connect`] is the
+//! single place a spec becomes a live [`InferBackend`], and is called
+//! inside each executor thread by
+//! [`crate::coordinator::MultiModelServer`].
+
+use std::path::{Path, PathBuf};
+
+use crate::anyhow;
+use crate::exec::Engine;
+use crate::memory::Arena;
+use crate::model::ModelChain;
+use crate::ops::Tensor;
+use crate::optimizer::{FusionSetting, Plan};
+use crate::runtime::Runtime;
+use crate::util::error::Result;
+use crate::zoo;
+
+/// A live inference backend serving one plan.
+pub trait InferBackend {
+    /// Stable backend kind for logs/metrics ("engine", "artifact", …).
+    fn kind(&self) -> &'static str;
+
+    /// Run one inference on a flattened f32 input tensor.
+    fn run(&mut self, input: &[f32]) -> Result<Vec<f32>>;
+
+    /// Analytic peak RAM (Eq. 5–6) of the plan this backend serves — the
+    /// number the optimizer promised, comparable across backends.
+    fn peak_ram(&self) -> u64;
+
+    /// Measured arena high-water mark of the most recent [`Self::run`],
+    /// when the backend tracks allocations (`None` for backends that
+    /// cannot measure).
+    fn measured_peak(&self) -> Option<u64> {
+        None
+    }
+}
+
+/// [`InferBackend`] over the pure-Rust tracked executor: serves any
+/// [`ModelChain`] + [`FusionSetting`] without artifacts.
+pub struct EngineBackend {
+    engine: Engine,
+    setting: FusionSetting,
+    measured: Option<u64>,
+}
+
+impl EngineBackend {
+    /// Backend for `setting` on `model` (deterministic engine weights).
+    pub fn new(model: ModelChain, setting: FusionSetting) -> Self {
+        Self::with_engine(Engine::new(model), setting)
+    }
+
+    /// Backend over an existing engine — e.g. one loaded with artifact
+    /// weights via [`Engine::quickstart_from_artifacts`].
+    pub fn with_engine(engine: Engine, setting: FusionSetting) -> Self {
+        Self { engine, setting, measured: None }
+    }
+
+    /// Backend for a serialized [`Plan`], resolving the model by name
+    /// through [`zoo::by_name`].
+    pub fn from_plan(plan: &Plan) -> Result<Self> {
+        let model = zoo::by_name(&plan.model).ok_or_else(|| {
+            anyhow!(
+                "plan model '{}' is not a zoo model; use EngineBackend::for_model",
+                plan.model
+            )
+        })?;
+        Self::for_model(model, plan)
+    }
+
+    /// Backend for a [`Plan`] on an explicitly supplied model (non-zoo
+    /// chains); validates that the plan covers the model's layers.
+    pub fn for_model(model: ModelChain, plan: &Plan) -> Result<Self> {
+        plan.validate_for(&model)?;
+        Ok(Self::new(model, plan.setting.clone()))
+    }
+
+    /// The fusion setting this backend executes.
+    pub fn setting(&self) -> &FusionSetting {
+        &self.setting
+    }
+
+    /// The served model.
+    pub fn model(&self) -> &ModelChain {
+        self.engine.model()
+    }
+}
+
+impl InferBackend for EngineBackend {
+    fn kind(&self) -> &'static str {
+        "engine"
+    }
+
+    fn run(&mut self, input: &[f32]) -> Result<Vec<f32>> {
+        let shape = self.engine.model().shapes[0];
+        if input.len() as u64 != shape.elems() {
+            return Err(anyhow!(
+                "input length {} != expected {} for {shape}",
+                input.len(),
+                shape.elems()
+            ));
+        }
+        let t = Tensor::from_data(
+            shape.h as usize,
+            shape.w as usize,
+            shape.c as usize,
+            input.to_vec(),
+        );
+        let mut arena = Arena::unbounded();
+        let report = self
+            .engine
+            .run(&self.setting, &t, &mut arena)
+            .map_err(|e| anyhow!("{e}"))?;
+        self.measured = Some(report.peak_ram);
+        Ok(report.output)
+    }
+
+    fn peak_ram(&self) -> u64 {
+        self.setting.cost.peak_ram
+    }
+
+    fn measured_peak(&self) -> Option<u64> {
+        self.measured
+    }
+}
+
+/// [`InferBackend`] over the AOT-artifact runtime: serves one manifest
+/// entry point.
+pub struct ArtifactBackend {
+    rt: Runtime,
+    entry: String,
+    peak: u64,
+}
+
+impl ArtifactBackend {
+    /// Open `dir`'s manifest and load `entry` (weights cached inside the
+    /// runtime). Fails when the artifacts are missing or the entry has no
+    /// offline interpretation.
+    pub fn open(dir: impl AsRef<Path>, entry: impl Into<String>) -> Result<Self> {
+        let entry = entry.into();
+        let mut rt = Runtime::open(dir.as_ref())?;
+        rt.load(&entry)
+            .map_err(|e| e.wrap(format!("load '{entry}'")))?;
+        // Kernel entries (conv2d, iter_pool, …) serve no fusion plan;
+        // report 0 rather than failing the whole backend.
+        let peak = rt.plan_peak_ram(&entry).unwrap_or(0);
+        Ok(Self { rt, entry, peak })
+    }
+
+    /// The manifest entry this backend serves.
+    pub fn entry(&self) -> &str {
+        &self.entry
+    }
+}
+
+impl InferBackend for ArtifactBackend {
+    fn kind(&self) -> &'static str {
+        "artifact"
+    }
+
+    fn run(&mut self, input: &[f32]) -> Result<Vec<f32>> {
+        self.rt.run_f32(&self.entry, input)
+    }
+
+    fn peak_ram(&self) -> u64 {
+        self.peak
+    }
+}
+
+/// Serializable description of a backend — what a
+/// [`crate::coordinator::ModelSpec`] registers and ships across threads.
+#[derive(Debug, Clone)]
+pub enum BackendSpec {
+    /// A fusion setting run by the pure-Rust tracked executor.
+    Engine { model: ModelChain, setting: FusionSetting },
+    /// An AOT artifact entry run by the [`Runtime`].
+    Artifact { dir: PathBuf, entry: String },
+    /// A pre-solved serialized [`Plan`] (model resolved via the zoo).
+    Plan { plan: Plan },
+}
+
+impl BackendSpec {
+    /// Instantiate the live backend this spec describes — the only place
+    /// the enum is matched.
+    pub fn connect(&self) -> Result<Box<dyn InferBackend>> {
+        match self {
+            BackendSpec::Engine { model, setting } => {
+                Ok(Box::new(EngineBackend::new(model.clone(), setting.clone())))
+            }
+            BackendSpec::Artifact { dir, entry } => {
+                Ok(Box::new(ArtifactBackend::open(dir, entry.clone())?))
+            }
+            BackendSpec::Plan { plan } => Ok(Box::new(EngineBackend::from_plan(plan)?)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::Planner;
+    use crate::ops::ParamGen;
+
+    fn quickstart_plan() -> Plan {
+        Planner::for_model(zoo::quickstart()).plan().unwrap()
+    }
+
+    #[test]
+    fn engine_backend_runs_and_reports_both_peaks() {
+        let plan = quickstart_plan();
+        let mut backend = EngineBackend::from_plan(&plan).unwrap();
+        assert_eq!(backend.kind(), "engine");
+        assert_eq!(backend.peak_ram(), plan.cost().peak_ram);
+        assert_eq!(backend.measured_peak(), None, "no run yet");
+
+        let x = ParamGen::new(3).fill(32 * 32 * 3, 2.0);
+        let logits = backend.run(&x).unwrap();
+        assert_eq!(logits.len(), 10);
+        let measured = backend.measured_peak().expect("tracked run");
+        // Band executor holds >= the analytic tile model (exec_reconcile).
+        assert!(measured >= backend.peak_ram());
+    }
+
+    #[test]
+    fn engine_backend_rejects_bad_input_length() {
+        let plan = quickstart_plan();
+        let mut backend = EngineBackend::from_plan(&plan).unwrap();
+        let err = backend.run(&[0.0; 7]).unwrap_err();
+        assert!(err.to_string().contains("input length"), "{err}");
+    }
+
+    #[test]
+    fn plan_spec_connects_through_the_trait() {
+        let spec = BackendSpec::Plan { plan: quickstart_plan() };
+        let mut backend = spec.connect().unwrap();
+        let x = ParamGen::new(5).fill(32 * 32 * 3, 2.0);
+        assert_eq!(backend.run(&x).unwrap().len(), 10);
+        assert!(backend.peak_ram() > 0);
+    }
+
+    #[test]
+    fn plan_for_unknown_model_fails_to_connect() {
+        let mut plan = quickstart_plan();
+        plan.model = "not-a-zoo-model".into();
+        let err = BackendSpec::Plan { plan }.connect().unwrap_err();
+        assert!(err.to_string().contains("not a zoo model"), "{err}");
+    }
+
+    #[test]
+    fn for_model_validates_span_coverage() {
+        let plan = quickstart_plan();
+        assert!(EngineBackend::for_model(zoo::quickstart(), &plan).is_ok());
+        assert!(EngineBackend::for_model(zoo::lenet(), &plan).is_err());
+    }
+
+    #[test]
+    fn artifact_backend_open_fails_cleanly_without_artifacts() {
+        let err = ArtifactBackend::open("/nonexistent-artifacts", "model_fused").unwrap_err();
+        assert!(format!("{err:#}").contains("artifacts"), "{err:#}");
+    }
+}

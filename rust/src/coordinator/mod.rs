@@ -4,10 +4,12 @@
 //! at *request* time the coordinator routes traffic across a **registry
 //! of named plans** ([`MultiModelServer`]): each registered model gets a
 //! bounded queue with backpressure and a dedicated executor thread that
-//! owns its runtime (XLA-style handles are not `Send`, so runtimes never
-//! cross threads) and drains per-model micro-batches. Backends are either
-//! AOT artifacts ([`ModelBackend::Artifact`]) or pure-Rust fusion plans
-//! ([`ModelBackend::Engine`]), so many zoo models can be served
+//! owns its live [`crate::backend::InferBackend`] (XLA-style handles are
+//! not `Send`, so backends are instantiated inside their executor via
+//! [`crate::backend::BackendSpec::connect`]) and drains per-model
+//! micro-batches. Specs describe AOT artifacts, in-memory fusion
+//! settings, or pre-solved serialized [`crate::optimizer::Plan`]s
+//! ([`ModelSpec::plan_file`]), so many zoo models can be served
 //! concurrently without a Python step. [`Metrics`] reports queue depth,
 //! latency percentiles, rejections, and shutdown drops per model;
 //! shutdown drains queued requests with structured
@@ -20,6 +22,6 @@ mod server;
 
 pub use metrics::{LatencyStats, Metrics, ModelMetrics};
 pub use server::{
-    BoundHandle, InferenceServer, ModelBackend, ModelSpec, MultiModelServer, Pending,
-    ServeError, ServerConfig, ServerHandle,
+    BoundHandle, InferenceServer, ModelSpec, MultiModelServer, Pending, ServeError,
+    ServerConfig, ServerHandle,
 };

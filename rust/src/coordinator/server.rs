@@ -13,19 +13,16 @@
 //! [`Metrics`] — never silently dropped.
 
 use std::collections::BTreeMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc as std_mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::exec::Engine;
-use crate::memory::Arena;
+use crate::backend::{BackendSpec, InferBackend};
 use crate::model::ModelChain;
-use crate::ops::Tensor;
-use crate::optimizer::FusionSetting;
-use crate::runtime::Runtime;
+use crate::optimizer::{FusionSetting, Plan};
 use crate::util::error::{Error, Result};
 
 use super::metrics::Metrics;
@@ -34,22 +31,14 @@ use super::metrics::Metrics;
 /// shutdown latency without requiring every handle clone to be dropped.
 const STOP_POLL: Duration = Duration::from_millis(25);
 
-/// What executes a registered model's requests.
-#[derive(Debug, Clone)]
-pub enum ModelBackend {
-    /// An AOT artifact entry run by the [`Runtime`].
-    Artifact { dir: PathBuf, entry: String },
-    /// A fusion plan run by the pure-Rust tracked executor — serves any
-    /// zoo model without artifacts (and is what the tests register).
-    Engine { model: ModelChain, setting: FusionSetting },
-}
-
 /// One entry of the server's model registry.
 #[derive(Debug, Clone)]
 pub struct ModelSpec {
     /// Registry key; `submit` routes on this.
     pub id: String,
-    pub backend: ModelBackend,
+    /// What executes this model's requests, instantiated inside the
+    /// executor thread via [`BackendSpec::connect`].
+    pub backend: BackendSpec,
     /// Bounded queue depth; senders get backpressure errors beyond this.
     pub queue_cap: usize,
     /// Max requests drained per executor wakeup (micro-batch).
@@ -57,28 +46,43 @@ pub struct ModelSpec {
 }
 
 impl ModelSpec {
+    fn with_backend(id: impl Into<String>, backend: BackendSpec) -> Self {
+        Self { id: id.into(), backend, queue_cap: 256, batch_max: 8 }
+    }
+
+    /// An AOT artifact entry served by the artifact runtime.
     pub fn artifact(
         id: impl Into<String>,
         dir: impl Into<PathBuf>,
         entry: impl Into<String>,
     ) -> Self {
-        Self {
-            id: id.into(),
-            backend: ModelBackend::Artifact { dir: dir.into(), entry: entry.into() },
-            queue_cap: 256,
-            batch_max: 8,
-        }
+        Self::with_backend(id, BackendSpec::Artifact { dir: dir.into(), entry: entry.into() })
     }
 
+    /// A fusion setting served by the pure-Rust tracked executor — any
+    /// zoo model without artifacts (and what the tests register).
     pub fn engine(id: impl Into<String>, model: ModelChain, setting: FusionSetting) -> Self {
-        Self {
-            id: id.into(),
-            backend: ModelBackend::Engine { model, setting },
-            queue_cap: 256,
-            batch_max: 8,
-        }
+        Self::with_backend(id, BackendSpec::Engine { model, setting })
     }
 
+    /// A pre-solved [`Plan`] (e.g. [`crate::optimizer::Planner`] output
+    /// loaded from disk); the model is resolved from the zoo by name.
+    pub fn plan(id: impl Into<String>, plan: Plan) -> Self {
+        Self::with_backend(id, BackendSpec::Plan { plan })
+    }
+
+    /// [`ModelSpec::plan`] from a plan JSON on disk — parse errors, an
+    /// unresolvable model name, and span/model mismatches all surface at
+    /// registration time, not through the first request.
+    pub fn plan_file(id: impl Into<String>, path: impl AsRef<Path>) -> Result<Self> {
+        let plan = Plan::load(path)?;
+        let model = crate::zoo::by_name(&plan.model)
+            .ok_or_else(|| crate::anyhow!("plan model '{}' is not a zoo model", plan.model))?;
+        plan.validate_for(&model)?;
+        Ok(Self::plan(id, plan))
+    }
+
+    #[must_use]
     pub fn with_queue(mut self, queue_cap: usize, batch_max: usize) -> Self {
         self.queue_cap = queue_cap;
         self.batch_max = batch_max;
@@ -304,59 +308,6 @@ impl BoundHandle {
     }
 }
 
-/// The model's executor-side state: backend created *inside* the worker
-/// thread (PJRT-style handles are not `Send`).
-enum RunningBackend {
-    Engine { engine: Engine, setting: FusionSetting },
-    Artifact { rt: Runtime, entry: String },
-}
-
-impl RunningBackend {
-    fn init(backend: ModelBackend) -> Result<Self, String> {
-        match backend {
-            ModelBackend::Engine { model, setting } => {
-                Ok(RunningBackend::Engine { engine: Engine::new(model), setting })
-            }
-            ModelBackend::Artifact { dir, entry } => {
-                // `ServeError::BackendInit` supplies the "runtime init
-                // failed" framing; keep only the cause here.
-                let mut rt = Runtime::open(&dir).map_err(|e| format!("{e:#}"))?;
-                rt.load(&entry).map_err(|e| format!("load '{entry}': {e:#}"))?;
-                Ok(RunningBackend::Artifact { rt, entry })
-            }
-        }
-    }
-
-    fn run(&mut self, input: &[f32]) -> Result<Vec<f32>, String> {
-        match self {
-            RunningBackend::Engine { engine, setting } => {
-                let shape = engine.model().shapes[0];
-                if input.len() as u64 != shape.elems() {
-                    return Err(format!(
-                        "input length {} != expected {} for {shape}",
-                        input.len(),
-                        shape.elems()
-                    ));
-                }
-                let t = Tensor::from_data(
-                    shape.h as usize,
-                    shape.w as usize,
-                    shape.c as usize,
-                    input.to_vec(),
-                );
-                let mut arena = Arena::unbounded();
-                engine
-                    .run(setting, &t, &mut arena)
-                    .map(|r| r.output)
-                    .map_err(|e| e.to_string())
-            }
-            RunningBackend::Artifact { rt, entry } => {
-                rt.run_f32(entry, input).map_err(|e| format!("{e:#}"))
-            }
-        }
-    }
-}
-
 /// The running registry: one executor thread per registered model.
 pub struct MultiModelServer {
     handle: Option<ServerHandle>,
@@ -472,32 +423,35 @@ fn worker_loop(
     let id = spec.id.clone();
     let batch_max = spec.batch_max.max(1);
 
-    let mut backend = match RunningBackend::init(spec.backend) {
-        Ok(b) => b,
-        Err(detail) => {
-            // Reply the structured init failure to everything that ever
-            // arrives, until shutdown or all senders drop.
-            loop {
-                match rx.recv_timeout(STOP_POLL) {
-                    Ok(req) => {
-                        metrics.lock().unwrap().model_mut(&id).queue_dec();
-                        let _ = req.reply.send(Err(ServeError::BackendInit {
-                            model_id: id.clone(),
-                            detail: detail.clone(),
-                        }));
-                    }
-                    Err(std_mpsc::RecvTimeoutError::Timeout) => {
-                        if stopping.load(Ordering::SeqCst) {
-                            break;
+    // The live backend is created *inside* the worker thread
+    // (PJRT-style handles are not `Send`); the spec crossed instead.
+    let mut backend: Box<dyn InferBackend> =
+        match spec.backend.connect().map_err(|e| format!("{e:#}")) {
+            Ok(b) => b,
+            Err(detail) => {
+                // Reply the structured init failure to everything that
+                // ever arrives, until shutdown or all senders drop.
+                loop {
+                    match rx.recv_timeout(STOP_POLL) {
+                        Ok(req) => {
+                            metrics.lock().unwrap().model_mut(&id).queue_dec();
+                            let _ = req.reply.send(Err(ServeError::BackendInit {
+                                model_id: id.clone(),
+                                detail: detail.clone(),
+                            }));
                         }
+                        Err(std_mpsc::RecvTimeoutError::Timeout) => {
+                            if stopping.load(Ordering::SeqCst) {
+                                break;
+                            }
+                        }
+                        Err(std_mpsc::RecvTimeoutError::Disconnected) => break,
                     }
-                    Err(std_mpsc::RecvTimeoutError::Disconnected) => break,
                 }
+                drain_shutdown(&rx, &inflight, &metrics, &id);
+                return;
             }
-            drain_shutdown(&rx, &inflight, &metrics, &id);
-            return;
-        }
-    };
+        };
 
     loop {
         let first = match rx.recv_timeout(STOP_POLL) {
@@ -533,9 +487,10 @@ fn worker_loop(
             }
         }
         for req in batch {
-            let res = backend
-                .run(&req.input)
-                .map_err(|detail| ServeError::Failed { model_id: id.clone(), detail });
+            let res = backend.run(&req.input).map_err(|e| ServeError::Failed {
+                model_id: id.clone(),
+                detail: format!("{e:#}"),
+            });
             metrics.lock().unwrap().model_mut(&id).record(req.enqueued.elapsed());
             let _ = req.reply.send(res);
         }
@@ -601,11 +556,18 @@ mod tests {
         server.shutdown();
     }
 
+    fn tiny_vanilla() -> (ModelChain, FusionSetting) {
+        let m = crate::zoo::tiny_cnn();
+        let setting = crate::optimizer::Planner::for_model(m.clone())
+            .strategy(crate::optimizer::strategy::Vanilla)
+            .setting()
+            .unwrap();
+        (m, setting)
+    }
+
     #[test]
     fn unknown_model_is_structured() {
-        let m = crate::zoo::tiny_cnn();
-        let dag = crate::graph::FusionDag::build(&m, None);
-        let setting = crate::optimizer::vanilla_setting(&dag);
+        let (m, setting) = tiny_vanilla();
         let server =
             MultiModelServer::start(vec![ModelSpec::engine("tiny", m, setting)]).unwrap();
         let h = server.handle();
@@ -617,13 +579,31 @@ mod tests {
 
     #[test]
     fn duplicate_ids_rejected() {
-        let m = crate::zoo::tiny_cnn();
-        let dag = crate::graph::FusionDag::build(&m, None);
-        let setting = crate::optimizer::vanilla_setting(&dag);
+        let (m, setting) = tiny_vanilla();
         let specs = vec![
             ModelSpec::engine("m", m.clone(), setting.clone()),
             ModelSpec::engine("m", m, setting),
         ];
         assert!(MultiModelServer::start(specs).is_err());
+    }
+
+    #[test]
+    fn serve_error_composes_with_question_mark() {
+        fn downstream() -> std::result::Result<(), Box<dyn std::error::Error>> {
+            Err(ServeError::UnknownModel { model_id: "x".into() })?
+        }
+        let e = downstream().unwrap_err();
+        assert!(e.to_string().contains("unknown model 'x'"), "{e}");
+    }
+
+    #[test]
+    fn plan_spec_serves_a_presolved_plan() {
+        let plan = crate::optimizer::Planner::for_model(crate::zoo::tiny_cnn()).plan().unwrap();
+        let server = MultiModelServer::start(vec![ModelSpec::plan("tiny", plan)]).unwrap();
+        let h = server.handle();
+        let logits = h.infer("tiny", vec![0.5; 16 * 16 * 3]).unwrap();
+        assert_eq!(logits.len(), 4);
+        drop(h);
+        server.shutdown();
     }
 }

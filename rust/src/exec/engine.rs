@@ -358,8 +358,10 @@ impl Engine {
         input: &Tensor,
         arena: &mut Arena,
     ) -> Result<RunReport, OomError> {
-        let dag = crate::graph::FusionDag::build(&self.model, None);
-        let vanilla = crate::optimizer::vanilla_setting(&dag);
+        let vanilla = crate::optimizer::Planner::for_model(self.model.clone())
+            .strategy(crate::optimizer::strategy::Vanilla)
+            .setting()
+            .expect("vanilla path always exists");
         self.run(&vanilla, input, arena)
     }
 }
@@ -367,10 +369,9 @@ impl Engine {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::FusionDag;
     use crate::memory::Arena;
     use crate::ops::ParamGen;
-    use crate::optimizer::{minimize_ram_unconstrained, vanilla_setting};
+    use crate::optimizer::{strategy, Constraints, FusionSetting, Planner};
     use crate::zoo;
 
     fn rand_input(model: &ModelChain, seed: u64) -> Tensor {
@@ -384,18 +385,28 @@ mod tests {
         )
     }
 
+    /// `(vanilla, min-RAM)` settings off one shared planner.
+    fn plans_for(m: &ModelChain) -> (FusionSetting, FusionSetting) {
+        let mut planner = Planner::for_model(m.clone());
+        let fused = planner.setting().unwrap();
+        let vanilla = planner
+            .plan_with(&strategy::Vanilla, Constraints::none())
+            .unwrap()
+            .setting;
+        (vanilla, fused)
+    }
+
     #[test]
     fn fused_setting_matches_vanilla_numerics() {
         let m = zoo::quickstart();
         let engine = Engine::new(m.clone());
         let x = rand_input(&m, 11);
-        let dag = FusionDag::build(&m, None);
-        let fused = minimize_ram_unconstrained(&dag).unwrap();
+        let (vanilla, fused) = plans_for(&m);
         assert!(fused.num_fused_blocks() >= 1);
 
         let mut a1 = Arena::unbounded();
         let mut a2 = Arena::unbounded();
-        let rv = engine.run(&vanilla_setting(&dag), &x, &mut a1).unwrap();
+        let rv = engine.run(&vanilla, &x, &mut a1).unwrap();
         let rf = engine.run(&fused, &x, &mut a2).unwrap();
         assert_eq!(rv.output.len(), rf.output.len());
         for (a, b) in rv.output.iter().zip(&rf.output) {
@@ -429,11 +440,10 @@ mod tests {
         let m = zoo::mcunet_vww5();
         let engine = Engine::new(m.clone());
         let x = rand_input(&m, 7);
-        let dag = FusionDag::build(&m, None);
-        let fused = minimize_ram_unconstrained(&dag).unwrap();
+        let (vanilla, fused) = plans_for(&m);
         let mut a1 = Arena::unbounded();
         let mut a2 = Arena::unbounded();
-        let rv = engine.run(&vanilla_setting(&dag), &x, &mut a1).unwrap();
+        let rv = engine.run(&vanilla, &x, &mut a1).unwrap();
         let rf = engine.run(&fused, &x, &mut a2).unwrap();
         let max_out = rv
             .output

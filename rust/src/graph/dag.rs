@@ -3,6 +3,36 @@
 use crate::fusion::{span_edge_cost, CacheScheme, CostMemo, EdgeCost};
 use crate::model::ModelChain;
 
+/// Named construction options for [`FusionDag::build`], replacing the old
+/// opaque `max_depth: Option<usize>` positional argument.
+///
+/// `DagOptions::default()` is the paper's configuration: unbounded fusion
+/// depth under the H-cache scheme.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct DagOptions {
+    /// Cap on fusion-block length (`None` = unbounded, the paper's
+    /// default); depth pruning is used by ablations and the scaling bench.
+    pub max_depth: Option<usize>,
+    /// Intra-block cache scheme (§9 "Caching Paradigm" ablation).
+    pub scheme: CacheScheme,
+}
+
+impl DagOptions {
+    /// Cap fusion-block length at `depth` layers.
+    #[must_use]
+    pub fn max_depth(mut self, depth: usize) -> Self {
+        self.max_depth = Some(depth);
+        self
+    }
+
+    /// Build edge costs under `scheme` instead of the default H-cache.
+    #[must_use]
+    pub fn scheme(mut self, scheme: CacheScheme) -> Self {
+        self.scheme = scheme;
+        self
+    }
+}
+
 /// One edge of the inverted dataflow graph: layers `[a, b)` executed as a
 /// single layer (`b == a+1`) or as an H-cache fusion block.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -26,43 +56,24 @@ pub struct FusionDag {
 }
 
 impl FusionDag {
-    /// Build the full candidate graph. `max_depth` caps fusion-block length
-    /// (None = unbounded, the paper's default); depth pruning is used by
-    /// ablations and the scaling bench.
-    pub fn build(model: &ModelChain, max_depth: Option<usize>) -> Self {
-        Self::build_with_scheme(model, max_depth, CacheScheme::HCache)
+    /// Build the full candidate graph under `options`
+    /// ([`DagOptions::default`] = the paper's configuration).
+    pub fn build(model: &ModelChain, options: DagOptions) -> Self {
+        Self::build_inner(model, options, None)
     }
 
-    /// [`Self::build`] under an explicit intra-block cache scheme
-    /// (§9 "Caching Paradigm" ablation).
-    pub fn build_with_scheme(
-        model: &ModelChain,
-        max_depth: Option<usize>,
-        scheme: CacheScheme,
-    ) -> Self {
-        Self::build_inner(model, max_depth, scheme, None)
+    /// [`Self::build`] drawing edge costs from a shared per-model
+    /// [`CostMemo`], so repeated builds over the same model (budget
+    /// sweeps, [`crate::optimizer::Planner`] re-solves,
+    /// [`crate::optimizer::PlanBatch`] workers) stop recomputing
+    /// Eq. 5/11/12 from scratch. The memo must belong to `model` — keys
+    /// carry no model identity.
+    pub fn build_memoized(model: &ModelChain, options: DagOptions, memo: &CostMemo) -> Self {
+        Self::build_inner(model, options, Some(memo))
     }
 
-    /// [`Self::build_with_scheme`] drawing edge costs from a shared
-    /// per-model [`CostMemo`], so repeated builds over the same model
-    /// (budget sweeps, [`crate::optimizer::PlanBatch`] workers) stop
-    /// recomputing Eq. 5/11/12 from scratch. The memo must belong to
-    /// `model` — keys carry no model identity.
-    pub fn build_with_memo(
-        model: &ModelChain,
-        max_depth: Option<usize>,
-        scheme: CacheScheme,
-        memo: &CostMemo,
-    ) -> Self {
-        Self::build_inner(model, max_depth, scheme, Some(memo))
-    }
-
-    fn build_inner(
-        model: &ModelChain,
-        max_depth: Option<usize>,
-        scheme: CacheScheme,
-        memo: Option<&CostMemo>,
-    ) -> Self {
+    fn build_inner(model: &ModelChain, options: DagOptions, memo: Option<&CostMemo>) -> Self {
+        let DagOptions { max_depth, scheme } = options;
         let n_layers = model.num_layers();
         let n_nodes = n_layers + 1;
         let mut edges = Vec::new();
@@ -185,14 +196,14 @@ mod tests {
         // n fully-fusable layers: edges = n singles + C(n,2) fused spans...
         // spans [a,b) with b-a>=2: count = n*(n+1)/2 total pairs minus n
         // singles... for n=4: singles 4, spans (0,2..4),(1,3..4),(2,4) = 3+2+1=6.
-        let dag = FusionDag::build(&conv_chain(4), None);
+        let dag = FusionDag::build(&conv_chain(4), DagOptions::default());
         assert_eq!(dag.num_edges(), 4 + 6);
         assert_eq!(dag.n_nodes, 5);
     }
 
     #[test]
     fn depth_cap_prunes_long_spans() {
-        let dag = FusionDag::build(&conv_chain(4), Some(2));
+        let dag = FusionDag::build(&conv_chain(4), DagOptions::default().max_depth(2));
         // singles 4 + spans of exactly 2: (0,2),(1,3),(2,4) = 3.
         assert_eq!(dag.num_edges(), 7);
     }
@@ -209,7 +220,7 @@ mod tests {
                 Layer::dense("fc", 8, 2),
             ],
         );
-        let dag = FusionDag::build(&m, None);
+        let dag = FusionDag::build(&m, DagOptions::default());
         // 4 singles + (0,2) fused + the (0,4) iterative-tail candidate
         // (gp/fc not streamable, but §7 lets them fuse as a tail).
         assert_eq!(dag.num_edges(), 6);
@@ -222,9 +233,9 @@ mod tests {
         use crate::fusion::CostMemo;
         let m = conv_chain(5);
         let memo = CostMemo::new();
-        let plain = FusionDag::build(&m, None);
-        let cached = FusionDag::build_with_memo(&m, None, CacheScheme::HCache, &memo);
-        let again = FusionDag::build_with_memo(&m, None, CacheScheme::HCache, &memo);
+        let plain = FusionDag::build(&m, DagOptions::default());
+        let cached = FusionDag::build_memoized(&m, DagOptions::default(), &memo);
+        let again = FusionDag::build_memoized(&m, DagOptions::default(), &memo);
         assert_eq!(plain.edges, cached.edges);
         assert_eq!(cached.edges, again.edges);
         // The second build hits the memo for every edge.
@@ -234,8 +245,20 @@ mod tests {
     }
 
     #[test]
+    fn options_are_named_and_chainable() {
+        let opts = DagOptions::default()
+            .max_depth(3)
+            .scheme(CacheScheme::FullyCache);
+        assert_eq!(opts.max_depth, Some(3));
+        assert_eq!(opts.scheme, CacheScheme::FullyCache);
+        let dag = FusionDag::build(&conv_chain(4), opts);
+        let full = FusionDag::build(&conv_chain(4), DagOptions::default());
+        assert!(dag.num_edges() < full.num_edges());
+    }
+
+    #[test]
     fn removal_keeps_indices_stable() {
-        let dag = FusionDag::build(&conv_chain(3), None);
+        let dag = FusionDag::build(&conv_chain(3), DagOptions::default());
         let worst = dag.max_ram_edges();
         let sub = dag.without_edges(&worst);
         assert!(sub.max_live_ram().unwrap() < dag.max_live_ram().unwrap());

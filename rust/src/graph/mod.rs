@@ -11,4 +11,4 @@ mod dag;
 pub use algo::{
     enumerate_paths, min_sum_path, minimax_path, path_cost, PathCost,
 };
-pub use dag::{DagEdge, FusionDag};
+pub use dag::{DagEdge, DagOptions, FusionDag};

@@ -7,31 +7,50 @@
 //!
 //! * **L3 (this crate)** — the paper's contribution: CNN chain IR
 //!   ([`model`], [`zoo`]), H-cache fusion analytics ([`fusion`]), the
-//!   inverted dataflow DAG ([`graph`]), the P1/P2 constrained optimizers
-//!   and baselines ([`optimizer`]), a pure-Rust patch-based executor with
+//!   inverted dataflow DAG ([`graph`]), the [`optimizer::Planner`]
+//!   pipeline over interchangeable [`optimizer::PlanStrategy`] solvers
+//!   (P1/P2 and the §8 baselines), a pure-Rust patch-based executor with
 //!   RAM tracking ([`ops`], [`memory`], [`exec`]), an MCU board/latency
-//!   simulator ([`mcu`]), the artifact runtime ([`runtime`]), a
+//!   simulator ([`mcu`]), the artifact runtime ([`runtime`]), the
+//!   [`backend::InferBackend`] trait unifying both executors, a
 //!   multi-model serving coordinator ([`coordinator`]), and the paper's
 //!   table/figure renderers ([`report`]).
 //! * **L2/L1 (build-time Python)** — `python/compile/`: a JAX model whose
 //!   hot ops are Pallas kernels (patch-based fused pyramid, iterative
 //!   pooling/dense), AOT-lowered to HLO text in `artifacts/`.
 //!
-//! Quickstart:
+//! ## Quickstart: one pipeline from zoo model to served plan
 //!
 //! ```no_run
-//! use msf_cnn::graph::FusionDag;
-//! use msf_cnn::optimizer::{minimize_macs, minimize_ram_unconstrained};
+//! use msf_cnn::backend::{EngineBackend, InferBackend};
+//! use msf_cnn::optimizer::{Constraint, Planner};
 //! use msf_cnn::zoo;
 //!
-//! let model = zoo::mbv2(0.35, 144, 1000);
-//! let dag = FusionDag::build(&model, None);
-//! let min_ram = minimize_ram_unconstrained(&dag).unwrap();
-//! println!("min peak RAM: {} kB (F={:.2})",
-//!          min_ram.cost.peak_ram as f64 / 1000.0, min_ram.cost.overhead);
-//! let budget = minimize_macs(&dag, 64_000).unwrap(); // fit a 64 kB MCU
-//! println!("64 kB setting: {}", budget.describe());
+//! // Plan: minimize peak RAM (strategy P1, the default) under a 64 kB
+//! // MCU budget.
+//! let plan = Planner::for_model(zoo::mbv2(0.35, 144, 1000))
+//!     .constraint(Constraint::Ram(64_000))
+//!     .plan()
+//!     .unwrap();
+//! println!("{}", plan.describe());
+//!
+//! // Persist: the plan round-trips through JSON, so serving can load it
+//! // without re-running the optimizer.
+//! plan.save("mbv2.plan.json").unwrap();
+//!
+//! // Execute: any backend behind the same trait.
+//! let mut backend = EngineBackend::from_plan(
+//!     &msf_cnn::optimizer::Plan::load("mbv2.plan.json").unwrap(),
+//! )
+//! .unwrap();
+//! let logits = backend.run(&vec![0.0; 144 * 144 * 3]).unwrap();
+//! println!("{} logits, plan peak {} B", logits.len(), backend.peak_ram());
 //! ```
+//!
+//! Baselines are a strategy swap on the same pipeline
+//! ([`optimizer::strategy`]): `P1`, `P2`, `Vanilla`, MCUNetV2-style
+//! `HeadFusion`, StreamNet-style `StreamNet`, and exact `Exhaustive`
+//! enumeration all implement [`optimizer::PlanStrategy`].
 //!
 //! ## Scaling surfaces
 //!
@@ -56,26 +75,26 @@
 //! ```
 //!
 //! * **Multi-model serving** — [`coordinator::MultiModelServer`] routes
-//!   requests across a registry of named plans (artifact- or
-//!   engine-backed), one executor thread + bounded queue per model, with
-//!   per-model metrics and a structured shutdown drain:
+//!   requests across a registry of named plans (artifact-, engine-, or
+//!   plan-file-backed [`backend::BackendSpec`]s), one executor thread +
+//!   bounded queue per model, with per-model metrics and a structured
+//!   shutdown drain:
 //!
 //! ```no_run
 //! use msf_cnn::coordinator::{ModelSpec, MultiModelServer};
-//! use msf_cnn::graph::FusionDag;
-//! use msf_cnn::optimizer::minimize_ram_unconstrained;
+//! use msf_cnn::optimizer::Planner;
 //! use msf_cnn::zoo;
 //!
-//! let model = zoo::quickstart();
-//! let plan = minimize_ram_unconstrained(&FusionDag::build(&model, None)).unwrap();
+//! let plan = Planner::for_model(zoo::quickstart()).plan().unwrap();
 //! let server = MultiModelServer::start(vec![
-//!     ModelSpec::engine("quickstart", model, plan),
+//!     ModelSpec::plan("quickstart", plan),
 //! ]).unwrap();
 //! let logits = server.handle().infer("quickstart", vec![0.0; 32 * 32 * 3]).unwrap();
 //! # drop(logits);
 //! server.shutdown();
 //! ```
 
+pub mod backend;
 pub mod coordinator;
 pub mod exec;
 pub mod fusion;

@@ -15,14 +15,10 @@ use msf_cnn::util::error::Result;
 use msf_cnn::{anyhow, bail};
 
 use msf_cnn::exec::Engine;
-use msf_cnn::graph::FusionDag;
 use msf_cnn::mcu::{board_by_name, estimate_latency_ms, BOARDS};
 use msf_cnn::memory::Arena;
 use msf_cnn::ops::{ParamGen, Tensor};
-use msf_cnn::optimizer::{
-    heuristic_head_fusion, minimize_macs, minimize_macs_unconstrained, minimize_ram,
-    minimize_ram_unconstrained, streamnet_single_block, vanilla_setting, FusionSetting,
-};
+use msf_cnn::optimizer::{strategy, Constraint, Constraints, Plan, Planner, PlanStrategy};
 use msf_cnn::report;
 use msf_cnn::zoo;
 
@@ -31,10 +27,11 @@ msfcnn — patch-based multi-stage fusion for TinyML (msf-CNN reproduction)
 
 USAGE:
   msfcnn zoo [--model NAME]
-  msfcnn optimize --model NAME [--f-max F|inf | --p-max-kb N] [--baselines]
+  msfcnn optimize --model NAME [--f-max F|inf | --p-max-kb N] [--baselines] [--save FILE]
   msfcnn simulate --model NAME [--f-max F|inf | --p-max-kb N] [--board BOARD] [--trace]
   msfcnn tables [--which 1|2|3|5|fig2|fig3|fig4|all]
   msfcnn serve [--artifacts DIR] [--entry NAME] [--requests N]
+  msfcnn serve --plan FILE [--id NAME] [--requests N]
 ";
 
 /// Tiny flag parser: `--key value` and boolean `--key` pairs.
@@ -86,24 +83,26 @@ fn parse_f_max(s: &str) -> Result<f64> {
     }
 }
 
-fn pick_setting(dag: &FusionDag, args: &Args) -> Result<FusionSetting> {
+/// `(strategy, constraints)` the CLI flags denote: `--f-max` is problem
+/// P1, `--p-max-kb` is problem P2, neither is the vanilla baseline.
+fn pick_objective(args: &Args) -> Result<(&'static dyn PlanStrategy, Constraints)> {
     match (args.get("f-max"), args.get("p-max-kb")) {
         (Some(f), None) => {
             let f = parse_f_max(f)?;
-            let s = if f.is_infinite() {
-                minimize_ram_unconstrained(dag)
-            } else {
-                minimize_ram(dag, f)
-            };
-            s.ok_or_else(|| anyhow!("no feasible P1 solution"))
+            Ok((&strategy::P1, Constraints::none().with(Constraint::Overhead(f))))
         }
         (None, Some(p)) => {
             let p: u64 = p.parse()?;
-            minimize_macs(dag, p * 1000).ok_or_else(|| anyhow!("no solution under {p} kB"))
+            Ok((&strategy::P2, Constraints::none().with(Constraint::Ram(p * 1000))))
         }
-        (None, None) => Ok(vanilla_setting(dag)),
+        (None, None) => Ok((&strategy::Vanilla, Constraints::none())),
         (Some(_), Some(_)) => bail!("choose either --f-max (P1) or --p-max-kb (P2)"),
     }
+}
+
+fn pick_plan(planner: &mut Planner, args: &Args) -> Result<Plan> {
+    let (s, c) = pick_objective(args)?;
+    planner.plan_with(s, c)
 }
 
 fn model_arg(args: &Args) -> Result<msf_cnn::model::ModelChain> {
@@ -146,19 +145,23 @@ fn main() -> Result<()> {
         },
         "optimize" => {
             let m = model_arg(&args)?;
-            let dag = FusionDag::build(&m, None);
-            println!(
-                "{}: {} nodes, {} edges, vanilla peak {:.3} kB",
-                m.name,
-                dag.n_nodes,
-                dag.num_edges(),
-                report::kb(m.vanilla_peak_ram())
-            );
-            let s = if !args.has("f-max") && !args.has("p-max-kb") {
-                minimize_macs_unconstrained(&dag).ok_or_else(|| anyhow!("no complete path?!"))?
-            } else {
-                pick_setting(&dag, &args)?
+            let name = m.name.clone();
+            let vanilla_peak = m.vanilla_peak_ram();
+            let mut planner = Planner::for_model(m);
+            let (n_nodes, n_edges) = {
+                let dag = planner.dag();
+                (dag.n_nodes, dag.num_edges())
             };
+            println!(
+                "{name}: {n_nodes} nodes, {n_edges} edges, vanilla peak {:.3} kB",
+                report::kb(vanilla_peak)
+            );
+            let plan = if !args.has("f-max") && !args.has("p-max-kb") {
+                planner.plan_with(&strategy::P2, Constraints::none())?
+            } else {
+                pick_plan(&mut planner, &args)?
+            };
+            let s = &plan.setting;
             println!(
                 "setting {}  peak RAM {:.3} kB  F {:.3}  ({} fused blocks)",
                 s.describe(),
@@ -167,25 +170,30 @@ fn main() -> Result<()> {
                 s.num_fused_blocks()
             );
             if args.has("baselines") {
-                for (name, b) in [
-                    ("vanilla", Some(vanilla_setting(&dag))),
-                    ("heuristic", Some(heuristic_head_fusion(&dag))),
-                    ("streamnet", streamnet_single_block(&dag, None)),
-                ] {
-                    if let Some(b) = b {
+                let baselines: [(&str, &dyn PlanStrategy); 3] = [
+                    ("vanilla", &strategy::Vanilla),
+                    ("heuristic", &strategy::HeadFusion),
+                    ("streamnet", &strategy::StreamNet),
+                ];
+                for (name, b) in baselines {
+                    if let Ok(p) = planner.plan_with(b, Constraints::none()) {
                         println!(
                             "  {name:<10} peak {:.3} kB  F {:.3}",
-                            report::kb(b.cost.peak_ram),
-                            b.cost.overhead
+                            report::kb(p.cost().peak_ram),
+                            p.cost().overhead
                         );
                     }
                 }
             }
+            if let Some(path) = args.get("save") {
+                plan.save(path)?;
+                println!("plan written to {path}");
+            }
         }
         "simulate" => {
             let m = model_arg(&args)?;
-            let dag = FusionDag::build(&m, None);
-            let s = pick_setting(&dag, &args)?;
+            let mut planner = Planner::for_model(m.clone());
+            let s = pick_plan(&mut planner, &args)?.setting;
             let engine = Engine::new(m.clone());
             let mut gen = ParamGen::new(42);
             let shape = m.shapes[0];
@@ -279,22 +287,36 @@ fn main() -> Result<()> {
             }
         }
         "serve" => {
-            use msf_cnn::coordinator::{InferenceServer, ServerConfig};
-            let artifacts = args.get("artifacts").unwrap_or("artifacts").to_string();
-            let entry = args.get("entry").unwrap_or("model_fused").to_string();
+            use msf_cnn::coordinator::{ModelSpec, MultiModelServer};
             let requests = args.get_usize("requests", 100)?;
-            let server = InferenceServer::start(
-                &artifacts,
-                ServerConfig { entry: entry.clone(), ..Default::default() },
-            )?;
+            // Either a pre-solved plan file (the Planner's output) or an
+            // AOT artifact entry — both serve through the same backend
+            // trait and registry.
+            let (spec, input_len) = match args.get("plan") {
+                Some(path) => {
+                    let plan = Plan::load(path)?;
+                    let id = args.get("id").unwrap_or(&plan.model).to_string();
+                    let model = zoo::by_name(&plan.model)
+                        .ok_or_else(|| anyhow!("plan model '{}' not in zoo", plan.model))?;
+                    let input_len = model.shapes[0].elems() as usize;
+                    println!("serving {}", plan.describe());
+                    (ModelSpec::plan(id, plan), input_len)
+                }
+                None => {
+                    let artifacts = args.get("artifacts").unwrap_or("artifacts").to_string();
+                    let entry = args.get("entry").unwrap_or("model_fused").to_string();
+                    (ModelSpec::artifact(entry.clone(), artifacts, entry), 32 * 32 * 3)
+                }
+            };
+            let id = spec.id.clone();
+            let server = MultiModelServer::start(vec![spec])?;
             let handle = server.handle();
             let mut gen = ParamGen::new(123);
-            let input_len = 32 * 32 * 3;
             let mut ok = 0usize;
             let t0 = std::time::Instant::now();
             for _ in 0..requests {
                 let input = gen.fill(input_len, 2.0);
-                if handle.infer(input).is_ok() {
+                if handle.infer(&id, input).is_ok() {
                     ok += 1;
                 }
             }

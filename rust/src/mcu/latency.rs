@@ -127,26 +127,36 @@ pub fn estimate_latency_ms(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::FusionDag;
     use crate::mcu::board_by_name;
-    use crate::optimizer::{minimize_ram_unconstrained, vanilla_setting};
+    use crate::model::ModelChain;
+    use crate::optimizer::{strategy, Constraints, FusionSetting, Planner};
     use crate::zoo;
+
+    /// `(vanilla, min-RAM)` settings off one shared planner.
+    fn plans_for(m: &ModelChain) -> (FusionSetting, FusionSetting) {
+        let mut planner = Planner::for_model(m.clone());
+        let fused = planner.setting().unwrap();
+        let vanilla = planner
+            .plan_with(&strategy::Vanilla, Constraints::none())
+            .unwrap()
+            .setting;
+        (vanilla, fused)
+    }
 
     #[test]
     fn fused_is_slower_than_vanilla() {
         let m = zoo::mcunet_vww5();
-        let dag = FusionDag::build(&m, None);
+        let (vanilla, fused) = plans_for(&m);
         let b = board_by_name("nucleo-f767zi").unwrap();
-        let v = estimate_latency_ms(&m, &vanilla_setting(&dag), b);
-        let f = estimate_latency_ms(&m, &minimize_ram_unconstrained(&dag).unwrap(), b);
+        let v = estimate_latency_ms(&m, &vanilla, b);
+        let f = estimate_latency_ms(&m, &fused, b);
         assert!(f.total_ms > v.total_ms, "fusion trades latency for RAM");
     }
 
     #[test]
     fn clock_scales_latency_within_isa() {
         let m = zoo::tiny_cnn();
-        let dag = FusionDag::build(&m, None);
-        let s = vanilla_setting(&dag);
+        let (s, _) = plans_for(&m);
         let f767 = estimate_latency_ms(&m, &s, board_by_name("nucleo-f767zi").unwrap());
         let f412 = estimate_latency_ms(&m, &s, board_by_name("nucleo-f412zg").unwrap());
         assert!(f412.total_ms > f767.total_ms, "100 MHz M4 slower than 216 MHz M7");
@@ -157,8 +167,7 @@ mod tests {
         // Paper §8.1: RISC-V esp32c3 @160 MHz edges out Xtensa esp32s3
         // @240 MHz on MN2-320K despite the lower clock.
         let m = zoo::mcunet_320k();
-        let dag = FusionDag::build(&m, None);
-        let s = minimize_ram_unconstrained(&dag).unwrap();
+        let (_, s) = plans_for(&m);
         let s3 = estimate_latency_ms(&m, &s, board_by_name("esp32s3-devkit").unwrap());
         let c3 = estimate_latency_ms(&m, &s, board_by_name("esp32c3-devkit").unwrap());
         assert!(c3.total_ms < s3.total_ms);
@@ -168,10 +177,8 @@ mod tests {
     fn measured_overhead_exceeds_f_factor() {
         // §8.3: wall-clock overhead > F because of flash refetch.
         let m = zoo::mcunet_vww5();
-        let dag = FusionDag::build(&m, None);
         let b = board_by_name("nucleo-f767zi").unwrap();
-        let v = vanilla_setting(&dag);
-        let f = minimize_ram_unconstrained(&dag).unwrap();
+        let (v, f) = plans_for(&m);
         let lat_ratio = estimate_latency_ms(&m, &f, b).total_ms
             / estimate_latency_ms(&m, &v, b).total_ms;
         assert!(

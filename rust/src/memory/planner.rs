@@ -84,8 +84,7 @@ pub fn plan_pool(model: &ModelChain) -> PoolPlan {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::FusionDag;
-    use crate::optimizer::minimize_ram_unconstrained;
+    use crate::optimizer::Planner;
     use crate::zoo;
 
     fn assert_no_live_overlap(plan: &PoolPlan) {
@@ -131,8 +130,7 @@ mod tests {
         // ...while msf-CNN's patch-based execution goes far below it.
         for (_, m) in zoo::paper_models() {
             let plan = plan_pool(&m);
-            let dag = FusionDag::build(&m, None);
-            let msf = minimize_ram_unconstrained(&dag).unwrap();
+            let msf = Planner::for_model(m.clone()).plan().unwrap().setting;
             assert!(
                 (msf.cost.peak_ram as f64) < 0.5 * plan.pool_bytes as f64,
                 "{}: fusion {} vs planner {}",

@@ -1,12 +1,22 @@
 //! Comparator settings: vanilla, the MCUNetV2-style head-fusion heuristic,
 //! and a StreamNet-style single-block brute force (§8's baselines).
+//!
+//! The canonical entry points are the [`crate::optimizer::strategy`]
+//! implementations ([`strategy::Vanilla`], [`strategy::HeadFusion`],
+//! [`strategy::StreamNet`]) driven through a
+//! [`crate::optimizer::Planner`]; the free functions here remain as
+//! deprecated wrappers over the same solvers.
+//!
+//! [`strategy::Vanilla`]: crate::optimizer::strategy::Vanilla
+//! [`strategy::HeadFusion`]: crate::optimizer::strategy::HeadFusion
+//! [`strategy::StreamNet`]: crate::optimizer::strategy::StreamNet
 
 use crate::graph::FusionDag;
 
 use super::{FusionSetting, OptResult};
 
 /// The un-fused model: every edge a single layer.
-pub fn vanilla_setting(dag: &FusionDag) -> FusionSetting {
+pub(crate) fn solve_vanilla(dag: &FusionDag) -> FusionSetting {
     let mut path = Vec::new();
     for v in 0..dag.n_nodes - 1 {
         let e = dag.out[v]
@@ -23,13 +33,10 @@ pub fn vanilla_setting(dag: &FusionDag) -> FusionSetting {
 /// pick the single prefix block `[0, b)` that minimizes the setting's peak
 /// RAM, executing every later layer unfused. Simple, but blind to interior
 /// RAM peaks, which is exactly where msf-CNN finds better solutions.
-pub fn heuristic_head_fusion(dag: &FusionDag) -> FusionSetting {
+pub(crate) fn solve_head_fusion(dag: &FusionDag) -> FusionSetting {
     let mut best: Option<FusionSetting> = None;
     for &e in &dag.out[0] {
         let b = dag.edges[e].b;
-        if b == 1 && dag.edges[e].a == 0 && dag.out[0].len() > 1 {
-            // Also consider pure vanilla below via b == 1 case naturally.
-        }
         let mut path = vec![e];
         let mut v = b;
         while v < dag.n_nodes - 1 {
@@ -57,7 +64,7 @@ pub fn heuristic_head_fusion(dag: &FusionDag) -> FusionSetting {
 /// the chain (2-D tensor cache ≈ our H-cache), position and depth chosen
 /// by exhaustive sweep to minimize peak RAM; ties toward fewer MACs.
 /// Optionally capped by a RAM limit (`None` ⇒ unconstrained minimum).
-pub fn streamnet_single_block(dag: &FusionDag, p_max_bytes: Option<u64>) -> OptResult {
+pub(crate) fn solve_streamnet(dag: &FusionDag, p_max_bytes: Option<u64>) -> OptResult {
     let mut best: Option<FusionSetting> = None;
     // Candidate blocks: every fused edge; plus the pure vanilla path.
     let mut candidates: Vec<Option<usize>> = dag
@@ -101,11 +108,30 @@ pub fn streamnet_single_block(dag: &FusionDag, p_max_bytes: Option<u64>) -> OptR
     best
 }
 
+/// Vanilla baseline — deprecated free-function surface.
+#[deprecated(since = "0.2.0", note = "use optimizer::Planner with strategy::Vanilla")]
+pub fn vanilla_setting(dag: &FusionDag) -> FusionSetting {
+    solve_vanilla(dag)
+}
+
+/// MCUNetV2-style head fusion — deprecated free-function surface.
+#[deprecated(since = "0.2.0", note = "use optimizer::Planner with strategy::HeadFusion")]
+pub fn heuristic_head_fusion(dag: &FusionDag) -> FusionSetting {
+    solve_head_fusion(dag)
+}
+
+/// StreamNet single-block baseline — deprecated free-function surface.
+#[deprecated(since = "0.2.0", note = "use optimizer::Planner with strategy::StreamNet")]
+pub fn streamnet_single_block(dag: &FusionDag, p_max_bytes: Option<u64>) -> OptResult {
+    solve_streamnet(dag, p_max_bytes)
+}
+
 #[cfg(test)]
 mod tests {
+    use super::super::p1::solve_p1_unconstrained;
     use super::*;
+    use crate::graph::DagOptions;
     use crate::model::{Activation, Layer, ModelChain, TensorShape};
-    use crate::optimizer::minimize_ram_unconstrained;
 
     fn model() -> ModelChain {
         ModelChain::new(
@@ -125,8 +151,8 @@ mod tests {
     #[test]
     fn vanilla_has_no_fused_blocks_and_f_1() {
         let m = model();
-        let dag = FusionDag::build(&m, None);
-        let v = vanilla_setting(&dag);
+        let dag = FusionDag::build(&m, DagOptions::default());
+        let v = solve_vanilla(&dag);
         assert_eq!(v.num_fused_blocks(), 0);
         assert!((v.cost.overhead - 1.0).abs() < 1e-12);
         assert_eq!(v.cost.peak_ram, m.vanilla_peak_ram());
@@ -135,8 +161,8 @@ mod tests {
     #[test]
     fn heuristic_beats_vanilla_on_head_heavy_model() {
         let m = model();
-        let dag = FusionDag::build(&m, None);
-        let h = heuristic_head_fusion(&dag);
+        let dag = FusionDag::build(&m, DagOptions::default());
+        let h = solve_head_fusion(&dag);
         assert!(h.cost.peak_ram < m.vanilla_peak_ram());
     }
 
@@ -144,28 +170,28 @@ mod tests {
     fn msf_beats_or_ties_all_baselines() {
         // The paper's headline: the multi-stage search dominates both the
         // head heuristic and single-block StreamNet on peak RAM.
-        let dag = FusionDag::build(&model(), None);
-        let msf = minimize_ram_unconstrained(&dag).unwrap();
-        let h = heuristic_head_fusion(&dag);
-        let sn = streamnet_single_block(&dag, None).unwrap();
+        let dag = FusionDag::build(&model(), DagOptions::default());
+        let msf = solve_p1_unconstrained(&dag).unwrap();
+        let h = solve_head_fusion(&dag);
+        let sn = solve_streamnet(&dag, None).unwrap();
         assert!(msf.cost.peak_ram <= h.cost.peak_ram);
         assert!(msf.cost.peak_ram <= sn.cost.peak_ram);
     }
 
     #[test]
     fn streamnet_uses_at_most_one_block() {
-        let dag = FusionDag::build(&model(), None);
-        let sn = streamnet_single_block(&dag, None).unwrap();
+        let dag = FusionDag::build(&model(), DagOptions::default());
+        let sn = solve_streamnet(&dag, None).unwrap();
         assert!(sn.num_fused_blocks() <= 1);
     }
 
     #[test]
     fn streamnet_respects_ram_cap() {
-        let dag = FusionDag::build(&model(), None);
-        let unconstrained = streamnet_single_block(&dag, None).unwrap();
-        if let Some(s) = streamnet_single_block(&dag, Some(unconstrained.cost.peak_ram)) {
+        let dag = FusionDag::build(&model(), DagOptions::default());
+        let unconstrained = solve_streamnet(&dag, None).unwrap();
+        if let Some(s) = solve_streamnet(&dag, Some(unconstrained.cost.peak_ram)) {
             assert!(s.cost.peak_ram <= unconstrained.cost.peak_ram);
         }
-        assert!(streamnet_single_block(&dag, Some(1)).is_none());
+        assert!(solve_streamnet(&dag, Some(1)).is_none());
     }
 }

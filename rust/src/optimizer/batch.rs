@@ -3,7 +3,7 @@
 //!
 //! The MCUNet-style co-design workload is a *sweep* — many models × many
 //! boards × many RAM/compute budgets — and every cell is an independent
-//! P1/P2 solve. `PlanBatch` runs the whole sweep on a
+//! strategy solve. `PlanBatch` runs the whole sweep on a
 //! [`std::thread::scope`] worker pool in two phases:
 //!
 //! 1. one DAG build per distinct model, backed by the batch's
@@ -14,25 +14,27 @@
 //! 2. all jobs drained from a lock-free index queue, each solving against
 //!    the (immutable, shared) DAG of its model.
 //!
-//! Every job runs the *same* solver functions on the *same* DAG the
-//! serial path uses, so [`PlanBatch::solve`] is bit-identical to
+//! Every job dispatches through the same [`PlanStrategy`] trait objects
+//! the [`crate::optimizer::Planner`] uses ([`PlanObjective::dispatch`]),
+//! so [`PlanBatch::solve`] is bit-identical to
 //! [`PlanBatch::solve_serial`] — asserted by `benches/plan_batch.rs` and
 //! the `plan_batch_parallel_matches_serial` property test.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use crate::fusion::{CacheScheme, CostMemo};
-use crate::graph::FusionDag;
+use crate::fusion::CostMemo;
+use crate::graph::{DagOptions, FusionDag};
 use crate::mcu::Board;
 use crate::model::ModelChain;
 
-use super::{
-    heuristic_head_fusion, minimize_macs, minimize_ram, minimize_ram_unconstrained,
-    streamnet_single_block, vanilla_setting, FusionSetting,
+use super::strategy::{
+    Constraint, Constraints, HeadFusion, P1, P2, PlanStrategy, StreamNet, Vanilla,
 };
+use super::FusionSetting;
 
-/// What one configuration solves for.
+/// What one configuration solves for. Each variant denotes a
+/// [`PlanStrategy`] + [`Constraints`] pair (see [`PlanObjective::dispatch`]).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum PlanObjective {
     /// P1: minimize peak RAM s.t. `F ≤ f_max` (`f64::INFINITY` ⇒ the
@@ -46,6 +48,26 @@ pub enum PlanObjective {
     Heuristic,
     /// StreamNet-style single-block baseline.
     StreamNet,
+}
+
+impl PlanObjective {
+    /// Collapse the objective into the strategy trait object and
+    /// constraint set it denotes — the single place the enum is matched.
+    pub fn dispatch(&self) -> (Box<dyn PlanStrategy>, Constraints) {
+        match *self {
+            PlanObjective::MinRam { f_max } => (
+                Box::new(P1),
+                Constraints::none().with(Constraint::Overhead(f_max)),
+            ),
+            PlanObjective::MinMacs { p_max_bytes } => (
+                Box::new(P2),
+                Constraints::none().with(Constraint::Ram(p_max_bytes)),
+            ),
+            PlanObjective::Vanilla => (Box::new(Vanilla), Constraints::none()),
+            PlanObjective::Heuristic => (Box::new(HeadFusion), Constraints::none()),
+            PlanObjective::StreamNet => (Box::new(StreamNet), Constraints::none()),
+        }
+    }
 }
 
 /// One planning configuration: a model (by index into the batch's model
@@ -89,8 +111,7 @@ pub struct PlanBatch {
     /// across every [`Self::solve`] call on this batch.
     memos: Vec<CostMemo>,
     jobs: Vec<PlanJob>,
-    scheme: CacheScheme,
-    max_depth: Option<usize>,
+    options: DagOptions,
 }
 
 impl PlanBatch {
@@ -98,10 +119,10 @@ impl PlanBatch {
         Self::default()
     }
 
-    /// Batch under a non-default cache scheme / fusion-depth cap
-    /// (§9 ablations).
-    pub fn with_scheme(scheme: CacheScheme, max_depth: Option<usize>) -> Self {
-        Self { scheme, max_depth, ..Self::default() }
+    /// Batch under non-default DAG options (§9 ablations: cache scheme /
+    /// fusion-depth cap).
+    pub fn with_options(options: DagOptions) -> Self {
+        Self { options, ..Self::default() }
     }
 
     /// Register a model; the returned index is what [`PlanJob::model`]
@@ -170,10 +191,9 @@ impl PlanBatch {
                     if i >= self.models.len() {
                         break;
                     }
-                    let dag = FusionDag::build_with_memo(
+                    let dag = FusionDag::build_memoized(
                         &self.models[i].1,
-                        self.max_depth,
-                        self.scheme,
+                        self.options,
                         &self.memos[i],
                     );
                     *dag_slots[i].lock().unwrap() = Some(dag);
@@ -209,12 +229,12 @@ impl PlanBatch {
     }
 
     /// The reference serial sweep: one thread, no memo — exactly what a
-    /// loop over `FusionDag::build` + `minimize_*` would do.
+    /// loop over `FusionDag::build` + strategy solves would do.
     pub fn solve_serial(&self) -> Vec<PlanOutcome> {
         let dags: Vec<FusionDag> = self
             .models
             .iter()
-            .map(|(_, m)| FusionDag::build_with_scheme(m, self.max_depth, self.scheme))
+            .map(|(_, m)| FusionDag::build(m, self.options))
             .collect();
         self.jobs
             .iter()
@@ -224,19 +244,8 @@ impl PlanBatch {
 }
 
 fn solve_one(dag: &FusionDag, job: &PlanJob) -> Option<FusionSetting> {
-    match job.objective {
-        PlanObjective::MinRam { f_max } => {
-            if f_max.is_infinite() {
-                minimize_ram_unconstrained(dag)
-            } else {
-                minimize_ram(dag, f_max)
-            }
-        }
-        PlanObjective::MinMacs { p_max_bytes } => minimize_macs(dag, p_max_bytes),
-        PlanObjective::Vanilla => Some(vanilla_setting(dag)),
-        PlanObjective::Heuristic => Some(heuristic_head_fusion(dag)),
-        PlanObjective::StreamNet => streamnet_single_block(dag, None),
-    }
+    let (strategy, constraints) = job.objective.dispatch();
+    strategy.solve(dag, &constraints)
 }
 
 #[cfg(test)]
@@ -282,6 +291,32 @@ mod tests {
             assert_same(&serial, &batch.solve_with_threads(threads));
         }
         assert_same(&serial, &batch.solve());
+    }
+
+    #[test]
+    fn objective_dispatch_matches_direct_strategy_calls() {
+        // The enum is sugar over the trait objects: solving a job must be
+        // identical to invoking the corresponding strategy by hand.
+        let m = zoo::quickstart();
+        let dag = FusionDag::build(&m, DagOptions::default());
+        let cases = [
+            PlanObjective::Vanilla,
+            PlanObjective::Heuristic,
+            PlanObjective::StreamNet,
+            PlanObjective::MinRam { f_max: 1.2 },
+            PlanObjective::MinRam { f_max: f64::INFINITY },
+            PlanObjective::MinMacs { p_max_bytes: 4_000 },
+        ];
+        for objective in cases {
+            let (strategy, constraints) = objective.dispatch();
+            let direct = strategy.solve(&dag, &constraints);
+            let via_job = solve_one(&dag, &PlanJob::new(0, objective));
+            assert_eq!(
+                direct.as_ref().map(|s| (&s.spans, s.cost.peak_ram)),
+                via_job.as_ref().map(|s| (&s.spans, s.cost.peak_ram)),
+                "{objective:?}"
+            );
+        }
     }
 
     #[test]

@@ -38,9 +38,11 @@ pub fn exhaustive_p2(dag: &FusionDag, p_max_bytes: u64) -> OptResult {
 
 #[cfg(test)]
 mod tests {
+    use super::super::p1::solve_p1;
+    use super::super::p2::solve_p2;
     use super::*;
+    use crate::graph::DagOptions;
     use crate::model::{Activation, Layer, ModelChain, TensorShape};
-    use crate::optimizer::{minimize_macs, minimize_ram};
 
     fn model(n: usize) -> ModelChain {
         let mut layers = Vec::new();
@@ -56,9 +58,9 @@ mod tests {
     #[test]
     fn p2_matches_exhaustive() {
         let m = model(6);
-        let dag = FusionDag::build(&m, None);
+        let dag = FusionDag::build(&m, DagOptions::default());
         for p_max in [2_000u64, 8_000, 20_000, 100_000] {
-            let fast = minimize_macs(&dag, p_max);
+            let fast = solve_p2(&dag, p_max);
             let slow = exhaustive_p2(&dag, p_max);
             match (fast, slow) {
                 (None, None) => {}
@@ -76,9 +78,9 @@ mod tests {
         // tests; at minimum it must stay feasible and within the candidate
         // set's envelope.
         let m = model(6);
-        let dag = FusionDag::build(&m, None);
+        let dag = FusionDag::build(&m, DagOptions::default());
         for f_max in [1.05f64, 1.2, 1.5, 3.0] {
-            let fast = minimize_ram(&dag, f_max);
+            let fast = solve_p1(&dag, f_max);
             let slow = exhaustive_p1(&dag, f_max);
             match (&fast, &slow) {
                 (None, None) => {}

@@ -1,31 +1,45 @@
-//! Fusion-setting optimizers (paper §6) and baselines.
+//! Fusion-setting optimization (paper §6): the [`Planner`] pipeline,
+//! interchangeable [`PlanStrategy`] solvers, and batch planning.
 //!
-//! * [`p1`] — minimize peak RAM s.t. compute-overhead `F ≤ F_max`
-//!   (minimax path; constrained variant prunes max-RAM edges iteratively,
-//!   Eq. 8–10, O(V³) worst case).
-//! * [`p2`] — minimize MACs s.t. peak RAM `P ≤ P_max`
-//!   (filter over-limit edges, then shortest path).
-//! * [`baselines`] — vanilla, MCUNetV2-style head-fusion heuristic,
-//!   StreamNet-style single-block brute force.
-//! * [`exhaustive`] — exact enumeration (tests/property-checks only).
+//! * [`Planner`] — builder-style pipeline from a model to a serializable
+//!   [`Plan`]: owns DAG construction and the per-model edge-cost memo so
+//!   repeated solves share caches.
+//! * [`strategy`] — the [`PlanStrategy`] implementations: paper solvers
+//!   [`strategy::P1`] (min RAM s.t. `F ≤ F_max`, Eq. 8–10) and
+//!   [`strategy::P2`] (min MACs s.t. `P ≤ P_max`), plus the §8 baselines
+//!   ([`strategy::Vanilla`], MCUNetV2-style [`strategy::HeadFusion`],
+//!   [`strategy::StreamNet`]) and exact [`strategy::Exhaustive`]
+//!   enumeration — all interchangeable behind trait objects.
 //! * [`batch`] — [`PlanBatch`]: the P1/P2 sweep over many
 //!   `(model, board, budget)` configurations, parallelized on a scoped
 //!   worker pool with shared per-model edge-cost memos; bit-identical to
-//!   the serial path.
+//!   the serial path. [`PlanObjective`] dispatch collapses into the same
+//!   strategy trait objects.
+//!
+//! The pre-0.2 free functions (`minimize_ram`, `minimize_macs`,
+//! `vanilla_setting`, …) remain as deprecated thin wrappers over the same
+//! solvers.
 
 mod baselines;
 mod batch;
 mod exhaustive;
 mod p1;
 mod p2;
+mod planner;
 mod setting;
+pub mod strategy;
 
+#[allow(deprecated)]
 pub use baselines::{heuristic_head_fusion, streamnet_single_block, vanilla_setting};
 pub use batch::{PlanBatch, PlanJob, PlanObjective, PlanOutcome};
 pub use exhaustive::{exhaustive_p1, exhaustive_p2};
+#[allow(deprecated)]
 pub use p1::{minimize_ram, minimize_ram_unconstrained};
+#[allow(deprecated)]
 pub use p2::{minimize_macs, minimize_macs_unconstrained};
+pub use planner::{Plan, Planner};
 pub use setting::{FusionSetting, SettingCost};
+pub use strategy::{Constraint, Constraints, PlanStrategy};
 
 use crate::graph::FusionDag;
 

@@ -1,11 +1,15 @@
 //! Problem P1: minimize peak RAM subject to a compute-cost limit (§6.1).
+//!
+//! The canonical entry point is [`crate::optimizer::strategy::P1`] driven
+//! through a [`crate::optimizer::Planner`]; the free functions here remain
+//! as deprecated wrappers over the same solvers.
 
-use crate::graph::{minimax_path, min_sum_path, FusionDag};
+use crate::graph::{min_sum_path, minimax_path, FusionDag};
 
 use super::{FusionSetting, OptResult};
 
 /// Unconstrained P1 (`F_max = ∞`): the minimax-path solution.
-pub fn minimize_ram_unconstrained(dag: &FusionDag) -> OptResult {
+pub(crate) fn solve_p1_unconstrained(dag: &FusionDag) -> OptResult {
     minimax_path(dag).map(|p| FusionSetting::from_path(dag, p))
 }
 
@@ -18,7 +22,7 @@ pub fn minimize_ram_unconstrained(dag: &FusionDag) -> OptResult {
 ///    peak RAM (ties broken toward fewer MACs).
 ///
 /// Worst case O(V³): up to E = O(V²) elimination rounds × O(E) DP.
-pub fn minimize_ram(dag: &FusionDag, f_max: f64) -> OptResult {
+pub(crate) fn solve_p1(dag: &FusionDag, f_max: f64) -> OptResult {
     let mac_budget = (f_max * dag.vanilla_macs as f64).floor() as u64;
     let mut g = dag.clone();
     let mut best: Option<FusionSetting> = None;
@@ -51,9 +55,28 @@ pub fn minimize_ram(dag: &FusionDag, f_max: f64) -> OptResult {
     best
 }
 
+/// Unconstrained P1 — deprecated free-function surface.
+#[deprecated(
+    since = "0.2.0",
+    note = "use optimizer::Planner with strategy::P1 (no overhead constraint)"
+)]
+pub fn minimize_ram_unconstrained(dag: &FusionDag) -> OptResult {
+    solve_p1_unconstrained(dag)
+}
+
+/// Constrained P1 — deprecated free-function surface.
+#[deprecated(
+    since = "0.2.0",
+    note = "use optimizer::Planner with strategy::P1 and Constraint::Overhead(f_max)"
+)]
+pub fn minimize_ram(dag: &FusionDag, f_max: f64) -> OptResult {
+    solve_p1(dag, f_max)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::DagOptions;
     use crate::model::{Activation, Layer, ModelChain, TensorShape};
 
     fn model() -> ModelChain {
@@ -74,8 +97,8 @@ mod tests {
     #[test]
     fn unconstrained_beats_vanilla() {
         let m = model();
-        let dag = FusionDag::build(&m, None);
-        let s = minimize_ram_unconstrained(&dag).unwrap();
+        let dag = FusionDag::build(&m, DagOptions::default());
+        let s = solve_p1_unconstrained(&dag).unwrap();
         assert!(s.cost.peak_ram < m.vanilla_peak_ram());
         assert!(s.num_fused_blocks() >= 1);
     }
@@ -83,9 +106,9 @@ mod tests {
     #[test]
     fn constraint_is_respected() {
         let m = model();
-        let dag = FusionDag::build(&m, None);
+        let dag = FusionDag::build(&m, DagOptions::default());
         for f_max in [1.05, 1.2, 1.5, 2.0] {
-            if let Some(s) = minimize_ram(&dag, f_max) {
+            if let Some(s) = solve_p1(&dag, f_max) {
                 assert!(
                     s.cost.overhead <= f_max + 1e-9,
                     "F={} > F_max={f_max}",
@@ -98,9 +121,9 @@ mod tests {
     #[test]
     fn looser_budget_never_hurts() {
         let m = model();
-        let dag = FusionDag::build(&m, None);
-        let tight = minimize_ram(&dag, 1.1).map(|s| s.cost.peak_ram);
-        let loose = minimize_ram(&dag, 2.0).map(|s| s.cost.peak_ram);
+        let dag = FusionDag::build(&m, DagOptions::default());
+        let tight = solve_p1(&dag, 1.1).map(|s| s.cost.peak_ram);
+        let loose = solve_p1(&dag, 2.0).map(|s| s.cost.peak_ram);
         if let (Some(t), Some(l)) = (tight, loose) {
             assert!(l <= t, "loose {l} > tight {t}");
         }
@@ -109,8 +132,8 @@ mod tests {
     #[test]
     fn f_max_one_returns_vanilla_or_free_fusion() {
         let m = model();
-        let dag = FusionDag::build(&m, None);
-        let s = minimize_ram(&dag, 1.0).expect("vanilla path always satisfies F=1");
+        let dag = FusionDag::build(&m, DagOptions::default());
+        let s = solve_p1(&dag, 1.0).expect("vanilla path always satisfies F=1");
         assert!(s.cost.overhead <= 1.0 + 1e-9);
         // RAM can still beat vanilla via zero-overhead fusion (iterative tail).
         assert!(s.cost.peak_ram <= m.vanilla_peak_ram());
@@ -118,9 +141,23 @@ mod tests {
 
     #[test]
     fn huge_budget_matches_unconstrained() {
-        let dag = FusionDag::build(&model(), None);
-        let c = minimize_ram(&dag, 1e9).unwrap();
-        let u = minimize_ram_unconstrained(&dag).unwrap();
+        let dag = FusionDag::build(&model(), DagOptions::default());
+        let c = solve_p1(&dag, 1e9).unwrap();
+        let u = solve_p1_unconstrained(&dag).unwrap();
         assert_eq!(c.cost.peak_ram, u.cost.peak_ram);
+    }
+
+    #[test]
+    fn deprecated_wrappers_delegate() {
+        #![allow(deprecated)]
+        let dag = FusionDag::build(&model(), DagOptions::default());
+        assert_eq!(
+            minimize_ram_unconstrained(&dag).map(|s| s.cost.peak_ram),
+            solve_p1_unconstrained(&dag).map(|s| s.cost.peak_ram)
+        );
+        assert_eq!(
+            minimize_ram(&dag, 1.3).map(|s| s.cost.peak_ram),
+            solve_p1(&dag, 1.3).map(|s| s.cost.peak_ram)
+        );
     }
 }

@@ -1,18 +1,22 @@
 //! Problem P2: minimize compute cost subject to a RAM limit (§6.2).
+//!
+//! The canonical entry point is [`crate::optimizer::strategy::P2`] driven
+//! through a [`crate::optimizer::Planner`]; the free functions here remain
+//! as deprecated wrappers over the same solvers.
 
 use crate::graph::{min_sum_path, FusionDag};
 
 use super::{FusionSetting, OptResult};
 
 /// Unconstrained P2 (`P_max = ∞`): plain shortest (min-MAC) path.
-pub fn minimize_macs_unconstrained(dag: &FusionDag) -> OptResult {
+pub(crate) fn solve_p2_unconstrained(dag: &FusionDag) -> OptResult {
     min_sum_path(dag).map(|p| FusionSetting::from_path(dag, p))
 }
 
 /// Constrained P2: eliminate every edge whose RAM exceeds `p_max_bytes`
 /// (so all remaining paths automatically satisfy the limit — §6.2), then
 /// take the shortest path. `None` ⇒ the paper's "(No Solution)".
-pub fn minimize_macs(dag: &FusionDag, p_max_bytes: u64) -> OptResult {
+pub(crate) fn solve_p2(dag: &FusionDag, p_max_bytes: u64) -> OptResult {
     let over: Vec<usize> = (0..dag.edges.len())
         .filter(|&e| dag.edges[e].cost.ram_bytes > p_max_bytes)
         .collect();
@@ -20,9 +24,28 @@ pub fn minimize_macs(dag: &FusionDag, p_max_bytes: u64) -> OptResult {
     min_sum_path(&g).map(|p| FusionSetting::from_path(dag, p))
 }
 
+/// Unconstrained P2 — deprecated free-function surface.
+#[deprecated(
+    since = "0.2.0",
+    note = "use optimizer::Planner with strategy::P2 (no RAM constraint)"
+)]
+pub fn minimize_macs_unconstrained(dag: &FusionDag) -> OptResult {
+    solve_p2_unconstrained(dag)
+}
+
+/// Constrained P2 — deprecated free-function surface.
+#[deprecated(
+    since = "0.2.0",
+    note = "use optimizer::Planner with strategy::P2 and Constraint::Ram(p_max_bytes)"
+)]
+pub fn minimize_macs(dag: &FusionDag, p_max_bytes: u64) -> OptResult {
+    solve_p2(dag, p_max_bytes)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::DagOptions;
     use crate::model::{Activation, Layer, ModelChain, TensorShape};
 
     fn model() -> ModelChain {
@@ -43,17 +66,17 @@ mod tests {
     #[test]
     fn unconstrained_is_vanilla_or_better() {
         let m = model();
-        let dag = FusionDag::build(&m, None);
-        let s = minimize_macs_unconstrained(&dag).unwrap();
+        let dag = FusionDag::build(&m, DagOptions::default());
+        let s = solve_p2_unconstrained(&dag).unwrap();
         assert!(s.cost.macs <= m.total_macs());
     }
 
     #[test]
     fn ram_limit_respected() {
         let m = model();
-        let dag = FusionDag::build(&m, None);
+        let dag = FusionDag::build(&m, DagOptions::default());
         for p_max in [4_000u64, 8_000, 16_000, 64_000] {
-            if let Some(s) = minimize_macs(&dag, p_max) {
+            if let Some(s) = solve_p2(&dag, p_max) {
                 assert!(s.cost.peak_ram <= p_max);
             }
         }
@@ -61,17 +84,17 @@ mod tests {
 
     #[test]
     fn infeasible_limit_returns_none() {
-        let dag = FusionDag::build(&model(), None);
-        assert!(minimize_macs(&dag, 16).is_none()); // 16 bytes: hopeless
+        let dag = FusionDag::build(&model(), DagOptions::default());
+        assert!(solve_p2(&dag, 16).is_none()); // 16 bytes: hopeless
     }
 
     #[test]
     fn tighter_limit_costs_more_macs() {
         let m = model();
-        let dag = FusionDag::build(&m, None);
-        let u = minimize_macs_unconstrained(&dag).unwrap();
+        let dag = FusionDag::build(&m, DagOptions::default());
+        let u = solve_p2_unconstrained(&dag).unwrap();
         // Force below the unconstrained solution's RAM: more recompute.
-        if let Some(t) = minimize_macs(&dag, u.cost.peak_ram / 2) {
+        if let Some(t) = solve_p2(&dag, u.cost.peak_ram / 2) {
             assert!(t.cost.macs >= u.cost.macs);
             assert!(t.cost.peak_ram <= u.cost.peak_ram / 2);
         }
@@ -81,10 +104,24 @@ mod tests {
     fn duality_with_p1() {
         // P2's solution at P_max = P1(F_max=inf).peak_ram must exist and
         // cost no more MACs than the P1 solution (it optimizes MACs there).
-        let dag = FusionDag::build(&model(), None);
-        let p1 = super::super::minimize_ram_unconstrained(&dag).unwrap();
-        let p2 = minimize_macs(&dag, p1.cost.peak_ram).unwrap();
+        let dag = FusionDag::build(&model(), DagOptions::default());
+        let p1 = super::super::p1::solve_p1_unconstrained(&dag).unwrap();
+        let p2 = solve_p2(&dag, p1.cost.peak_ram).unwrap();
         assert!(p2.cost.macs <= p1.cost.macs);
         assert!(p2.cost.peak_ram <= p1.cost.peak_ram);
+    }
+
+    #[test]
+    fn deprecated_wrappers_delegate() {
+        #![allow(deprecated)]
+        let dag = FusionDag::build(&model(), DagOptions::default());
+        assert_eq!(
+            minimize_macs_unconstrained(&dag).map(|s| s.cost.macs),
+            solve_p2_unconstrained(&dag).map(|s| s.cost.macs)
+        );
+        assert_eq!(
+            minimize_macs(&dag, 64_000).map(|s| s.cost.macs),
+            solve_p2(&dag, 64_000).map(|s| s.cost.macs)
+        );
     }
 }

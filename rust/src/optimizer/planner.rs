@@ -1,0 +1,537 @@
+//! [`Planner`]: the one pipeline from a zoo model to a served plan.
+//!
+//! The builder owns DAG construction and the per-model edge-cost memo
+//! ([`crate::fusion::CostMemo`]), so repeated solves on the same model
+//! (constraint sweeps, baseline comparisons, table rows) share caches
+//! instead of every caller rebuilding `FusionDag` by hand. Its output is a
+//! serializable [`Plan`] — setting + costs + provenance — that round-trips
+//! through JSON, so a serving process can load pre-solved plans without
+//! re-running the optimizer.
+
+use std::path::Path;
+
+use crate::fusion::{CacheScheme, CostMemo};
+use crate::graph::{DagOptions, FusionDag};
+use crate::model::ModelChain;
+use crate::util::error::{Context, Result};
+use crate::util::json::{escape, Json};
+use crate::{anyhow, bail};
+
+use super::setting::{FusionSetting, SettingCost};
+use super::strategy::{Constraint, Constraints, P1, PlanStrategy};
+
+/// A solved, serializable fusion plan: the concrete [`FusionSetting`] plus
+/// the provenance needed to audit or re-serve it (model name, strategy,
+/// constraints, DAG options).
+#[must_use = "a Plan is the deployment artifact; drop it and the solve was wasted"]
+#[derive(Debug, Clone, PartialEq)]
+pub struct Plan {
+    /// Name of the planned model (resolvable via [`crate::zoo::by_name`]
+    /// for zoo models).
+    pub model: String,
+    /// [`PlanStrategy::name`] of the strategy that produced the setting.
+    pub strategy: String,
+    /// Constraints the solve ran under.
+    pub constraints: Constraints,
+    /// Cache scheme the DAG's edge costs were built with.
+    pub scheme: CacheScheme,
+    /// Fusion-depth cap the DAG was built with, if any.
+    pub max_depth: Option<usize>,
+    /// The solved fusion setting (spans + encoded costs).
+    pub setting: FusionSetting,
+}
+
+impl Plan {
+    /// Cost summary of the underlying setting.
+    pub fn cost(&self) -> &SettingCost {
+        &self.setting.cost
+    }
+
+    /// One-line human-readable summary.
+    pub fn describe(&self) -> String {
+        format!(
+            "{}: {} via {} [{}] -> {:.3} kB at F={:.2}",
+            self.model,
+            self.setting.describe(),
+            self.strategy,
+            self.constraints.describe(),
+            self.setting.cost.peak_ram as f64 / 1000.0,
+            self.setting.cost.overhead,
+        )
+    }
+
+    /// Serialize to the crate's plan JSON (stable across sessions; see
+    /// [`Plan::from_json`]).
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str("  \"version\": 1,\n");
+        out.push_str(&format!("  \"model\": \"{}\",\n", escape(&self.model)));
+        out.push_str(&format!("  \"strategy\": \"{}\",\n", escape(&self.strategy)));
+        out.push_str("  \"constraints\": {");
+        let mut parts = Vec::new();
+        if let Some(p) = self.constraints.ram_bytes {
+            parts.push(format!("\"ram_bytes\": {p}"));
+        }
+        match self.constraints.overhead {
+            Some(f) if f.is_finite() => parts.push(format!("\"overhead\": {f}")),
+            _ => {}
+        }
+        out.push_str(&parts.join(", "));
+        out.push_str("},\n");
+        out.push_str(&format!("  \"scheme\": \"{}\",\n", self.scheme.name()));
+        match self.max_depth {
+            Some(d) => out.push_str(&format!("  \"max_depth\": {d},\n")),
+            None => out.push_str("  \"max_depth\": null,\n"),
+        }
+        out.push_str("  \"setting\": {\n");
+        let path: Vec<String> = self.setting.path.iter().map(|e| e.to_string()).collect();
+        out.push_str(&format!("    \"path\": [{}],\n", path.join(", ")));
+        let spans: Vec<String> = self
+            .setting
+            .spans
+            .iter()
+            .map(|&(a, b, it)| format!("[{a}, {b}, {it}]"))
+            .collect();
+        out.push_str(&format!("    \"spans\": [{}],\n", spans.join(", ")));
+        out.push_str(&format!(
+            "    \"cost\": {{\"peak_ram\": {}, \"macs\": {}, \"overhead\": {}}}\n",
+            self.setting.cost.peak_ram, self.setting.cost.macs, self.setting.cost.overhead
+        ));
+        out.push_str("  }\n");
+        out.push_str("}\n");
+        out
+    }
+
+    /// Parse a plan previously produced by [`Plan::to_json`].
+    pub fn from_json(text: &str) -> Result<Plan> {
+        let root = Json::parse(text).map_err(|e| anyhow!("plan json: {e}"))?;
+        let str_field = |key: &str| -> Result<String> {
+            Ok(root
+                .get(key)
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("plan json: missing string '{key}'"))?
+                .to_string())
+        };
+        let model = str_field("model")?;
+        let strategy = str_field("strategy")?;
+        let scheme_name = str_field("scheme")?;
+        let scheme = CacheScheme::ALL
+            .into_iter()
+            .find(|s| s.name() == scheme_name)
+            .ok_or_else(|| anyhow!("plan json: unknown scheme '{scheme_name}'"))?;
+
+        let mut constraints = Constraints::none();
+        if let Some(c) = root.get("constraints") {
+            if let Some(p) = c.get("ram_bytes").and_then(Json::as_f64) {
+                constraints = constraints.with(Constraint::Ram(p as u64));
+            }
+            if let Some(f) = c.get("overhead").and_then(Json::as_f64) {
+                constraints = constraints.with(Constraint::Overhead(f));
+            }
+        }
+        let max_depth = match root.get("max_depth") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(
+                v.as_usize()
+                    .ok_or_else(|| anyhow!("plan json: bad 'max_depth'"))?,
+            ),
+        };
+
+        let setting_v = root
+            .get("setting")
+            .ok_or_else(|| anyhow!("plan json: missing 'setting'"))?;
+        let path: Vec<usize> = setting_v
+            .get("path")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("plan json: missing 'setting.path'"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("plan json: bad path index")))
+            .collect::<Result<_>>()?;
+        let spans_v = setting_v
+            .get("spans")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("plan json: missing 'setting.spans'"))?;
+        let mut spans = Vec::with_capacity(spans_v.len());
+        for sv in spans_v {
+            let triple = sv
+                .as_arr()
+                .filter(|a| a.len() == 3)
+                .ok_or_else(|| anyhow!("plan json: span is not [a, b, tail]"))?;
+            let a = triple[0]
+                .as_usize()
+                .ok_or_else(|| anyhow!("plan json: bad span start"))?;
+            let b = triple[1]
+                .as_usize()
+                .ok_or_else(|| anyhow!("plan json: bad span end"))?;
+            let it = match &triple[2] {
+                Json::Bool(v) => *v,
+                _ => bail!("plan json: bad span tail flag"),
+            };
+            spans.push((a, b, it));
+        }
+        let cost_v = setting_v
+            .get("cost")
+            .ok_or_else(|| anyhow!("plan json: missing 'setting.cost'"))?;
+        let num = |key: &str| -> Result<f64> {
+            cost_v
+                .get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("plan json: missing 'setting.cost.{key}'"))
+        };
+        let cost = SettingCost {
+            peak_ram: num("peak_ram")? as u64,
+            macs: num("macs")? as u64,
+            overhead: num("overhead")?,
+        };
+
+        let plan = Plan {
+            model,
+            strategy,
+            constraints,
+            scheme,
+            max_depth,
+            setting: FusionSetting { path, spans, cost },
+        };
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    /// Structural validation: spans must partition the layer chain in
+    /// execution order (an iterative-tail span may only end the chain).
+    pub fn validate(&self) -> Result<()> {
+        if self.setting.spans.is_empty() {
+            bail!("plan for '{}' has no spans", self.model);
+        }
+        let mut at = 0usize;
+        for (i, &(a, b, _)) in self.setting.spans.iter().enumerate() {
+            if a != at || b <= a {
+                bail!(
+                    "plan for '{}': span {i} = [{a}, {b}) does not continue from layer {at}",
+                    self.model
+                );
+            }
+            at = b;
+        }
+        Ok(())
+    }
+
+    /// Validate against a concrete model (span coverage of all layers).
+    pub fn validate_for(&self, model: &ModelChain) -> Result<()> {
+        self.validate()?;
+        let end = self.setting.spans.last().map(|&(_, b, _)| b).unwrap_or(0);
+        if end != model.num_layers() {
+            bail!(
+                "plan for '{}' covers layers 0..{end} but model '{}' has {} layers",
+                self.model,
+                model.name,
+                model.num_layers()
+            );
+        }
+        Ok(())
+    }
+
+    /// Write the plan JSON to `path`.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_json())
+            .with_context(|| format!("writing plan to {}", path.display()))
+    }
+
+    /// Load a plan JSON from `path`.
+    pub fn load(path: impl AsRef<Path>) -> Result<Plan> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading plan from {}", path.display()))?;
+        Plan::from_json(&text).with_context(|| format!("parsing plan {}", path.display()))
+    }
+}
+
+/// Builder-style planning pipeline:
+///
+/// ```no_run
+/// use msf_cnn::optimizer::{Constraint, Planner};
+/// use msf_cnn::optimizer::strategy::P1;
+/// use msf_cnn::zoo;
+///
+/// let plan = Planner::for_model(zoo::mbv2(0.35, 144, 1000))
+///     .constraint(Constraint::Ram(64_000))
+///     .strategy(P1::default())
+///     .plan()
+///     .unwrap();
+/// println!("{}", plan.describe());
+/// ```
+///
+/// The planner owns the model's [`FusionDag`] and [`CostMemo`]: the DAG is
+/// built once (lazily) and every edge cost is memoized, so re-solving
+/// under different strategies or constraints ([`Planner::plan_with`]) and
+/// rebuilding after [`Planner::dag_options`] changes reuse prior work.
+#[derive(Debug)]
+pub struct Planner {
+    model: ModelChain,
+    options: DagOptions,
+    constraints: Constraints,
+    strategy: Box<dyn PlanStrategy>,
+    memo: CostMemo,
+    dag: Option<FusionDag>,
+}
+
+impl Planner {
+    /// Start a pipeline for `model`. Defaults: [`P1`] (unconstrained
+    /// min-RAM, the paper's headline objective) under
+    /// [`DagOptions::default`].
+    ///
+    /// The produced [`Plan`] records `model.name` verbatim — that string
+    /// is the serving-side resolution key ([`crate::zoo::by_name`]), so
+    /// serving ids live on [`crate::coordinator::ModelSpec::id`], never
+    /// on the plan itself.
+    pub fn for_model(model: ModelChain) -> Self {
+        Self {
+            model,
+            options: DagOptions::default(),
+            constraints: Constraints::none(),
+            strategy: Box::new(P1),
+            memo: CostMemo::new(),
+            dag: None,
+        }
+    }
+
+    /// Add a deployment constraint (repeatable; one bound per axis).
+    #[must_use]
+    pub fn constraint(mut self, c: Constraint) -> Self {
+        self.constraints = self.constraints.with(c);
+        self
+    }
+
+    /// Select the solving strategy (default: [`P1`]).
+    #[must_use]
+    pub fn strategy(mut self, strategy: impl PlanStrategy + 'static) -> Self {
+        self.strategy = Box::new(strategy);
+        self
+    }
+
+    /// DAG construction options (§9 ablation axes). Invalidates the cached
+    /// DAG; edge costs for the same scheme stay memoized.
+    #[must_use]
+    pub fn dag_options(mut self, options: DagOptions) -> Self {
+        self.set_dag_options(options);
+        self
+    }
+
+    /// In-place variant of [`Planner::dag_options`] for planners held by
+    /// reference (scheme/depth sweeps).
+    pub fn set_dag_options(&mut self, options: DagOptions) {
+        if options != self.options {
+            self.options = options;
+            self.dag = None;
+        }
+    }
+
+    /// The planned model.
+    pub fn model(&self) -> &ModelChain {
+        &self.model
+    }
+
+    /// The model's fusion-candidate DAG (built on first use, memoized).
+    pub fn dag(&mut self) -> &FusionDag {
+        self.ensure_dag();
+        self.dag.as_ref().unwrap()
+    }
+
+    /// Memo `(hits, misses)` — cache reuse across re-solves and rebuilds.
+    pub fn memo_stats(&self) -> (u64, u64) {
+        self.memo.stats()
+    }
+
+    fn ensure_dag(&mut self) {
+        if self.dag.is_none() {
+            self.dag = Some(FusionDag::build_memoized(&self.model, self.options, &self.memo));
+        }
+    }
+
+    fn make_plan(
+        &self,
+        strategy_name: &str,
+        constraints: Constraints,
+        setting: FusionSetting,
+    ) -> Plan {
+        Plan {
+            model: self.model.name.clone(),
+            strategy: strategy_name.to_string(),
+            constraints,
+            scheme: self.options.scheme,
+            max_depth: self.options.max_depth,
+            setting,
+        }
+    }
+
+    /// Solve with the configured strategy and constraints.
+    pub fn plan(&mut self) -> Result<Plan> {
+        self.ensure_dag();
+        let dag = self.dag.as_ref().unwrap();
+        let setting = self.strategy.solve(dag, &self.constraints).ok_or_else(|| {
+            anyhow!(
+                "no feasible plan for '{}' via {} [{}]",
+                self.model.name,
+                self.strategy.name(),
+                self.constraints.describe()
+            )
+        })?;
+        Ok(self.make_plan(self.strategy.name(), self.constraints, setting))
+    }
+
+    /// Solve with an explicit strategy/constraints pair, sharing this
+    /// planner's DAG and memo — the cheap way to sweep baselines or
+    /// budget grids on one model.
+    pub fn plan_with(
+        &mut self,
+        strategy: &dyn PlanStrategy,
+        constraints: Constraints,
+    ) -> Result<Plan> {
+        self.ensure_dag();
+        let dag = self.dag.as_ref().unwrap();
+        let setting = strategy.solve(dag, &constraints).ok_or_else(|| {
+            anyhow!(
+                "no feasible plan for '{}' via {} [{}]",
+                self.model.name,
+                strategy.name(),
+                constraints.describe()
+            )
+        })?;
+        Ok(self.make_plan(strategy.name(), constraints, setting))
+    }
+
+    /// Convenience: [`Planner::plan`] reduced to the bare setting.
+    pub fn setting(&mut self) -> Result<FusionSetting> {
+        Ok(self.plan()?.setting)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::strategy::{Exhaustive, HeadFusion, P2, StreamNet, Vanilla};
+    use super::*;
+    use crate::zoo;
+
+    #[test]
+    fn builder_pipeline_solves_the_paper_objectives() {
+        let m = zoo::quickstart();
+        let vanilla_peak = m.vanilla_peak_ram();
+        let plan = Planner::for_model(m).plan().unwrap();
+        assert_eq!(plan.model, "quickstart");
+        assert_eq!(plan.strategy, "p1-min-ram");
+        assert!(plan.cost().peak_ram < vanilla_peak);
+
+        let budget = Planner::for_model(zoo::quickstart())
+            .constraint(Constraint::Ram(4_000))
+            .strategy(P2)
+            .plan()
+            .unwrap();
+        assert!(budget.cost().peak_ram <= 4_000);
+        assert_eq!(budget.constraints.ram_bytes, Some(4_000));
+    }
+
+    #[test]
+    fn infeasible_constraints_are_an_error_not_a_panic() {
+        let err = Planner::for_model(zoo::quickstart())
+            .constraint(Constraint::Ram(8))
+            .strategy(P2)
+            .plan()
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("no feasible plan"), "{msg}");
+        assert!(msg.contains("quickstart"), "{msg}");
+    }
+
+    #[test]
+    fn plan_with_shares_the_dag_and_memo_across_strategies() {
+        let mut planner = Planner::for_model(zoo::quickstart());
+        let msf = planner.plan().unwrap();
+        let (_, misses_after_first) = planner.memo_stats();
+        for s in [
+            &Vanilla as &dyn PlanStrategy,
+            &HeadFusion,
+            &StreamNet,
+            &P2,
+            &Exhaustive,
+        ] {
+            let p = planner.plan_with(s, Constraints::none()).unwrap();
+            assert!(
+                msf.cost().peak_ram <= p.cost().peak_ram,
+                "{} beat msf-CNN on RAM",
+                s.name()
+            );
+        }
+        // Re-solves never rebuilt an edge: one DAG, zero new misses.
+        let (_, misses) = planner.memo_stats();
+        assert_eq!(misses, misses_after_first);
+    }
+
+    #[test]
+    fn dag_options_rebuild_draws_from_the_memo() {
+        use crate::graph::DagOptions;
+        let mut planner = Planner::for_model(zoo::quickstart());
+        let _ = planner.plan().unwrap();
+        let (_, misses_first) = planner.memo_stats();
+        // Same scheme, capped depth: every surviving edge is a memo hit.
+        planner = planner.dag_options(DagOptions::default().max_depth(2));
+        let _ = planner.plan().unwrap();
+        let (hits, misses) = planner.memo_stats();
+        assert_eq!(misses, misses_first, "depth-capped rebuild recomputed edges");
+        assert!(hits > 0);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_the_plan() {
+        let plan = Planner::for_model(zoo::kws_cnn())
+            .constraint(Constraint::Ram(16_000))
+            .constraint(Constraint::Overhead(1.5))
+            .plan()
+            .unwrap();
+        let text = plan.to_json();
+        let back = Plan::from_json(&text).unwrap();
+        assert_eq!(plan, back);
+
+        // An infinite overhead bound is normalized at construction, so
+        // the round-trip stays exact for it too.
+        let inf = Planner::for_model(zoo::tiny_cnn())
+            .constraint(Constraint::Overhead(f64::INFINITY))
+            .plan()
+            .unwrap();
+        assert_eq!(inf.constraints.overhead, None);
+        assert_eq!(Plan::from_json(&inf.to_json()).unwrap(), inf);
+    }
+
+    #[test]
+    fn save_load_roundtrip_on_disk() {
+        let plan = Planner::for_model(zoo::tiny_cnn()).plan().unwrap();
+        let path = std::env::temp_dir().join("msfcnn-planner-test.plan.json");
+        plan.save(&path).unwrap();
+        let back = Plan::load(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(plan, back);
+        back.validate_for(&zoo::tiny_cnn()).unwrap();
+    }
+
+    #[test]
+    fn validation_rejects_malformed_plans() {
+        let mut plan = Planner::for_model(zoo::tiny_cnn()).plan().unwrap();
+        assert!(plan.validate().is_ok());
+        // Wrong model: span coverage mismatch.
+        assert!(plan.validate_for(&zoo::lenet()).is_err());
+        // Corrupt the span chain.
+        plan.setting.spans[0].1 += 1;
+        if plan.setting.spans.len() > 1 {
+            assert!(plan.validate().is_err());
+        } else {
+            assert!(plan.validate_for(&zoo::tiny_cnn()).is_err());
+        }
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        assert!(Plan::from_json("not json").is_err());
+        assert!(Plan::from_json("{}").is_err());
+        assert!(Plan::load("/nonexistent/plan.json").is_err());
+    }
+}

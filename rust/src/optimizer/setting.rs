@@ -13,6 +13,7 @@ pub struct SettingCost {
 
 /// A complete compute path through the fusion DAG, i.e. a partition of the
 /// layer chain into single layers and fusion blocks.
+#[must_use = "a FusionSetting is the optimizer's product; drop it and the solve was wasted"]
 #[derive(Debug, Clone, PartialEq)]
 pub struct FusionSetting {
     /// Edge indices into the originating [`FusionDag`], in execution order.
@@ -70,6 +71,7 @@ impl FusionSetting {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::DagOptions;
     use crate::model::{Activation, Layer, ModelChain, TensorShape};
 
     #[test]
@@ -83,7 +85,7 @@ mod tests {
                 Layer::conv("c2", 3, 1, 0, 4, 4, Activation::Relu6),
             ],
         );
-        let dag = FusionDag::build(&m, None);
+        let dag = FusionDag::build(&m, DagOptions::default());
         // Find the edge (0,2) then single 2.
         let e02 = (0..dag.edges.len())
             .find(|&e| dag.edges[e].a == 0 && dag.edges[e].b == 2)

@@ -1,0 +1,405 @@
+//! [`PlanStrategy`]: the interchangeable solver surface of the planner.
+//!
+//! The paper's P1/P2 optimizers and every §8 baseline (vanilla, the
+//! MCUNetV2-style head-fusion heuristic, StreamNet single-block, exact
+//! exhaustive enumeration) implement one trait, so Table 1/2-style
+//! comparisons are a strategy swap instead of a different free function
+//! per row:
+//!
+//! ```no_run
+//! use msf_cnn::optimizer::strategy::{HeadFusion, P2};
+//! use msf_cnn::optimizer::{Constraint, Planner};
+//! use msf_cnn::zoo;
+//!
+//! let mut planner = Planner::for_model(zoo::quickstart());
+//! let msf = planner.plan().unwrap(); // default strategy: P1, min RAM
+//! let fits = Planner::for_model(zoo::quickstart())
+//!     .constraint(Constraint::Ram(4_000))
+//!     .strategy(P2)
+//!     .plan()
+//!     .unwrap();
+//! let baseline = Planner::for_model(zoo::quickstart())
+//!     .strategy(HeadFusion)
+//!     .plan()
+//!     .unwrap();
+//! assert!(msf.cost().peak_ram <= baseline.cost().peak_ram);
+//! assert!(fits.cost().peak_ram <= 4_000);
+//! ```
+
+use std::fmt;
+
+use crate::graph::{enumerate_paths, path_cost, FusionDag};
+
+use super::baselines::{solve_head_fusion, solve_streamnet, solve_vanilla};
+use super::p1::{solve_p1, solve_p1_unconstrained};
+use super::p2::{solve_p2, solve_p2_unconstrained};
+use super::FusionSetting;
+
+/// One deployment constraint (the paper's §6 budget axes).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Constraint {
+    /// Peak RAM budget in bytes (`P ≤ P_max`, problem P2's axis).
+    Ram(u64),
+    /// Compute-overhead budget (`F = C_S / C_vanilla ≤ F_max`, problem
+    /// P1's axis).
+    Overhead(f64),
+}
+
+/// The accumulated constraint set a strategy solves under. Every axis is
+/// optional; [`Constraints::none`] is the unconstrained problem.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Constraints {
+    /// Peak RAM budget in bytes, if any.
+    pub ram_bytes: Option<u64>,
+    /// Compute-overhead budget `F_max`, if any (an infinite budget is
+    /// treated as absent).
+    pub overhead: Option<f64>,
+}
+
+impl Constraints {
+    /// No constraints: the unconstrained minimization problem.
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Add `c` to the set (replacing any previous bound on the same
+    /// axis). A non-finite overhead bound is normalized to "no bound", so
+    /// `Overhead(f64::INFINITY)` round-trips through [`Plan`] JSON
+    /// exactly.
+    ///
+    /// [`Plan`]: crate::optimizer::Plan
+    #[must_use]
+    pub fn with(mut self, c: Constraint) -> Self {
+        match c {
+            Constraint::Ram(bytes) => self.ram_bytes = Some(bytes),
+            Constraint::Overhead(f_max) => {
+                self.overhead = Some(f_max).filter(|f| f.is_finite());
+            }
+        }
+        self
+    }
+
+    /// The effective overhead bound (`None` for absent *or* infinite).
+    fn overhead_bound(&self) -> Option<f64> {
+        self.overhead.filter(|f| f.is_finite())
+    }
+
+    /// Whether `setting` satisfies every bound (overhead within float
+    /// tolerance, RAM exactly).
+    pub fn satisfied_by(&self, setting: &FusionSetting) -> bool {
+        if let Some(p_max) = self.ram_bytes {
+            if setting.cost.peak_ram > p_max {
+                return false;
+            }
+        }
+        if let Some(f_max) = self.overhead_bound() {
+            if setting.cost.overhead > f_max + 1e-9 {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Human-readable form for provenance / describe lines.
+    pub fn describe(&self) -> String {
+        match (self.ram_bytes, self.overhead_bound()) {
+            (None, None) => "unconstrained".into(),
+            (Some(p), None) => format!("P<={p}B"),
+            (None, Some(f)) => format!("F<={f}"),
+            (Some(p), Some(f)) => format!("P<={p}B,F<={f}"),
+        }
+    }
+}
+
+/// The integer MAC budget an overhead bound induces — exactly the Eq. 8
+/// `floor(F_max · C_vanilla)` rule the P1 solver prunes with, so every
+/// strategy enforces the overhead axis bit-identically.
+fn mac_budget(dag: &FusionDag, constraints: &Constraints) -> Option<u64> {
+    constraints
+        .overhead_bound()
+        .map(|f_max| (f_max * dag.vanilla_macs as f64).floor() as u64)
+}
+
+/// The uniform feasibility filter: RAM bound exactly, overhead bound via
+/// the integer MAC budget.
+fn admit(
+    dag: &FusionDag,
+    constraints: &Constraints,
+    setting: Option<FusionSetting>,
+) -> Option<FusionSetting> {
+    let budget = mac_budget(dag, constraints);
+    setting.filter(|s| {
+        let ram_ok = match constraints.ram_bytes {
+            Some(p_max) => s.cost.peak_ram <= p_max,
+            None => true,
+        };
+        let macs_ok = match budget {
+            Some(b) => s.cost.macs <= b,
+            None => true,
+        };
+        ram_ok && macs_ok
+    })
+}
+
+/// A planning strategy: turns a fusion-candidate DAG into a concrete
+/// [`FusionSetting`] under a [`Constraints`] set, or `None` when no
+/// complete path satisfies the bounds (the paper's "(No Solution)" cells).
+///
+/// Implementations are interchangeable behind `&dyn PlanStrategy` /
+/// `Box<dyn PlanStrategy>`: the [`crate::optimizer::Planner`] builder,
+/// [`crate::optimizer::PlanBatch`] jobs, and the report generators all
+/// dispatch through this trait.
+pub trait PlanStrategy: fmt::Debug + Send + Sync {
+    /// Stable identifier recorded in [`crate::optimizer::Plan`] provenance.
+    fn name(&self) -> &'static str;
+
+    /// Solve for the strategy's objective under `constraints`.
+    fn solve(&self, dag: &FusionDag, constraints: &Constraints) -> Option<FusionSetting>;
+}
+
+/// Paper problem P1: minimize peak RAM, subject to the overhead bound
+/// (Eq. 8–10 pruning when `F_max` is finite, the minimax path otherwise).
+/// A RAM bound, if also present, acts as a feasibility check on the
+/// optimum.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct P1;
+
+impl PlanStrategy for P1 {
+    fn name(&self) -> &'static str {
+        "p1-min-ram"
+    }
+
+    fn solve(&self, dag: &FusionDag, constraints: &Constraints) -> Option<FusionSetting> {
+        let candidate = match constraints.overhead_bound() {
+            None => solve_p1_unconstrained(dag),
+            Some(f_max) => solve_p1(dag, f_max),
+        };
+        admit(dag, constraints, candidate)
+    }
+}
+
+/// Paper problem P2: minimize MACs, subject to the RAM bound (§6.2
+/// edge-filtered shortest path; plain shortest path when unbounded). An
+/// overhead bound, if also present, acts as a feasibility check.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct P2;
+
+impl PlanStrategy for P2 {
+    fn name(&self) -> &'static str {
+        "p2-min-macs"
+    }
+
+    fn solve(&self, dag: &FusionDag, constraints: &Constraints) -> Option<FusionSetting> {
+        let candidate = match constraints.ram_bytes {
+            None => solve_p2_unconstrained(dag),
+            Some(p_max) => solve_p2(dag, p_max),
+        };
+        admit(dag, constraints, candidate)
+    }
+}
+
+/// The un-fused baseline: every layer its own span (`F = 1`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Vanilla;
+
+impl PlanStrategy for Vanilla {
+    fn name(&self) -> &'static str {
+        "vanilla"
+    }
+
+    fn solve(&self, dag: &FusionDag, constraints: &Constraints) -> Option<FusionSetting> {
+        admit(dag, constraints, Some(solve_vanilla(dag)))
+    }
+}
+
+/// MCUNetV2-style baseline (§2, §6.3): fuse only the best network *head*,
+/// run everything after it unfused.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct HeadFusion;
+
+impl PlanStrategy for HeadFusion {
+    fn name(&self) -> &'static str {
+        "mcunetv2-head-fusion"
+    }
+
+    fn solve(&self, dag: &FusionDag, constraints: &Constraints) -> Option<FusionSetting> {
+        admit(dag, constraints, Some(solve_head_fusion(dag)))
+    }
+}
+
+/// StreamNet-style baseline: exactly one fusion block, position and depth
+/// swept exhaustively; honors the RAM bound during the sweep.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StreamNet;
+
+impl PlanStrategy for StreamNet {
+    fn name(&self) -> &'static str {
+        "streamnet-single-block"
+    }
+
+    fn solve(&self, dag: &FusionDag, constraints: &Constraints) -> Option<FusionSetting> {
+        admit(dag, constraints, solve_streamnet(dag, constraints.ram_bytes))
+    }
+}
+
+/// Exact exhaustive enumeration (App. D, `O(2^{V-2})`): minimum peak RAM
+/// over every complete path satisfying the constraints, ties toward fewer
+/// MACs. Tractable on test-sized chains only; the property suite uses it
+/// as ground truth for P1/P2.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Exhaustive;
+
+impl PlanStrategy for Exhaustive {
+    fn name(&self) -> &'static str {
+        "exhaustive"
+    }
+
+    fn solve(&self, dag: &FusionDag, constraints: &Constraints) -> Option<FusionSetting> {
+        let budget = mac_budget(dag, constraints);
+        enumerate_paths(dag)
+            .into_iter()
+            .map(|p| {
+                let c = path_cost(dag, &p);
+                (c.peak_ram, c.macs, p)
+            })
+            .filter(|&(ram, macs, _)| {
+                let ram_ok = match constraints.ram_bytes {
+                    Some(p_max) => ram <= p_max,
+                    None => true,
+                };
+                let macs_ok = match budget {
+                    Some(b) => macs <= b,
+                    None => true,
+                };
+                ram_ok && macs_ok
+            })
+            .min_by_key(|&(ram, macs, _)| (ram, macs))
+            .map(|(_, _, p)| FusionSetting::from_path(dag, p))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::DagOptions;
+    use crate::model::{Activation, Layer, ModelChain, TensorShape};
+
+    fn model() -> ModelChain {
+        ModelChain::new(
+            "strat",
+            TensorShape::new(24, 24, 3),
+            vec![
+                Layer::conv("c0", 3, 1, 1, 3, 8, Activation::Relu6),
+                Layer::conv("c1", 3, 2, 1, 8, 16, Activation::Relu6),
+                Layer::conv("c2", 3, 1, 1, 16, 16, Activation::Relu6),
+                Layer::global_pool("gp", 16),
+                Layer::dense("fc", 16, 10),
+            ],
+        )
+    }
+
+    fn dag() -> FusionDag {
+        FusionDag::build(&model(), DagOptions::default())
+    }
+
+    /// All strategies, as the trait objects the planner dispatches on.
+    fn all() -> Vec<Box<dyn PlanStrategy>> {
+        vec![
+            Box::new(P1),
+            Box::new(P2),
+            Box::new(Vanilla),
+            Box::new(HeadFusion),
+            Box::new(StreamNet),
+            Box::new(Exhaustive),
+        ]
+    }
+
+    #[test]
+    fn strategies_match_their_legacy_solvers() {
+        let d = dag();
+        let none = Constraints::none();
+        assert_eq!(
+            P1.solve(&d, &none).unwrap().spans,
+            solve_p1_unconstrained(&d).unwrap().spans
+        );
+        assert_eq!(
+            P1.solve(&d, &none.with(Constraint::Overhead(1.3)))
+                .map(|s| s.cost.peak_ram),
+            solve_p1(&d, 1.3).map(|s| s.cost.peak_ram)
+        );
+        assert_eq!(
+            P2.solve(&d, &none.with(Constraint::Ram(4_000)))
+                .map(|s| s.cost.macs),
+            solve_p2(&d, 4_000).map(|s| s.cost.macs)
+        );
+        assert_eq!(Vanilla.solve(&d, &none).unwrap().spans, solve_vanilla(&d).spans);
+        assert_eq!(
+            HeadFusion.solve(&d, &none).unwrap().spans,
+            solve_head_fusion(&d).spans
+        );
+        assert_eq!(
+            StreamNet.solve(&d, &none).map(|s| s.spans),
+            solve_streamnet(&d, None).map(|s| s.spans)
+        );
+    }
+
+    #[test]
+    fn every_strategy_honors_constraints_through_the_trait() {
+        let d = dag();
+        let c = Constraints::none()
+            .with(Constraint::Ram(6_000))
+            .with(Constraint::Overhead(1.5));
+        for s in all() {
+            if let Some(setting) = s.solve(&d, &c) {
+                assert!(c.satisfied_by(&setting), "{} violated constraints", s.name());
+            }
+        }
+    }
+
+    #[test]
+    fn infinite_overhead_bound_is_unconstrained() {
+        let d = dag();
+        let inf = Constraints::none().with(Constraint::Overhead(f64::INFINITY));
+        assert_eq!(
+            P1.solve(&d, &inf).unwrap().cost.peak_ram,
+            P1.solve(&d, &Constraints::none()).unwrap().cost.peak_ram
+        );
+    }
+
+    #[test]
+    fn exhaustive_is_the_floor_for_p1() {
+        let d = dag();
+        for f_max in [1.1f64, 1.5, f64::INFINITY] {
+            let c = Constraints::none().with(Constraint::Overhead(f_max));
+            let exact = Exhaustive.solve(&d, &c);
+            let fast = P1.solve(&d, &c);
+            match (exact, fast) {
+                (Some(e), Some(f)) => assert!(f.cost.peak_ram >= e.cost.peak_ram),
+                (None, None) => {}
+                (e, f) => panic!("feasibility mismatch at F_max={f_max}: {e:?} vs {f:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn infeasible_ram_bound_is_no_solution_for_all() {
+        let d = dag();
+        let hopeless = Constraints::none().with(Constraint::Ram(8));
+        for s in all() {
+            assert!(s.solve(&d, &hopeless).is_none(), "{} fabricated a plan", s.name());
+        }
+    }
+
+    #[test]
+    fn constraint_describe_is_stable() {
+        assert_eq!(Constraints::none().describe(), "unconstrained");
+        assert_eq!(
+            Constraints::none().with(Constraint::Ram(64_000)).describe(),
+            "P<=64000B"
+        );
+        let both = Constraints::none()
+            .with(Constraint::Ram(16_000))
+            .with(Constraint::Overhead(1.3));
+        assert_eq!(both.describe(), "P<=16000B,F<=1.3");
+    }
+}

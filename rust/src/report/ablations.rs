@@ -1,11 +1,11 @@
 //! Ablations for the design choices DESIGN.md calls out — the paper's §9
 //! "Discussion" axes, made measurable.
 
-use crate::fusion::CacheScheme;
 use crate::fusion::tiles::band_heights;
-use crate::graph::FusionDag;
+use crate::fusion::CacheScheme;
+use crate::graph::DagOptions;
 use crate::model::ModelChain;
-use crate::optimizer::minimize_ram_unconstrained;
+use crate::optimizer::Planner;
 use crate::zoo;
 
 use super::{kb, render};
@@ -20,14 +20,18 @@ pub struct SchemeRow {
 
 pub fn ablation_cache_schemes() -> (Vec<SchemeRow>, String) {
     let models = zoo::paper_models();
+    // One planner per model across the scheme sweep: same-scheme edge
+    // costs come from the shared memo on every rebuild.
+    let mut planners: Vec<Planner> =
+        models.iter().map(|(_, m)| Planner::for_model(m.clone())).collect();
     let mut rows = Vec::new();
     for scheme in CacheScheme::ALL {
-        let cells = models
-            .iter()
-            .map(|(_, m)| {
-                let dag = FusionDag::build_with_scheme(m, None, scheme);
-                let s = minimize_ram_unconstrained(&dag).expect("path");
-                (kb(s.cost.peak_ram), s.cost.overhead)
+        let cells = planners
+            .iter_mut()
+            .map(|p| {
+                p.set_dag_options(DagOptions::default().scheme(scheme));
+                let plan = p.plan().expect("path");
+                (kb(plan.cost().peak_ram), plan.cost().overhead)
             })
             .collect();
         rows.push(SchemeRow { scheme, cells });

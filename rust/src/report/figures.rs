@@ -1,8 +1,7 @@
 //! Paper figures 2, 3, 4 (as data series / CSV).
 
-use crate::graph::FusionDag;
 use crate::mcu::{board_by_name, estimate_latency_ms};
-use crate::optimizer::{minimize_macs, minimize_ram, minimize_ram_unconstrained};
+use crate::optimizer::{strategy, Constraint, Constraints, Planner};
 use crate::zoo;
 
 use super::{kb, render, F_MAX_GRID, P_MAX_GRID_KB};
@@ -76,15 +75,14 @@ pub fn fig4_series() -> (Vec<FigRow>, String) {
     let mut csv = String::from("model,problem,constraint,ram_kb,latency_ms\n");
 
     for (label, model) in zoo::paper_models() {
-        let dag = FusionDag::build(&model, None);
+        // One planner per model: both constraint sweeps share its DAG and
+        // edge-cost memo.
+        let mut planner = Planner::for_model(model.clone());
         for &f_max in F_MAX_GRID {
-            let s = if f_max.is_infinite() {
-                minimize_ram_unconstrained(&dag)
-            } else {
-                minimize_ram(&dag, f_max)
-            };
-            if let Some(s) = s {
-                let lat = estimate_latency_ms(&model, &s, board).total_ms;
+            let c = Constraints::none().with(Constraint::Overhead(f_max));
+            if let Ok(p) = planner.plan_with(&strategy::P1, c) {
+                let s = &p.setting;
+                let lat = estimate_latency_ms(&model, s, board).total_ms;
                 rows.push(FigRow {
                     label: format!("{label}/P1"),
                     x: kb(s.cost.peak_ram),
@@ -97,8 +95,10 @@ pub fn fig4_series() -> (Vec<FigRow>, String) {
             }
         }
         for &p_kb in P_MAX_GRID_KB {
-            if let Some(s) = minimize_macs(&dag, p_kb * 1000) {
-                let lat = estimate_latency_ms(&model, &s, board).total_ms;
+            let c = Constraints::none().with(Constraint::Ram(p_kb * 1000));
+            if let Ok(p) = planner.plan_with(&strategy::P2, c) {
+                let s = &p.setting;
+                let lat = estimate_latency_ms(&model, s, board).total_ms;
                 rows.push(FigRow {
                     label: format!("{label}/P2"),
                     x: kb(s.cost.peak_ram),

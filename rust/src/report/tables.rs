@@ -4,12 +4,11 @@
 //! [`PlanBatch`]: the whole model × budget grid is one parallel sweep
 //! (bit-identical to the serial solves the rows used to make one by one).
 
-use crate::graph::FusionDag;
 use crate::mcu::{estimate_latency_ms, Board, BOARDS};
 use crate::model::ModelChain;
 use crate::optimizer::{
-    heuristic_head_fusion, minimize_ram_unconstrained, streamnet_single_block,
-    vanilla_setting, FusionSetting, PlanBatch, PlanJob, PlanObjective, PlanOutcome,
+    strategy, Constraints, FusionSetting, PlanBatch, PlanJob, Planner, PlanObjective,
+    PlanOutcome, PlanStrategy,
 };
 use crate::zoo;
 
@@ -120,16 +119,24 @@ pub struct Table2Row {
     pub ram_kb: Vec<f64>,
 }
 
-/// Table 2: minimal peak RAM per method.
+/// Table 2: minimal peak RAM per method — one [`Planner`] per model, the
+/// method column a [`PlanStrategy`] swap on the shared DAG/memo.
 pub fn table2() -> (Vec<Table2Row>, String) {
     let models = zoo::paper_models();
-    let dags: Vec<FusionDag> = models.iter().map(|(_, m)| FusionDag::build(m, None)).collect();
+    let mut planners: Vec<Planner> =
+        models.iter().map(|(_, m)| Planner::for_model(m.clone())).collect();
+    let mut method_row = |method: &'static str, s: &dyn PlanStrategy| -> Table2Row {
+        Table2Row {
+            method,
+            ram_kb: planners
+                .iter_mut()
+                .map(|p| kb(p.plan_with(s, Constraints::none()).unwrap().cost().peak_ram))
+                .collect(),
+        }
+    };
 
     let rows = vec![
-        Table2Row {
-            method: "Vanilla",
-            ram_kb: dags.iter().map(|d| kb(vanilla_setting(d).cost.peak_ram)).collect(),
-        },
+        method_row("Vanilla", &strategy::Vanilla),
         Table2Row {
             // §10's scheduling-based family (TinyEngine/vMCU): pool reuse
             // without tiling — floor = largest I+O pair.
@@ -139,24 +146,9 @@ pub fn table2() -> (Vec<Table2Row>, String) {
                 .map(|(_, m)| kb(crate::memory::plan_pool(m).pool_bytes))
                 .collect(),
         },
-        Table2Row {
-            method: "MCUNetV2 (heuristic)",
-            ram_kb: dags.iter().map(|d| kb(heuristic_head_fusion(d).cost.peak_ram)).collect(),
-        },
-        Table2Row {
-            method: "StreamNet (1 block)",
-            ram_kb: dags
-                .iter()
-                .map(|d| kb(streamnet_single_block(d, None).unwrap().cost.peak_ram))
-                .collect(),
-        },
-        Table2Row {
-            method: "msf-CNN",
-            ram_kb: dags
-                .iter()
-                .map(|d| kb(minimize_ram_unconstrained(d).unwrap().cost.peak_ram))
-                .collect(),
-        },
+        method_row("MCUNetV2 (heuristic)", &strategy::HeadFusion),
+        method_row("StreamNet (1 block)", &strategy::StreamNet),
+        method_row("msf-CNN", &strategy::P1),
     ];
 
     let grid: Vec<Vec<String>> = rows
@@ -189,8 +181,8 @@ pub fn table3() -> (Vec<Table3Row>, String) {
     let settings: Vec<(ModelChain, FusionSetting)> = models
         .iter()
         .map(|(_, m)| {
-            let dag = FusionDag::build(m, None);
-            (m.clone(), minimize_ram_unconstrained(&dag).unwrap())
+            let s = Planner::for_model(m.clone()).setting().unwrap();
+            (m.clone(), s)
         })
         .collect();
 

@@ -22,12 +22,11 @@ pub use artifacts::{ArtifactManifest, EntrySpec, TensorSpec};
 use std::collections::HashSet;
 use std::path::{Path, PathBuf};
 
+use crate::bail;
 use crate::exec::Engine;
-use crate::graph::FusionDag;
 use crate::ops::{conv2d, dense, FusedBlock, Tensor};
-use crate::optimizer::{minimize_ram_unconstrained, vanilla_setting, FusionSetting};
+use crate::optimizer::{strategy::Vanilla, Constraints, FusionSetting, Planner};
 use crate::util::error::{Context, Result};
-use crate::{anyhow, bail};
 
 /// The artifact runtime: one manifest, many executable entry points.
 pub struct Runtime {
@@ -68,13 +67,31 @@ impl Runtime {
     fn ensure_engine(&mut self) -> Result<&Engine> {
         if self.engine.is_none() {
             let engine = Engine::quickstart_from_artifacts(&self.dir)?;
-            let dag = FusionDag::build(engine.model(), None);
-            self.vanilla = Some(vanilla_setting(&dag));
-            self.fused =
-                Some(minimize_ram_unconstrained(&dag).ok_or_else(|| anyhow!("no fused plan"))?);
+            // One planner, two strategies: the DAG and edge costs are
+            // shared between the vanilla and min-RAM plans.
+            let mut planner = Planner::for_model(engine.model().clone());
+            self.fused = Some(planner.setting().map_err(|e| e.wrap("fused plan"))?);
+            self.vanilla = Some(planner.plan_with(&Vanilla, Constraints::none())?.setting);
             self.engine = Some(engine);
         }
         Ok(self.engine.as_ref().unwrap())
+    }
+
+    /// Analytic peak RAM (Eq. 5–6) of the fusion plan behind a model
+    /// entry — the number [`crate::backend::InferBackend::peak_ram`]
+    /// reports for artifact-backed serving.
+    pub fn plan_peak_ram(&mut self, name: &str) -> Result<u64> {
+        match name {
+            "model_fused" => {
+                self.ensure_engine()?;
+                Ok(self.fused.as_ref().unwrap().cost.peak_ram)
+            }
+            "model_vanilla" => {
+                self.ensure_engine()?;
+                Ok(self.vanilla.as_ref().unwrap().cost.peak_ram)
+            }
+            other => bail!("entry '{other}' serves no fusion plan"),
+        }
     }
 
     /// Load an entry point: validates it exists in the manifest and has an

@@ -71,6 +71,12 @@ impl From<crate::memory::OomError> for Error {
     }
 }
 
+impl From<crate::util::json::JsonError> for Error {
+    fn from(e: crate::util::json::JsonError) -> Self {
+        Error::msg(e)
+    }
+}
+
 impl From<String> for Error {
     fn from(s: String) -> Self {
         Error::msg(s)
@@ -160,5 +166,22 @@ mod tests {
         }
         assert!(parse("12").is_ok());
         assert!(parse("x").is_err());
+    }
+
+    #[test]
+    fn composes_with_question_mark_in_downstream_binaries() {
+        // The whole point of `impl std::error::Error`: a downstream
+        // binary returning `Box<dyn Error>` can use `?` on crate results.
+        fn downstream() -> std::result::Result<u32, Box<dyn std::error::Error>> {
+            Err(Error::msg("backend down").wrap("loading plan"))?
+        }
+        let e = downstream().unwrap_err();
+        assert_eq!(e.to_string(), "loading plan: backend down");
+
+        fn via_json() -> std::result::Result<(), Box<dyn std::error::Error>> {
+            crate::util::json::Json::parse("not json")?;
+            Ok(())
+        }
+        assert!(via_json().is_err());
     }
 }

@@ -33,18 +33,20 @@ pub fn paper_models() -> Vec<(&'static str, ModelChain)> {
     ]
 }
 
-/// Look a model up by CLI name.
+/// Look a model up by CLI alias *or* by its canonical `ModelChain::name`
+/// string — the latter is what a serialized [`crate::optimizer::Plan`]
+/// records, so plan files resolve back to their zoo model.
 pub fn by_name(name: &str) -> Option<ModelChain> {
     match name {
-        "mbv2-w0.35" | "mbv2" => Some(mbv2(0.35, 144, 1000)),
-        "mn2-vww5" | "vww5" => Some(mcunet_vww5()),
-        "mn2-320k" | "320k" => Some(mcunet_320k()),
+        "mbv2-w0.35" | "mbv2" | "mbv2-w0.35@144" => Some(mbv2(0.35, 144, 1000)),
+        "mn2-vww5" | "vww5" | "mcunet-vww5@80" => Some(mcunet_vww5()),
+        "mn2-320k" | "320k" | "mcunet-320k@176" => Some(mcunet_320k()),
         "quickstart" => Some(quickstart()),
         "tiny" => Some(tiny_cnn()),
         "lenet" => Some(lenet()),
         "kws" => Some(kws_cnn()),
-        "resnet34" => Some(resnet34(224, 1000)),
-        "resnet34-96" => Some(resnet34(96, 100)),
+        "resnet34" | "resnet34@224" => Some(resnet34(224, 1000)),
+        "resnet34-96" | "resnet34@96" => Some(resnet34(96, 100)),
         _ => None,
     }
 }
@@ -61,3 +63,38 @@ pub const MODEL_NAMES: &[&str] = &[
     "resnet34",
     "resnet34-96",
 ];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_names_resolve_for_plan_roundtrips() {
+        // A serialized Plan records `ModelChain::name`; every zoo model
+        // must resolve back through `by_name` under that exact string.
+        let models = [
+            mbv2(0.35, 144, 1000),
+            mcunet_vww5(),
+            mcunet_320k(),
+            quickstart(),
+            tiny_cnn(),
+            lenet(),
+            kws_cnn(),
+            resnet34(224, 1000),
+            resnet34(96, 100),
+        ];
+        for m in models {
+            let resolved =
+                by_name(&m.name).unwrap_or_else(|| panic!("'{}' not resolvable", m.name));
+            assert_eq!(resolved.name, m.name);
+            assert_eq!(resolved.num_layers(), m.num_layers());
+        }
+    }
+
+    #[test]
+    fn cli_names_all_resolve() {
+        for name in MODEL_NAMES {
+            assert!(by_name(name).is_some(), "{name}");
+        }
+    }
+}

@@ -44,8 +44,7 @@ pub fn resnet34(input: u32, classes: u32) -> ModelChain {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::FusionDag;
-    use crate::optimizer::minimize_ram_unconstrained;
+    use crate::optimizer::Planner;
 
     #[test]
     fn paper_intro_claim_single_layer_ram() {
@@ -88,8 +87,7 @@ mod tests {
         // skip boundaries), so the cut is smaller than on the MBV2 family:
         // ~63% here, landing the model inside a 256 kB Cortex-M4 budget.
         let m = resnet34(96, 100);
-        let dag = FusionDag::build(&m, None);
-        let s = minimize_ram_unconstrained(&dag).unwrap();
+        let s = Planner::for_model(m.clone()).plan().unwrap().setting;
         assert!(
             (s.cost.peak_ram as f64) < 0.4 * m.vanilla_peak_ram() as f64,
             "{} vs {}",

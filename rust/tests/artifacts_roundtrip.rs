@@ -7,12 +7,10 @@
 //! `make artifacts` is the build-time Python step.
 
 use msf_cnn::exec::Engine;
-use msf_cnn::graph::FusionDag;
 use msf_cnn::memory::Arena;
 use msf_cnn::ops::{ParamGen, Tensor};
-use msf_cnn::optimizer::{minimize_ram_unconstrained, vanilla_setting};
+use msf_cnn::optimizer::{strategy, Constraints, Planner};
 use msf_cnn::runtime::Runtime;
-use msf_cnn::zoo;
 
 fn artifacts_dir() -> Option<std::path::PathBuf> {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -58,7 +56,12 @@ fn rust_executor_matches_xla_artifacts() {
     let Some(dir) = artifacts_dir() else { return };
     let mut rt = Runtime::open(&dir).unwrap();
     let engine = Engine::quickstart_from_artifacts(&dir).unwrap();
-    let dag = FusionDag::build(engine.model(), None);
+    let mut planner = Planner::for_model(engine.model().clone());
+    let fused_setting = planner.setting().unwrap();
+    let vanilla_setting = planner
+        .plan_with(&strategy::Vanilla, Constraints::none())
+        .unwrap()
+        .setting;
 
     for seed in [7u64, 8] {
         let x = quickstart_input(seed);
@@ -66,9 +69,8 @@ fn rust_executor_matches_xla_artifacts() {
 
         let input = Tensor::from_data(32, 32, 3, x.clone());
         let mut arena = Arena::unbounded();
-        let rust_vanilla = engine.run(&vanilla_setting(&dag), &input, &mut arena).unwrap();
+        let rust_vanilla = engine.run(&vanilla_setting, &input, &mut arena).unwrap();
         let mut arena2 = Arena::unbounded();
-        let fused_setting = minimize_ram_unconstrained(&dag).unwrap();
         let rust_fused = engine.run(&fused_setting, &input, &mut arena2).unwrap();
 
         for (i, ((xv, rv), rf)) in xla_out

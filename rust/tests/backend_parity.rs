@@ -1,0 +1,160 @@
+//! Backend parity and plan round-trip serving — the acceptance surface of
+//! the unified Planner/Backend API.
+//!
+//! * The two executors ([`msf_cnn::exec::Engine`] behind
+//!   [`EngineBackend`], [`msf_cnn::runtime::Runtime`] behind
+//!   [`ArtifactBackend`]) must produce identical logits and consistent
+//!   `peak_ram()` for the quickstart model when driven through the one
+//!   [`InferBackend`] trait. (Artifact halves skip when `artifacts/` has
+//!   not been built — `make artifacts` is the build-time Python step.)
+//! * A [`Plan`] solved and saved by the [`Planner`] must load from disk
+//!   and serve through [`MultiModelServer`] without re-running the
+//!   optimizer.
+
+use msf_cnn::backend::{ArtifactBackend, BackendSpec, EngineBackend, InferBackend};
+use msf_cnn::coordinator::{ModelSpec, MultiModelServer};
+use msf_cnn::exec::Engine;
+use msf_cnn::memory::Arena;
+use msf_cnn::ops::{ParamGen, Tensor};
+use msf_cnn::optimizer::{strategy, Constraint, Constraints, Planner};
+use msf_cnn::zoo;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn quickstart_input(seed: u64) -> Vec<f32> {
+    ParamGen::new(seed).fill(32 * 32 * 3, 2.0)
+}
+
+fn tmp_plan_path(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("msfcnn-{name}-{}.plan.json", std::process::id()))
+}
+
+// ------------------------------------------------------------ engine backend
+
+#[test]
+fn engine_backend_matches_direct_engine_execution() {
+    let model = zoo::quickstart();
+    let plan = Planner::for_model(model.clone()).plan().unwrap();
+
+    let mut backend = EngineBackend::new(model.clone(), plan.setting.clone());
+    let x = quickstart_input(11);
+    let via_trait = backend.run(&x).unwrap();
+
+    let engine = Engine::new(model);
+    let input = Tensor::from_data(32, 32, 3, x);
+    let mut arena = Arena::unbounded();
+    let direct = engine.run(&plan.setting, &input, &mut arena).unwrap();
+
+    assert_eq!(via_trait, direct.output, "trait must run the plan verbatim");
+    assert_eq!(backend.peak_ram(), plan.cost().peak_ram, "analytic peak");
+    assert_eq!(backend.measured_peak(), Some(direct.peak_ram), "tracked peak");
+}
+
+#[test]
+fn engine_backends_expose_consistent_peaks_across_strategies() {
+    // Through one trait, the P1 plan must dominate the baselines on the
+    // analytic peak — the Table 2 ordering, now visible at the serving
+    // surface.
+    let mut planner = Planner::for_model(zoo::quickstart());
+    let msf = planner.plan().unwrap();
+    let vanilla = planner
+        .plan_with(&strategy::Vanilla, Constraints::none())
+        .unwrap();
+    let msf_backend = EngineBackend::from_plan(&msf).unwrap();
+    let vanilla_backend = EngineBackend::from_plan(&vanilla).unwrap();
+    assert!(msf_backend.peak_ram() < vanilla_backend.peak_ram());
+}
+
+// ------------------------------------------- engine vs artifact (parity)
+
+#[test]
+fn engine_and_runtime_agree_through_the_trait() {
+    let Some(dir) = artifacts_dir() else { return };
+    // The runtime's offline path runs the quickstart model through the
+    // same engine with the artifact weights, so logits must agree
+    // bit-for-bit with an EngineBackend built from those weights.
+    let engine = Engine::quickstart_from_artifacts(&dir).unwrap();
+    let mut planner = Planner::for_model(engine.model().clone());
+    let fused = planner.setting().unwrap();
+    let vanilla = planner
+        .plan_with(&strategy::Vanilla, Constraints::none())
+        .unwrap()
+        .setting;
+
+    let mut artifact_fused: Box<dyn InferBackend> =
+        Box::new(ArtifactBackend::open(&dir, "model_fused").unwrap());
+    let mut artifact_vanilla: Box<dyn InferBackend> =
+        Box::new(ArtifactBackend::open(&dir, "model_vanilla").unwrap());
+
+    for seed in [5u64, 6] {
+        let x = quickstart_input(seed);
+        let input = Tensor::from_data(32, 32, 3, x.clone());
+
+        let mut a1 = Arena::unbounded();
+        let direct_fused = engine.run(&fused, &input, &mut a1).unwrap();
+        let mut a2 = Arena::unbounded();
+        let direct_vanilla = engine.run(&vanilla, &input, &mut a2).unwrap();
+
+        assert_eq!(artifact_fused.run(&x).unwrap(), direct_fused.output);
+        assert_eq!(artifact_vanilla.run(&x).unwrap(), direct_vanilla.output);
+    }
+
+    // peak_ram() parity: the artifact backend's fused entry reports the
+    // same analytic peak as the engine-side plan for the same model.
+    assert_eq!(artifact_fused.peak_ram(), fused.cost.peak_ram);
+    assert_eq!(artifact_vanilla.peak_ram(), vanilla.cost.peak_ram);
+}
+
+// -------------------------------------------- plan round-trip + serving
+
+#[test]
+fn plan_save_load_serve_roundtrip() {
+    // The acceptance pipeline: Planner solves under a budget, the Plan is
+    // persisted, a fresh process-side load serves it through the
+    // multi-model coordinator — no optimizer re-run.
+    let plan = Planner::for_model(zoo::quickstart())
+        .constraint(Constraint::Ram(8_000))
+        .strategy(strategy::P2)
+        .plan()
+        .unwrap();
+    assert!(plan.cost().peak_ram <= 8_000);
+
+    let path = tmp_plan_path("roundtrip");
+    plan.save(&path).unwrap();
+
+    let spec = ModelSpec::plan_file("qs", &path).unwrap();
+    let loaded = match &spec.backend {
+        BackendSpec::Plan { plan: p } => p.clone(),
+        other => panic!("expected a plan-backed spec, got {other:?}"),
+    };
+    assert_eq!(loaded, plan, "JSON round-trip must preserve the plan");
+
+    let server = MultiModelServer::start(vec![spec]).unwrap();
+    let handle = server.handle();
+    let logits = handle.infer("qs", quickstart_input(42)).unwrap();
+    assert_eq!(logits.len(), 10);
+    assert!(logits.iter().all(|v| v.is_finite()));
+
+    // The served plan is exactly the persisted one: replies match a
+    // direct engine run of the loaded setting.
+    let engine = Engine::new(zoo::quickstart());
+    let input = Tensor::from_data(32, 32, 3, quickstart_input(42));
+    let mut arena = Arena::unbounded();
+    let direct = engine.run(&loaded.setting, &input, &mut arena).unwrap();
+    assert_eq!(logits, direct.output);
+
+    drop(handle);
+    server.shutdown();
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn corrupt_plan_file_fails_at_registration() {
+    let path = tmp_plan_path("corrupt");
+    std::fs::write(&path, "{\"version\": 1}").unwrap();
+    assert!(ModelSpec::plan_file("bad", &path).is_err());
+    let _ = std::fs::remove_file(&path);
+}

@@ -6,10 +6,9 @@
 use msf_cnn::coordinator::{
     InferenceServer, ModelSpec, MultiModelServer, ServeError, ServerConfig,
 };
-use msf_cnn::graph::FusionDag;
 use msf_cnn::model::ModelChain;
 use msf_cnn::ops::ParamGen;
-use msf_cnn::optimizer::minimize_ram_unconstrained;
+use msf_cnn::optimizer::Planner;
 use msf_cnn::zoo;
 
 fn artifacts_dir() -> Option<std::path::PathBuf> {
@@ -20,8 +19,9 @@ fn artifacts_dir() -> Option<std::path::PathBuf> {
 /// Engine-backed spec: the model's min-RAM plan run by the pure-Rust
 /// executor — no artifacts required.
 fn engine_spec(id: &str, model: ModelChain) -> ModelSpec {
-    let dag = FusionDag::build(&model, None);
-    let setting = minimize_ram_unconstrained(&dag).expect("min-RAM plan");
+    let setting = Planner::for_model(model.clone())
+        .setting()
+        .expect("min-RAM plan");
     ModelSpec::engine(id, model, setting)
 }
 
@@ -89,8 +89,7 @@ fn engine_backed_model_replies_match_direct_execution() {
     use msf_cnn::ops::Tensor;
 
     let model = zoo::tiny_cnn();
-    let dag = FusionDag::build(&model, None);
-    let setting = minimize_ram_unconstrained(&dag).unwrap();
+    let setting = Planner::for_model(model.clone()).setting().unwrap();
     let server = MultiModelServer::start(vec![ModelSpec::engine(
         "tiny",
         model.clone(),

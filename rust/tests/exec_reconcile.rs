@@ -9,13 +9,17 @@
 //! RAM-reduction and board-fit claims on the real zoo models.
 
 use msf_cnn::exec::Engine;
-use msf_cnn::graph::FusionDag;
 use msf_cnn::mcu::board_by_name;
 use msf_cnn::memory::Arena;
 use msf_cnn::model::ModelChain;
 use msf_cnn::ops::{ParamGen, Tensor};
-use msf_cnn::optimizer::{minimize_macs, minimize_ram_unconstrained, vanilla_setting};
+use msf_cnn::optimizer::{strategy, Constraint, Constraints, FusionSetting, Planner};
 use msf_cnn::zoo;
+
+/// Min-RAM (P1) setting through the planner pipeline.
+fn min_ram_setting(m: &ModelChain) -> FusionSetting {
+    Planner::for_model(m.clone()).plan().unwrap().setting
+}
 
 fn input_for(m: &ModelChain, seed: u64) -> Tensor {
     let s = m.shapes[0];
@@ -31,10 +35,13 @@ fn input_for(m: &ModelChain, seed: u64) -> Tensor {
 fn vanilla_measured_equals_predicted_for_all_zoo_models() {
     for name in ["quickstart", "tiny", "lenet", "kws", "mn2-vww5"] {
         let m = zoo::by_name(name).unwrap();
-        let dag = FusionDag::build(&m, None);
+        let vanilla = Planner::for_model(m.clone())
+            .strategy(strategy::Vanilla)
+            .setting()
+            .unwrap();
         let engine = Engine::new(m.clone());
         let mut arena = Arena::unbounded();
-        let r = engine.run(&vanilla_setting(&dag), &input_for(&m, 1), &mut arena).unwrap();
+        let r = engine.run(&vanilla, &input_for(&m, 1), &mut arena).unwrap();
         assert_eq!(r.peak_ram, m.vanilla_peak_ram(), "{name}");
     }
 }
@@ -43,9 +50,8 @@ fn vanilla_measured_equals_predicted_for_all_zoo_models() {
 fn fused_measured_vs_predicted_relationship() {
     for name in ["quickstart", "tiny", "kws", "mn2-vww5"] {
         let m = zoo::by_name(name).unwrap();
-        let dag = FusionDag::build(&m, None);
         let engine = Engine::new(m.clone());
-        let s = minimize_ram_unconstrained(&dag).unwrap();
+        let s = min_ram_setting(&m);
         let mut arena = Arena::unbounded();
         let r = engine.run(&s, &input_for(&m, 2), &mut arena).unwrap();
         // Band-pyramid execution holds >= the analytical tile model…
@@ -76,11 +82,14 @@ fn fused_measured_vs_predicted_relationship() {
 fn paper_headline_50pct_vs_prior_art() {
     // Table 2's claim: msf-CNN ~halves prior art's (single-block fusion)
     // peak RAM on the paper models — here on the analytical encoding.
-    use msf_cnn::optimizer::streamnet_single_block;
     for (name, m) in zoo::paper_models() {
-        let dag = FusionDag::build(&m, None);
-        let msf = minimize_ram_unconstrained(&dag).unwrap().cost.peak_ram as f64;
-        let sn = streamnet_single_block(&dag, None).unwrap().cost.peak_ram as f64;
+        let mut planner = Planner::for_model(m.clone());
+        let msf = planner.plan().unwrap().cost().peak_ram as f64;
+        let sn = planner
+            .plan_with(&strategy::StreamNet, Constraints::none())
+            .unwrap()
+            .cost()
+            .peak_ram as f64;
         assert!(
             msf <= sn * 0.66,
             "{name}: msf {msf} vs streamnet {sn} — expected >=34% cut"
@@ -97,8 +106,7 @@ fn sixteen_kb_board_nearly_fits_mbv2_min_ram() {
     // pipeline requantizes in-stream. Pin the reproduction at "within
     // 1.25x of the 16 kB class" and keep the ordering claims exact.
     let m = zoo::mbv2(0.35, 144, 1000);
-    let dag = FusionDag::build(&m, None);
-    let s = minimize_ram_unconstrained(&dag).unwrap();
+    let s = min_ram_setting(&m);
     let hifive = board_by_name("hifive1b").unwrap();
     assert!(
         (s.cost.peak_ram as f64) <= hifive.ram_bytes() as f64 * 1.25,
@@ -111,8 +119,7 @@ fn sixteen_kb_board_nearly_fits_mbv2_min_ram() {
         if name == "MBV2-w0.35" {
             continue;
         }
-        let od = FusionDag::build(&other, None);
-        let os = minimize_ram_unconstrained(&od).unwrap();
+        let os = min_ram_setting(&other);
         assert!(s.cost.peak_ram <= os.cost.peak_ram, "{name} smaller than MBV2?");
     }
 }
@@ -120,9 +127,8 @@ fn sixteen_kb_board_nearly_fits_mbv2_min_ram() {
 #[test]
 fn oom_on_budget_that_is_too_small() {
     let m = zoo::quickstart();
-    let dag = FusionDag::build(&m, None);
     let engine = Engine::new(m.clone());
-    let s = minimize_ram_unconstrained(&dag).unwrap();
+    let s = min_ram_setting(&m);
     // A budget below the *measured* requirement must OOM...
     let mut tiny = Arena::with_budget(64);
     assert!(engine.run(&s, &input_for(&m, 3), &mut tiny).is_err());
@@ -137,10 +143,12 @@ fn p2_settings_fit_their_declared_budget_when_executed() {
     // construction; verify execution stays within a banded factor (the
     // band-vs-tile gap) and never exceeds vanilla.
     let m = zoo::quickstart();
-    let dag = FusionDag::build(&m, None);
     let engine = Engine::new(m.clone());
+    let mut planner = Planner::for_model(m.clone());
     for p_max in [4_000u64, 6_000, 12_000] {
-        if let Some(s) = minimize_macs(&dag, p_max) {
+        let c = Constraints::none().with(Constraint::Ram(p_max));
+        if let Ok(plan) = planner.plan_with(&strategy::P2, c) {
+            let s = plan.setting;
             assert!(s.cost.peak_ram <= p_max);
             let mut arena = Arena::unbounded();
             let r = engine.run(&s, &input_for(&m, 4), &mut arena).unwrap();

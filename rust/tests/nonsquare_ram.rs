@@ -13,11 +13,11 @@
 
 use msf_cnn::exec::Engine;
 use msf_cnn::fusion::{band_heights, block_cache_bytes, block_peak_ram};
-use msf_cnn::graph::FusionDag;
+use msf_cnn::graph::{DagOptions, FusionDag};
 use msf_cnn::memory::Arena;
 use msf_cnn::model::{Activation, Layer, ModelChain, TensorShape};
 use msf_cnn::ops::{ParamGen, Tensor};
-use msf_cnn::optimizer::{minimize_ram_unconstrained, FusionSetting};
+use msf_cnn::optimizer::{FusionSetting, Planner};
 use msf_cnn::zoo;
 
 /// KWS-style tall-thin chain whose 3-layer receptive band (`t_0 = 15`)
@@ -55,7 +55,7 @@ fn analytical_cost_tracks_arena_measurement() {
     // holds at least the analytical tile model, and both sides beat the
     // vanilla footprint.
     let m = tall_thin();
-    let dag = FusionDag::build(&m, None);
+    let dag = FusionDag::build(&m, DagOptions::default());
     let e03 = (0..dag.edges.len())
         .find(|&e| dag.edges[e].a == 0 && dag.edges[e].b == 3 && !dag.edges[e].iterative_tail)
         .expect("fused span [0,3) exists");
@@ -88,8 +88,7 @@ fn kws_zoo_model_reconciles() {
     // exec_reconcile envelope) — with the pre-fix under-prediction the
     // analytical side shrinks and the envelope drifts.
     let m = zoo::kws_cnn();
-    let dag = FusionDag::build(&m, None);
-    let s = minimize_ram_unconstrained(&dag).unwrap();
+    let s = Planner::for_model(m.clone()).plan().unwrap().setting;
     let engine = Engine::new(m.clone());
     let s0 = m.shapes[0];
     let input = Tensor::from_data(

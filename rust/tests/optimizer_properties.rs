@@ -1,6 +1,13 @@
 //! Property-based integration tests over random models (seeded in-tree
 //! runner, `msf_cnn::util::prop` — DESIGN.md §Substitutions).
 //!
+//! Deliberately exercises the deprecated pre-`Planner` free functions
+//! (`minimize_*`, `vanilla_setting`, …): they are thin wrappers over the
+//! same solvers the strategies use, and this suite is their regression
+//! coverage. New code should go through `optimizer::Planner` /
+//! `optimizer::strategy` instead — see `strategy_equivalence` below,
+//! which pins wrapper-vs-strategy equality on every random model.
+//!
 //! Invariants locked in:
 //! 1. P2 (pruned, polynomial) is *exactly optimal* vs exhaustive
 //!    enumeration on small random chains.
@@ -11,14 +18,17 @@
 //! 5. The baselines are never strictly better than msf-CNN on peak RAM.
 //! 6. Monotonicity: looser budgets never yield worse optima.
 
+#![allow(deprecated)]
+
 use msf_cnn::exec::Engine;
-use msf_cnn::graph::{enumerate_paths, FusionDag};
+use msf_cnn::graph::{enumerate_paths, DagOptions, FusionDag};
 use msf_cnn::memory::Arena;
 use msf_cnn::model::{Activation, Layer, ModelChain, TensorShape};
 use msf_cnn::ops::Tensor;
 use msf_cnn::optimizer::{
     exhaustive_p1, exhaustive_p2, heuristic_head_fusion, minimize_macs, minimize_ram,
-    minimize_ram_unconstrained, streamnet_single_block, vanilla_setting,
+    minimize_ram_unconstrained, streamnet_single_block, vanilla_setting, Constraint, Constraints,
+    PlanStrategy,
 };
 use msf_cnn::util::prop::{check, Gen};
 
@@ -88,7 +98,7 @@ fn random_chain(g: &mut Gen) -> ModelChain {
 fn p2_exactly_matches_exhaustive() {
     check("p2-vs-exhaustive", 40, |g| {
         let m = random_chain(g);
-        let dag = FusionDag::build(&m, None);
+        let dag = FusionDag::build(&m, DagOptions::default());
         if enumerate_paths(&dag).len() > 4096 {
             return Ok(()); // keep exhaustive tractable
         }
@@ -109,7 +119,7 @@ fn p2_exactly_matches_exhaustive() {
 fn p1_feasible_and_budget_respected() {
     check("p1-feasibility", 40, |g| {
         let m = random_chain(g);
-        let dag = FusionDag::build(&m, None);
+        let dag = FusionDag::build(&m, DagOptions::default());
         if enumerate_paths(&dag).len() > 4096 {
             return Ok(());
         }
@@ -135,7 +145,7 @@ fn p1_feasible_and_budget_respected() {
 fn fused_execution_matches_vanilla() {
     check("fused-vs-vanilla-numerics", 25, |g| {
         let m = random_chain(g);
-        let dag = FusionDag::build(&m, None);
+        let dag = FusionDag::build(&m, DagOptions::default());
         let engine = Engine::new(m.clone());
         let shape = m.shapes[0];
         let input = Tensor::from_data(
@@ -173,7 +183,7 @@ fn fused_execution_matches_vanilla() {
 fn executed_macs_match_prediction() {
     check("macs-vs-eq12-15", 25, |g| {
         let m = random_chain(g);
-        let dag = FusionDag::build(&m, None);
+        let dag = FusionDag::build(&m, DagOptions::default());
         let engine = Engine::new(m.clone());
         let shape = m.shapes[0];
         let input = Tensor::from_data(
@@ -211,7 +221,7 @@ fn executed_macs_match_prediction() {
 fn msf_dominates_baselines_on_ram() {
     check("msf-dominates", 40, |g| {
         let m = random_chain(g);
-        let dag = FusionDag::build(&m, None);
+        let dag = FusionDag::build(&m, DagOptions::default());
         let Some(msf) = minimize_ram_unconstrained(&dag) else {
             return Err("no setting".into());
         };
@@ -239,7 +249,7 @@ fn msf_dominates_baselines_on_ram() {
 fn budgets_are_monotone() {
     check("budget-monotonicity", 25, |g| {
         let m = random_chain(g);
-        let dag = FusionDag::build(&m, None);
+        let dag = FusionDag::build(&m, DagOptions::default());
         // P2: larger P_max => no more MACs.
         let p1 = (m.vanilla_peak_ram() as f64 * 0.3) as u64;
         let p2 = (m.vanilla_peak_ram() as f64 * 0.9) as u64;
@@ -281,7 +291,7 @@ fn nonsquare_dwconv_chain_matches_exhaustive() {
                 Layer::dense("fc", 16, 6),
             ],
         );
-        let dag = FusionDag::build(&m, None);
+        let dag = FusionDag::build(&m, DagOptions::default());
         for p_max in [1_000u64, 2_000, 4_000, m.vanilla_peak_ram()] {
             match (minimize_macs(&dag, p_max), exhaustive_p2(&dag, p_max)) {
                 (None, None) => {}
@@ -347,6 +357,56 @@ fn plan_batch_parallel_matches_serial_on_random_models() {
 }
 
 #[test]
+fn strategy_equivalence_with_deprecated_wrappers() {
+    // The deprecated free functions and the PlanStrategy trait objects
+    // must be two names for the same solver, on every random model.
+    use msf_cnn::optimizer::strategy::{HeadFusion, P1, P2, StreamNet, Vanilla};
+    check("wrappers-vs-strategies", 25, |g| {
+        let m = random_chain(g);
+        let dag = FusionDag::build(&m, DagOptions::default());
+        let none = Constraints::none();
+        let p_mid = (m.vanilla_peak_ram() as f64 * 0.4) as u64;
+        let cases: [(&dyn PlanStrategy, Constraints, Option<_>); 6] = [
+            (&P1, none, minimize_ram_unconstrained(&dag)),
+            (
+                &P1,
+                none.with(Constraint::Overhead(1.2)),
+                minimize_ram(&dag, 1.2),
+            ),
+            (
+                &P2,
+                none.with(Constraint::Ram(p_mid)),
+                minimize_macs(&dag, p_mid),
+            ),
+            (&Vanilla, none, Some(vanilla_setting(&dag))),
+            (&HeadFusion, none, Some(heuristic_head_fusion(&dag))),
+            (&StreamNet, none, streamnet_single_block(&dag, None)),
+        ];
+        for (strategy, constraints, legacy) in cases {
+            let s = strategy.solve(&dag, &constraints);
+            let same = match (&s, &legacy) {
+                (None, None) => true,
+                (Some(a), Some(b)) => {
+                    a.spans == b.spans
+                        && a.cost.peak_ram == b.cost.peak_ram
+                        && a.cost.macs == b.cost.macs
+                }
+                _ => false,
+            };
+            if !same {
+                return Err(format!(
+                    "{} diverged from its wrapper: {:?} vs {:?}",
+                    strategy.name(),
+                    s.as_ref().map(|x| x.cost.peak_ram),
+                    legacy.as_ref().map(|x| x.cost.peak_ram)
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn complete_dag_path_count_follows_appendix_d() {
     // 2^{V-2} complete paths on fully-fusable chains (App. D) — via the
     // real builder on purely-conv models (all spans fusable).
@@ -355,7 +415,7 @@ fn complete_dag_path_count_follows_appendix_d() {
             .map(|i| Layer::conv(format!("c{i}"), 1, 1, 0, 2, 2, Activation::None))
             .collect();
         let m = ModelChain::new("k", TensorShape::new(6, 6, 2), layers);
-        let dag = FusionDag::build(&m, None);
+        let dag = FusionDag::build(&m, DagOptions::default());
         // n layers => V = n+1 nodes => 2^{V-2} = 2^{n-1} complete paths.
         assert_eq!(enumerate_paths(&dag).len(), 1usize << (n - 1));
     }
