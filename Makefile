@@ -1,15 +1,15 @@
 # msf-CNN reproduction — build / verify entry points.
 #
 # `make verify` is the regression gate: tier-1 (release build + tests)
-# plus clippy -D warnings and rustfmt --check when the components are
-# installed. CI runs the same target (.github/workflows/ci.yml), so the
-# seed suite can't silently rot again.
+# plus clippy -D warnings, rustfmt --check, and rustdoc -D warnings when
+# the components are installed. CI runs the same target
+# (.github/workflows/ci.yml), so the seed suite can't silently rot again.
 
 CARGO ?= cargo
 
-.PHONY: verify build test clippy fmt bench artifacts clean
+.PHONY: verify build test clippy fmt doc bench artifacts clean
 
-verify: build test clippy fmt
+verify: build test clippy fmt doc
 
 build:
 	$(CARGO) build --release
@@ -30,6 +30,11 @@ fmt:
 	else \
 		echo "cargo fmt unavailable; skipping format check"; \
 	fi
+
+# The public API must stay documented: broken intra-doc links and missing
+# docs on the redesigned surface fail the gate.
+doc:
+	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps
 
 bench:
 	$(CARGO) bench

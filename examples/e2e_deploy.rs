@@ -11,15 +11,16 @@
 //!      tracked RAM, verifying numerics and the measured peak-RAM cut.
 //!   3. The artifact runtime serves the same weights behind the same
 //!      trait and must agree with the engine side.
-//!   4. The serving coordinator then handles 200 batched requests on the
-//!      fused artifact and reports latency/throughput.
+//!   4. The control plane deploys the fused artifact into a running
+//!      (initially empty) `MultiModelServer`, handles 200 batched
+//!      requests, and reports latency/throughput.
 //!
 //! ```sh
 //! make artifacts && cargo run --offline --release --example e2e_deploy
 //! ```
 
 use msf_cnn::backend::{ArtifactBackend, EngineBackend, InferBackend};
-use msf_cnn::coordinator::{InferenceServer, ServerConfig};
+use msf_cnn::coordinator::{ModelSpec, MultiModelServer};
 use msf_cnn::exec::Engine;
 use msf_cnn::ops::ParamGen;
 use msf_cnn::optimizer::{strategy, Constraints, Planner};
@@ -88,17 +89,21 @@ fn main() -> Result<()> {
         "both backends must report the same analytic plan peak"
     );
 
-    // --- Stage 4: serve -------------------------------------------------
-    let server = InferenceServer::start(
-        &artifacts,
-        ServerConfig { entry: "model_fused".into(), queue_cap: 128, batch_max: 8 },
-    )?;
-    let handle = server.handle();
+    // --- Stage 4: serve through the control plane -----------------------
+    let server = MultiModelServer::new();
+    server
+        .handle()
+        .deploy(
+            ModelSpec::artifact("model_fused", &artifacts, "model_fused")
+                .with_queue(128, 8),
+        )
+        .map_err(|e| msf_cnn::anyhow!("{e}"))?;
+    let handle = server.bound_handle("model_fused");
     handle.infer(x.clone())?; // warm
     let t0 = std::time::Instant::now();
     let mut threads = Vec::new();
     for t in 0..4u64 {
-        let h = server.handle();
+        let h = server.bound_handle("model_fused");
         threads.push(std::thread::spawn(move || {
             let mut gen = ParamGen::new(31 + t);
             let mut ok = 0;

@@ -1,48 +1,56 @@
-//! Serving: the L3 coordinator driving a **registry of named plans** —
-//! several models served concurrently, each by its own executor thread
-//! draining per-model micro-batches.
+//! Serving: the L3 deployment control plane driving a **live registry of
+//! named plans** — several models served concurrently, each by its own
+//! executor thread draining per-model micro-batches, with models
+//! deployed, hot-swapped, and retired while traffic flows.
 //!
-//! Plans come from the `Planner` pipeline: one is registered in-memory,
-//! one round-trips through a plan JSON on disk (the deploy artifact a
-//! fleet would ship), and — when `artifacts/` has been built
-//! (`make artifacts`) — the AOT quickstart entry joins as a third model
-//! behind the same front door.
+//! Plans come from the `Planner` pipeline and reach the server the way a
+//! fleet would ship them: saved as plan JSON files into a directory, and
+//! synced onto the running server through a `PlanRegistry` (deploy on
+//! first sight, hot-swap on file change, retire on file delete). When
+//! `artifacts/` has been built (`make artifacts`), the AOT quickstart
+//! entry joins as an extra model behind the same front door via a direct
+//! runtime `deploy`.
 //!
 //! ```sh
 //! cargo run --offline --release --example serve
 //! ```
 
-use msf_cnn::coordinator::{ModelSpec, MultiModelServer};
+use msf_cnn::coordinator::{ModelSpec, MultiModelServer, PlanRegistry};
 use msf_cnn::ops::ParamGen;
-use msf_cnn::optimizer::{Plan, Planner};
+use msf_cnn::optimizer::strategy::Vanilla;
+use msf_cnn::optimizer::Planner;
 use msf_cnn::util::error::Result;
 use msf_cnn::zoo;
 
 fn main() -> Result<()> {
     let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
 
-    // Plan the registry through the one pipeline.
-    let quickstart_plan = Planner::for_model(zoo::quickstart()).plan()?;
-    let kws_plan = Planner::for_model(zoo::kws_cnn()).plan()?;
+    // A plans/ directory is the deploy artifact a fleet ships.
+    let plans_dir = std::env::temp_dir().join(format!("msfcnn-serve-plans-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&plans_dir);
+    std::fs::create_dir_all(&plans_dir)?;
+    Planner::for_model(zoo::quickstart())
+        .plan()?
+        .save(plans_dir.join("quickstart.plan.json"))?;
+    Planner::for_model(zoo::kws_cnn())
+        .plan()?
+        .save(plans_dir.join("kws.plan.json"))?;
 
-    // The kws plan takes the full deploy round-trip: save to disk, load
-    // back, register from the file — serving never re-runs the optimizer.
-    let plan_path = std::env::temp_dir().join("msfcnn-serve-example.plan.json");
-    kws_plan.save(&plan_path)?;
-    println!("kws plan persisted: {}", Plan::load(&plan_path)?.describe());
+    // Control plane: start empty, sync the registry onto it.
+    let mut registry = PlanRegistry::open(&plans_dir)?;
+    let server = MultiModelServer::new();
+    let handle = server.handle();
+    let report = registry.sync(&handle)?;
+    println!("deployed from {}: {:?}", plans_dir.display(), report.added);
 
-    let mut specs = vec![
-        ModelSpec::plan("quickstart", quickstart_plan),
-        ModelSpec::plan_file("kws", &plan_path)?,
-    ];
-    let have_artifacts = std::path::Path::new(&artifacts).join("manifest.json").exists();
-    if have_artifacts {
-        specs.push(ModelSpec::artifact("aot-fused", &artifacts, "model_fused"));
+    // An artifact-backed model deploys straight through the same handle.
+    if std::path::Path::new(&artifacts).join("manifest.json").exists() {
+        handle
+            .deploy(ModelSpec::artifact("aot-fused", &artifacts, "model_fused"))
+            .map_err(|e| msf_cnn::anyhow!("{e}"))?;
     }
-    let ids: Vec<String> = specs.iter().map(|s| s.id.clone()).collect();
+    let ids = handle.model_ids();
     println!("registry: {}", ids.join(", "));
-
-    let server = MultiModelServer::start(specs)?;
 
     // Drive 100 requests per model from 2 client threads each.
     let t0 = std::time::Instant::now();
@@ -70,13 +78,30 @@ fn main() -> Result<()> {
             }));
         }
     }
+
+    // Meanwhile, exercise the control plane under live traffic: rewrite
+    // the quickstart plan file (vanilla spans) and re-sync — the running
+    // model hot-swaps with queued requests draining on the old plan.
+    Planner::for_model(zoo::quickstart())
+        .strategy(Vanilla)
+        .plan()?
+        .save(plans_dir.join("quickstart.plan.json"))?;
+    let changes = registry.sync(&handle)?;
+    println!(
+        "hot-swapped under load: {:?} (now v{})",
+        changes.updated,
+        registry.latest("quickstart").map(|e| e.version).unwrap_or(0)
+    );
+
     let ok: usize = clients.into_iter().map(|c| c.join().unwrap()).sum();
     let dt = t0.elapsed();
     let total = 100 * ids.len();
-    println!("served {ok}/{total} requests in {:.2} s ({:.1} req/s)",
-        dt.as_secs_f64(), ok as f64 / dt.as_secs_f64());
+    println!(
+        "served {ok}/{total} requests in {:.2} s ({:.1} req/s)",
+        dt.as_secs_f64(),
+        ok as f64 / dt.as_secs_f64()
+    );
 
-    let handle = server.handle();
     let metrics = handle.metrics();
     for (id, m) in metrics.per_model() {
         match m.stats() {
@@ -95,8 +120,12 @@ fn main() -> Result<()> {
             None => println!("  {id:<12} no completed requests"),
         }
     }
+
+    // Retire one model, then shut the whole plane down.
+    handle.retire("kws").map_err(|e| msf_cnn::anyhow!("{e}"))?;
+    println!("retired kws; remaining: {}", handle.model_ids().join(", "));
     drop(handle);
     server.shutdown();
-    let _ = std::fs::remove_file(&plan_path);
+    let _ = std::fs::remove_dir_all(&plans_dir);
     Ok(())
 }

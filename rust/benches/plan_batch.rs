@@ -87,21 +87,17 @@ fn main() {
 
 /// The grid of P1/P2 solves both facade variants run per model.
 fn solve_grid_direct(dag: &FusionDag) -> u64 {
-    #![allow(deprecated)]
-    use msf_cnn::optimizer::{minimize_macs, minimize_ram, minimize_ram_unconstrained};
+    use msf_cnn::optimizer::PlanStrategy;
     let mut acc = 0u64;
     for &f_max in F_MAX_GRID {
-        let s = if f_max.is_infinite() {
-            minimize_ram_unconstrained(dag)
-        } else {
-            minimize_ram(dag, f_max)
-        };
-        if let Some(s) = s {
+        let c = Constraints::none().with(Constraint::Overhead(f_max));
+        if let Some(s) = strategy::P1.solve(dag, &c) {
             acc ^= s.cost.peak_ram;
         }
     }
     for &p_kb in P_MAX_GRID_KB {
-        if let Some(s) = minimize_macs(dag, p_kb * 1000) {
+        let c = Constraints::none().with(Constraint::Ram(p_kb * 1000));
+        if let Some(s) = strategy::P2.solve(dag, &c) {
             acc ^= s.cost.macs;
         }
     }
@@ -126,11 +122,12 @@ fn solve_grid_facade(planner: &mut Planner) -> u64 {
 }
 
 /// Planner-facade overhead: the builder path (DAG ownership, memoized
-/// edge costs, `Plan` assembly) versus raw `minimize_*` free-function
-/// calls, on the full paper constraint grid. Cold = a fresh planner per
-/// iteration (worst case); warm = the intended reuse pattern.
+/// edge costs, `Plan` assembly) versus raw `PlanStrategy::solve` calls
+/// on a hand-built DAG, on the full paper constraint grid. Cold = a
+/// fresh planner per iteration (worst case); warm = the intended reuse
+/// pattern.
 fn facade_overhead(b: &Bencher) {
-    println!("== planner facade vs direct free functions ==");
+    println!("== planner facade vs direct strategy calls ==");
     let models = zoo::paper_models();
 
     // Identical outcomes first: the facade must solve the same grid.
@@ -145,7 +142,7 @@ fn facade_overhead(b: &Bencher) {
         );
     }
 
-    let rd = b.run("facade/direct-free-fns", || {
+    let rd = b.run("facade/direct-strategy", || {
         models
             .iter()
             .map(|(_, m)| solve_grid_direct(&FusionDag::build(m, DagOptions::default())))

@@ -1,26 +1,41 @@
-//! Serving coordinator — the L3 request path.
+//! Serving coordinator — the L3 request path and its deployment control
+//! plane.
 //!
 //! msf-CNN's contribution is the offline optimizer (L3 at *deploy* time);
-//! at *request* time the coordinator routes traffic across a **registry
-//! of named plans** ([`MultiModelServer`]): each registered model gets a
-//! bounded queue with backpressure and a dedicated executor thread that
-//! owns its live [`crate::backend::InferBackend`] (XLA-style handles are
-//! not `Send`, so backends are instantiated inside their executor via
+//! at *request* time the coordinator routes traffic across a **live
+//! registry of named plans** ([`MultiModelServer`]): each deployed model
+//! gets a bounded queue with backpressure and a dedicated executor thread
+//! that owns its live [`crate::backend::InferBackend`] (XLA-style handles
+//! are not `Send`, so backends are instantiated inside their executor via
 //! [`crate::backend::BackendSpec::connect`]) and drains per-model
-//! micro-batches. Specs describe AOT artifacts, in-memory fusion
-//! settings, or pre-solved serialized [`crate::optimizer::Plan`]s
-//! ([`ModelSpec::plan_file`]), so many zoo models can be served
-//! concurrently without a Python step. [`Metrics`] reports queue depth,
-//! latency percentiles, rejections, and shutdown drops per model;
-//! shutdown drains queued requests with structured
-//! [`ServeError::ShuttingDown`] replies instead of dropping them.
-//! [`InferenceServer`] keeps the original single-model surface. Built on
-//! std threads/channels (offline environment; DESIGN.md §Substitutions).
+//! micro-batches.
+//!
+//! The registry is mutable at runtime: [`ServerHandle::deploy`] adds a
+//! model, [`ServerHandle::swap`] hot-replaces one (in-flight requests
+//! drain on the old backend, new submits route to the new plan),
+//! [`ServerHandle::retire`] removes one. [`PlanRegistry`] feeds that
+//! control plane from a directory of plan JSON files — versioned,
+//! re-scanned on demand (mtime/size-based), queryable by `(model_id,
+//! version)`, and [`PlanRegistry::sync`]able onto a running server:
+//! `msfcnn serve --registry DIR` serves whatever the directory holds and
+//! follows its changes.
+//!
+//! Specs describe AOT artifacts, in-memory fusion settings, or pre-solved
+//! serialized [`crate::optimizer::Plan`]s ([`ModelSpec::plan_file`]), so
+//! many zoo models can be served concurrently without a Python step.
+//! [`Metrics`] reports queue depth, latency percentiles, rejections, and
+//! shutdown drops per model, and survives hot swaps; shutdown drains
+//! queued requests with structured [`ServeError::ShuttingDown`] replies
+//! instead of dropping them. [`InferenceServer`] keeps the original
+//! single-model surface. Built on std threads/channels (offline
+//! environment; DESIGN.md §Substitutions).
 
 mod metrics;
+mod registry;
 mod server;
 
 pub use metrics::{LatencyStats, Metrics, ModelMetrics};
+pub use registry::{PlanEntry, PlanRegistry, ScanReport};
 pub use server::{
     BoundHandle, InferenceServer, ModelSpec, MultiModelServer, Pending, ServeError,
     ServerConfig, ServerHandle,

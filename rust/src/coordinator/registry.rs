@@ -1,0 +1,312 @@
+//! [`PlanRegistry`]: a versioned, directory-backed store of named
+//! [`Plan`]s — the deploy side of the control plane.
+//!
+//! A registry watches one directory of plan JSON files (the artifacts
+//! [`crate::optimizer::Planner`] writes via [`Plan::save`]). Each file
+//! named `<model_id>.plan.json` (or `<model_id>.json`) is one deployable
+//! model; re-[`scan`](PlanRegistry::scan)ning the directory picks up new,
+//! changed (mtime/size-based — no inotify dependency), and deleted files,
+//! bumping a per-model version on every change and keeping the full
+//! version history queryable by `(model_id, version)`.
+//!
+//! [`PlanRegistry::sync`] turns a scan into control-plane actions on a
+//! running [`super::MultiModelServer`]: new files are
+//! [`deploy`](super::ServerHandle::deploy)ed, changed files are
+//! hot-[`swap`](super::ServerHandle::swap)ped (in-flight requests drain
+//! on the old plan), and deleted files are
+//! [`retire`](super::ServerHandle::retire)d — `msfcnn serve --registry
+//! DIR` is exactly this loop.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
+use std::time::SystemTime;
+
+use crate::optimizer::Plan;
+use crate::util::error::{Context, Result};
+
+use super::server::{ModelSpec, ServerHandle};
+
+/// One versioned registry entry: a validated plan plus its file
+/// provenance.
+#[derive(Debug, Clone)]
+pub struct PlanEntry {
+    /// Registry key (the plan file's stem) — what the serving registry
+    /// routes on.
+    pub model_id: String,
+    /// Monotonic per-model version, starting at 1 and bumped on every
+    /// observed file change.
+    pub version: u64,
+    /// The validated plan (model resolved against the zoo at scan time).
+    pub plan: Plan,
+    /// File the entry was loaded from.
+    pub path: PathBuf,
+    /// File modification time at load.
+    pub mtime: SystemTime,
+    /// File size at load (changes the mtime heuristic would miss on
+    /// coarse-grained filesystems still bump the version).
+    pub file_len: u64,
+}
+
+/// What one [`PlanRegistry::scan`] observed, as model ids (and load
+/// failures as `(path, error)` pairs — a broken file never poisons the
+/// rest of the directory, and the previous good version stays live).
+#[derive(Debug, Default, Clone)]
+pub struct ScanReport {
+    /// Models seen for the first time.
+    pub added: Vec<String>,
+    /// Models whose file changed since the last scan (version bumped).
+    pub updated: Vec<String>,
+    /// Models whose file disappeared (dropped from the registry).
+    pub removed: Vec<String>,
+    /// Files that could not be loaded or validated this scan.
+    pub errors: Vec<(PathBuf, String)>,
+}
+
+impl ScanReport {
+    /// True when the scan observed no change (errors included: a file
+    /// that turned unreadable is a change worth surfacing).
+    pub fn is_empty(&self) -> bool {
+        self.added.is_empty()
+            && self.updated.is_empty()
+            && self.removed.is_empty()
+            && self.errors.is_empty()
+    }
+}
+
+/// Versioned store of named plans, loaded from a directory of plan JSON
+/// files and re-scannable for changes.
+#[derive(Debug)]
+pub struct PlanRegistry {
+    dir: PathBuf,
+    /// Per model id: version history, ascending (last = live).
+    versions: BTreeMap<String, Vec<PlanEntry>>,
+}
+
+/// `<stem>.plan.json` / `<stem>.json` → `stem`; `None` for other files.
+fn model_id_of(path: &Path) -> Option<String> {
+    let name = path.file_name()?.to_str()?;
+    let stem = name
+        .strip_suffix(".plan.json")
+        .or_else(|| name.strip_suffix(".json"))?;
+    (!stem.is_empty()).then(|| stem.to_string())
+}
+
+impl PlanRegistry {
+    /// Open a registry over `dir`. Fails when the directory cannot be
+    /// read. No plan files are loaded yet — the first [`Self::scan`] (or
+    /// [`Self::sync`]) discovers every file as `added`, so a fresh
+    /// registry synced onto a fresh server deploys its full contents.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        std::fs::read_dir(&dir)
+            .with_context(|| format!("opening plan registry {}", dir.display()))?;
+        Ok(Self { dir, versions: BTreeMap::new() })
+    }
+
+    /// The watched directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Live model ids, sorted.
+    pub fn model_ids(&self) -> Vec<String> {
+        self.versions.keys().cloned().collect()
+    }
+
+    /// Number of live models.
+    pub fn len(&self) -> usize {
+        self.versions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.versions.is_empty()
+    }
+
+    /// The live (latest-version) entry of `model_id`.
+    pub fn latest(&self, model_id: &str) -> Option<&PlanEntry> {
+        self.versions.get(model_id).and_then(|h| h.last())
+    }
+
+    /// A specific `(model_id, version)` entry — older versions stay
+    /// queryable after a file change (audit / rollback inspection).
+    pub fn get(&self, model_id: &str, version: u64) -> Option<&PlanEntry> {
+        self.versions
+            .get(model_id)?
+            .iter()
+            .find(|e| e.version == version)
+    }
+
+    /// Iterate the live entry of every model, in id order.
+    pub fn entries(&self) -> impl Iterator<Item = &PlanEntry> {
+        self.versions.values().filter_map(|h| h.last())
+    }
+
+    /// Re-scan the directory: load new files, reload files whose
+    /// `(mtime, size)` changed (bumping their version), and drop models
+    /// whose file disappeared. Plans are validated against the zoo at
+    /// load — a file that fails to parse or validate lands in
+    /// [`ScanReport::errors`] and the previous good version (if any)
+    /// stays live.
+    pub fn scan(&mut self) -> Result<ScanReport> {
+        let mut report = ScanReport::default();
+        let mut seen: BTreeSet<String> = BTreeSet::new();
+
+        let mut files: Vec<PathBuf> = std::fs::read_dir(&self.dir)
+            .with_context(|| format!("scanning plan registry {}", self.dir.display()))?
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| p.is_file())
+            .collect();
+        files.sort();
+
+        for path in files {
+            let Some(model_id) = model_id_of(&path) else { continue };
+            if !seen.insert(model_id.clone()) {
+                report.errors.push((
+                    path,
+                    format!("duplicate plan file for model id '{model_id}' (skipped)"),
+                ));
+                continue;
+            }
+            let (mtime, file_len) = match std::fs::metadata(&path) {
+                Ok(md) => (md.modified().unwrap_or(SystemTime::UNIX_EPOCH), md.len()),
+                Err(e) => {
+                    report.errors.push((path, format!("stat failed: {e}")));
+                    continue;
+                }
+            };
+            let history = self.versions.get(&model_id);
+            if let Some(live) = history.and_then(|h| h.last()) {
+                if live.mtime == mtime && live.file_len == file_len && live.path == path {
+                    continue; // unchanged
+                }
+            }
+            match super::server::load_validated_plan(&path) {
+                Ok(plan) => {
+                    let history = self.versions.entry(model_id.clone()).or_default();
+                    let version = history.last().map_or(1, |e| e.version + 1);
+                    let fresh = history.is_empty();
+                    history.push(PlanEntry {
+                        model_id: model_id.clone(),
+                        version,
+                        plan,
+                        path,
+                        mtime,
+                        file_len,
+                    });
+                    if fresh {
+                        report.added.push(model_id);
+                    } else {
+                        report.updated.push(model_id);
+                    }
+                }
+                Err(e) => report.errors.push((path, format!("{e:#}"))),
+            }
+        }
+
+        // Files gone ⇒ models retired from the registry.
+        let gone: Vec<String> =
+            self.versions.keys().filter(|id| !seen.contains(*id)).cloned().collect();
+        for id in gone {
+            self.versions.remove(&id);
+            report.removed.push(id);
+        }
+        Ok(report)
+    }
+
+    /// Scan, then reconcile the running server against the registry:
+    /// every live entry not yet deployed is deployed, entries whose file
+    /// changed this scan are hot-swapped, and models whose file
+    /// disappeared are retired. Reconciling *all* live entries (not just
+    /// this scan's deltas) makes sync idempotent and safe after a server
+    /// restart or a standalone [`Self::scan`] consumed the deltas.
+    pub fn sync(&mut self, handle: &ServerHandle) -> Result<ScanReport> {
+        let report = self.scan()?;
+        for entry in self.entries() {
+            let id = &entry.model_id;
+            let spec = ModelSpec::plan(id.clone(), entry.plan.clone());
+            match handle.deploy(spec) {
+                Ok(()) => {}
+                Err(super::ServeError::AlreadyDeployed { .. }) => {
+                    if report.updated.iter().any(|u| u == id) {
+                        handle
+                            .swap(ModelSpec::plan(id.clone(), entry.plan.clone()))
+                            .map_err(|e| crate::anyhow!("syncing '{id}': {e}"))?;
+                    }
+                }
+                Err(e) => return Err(crate::anyhow!("syncing '{id}': {e}")),
+            }
+        }
+        for id in &report.removed {
+            match handle.retire(id) {
+                // Already gone server-side: nothing to retire.
+                Ok(()) | Err(super::ServeError::UnknownModel { .. }) => {}
+                Err(e) => return Err(crate::anyhow!("retiring '{id}': {e}")),
+            }
+        }
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::Planner;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "msfcnn-registry-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn open_is_lazy_and_first_scan_adds_everything() {
+        let dir = tmp_dir("open");
+        Planner::for_model(crate::zoo::tiny_cnn())
+            .plan()
+            .unwrap()
+            .save(dir.join("tiny.plan.json"))
+            .unwrap();
+        let mut registry = PlanRegistry::open(&dir).unwrap();
+        assert!(registry.is_empty(), "open binds the directory without loading");
+        let report = registry.scan().unwrap();
+        assert_eq!(report.added, vec!["tiny".to_string()]);
+        assert_eq!(registry.model_ids(), vec!["tiny".to_string()]);
+        let e = registry.latest("tiny").unwrap();
+        assert_eq!(e.version, 1);
+        assert_eq!(e.plan.model, "tiny");
+        assert_eq!(registry.get("tiny", 1).unwrap().version, 1);
+        assert!(registry.get("tiny", 2).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bad_files_are_reported_not_fatal() {
+        let dir = tmp_dir("bad");
+        std::fs::write(dir.join("broken.plan.json"), "{ not json").unwrap();
+        std::fs::write(dir.join("notes.txt"), "ignored").unwrap();
+        let mut registry = PlanRegistry::open(&dir).unwrap();
+        assert!(registry.is_empty());
+        let report = registry.scan().unwrap();
+        assert_eq!(report.errors.len(), 1, "{report:?}");
+        assert!(report.errors[0].1.contains("broken.plan.json"), "{report:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_directory_is_an_error() {
+        assert!(PlanRegistry::open("/nonexistent-plan-registry").is_err());
+    }
+
+    #[test]
+    fn model_id_parsing() {
+        assert_eq!(model_id_of(Path::new("/x/kws.plan.json")).as_deref(), Some("kws"));
+        assert_eq!(model_id_of(Path::new("/x/kws.json")).as_deref(), Some("kws"));
+        assert_eq!(model_id_of(Path::new("/x/kws.txt")), None);
+        assert_eq!(model_id_of(Path::new("/x/.json")), None);
+    }
+}

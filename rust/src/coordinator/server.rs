@@ -1,6 +1,16 @@
-//! The inference server: a registry of named plans, each with a bounded
-//! front-door queue and a dedicated executor thread that owns its
+//! The inference server: a **live** registry of named plans, each with a
+//! bounded front-door queue and a dedicated executor thread that owns its
 //! (non-`Send`) runtime and drains per-model micro-batches.
+//!
+//! The registry is a control plane, not a static configuration: models
+//! are [`ServerHandle::deploy`]ed, hot-[`ServerHandle::swap`]ped, and
+//! [`ServerHandle::retire`]d at runtime. A swap is drain-safe: requests
+//! already queued (or racing the swap) execute on the *old* backend to
+//! completion, while every submit after the swap routes to the new plan —
+//! no request is dropped and no reply changes shape. Retiring a model
+//! drains its queue the same way, after which submits fail with
+//! [`ServeError::UnknownModel`]. Per-model [`Metrics`] are keyed by model
+//! id and survive swaps.
 //!
 //! Built on std threads + channels (tokio is unavailable in the offline
 //! build — DESIGN.md §Substitutions); the architecture mirrors the async
@@ -16,7 +26,7 @@ use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc as std_mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -75,11 +85,7 @@ impl ModelSpec {
     /// unresolvable model name, and span/model mismatches all surface at
     /// registration time, not through the first request.
     pub fn plan_file(id: impl Into<String>, path: impl AsRef<Path>) -> Result<Self> {
-        let plan = Plan::load(path)?;
-        let model = crate::zoo::by_name(&plan.model)
-            .ok_or_else(|| crate::anyhow!("plan model '{}' is not a zoo model", plan.model))?;
-        plan.validate_for(&model)?;
-        Ok(Self::plan(id, plan))
+        Ok(Self::plan(id, load_validated_plan(path.as_ref())?))
     }
 
     #[must_use]
@@ -88,6 +94,18 @@ impl ModelSpec {
         self.batch_max = batch_max;
         self
     }
+}
+
+/// Load + validate one plan file: parse, resolve the model against the
+/// zoo, and check span coverage — the one registration-time gate shared
+/// by [`ModelSpec::plan_file`] and the
+/// [`crate::coordinator::PlanRegistry`] scanner.
+pub(super) fn load_validated_plan(path: &Path) -> Result<Plan> {
+    let plan = Plan::load(path)?;
+    let model = crate::zoo::by_name(&plan.model)
+        .ok_or_else(|| crate::anyhow!("plan model '{}' is not a zoo model", plan.model))?;
+    plan.validate_for(&model)?;
+    Ok(plan)
 }
 
 /// Single-model server configuration (the [`InferenceServer`] wrapper).
@@ -112,6 +130,9 @@ impl Default for ServerConfig {
 pub enum ServeError {
     /// `submit` named a model id that is not in the registry.
     UnknownModel { model_id: String },
+    /// `deploy` named a model id already in the registry (use
+    /// [`ServerHandle::swap`] to replace a live model).
+    AlreadyDeployed { model_id: String },
     /// The model's bounded queue is full (backpressure).
     QueueFull { model_id: String },
     /// The server is stopping; queued requests are drained with this
@@ -130,6 +151,7 @@ impl ServeError {
     pub fn model_id(&self) -> &str {
         match self {
             ServeError::UnknownModel { model_id }
+            | ServeError::AlreadyDeployed { model_id }
             | ServeError::QueueFull { model_id }
             | ServeError::ShuttingDown { model_id }
             | ServeError::BackendInit { model_id, .. }
@@ -144,6 +166,9 @@ impl std::fmt::Display for ServeError {
         match self {
             ServeError::UnknownModel { model_id } => {
                 write!(f, "unknown model '{model_id}' (not registered)")
+            }
+            ServeError::AlreadyDeployed { model_id } => {
+                write!(f, "model '{model_id}' is already deployed (swap to replace it)")
             }
             ServeError::QueueFull { model_id } => {
                 write!(f, "queue full for model '{model_id}' (backpressure)")
@@ -215,12 +240,16 @@ struct QueueEntry {
     inflight: Arc<AtomicUsize>,
 }
 
-/// Handle for submitting requests to any registered model; cheap to clone.
+/// Handle for driving the control plane: submit requests to any live
+/// model, and [`deploy`](Self::deploy) / [`swap`](Self::swap) /
+/// [`retire`](Self::retire) models at runtime. Cheap to clone; every
+/// clone sees the same live registry.
 #[derive(Clone)]
 pub struct ServerHandle {
-    queues: BTreeMap<String, QueueEntry>,
+    queues: Arc<RwLock<BTreeMap<String, QueueEntry>>>,
     metrics: Arc<Mutex<Metrics>>,
     stopping: Arc<AtomicBool>,
+    workers: Arc<Mutex<Vec<JoinHandle<()>>>>,
 }
 
 impl ServerHandle {
@@ -228,12 +257,22 @@ impl ServerHandle {
     /// model is unknown, the server is stopping, or the model's queue is
     /// full (backpressure). Await the result via [`Pending::wait`].
     pub fn submit(&self, model_id: &str, input: Vec<f32>) -> Result<Pending, ServeError> {
+        if self.stopping.load(Ordering::SeqCst) {
+            return Err(ServeError::ShuttingDown { model_id: model_id.into() });
+        }
+        // Clone the entry out of the read lock: a concurrent swap/retire
+        // replaces the map entry without blocking on this submit, and a
+        // send racing the swap lands on the *old* queue, whose executor
+        // drains it on the old backend before exiting.
         let entry = self
             .queues
+            .read()
+            .unwrap()
             .get(model_id)
+            .cloned()
             .ok_or_else(|| ServeError::UnknownModel { model_id: model_id.into() })?;
         entry.inflight.fetch_add(1, Ordering::SeqCst);
-        let result = self.submit_inner(entry, model_id, input);
+        let result = self.submit_inner(&entry, model_id, input);
         entry.inflight.fetch_sub(1, Ordering::SeqCst);
         result
     }
@@ -281,9 +320,91 @@ impl ServerHandle {
         self.metrics.lock().unwrap().clone()
     }
 
-    /// Registered model ids, sorted.
+    /// Live model ids, sorted.
     pub fn model_ids(&self) -> Vec<String> {
-        self.queues.keys().cloned().collect()
+        self.queues.read().unwrap().keys().cloned().collect()
+    }
+
+    /// Add a model to the live registry. Errors when the id is already
+    /// deployed ([`ServeError::AlreadyDeployed`] — use [`Self::swap`] to
+    /// replace a running model) or the server is shutting down. Backend
+    /// initialization happens inside the new executor thread; init
+    /// failures surface through the model's requests as
+    /// [`ServeError::BackendInit`].
+    pub fn deploy(&self, spec: ModelSpec) -> Result<(), ServeError> {
+        let mut queues = self.queues.write().unwrap();
+        if self.stopping.load(Ordering::SeqCst) {
+            return Err(ServeError::ShuttingDown { model_id: spec.id.clone() });
+        }
+        if queues.contains_key(&spec.id) {
+            return Err(ServeError::AlreadyDeployed { model_id: spec.id.clone() });
+        }
+        let id = spec.id.clone();
+        let entry = self.spawn_executor(spec)?;
+        queues.insert(id, entry);
+        Ok(())
+    }
+
+    /// Hot-swap a live model: requests already queued (or racing this
+    /// call) drain to completion on the **old** backend; every submit
+    /// that returns after `swap` routes to the new spec. The model keeps
+    /// its id and its [`Metrics`] history. Errors with
+    /// [`ServeError::UnknownModel`] when the id is not deployed.
+    pub fn swap(&self, spec: ModelSpec) -> Result<(), ServeError> {
+        let mut queues = self.queues.write().unwrap();
+        if self.stopping.load(Ordering::SeqCst) {
+            return Err(ServeError::ShuttingDown { model_id: spec.id.clone() });
+        }
+        if !queues.contains_key(&spec.id) {
+            return Err(ServeError::UnknownModel { model_id: spec.id.clone() });
+        }
+        let id = spec.id.clone();
+        let entry = self.spawn_executor(spec)?;
+        // Dropping the old entry's sender is the drain signal: the old
+        // executor keeps executing buffered requests and exits once the
+        // channel reports disconnected (all racing submit clones gone).
+        queues.insert(id, entry);
+        Ok(())
+    }
+
+    /// Remove a model from the live registry. Queued requests drain to
+    /// completion on its backend; subsequent submits fail with
+    /// [`ServeError::UnknownModel`]. The model's [`Metrics`] entry is
+    /// retained for post-mortem inspection.
+    pub fn retire(&self, model_id: &str) -> Result<(), ServeError> {
+        self.queues
+            .write()
+            .unwrap()
+            .remove(model_id)
+            .map(|_| ())
+            .ok_or_else(|| ServeError::UnknownModel { model_id: model_id.into() })
+    }
+
+    /// Spawn the executor thread for `spec` and hand back its queue
+    /// entry. Pre-registers the metrics entry so zero-traffic models
+    /// still show up in per-model reports.
+    fn spawn_executor(&self, spec: ModelSpec) -> Result<QueueEntry, ServeError> {
+        let id = spec.id.clone();
+        self.metrics.lock().unwrap().model_mut(&id);
+        let (tx, rx) = std_mpsc::sync_channel::<Request>(spec.queue_cap.max(1));
+        let inflight = Arc::new(AtomicUsize::new(0));
+        let inflight_w = inflight.clone();
+        let metrics_w = self.metrics.clone();
+        let stopping_w = self.stopping.clone();
+        let worker = std::thread::Builder::new()
+            .name(format!("msfcnn-exec-{id}"))
+            .spawn(move || worker_loop(spec, rx, inflight_w, metrics_w, stopping_w))
+            .map_err(|e| ServeError::Failed {
+                model_id: id,
+                detail: format!("executor thread spawn: {e}"),
+            })?;
+        // Reap executors that already drained and exited (earlier swaps /
+        // retires), so a long-lived control plane with frequent swaps
+        // doesn't accumulate finished JoinHandles until shutdown.
+        let mut workers = self.workers.lock().unwrap();
+        workers.retain(|w| !w.is_finished());
+        workers.push(worker);
+        Ok(QueueEntry { tx, inflight })
     }
 }
 
@@ -308,55 +429,56 @@ impl BoundHandle {
     }
 }
 
-/// The running registry: one executor thread per registered model.
+/// The running control plane: one executor thread per live model, with
+/// models deployed, swapped, and retired at runtime through
+/// [`ServerHandle`].
 pub struct MultiModelServer {
-    handle: Option<ServerHandle>,
-    workers: Vec<JoinHandle<()>>,
-    stopping: Arc<AtomicBool>,
+    handle: ServerHandle,
+}
+
+impl Default for MultiModelServer {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl MultiModelServer {
-    /// Start an executor per spec. Backend initialization happens inside
-    /// each executor thread; init errors surface through that model's
-    /// requests as [`ServeError::BackendInit`].
+    /// Start an **empty** control plane: no models, ready for
+    /// [`ServerHandle::deploy`] (e.g. from a
+    /// [`crate::coordinator::PlanRegistry`] sync).
+    pub fn new() -> Self {
+        Self {
+            handle: ServerHandle {
+                queues: Arc::new(RwLock::new(BTreeMap::new())),
+                metrics: Arc::new(Mutex::new(Metrics::default())),
+                stopping: Arc::new(AtomicBool::new(false)),
+                workers: Arc::new(Mutex::new(Vec::new())),
+            },
+        }
+    }
+
+    /// Convenience over [`Self::new`] + [`ServerHandle::deploy`]: start
+    /// with an initial registry. Errors on an empty or duplicate spec
+    /// list. Backend initialization happens inside each executor thread;
+    /// init errors surface through that model's requests as
+    /// [`ServeError::BackendInit`].
     pub fn start(specs: Vec<ModelSpec>) -> Result<Self> {
         if specs.is_empty() {
             return Err(crate::anyhow!("empty model registry"));
         }
-        let metrics = Arc::new(Mutex::new(Metrics::default()));
-        let stopping = Arc::new(AtomicBool::new(false));
-        let mut queues = BTreeMap::new();
-        let mut workers = Vec::new();
-
+        let server = Self::new();
         for spec in specs {
-            if queues.contains_key(&spec.id) {
-                return Err(crate::anyhow!("duplicate model id '{}'", spec.id));
-            }
-            // Pre-register the metrics entry so zero-traffic models still
-            // show up in per-model reports.
-            metrics.lock().unwrap().model_mut(&spec.id);
-            let (tx, rx) = std_mpsc::sync_channel::<Request>(spec.queue_cap.max(1));
-            let inflight = Arc::new(AtomicUsize::new(0));
-            queues.insert(spec.id.clone(), QueueEntry { tx, inflight: inflight.clone() });
-            let metrics_w = metrics.clone();
-            let stopping_w = stopping.clone();
-            let name = format!("msfcnn-exec-{}", spec.id);
-            workers.push(
-                std::thread::Builder::new()
-                    .name(name)
-                    .spawn(move || worker_loop(spec, rx, inflight, metrics_w, stopping_w))?,
-            );
+            let id = spec.id.clone();
+            server
+                .handle
+                .deploy(spec)
+                .map_err(|e| crate::anyhow!("deploying '{id}': {e}"))?;
         }
-
-        Ok(Self {
-            handle: Some(ServerHandle { queues, metrics, stopping: stopping.clone() }),
-            workers,
-            stopping,
-        })
+        Ok(server)
     }
 
     pub fn handle(&self) -> ServerHandle {
-        self.handle.as_ref().expect("server running").clone()
+        self.handle.clone()
     }
 
     /// Handle bound to one registered model.
@@ -366,12 +488,15 @@ impl MultiModelServer {
 
     /// Stop accepting requests, drain every queue with structured
     /// [`ServeError::ShuttingDown`] replies (recorded as `shutdown_drops`
-    /// in the metrics), and join the executors. Outstanding handle clones
-    /// stay valid for metrics but all further submits fail fast.
-    pub fn shutdown(mut self) {
-        self.stopping.store(true, Ordering::SeqCst);
-        self.handle.take(); // drop our queue senders
-        for w in self.workers.drain(..) {
+    /// in the metrics), and join the executors — including executors
+    /// already draining from earlier swaps/retires. Outstanding handle
+    /// clones stay valid for metrics but all further submits fail fast.
+    pub fn shutdown(self) {
+        self.handle.stopping.store(true, Ordering::SeqCst);
+        self.handle.queues.write().unwrap().clear(); // drop the queue senders
+        let workers: Vec<JoinHandle<()>> =
+            self.handle.workers.lock().unwrap().drain(..).collect();
+        for w in workers {
             let _ = w.join();
         }
     }
@@ -594,6 +719,39 @@ mod tests {
         }
         let e = downstream().unwrap_err();
         assert!(e.to_string().contains("unknown model 'x'"), "{e}");
+    }
+
+    #[test]
+    fn empty_control_plane_accepts_runtime_deploys() {
+        let (m, setting) = tiny_vanilla();
+        let server = MultiModelServer::new();
+        let h = server.handle();
+        assert!(h.model_ids().is_empty());
+        assert_eq!(
+            h.infer("tiny", vec![0.0; 4]).unwrap_err(),
+            ServeError::UnknownModel { model_id: "tiny".into() }
+        );
+
+        h.deploy(ModelSpec::engine("tiny", m.clone(), setting.clone())).unwrap();
+        assert_eq!(h.model_ids(), vec!["tiny".to_string()]);
+        let logits = h.infer("tiny", vec![0.5; 16 * 16 * 3]).unwrap();
+        assert_eq!(logits.len(), 4);
+
+        // Second deploy under the same id is a structured error…
+        let err = h.deploy(ModelSpec::engine("tiny", m.clone(), setting.clone())).unwrap_err();
+        assert_eq!(err, ServeError::AlreadyDeployed { model_id: "tiny".into() });
+        // …swap of an unknown id likewise.
+        let err = h.swap(ModelSpec::engine("other", m, setting)).unwrap_err();
+        assert_eq!(err, ServeError::UnknownModel { model_id: "other".into() });
+
+        h.retire("tiny").unwrap();
+        assert!(h.model_ids().is_empty());
+        assert_eq!(
+            h.retire("tiny").unwrap_err(),
+            ServeError::UnknownModel { model_id: "tiny".into() }
+        );
+        drop(h);
+        server.shutdown();
     }
 
     #[test]

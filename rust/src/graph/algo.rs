@@ -126,6 +126,9 @@ mod tests {
             b,
             cost: EdgeCost { ram_bytes: ram, macs },
             iterative_tail: false,
+            param_bytes: 0,
+            band_iterations: 1,
+            latency_macs: macs,
         };
         let edges = vec![
             mk(0, 1, 100, 10), // e1
@@ -198,6 +201,9 @@ mod tests {
                         b,
                         cost: EdgeCost { ram_bytes: 1, macs: 1 },
                         iterative_tail: false,
+                        param_bytes: 0,
+                        band_iterations: 1,
+                        latency_macs: 1,
                     });
                 }
             }

@@ -42,6 +42,17 @@ pub struct DagEdge {
     pub cost: EdgeCost,
     /// Block streams its tail into the iterative pool/dense rewrite (§7).
     pub iterative_tail: bool,
+    /// Weight bytes of the span's layers — the flash traffic term of the
+    /// latency model ([`crate::mcu::edge_latency_cycles`]).
+    pub param_bytes: u64,
+    /// Band iterations the span runs (1 for single layers, one per final
+    /// output row for fusion blocks) — §8.3's per-iteration flash refetch.
+    pub band_iterations: u64,
+    /// MAC count the latency model charges this span — always the
+    /// H-cache [`crate::fusion::block_macs`] figure, so per-edge latency
+    /// sums agree exactly with
+    /// [`crate::mcu::estimate_latency_ms`] on the resulting setting.
+    pub latency_macs: u64,
 }
 
 /// The fusion-candidate DAG of a model: `n_layers + 1` nodes, one edge per
@@ -84,15 +95,30 @@ impl FusionDag {
                 None => span_edge_cost(model, a, b, tail, scheme),
             }
         };
+        // Latency ingredients mirror `mcu::estimate_latency_ms` per span:
+        // weight bytes, band iterations, and the H-cache MAC figure.
+        let latency_of = |a: usize, b: usize| -> (u64, u64, u64) {
+            let params: u64 = (a..b).map(|i| model.layers[i].param_bytes()).sum();
+            if b - a == 1 {
+                (params, 1, model.layer_macs(a))
+            } else {
+                let iterations = model.output_of(b - 1).h as u64;
+                (params, iterations, crate::fusion::block_macs(model, a, b))
+            }
+        };
 
         for a in 0..n_layers {
             // Single-layer edge always exists.
+            let (param_bytes, band_iterations, latency_macs) = latency_of(a, a + 1);
             out[a].push(edges.len());
             edges.push(DagEdge {
                 a,
                 b: a + 1,
                 cost: cost_of(a, a + 1, false),
                 iterative_tail: false,
+                param_bytes,
+                band_iterations,
+                latency_macs,
             });
 
             // Fusion-block candidates [a, b).
@@ -106,24 +132,33 @@ impl FusionDag {
                     }
                     continue;
                 }
+                let (param_bytes, band_iterations, latency_macs) = latency_of(a, b);
                 out[a].push(edges.len());
                 edges.push(DagEdge {
                     a,
                     b,
                     cost: cost_of(a, b, false),
                     iterative_tail: false,
+                    param_bytes,
+                    band_iterations,
+                    latency_macs,
                 });
                 // §7: when the rest of the chain is exactly
                 // [GlobalPool, Dense*], add a candidate that streams the
                 // block's rows straight into the iterative tail — one edge
                 // jumping to the output node, never materializing v_b.
                 if model.iterative_tail_at(b) {
+                    let (param_bytes, band_iterations, latency_macs) =
+                        latency_of(a, n_layers);
                     out[a].push(edges.len());
                     edges.push(DagEdge {
                         a,
                         b: n_layers,
                         cost: cost_of(a, b, true),
                         iterative_tail: true,
+                        param_bytes,
+                        band_iterations,
+                        latency_macs,
                     });
                 }
             }

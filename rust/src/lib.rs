@@ -50,7 +50,30 @@
 //! Baselines are a strategy swap on the same pipeline
 //! ([`optimizer::strategy`]): `P1`, `P2`, `Vanilla`, MCUNetV2-style
 //! `HeadFusion`, StreamNet-style `StreamNet`, and exact `Exhaustive`
-//! enumeration all implement [`optimizer::PlanStrategy`].
+//! enumeration all implement [`optimizer::PlanStrategy`]. Deployment
+//! budgets compose on any of them: `Constraint::Ram`,
+//! `Constraint::Overhead`, and the board-bound `Constraint::LatencyMs`
+//! (Table 5's axis), with `strategy::LatencyAware` walking the fusion
+//! DAG for the minimum-RAM setting inside a latency budget:
+//!
+//! ```no_run
+//! use msf_cnn::mcu::board_by_name;
+//! use msf_cnn::optimizer::strategy::LatencyAware;
+//! use msf_cnn::optimizer::{Constraint, Planner};
+//! use msf_cnn::zoo;
+//!
+//! let board = board_by_name("nucleo-f767zi").unwrap();
+//! let plan = Planner::for_model(zoo::mcunet_vww5())
+//!     .constraint(Constraint::Ram(board.ram_bytes()))
+//!     .constraint(Constraint::LatencyMs { board, budget: 500.0 })
+//!     .strategy(LatencyAware::default())
+//!     .plan()
+//!     .unwrap();
+//! // The plan records its latency estimate + board: a complete deploy
+//! // artifact for a registry to serve.
+//! let lat = plan.latency.as_ref().unwrap();
+//! println!("{}: {:.1} ms on {}", plan.model, lat.estimate_ms, lat.board);
+//! ```
 //!
 //! ## Scaling surfaces
 //!
@@ -74,23 +97,36 @@
 //! }
 //! ```
 //!
-//! * **Multi-model serving** — [`coordinator::MultiModelServer`] routes
-//!   requests across a registry of named plans (artifact-, engine-, or
-//!   plan-file-backed [`backend::BackendSpec`]s), one executor thread +
-//!   bounded queue per model, with per-model metrics and a structured
-//!   shutdown drain:
+//! * **Multi-model serving with live deployment** —
+//!   [`coordinator::MultiModelServer`] routes requests across a live
+//!   registry of named plans (artifact-, engine-, or plan-file-backed
+//!   [`backend::BackendSpec`]s), one executor thread + bounded queue per
+//!   model, with per-model metrics and a structured shutdown drain.
+//!   Models are deployed, hot-swapped (in-flight requests drain on the
+//!   old backend), and retired at runtime through the handle, and
+//!   [`coordinator::PlanRegistry`] feeds the control plane from a
+//!   directory of plan JSON files (versioned, re-scanned on demand):
 //!
 //! ```no_run
-//! use msf_cnn::coordinator::{ModelSpec, MultiModelServer};
+//! use msf_cnn::coordinator::{ModelSpec, MultiModelServer, PlanRegistry};
 //! use msf_cnn::optimizer::Planner;
 //! use msf_cnn::zoo;
 //!
+//! // Static bring-up…
 //! let plan = Planner::for_model(zoo::quickstart()).plan().unwrap();
 //! let server = MultiModelServer::start(vec![
 //!     ModelSpec::plan("quickstart", plan),
 //! ]).unwrap();
-//! let logits = server.handle().infer("quickstart", vec![0.0; 32 * 32 * 3]).unwrap();
+//! let handle = server.handle();
+//! let logits = handle.infer("quickstart", vec![0.0; 32 * 32 * 3]).unwrap();
 //! # drop(logits);
+//!
+//! // …and live mutation: swap in a new plan for the same id, retire it,
+//! // or sync a whole plans/ directory onto the running server.
+//! let v2 = Planner::for_model(zoo::quickstart()).plan().unwrap();
+//! handle.swap(ModelSpec::plan("quickstart", v2)).unwrap();
+//! let mut registry = PlanRegistry::open("plans").unwrap();
+//! registry.sync(&handle).unwrap(); // deploy/swap/retire to match the dir
 //! server.shutdown();
 //! ```
 

@@ -2,9 +2,12 @@
 //!
 //! ```text
 //! msfcnn zoo [--model NAME]
-//! msfcnn optimize --model NAME [--f-max F|inf | --p-max-kb N] [--baselines]
+//! msfcnn optimize --model NAME [--f-max F|inf | --p-max-kb N]
+//!                 [--latency-budget MS [--board B]] [--baselines]
 //! msfcnn simulate --model NAME [--f-max F|inf | --p-max-kb N] [--board B]
-//! msfcnn tables [--which 1|2|3|5|fig2|fig3|fig4|all]
+//! msfcnn tables [--which 1|2|3|5|5j|fig2|fig3|fig4|all]
+//! msfcnn registry scan [--dir DIR]
+//! msfcnn serve --registry DIR [--requests N] [--watch-ms MS]
 //! msfcnn serve [--artifacts DIR] [--entry NAME] [--requests N]
 //! ```
 //!
@@ -28,8 +31,11 @@ msfcnn — patch-based multi-stage fusion for TinyML (msf-CNN reproduction)
 USAGE:
   msfcnn zoo [--model NAME]
   msfcnn optimize --model NAME [--f-max F|inf | --p-max-kb N] [--baselines] [--save FILE]
+  msfcnn optimize --model NAME --latency-budget MS [--board BOARD] [--p-max-kb N] [--save FILE]
   msfcnn simulate --model NAME [--f-max F|inf | --p-max-kb N] [--board BOARD] [--trace]
-  msfcnn tables [--which 1|2|3|5|fig2|fig3|fig4|all]
+  msfcnn tables [--which 1|2|3|5|5j|fig2|fig3|fig4|all]
+  msfcnn registry scan [--dir DIR]
+  msfcnn serve --registry DIR [--requests N] [--watch-ms MS]
   msfcnn serve [--artifacts DIR] [--entry NAME] [--requests N]
   msfcnn serve --plan FILE [--id NAME] [--requests N]
 ";
@@ -83,9 +89,26 @@ fn parse_f_max(s: &str) -> Result<f64> {
     }
 }
 
-/// `(strategy, constraints)` the CLI flags denote: `--f-max` is problem
-/// P1, `--p-max-kb` is problem P2, neither is the vanilla baseline.
+/// `(strategy, constraints)` the CLI flags denote: `--latency-budget` is
+/// the latency-constrained walk (optionally joint with `--p-max-kb`),
+/// `--f-max` is problem P1, `--p-max-kb` alone is problem P2, nothing is
+/// the vanilla baseline.
 fn pick_objective(args: &Args) -> Result<(&'static dyn PlanStrategy, Constraints)> {
+    if let Some(ms) = args.get("latency-budget") {
+        let budget: f64 = ms.parse().map_err(|e| anyhow!("bad --latency-budget '{ms}': {e}"))?;
+        let board_name = args.get("board").unwrap_or("nucleo-f767zi");
+        let board = board_by_name(board_name)
+            .ok_or_else(|| anyhow!("unknown board '{board_name}'"))?;
+        if args.has("f-max") {
+            bail!("--latency-budget combines with --p-max-kb, not --f-max");
+        }
+        let mut c = Constraints::none().with(Constraint::LatencyMs { board, budget });
+        if let Some(p) = args.get("p-max-kb") {
+            let p: u64 = p.parse()?;
+            c = c.with(Constraint::Ram(p * 1000));
+        }
+        return Ok((&strategy::LatencyAware, c));
+    }
     match (args.get("f-max"), args.get("p-max-kb")) {
         (Some(f), None) => {
             let f = parse_f_max(f)?;
@@ -118,7 +141,13 @@ fn main() -> Result<()> {
         print!("{USAGE}");
         return Ok(());
     };
-    let args = Args::parse(&argv[1..])?;
+    // `registry` takes a positional subcommand before its flags.
+    let (args, subcommand) = if cmd == "registry" {
+        let sub = argv.get(1).cloned();
+        (Args::parse(argv.get(2..).unwrap_or(&[]))?, sub)
+    } else {
+        (Args::parse(&argv[1..])?, None)
+    };
 
     match cmd {
         "zoo" => match args.get("model") {
@@ -156,7 +185,8 @@ fn main() -> Result<()> {
                 "{name}: {n_nodes} nodes, {n_edges} edges, vanilla peak {:.3} kB",
                 report::kb(vanilla_peak)
             );
-            let plan = if !args.has("f-max") && !args.has("p-max-kb") {
+            let plan = if !args.has("f-max") && !args.has("p-max-kb") && !args.has("latency-budget")
+            {
                 planner.plan_with(&strategy::P2, Constraints::none())?
             } else {
                 pick_plan(&mut planner, &args)?
@@ -169,6 +199,9 @@ fn main() -> Result<()> {
                 s.cost.overhead,
                 s.num_fused_blocks()
             );
+            if let Some(lat) = &plan.latency {
+                println!("estimated latency {:.1} ms on {}", lat.estimate_ms, lat.board);
+            }
             if args.has("baselines") {
                 let baselines: [(&str, &dyn PlanStrategy); 3] = [
                     ("vanilla", &strategy::Vanilla),
@@ -271,6 +304,9 @@ fn main() -> Result<()> {
             if all || which == "5" {
                 println!("{}", report::table5().1);
             }
+            if all || which == "5j" {
+                println!("{}", report::table5_joint().1);
+            }
             if all || which == "fig2" {
                 println!("{}", report::fig2_pooling().1);
             }
@@ -285,6 +321,118 @@ fn main() -> Result<()> {
                 let m = zoo::quickstart();
                 println!("{}", report::ablation_output_granularity(&m, 0, 3).1);
             }
+        }
+        "registry" => {
+            use msf_cnn::coordinator::PlanRegistry;
+            match subcommand.as_deref() {
+                Some("scan") => {
+                    let dir = args.get("dir").unwrap_or("plans");
+                    let mut registry = PlanRegistry::open(dir)?;
+                    let report = registry.scan()?;
+                    for (path, err) in &report.errors {
+                        eprintln!("WARN: {}: {err}", path.display());
+                    }
+                    println!("plan registry {dir}: {} model(s)", registry.len());
+                    for e in registry.entries() {
+                        let lat = match &e.plan.latency {
+                            Some(l) => format!("  {:.1} ms @ {}", l.estimate_ms, l.board),
+                            None => String::new(),
+                        };
+                        println!(
+                            "  {:<14} v{}  {:<22} [{}]  {:.3} kB{}  ({})",
+                            e.model_id,
+                            e.version,
+                            e.plan.strategy,
+                            e.plan.constraints.describe(),
+                            report::kb(e.plan.cost().peak_ram),
+                            lat,
+                            e.path.display()
+                        );
+                    }
+                }
+                other => bail!(
+                    "unknown registry subcommand {:?} (expected: scan)\n\n{USAGE}",
+                    other.unwrap_or("<none>")
+                ),
+            }
+        }
+        "serve" if args.has("registry") => {
+            use msf_cnn::coordinator::{MultiModelServer, PlanRegistry};
+            let dir = args.get("registry").unwrap();
+            let requests = args.get_usize("requests", 100)?;
+            let watch_ms = args.get_usize("watch-ms", 0)?;
+
+            let mut registry = PlanRegistry::open(dir)?;
+            let server = MultiModelServer::new();
+            let handle = server.handle();
+            let report = registry.sync(&handle)?;
+            for (path, err) in &report.errors {
+                eprintln!("WARN: {}: {err}", path.display());
+            }
+            if registry.is_empty() {
+                bail!("no deployable plans in {dir}");
+            }
+            println!("serving {} model(s) from {dir}:", registry.len());
+            for e in registry.entries() {
+                println!("  {} v{}: {}", e.model_id, e.version, e.plan.describe());
+            }
+
+            // Round-robin traffic across the live registry; between
+            // rounds, optionally re-sync so file changes deploy/swap/
+            // retire models mid-serve (the directory watch).
+            let mut gen = ParamGen::new(123);
+            let mut ok = 0usize;
+            let mut sent = 0usize;
+            let t0 = std::time::Instant::now();
+            while sent < requests {
+                let ids = handle.model_ids();
+                if ids.is_empty() {
+                    println!("registry drained to empty; stopping after {sent} request(s)");
+                    break;
+                }
+                for id in ids {
+                    if sent >= requests {
+                        break;
+                    }
+                    let Some(entry) = registry.latest(&id) else { continue };
+                    let model = zoo::by_name(&entry.plan.model)
+                        .ok_or_else(|| anyhow!("model '{}' left the zoo", entry.plan.model))?;
+                    let input = gen.fill(model.shapes[0].elems() as usize, 2.0);
+                    sent += 1;
+                    if handle.infer(&id, input).is_ok() {
+                        ok += 1;
+                    }
+                }
+                if watch_ms > 0 {
+                    std::thread::sleep(std::time::Duration::from_millis(watch_ms as u64));
+                    let changes = registry.sync(&handle)?;
+                    if !changes.is_empty() {
+                        println!(
+                            "registry change: +{:?} ~{:?} -{:?} ({} error(s))",
+                            changes.added,
+                            changes.updated,
+                            changes.removed,
+                            changes.errors.len()
+                        );
+                    }
+                }
+            }
+            let dt = t0.elapsed();
+            println!(
+                "{ok}/{requests} ok in {:.2}s ({:.1} req/s)",
+                dt.as_secs_f64(),
+                ok as f64 / dt.as_secs_f64()
+            );
+            for (id, m) in handle.metrics().per_model() {
+                if let Some(stats) = m.stats() {
+                    println!(
+                        "  {id:<14} {} done | p50 {:>6.0} us  p99 {:>6.0} us",
+                        stats.count, stats.p50_us, stats.p99_us
+                    );
+                }
+            }
+            drop(handle);
+            server.shutdown();
         }
         "serve" => {
             use msf_cnn::coordinator::{ModelSpec, MultiModelServer};

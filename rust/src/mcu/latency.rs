@@ -22,6 +22,7 @@
 //! orderings, ratios, and crossovers (who wins, F vs measured-overhead
 //! divergence) match the paper — see EXPERIMENTS.md.
 
+use crate::graph::{DagEdge, FusionDag};
 use crate::model::ModelChain;
 use crate::optimizer::FusionSetting;
 
@@ -124,6 +125,35 @@ pub fn estimate_latency_ms(
     }
 }
 
+/// Latency cycles of one fusion-DAG edge under `lm` — the additive form
+/// of the model above, computed from the edge's precomputed ingredients
+/// ([`DagEdge::param_bytes`], [`DagEdge::band_iterations`],
+/// [`DagEdge::latency_macs`]) so constrained planners
+/// ([`crate::optimizer::strategy::LatencyAware`]) can walk the DAG
+/// without the model in hand. For any complete path, the per-edge sum
+/// equals [`estimate_latency_ms`] on the resulting setting (up to float
+/// summation order).
+pub fn edge_latency_cycles(edge: &DagEdge, lm: &LatencyModel) -> f64 {
+    if edge.b - edge.a == 1 && !edge.iterative_tail {
+        edge.latency_macs as f64 * lm.cycles_per_mac
+            + edge.param_bytes as f64 * lm.flash_cycles_per_byte
+    } else {
+        edge.latency_macs as f64 * lm.cycles_per_mac * lm.fused_mac_multiplier
+            + (edge.param_bytes * edge.band_iterations) as f64 * lm.flash_cycles_per_byte
+            + (edge.band_iterations * TILE_OVERHEAD_CYCLES) as f64
+    }
+}
+
+/// Estimated latency (ms) of a complete DAG `path` on `board`: the sum of
+/// [`edge_latency_cycles`] scaled by the clock. Agrees with
+/// [`estimate_latency_ms`] on the setting the path denotes (up to float
+/// summation order).
+pub fn path_latency_ms(dag: &FusionDag, path: &[usize], board: &Board) -> f64 {
+    let lm = LatencyModel::for_isa(board.isa);
+    let cycles: f64 = path.iter().map(|&e| edge_latency_cycles(&dag.edges[e], &lm)).sum();
+    cycles / (board.mhz as f64 * 1000.0)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -171,6 +201,36 @@ mod tests {
         let s3 = estimate_latency_ms(&m, &s, board_by_name("esp32s3-devkit").unwrap());
         let c3 = estimate_latency_ms(&m, &s, board_by_name("esp32c3-devkit").unwrap());
         assert!(c3.total_ms < s3.total_ms);
+    }
+
+    #[test]
+    fn edge_sum_matches_span_estimate() {
+        // The per-edge (DAG-walk) form and the per-span (model) form are
+        // the same latency model; constrained planning prunes with the
+        // former, plans record the latter.
+        use crate::graph::{DagOptions, FusionDag};
+        for m in [zoo::tiny_cnn(), zoo::kws_cnn(), zoo::quickstart()] {
+            let dag = FusionDag::build(&m, DagOptions::default());
+            let mut planner = Planner::for_model(m.clone());
+            for s in [
+                planner.setting().unwrap(),
+                planner
+                    .plan_with(&strategy::Vanilla, Constraints::none())
+                    .unwrap()
+                    .setting,
+            ] {
+                for b in crate::mcu::BOARDS {
+                    let span_ms = estimate_latency_ms(&m, &s, b).total_ms;
+                    let edge_ms = path_latency_ms(&dag, &s.path, b);
+                    assert!(
+                        (span_ms - edge_ms).abs() <= span_ms.abs() * 1e-9 + 1e-9,
+                        "{}@{}: {span_ms} vs {edge_ms}",
+                        m.name,
+                        b.name
+                    );
+                }
+            }
+        }
     }
 
     #[test]

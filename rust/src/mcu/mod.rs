@@ -5,4 +5,6 @@ mod boards;
 mod latency;
 
 pub use boards::{board_by_name, Board, Isa, BOARDS};
-pub use latency::{estimate_latency_ms, LatencyBreakdown, LatencyModel};
+pub use latency::{
+    edge_latency_cycles, estimate_latency_ms, path_latency_ms, LatencyBreakdown, LatencyModel,
+};

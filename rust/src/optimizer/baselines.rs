@@ -1,11 +1,10 @@
 //! Comparator settings: vanilla, the MCUNetV2-style head-fusion heuristic,
 //! and a StreamNet-style single-block brute force (§8's baselines).
 //!
-//! The canonical entry points are the [`crate::optimizer::strategy`]
+//! The entry points are the [`crate::optimizer::strategy`]
 //! implementations ([`strategy::Vanilla`], [`strategy::HeadFusion`],
 //! [`strategy::StreamNet`]) driven through a
-//! [`crate::optimizer::Planner`]; the free functions here remain as
-//! deprecated wrappers over the same solvers.
+//! [`crate::optimizer::Planner`].
 //!
 //! [`strategy::Vanilla`]: crate::optimizer::strategy::Vanilla
 //! [`strategy::HeadFusion`]: crate::optimizer::strategy::HeadFusion
@@ -106,24 +105,6 @@ pub(crate) fn solve_streamnet(dag: &FusionDag, p_max_bytes: Option<u64>) -> OptR
         }
     }
     best
-}
-
-/// Vanilla baseline — deprecated free-function surface.
-#[deprecated(since = "0.2.0", note = "use optimizer::Planner with strategy::Vanilla")]
-pub fn vanilla_setting(dag: &FusionDag) -> FusionSetting {
-    solve_vanilla(dag)
-}
-
-/// MCUNetV2-style head fusion — deprecated free-function surface.
-#[deprecated(since = "0.2.0", note = "use optimizer::Planner with strategy::HeadFusion")]
-pub fn heuristic_head_fusion(dag: &FusionDag) -> FusionSetting {
-    solve_head_fusion(dag)
-}
-
-/// StreamNet single-block baseline — deprecated free-function surface.
-#[deprecated(since = "0.2.0", note = "use optimizer::Planner with strategy::StreamNet")]
-pub fn streamnet_single_block(dag: &FusionDag, p_max_bytes: Option<u64>) -> OptResult {
-    solve_streamnet(dag, p_max_bytes)
 }
 
 #[cfg(test)]

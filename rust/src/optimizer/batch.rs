@@ -29,7 +29,7 @@ use crate::mcu::Board;
 use crate::model::ModelChain;
 
 use super::strategy::{
-    Constraint, Constraints, HeadFusion, P1, P2, PlanStrategy, StreamNet, Vanilla,
+    Constraint, Constraints, HeadFusion, LatencyAware, P1, P2, PlanStrategy, StreamNet, Vanilla,
 };
 use super::FusionSetting;
 
@@ -42,6 +42,14 @@ pub enum PlanObjective {
     MinRam { f_max: f64 },
     /// P2: minimize MACs s.t. peak RAM `≤ p_max_bytes`.
     MinMacs { p_max_bytes: u64 },
+    /// [`LatencyAware`]: minimize peak RAM s.t. the estimated latency on
+    /// `board` stays within `budget_ms` (Table 5's axis), optionally
+    /// jointly with a RAM cap.
+    MinRamLatency {
+        board: &'static Board,
+        budget_ms: f64,
+        p_max_bytes: Option<u64>,
+    },
     /// The un-fused baseline.
     Vanilla,
     /// MCUNetV2-style head-fusion heuristic baseline.
@@ -63,6 +71,14 @@ impl PlanObjective {
                 Box::new(P2),
                 Constraints::none().with(Constraint::Ram(p_max_bytes)),
             ),
+            PlanObjective::MinRamLatency { board, budget_ms, p_max_bytes } => {
+                let mut c =
+                    Constraints::none().with(Constraint::LatencyMs { board, budget: budget_ms });
+                if let Some(p) = p_max_bytes {
+                    c = c.with(Constraint::Ram(p));
+                }
+                (Box::new(LatencyAware), c)
+            }
             PlanObjective::Vanilla => (Box::new(Vanilla), Constraints::none()),
             PlanObjective::Heuristic => (Box::new(HeadFusion), Constraints::none()),
             PlanObjective::StreamNet => (Box::new(StreamNet), Constraints::none()),
@@ -299,6 +315,7 @@ mod tests {
         // identical to invoking the corresponding strategy by hand.
         let m = zoo::quickstart();
         let dag = FusionDag::build(&m, DagOptions::default());
+        let board = crate::mcu::board_by_name("nucleo-f767zi").unwrap();
         let cases = [
             PlanObjective::Vanilla,
             PlanObjective::Heuristic,
@@ -306,6 +323,11 @@ mod tests {
             PlanObjective::MinRam { f_max: 1.2 },
             PlanObjective::MinRam { f_max: f64::INFINITY },
             PlanObjective::MinMacs { p_max_bytes: 4_000 },
+            PlanObjective::MinRamLatency {
+                board,
+                budget_ms: 1e6,
+                p_max_bytes: Some(64_000),
+            },
         ];
         for objective in cases {
             let (strategy, constraints) = objective.dispatch();

@@ -6,19 +6,21 @@
 //!   repeated solves share caches.
 //! * [`strategy`] — the [`PlanStrategy`] implementations: paper solvers
 //!   [`strategy::P1`] (min RAM s.t. `F ≤ F_max`, Eq. 8–10) and
-//!   [`strategy::P2`] (min MACs s.t. `P ≤ P_max`), plus the §8 baselines
+//!   [`strategy::P2`] (min MACs s.t. `P ≤ P_max`), the
+//!   latency-constrained [`strategy::LatencyAware`] walk (Table 5's
+//!   axis, via [`Constraint::LatencyMs`]), plus the §8 baselines
 //!   ([`strategy::Vanilla`], MCUNetV2-style [`strategy::HeadFusion`],
 //!   [`strategy::StreamNet`]) and exact [`strategy::Exhaustive`]
 //!   enumeration — all interchangeable behind trait objects.
-//! * [`batch`] — [`PlanBatch`]: the P1/P2 sweep over many
+//! * [`batch`] — [`PlanBatch`]: the P1/P2/latency sweep over many
 //!   `(model, board, budget)` configurations, parallelized on a scoped
 //!   worker pool with shared per-model edge-cost memos; bit-identical to
 //!   the serial path. [`PlanObjective`] dispatch collapses into the same
 //!   strategy trait objects.
 //!
 //! The pre-0.2 free functions (`minimize_ram`, `minimize_macs`,
-//! `vanilla_setting`, …) remain as deprecated thin wrappers over the same
-//! solvers.
+//! `vanilla_setting`, …) are gone; every solve goes through a
+//! [`PlanStrategy`].
 
 mod baselines;
 mod batch;
@@ -29,17 +31,11 @@ mod planner;
 mod setting;
 pub mod strategy;
 
-#[allow(deprecated)]
-pub use baselines::{heuristic_head_fusion, streamnet_single_block, vanilla_setting};
 pub use batch::{PlanBatch, PlanJob, PlanObjective, PlanOutcome};
 pub use exhaustive::{exhaustive_p1, exhaustive_p2};
-#[allow(deprecated)]
-pub use p1::{minimize_ram, minimize_ram_unconstrained};
-#[allow(deprecated)]
-pub use p2::{minimize_macs, minimize_macs_unconstrained};
-pub use planner::{Plan, Planner};
+pub use planner::{Plan, PlanLatency, Planner};
 pub use setting::{FusionSetting, SettingCost};
-pub use strategy::{Constraint, Constraints, PlanStrategy};
+pub use strategy::{Constraint, Constraints, LatencyBound, PlanStrategy};
 
 use crate::graph::FusionDag;
 

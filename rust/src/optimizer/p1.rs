@@ -1,8 +1,7 @@
 //! Problem P1: minimize peak RAM subject to a compute-cost limit (§6.1).
 //!
-//! The canonical entry point is [`crate::optimizer::strategy::P1`] driven
-//! through a [`crate::optimizer::Planner`]; the free functions here remain
-//! as deprecated wrappers over the same solvers.
+//! The entry point is [`crate::optimizer::strategy::P1`] driven through a
+//! [`crate::optimizer::Planner`].
 
 use crate::graph::{min_sum_path, minimax_path, FusionDag};
 
@@ -53,24 +52,6 @@ pub(crate) fn solve_p1(dag: &FusionDag, f_max: f64) -> OptResult {
         }
     }
     best
-}
-
-/// Unconstrained P1 — deprecated free-function surface.
-#[deprecated(
-    since = "0.2.0",
-    note = "use optimizer::Planner with strategy::P1 (no overhead constraint)"
-)]
-pub fn minimize_ram_unconstrained(dag: &FusionDag) -> OptResult {
-    solve_p1_unconstrained(dag)
-}
-
-/// Constrained P1 — deprecated free-function surface.
-#[deprecated(
-    since = "0.2.0",
-    note = "use optimizer::Planner with strategy::P1 and Constraint::Overhead(f_max)"
-)]
-pub fn minimize_ram(dag: &FusionDag, f_max: f64) -> OptResult {
-    solve_p1(dag, f_max)
 }
 
 #[cfg(test)]
@@ -145,19 +126,5 @@ mod tests {
         let c = solve_p1(&dag, 1e9).unwrap();
         let u = solve_p1_unconstrained(&dag).unwrap();
         assert_eq!(c.cost.peak_ram, u.cost.peak_ram);
-    }
-
-    #[test]
-    fn deprecated_wrappers_delegate() {
-        #![allow(deprecated)]
-        let dag = FusionDag::build(&model(), DagOptions::default());
-        assert_eq!(
-            minimize_ram_unconstrained(&dag).map(|s| s.cost.peak_ram),
-            solve_p1_unconstrained(&dag).map(|s| s.cost.peak_ram)
-        );
-        assert_eq!(
-            minimize_ram(&dag, 1.3).map(|s| s.cost.peak_ram),
-            solve_p1(&dag, 1.3).map(|s| s.cost.peak_ram)
-        );
     }
 }

@@ -1,8 +1,7 @@
 //! Problem P2: minimize compute cost subject to a RAM limit (§6.2).
 //!
-//! The canonical entry point is [`crate::optimizer::strategy::P2`] driven
-//! through a [`crate::optimizer::Planner`]; the free functions here remain
-//! as deprecated wrappers over the same solvers.
+//! The entry point is [`crate::optimizer::strategy::P2`] driven through a
+//! [`crate::optimizer::Planner`].
 
 use crate::graph::{min_sum_path, FusionDag};
 
@@ -22,24 +21,6 @@ pub(crate) fn solve_p2(dag: &FusionDag, p_max_bytes: u64) -> OptResult {
         .collect();
     let g = dag.without_edges(&over);
     min_sum_path(&g).map(|p| FusionSetting::from_path(dag, p))
-}
-
-/// Unconstrained P2 — deprecated free-function surface.
-#[deprecated(
-    since = "0.2.0",
-    note = "use optimizer::Planner with strategy::P2 (no RAM constraint)"
-)]
-pub fn minimize_macs_unconstrained(dag: &FusionDag) -> OptResult {
-    solve_p2_unconstrained(dag)
-}
-
-/// Constrained P2 — deprecated free-function surface.
-#[deprecated(
-    since = "0.2.0",
-    note = "use optimizer::Planner with strategy::P2 and Constraint::Ram(p_max_bytes)"
-)]
-pub fn minimize_macs(dag: &FusionDag, p_max_bytes: u64) -> OptResult {
-    solve_p2(dag, p_max_bytes)
 }
 
 #[cfg(test)]
@@ -109,19 +90,5 @@ mod tests {
         let p2 = solve_p2(&dag, p1.cost.peak_ram).unwrap();
         assert!(p2.cost.macs <= p1.cost.macs);
         assert!(p2.cost.peak_ram <= p1.cost.peak_ram);
-    }
-
-    #[test]
-    fn deprecated_wrappers_delegate() {
-        #![allow(deprecated)]
-        let dag = FusionDag::build(&model(), DagOptions::default());
-        assert_eq!(
-            minimize_macs_unconstrained(&dag).map(|s| s.cost.macs),
-            solve_p2_unconstrained(&dag).map(|s| s.cost.macs)
-        );
-        assert_eq!(
-            minimize_macs(&dag, 64_000).map(|s| s.cost.macs),
-            solve_p2(&dag, 64_000).map(|s| s.cost.macs)
-        );
     }
 }

@@ -20,9 +20,23 @@ use crate::{anyhow, bail};
 use super::setting::{FusionSetting, SettingCost};
 use super::strategy::{Constraint, Constraints, P1, PlanStrategy};
 
+/// Latency provenance recorded in a [`Plan`]: the board the estimate was
+/// made for and the estimated milliseconds — what turns a plan file into
+/// a complete deploy artifact for a registry
+/// ([`crate::coordinator::PlanRegistry`]) to serve.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanLatency {
+    /// Board name ([`crate::mcu::board_by_name`] key) the estimate used.
+    pub board: String,
+    /// Estimated inference latency in milliseconds
+    /// ([`crate::mcu::estimate_latency_ms`]).
+    pub estimate_ms: f64,
+}
+
 /// A solved, serializable fusion plan: the concrete [`FusionSetting`] plus
 /// the provenance needed to audit or re-serve it (model name, strategy,
-/// constraints, DAG options).
+/// constraints, DAG options, and — for latency-constrained solves — the
+/// recorded latency estimate with its board).
 #[must_use = "a Plan is the deployment artifact; drop it and the solve was wasted"]
 #[derive(Debug, Clone, PartialEq)]
 pub struct Plan {
@@ -37,6 +51,9 @@ pub struct Plan {
     pub scheme: CacheScheme,
     /// Fusion-depth cap the DAG was built with, if any.
     pub max_depth: Option<usize>,
+    /// Latency estimate + board provenance (recorded whenever the solve
+    /// ran under a [`Constraint::LatencyMs`] bound).
+    pub latency: Option<PlanLatency>,
     /// The solved fusion setting (spans + encoded costs).
     pub setting: FusionSetting,
 }
@@ -49,8 +66,12 @@ impl Plan {
 
     /// One-line human-readable summary.
     pub fn describe(&self) -> String {
+        let lat = match &self.latency {
+            Some(l) => format!(", {:.1} ms on {}", l.estimate_ms, l.board),
+            None => String::new(),
+        };
         format!(
-            "{}: {} via {} [{}] -> {:.3} kB at F={:.2}",
+            "{}: {} via {} [{}] -> {:.3} kB at F={:.2}{lat}",
             self.model,
             self.setting.describe(),
             self.strategy,
@@ -77,12 +98,23 @@ impl Plan {
             Some(f) if f.is_finite() => parts.push(format!("\"overhead\": {f}")),
             _ => {}
         }
+        if let Some(l) = self.constraints.latency_bound() {
+            parts.push(format!("\"latency_board\": \"{}\"", escape(l.board.name)));
+            parts.push(format!("\"latency_ms\": {}", l.budget_ms));
+        }
         out.push_str(&parts.join(", "));
         out.push_str("},\n");
         out.push_str(&format!("  \"scheme\": \"{}\",\n", self.scheme.name()));
         match self.max_depth {
             Some(d) => out.push_str(&format!("  \"max_depth\": {d},\n")),
             None => out.push_str("  \"max_depth\": null,\n"),
+        }
+        if let Some(l) = &self.latency {
+            out.push_str(&format!(
+                "  \"latency\": {{\"board\": \"{}\", \"estimate_ms\": {}}},\n",
+                escape(&l.board),
+                l.estimate_ms
+            ));
         }
         out.push_str("  \"setting\": {\n");
         let path: Vec<String> = self.setting.path.iter().map(|e| e.to_string()).collect();
@@ -129,6 +161,15 @@ impl Plan {
             if let Some(f) = c.get("overhead").and_then(Json::as_f64) {
                 constraints = constraints.with(Constraint::Overhead(f));
             }
+            if let Some(budget) = c.get("latency_ms").and_then(Json::as_f64) {
+                let name = c
+                    .get("latency_board")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("plan json: 'latency_ms' without 'latency_board'"))?;
+                let board = crate::mcu::board_by_name(name)
+                    .ok_or_else(|| anyhow!("plan json: unknown board '{name}'"))?;
+                constraints = constraints.with(Constraint::LatencyMs { board, budget });
+            }
         }
         let max_depth = match root.get("max_depth") {
             None | Some(Json::Null) => None,
@@ -136,6 +177,21 @@ impl Plan {
                 v.as_usize()
                     .ok_or_else(|| anyhow!("plan json: bad 'max_depth'"))?,
             ),
+        };
+        let latency = match root.get("latency") {
+            None | Some(Json::Null) => None,
+            Some(v) => {
+                let board = v
+                    .get("board")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("plan json: 'latency' missing 'board'"))?
+                    .to_string();
+                let estimate_ms = v
+                    .get("estimate_ms")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| anyhow!("plan json: 'latency' missing 'estimate_ms'"))?;
+                Some(PlanLatency { board, estimate_ms })
+            }
         };
 
         let setting_v = root
@@ -191,6 +247,7 @@ impl Plan {
             constraints,
             scheme,
             max_depth,
+            latency,
             setting: FusionSetting { path, spans, cost },
         };
         plan.validate()?;
@@ -198,10 +255,19 @@ impl Plan {
     }
 
     /// Structural validation: spans must partition the layer chain in
-    /// execution order (an iterative-tail span may only end the chain).
+    /// execution order (an iterative-tail span may only end the chain),
+    /// and the recorded peak RAM must be a positive byte count (a zero
+    /// here means a negative or missing cost was saturated away during
+    /// parsing — no real plan runs in 0 bytes).
     pub fn validate(&self) -> Result<()> {
         if self.setting.spans.is_empty() {
             bail!("plan for '{}' has no spans", self.model);
+        }
+        if self.setting.cost.peak_ram == 0 {
+            bail!(
+                "plan for '{}' has non-positive peak_ram (cost was negative, zero, or lost in parsing)",
+                self.model
+            );
         }
         let mut at = 0usize;
         for (i, &(a, b, _)) in self.setting.spans.iter().enumerate() {
@@ -355,12 +421,20 @@ impl Planner {
         constraints: Constraints,
         setting: FusionSetting,
     ) -> Plan {
+        // A latency-bound solve records its estimate + board, so the plan
+        // file is a complete deploy artifact (registry entries can be
+        // admission-checked without re-running the latency model).
+        let latency = constraints.latency_bound().map(|l| PlanLatency {
+            board: l.board.name.to_string(),
+            estimate_ms: crate::mcu::estimate_latency_ms(&self.model, &setting, l.board).total_ms,
+        });
         Plan {
             model: self.model.name.clone(),
             strategy: strategy_name.to_string(),
             constraints,
             scheme: self.options.scheme,
             max_depth: self.options.max_depth,
+            latency,
             setting,
         }
     }
@@ -409,7 +483,7 @@ impl Planner {
 
 #[cfg(test)]
 mod tests {
-    use super::super::strategy::{Exhaustive, HeadFusion, P2, StreamNet, Vanilla};
+    use super::super::strategy::{Exhaustive, HeadFusion, LatencyAware, P2, StreamNet, Vanilla};
     use super::*;
     use crate::zoo;
 
@@ -500,6 +574,68 @@ mod tests {
             .unwrap();
         assert_eq!(inf.constraints.overhead, None);
         assert_eq!(Plan::from_json(&inf.to_json()).unwrap(), inf);
+    }
+
+    #[test]
+    fn latency_constrained_plan_records_estimate_within_budget() {
+        let board = crate::mcu::board_by_name("nucleo-f767zi").unwrap();
+        let m = zoo::tiny_cnn();
+        let vanilla_ms = {
+            let mut p = Planner::for_model(m.clone());
+            let v = p.plan_with(&Vanilla, Constraints::none()).unwrap().setting;
+            crate::mcu::estimate_latency_ms(&m, &v, board).total_ms
+        };
+        let budget = vanilla_ms * 1.5;
+        let plan = Planner::for_model(m.clone())
+            .constraint(Constraint::LatencyMs { board, budget })
+            .strategy(LatencyAware::default())
+            .plan()
+            .unwrap();
+        let lat = plan.latency.clone().expect("latency provenance recorded");
+        assert_eq!(lat.board, "nucleo-f767zi");
+        assert!(lat.estimate_ms <= budget * (1.0 + 1e-9) + 1e-9, "{lat:?} vs {budget}");
+        // The recorded number is the latency model's, not a copy of the
+        // budget: recomputing from the setting reproduces it.
+        let re = crate::mcu::estimate_latency_ms(&m, &plan.setting, board).total_ms;
+        assert_eq!(re, lat.estimate_ms);
+        assert!(plan.describe().contains("ms on nucleo-f767zi"), "{}", plan.describe());
+
+        // The constraint and the estimate both survive the JSON round
+        // trip — a registry entry is a complete deploy artifact.
+        let back = Plan::from_json(&plan.to_json()).unwrap();
+        assert_eq!(back, plan);
+        assert_eq!(back.constraints.latency_bound().unwrap().board.name, "nucleo-f767zi");
+    }
+
+    #[test]
+    fn validate_rejects_nonpositive_peak_ram() {
+        let plan = Planner::for_model(zoo::tiny_cnn()).plan().unwrap();
+        // A negative cost in the JSON saturates to 0 during parsing and
+        // must be rejected, not served.
+        let json = plan
+            .to_json()
+            .replace(&format!("\"peak_ram\": {}", plan.cost().peak_ram), "\"peak_ram\": -5");
+        let err = Plan::from_json(&json).unwrap_err();
+        assert!(format!("{err:#}").contains("peak_ram"), "{err:#}");
+
+        let mut zeroed = plan;
+        zeroed.setting.cost.peak_ram = 0;
+        assert!(zeroed.validate().is_err());
+    }
+
+    #[test]
+    fn load_errors_name_the_offending_file() {
+        let dir = std::env::temp_dir();
+        let missing = dir.join("msfcnn-no-such-plan.json");
+        let err = format!("{:#}", Plan::load(&missing).unwrap_err());
+        assert!(err.contains("msfcnn-no-such-plan.json"), "{err}");
+
+        let garbage = dir.join("msfcnn-garbage-plan.json");
+        std::fs::write(&garbage, "{ not json").unwrap();
+        let err = format!("{:#}", Plan::load(&garbage).unwrap_err());
+        let _ = std::fs::remove_file(&garbage);
+        assert!(err.contains("msfcnn-garbage-plan.json"), "{err}");
+        assert!(err.contains("parsing plan"), "{err}");
     }
 
     #[test]

@@ -1,10 +1,11 @@
 //! [`PlanStrategy`]: the interchangeable solver surface of the planner.
 //!
-//! The paper's P1/P2 optimizers and every §8 baseline (vanilla, the
-//! MCUNetV2-style head-fusion heuristic, StreamNet single-block, exact
-//! exhaustive enumeration) implement one trait, so Table 1/2-style
-//! comparisons are a strategy swap instead of a different free function
-//! per row:
+//! The paper's P1/P2 optimizers, the latency-constrained walk
+//! ([`LatencyAware`], Table 5's axis via [`Constraint::LatencyMs`]), and
+//! every §8 baseline (vanilla, the MCUNetV2-style head-fusion heuristic,
+//! StreamNet single-block, exact exhaustive enumeration) implement one
+//! trait, so Table 1/2/5-style comparisons are a strategy swap instead
+//! of a different free function per row:
 //!
 //! ```no_run
 //! use msf_cnn::optimizer::strategy::{HeadFusion, P2};
@@ -29,13 +30,15 @@
 use std::fmt;
 
 use crate::graph::{enumerate_paths, path_cost, FusionDag};
+use crate::mcu::{edge_latency_cycles, path_latency_ms, Board, LatencyModel};
 
 use super::baselines::{solve_head_fusion, solve_streamnet, solve_vanilla};
 use super::p1::{solve_p1, solve_p1_unconstrained};
 use super::p2::{solve_p2, solve_p2_unconstrained};
 use super::FusionSetting;
 
-/// One deployment constraint (the paper's §6 budget axes).
+/// One deployment constraint (the paper's §6 budget axes plus Table 5's
+/// latency axis).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Constraint {
     /// Peak RAM budget in bytes (`P ≤ P_max`, problem P2's axis).
@@ -43,6 +46,33 @@ pub enum Constraint {
     /// Compute-overhead budget (`F = C_S / C_vanilla ≤ F_max`, problem
     /// P1's axis).
     Overhead(f64),
+    /// Estimated-latency budget in milliseconds on a concrete board
+    /// (Table 5's axis): the [`crate::mcu::estimate_latency_ms`] model,
+    /// which prices in §8.3's flash-refetch and per-iteration overheads
+    /// that the F factor alone misses.
+    LatencyMs {
+        /// Target board — its ISA and clock set the latency model.
+        board: &'static Board,
+        /// Budget in milliseconds.
+        budget: f64,
+    },
+}
+
+/// A latency budget bound to a concrete board (the resolved form of
+/// [`Constraint::LatencyMs`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencyBound {
+    /// Target board — ISA picks the [`LatencyModel`], MHz scales cycles.
+    pub board: &'static Board,
+    /// Budget in milliseconds.
+    pub budget_ms: f64,
+}
+
+impl LatencyBound {
+    /// The budget converted to CPU cycles on the bound board.
+    pub fn budget_cycles(&self) -> f64 {
+        self.budget_ms * self.board.mhz as f64 * 1000.0
+    }
 }
 
 /// The accumulated constraint set a strategy solves under. Every axis is
@@ -54,6 +84,9 @@ pub struct Constraints {
     /// Compute-overhead budget `F_max`, if any (an infinite budget is
     /// treated as absent).
     pub overhead: Option<f64>,
+    /// Board-bound latency budget, if any (an infinite budget is treated
+    /// as absent).
+    pub latency: Option<LatencyBound>,
 }
 
 impl Constraints {
@@ -75,6 +108,10 @@ impl Constraints {
             Constraint::Overhead(f_max) => {
                 self.overhead = Some(f_max).filter(|f| f.is_finite());
             }
+            Constraint::LatencyMs { board, budget } => {
+                self.latency = Some(LatencyBound { board, budget_ms: budget })
+                    .filter(|l| l.budget_ms.is_finite());
+            }
         }
         self
     }
@@ -84,8 +121,14 @@ impl Constraints {
         self.overhead.filter(|f| f.is_finite())
     }
 
-    /// Whether `setting` satisfies every bound (overhead within float
-    /// tolerance, RAM exactly).
+    /// The effective latency bound (`None` for absent *or* infinite).
+    pub fn latency_bound(&self) -> Option<LatencyBound> {
+        self.latency.filter(|l| l.budget_ms.is_finite())
+    }
+
+    /// Whether `setting` satisfies the RAM and overhead bounds (overhead
+    /// within float tolerance, RAM exactly). The latency axis needs the
+    /// originating DAG — see [`Constraints::satisfied_on`].
     pub fn satisfied_by(&self, setting: &FusionSetting) -> bool {
         if let Some(p_max) = self.ram_bytes {
             if setting.cost.peak_ram > p_max {
@@ -100,13 +143,36 @@ impl Constraints {
         true
     }
 
+    /// [`Constraints::satisfied_by`] plus the latency axis, evaluated
+    /// against the DAG the setting was solved on.
+    pub fn satisfied_on(&self, dag: &FusionDag, setting: &FusionSetting) -> bool {
+        if !self.satisfied_by(setting) {
+            return false;
+        }
+        match self.latency_bound() {
+            None => true,
+            Some(l) => {
+                path_latency_ms(dag, &setting.path, l.board) <= l.budget_ms * (1.0 + 1e-9) + 1e-9
+            }
+        }
+    }
+
     /// Human-readable form for provenance / describe lines.
     pub fn describe(&self) -> String {
-        match (self.ram_bytes, self.overhead_bound()) {
-            (None, None) => "unconstrained".into(),
-            (Some(p), None) => format!("P<={p}B"),
-            (None, Some(f)) => format!("F<={f}"),
-            (Some(p), Some(f)) => format!("P<={p}B,F<={f}"),
+        let mut parts = Vec::new();
+        if let Some(p) = self.ram_bytes {
+            parts.push(format!("P<={p}B"));
+        }
+        if let Some(f) = self.overhead_bound() {
+            parts.push(format!("F<={f}"));
+        }
+        if let Some(l) = self.latency_bound() {
+            parts.push(format!("lat<={}ms@{}", l.budget_ms, l.board.name));
+        }
+        if parts.is_empty() {
+            "unconstrained".into()
+        } else {
+            parts.join(",")
         }
     }
 }
@@ -121,7 +187,9 @@ fn mac_budget(dag: &FusionDag, constraints: &Constraints) -> Option<u64> {
 }
 
 /// The uniform feasibility filter: RAM bound exactly, overhead bound via
-/// the integer MAC budget.
+/// the integer MAC budget, latency bound via the per-edge path sum — so
+/// *every* strategy (including the fixed-setting baselines) honors a
+/// joint constraint set identically.
 fn admit(
     dag: &FusionDag,
     constraints: &Constraints,
@@ -137,7 +205,13 @@ fn admit(
             Some(b) => s.cost.macs <= b,
             None => true,
         };
-        ram_ok && macs_ok
+        let latency_ok = match constraints.latency_bound() {
+            Some(l) => {
+                path_latency_ms(dag, &s.path, l.board) <= l.budget_ms * (1.0 + 1e-9) + 1e-9
+            }
+            None => true,
+        };
+        ram_ok && macs_ok && latency_ok
     })
 }
 
@@ -242,6 +316,155 @@ impl PlanStrategy for StreamNet {
     }
 }
 
+/// Latency-constrained planning (Table 5's axis): minimize peak RAM
+/// subject to the board-bound latency budget of
+/// [`Constraint::LatencyMs`], walking the fusion DAG with a bicriteria
+/// (latency, prefix-max-RAM) label search that prunes every partial
+/// setting whose estimated latency already exceeds the budget. RAM and
+/// MAC budgets, when also present, prune during the same walk (both are
+/// monotone along a path), so joint Table 5 budgets are solved exactly.
+///
+/// Without a latency bound the search degenerates to the minimax-RAM
+/// path, i.e. the [`P1`] objective.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LatencyAware;
+
+/// One partial setting of the bicriteria walk, stored in a parent-pointer
+/// arena (paths are only materialized for the winning label).
+#[derive(Clone, Copy)]
+struct LatencyLabel {
+    /// Estimated latency cycles of the prefix.
+    cycles: f64,
+    /// Max edge RAM along the prefix (the prefix's peak).
+    peak_ram: u64,
+    /// Total MACs of the prefix (tiebreak + overhead-budget pruning).
+    macs: u64,
+    /// Edge that produced this label (`usize::MAX` for the source label).
+    edge: usize,
+    /// Arena index of the predecessor label (`usize::MAX` for the source).
+    parent: usize,
+}
+
+impl PlanStrategy for LatencyAware {
+    fn name(&self) -> &'static str {
+        "latency-aware-min-ram"
+    }
+
+    fn solve(&self, dag: &FusionDag, constraints: &Constraints) -> Option<FusionSetting> {
+        let bound = constraints.latency_bound();
+        let lm = bound.map(|l| LatencyModel::for_isa(l.board.isa));
+        let budget_cycles = bound.map(|l| l.budget_cycles());
+        let mac_cap = mac_budget(dag, constraints);
+
+        // Keep each node's labels as a Pareto front over (cycles,
+        // prefix-max RAM) — plus MACs when an overhead budget is active,
+        // since a pricier-but-leaner-on-MACs prefix may be the only one
+        // whose extensions survive the MAC cap. All three quantities are
+        // monotone along a path, so dominated labels can never recover.
+        let mac_active = mac_cap.is_some();
+        let mut arena: Vec<LatencyLabel> = Vec::new();
+        let prune = move |front: &mut Vec<usize>, arena: &[LatencyLabel]| {
+            front.sort_by(|&x, &y| {
+                let (a, b) = (&arena[x], &arena[y]);
+                a.cycles
+                    .partial_cmp(&b.cycles)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.peak_ram.cmp(&b.peak_ram))
+                    .then(a.macs.cmp(&b.macs))
+            });
+            let mut kept: Vec<usize> = Vec::new();
+            // Sorted by cycles asc: every kept label is no slower, so
+            // dominance reduces to the remaining axes. Without a MAC cap
+            // that is a strictly-decreasing-RAM skyline (O(k)); with one,
+            // a label survives only if it improves on RAM or MACs.
+            if mac_active {
+                for i in std::mem::take(front) {
+                    let cand = &arena[i];
+                    let dominated = kept.iter().any(|&k| {
+                        let held = &arena[k];
+                        held.peak_ram <= cand.peak_ram && held.macs <= cand.macs
+                    });
+                    if !dominated {
+                        kept.push(i);
+                    }
+                }
+            } else {
+                let mut min_ram = u64::MAX;
+                for i in std::mem::take(front) {
+                    if arena[i].peak_ram < min_ram {
+                        min_ram = arena[i].peak_ram;
+                        kept.push(i);
+                    }
+                }
+            }
+            *front = kept;
+        };
+
+        let sink = dag.n_nodes - 1;
+        let mut fronts: Vec<Vec<usize>> = vec![Vec::new(); dag.n_nodes];
+        arena.push(LatencyLabel {
+            cycles: 0.0,
+            peak_ram: 0,
+            macs: 0,
+            edge: usize::MAX,
+            parent: usize::MAX,
+        });
+        fronts[0].push(0);
+        for v in 0..sink {
+            let mut front = std::mem::take(&mut fronts[v]);
+            if front.is_empty() {
+                continue;
+            }
+            prune(&mut front, &arena);
+            for &li in &front {
+                for &e in &dag.out[v] {
+                    let edge = &dag.edges[e];
+                    let label = arena[li];
+                    let cycles = label.cycles
+                        + lm.as_ref().map_or(0.0, |m| edge_latency_cycles(edge, m));
+                    if let Some(cap) = budget_cycles {
+                        // The same epsilon `admit` verifies with, in
+                        // cycles, so the walk never prunes a setting the
+                        // filter would admit (or vice versa).
+                        if cycles > cap * (1.0 + 1e-9) + 1e-9 {
+                            continue;
+                        }
+                    }
+                    let peak_ram = label.peak_ram.max(edge.cost.ram_bytes);
+                    if constraints.ram_bytes.is_some_and(|p_max| peak_ram > p_max) {
+                        continue;
+                    }
+                    let macs = label.macs + edge.cost.macs;
+                    if mac_cap.is_some_and(|cap| macs > cap) {
+                        continue;
+                    }
+                    arena.push(LatencyLabel { cycles, peak_ram, macs, edge: e, parent: li });
+                    fronts[edge.b].push(arena.len() - 1);
+                }
+            }
+        }
+
+        let mut sink_front = std::mem::take(&mut fronts[sink]);
+        prune(&mut sink_front, &arena);
+        let best = sink_front.into_iter().min_by(|&x, &y| {
+            let (a, b) = (&arena[x], &arena[y]);
+            (a.peak_ram, a.macs)
+                .cmp(&(b.peak_ram, b.macs))
+                .then(a.cycles.partial_cmp(&b.cycles).unwrap_or(std::cmp::Ordering::Equal))
+        })?;
+
+        // Materialize the winning path by walking the parent chain.
+        let mut path = Vec::new();
+        let mut at = best;
+        while arena[at].edge != usize::MAX {
+            path.push(arena[at].edge);
+            at = arena[at].parent;
+        }
+        path.reverse();
+        admit(dag, constraints, Some(FusionSetting::from_path(dag, path)))
+    }
+}
+
 /// Exact exhaustive enumeration (App. D, `O(2^{V-2})`): minimum peak RAM
 /// over every complete path satisfying the constraints, ties toward fewer
 /// MACs. Tractable on test-sized chains only; the property suite uses it
@@ -256,22 +479,29 @@ impl PlanStrategy for Exhaustive {
 
     fn solve(&self, dag: &FusionDag, constraints: &Constraints) -> Option<FusionSetting> {
         let budget = mac_budget(dag, constraints);
+        let latency = constraints.latency_bound();
         enumerate_paths(dag)
             .into_iter()
             .map(|p| {
                 let c = path_cost(dag, &p);
                 (c.peak_ram, c.macs, p)
             })
-            .filter(|&(ram, macs, _)| {
+            .filter(|(ram, macs, p)| {
                 let ram_ok = match constraints.ram_bytes {
-                    Some(p_max) => ram <= p_max,
+                    Some(p_max) => *ram <= p_max,
                     None => true,
                 };
                 let macs_ok = match budget {
-                    Some(b) => macs <= b,
+                    Some(b) => *macs <= b,
                     None => true,
                 };
-                ram_ok && macs_ok
+                let latency_ok = match latency {
+                    Some(l) => {
+                        path_latency_ms(dag, p, l.board) <= l.budget_ms * (1.0 + 1e-9) + 1e-9
+                    }
+                    None => true,
+                };
+                ram_ok && macs_ok && latency_ok
             })
             .min_by_key(|&(ram, macs, _)| (ram, macs))
             .map(|(_, _, p)| FusionSetting::from_path(dag, p))
@@ -310,6 +540,7 @@ mod tests {
             Box::new(Vanilla),
             Box::new(HeadFusion),
             Box::new(StreamNet),
+            Box::new(LatencyAware),
             Box::new(Exhaustive),
         ]
     }
@@ -346,14 +577,59 @@ mod tests {
     #[test]
     fn every_strategy_honors_constraints_through_the_trait() {
         let d = dag();
+        let board = crate::mcu::board_by_name("nucleo-f767zi").unwrap();
         let c = Constraints::none()
             .with(Constraint::Ram(6_000))
-            .with(Constraint::Overhead(1.5));
+            .with(Constraint::Overhead(1.5))
+            .with(Constraint::LatencyMs { board, budget: 1e6 });
         for s in all() {
             if let Some(setting) = s.solve(&d, &c) {
-                assert!(c.satisfied_by(&setting), "{} violated constraints", s.name());
+                assert!(c.satisfied_on(&d, &setting), "{} violated constraints", s.name());
             }
         }
+    }
+
+    #[test]
+    fn latency_aware_unconstrained_matches_p1_min_ram() {
+        let d = dag();
+        let none = Constraints::none();
+        assert_eq!(
+            LatencyAware.solve(&d, &none).unwrap().cost.peak_ram,
+            P1.solve(&d, &none).unwrap().cost.peak_ram
+        );
+    }
+
+    #[test]
+    fn latency_budget_prunes_the_walk_and_holds_on_the_result() {
+        let d = dag();
+        let board = crate::mcu::board_by_name("nucleo-f767zi").unwrap();
+        let vanilla = Vanilla.solve(&d, &Constraints::none()).unwrap();
+        let vanilla_ms = crate::mcu::path_latency_ms(&d, &vanilla.path, board);
+        let free = LatencyAware.solve(&d, &Constraints::none()).unwrap();
+        let free_ms = crate::mcu::path_latency_ms(&d, &free.path, board);
+        assert!(free_ms > vanilla_ms, "fusion must cost latency here");
+
+        // A budget between the two forces a trade-off: still feasible
+        // (vanilla qualifies), still minimal among feasible settings.
+        let budget = (vanilla_ms + free_ms) / 2.0;
+        let c = Constraints::none().with(Constraint::LatencyMs { board, budget });
+        let s = LatencyAware.solve(&d, &c).unwrap();
+        assert!(c.satisfied_on(&d, &s));
+        assert!(s.cost.peak_ram <= vanilla.cost.peak_ram);
+        assert!(s.cost.peak_ram >= free.cost.peak_ram);
+
+        // And it is exactly the exhaustive optimum under the same budget.
+        let exact = Exhaustive.solve(&d, &c).unwrap();
+        assert_eq!(s.cost.peak_ram, exact.cost.peak_ram);
+
+        // A zero budget is infeasible for every complete path.
+        let hopeless = Constraints::none().with(Constraint::LatencyMs { board, budget: 0.0 });
+        assert!(LatencyAware.solve(&d, &hopeless).is_none());
+
+        // An infinite budget is normalized to "no bound".
+        let inf =
+            Constraints::none().with(Constraint::LatencyMs { board, budget: f64::INFINITY });
+        assert_eq!(inf.latency_bound(), None);
     }
 
     #[test]

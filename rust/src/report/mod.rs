@@ -13,7 +13,8 @@ pub use ablations::{
 };
 pub use figures::{fig2_pooling, fig3_dense, fig4_series, FigRow};
 pub use tables::{
-    table1, table2, table3, table5, Table1Row, Table2Row, Table3Row, Table5Row,
+    table1, table2, table3, table5, table5_joint, Table1Row, Table2Row, Table3Row,
+    Table5JointRow, Table5Row,
 };
 
 /// The constraint grids used throughout the paper's evaluation (§6.3).

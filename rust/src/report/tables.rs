@@ -295,6 +295,140 @@ pub fn table5() -> (Vec<Table5Row>, String) {
     (rows, text)
 }
 
+/// One row of the joint-constraint Table 5 companion: a method under a
+/// (board RAM, latency budget) pair.
+#[derive(Debug, Clone)]
+pub struct Table5JointRow {
+    pub method: &'static str,
+    /// Latency budget as a multiple of the model's vanilla latency.
+    pub factor: f64,
+    /// Per model: the absolute budget in ms that factor denotes.
+    pub budgets_ms: Vec<f64>,
+    /// Per model: `Some((ram_kb, latency_ms))` or `None` (infeasible
+    /// under the joint budget).
+    pub cells: Vec<Option<(f64, f64)>>,
+}
+
+/// Table 5 under **joint** budgets on nucleo-f767zi: peak RAM capped by
+/// the board's physical RAM *and* estimated latency capped at a multiple
+/// of each model's vanilla latency. The msf-CNN rows are the
+/// [`strategy::LatencyAware`] walk (solved through one parallel
+/// [`PlanBatch`] sweep via [`PlanObjective::MinRamLatency`]); the
+/// baseline rows run MCUNetV2-style head fusion and StreamNet under the
+/// identical constraint set, so the paper's msf-vs-baseline trade-off is
+/// reproducible end-to-end on both axes at once.
+pub fn table5_joint() -> (Vec<Table5JointRow>, String) {
+    let board = crate::mcu::board_by_name("nucleo-f767zi").unwrap();
+    let models = zoo::paper_models();
+    let factors = [1.5, 3.0, 10.0];
+    let n = models.len();
+
+    // Vanilla latency per model sets the budget scale; the planners are
+    // reused for the baseline solves (shared DAG + memo per model).
+    let mut planners: Vec<Planner> =
+        models.iter().map(|(_, m)| Planner::for_model(m.clone())).collect();
+    let vanilla_ms: Vec<f64> = planners
+        .iter_mut()
+        .zip(&models)
+        .map(|(p, (_, m))| {
+            let s = p.plan_with(&strategy::Vanilla, Constraints::none()).unwrap().setting;
+            estimate_latency_ms(m, &s, board).total_ms
+        })
+        .collect();
+    let eval = |mi: usize, s: &FusionSetting| -> (f64, f64) {
+        (kb(s.cost.peak_ram), estimate_latency_ms(&models[mi].1, s, board).total_ms)
+    };
+
+    // msf-CNN rows: one batch, factor-major × model-minor.
+    let mut batch = PlanBatch::new();
+    let idx: Vec<usize> = models
+        .iter()
+        .map(|(label, m)| batch.add_model(*label, m.clone()))
+        .collect();
+    for &factor in &factors {
+        for (mi, &i) in idx.iter().enumerate() {
+            batch.push(PlanJob::new(
+                i,
+                PlanObjective::MinRamLatency {
+                    board,
+                    budget_ms: vanilla_ms[mi] * factor,
+                    p_max_bytes: Some(board.ram_bytes()),
+                },
+            ));
+        }
+    }
+    let outcomes = batch.solve();
+
+    let mut rows: Vec<Table5JointRow> = Vec::new();
+    for (fi, &factor) in factors.iter().enumerate() {
+        rows.push(Table5JointRow {
+            method: "msf-CNN (latency-aware)",
+            factor,
+            budgets_ms: vanilla_ms.iter().map(|v| v * factor).collect(),
+            cells: (0..n)
+                .map(|mi| outcomes[fi * n + mi].setting.as_ref().map(|s| eval(mi, s)))
+                .collect(),
+        });
+    }
+
+    // Baselines under the identical joint constraint set (the uniform
+    // `admit` filter enforces both axes behind the trait).
+    let baselines: [(&'static str, &dyn PlanStrategy); 2] = [
+        ("MCUNetV2", &strategy::HeadFusion),
+        ("StreamNet", &strategy::StreamNet),
+    ];
+    for (method, s) in baselines {
+        for &factor in &factors {
+            let cells = (0..n)
+                .map(|mi| {
+                    let c = Constraints::none()
+                        .with(crate::optimizer::Constraint::Ram(board.ram_bytes()))
+                        .with(crate::optimizer::Constraint::LatencyMs {
+                            board,
+                            budget: vanilla_ms[mi] * factor,
+                        });
+                    planners[mi].plan_with(s, c).ok().map(|p| eval(mi, &p.setting))
+                })
+                .collect();
+            rows.push(Table5JointRow {
+                method,
+                factor,
+                budgets_ms: vanilla_ms.iter().map(|v| v * factor).collect(),
+                cells,
+            });
+        }
+    }
+
+    let grid: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            let mut v = vec![r.method.to_string(), format!("{}x vanilla", r.factor)];
+            for c in &r.cells {
+                match c {
+                    Some((ram, ms)) => {
+                        v.push(format!("{ram:.3}"));
+                        v.push(format!("{ms:.1}"));
+                    }
+                    None => {
+                        v.push("(NoSol)".into());
+                        v.push("-".into());
+                    }
+                }
+            }
+            v
+        })
+        .collect();
+    let headers = [
+        "", "Latency budget", "MBV2 RAM", "ms", "vww5 RAM", "ms", "320K RAM", "ms",
+    ];
+    let text = format!(
+        "Table 5 (joint): min peak RAM under RAM<=board AND latency budget, \
+         nucleo-f767zi (RAM kB, latency ms, simulated)\n{}",
+        render(&headers, &grid)
+    );
+    (rows, text)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -349,6 +483,58 @@ mod tests {
         assert!(hifive.latency_ms.iter().any(|c| c.is_none()));
         let f767 = rows.iter().find(|r| r.board == "nucleo-f767zi").unwrap();
         assert!(f767.latency_ms.iter().all(|c| c.is_some()));
+    }
+
+    #[test]
+    fn table5_joint_budgets_hold_and_msf_dominates() {
+        let (rows, text) = table5_joint();
+        assert_eq!(rows.len(), 9, "3 methods x 3 latency factors");
+        for r in &rows {
+            for (mi, c) in r.cells.iter().enumerate() {
+                if let Some((ram_kb, ms)) = c {
+                    // Joint feasibility: both axes hold on every cell.
+                    assert!(*ram_kb * 1000.0 <= 512.0 * 1024.0 + 1e-6, "{}: {ram_kb}", r.method);
+                    assert!(
+                        *ms <= r.budgets_ms[mi] * (1.0 + 1e-9) + 1e-9,
+                        "{} factor {}: {ms} > {}",
+                        r.method,
+                        r.factor,
+                        r.budgets_ms[mi]
+                    );
+                }
+            }
+        }
+        let msf: Vec<&Table5JointRow> =
+            rows.iter().filter(|r| r.method.starts_with("msf")).collect();
+        for baseline in rows.iter().filter(|r| !r.method.starts_with("msf")) {
+            let msf_row = msf
+                .iter()
+                .find(|r| r.factor == baseline.factor)
+                .expect("matching msf row");
+            for (mi, cell) in baseline.cells.iter().enumerate() {
+                if let Some((base_ram, _)) = cell {
+                    // The DAG walk searches a superset of every baseline's
+                    // settings: feasible wherever they are, never worse on RAM.
+                    let (msf_ram, _) = msf_row.cells[mi]
+                        .expect("msf feasible wherever a baseline is");
+                    assert!(
+                        msf_ram <= base_ram + 1e-9,
+                        "{} beat msf at factor {}",
+                        baseline.method,
+                        baseline.factor
+                    );
+                }
+            }
+        }
+        // Looser budgets never lose feasibility.
+        for w in msf.windows(2) {
+            for mi in 0..3 {
+                if w[0].cells[mi].is_some() {
+                    assert!(w[1].cells[mi].is_some(), "feasibility must be monotone in budget");
+                }
+            }
+        }
+        assert!(text.contains("joint"), "{text}");
     }
 
     #[test]

@@ -1,12 +1,10 @@
 //! Property-based integration tests over random models (seeded in-tree
 //! runner, `msf_cnn::util::prop` — DESIGN.md §Substitutions).
 //!
-//! Deliberately exercises the deprecated pre-`Planner` free functions
-//! (`minimize_*`, `vanilla_setting`, …): they are thin wrappers over the
-//! same solvers the strategies use, and this suite is their regression
-//! coverage. New code should go through `optimizer::Planner` /
-//! `optimizer::strategy` instead — see `strategy_equivalence` below,
-//! which pins wrapper-vs-strategy equality on every random model.
+//! Everything drives the `optimizer::strategy::PlanStrategy` objects —
+//! the same trait objects `Planner` and `PlanBatch` dispatch on (the
+//! pre-0.2 free functions are gone); `strategy_solves_match_planner`
+//! below pins strategy-vs-builder equality on every random model.
 //!
 //! Invariants locked in:
 //! 1. P2 (pruned, polynomial) is *exactly optimal* vs exhaustive
@@ -18,19 +16,31 @@
 //! 5. The baselines are never strictly better than msf-CNN on peak RAM.
 //! 6. Monotonicity: looser budgets never yield worse optima.
 
-#![allow(deprecated)]
-
 use msf_cnn::exec::Engine;
 use msf_cnn::graph::{enumerate_paths, DagOptions, FusionDag};
 use msf_cnn::memory::Arena;
 use msf_cnn::model::{Activation, Layer, ModelChain, TensorShape};
 use msf_cnn::ops::Tensor;
+use msf_cnn::optimizer::strategy::{HeadFusion, P1, P2, StreamNet, Vanilla};
 use msf_cnn::optimizer::{
-    exhaustive_p1, exhaustive_p2, heuristic_head_fusion, minimize_macs, minimize_ram,
-    minimize_ram_unconstrained, streamnet_single_block, vanilla_setting, Constraint, Constraints,
-    PlanStrategy,
+    exhaustive_p1, exhaustive_p2, Constraint, Constraints, FusionSetting, PlanStrategy,
 };
 use msf_cnn::util::prop::{check, Gen};
+
+/// P1 via the strategy surface: min peak RAM s.t. `F <= f_max`.
+fn min_ram(dag: &FusionDag, f_max: f64) -> Option<FusionSetting> {
+    P1.solve(dag, &Constraints::none().with(Constraint::Overhead(f_max)))
+}
+
+/// Unconstrained P1 via the strategy surface.
+fn min_ram_unconstrained(dag: &FusionDag) -> Option<FusionSetting> {
+    P1.solve(dag, &Constraints::none())
+}
+
+/// P2 via the strategy surface: min MACs s.t. peak RAM `<= p_max`.
+fn min_macs(dag: &FusionDag, p_max_bytes: u64) -> Option<FusionSetting> {
+    P2.solve(dag, &Constraints::none().with(Constraint::Ram(p_max_bytes)))
+}
 
 /// A random fusable CNN chain: 3-7 conv/dw/pool layers + optional
 /// pool/dense tail, sized so exhaustive enumeration stays tractable.
@@ -103,7 +113,7 @@ fn p2_exactly_matches_exhaustive() {
             return Ok(()); // keep exhaustive tractable
         }
         let p_max = (m.vanilla_peak_ram() as f64 * g.f32_in(0.05, 1.2) as f64) as u64;
-        match (minimize_macs(&dag, p_max), exhaustive_p2(&dag, p_max)) {
+        match (min_macs(&dag, p_max), exhaustive_p2(&dag, p_max)) {
             (None, None) => Ok(()),
             (Some(f), Some(s)) if f.cost.macs == s.cost.macs => Ok(()),
             (f, s) => Err(format!(
@@ -124,7 +134,7 @@ fn p1_feasible_and_budget_respected() {
             return Ok(());
         }
         let f_max = 1.0 + g.f32_in(0.02, 1.5) as f64;
-        match (minimize_ram(&dag, f_max), exhaustive_p1(&dag, f_max)) {
+        match (min_ram(&dag, f_max), exhaustive_p1(&dag, f_max)) {
             (None, None) => Ok(()),
             (None, Some(_)) => Err(format!("missed feasible solution at F_max={f_max}")),
             (Some(_), None) => Err(format!("fabricated solution at F_max={f_max}")),
@@ -154,13 +164,13 @@ fn fused_execution_matches_vanilla() {
             shape.c as usize,
             g.vec_f32(shape.elems() as usize, 2.0),
         );
-        let Some(fused) = minimize_ram_unconstrained(&dag) else {
+        let Some(fused) = min_ram_unconstrained(&dag) else {
             return Err("no setting".into());
         };
         let mut a1 = Arena::unbounded();
         let mut a2 = Arena::unbounded();
         let rv = engine
-            .run(&vanilla_setting(&dag), &input, &mut a1)
+            .run(&Vanilla.solve(&dag, &Constraints::none()).unwrap(), &input, &mut a1)
             .map_err(|e| e.to_string())?;
         let rf = engine.run(&fused, &input, &mut a2).map_err(|e| e.to_string())?;
         let max_diff = rv
@@ -192,7 +202,7 @@ fn executed_macs_match_prediction() {
             shape.c as usize,
             g.vec_f32(shape.elems() as usize, 1.0),
         );
-        let Some(s) = minimize_ram_unconstrained(&dag) else {
+        let Some(s) = min_ram_unconstrained(&dag) else {
             return Err("no setting".into());
         };
         let mut arena = Arena::unbounded();
@@ -222,18 +232,19 @@ fn msf_dominates_baselines_on_ram() {
     check("msf-dominates", 40, |g| {
         let m = random_chain(g);
         let dag = FusionDag::build(&m, DagOptions::default());
-        let Some(msf) = minimize_ram_unconstrained(&dag) else {
+        let Some(msf) = min_ram_unconstrained(&dag) else {
             return Err("no setting".into());
         };
-        let h = heuristic_head_fusion(&dag);
-        let v = vanilla_setting(&dag);
+        let none = Constraints::none();
+        let h = HeadFusion.solve(&dag, &none).unwrap();
+        let v = Vanilla.solve(&dag, &none).unwrap();
         if msf.cost.peak_ram > h.cost.peak_ram {
             return Err(format!("heuristic beat msf: {} < {}", h.cost.peak_ram, msf.cost.peak_ram));
         }
         if msf.cost.peak_ram > v.cost.peak_ram {
             return Err("vanilla beat msf".into());
         }
-        if let Some(sn) = streamnet_single_block(&dag, None) {
+        if let Some(sn) = StreamNet.solve(&dag, &none) {
             if msf.cost.peak_ram > sn.cost.peak_ram {
                 return Err(format!(
                     "streamnet beat msf: {} < {}",
@@ -254,7 +265,7 @@ fn budgets_are_monotone() {
         let p1 = (m.vanilla_peak_ram() as f64 * 0.3) as u64;
         let p2 = (m.vanilla_peak_ram() as f64 * 0.9) as u64;
         if let (Some(tight), Some(loose)) =
-            (minimize_macs(&dag, p1), minimize_macs(&dag, p2))
+            (min_macs(&dag, p1), min_macs(&dag, p2))
         {
             if loose.cost.macs > tight.cost.macs {
                 return Err("P2 not monotone".into());
@@ -262,7 +273,7 @@ fn budgets_are_monotone() {
         }
         // P1: larger F_max => no more RAM.
         if let (Some(tight), Some(loose)) =
-            (minimize_ram(&dag, 1.1), minimize_ram(&dag, 2.5))
+            (min_ram(&dag, 1.1), min_ram(&dag, 2.5))
         {
             if loose.cost.peak_ram > tight.cost.peak_ram {
                 return Err("P1 not monotone".into());
@@ -293,7 +304,7 @@ fn nonsquare_dwconv_chain_matches_exhaustive() {
         );
         let dag = FusionDag::build(&m, DagOptions::default());
         for p_max in [1_000u64, 2_000, 4_000, m.vanilla_peak_ram()] {
-            match (minimize_macs(&dag, p_max), exhaustive_p2(&dag, p_max)) {
+            match (min_macs(&dag, p_max), exhaustive_p2(&dag, p_max)) {
                 (None, None) => {}
                 (Some(f), Some(s)) => {
                     assert_eq!(f.cost.macs, s.cost.macs, "{hh}x{ww} P_max={p_max}")
@@ -302,7 +313,7 @@ fn nonsquare_dwconv_chain_matches_exhaustive() {
             }
         }
         for f_max in [1.05f64, 1.3, 2.0] {
-            match (minimize_ram(&dag, f_max), exhaustive_p1(&dag, f_max)) {
+            match (min_ram(&dag, f_max), exhaustive_p1(&dag, f_max)) {
                 (None, None) => {}
                 (Some(f), Some(s)) => {
                     assert!(f.cost.overhead <= f_max + 1e-9, "{hh}x{ww}");
@@ -357,34 +368,29 @@ fn plan_batch_parallel_matches_serial_on_random_models() {
 }
 
 #[test]
-fn strategy_equivalence_with_deprecated_wrappers() {
-    // The deprecated free functions and the PlanStrategy trait objects
-    // must be two names for the same solver, on every random model.
-    use msf_cnn::optimizer::strategy::{HeadFusion, P1, P2, StreamNet, Vanilla};
-    check("wrappers-vs-strategies", 25, |g| {
+fn strategy_solves_match_planner_pipeline() {
+    // Solving a strategy by hand on the raw DAG and driving it through
+    // the Planner builder (cached DAG + memoized edge costs) must be two
+    // names for the same solver, on every random model.
+    use msf_cnn::optimizer::Planner;
+    check("strategies-vs-planner", 25, |g| {
         let m = random_chain(g);
         let dag = FusionDag::build(&m, DagOptions::default());
+        let mut planner = Planner::for_model(m.clone());
         let none = Constraints::none();
         let p_mid = (m.vanilla_peak_ram() as f64 * 0.4) as u64;
-        let cases: [(&dyn PlanStrategy, Constraints, Option<_>); 6] = [
-            (&P1, none, minimize_ram_unconstrained(&dag)),
-            (
-                &P1,
-                none.with(Constraint::Overhead(1.2)),
-                minimize_ram(&dag, 1.2),
-            ),
-            (
-                &P2,
-                none.with(Constraint::Ram(p_mid)),
-                minimize_macs(&dag, p_mid),
-            ),
-            (&Vanilla, none, Some(vanilla_setting(&dag))),
-            (&HeadFusion, none, Some(heuristic_head_fusion(&dag))),
-            (&StreamNet, none, streamnet_single_block(&dag, None)),
+        let cases: [(&dyn PlanStrategy, Constraints); 6] = [
+            (&P1, none),
+            (&P1, none.with(Constraint::Overhead(1.2))),
+            (&P2, none.with(Constraint::Ram(p_mid))),
+            (&Vanilla, none),
+            (&HeadFusion, none),
+            (&StreamNet, none),
         ];
-        for (strategy, constraints, legacy) in cases {
-            let s = strategy.solve(&dag, &constraints);
-            let same = match (&s, &legacy) {
+        for (strategy, constraints) in cases {
+            let direct = strategy.solve(&dag, &constraints);
+            let via_planner = planner.plan_with(strategy, constraints).ok().map(|p| p.setting);
+            let same = match (&direct, &via_planner) {
                 (None, None) => true,
                 (Some(a), Some(b)) => {
                     a.spans == b.spans
@@ -395,10 +401,10 @@ fn strategy_equivalence_with_deprecated_wrappers() {
             };
             if !same {
                 return Err(format!(
-                    "{} diverged from its wrapper: {:?} vs {:?}",
+                    "{} diverged from the planner: {:?} vs {:?}",
                     strategy.name(),
-                    s.as_ref().map(|x| x.cost.peak_ram),
-                    legacy.as_ref().map(|x| x.cost.peak_ram)
+                    direct.as_ref().map(|x| x.cost.peak_ram),
+                    via_planner.as_ref().map(|x| x.cost.peak_ram)
                 ));
             }
         }

@@ -1,0 +1,257 @@
+//! Control-plane integration: the full zoo → plan → registry → serve
+//! loop, including the ISSUE's acceptance path — a latency-constrained
+//! plan deployed from a plan file through [`PlanRegistry`] into a running
+//! [`MultiModelServer`], hot-swapped for a different plan, with outputs
+//! bit-identical to direct [`InferBackend::run`] before and after.
+
+use std::path::PathBuf;
+
+use msf_cnn::backend::{EngineBackend, InferBackend};
+use msf_cnn::coordinator::{ModelSpec, MultiModelServer, PlanRegistry, ServeError};
+use msf_cnn::mcu::{board_by_name, estimate_latency_ms};
+use msf_cnn::ops::ParamGen;
+use msf_cnn::optimizer::strategy::{LatencyAware, Vanilla};
+use msf_cnn::optimizer::{Constraint, Plan, Planner};
+use msf_cnn::zoo;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("msfcnn-cp-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn input_for(model_name: &str, seed: u64) -> Vec<f32> {
+    let m = zoo::by_name(model_name).unwrap();
+    ParamGen::new(seed).fill(m.shapes[0].elems() as usize, 2.0)
+}
+
+/// Direct (serverless) execution of a plan on one input.
+fn run_direct(plan: &Plan, input: &[f32]) -> Vec<f32> {
+    EngineBackend::from_plan(plan).unwrap().run(input).unwrap()
+}
+
+#[test]
+fn latency_constrained_plan_deploys_and_hot_swaps_bit_identically() {
+    let board = board_by_name("nucleo-f767zi").unwrap();
+    let model = zoo::quickstart();
+
+    // Plan A: the acceptance pipeline — latency-constrained LatencyAware
+    // solve whose recorded estimate is within budget. The budget is set
+    // just above the min-RAM setting's own latency, so the solve is
+    // constrained but the RAM-optimal (non-vanilla) setting stays
+    // feasible.
+    let min_ram_ms = {
+        let mut p = Planner::for_model(model.clone());
+        let s = p.setting().unwrap();
+        estimate_latency_ms(&model, &s, board).total_ms
+    };
+    let budget = min_ram_ms * 1.25;
+    let plan_a = Planner::for_model(model.clone())
+        .constraint(Constraint::LatencyMs { board, budget })
+        .strategy(LatencyAware::default())
+        .plan()
+        .unwrap();
+    let recorded = plan_a.latency.clone().expect("latency provenance");
+    assert_eq!(recorded.board, "nucleo-f767zi");
+    assert!(recorded.estimate_ms <= budget * (1.0 + 1e-9) + 1e-9);
+
+    // Plan B: a different setting for the same model (vanilla spans).
+    let plan_b = Planner::for_model(model.clone()).strategy(Vanilla).plan().unwrap();
+    assert_ne!(plan_a.setting.spans, plan_b.setting.spans, "swap must change the plan");
+
+    // Deploy plan A as a *file* through the registry.
+    let dir = tmp_dir("accept");
+    plan_a.save(dir.join("quickstart.plan.json")).unwrap();
+    let mut registry = PlanRegistry::open(&dir).unwrap();
+    let server = MultiModelServer::new();
+    let handle = server.handle();
+    let report = registry.sync(&handle).unwrap();
+    assert_eq!(report.added, vec!["quickstart".to_string()]);
+    assert_eq!(handle.model_ids(), vec!["quickstart".to_string()]);
+    assert_eq!(registry.latest("quickstart").unwrap().version, 1);
+    assert_eq!(
+        registry.latest("quickstart").unwrap().plan.latency.as_ref().unwrap().board,
+        "nucleo-f767zi",
+        "the registry entry carries the deploy artifact's latency provenance"
+    );
+
+    // Served outputs are bit-identical to direct backend runs of plan A.
+    let inputs: Vec<Vec<f32>> = (0..4).map(|i| input_for("quickstart", 40 + i)).collect();
+    for x in &inputs {
+        assert_eq!(handle.infer("quickstart", x.clone()).unwrap(), run_direct(&plan_a, x));
+    }
+
+    // Hot-swap: overwrite the plan file, re-sync, and the same id now
+    // serves plan B — again bit-identical to the direct runs.
+    plan_b.save(dir.join("quickstart.plan.json")).unwrap();
+    let report = registry.sync(&handle).unwrap();
+    assert_eq!(report.updated, vec!["quickstart".to_string()]);
+    assert_eq!(registry.latest("quickstart").unwrap().version, 2);
+    // The old version stays queryable (audit / rollback inspection).
+    assert_eq!(registry.get("quickstart", 1).unwrap().plan, plan_a);
+    for x in &inputs {
+        assert_eq!(handle.infer("quickstart", x.clone()).unwrap(), run_direct(&plan_b, x));
+    }
+
+    // Metrics survived the swap: one id, cumulative count across plans.
+    let metrics = handle.metrics();
+    assert_eq!(metrics.model("quickstart").unwrap().completed(), 2 * inputs.len());
+
+    drop(handle);
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn registry_scan_tracks_new_updated_and_removed_files() {
+    let dir = tmp_dir("scan");
+    Planner::for_model(zoo::tiny_cnn())
+        .plan()
+        .unwrap()
+        .save(dir.join("tiny.plan.json"))
+        .unwrap();
+
+    let mut registry = PlanRegistry::open(&dir).unwrap();
+    assert_eq!(registry.scan().unwrap().added, vec!["tiny".to_string()]);
+    assert_eq!(registry.model_ids(), vec!["tiny".to_string()]);
+
+    // No change ⇒ empty report.
+    assert!(registry.scan().unwrap().is_empty());
+
+    // A new file is picked up…
+    Planner::for_model(zoo::kws_cnn())
+        .plan()
+        .unwrap()
+        .save(dir.join("kws.plan.json"))
+        .unwrap();
+    // …and an update to an existing one bumps its version.
+    Planner::for_model(zoo::tiny_cnn())
+        .strategy(Vanilla)
+        .plan()
+        .unwrap()
+        .save(dir.join("tiny.plan.json"))
+        .unwrap();
+    let report = registry.scan().unwrap();
+    assert_eq!(report.added, vec!["kws".to_string()]);
+    assert_eq!(report.updated, vec!["tiny".to_string()]);
+    assert_eq!(registry.latest("tiny").unwrap().version, 2);
+    assert_eq!(registry.latest("tiny").unwrap().plan.strategy, "vanilla");
+    assert_eq!(registry.get("tiny", 1).unwrap().plan.strategy, "p1-min-ram");
+
+    // Deleting a file removes the model.
+    std::fs::remove_file(dir.join("kws.plan.json")).unwrap();
+    let report = registry.scan().unwrap();
+    assert_eq!(report.removed, vec!["kws".to_string()]);
+    assert!(registry.latest("kws").is_none());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn registry_sync_deploys_swaps_and_retires_on_a_live_server() {
+    let dir = tmp_dir("sync");
+    Planner::for_model(zoo::tiny_cnn())
+        .plan()
+        .unwrap()
+        .save(dir.join("tiny.plan.json"))
+        .unwrap();
+    Planner::for_model(zoo::kws_cnn())
+        .plan()
+        .unwrap()
+        .save(dir.join("kws.plan.json"))
+        .unwrap();
+
+    let mut registry = PlanRegistry::open(&dir).unwrap();
+    let server = MultiModelServer::new();
+    let handle = server.handle();
+    registry.sync(&handle).unwrap();
+    assert_eq!(handle.model_ids(), vec!["kws".to_string(), "tiny".to_string()]);
+    assert!(handle.infer("tiny", input_for("tiny", 1)).is_ok());
+    assert!(handle.infer("kws", input_for("kws", 2)).is_ok());
+
+    // Remove one file: the next sync retires it; the other keeps serving.
+    std::fs::remove_file(dir.join("kws.plan.json")).unwrap();
+    registry.sync(&handle).unwrap();
+    assert_eq!(handle.model_ids(), vec!["tiny".to_string()]);
+    let err = handle.submit("kws", input_for("kws", 3)).unwrap_err();
+    assert_eq!(err, ServeError::UnknownModel { model_id: "kws".into() });
+    assert!(handle.infer("tiny", input_for("tiny", 4)).is_ok());
+
+    drop(handle);
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn swap_drains_queued_requests_without_drops() {
+    // A serial (batch_max = 1) executor with a deep queue: stack requests
+    // behind it, hot-swap mid-flight, and require every queued request to
+    // complete on the old plan — no drops, no ShuttingDown replies.
+    let model = zoo::quickstart();
+    let plan_fused = Planner::for_model(model.clone()).plan().unwrap();
+    let plan_vanilla = Planner::for_model(model.clone()).strategy(Vanilla).plan().unwrap();
+
+    let server = MultiModelServer::new();
+    let handle = server.handle();
+    handle
+        .deploy(ModelSpec::plan("qs", plan_fused.clone()).with_queue(64, 1))
+        .unwrap();
+
+    let total = 12usize;
+    let inputs: Vec<Vec<f32>> = (0..total).map(|i| input_for("quickstart", i as u64)).collect();
+    let mut pendings = Vec::new();
+    for x in &inputs {
+        pendings.push(handle.submit("qs", x.clone()).unwrap());
+    }
+
+    // Swap while the old executor still has most of the queue buffered.
+    handle
+        .swap(ModelSpec::plan("qs", plan_vanilla.clone()).with_queue(64, 1))
+        .unwrap();
+
+    // Every pre-swap request completes with the OLD plan's exact output.
+    for (p, x) in pendings.into_iter().zip(&inputs) {
+        let out = p.wait().expect("queued request must drain, not drop");
+        assert_eq!(out, run_direct(&plan_fused, x));
+    }
+
+    // Post-swap submits execute the new plan.
+    let x = input_for("quickstart", 999);
+    assert_eq!(handle.infer("qs", x.clone()).unwrap(), run_direct(&plan_vanilla, &x));
+
+    // Metrics survived: same id accumulated across both backends, and
+    // nothing was counted as a shutdown drop.
+    let m = handle.metrics();
+    let mm = m.model("qs").unwrap();
+    assert_eq!(mm.completed(), total + 1);
+    assert_eq!(mm.shutdown_drops(), 0);
+    assert_eq!(mm.queue_depth(), 0);
+
+    drop(handle);
+    server.shutdown();
+}
+
+#[test]
+fn retired_model_rejects_submits_and_keeps_metrics() {
+    let server = MultiModelServer::new();
+    let handle = server.handle();
+    let plan = Planner::for_model(zoo::tiny_cnn()).plan().unwrap();
+    handle.deploy(ModelSpec::plan("tiny", plan)).unwrap();
+    handle.infer("tiny", input_for("tiny", 5)).unwrap();
+
+    handle.retire("tiny").unwrap();
+    let err = handle.submit("tiny", input_for("tiny", 6)).unwrap_err();
+    assert_eq!(err, ServeError::UnknownModel { model_id: "tiny".into() });
+
+    // Post-mortem metrics stay queryable.
+    assert_eq!(handle.metrics().model("tiny").unwrap().completed(), 1);
+
+    // The id can be redeployed after retirement.
+    let plan = Planner::for_model(zoo::tiny_cnn()).plan().unwrap();
+    handle.deploy(ModelSpec::plan("tiny", plan)).unwrap();
+    handle.infer("tiny", input_for("tiny", 7)).unwrap();
+    assert_eq!(handle.metrics().model("tiny").unwrap().completed(), 2);
+
+    drop(handle);
+    server.shutdown();
+}
