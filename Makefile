@@ -1,21 +1,27 @@
 # msf-CNN reproduction — build / verify entry points.
 #
 # `make verify` is the regression gate: tier-1 (release build + tests)
-# plus clippy -D warnings, rustfmt --check, and rustdoc -D warnings when
-# the components are installed. CI runs the same target
-# (.github/workflows/ci.yml), so the seed suite can't silently rot again.
+# plus bench compilation (`cargo bench --no-run`, so the perf-trajectory
+# benches can't silently rot), clippy -D warnings, rustfmt --check, and
+# rustdoc -D warnings when the components are installed. CI runs the same
+# target (.github/workflows/ci.yml), so the seed suite can't rot again.
 
 CARGO ?= cargo
 
-.PHONY: verify build test clippy fmt doc bench artifacts clean
+.PHONY: verify build test bench-build clippy fmt doc bench artifacts clean
 
-verify: build test clippy fmt doc
+verify: build test bench-build clippy fmt doc
 
 build:
 	$(CARGO) build --release
 
 test:
 	$(CARGO) test -q
+
+# Benches are binaries too: keep them compiling without paying their
+# runtime on every verify.
+bench-build:
+	$(CARGO) bench --no-run
 
 clippy:
 	@if $(CARGO) clippy --version >/dev/null 2>&1; then \

@@ -1,0 +1,75 @@
+//! Per-request serving latency: interpreted engine (re-walks the setting,
+//! arena-allocates per run) vs the compile-once path (cold compile vs
+//! warm allocation-free run). Emits `BENCH_infer.json` at the repo root —
+//! the serving-hot-path perf trajectory CI and future PRs track.
+
+use msf_cnn::exec::Engine;
+use msf_cnn::memory::Arena;
+use msf_cnn::model::ModelChain;
+use msf_cnn::ops::{ParamGen, Tensor};
+use msf_cnn::optimizer::Planner;
+use msf_cnn::util::bench::Bencher;
+use msf_cnn::zoo;
+
+fn input_for(m: &ModelChain, seed: u64) -> Tensor {
+    let s = m.shapes[0];
+    Tensor::from_data(
+        s.h as usize,
+        s.w as usize,
+        s.c as usize,
+        ParamGen::new(seed).fill(s.elems() as usize, 2.0),
+    )
+}
+
+fn main() {
+    let b = Bencher::default();
+    println!("== infer hot-path benches (interpreted vs compiled) ==");
+
+    let mut rows: Vec<String> = Vec::new();
+    for name in ["quickstart", "kws"] {
+        let m = zoo::by_name(name).unwrap();
+        let engine = Engine::new(m.clone());
+        let setting = Planner::for_model(m.clone()).setting().unwrap();
+        let x = input_for(&m, 1);
+
+        // Interpreted: per-request re-interpretation + arena allocations.
+        let interp = b.run(&format!("interpreted/{name}"), || {
+            let mut arena = Arena::unbounded();
+            engine.run(&setting, &x, &mut arena).unwrap().macs
+        });
+
+        // Cold: what one compile costs (schedule replay + two offset
+        // assignments + band geometry).
+        let cold = b.run(&format!("compile-cold/{name}"), || {
+            engine.compile(&setting).pool_bytes()
+        });
+
+        // Warm: the serving hot path — allocation-free inside the pool.
+        let compiled = engine.compile(&setting);
+        let mut pool = compiled.make_pool();
+        let mut out = vec![0.0f32; compiled.output_len()];
+        let warm = b.run(&format!("compiled-warm/{name}"), || {
+            compiled.run_into(x.as_map(), &mut pool, &mut out);
+            out[0]
+        });
+
+        rows.push(format!(
+            "    {{\"model\": \"{name}\", \"interpreted_us\": {:.1}, \"compile_cold_us\": {:.1}, \"compiled_warm_us\": {:.1}, \"warm_speedup\": {:.3}, \"pool_bytes\": {}, \"watermark_bytes\": {}}}",
+            interp.mean_us(),
+            cold.mean_us(),
+            warm.mean_us(),
+            interp.mean_us() / warm.mean_us(),
+            compiled.pool_bytes(),
+            compiled.measured_peak(),
+        ));
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"infer_hot\",\n  \"unit\": \"us-mean\",\n  \"results\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    match std::fs::write("BENCH_infer.json", &json) {
+        Ok(()) => println!("wrote BENCH_infer.json"),
+        Err(e) => eprintln!("could not write BENCH_infer.json: {e}"),
+    }
+}

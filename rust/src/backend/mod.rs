@@ -18,10 +18,9 @@
 use std::path::{Path, PathBuf};
 
 use crate::anyhow;
-use crate::exec::Engine;
-use crate::memory::Arena;
+use crate::exec::{CompiledPlan, Engine, PlanPool};
 use crate::model::ModelChain;
-use crate::ops::Tensor;
+use crate::ops::MapRef;
 use crate::optimizer::{FusionSetting, Plan};
 use crate::runtime::Runtime;
 use crate::util::error::Result;
@@ -47,11 +46,18 @@ pub trait InferBackend {
     }
 }
 
-/// [`InferBackend`] over the pure-Rust tracked executor: serves any
+/// [`InferBackend`] over the pure-Rust executor: serves any
 /// [`ModelChain`] + [`FusionSetting`] without artifacts.
+///
+/// **Compile-once / run-many**: construction lowers the setting into a
+/// [`CompiledPlan`] (static step list, offset-assigned pool, parameters
+/// generated exactly once) and allocates the warm [`PlanPool`]. Every
+/// [`InferBackend::run`] after that executes allocation-free inside the
+/// pool — the per-request hot path the coordinator's executor threads
+/// serve from after [`BackendSpec::connect`].
 pub struct EngineBackend {
-    engine: Engine,
-    setting: FusionSetting,
+    compiled: CompiledPlan,
+    pool: PlanPool,
     measured: Option<u64>,
 }
 
@@ -62,9 +68,12 @@ impl EngineBackend {
     }
 
     /// Backend over an existing engine — e.g. one loaded with artifact
-    /// weights via [`Engine::quickstart_from_artifacts`].
+    /// weights via [`Engine::quickstart_from_artifacts`]. The engine is
+    /// compiled once here; the interpreted path is not used for serving.
     pub fn with_engine(engine: Engine, setting: FusionSetting) -> Self {
-        Self { engine, setting, measured: None }
+        let compiled = engine.compile(&setting);
+        let pool = compiled.make_pool();
+        Self { compiled, pool, measured: None }
     }
 
     /// Backend for a serialized [`Plan`], resolving the model by name
@@ -88,12 +97,17 @@ impl EngineBackend {
 
     /// The fusion setting this backend executes.
     pub fn setting(&self) -> &FusionSetting {
-        &self.setting
+        self.compiled.setting()
     }
 
     /// The served model.
     pub fn model(&self) -> &ModelChain {
-        self.engine.model()
+        self.compiled.model()
+    }
+
+    /// The compiled form (step list + pool layout) this backend serves.
+    pub fn compiled(&self) -> &CompiledPlan {
+        &self.compiled
     }
 }
 
@@ -103,7 +117,7 @@ impl InferBackend for EngineBackend {
     }
 
     fn run(&mut self, input: &[f32]) -> Result<Vec<f32>> {
-        let shape = self.engine.model().shapes[0];
+        let shape = self.compiled.model().shapes[0];
         if input.len() as u64 != shape.elems() {
             return Err(anyhow!(
                 "input length {} != expected {} for {shape}",
@@ -111,23 +125,22 @@ impl InferBackend for EngineBackend {
                 shape.elems()
             ));
         }
-        let t = Tensor::from_data(
+        // Warm-pool hot path: no tensor clone, no arena, no allocation
+        // beyond the reply vector the trait contract returns.
+        let x = MapRef::new(
             shape.h as usize,
             shape.w as usize,
             shape.c as usize,
-            input.to_vec(),
+            input,
         );
-        let mut arena = Arena::unbounded();
-        let report = self
-            .engine
-            .run(&self.setting, &t, &mut arena)
-            .map_err(|e| anyhow!("{e}"))?;
-        self.measured = Some(report.peak_ram);
-        Ok(report.output)
+        let mut out = vec![0.0f32; self.compiled.output_len()];
+        self.compiled.run_into(x, &mut self.pool, &mut out);
+        self.measured = Some(self.compiled.measured_peak());
+        Ok(out)
     }
 
     fn peak_ram(&self) -> u64 {
-        self.setting.cost.peak_ram
+        self.compiled.setting().cost.peak_ram
     }
 
     fn measured_peak(&self) -> Option<u64> {

@@ -47,7 +47,11 @@ pub struct ModelSpec {
     /// Registry key; `submit` routes on this.
     pub id: String,
     /// What executes this model's requests, instantiated inside the
-    /// executor thread via [`BackendSpec::connect`].
+    /// executor thread via [`BackendSpec::connect`] — for engine/plan
+    /// specs that is the **compile step**: the fusion setting is lowered
+    /// once into a [`crate::exec::CompiledPlan`] with a warm
+    /// offset-assigned pool, and every request after that runs
+    /// allocation-free (params generated once, not per run).
     pub backend: BackendSpec,
     /// Bounded queue depth; senders get backpressure errors beyond this.
     pub queue_cap: usize,

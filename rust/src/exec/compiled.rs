@@ -1,0 +1,673 @@
+//! Compile-once execution plans: `(ModelChain, FusionSetting)` lowered to
+//! a static step list plus one offset-assigned memory pool, so every
+//! inference runs **allocation-free** inside that pool — the
+//! MCU deployment model (TinyEngine-style offset-assigned arenas), and
+//! the serving hot path behind [`crate::backend::EngineBackend`].
+//!
+//! Compilation replays the span walk once
+//! ([`crate::memory::schedule_intervals`]) to derive every buffer's
+//! lifetime interval, offset-assigns two layouts from the same intervals —
+//! the *accounting* layout (Arena/Eq. 5–6 byte convention, serialized into
+//! [`crate::optimizer::Plan`]) and the *runtime* f32 storage layout — and
+//! resolves each span into a step referencing pool slices by offset.
+//! Parameters are generated once at compile time, band-pyramid geometry
+//! ([`BandGeom`]) once per fused step.
+//!
+//! Numerics are **bit-identical** to the interpreted [`super::Engine`]:
+//! every step runs the same kernel loops ([`crate::ops`]' `*_into`
+//! variants and the shared [`FusedBlock`] band executor), in the same
+//! order, on pool slices instead of freshly allocated tensors. MAC
+//! counting follows the engine too, so `RunReport`s reconcile exactly.
+
+use std::ops::Range;
+
+use crate::memory::{
+    assign_offsets, layout_from_schedule, schedule_intervals, BufRole, PoolLayout,
+};
+use crate::model::{Layer, LayerKind, ModelChain};
+use crate::ops::{
+    accumulate_row_major, avg_pool2d_into, conv2d_into, dense_into, dwconv2d_into,
+    global_avg_pool_into, max_pool2d_into, scale_avg, BandGeom, BandRange, FusedBlock, HCache,
+    LayerParams, MapRef, Tensor,
+};
+use crate::optimizer::FusionSetting;
+
+use super::RunReport;
+
+/// Where a step reads its boundary input from.
+#[derive(Debug, Clone, Copy)]
+enum Src {
+    /// The external input tensor (fused heads stream it; never pooled).
+    Input,
+    /// A pool buffer (index into `CompiledPlan::bufs`).
+    Buf(usize),
+}
+
+/// Runtime view of one pool buffer: f32 element offset + dims.
+#[derive(Debug, Clone, Copy)]
+struct RtBuf {
+    off: usize,
+    elems: usize,
+    /// `(h, w, c)`; vectors are `(1, 1, len)`.
+    dims: (usize, usize, usize),
+}
+
+/// One compiled execution step.
+enum Step {
+    /// Copy the current boundary into a residual stash slice.
+    StashSave { src: Src, dst: usize },
+    /// Single (unfused) layer via the allocation-free `*_into` kernels.
+    Single { layer: usize, src: Src, out: usize, residual: Option<usize> },
+    /// Fused block `[a, conv_end)` streaming rows into the output map.
+    Fused { a: usize, conv_end: usize, src: Src, bands: usize, out: usize, geom: BandGeom },
+    /// Fused block with the §7 iterative tail: rows stream into the
+    /// global-pool accumulator, then the iterative dense chain, then the
+    /// logits copy.
+    FusedIter {
+        a: usize,
+        conv_end: usize,
+        src: Src,
+        bands: usize,
+        geom: BandGeom,
+        pool_acc: usize,
+        /// `(model layer index, accumulator buffer)` per trailing Dense.
+        dense: Vec<(usize, usize)>,
+        logits: usize,
+    },
+}
+
+/// The per-serving-slot mutable state of a compiled plan: one fixed f32
+/// pool plus the band-range scratch. Created once
+/// ([`CompiledPlan::make_pool`]); the hot path never allocates again —
+/// [`Self::storage_allocs`] stays at its creation value forever.
+pub struct PlanPool {
+    data: Vec<f32>,
+    ranges: Vec<BandRange>,
+    storage_allocs: u64,
+}
+
+impl PlanPool {
+    /// Number of heap allocations this pool has performed since creation
+    /// (the pool vector + the range scratch). Constant after
+    /// [`CompiledPlan::make_pool`]: the compiled hot path is
+    /// allocation-free, and tests pin this counter across runs.
+    pub fn storage_allocs(&self) -> u64 {
+        self.storage_allocs
+    }
+
+    /// f32 elements of backing storage.
+    pub fn elems(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Stable address of the backing storage (test hook: the hot path
+    /// never reallocates, so this never changes).
+    pub fn storage_ptr(&self) -> *const f32 {
+        self.data.as_ptr()
+    }
+}
+
+/// A `(model, setting)` pair compiled into a static step list + pool
+/// layout. Immutable after compilation and shareable across runs; all
+/// per-run state lives in a [`PlanPool`].
+pub struct CompiledPlan {
+    model: ModelChain,
+    params: Vec<LayerParams>,
+    setting: FusionSetting,
+    layout: PoolLayout,
+    bufs: Vec<RtBuf>,
+    pool_elems: usize,
+    ranges_scratch: usize,
+    steps: Vec<Step>,
+    /// `v_0` pool buffer to copy the external input into (only when the
+    /// first span is a single layer; fused heads stream the input).
+    input_buf: Option<usize>,
+    out_buf: usize,
+    out_len: usize,
+}
+
+impl CompiledPlan {
+    /// Compile with deterministic per-layer parameters (same generator as
+    /// [`super::Engine::new`], so compiled == interpreted bit-for-bit).
+    pub fn compile(model: ModelChain, setting: FusionSetting) -> Self {
+        let params = model
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| LayerParams::for_layer(l, i))
+            .collect();
+        Self::with_params(model, params, setting)
+    }
+
+    /// Compile with explicit parameters (`params[i]` for layer `i`).
+    pub fn with_params(
+        model: ModelChain,
+        params: Vec<LayerParams>,
+        setting: FusionSetting,
+    ) -> Self {
+        assert_eq!(params.len(), model.num_layers(), "params/layers mismatch");
+        assert!(!setting.spans.is_empty(), "empty fusion setting");
+
+        let sched = schedule_intervals(&model, &setting);
+        // Accounting layout: Arena-convention bytes over accounting
+        // lifetimes — the same builder `optimizer::Plan` serialization
+        // uses, so the deploy memory map and what we execute against are
+        // byte-identical by construction.
+        let layout = layout_from_schedule(&sched);
+
+        // Runtime layout: f32 element counts over *runtime* lifetimes
+        // (`rt_death` extends the iterative-tail read-back chain).
+        let rt_items: Vec<(u64, usize, usize)> =
+            sched.iter().map(|s| (s.elems as u64, s.birth, s.rt_death)).collect();
+        let (rt_offs, pool_elems) = assign_offsets(&rt_items);
+        let bufs: Vec<RtBuf> = sched
+            .iter()
+            .zip(&rt_offs)
+            .map(|(s, &off)| RtBuf { off: off as usize, elems: s.elems, dims: s.dims })
+            .collect();
+
+        let find = |role: BufRole| -> usize {
+            sched
+                .iter()
+                .position(|s| s.role == role)
+                .unwrap_or_else(|| panic!("schedule is missing buffer {role:?}"))
+        };
+
+        let first_fused = setting.spans.first().map(|&(a, b, _)| b - a > 1).unwrap_or(false);
+        let input_buf = if first_fused { None } else { Some(find(BufRole::Input)) };
+        let mut cur: Src = match input_buf {
+            Some(id) => Src::Buf(id),
+            None => Src::Input,
+        };
+        let mut steps: Vec<Step> = Vec::new();
+        let mut ranges_scratch = 0usize;
+        let mut stash_ids: Vec<Option<usize>> = vec![None; model.num_layers() + 1];
+
+        for (si, &(a, b, iter_tail)) in setting.spans.iter().enumerate() {
+            let fused = b - a > 1;
+
+            // Same (shared) stash decision as the engine / schedule walk.
+            if crate::memory::stash_needed(&model, a, b, fused) {
+                let dst = find(BufRole::Stash { tensor: a });
+                stash_ids[a] = Some(dst);
+                steps.push(Step::StashSave { src: cur, dst });
+            }
+
+            if fused {
+                let conv_end = crate::memory::conv_end_of(&model, a, b, iter_tail);
+                let bands = find(BufRole::Bands { a, b: conv_end });
+                let geom = FusedBlock::new(&model, a, conv_end, &params).band_geom();
+                debug_assert_eq!(
+                    geom.total_elems(),
+                    bufs[bands].elems,
+                    "band geometry / schedule divergence"
+                );
+                ranges_scratch = ranges_scratch.max(geom.dims.len());
+                if iter_tail {
+                    let pool_acc = find(BufRole::PoolAcc { span: si });
+                    let dense: Vec<(usize, usize)> = (conv_end + 1..b)
+                        .map(|li| (li, find(BufRole::DenseAcc { layer: li })))
+                        .collect();
+                    let logits = find(BufRole::Logits);
+                    steps.push(Step::FusedIter {
+                        a,
+                        conv_end,
+                        src: cur,
+                        bands,
+                        geom,
+                        pool_acc,
+                        dense,
+                        logits,
+                    });
+                    cur = Src::Buf(logits);
+                } else {
+                    let out = find(BufRole::Boundary { tensor: b });
+                    steps.push(Step::Fused { a, conv_end, src: cur, bands, out, geom });
+                    cur = Src::Buf(out);
+                }
+            } else {
+                let out = find(BufRole::Boundary { tensor: b });
+                let residual =
+                    model.layers[a].residual_from.and_then(|src| stash_ids[src].take());
+                steps.push(Step::Single { layer: a, src: cur, out, residual });
+                cur = Src::Buf(out);
+            }
+        }
+
+        let out_buf = match cur {
+            Src::Buf(id) => id,
+            Src::Input => unreachable!("setting with no spans"),
+        };
+        let out_len = bufs[out_buf].elems;
+
+        Self {
+            model,
+            params,
+            setting,
+            layout,
+            bufs,
+            pool_elems: pool_elems as usize,
+            ranges_scratch,
+            steps,
+            input_buf,
+            out_buf,
+            out_len,
+        }
+    }
+
+    /// The accounting pool layout (offsets, pool size, watermark) — what
+    /// [`crate::optimizer::Plan`] serializes as the deploy memory map.
+    pub fn layout(&self) -> &PoolLayout {
+        &self.layout
+    }
+
+    /// The compiled fusion setting.
+    pub fn setting(&self) -> &FusionSetting {
+        &self.setting
+    }
+
+    /// The compiled model.
+    pub fn model(&self) -> &ModelChain {
+        &self.model
+    }
+
+    /// Length of the final output (logits) vector.
+    pub fn output_len(&self) -> usize {
+        self.out_len
+    }
+
+    /// Measured peak of every run of this plan: the max concurrent
+    /// accounting footprint of the schedule — equal to the interpreted
+    /// engine's arena high-water mark, known at compile time because the
+    /// schedule is static.
+    pub fn measured_peak(&self) -> u64 {
+        self.layout.watermark
+    }
+
+    /// Static pool size in accounting bytes (>= [`Self::measured_peak`];
+    /// the difference is offset-assignment fragmentation).
+    pub fn pool_bytes(&self) -> u64 {
+        self.layout.pool_bytes
+    }
+
+    /// Allocate the per-slot execution pool — the **only** allocation of
+    /// the compiled path; every subsequent [`Self::run_into`] is
+    /// allocation-free.
+    pub fn make_pool(&self) -> PlanPool {
+        PlanPool {
+            data: vec![0.0; self.pool_elems],
+            ranges: vec![BandRange { start: 0, rows: 0 }; self.ranges_scratch],
+            storage_allocs: 2,
+        }
+    }
+
+    /// Allocation-free inference: stream `input` through the step list
+    /// inside `pool`, writing the logits into `out`
+    /// (length [`Self::output_len`]). Returns the MACs performed
+    /// (identical to the interpreted engine's count).
+    pub fn run_into(&self, input: MapRef<'_>, pool: &mut PlanPool, out: &mut [f32]) -> u64 {
+        let s0 = self.model.shapes[0];
+        assert!(
+            input.h == s0.h as usize && input.w == s0.w as usize && input.c == s0.c as usize,
+            "input shape mismatch"
+        );
+        assert_eq!(out.len(), self.out_len, "output buffer length mismatch");
+        assert_eq!(pool.data.len(), self.pool_elems, "pool belongs to a different plan");
+
+        if let Some(id) = self.input_buf {
+            pool.data[self.range_of(id)].copy_from_slice(input.data);
+        }
+        let mut macs = 0u64;
+        for step in &self.steps {
+            macs += self.run_step(step, input, pool);
+        }
+        let out_r = self.range_of(self.out_buf);
+        out.copy_from_slice(&pool.data[out_r]);
+        macs
+    }
+
+    /// Convenience wrapper: run and materialize a [`RunReport`]
+    /// (compiled runs have a compile-time-constant measured peak and no
+    /// per-span breakdown — `spans` is empty).
+    pub fn run(&self, input: &Tensor, pool: &mut PlanPool) -> RunReport {
+        let mut out = vec![0.0f32; self.out_len];
+        let macs = self.run_into(input.as_map(), pool, &mut out);
+        RunReport {
+            output: out,
+            peak_ram: self.layout.watermark,
+            macs,
+            spans: Vec::new(),
+        }
+    }
+
+    fn range_of(&self, id: usize) -> Range<usize> {
+        let b = &self.bufs[id];
+        b.off..b.off + b.elems
+    }
+
+    fn map_of<'p>(&self, id: usize, data: &'p [f32]) -> MapRef<'p> {
+        let d = self.bufs[id].dims;
+        MapRef::new(d.0, d.1, d.2, data)
+    }
+
+    fn run_step(&self, step: &Step, input: MapRef<'_>, pool: &mut PlanPool) -> u64 {
+        match step {
+            Step::StashSave { src, dst } => {
+                let dst_r = self.range_of(*dst);
+                match *src {
+                    Src::Input => pool.data[dst_r].copy_from_slice(input.data),
+                    Src::Buf(sid) => {
+                        let (s, d) = two_muts(&mut pool.data, self.range_of(sid), dst_r);
+                        d.copy_from_slice(s);
+                    }
+                }
+                0
+            }
+
+            Step::Single { layer, src, out, residual } => {
+                let l = &self.model.layers[*layer];
+                let p = &self.params[*layer];
+                let out_r = self.range_of(*out);
+                let macs = match *src {
+                    // A single-layer first span materializes `v_0` in the
+                    // pool (`input_buf`), so single steps always read a
+                    // pool buffer.
+                    Src::Input => unreachable!("single-layer step reading the external input"),
+                    Src::Buf(sid) => {
+                        let (src_s, out_s) =
+                            two_muts(&mut pool.data, self.range_of(sid), out_r.clone());
+                        let x = self.map_of(sid, src_s);
+                        self.single_kernel(l, p, *layer, x, out_s)
+                    }
+                };
+                // Cross-span residual add from the stash slice.
+                if let Some(stash_id) = residual {
+                    let (st, o) = two_muts(&mut pool.data, self.range_of(*stash_id), out_r);
+                    for (a, b) in o.iter_mut().zip(st.iter()) {
+                        *a += *b;
+                    }
+                }
+                macs
+            }
+
+            Step::Fused { a, conv_end, src, bands, out, geom } => {
+                let block = FusedBlock::new(&self.model, *a, *conv_end, &self.params);
+                let depth = conv_end - a;
+                let bands_r = self.range_of(*bands);
+                let out_r = self.range_of(*out);
+                let (_, wo, co) = self.bufs[*out].dims;
+                let stats = match *src {
+                    Src::Input => {
+                        let (bands_s, out_s) = two_muts(&mut pool.data, bands_r, out_r);
+                        let cache = HCache::new(geom, bands_s, &mut pool.ranges[..depth + 1]);
+                        block.run_streaming_in(input, cache, |r, row| {
+                            out_s[r * wo * co..(r + 1) * wo * co]
+                                .copy_from_slice(&row[..wo * co]);
+                        })
+                    }
+                    Src::Buf(sid) => {
+                        let [src_s, bands_s, out_s] =
+                            three_muts(&mut pool.data, [self.range_of(sid), bands_r, out_r]);
+                        let x = self.map_of(sid, src_s);
+                        let cache = HCache::new(geom, bands_s, &mut pool.ranges[..depth + 1]);
+                        block.run_streaming_in(x, cache, |r, row| {
+                            out_s[r * wo * co..(r + 1) * wo * co]
+                                .copy_from_slice(&row[..wo * co]);
+                        })
+                    }
+                };
+                stats.macs
+            }
+
+            Step::FusedIter { a, conv_end, src, bands, geom, pool_acc, dense, logits } => {
+                let block = FusedBlock::new(&self.model, *a, *conv_end, &self.params);
+                let depth = conv_end - a;
+                let out_shape = self.model.output_of(*conv_end - 1);
+                let bands_r = self.range_of(*bands);
+                let acc_r = self.range_of(*pool_acc);
+
+                // Phase 1: stream final rows into the global-pool
+                // accumulator (same op order as GlobalPoolIter).
+                let mut macs = match *src {
+                    Src::Input => {
+                        let (bands_s, acc_s) =
+                            two_muts(&mut pool.data, bands_r, acc_r.clone());
+                        acc_s.fill(0.0);
+                        let cache = HCache::new(geom, bands_s, &mut pool.ranges[..depth + 1]);
+                        block
+                            .run_streaming_in(input, cache, |_r, row| {
+                                accumulate_row_major(&mut *acc_s, row);
+                            })
+                            .macs
+                    }
+                    Src::Buf(sid) => {
+                        let [src_s, bands_s, acc_s] = three_muts(
+                            &mut pool.data,
+                            [self.range_of(sid), bands_r, acc_r.clone()],
+                        );
+                        acc_s.fill(0.0);
+                        let x = self.map_of(sid, src_s);
+                        let cache = HCache::new(geom, bands_s, &mut pool.ranges[..depth + 1]);
+                        block
+                            .run_streaming_in(x, cache, |_r, row| {
+                                accumulate_row_major(&mut *acc_s, row);
+                            })
+                            .macs
+                    }
+                };
+                // finish(): the shared in-place scale — bit-identical to
+                // GlobalPoolIter::finish.
+                scale_avg(
+                    &mut pool.data[acc_r.clone()],
+                    out_shape.h as usize * out_shape.w as usize,
+                );
+                macs += out_shape.elems();
+
+                // Phase 2: iterative dense chain, one accumulator per
+                // trailing Dense layer (same order as DenseIter).
+                let mut prev_r = acc_r;
+                for &(li, acc_id) in dense {
+                    let p = &self.params[li];
+                    let dout = self.model.layers[li].cout as usize;
+                    let next_r = self.range_of(acc_id);
+                    let (x_s, y_s) = two_muts(&mut pool.data, prev_r.clone(), next_r.clone());
+                    dense_into(x_s, &p.weights, &p.bias, dout, y_s);
+                    macs += (x_s.len() * dout) as u64;
+                    prev_r = next_r;
+                }
+
+                // Phase 3: logits copy.
+                let (v_s, l_s) = two_muts(&mut pool.data, prev_r, self.range_of(*logits));
+                l_s.copy_from_slice(v_s);
+                macs
+            }
+        }
+    }
+
+    /// Single unfused layer through the allocation-free kernels — same
+    /// loops, same MAC accounting as the interpreted engine.
+    fn single_kernel(
+        &self,
+        l: &Layer,
+        p: &LayerParams,
+        li: usize,
+        x: MapRef<'_>,
+        out: &mut [f32],
+    ) -> u64 {
+        match l.kind {
+            LayerKind::Conv2d => {
+                conv2d_into(
+                    x,
+                    &p.weights,
+                    &p.bias,
+                    l.k as usize,
+                    l.stride as usize,
+                    l.padding as usize,
+                    l.cout as usize,
+                    l.act,
+                    out,
+                );
+                self.model.layer_macs(li)
+            }
+            LayerKind::DwConv2d => {
+                dwconv2d_into(
+                    x,
+                    &p.weights,
+                    &p.bias,
+                    l.k as usize,
+                    l.stride as usize,
+                    l.padding as usize,
+                    l.act,
+                    out,
+                );
+                self.model.layer_macs(li)
+            }
+            LayerKind::AvgPool => {
+                avg_pool2d_into(x, l.k as usize, l.stride as usize, out);
+                self.model.layer_macs(li)
+            }
+            LayerKind::MaxPool => {
+                max_pool2d_into(x, l.k as usize, l.stride as usize, out);
+                self.model.layer_macs(li)
+            }
+            LayerKind::GlobalAvgPool => {
+                global_avg_pool_into(x, out);
+                x.elems() as u64
+            }
+            LayerKind::Dense => {
+                dense_into(x.data, &p.weights, &p.bias, l.cout as usize, out);
+                self.model.layer_macs(li)
+            }
+        }
+    }
+}
+
+/// Two disjoint mutable slices out of one backing slice.
+fn two_muts(data: &mut [f32], a: Range<usize>, b: Range<usize>) -> (&mut [f32], &mut [f32]) {
+    if a.start <= b.start {
+        debug_assert!(a.end <= b.start, "pool ranges overlap");
+        let (l, r) = data.split_at_mut(b.start);
+        (&mut l[a.start..a.end], &mut r[..b.end - b.start])
+    } else {
+        let (bs, as_) = two_muts(data, b, a);
+        (as_, bs)
+    }
+}
+
+/// Three disjoint mutable slices out of one backing slice (any order).
+fn three_muts(data: &mut [f32], r: [Range<usize>; 3]) -> [&mut [f32]; 3] {
+    let mut idx = [0usize, 1, 2];
+    idx.sort_by_key(|&i| r[i].start);
+    let (lo, mid, hi) = (r[idx[0]].clone(), r[idx[1]].clone(), r[idx[2]].clone());
+    debug_assert!(lo.end <= mid.start && mid.end <= hi.start, "pool ranges overlap");
+    let (l, rest) = data.split_at_mut(mid.start);
+    let (m, h) = rest.split_at_mut(hi.start - mid.start);
+    let s_lo = &mut l[lo.start..lo.end];
+    let s_mid = &mut m[..mid.end - mid.start];
+    let s_hi = &mut h[..hi.end - hi.start];
+    let mut out: [Option<&mut [f32]>; 3] = [None, None, None];
+    out[idx[0]] = Some(s_lo);
+    out[idx[1]] = Some(s_mid);
+    out[idx[2]] = Some(s_hi);
+    out.map(|o| o.expect("all three slots assigned"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::Engine;
+    use crate::memory::Arena;
+    use crate::ops::ParamGen;
+    use crate::optimizer::{strategy, Constraints, Planner};
+    use crate::zoo;
+
+    fn rand_input(m: &ModelChain, seed: u64) -> Tensor {
+        let s = m.shapes[0];
+        Tensor::from_data(
+            s.h as usize,
+            s.w as usize,
+            s.c as usize,
+            ParamGen::new(seed).fill(s.elems() as usize, 2.0),
+        )
+    }
+
+    #[test]
+    fn compiled_is_bit_identical_to_interpreted() {
+        let m = zoo::quickstart();
+        let engine = Engine::new(m.clone());
+        let mut planner = Planner::for_model(m.clone());
+        let fused = planner.setting().unwrap();
+        let vanilla = planner
+            .plan_with(&strategy::Vanilla, Constraints::none())
+            .unwrap()
+            .setting;
+        let x = rand_input(&m, 21);
+        for setting in [vanilla, fused] {
+            let mut arena = Arena::unbounded();
+            let interp = engine.run(&setting, &x, &mut arena).unwrap();
+            let compiled = engine.compile(&setting);
+            let mut pool = compiled.make_pool();
+            let report = compiled.run(&x, &mut pool);
+            assert_eq!(report.output, interp.output, "{}", setting.describe());
+            assert_eq!(report.macs, interp.macs, "{}", setting.describe());
+            assert_eq!(report.peak_ram, interp.peak_ram, "{}", setting.describe());
+        }
+    }
+
+    #[test]
+    fn hot_path_performs_zero_allocations_after_compile() {
+        let m = zoo::tiny_cnn();
+        let setting = Planner::for_model(m.clone()).setting().unwrap();
+        let compiled = CompiledPlan::compile(m.clone(), setting);
+        let mut pool = compiled.make_pool();
+        let allocs0 = pool.storage_allocs();
+        let ptr0 = pool.storage_ptr();
+        let elems0 = pool.elems();
+        let x = rand_input(&m, 5);
+        let mut out = vec![0.0f32; compiled.output_len()];
+        let mut first: Option<Vec<f32>> = None;
+        for _ in 0..50 {
+            compiled.run_into(x.as_map(), &mut pool, &mut out);
+            match &first {
+                None => first = Some(out.clone()),
+                Some(f) => assert_eq!(&out, f, "warm pool reuse changed the output"),
+            }
+        }
+        assert_eq!(pool.storage_allocs(), allocs0, "hot path allocated");
+        assert_eq!(pool.storage_ptr(), ptr0, "pool storage moved");
+        assert_eq!(pool.elems(), elems0, "pool storage resized");
+    }
+
+    #[test]
+    fn pool_layout_is_consistent() {
+        let m = zoo::kws_cnn();
+        let setting = Planner::for_model(m.clone()).setting().unwrap();
+        let compiled = CompiledPlan::compile(m, setting);
+        let layout = compiled.layout();
+        assert!(layout.pool_bytes >= layout.watermark);
+        // Lifetime-overlapping buffers never overlap in pool space.
+        for (i, a) in layout.buffers.iter().enumerate() {
+            for b in layout.buffers.iter().skip(i + 1) {
+                let live = a.birth < b.death && b.birth < a.death;
+                let space = a.offset < b.offset + b.bytes && b.offset < a.offset + a.bytes;
+                assert!(!(live && space), "'{}' and '{}' collide", a.label, b.label);
+            }
+        }
+    }
+
+    #[test]
+    fn residual_model_compiles_and_matches() {
+        let m = zoo::mcunet_vww5();
+        let engine = Engine::new(m.clone());
+        let setting = Planner::for_model(m.clone()).setting().unwrap();
+        let x = rand_input(&m, 9);
+        let mut arena = Arena::unbounded();
+        let interp = engine.run(&setting, &x, &mut arena).unwrap();
+        let compiled = engine.compile(&setting);
+        let mut pool = compiled.make_pool();
+        let report = compiled.run(&x, &mut pool);
+        assert_eq!(report.output, interp.output);
+        assert_eq!(report.macs, interp.macs);
+        assert_eq!(compiled.measured_peak(), interp.peak_ram);
+    }
+}

@@ -117,7 +117,6 @@ impl Engine {
         arena: &mut Arena,
     ) -> Result<RunReport, OomError> {
         assert_eq!(input.shape(), self.model.shapes[0], "input shape mismatch");
-        let eb = self.model.elem_bytes as u64;
         let mut spans_out = Vec::new();
         let mut total_macs = 0u64;
 
@@ -140,56 +139,26 @@ impl Engine {
             let fused = b - a > 1;
             let mut span_macs = 0u64;
 
-            // Stash the current tensor if a later layer skips from here.
-            if self
-                .model
-                .layers
-                .iter()
-                .enumerate()
-                .any(|(j, l)| l.residual_from == Some(a) && (j >= b || !fused) && j >= a)
-            {
-                // Only needed when the skip crosses span boundaries; skips
-                // inside one fused span are handled by the block executor.
-                let crosses = self
-                    .model
-                    .layers
-                    .iter()
-                    .enumerate()
-                    .any(|(j, l)| l.residual_from == Some(a) && !(fused && j < b));
-                if crosses {
-                    let id = arena.alloc(self.model.tensor_bytes(a), format!("stash:v{a}"))?;
-                    stash[a] = Some((cur.clone(), id));
-                }
+            // Stash the current tensor if a later layer skips from here
+            // across a span boundary (skips inside one fused span are
+            // handled by the block executor) — the predicate is shared
+            // with the compile-time schedule replay
+            // (`memory::schedule_intervals`), which must mirror this walk
+            // tick for tick.
+            if crate::memory::stash_needed(&self.model, a, b, fused) {
+                let id = arena.alloc(self.model.tensor_bytes(a), format!("stash:v{a}"))?;
+                stash[a] = Some((cur.clone(), id));
             }
 
             if fused {
                 // With an iterative tail the edge jumps to the output node;
                 // the conv pyramid itself ends at the GlobalAvgPool index.
-                let conv_end = if iter_tail {
-                    (a..b)
-                        .find(|&i| {
-                            matches!(self.model.layers[i].kind, LayerKind::GlobalAvgPool)
-                        })
-                        .expect("iterative-tail edge without GlobalAvgPool")
-                } else {
-                    b
-                };
+                let conv_end = crate::memory::conv_end_of(&self.model, a, b, iter_tail);
                 let block = FusedBlock::new(&self.model, a, conv_end, &self.params);
-                // Band buffers live for the whole block.
-                let band_bytes: u64 = {
-                    // Account band bytes analytically-equivalently: actual
-                    // preallocated band buffer elements × elem size.
-                    let t = crate::fusion::band_heights(&self.model, a, conv_end, 1);
-                    (0..conv_end - a)
-                        .map(|idx| {
-                            let s = self.model.input_of(a + idx);
-                            t[idx] as u64 * s.w as u64 * s.c as u64 * eb
-                        })
-                        .sum::<u64>()
-                        + self.model.output_of(conv_end - 1).w as u64
-                            * self.model.output_of(conv_end - 1).c as u64
-                            * eb
-                };
+                // Band buffers live for the whole block; accounted
+                // analytically-equivalently (preallocated band elements ×
+                // elem size — same shared formula as the schedule replay).
+                let band_bytes = crate::memory::band_sizes(&self.model, a, conv_end).0;
                 let band_alloc = arena.alloc(band_bytes, format!("bands:{a}..{conv_end}"))?;
 
                 if iter_tail {
@@ -203,7 +172,7 @@ impl Engine {
                     );
                     let pool_alloc = arena.alloc(4 * out_shape.c as u64, "iter-pool-acc")?;
                     let stats = block.run_streaming(&cur, |_r, row| {
-                        pool.push_rows(row);
+                        pool.push_row_major(row);
                     });
                     span_macs += stats.macs + out_shape.elems();
                     let mut vec_act = pool.finish();
@@ -350,6 +319,20 @@ impl Engine {
             macs: total_macs,
             spans: spans_out,
         })
+    }
+
+    /// One-time compilation of `setting` for this engine's model and
+    /// parameters: a static step list plus an offset-assigned pool, after
+    /// which every inference is allocation-free
+    /// ([`crate::exec::CompiledPlan::run_into`]) and bit-identical to
+    /// [`Engine::run`]. The interpreted `run` stays as the
+    /// budget-enforcing, arena-traced parity oracle.
+    pub fn compile(&self, setting: &FusionSetting) -> crate::exec::CompiledPlan {
+        crate::exec::CompiledPlan::with_params(
+            self.model.clone(),
+            self.params.clone(),
+            setting.clone(),
+        )
     }
 
     /// Run the vanilla (unfused) path — convenience for comparisons.

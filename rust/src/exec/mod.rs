@@ -1,6 +1,17 @@
-//! Plan executor: runs a [`FusionSetting`] end-to-end with numerics +
-//! tracked RAM — the measurement half of the reproduction.
+//! Plan executors: the measurement half of the reproduction, two ways.
+//!
+//! * [`Engine`] — the **interpreted** executor: re-walks the
+//!   [`crate::optimizer::FusionSetting`] per run with every buffer routed
+//!   through the tracking [`crate::memory::Arena`] (budget enforcement,
+//!   alloc traces, OOM cells). The parity oracle.
+//! * [`CompiledPlan`] — the **compile-once** executor: the setting is
+//!   lowered once to a static step list + offset-assigned pool
+//!   ([`crate::memory::plan_layout`]), then every run is allocation-free
+//!   inside a warm [`PlanPool`] and bit-identical to the interpreter.
+//!   The serving hot path.
 
+mod compiled;
 mod engine;
 
+pub use compiled::{CompiledPlan, PlanPool};
 pub use engine::{Engine, RunReport, SpanStat};

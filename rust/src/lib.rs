@@ -10,11 +10,11 @@
 //!   inverted dataflow DAG ([`graph`]), the [`optimizer::Planner`]
 //!   pipeline over interchangeable [`optimizer::PlanStrategy`] solvers
 //!   (P1/P2 and the §8 baselines), a pure-Rust patch-based executor with
-//!   RAM tracking ([`ops`], [`memory`], [`exec`]), an MCU board/latency
-//!   simulator ([`mcu`]), the artifact runtime ([`runtime`]), the
-//!   [`backend::InferBackend`] trait unifying both executors, a
-//!   multi-model serving coordinator ([`coordinator`]), and the paper's
-//!   table/figure renderers ([`report`]).
+//!   RAM tracking plus its compile-once form ([`ops`], [`memory`],
+//!   [`exec`]), an MCU board/latency simulator ([`mcu`]), the artifact
+//!   runtime ([`runtime`]), the [`backend::InferBackend`] trait unifying
+//!   the executors, a multi-model serving coordinator ([`coordinator`]),
+//!   and the paper's table/figure renderers ([`report`]).
 //! * **L2/L1 (build-time Python)** — `python/compile/`: a JAX model whose
 //!   hot ops are Pallas kernels (patch-based fused pyramid, iterative
 //!   pooling/dense), AOT-lowered to HLO text in `artifacts/`.
@@ -73,6 +73,45 @@
 //! // artifact for a registry to serve.
 //! let lat = plan.latency.as_ref().unwrap();
 //! println!("{}: {:.1} ms on {}", plan.model, lat.estimate_ms, lat.board);
+//! ```
+//!
+//! ## Compile-then-serve: allocation-free execution plans
+//!
+//! A plan is decided once and then executed on a fixed memory budget —
+//! the MCU deployment model. The serving path mirrors it end to end:
+//!
+//! ```text
+//! Planner ──▶ Plan (JSON: setting + costs + pool layout)
+//!                 │
+//!                 ▼ compile once (connect() / Engine::compile)
+//!            CompiledPlan: static step list + offset-assigned pool
+//!                 │
+//!                 ▼ run many (PlanPool, warm)
+//!            allocation-free inference, bit-identical to exec::Engine
+//! ```
+//!
+//! [`exec::CompiledPlan`] replays the span walk once
+//! ([`memory::schedule_intervals`]) to derive every buffer lifetime —
+//! band pyramids, iterative-tail accumulators, residual stashes, logits —
+//! and offset-assigns them into one static pool
+//! ([`memory::assign_offsets`]); the layout is recorded in the serialized
+//! [`optimizer::Plan`] (`pool`), so a deploy artifact fully describes its
+//! memory map. The interpreted [`exec::Engine`] remains the
+//! budget-enforcing, arena-traced parity oracle:
+//!
+//! ```no_run
+//! use msf_cnn::exec::Engine;
+//! use msf_cnn::ops::Tensor;
+//! use msf_cnn::optimizer::Planner;
+//! use msf_cnn::zoo;
+//!
+//! let m = zoo::quickstart();
+//! let setting = Planner::for_model(m.clone()).setting().unwrap();
+//! let compiled = Engine::new(m).compile(&setting);   // compile once
+//! let mut pool = compiled.make_pool();               // the only allocation
+//! let x = Tensor::zeros(32, 32, 3);
+//! let report = compiled.run(&x, &mut pool);          // allocation-free
+//! println!("peak {} B in a {} B pool", report.peak_ram, compiled.pool_bytes());
 //! ```
 //!
 //! ## Scaling surfaces

@@ -4,6 +4,7 @@
 //! msfcnn zoo [--model NAME]
 //! msfcnn optimize --model NAME [--f-max F|inf | --p-max-kb N]
 //!                 [--latency-budget MS [--board B]] [--baselines]
+//! msfcnn infer --plan FILE [--input FILE | --seed N]
 //! msfcnn simulate --model NAME [--f-max F|inf | --p-max-kb N] [--board B]
 //! msfcnn tables [--which 1|2|3|5|5j|fig2|fig3|fig4|all]
 //! msfcnn registry scan [--dir DIR]
@@ -32,6 +33,7 @@ USAGE:
   msfcnn zoo [--model NAME]
   msfcnn optimize --model NAME [--f-max F|inf | --p-max-kb N] [--baselines] [--save FILE]
   msfcnn optimize --model NAME --latency-budget MS [--board BOARD] [--p-max-kb N] [--save FILE]
+  msfcnn infer --plan FILE [--input FILE | --seed N]
   msfcnn simulate --model NAME [--f-max F|inf | --p-max-kb N] [--board BOARD] [--trace]
   msfcnn tables [--which 1|2|3|5|5j|fig2|fig3|fig4|all]
   msfcnn registry scan [--dir DIR]
@@ -221,6 +223,79 @@ fn main() -> Result<()> {
             if let Some(path) = args.get("save") {
                 plan.save(path)?;
                 println!("plan written to {path}");
+            }
+        }
+        "infer" => {
+            // Single-shot inference of a saved plan through the compiled
+            // (allocation-free) path: compile once, run once, report the
+            // analytic vs measured memory story.
+            let path = args
+                .get("plan")
+                .ok_or_else(|| anyhow!("--plan FILE required\n\n{USAGE}"))?;
+            let plan = Plan::load(path)?;
+            let model = zoo::by_name(&plan.model)
+                .ok_or_else(|| anyhow!("plan model '{}' not in zoo", plan.model))?;
+            let shape = model.shapes[0];
+            let n = shape.elems() as usize;
+            let data: Vec<f32> = match args.get("input") {
+                Some(f) => {
+                    let text = std::fs::read_to_string(f)
+                        .map_err(|e| anyhow!("reading --input {f}: {e}"))?;
+                    let vals: Vec<f32> = text
+                        .split(|c: char| c.is_whitespace() || matches!(c, ',' | '[' | ']'))
+                        .filter(|s| !s.is_empty())
+                        .map(|s| {
+                            s.parse::<f32>().map_err(|e| anyhow!("bad input value '{s}': {e}"))
+                        })
+                        .collect::<Result<_>>()?;
+                    if vals.len() != n {
+                        bail!(
+                            "--input has {} values; model '{}' expects {n} ({shape})",
+                            vals.len(),
+                            plan.model
+                        );
+                    }
+                    vals
+                }
+                None => {
+                    let seed = args.get_usize("seed", 42)? as u64;
+                    ParamGen::new(seed).fill(n, 2.0)
+                }
+            };
+            println!("{}", plan.describe());
+            let engine = Engine::new(model.clone());
+            let t_compile = std::time::Instant::now();
+            let compiled = engine.compile(&plan.setting);
+            let mut pool = compiled.make_pool();
+            let compile_ms = t_compile.elapsed().as_secs_f64() * 1e3;
+            let input = Tensor::from_data(
+                shape.h as usize,
+                shape.w as usize,
+                shape.c as usize,
+                data,
+            );
+            let t_run = std::time::Instant::now();
+            let r = compiled.run(&input, &mut pool);
+            let run_ms = t_run.elapsed().as_secs_f64() * 1e3;
+            let k = r.output.len().min(10);
+            println!("logits[..{k}] = {:?}", &r.output[..k]);
+            println!(
+                "analytic peak {:.3} kB (Eq. 5-6) | measured pool peak {:.3} kB | static pool {:.3} kB",
+                report::kb(plan.cost().peak_ram),
+                report::kb(r.peak_ram),
+                report::kb(compiled.pool_bytes()),
+            );
+            println!(
+                "{} MACs | compile {compile_ms:.2} ms, run {run_ms:.2} ms",
+                r.macs
+            );
+            if let Some(p) = &plan.pool {
+                println!(
+                    "plan memory map: {} buffers in a {} B pool (watermark {} B)",
+                    p.buffers.len(),
+                    p.pool_bytes,
+                    p.watermark
+                );
             }
         }
         "simulate" => {

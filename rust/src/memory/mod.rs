@@ -8,7 +8,11 @@
 
 mod planner;
 
-pub use planner::{plan_pool, PlannedBuffer, PoolPlan};
+pub use planner::{
+    assign_offsets, layout_from_schedule, max_concurrent, plan_layout, plan_pool,
+    schedule_intervals, BufRole, PlannedBuffer, PoolBuffer, PoolLayout, PoolPlan, ScheduledBuf,
+};
+pub(crate) use planner::{band_sizes, conv_end_of, stash_needed};
 
 use std::collections::HashMap;
 

@@ -1,16 +1,28 @@
-//! Scheduling-based memory planner — the §10 "Memory Optimization for CNN
-//! layers" baseline family (TinyEngine / vMCU / MoDeL): reuse one RAM pool
-//! across tensor lifetimes by offset assignment, **without** changing the
-//! execution order or tiling. The paper's contrast: such planners "still
-//! generate a complete output tensor for each layer", so their floor is
-//! the largest I+O pair — exactly where patch-based fusion keeps winning.
+//! Scheduling-based memory planner: offset assignment of buffer lifetimes
+//! into one reused RAM pool.
 //!
-//! Greedy best-fit offset assignment over lifetime intervals (the classic
-//! offset-calculation heuristic).
+//! Two planning surfaces share the same greedy best-fit allocator
+//! ([`assign_offsets`]):
+//!
+//! * [`plan_pool`] — the §10 "Memory Optimization for CNN layers" baseline
+//!   family (TinyEngine / vMCU / MoDeL): vanilla execution, boundary
+//!   tensors only, **without** changing execution order or tiling. The
+//!   paper's contrast: such planners "still generate a complete output
+//!   tensor for each layer", so their floor is the largest I+O pair —
+//!   exactly where patch-based fusion keeps winning.
+//! * [`plan_layout`] — the compile-once generalization: the **full fused
+//!   schedule** of a [`FusionSetting`] (band-buffer pyramids,
+//!   iterative-tail accumulators, residual stashes, logits), with lifetime
+//!   intervals derived from a tick-accurate replay of the executor's span
+//!   walk ([`schedule_intervals`]). Its `watermark` reproduces the
+//!   interpreted engine's arena high-water mark event for event, and its
+//!   `pool_bytes` is the static pool a deploy artifact bakes in
+//!   ([`crate::optimizer::Plan`] serializes the layout).
 
-use crate::model::ModelChain;
+use crate::model::{LayerKind, ModelChain};
+use crate::optimizer::FusionSetting;
 
-/// One planned buffer: the boundary tensor `v_i`.
+/// One planned buffer: the boundary tensor `v_i` (vanilla [`plan_pool`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PlannedBuffer {
     pub tensor: usize,
@@ -30,7 +42,8 @@ pub struct PoolPlan {
 
 /// Lifetime of boundary tensor `v_i` in layer steps: born when produced
 /// (step `i-1`; the input is born at step 0), dies after its last
-/// consumer (layer `i`, or a later residual add).
+/// consumer (layer `i` — clamped to the final layer step for the output
+/// tensor — or a later residual add).
 fn lifetime(model: &ModelChain, i: usize) -> (usize, usize) {
     let birth = i.saturating_sub(1);
     let mut death = i.min(model.num_layers() - 1);
@@ -42,29 +55,31 @@ fn lifetime(model: &ModelChain, i: usize) -> (usize, usize) {
     (birth, death)
 }
 
-/// Plan the vanilla execution of `model` into a single reused pool.
-pub fn plan_pool(model: &ModelChain) -> PoolPlan {
-    let n = model.num_layers();
-    // Tensors v_0..v_n with sizes and lifetimes.
-    let mut tensors: Vec<(usize, u64, usize, usize)> = (0..=n)
-        .map(|i| {
-            let (b, d) = lifetime(model, i);
-            (i, model.tensor_bytes(i), b, d)
-        })
-        .collect();
-    // Classic heuristic: place big tensors first.
-    tensors.sort_by(|a, b| b.1.cmp(&a.1));
+/// Greedy big-first best-fit offset assignment over half-open lifetime
+/// intervals `(bytes, birth, death)` (the classic offset-calculation
+/// heuristic). Returns each item's offset (input order) and the total
+/// pool size. Two items whose intervals overlap never overlap in space.
+pub fn assign_offsets(items: &[(u64, usize, usize)]) -> (Vec<u64>, u64) {
+    let mut order: Vec<usize> = (0..items.len()).collect();
+    // Big tensors first; stable on ties by original index.
+    order.sort_by(|&x, &y| items[y].0.cmp(&items[x].0).then(x.cmp(&y)));
 
-    let mut placed: Vec<PlannedBuffer> = Vec::new();
-    for (tensor, bytes, birth, death) in tensors {
+    let mut offsets = vec![0u64; items.len()];
+    let mut placed: Vec<usize> = Vec::new();
+    let mut total = 0u64;
+    for &i in &order {
+        let (bytes, birth, death) = items[i];
         if bytes == 0 {
             continue;
         }
-        // Collect forbidden intervals from overlapping-lifetime buffers.
+        // Forbidden intervals from lifetime-overlapping placed buffers.
         let mut overlaps: Vec<(u64, u64)> = placed
             .iter()
-            .filter(|p| !(p.death < birth || death < p.birth))
-            .map(|p| (p.offset, p.offset + p.bytes))
+            .filter(|&&j| {
+                let (_, jb, jd) = items[j];
+                jb < death && birth < jd
+            })
+            .map(|&j| (offsets[j], offsets[j] + items[j].0))
             .collect();
         overlaps.sort();
         // First gap that fits (best-fit on a sorted free list).
@@ -75,10 +90,443 @@ pub fn plan_pool(model: &ModelChain) -> PoolPlan {
             }
             offset = offset.max(hi);
         }
-        placed.push(PlannedBuffer { tensor, offset, bytes, birth, death });
+        offsets[i] = offset;
+        total = total.max(offset + bytes);
+        placed.push(i);
     }
-    let pool_bytes = placed.iter().map(|p| p.offset + p.bytes).max().unwrap_or(0);
-    PoolPlan { buffers: placed, pool_bytes }
+    (offsets, total)
+}
+
+/// Max concurrent footprint of half-open `(bytes, birth, death)` intervals
+/// — the watermark any offset assignment is lower-bounded by.
+pub fn max_concurrent(items: &[(u64, usize, usize)]) -> u64 {
+    let mut events: Vec<(usize, i64)> = Vec::with_capacity(items.len() * 2);
+    for &(bytes, birth, death) in items {
+        if bytes == 0 {
+            continue;
+        }
+        events.push((birth, bytes as i64));
+        events.push((death, -(bytes as i64)));
+    }
+    // Frees sort before allocs at the same tick (negative delta first).
+    events.sort();
+    let mut live = 0i64;
+    let mut peak = 0i64;
+    for (_, delta) in events {
+        live += delta;
+        peak = peak.max(live);
+    }
+    peak as u64
+}
+
+/// Plan the vanilla execution of `model` into a single reused pool.
+pub fn plan_pool(model: &ModelChain) -> PoolPlan {
+    let n = model.num_layers();
+    // Tensors v_0..v_n with sizes and (inclusive) lifetimes.
+    let tensors: Vec<(usize, u64, usize, usize)> = (0..=n)
+        .map(|i| {
+            let (b, d) = lifetime(model, i);
+            (i, model.tensor_bytes(i), b, d)
+        })
+        .collect();
+    let items: Vec<(u64, usize, usize)> =
+        tensors.iter().map(|&(_, bytes, b, d)| (bytes, b, d + 1)).collect();
+    let (offsets, pool_bytes) = assign_offsets(&items);
+    let buffers = tensors
+        .iter()
+        .enumerate()
+        .filter(|&(_, &(_, bytes, _, _))| bytes > 0)
+        .map(|(idx, &(tensor, bytes, birth, death))| PlannedBuffer {
+            tensor,
+            offset: offsets[idx],
+            bytes,
+            birth,
+            death,
+        })
+        .collect();
+    PoolPlan { buffers, pool_bytes }
+}
+
+/// What a scheduled buffer *is* in the fused execution timeline — the key
+/// the compiled executor uses to wire steps to pool slices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BufRole {
+    /// Materialized model input `v_0` (only when the first span is a
+    /// single layer; fused heads stream the input).
+    Input,
+    /// Boundary tensor `v_tensor` produced by a span.
+    Boundary { tensor: usize },
+    /// Band-buffer pyramid of the fused span whose conv pyramid covers
+    /// layers `[a, b)`.
+    Bands { a: usize, b: usize },
+    /// Residual stash of boundary tensor `v_tensor` held across spans.
+    Stash { tensor: usize },
+    /// Iterative-tail global-pool accumulator of span `span`.
+    PoolAcc { span: usize },
+    /// Iterative-tail dense accumulator of model layer `layer`.
+    DenseAcc { layer: usize },
+    /// Final logits vector of an iterative-tail span.
+    Logits,
+}
+
+/// One buffer of the fused schedule with its lifetime interval.
+///
+/// `bytes`/`[birth, death)` follow the **accounting** convention of the
+/// tracking [`crate::memory::Arena`] (int8-element boundary/band sizing,
+/// 4-byte accumulators) — tick-for-tick the interpreted engine's
+/// alloc/free order, so `max_concurrent` over them equals the engine's
+/// measured arena peak. `elems`/`[birth, rt_death)` describe the f32
+/// **runtime storage** the compiled executor actually reserves
+/// (`rt_death >= death`: the iterative-tail chain reads each accumulator
+/// while the accounting has already moved on).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ScheduledBuf {
+    pub role: BufRole,
+    pub label: String,
+    /// Accounting bytes (Arena / Eq. 5–6 convention).
+    pub bytes: u64,
+    /// Runtime f32 element count.
+    pub elems: usize,
+    /// Runtime view dims `(h, w, c)`; vectors are `(1, 1, len)`, band
+    /// pyramids `(1, 1, elems)` (sub-shaped by [`crate::ops::BandGeom`]).
+    pub dims: (usize, usize, usize),
+    /// Allocation tick.
+    pub birth: usize,
+    /// Accounting free tick (exclusive).
+    pub death: usize,
+    /// Runtime free tick (exclusive, `>= death`).
+    pub rt_death: usize,
+}
+
+fn alloc_buf(
+    bufs: &mut Vec<ScheduledBuf>,
+    tick: &mut usize,
+    role: BufRole,
+    label: String,
+    bytes: u64,
+    dims: (usize, usize, usize),
+) -> usize {
+    let id = bufs.len();
+    bufs.push(ScheduledBuf {
+        role,
+        label,
+        bytes,
+        elems: dims.0 * dims.1 * dims.2,
+        dims,
+        birth: *tick,
+        death: usize::MAX,
+        rt_death: usize::MAX,
+    });
+    *tick += 1;
+    id
+}
+
+fn free_buf(bufs: &mut [ScheduledBuf], tick: &mut usize, id: usize) {
+    bufs[id].death = *tick;
+    *tick += 1;
+}
+
+/// Whether span `[a, b)` stashes `v_a` at its start: some later layer
+/// skips from `a` and the skip crosses a span boundary (skips inside one
+/// fused span are handled by the block executor). The **single** copy of
+/// the predicate the interpreted engine, the schedule replay, and the
+/// step compiler all share — drift here would silently desynchronize the
+/// pool layout from execution.
+pub(crate) fn stash_needed(model: &ModelChain, a: usize, b: usize, fused: bool) -> bool {
+    let wanted = model
+        .layers
+        .iter()
+        .enumerate()
+        .any(|(j, l)| l.residual_from == Some(a) && (j >= b || !fused) && j >= a);
+    wanted
+        && model
+            .layers
+            .iter()
+            .enumerate()
+            .any(|(j, l)| l.residual_from == Some(a) && !(fused && j < b))
+}
+
+/// End of the conv pyramid of fused span `[a, b)`: the GlobalAvgPool
+/// index for an iterative-tail span (§7), `b` otherwise. Panics on an
+/// iterative-tail span without a GlobalAvgPool (malformed setting).
+pub(crate) fn conv_end_of(model: &ModelChain, a: usize, b: usize, iter_tail: bool) -> usize {
+    if iter_tail {
+        (a..b)
+            .find(|&i| matches!(model.layers[i].kind, LayerKind::GlobalAvgPool))
+            .expect("iterative-tail edge without GlobalAvgPool")
+    } else {
+        b
+    }
+}
+
+/// Band-pyramid sizes of fused span `[a, conv_end)`:
+/// `(accounting bytes, f32 storage elements)` — per-layer input bands
+/// (heights from the Eq. 11 recursion) plus the one-row output band.
+/// Accounting uses `elem_bytes` sizing, matching the engine's single
+/// `bands:` arena allocation.
+pub(crate) fn band_sizes(model: &ModelChain, a: usize, conv_end: usize) -> (u64, usize) {
+    let eb = model.elem_bytes as u64;
+    let t = crate::fusion::band_heights(model, a, conv_end, 1);
+    let mut bytes = 0u64;
+    let mut elems = 0usize;
+    for (idx, &rows) in t.iter().enumerate() {
+        let s = model.input_of(a + idx);
+        bytes += rows as u64 * s.w as u64 * s.c as u64 * eb;
+        elems += rows as usize * s.w as usize * s.c as usize;
+    }
+    let os = model.output_of(conv_end - 1);
+    bytes += os.w as u64 * os.c as u64 * eb;
+    elems += os.w as usize * os.c as usize;
+    (bytes, elems)
+}
+
+/// Replay `setting`'s span walk as a tick sequence of buffer allocations
+/// and frees — the lifetime oracle both [`plan_layout`] (accounting) and
+/// the compiled executor (runtime storage) consume. The event order
+/// mirrors [`crate::exec::Engine::run`] exactly, so the accounting
+/// watermark reconciles with the interpreted engine's measured peak.
+pub fn schedule_intervals(model: &ModelChain, setting: &FusionSetting) -> Vec<ScheduledBuf> {
+    let n = model.num_layers();
+    let mut bufs: Vec<ScheduledBuf> = Vec::new();
+    let mut tick = 0usize;
+
+    let map_dims = |i: usize| {
+        let s = model.shapes[i];
+        (s.h as usize, s.w as usize, s.c as usize)
+    };
+
+    let first_fused = setting.spans.first().map(|&(a, b, _)| b - a > 1).unwrap_or(false);
+    let mut cur: Option<usize> = None;
+    if !first_fused {
+        cur = Some(alloc_buf(
+            &mut bufs,
+            &mut tick,
+            BufRole::Input,
+            "v0:input".to_string(),
+            model.tensor_bytes(0),
+            map_dims(0),
+        ));
+    }
+
+    let mut stash: Vec<Option<usize>> = vec![None; n + 1];
+
+    for (si, &(a, b, iter_tail)) in setting.spans.iter().enumerate() {
+        let fused = b - a > 1;
+
+        // Stash the current tensor if a later layer skips from here —
+        // same decision (and tick position) as the engine.
+        if stash_needed(model, a, b, fused) {
+            stash[a] = Some(alloc_buf(
+                &mut bufs,
+                &mut tick,
+                BufRole::Stash { tensor: a },
+                format!("stash:v{a}"),
+                model.tensor_bytes(a),
+                map_dims(a),
+            ));
+        }
+
+        if fused {
+            let conv_end = conv_end_of(model, a, b, iter_tail);
+            // Band pyramid: analytically-equivalent accounting (same
+            // formula as the engine's single `bands:` allocation).
+            let (band_bytes, band_elems) = band_sizes(model, a, conv_end);
+            let os = model.output_of(conv_end - 1);
+            let bands = alloc_buf(
+                &mut bufs,
+                &mut tick,
+                BufRole::Bands { a, b: conv_end },
+                format!("bands:{a}..{conv_end}"),
+                band_bytes,
+                (1, 1, band_elems),
+            );
+
+            if iter_tail {
+                let gp = conv_end;
+                let c_last = os.c as usize;
+                let pool_acc = alloc_buf(
+                    &mut bufs,
+                    &mut tick,
+                    BufRole::PoolAcc { span: si },
+                    "iter-pool-acc".to_string(),
+                    4 * c_last as u64,
+                    (1, 1, c_last),
+                );
+                free_buf(&mut bufs, &mut tick, pool_acc);
+                let mut accs = vec![pool_acc];
+                for li in gp + 1..b {
+                    let dout = model.layers[li].cout as usize;
+                    let acc = alloc_buf(
+                        &mut bufs,
+                        &mut tick,
+                        BufRole::DenseAcc { layer: li },
+                        format!("iter-dense:{li}"),
+                        4 * dout as u64,
+                        (1, 1, dout),
+                    );
+                    free_buf(&mut bufs, &mut tick, acc);
+                    accs.push(acc);
+                }
+                if let Some(c) = cur.take() {
+                    free_buf(&mut bufs, &mut tick, c);
+                }
+                free_buf(&mut bufs, &mut tick, bands);
+                let c_final = model.output_of(b - 1).c as usize;
+                let logits = alloc_buf(
+                    &mut bufs,
+                    &mut tick,
+                    BufRole::Logits,
+                    "logits".to_string(),
+                    4 * c_final as u64,
+                    (1, 1, c_final),
+                );
+                // Runtime: the accumulator chain is read back (pool acc ->
+                // dense -> ... -> logits copy) after its accounting frees,
+                // so its storage must survive until the logits exist.
+                let extend = bufs[logits].birth + 1;
+                for id in accs {
+                    bufs[id].rt_death = extend;
+                }
+                cur = Some(logits);
+            } else {
+                let out = alloc_buf(
+                    &mut bufs,
+                    &mut tick,
+                    BufRole::Boundary { tensor: b },
+                    format!("v{b}"),
+                    model.tensor_bytes(b),
+                    map_dims(b),
+                );
+                if let Some(c) = cur.take() {
+                    free_buf(&mut bufs, &mut tick, c);
+                }
+                free_buf(&mut bufs, &mut tick, bands);
+                cur = Some(out);
+            }
+        } else {
+            // Single layer.
+            let li = a;
+            let l = &model.layers[li];
+            let (bytes, dims, label) = match l.kind {
+                LayerKind::GlobalAvgPool => {
+                    (4 * l.cout as u64, (1, 1, l.cout as usize), format!("v{b}:gap"))
+                }
+                LayerKind::Dense => {
+                    (4 * l.cout as u64, (1, 1, l.cout as usize), format!("v{b}:fc"))
+                }
+                _ => (model.tensor_bytes(b), map_dims(b), format!("v{b}")),
+            };
+            let out = alloc_buf(
+                &mut bufs,
+                &mut tick,
+                BufRole::Boundary { tensor: b },
+                label,
+                bytes,
+                dims,
+            );
+            if let Some(src) = l.residual_from {
+                if let Some(sid) = stash[src].take() {
+                    free_buf(&mut bufs, &mut tick, sid);
+                }
+            }
+            if let Some(c) = cur.take() {
+                free_buf(&mut bufs, &mut tick, c);
+            }
+            cur = Some(out);
+        }
+    }
+
+    if let Some(c) = cur.take() {
+        free_buf(&mut bufs, &mut tick, c);
+    }
+    // Any leftover stash (skip whose consumer was inside a fused span).
+    for sid in stash.into_iter().flatten() {
+        free_buf(&mut bufs, &mut tick, sid);
+    }
+
+    for buf in bufs.iter_mut() {
+        debug_assert_ne!(buf.death, usize::MAX, "buffer never freed: {}", buf.label);
+        if buf.rt_death == usize::MAX {
+            buf.rt_death = buf.death;
+        } else {
+            buf.rt_death = buf.rt_death.max(buf.death);
+        }
+    }
+    bufs
+}
+
+/// One buffer of a serialized pool layout.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PoolBuffer {
+    pub label: String,
+    pub offset: u64,
+    pub bytes: u64,
+    /// Alive during ticks `[birth, death)` of the schedule replay.
+    pub birth: usize,
+    pub death: usize,
+}
+
+/// The static pool layout of a fused schedule: offset-assigned buffers,
+/// the pool size, and the max concurrent footprint (== the interpreted
+/// engine's measured arena peak for the same setting). Serialized into
+/// [`crate::optimizer::Plan`] so a deploy artifact fully describes its
+/// memory map.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PoolLayout {
+    pub buffers: Vec<PoolBuffer>,
+    pub pool_bytes: u64,
+    pub watermark: u64,
+}
+
+impl PoolLayout {
+    /// First pair of buffers that are alive at the same tick **and**
+    /// overlap in pool space — `None` for a sound layout. Layouts built
+    /// by [`assign_offsets`] are collision-free by construction; this is
+    /// the integrity check for layouts read back from disk
+    /// ([`crate::optimizer::Plan::validate`]).
+    pub fn collision(&self) -> Option<(&PoolBuffer, &PoolBuffer)> {
+        for (i, a) in self.buffers.iter().enumerate() {
+            for b in self.buffers.iter().skip(i + 1) {
+                let live = a.birth < b.death && b.birth < a.death;
+                let space = a.offset < b.offset + b.bytes && b.offset < a.offset + a.bytes;
+                if live && space {
+                    return Some((a, b));
+                }
+            }
+        }
+        None
+    }
+}
+
+/// Offset-assign a schedule's accounting intervals into one static pool —
+/// the **single** layout builder behind both the serialized
+/// [`crate::optimizer::Plan`] memory map and
+/// [`crate::exec::CompiledPlan`]'s accounting layout (the two must stay
+/// byte-identical).
+pub fn layout_from_schedule(sched: &[ScheduledBuf]) -> PoolLayout {
+    let items: Vec<(u64, usize, usize)> =
+        sched.iter().map(|s| (s.bytes, s.birth, s.death)).collect();
+    let (offsets, pool_bytes) = assign_offsets(&items);
+    let watermark = max_concurrent(&items);
+    let buffers = sched
+        .iter()
+        .zip(&offsets)
+        .filter(|(s, _)| s.bytes > 0)
+        .map(|(s, &offset)| PoolBuffer {
+            label: s.label.clone(),
+            offset,
+            bytes: s.bytes,
+            birth: s.birth,
+            death: s.death,
+        })
+        .collect();
+    PoolLayout { buffers, pool_bytes, watermark }
+}
+
+/// Offset-assign the full fused schedule of `(model, setting)` into one
+/// static pool (accounting-byte sizing).
+pub fn plan_layout(model: &ModelChain, setting: &FusionSetting) -> PoolLayout {
+    layout_from_schedule(&schedule_intervals(model, setting))
 }
 
 #[cfg(test)]
@@ -151,6 +599,50 @@ mod tests {
                 let buf = plan.buffers.iter().find(|p| p.tensor == src).unwrap();
                 assert!(buf.death >= j, "v{src} freed before skip consumer {j}");
             }
+        }
+    }
+
+    #[test]
+    fn assign_offsets_packs_disjoint_lifetimes() {
+        // A [0,2) and B [2,4) never coexist: same offset, pool = max size.
+        let (offs, total) = assign_offsets(&[(100, 0, 2), (80, 2, 4)]);
+        assert_eq!(offs, vec![0, 0]);
+        assert_eq!(total, 100);
+        // Overlapping C forces a stack.
+        let (offs, total) = assign_offsets(&[(100, 0, 2), (80, 2, 4), (10, 0, 4)]);
+        assert_eq!(offs[2], 100);
+        assert_eq!(total, 110);
+        assert_eq!(max_concurrent(&[(100, 0, 2), (80, 2, 4), (10, 0, 4)]), 110);
+    }
+
+    #[test]
+    fn fused_schedule_watermark_matches_arena_convention() {
+        // The schedule replay must reproduce the interpreted engine's
+        // measured peak; the vanilla case has a closed form (Eq. 5).
+        use crate::optimizer::strategy::Vanilla;
+        for name in ["quickstart", "tiny", "kws"] {
+            let m = zoo::by_name(name).unwrap();
+            let vanilla = Planner::for_model(m.clone())
+                .strategy(Vanilla)
+                .setting()
+                .unwrap();
+            let layout = plan_layout(&m, &vanilla);
+            assert_eq!(layout.watermark, m.vanilla_peak_ram(), "{name}");
+            assert!(layout.pool_bytes >= layout.watermark, "{name}");
+        }
+    }
+
+    #[test]
+    fn fused_schedule_has_band_and_boundary_roles() {
+        let m = zoo::quickstart();
+        let fused = Planner::for_model(m.clone()).setting().unwrap();
+        assert!(fused.num_fused_blocks() >= 1);
+        let sched = schedule_intervals(&m, &fused);
+        assert!(sched.iter().any(|s| matches!(s.role, BufRole::Bands { .. })));
+        // Runtime lifetimes never end before accounting lifetimes.
+        for s in &sched {
+            assert!(s.rt_death >= s.death, "{}", s.label);
+            assert!(s.birth < s.death, "{}", s.label);
         }
     }
 }

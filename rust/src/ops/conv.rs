@@ -5,7 +5,7 @@
 
 use crate::model::Activation;
 
-use super::{activate, Tensor};
+use super::{activate, MapRef, Tensor};
 
 /// Standard conv2d. `w` is `[k,k,cin,cout]` flattened, `b` is `[cout]`.
 pub fn conv2d(
@@ -18,17 +18,40 @@ pub fn conv2d(
     cout: usize,
     act: Activation,
 ) -> Tensor {
+    let ho = (x.h + 2 * padding - k) / stride + 1;
+    let wo = (x.w + 2 * padding - k) / stride + 1;
+    let mut out = Tensor::zeros(ho, wo, cout);
+    conv2d_into(x.as_map(), w, b, k, stride, padding, cout, act, &mut out.data);
+    out
+}
+
+/// Allocation-free [`conv2d`]: writes the `[ho, wo, cout]` output row-major
+/// into `out` (a preallocated pool slice). Identical loop/op order to
+/// `conv2d`, so results are bit-identical — the compiled executor's
+/// single-layer kernel.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_into(
+    x: MapRef<'_>,
+    w: &[f32],
+    b: &[f32],
+    k: usize,
+    stride: usize,
+    padding: usize,
+    cout: usize,
+    act: Activation,
+    out: &mut [f32],
+) {
     let cin = x.c;
     debug_assert_eq!(w.len(), k * k * cin * cout);
     debug_assert_eq!(b.len(), cout);
     let ho = (x.h + 2 * padding - k) / stride + 1;
     let wo = (x.w + 2 * padding - k) / stride + 1;
-    let mut out = Tensor::zeros(ho, wo, cout);
+    debug_assert_eq!(out.len(), ho * wo * cout);
 
     for oy in 0..ho {
         for ox in 0..wo {
             let base = (oy * wo + ox) * cout;
-            let acc = &mut out.data[base..base + cout];
+            let acc = &mut out[base..base + cout];
             acc.copy_from_slice(b);
             for ky in 0..k {
                 let sy = (oy * stride + ky) as isize - padding as isize;
@@ -53,8 +76,7 @@ pub fn conv2d(
             }
         }
     }
-    activate(&mut out.data, act);
-    out
+    activate(out, act);
 }
 
 /// Depthwise conv2d. `w` is `[k,k,c]` flattened, `b` is `[c]`.
@@ -67,17 +89,36 @@ pub fn dwconv2d(
     padding: usize,
     act: Activation,
 ) -> Tensor {
+    let ho = (x.h + 2 * padding - k) / stride + 1;
+    let wo = (x.w + 2 * padding - k) / stride + 1;
+    let mut out = Tensor::zeros(ho, wo, x.c);
+    dwconv2d_into(x.as_map(), w, b, k, stride, padding, act, &mut out.data);
+    out
+}
+
+/// Allocation-free [`dwconv2d`] into a preallocated slice (bit-identical).
+#[allow(clippy::too_many_arguments)]
+pub fn dwconv2d_into(
+    x: MapRef<'_>,
+    w: &[f32],
+    b: &[f32],
+    k: usize,
+    stride: usize,
+    padding: usize,
+    act: Activation,
+    out: &mut [f32],
+) {
     let c = x.c;
     debug_assert_eq!(w.len(), k * k * c);
     debug_assert_eq!(b.len(), c);
     let ho = (x.h + 2 * padding - k) / stride + 1;
     let wo = (x.w + 2 * padding - k) / stride + 1;
-    let mut out = Tensor::zeros(ho, wo, c);
+    debug_assert_eq!(out.len(), ho * wo * c);
 
     for oy in 0..ho {
         for ox in 0..wo {
             let base = (oy * wo + ox) * c;
-            out.data[base..base + c].copy_from_slice(b);
+            out[base..base + c].copy_from_slice(b);
             for ky in 0..k {
                 let sy = (oy * stride + ky) as isize - padding as isize;
                 if sy < 0 || sy as usize >= x.h {
@@ -91,14 +132,13 @@ pub fn dwconv2d(
                     let xoff = ((sy as usize) * x.w + sx as usize) * c;
                     let woff = (ky * k + kx) * c;
                     for ci in 0..c {
-                        out.data[base + ci] += x.data[xoff + ci] * w[woff + ci];
+                        out[base + ci] += x.data[xoff + ci] * w[woff + ci];
                     }
                 }
             }
         }
     }
-    activate(&mut out.data, act);
-    out
+    activate(out, act);
 }
 
 #[cfg(test)]
@@ -160,6 +200,26 @@ mod tests {
         let ch0_sum: f32 = (0..9).map(|i| x.data[i * 2]).sum();
         assert_eq!(out.at(0, 0, 0), ch0_sum);
         assert_eq!(out.at(0, 0, 1), 7.0);
+    }
+
+    #[test]
+    fn into_variants_are_bit_identical_on_pool_slices() {
+        use crate::ops::ParamGen;
+        let mut g = ParamGen::new(11);
+        let x = Tensor::from_data(7, 6, 3, g.fill(7 * 6 * 3, 2.0));
+        let w = g.fill(3 * 3 * 3 * 4, 0.5);
+        let b = g.fill(4, 0.1);
+        let owned = conv2d(&x, &w, &b, 3, 2, 1, 4, Activation::Relu6);
+        let mut pool = vec![7.0f32; owned.data.len()];
+        conv2d_into(x.as_map(), &w, &b, 3, 2, 1, 4, Activation::Relu6, &mut pool);
+        assert_eq!(pool, owned.data);
+
+        let wd = g.fill(3 * 3 * 3, 0.5);
+        let bd = g.fill(3, 0.1);
+        let owned = dwconv2d(&x, &wd, &bd, 3, 1, 1, Activation::Relu);
+        let mut pool = vec![7.0f32; owned.data.len()];
+        dwconv2d_into(x.as_map(), &wd, &bd, 3, 1, 1, Activation::Relu, &mut pool);
+        assert_eq!(pool, owned.data);
     }
 
     #[test]

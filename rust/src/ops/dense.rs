@@ -3,15 +3,25 @@
 /// Common dense: `y = x·W + b`, `w` laid out `[din][dout]` row-major
 /// (column `w(n)` of the paper's Fig. 3 is `w[n*dout..]`).
 pub fn dense(x: &[f32], w: &[f32], b: &[f32], dout: usize) -> Vec<f32> {
-    debug_assert_eq!(w.len(), x.len() * dout);
     let mut y = b.to_vec();
+    dense_into(x, w, b, dout, &mut y);
+    y
+}
+
+/// Allocation-free [`dense`] into a preallocated `[dout]` slice — same
+/// accumulation order as `dense` and the element-wise [`DenseIter`] chain,
+/// so all three are bit-identical. The compiled executor's classifier /
+/// iterative-tail kernel.
+pub fn dense_into(x: &[f32], w: &[f32], b: &[f32], dout: usize, out: &mut [f32]) {
+    debug_assert_eq!(w.len(), x.len() * dout);
+    debug_assert_eq!(out.len(), dout);
+    out.copy_from_slice(b);
     for (i, &xi) in x.iter().enumerate() {
         let row = &w[i * dout..(i + 1) * dout];
-        for (yj, wj) in y.iter_mut().zip(row) {
+        for (yj, wj) in out.iter_mut().zip(row) {
             *yj += xi * wj;
         }
     }
-    y
 }
 
 /// Iterative dense (paper Fig. 3): consumes the input vector element by

@@ -12,13 +12,21 @@
 //! MACs are counted as performed so tests can reconcile the Eq. 12–15
 //! predictions against reality.
 //!
+//! Since the compile-once refactor the band pyramid is **storage-
+//! agnostic**: [`BandGeom`] describes the per-layer band shapes and their
+//! element offsets inside one contiguous backing region, and [`HCache`]
+//! *borrows* that region (plus a range-scratch slice) from whoever owns
+//! it — a throwaway `Vec` in the interpreted [`crate::exec::Engine`] path,
+//! or a fixed slice of the offset-assigned pool in
+//! [`crate::exec::CompiledPlan`]'s allocation-free hot path.
+//!
 //! This mirrors the L1 Pallas kernel
 //! (`python/compile/kernels/fused_conv.py`) — same streaming axis, same
 //! recursion — so the three layers of the stack implement one schedule.
 
 use crate::model::{Layer, LayerKind, ModelChain};
 
-use super::{activate, LayerParams, Tensor};
+use super::{activate, LayerParams, MapRef, Tensor};
 
 /// Row range in *unpadded* coordinates of a boundary tensor; `start` may be
 /// negative / extend past the map (zero padding rows).
@@ -38,20 +46,57 @@ fn required_input(layer: &Layer, out: BandRange) -> BandRange {
     }
 }
 
-/// The per-layer band buffers of a fusion block — the executor's concrete
-/// "H-cache" state. `bands[i]` holds the input band of block layer `i`;
-/// `bands[depth]` holds the final output rows of one iteration.
-pub struct HCache {
-    pub bands: Vec<Tensor>,
-    /// Unpadded row ranges each band currently represents.
-    pub ranges: Vec<BandRange>,
+/// Shape of a fusion block's band pyramid: per-band `(rows, w, c)` dims
+/// and element offsets into one contiguous f32 backing region.
+/// `dims[i]` is the input band of block layer `i`; `dims[depth]` is the
+/// final-output row band. Computed once at compile time
+/// ([`FusedBlock::band_geom`]); iteration-invariant.
+#[derive(Debug, Clone)]
+pub struct BandGeom {
+    /// `(rows, w, c)` of each band; index `depth` = output band.
+    pub dims: Vec<(usize, usize, usize)>,
+    /// Element offset of band `i` in the backing storage; the final entry
+    /// (`offs[depth + 1]`) is the total element count.
+    pub offs: Vec<usize>,
 }
 
-impl HCache {
+impl BandGeom {
+    /// f32 elements the backing storage must provide.
+    pub fn total_elems(&self) -> usize {
+        *self.offs.last().unwrap()
+    }
+
     /// Total bytes of all band buffers (the measured counterpart of the
-    /// Eq. 11 `Buf` + input-strip terms).
+    /// Eq. 11 `Buf` + input-strip terms, f32 storage sizing).
     pub fn bytes(&self) -> u64 {
-        self.bands.iter().map(|b| (b.elems() * 4) as u64).sum()
+        (self.total_elems() * 4) as u64
+    }
+}
+
+/// The band-buffer state of one fused-block execution, **borrowing** its
+/// storage: `storage` backs every band at the offsets in `geom`, and
+/// `ranges` is the per-iteration row-range scratch (`depth + 1` entries).
+/// Owning nothing is the point — the serving hot path hands in slices of
+/// a preallocated pool and runs allocation-free.
+pub struct HCache<'p> {
+    geom: &'p BandGeom,
+    storage: &'p mut [f32],
+    ranges: &'p mut [BandRange],
+}
+
+impl<'p> HCache<'p> {
+    /// Assemble a cache view over borrowed storage. `storage` must hold at
+    /// least [`BandGeom::total_elems`] elements and `ranges` exactly
+    /// `dims.len()` entries.
+    pub fn new(geom: &'p BandGeom, storage: &'p mut [f32], ranges: &'p mut [BandRange]) -> Self {
+        assert!(storage.len() >= geom.total_elems(), "band storage too small");
+        assert_eq!(ranges.len(), geom.dims.len(), "range scratch length mismatch");
+        Self { geom, storage, ranges }
+    }
+
+    /// Total bytes of all band buffers.
+    pub fn bytes(&self) -> u64 {
+        self.geom.bytes()
     }
 }
 
@@ -72,6 +117,22 @@ pub struct FusedBlock<'m> {
     a: usize,
     b: usize,
     params: &'m [LayerParams],
+}
+
+/// Read-only view of one band inside the pyramid.
+#[derive(Clone, Copy)]
+struct BandIn<'a> {
+    w: usize,
+    c: usize,
+    data: &'a [f32],
+}
+
+/// Mutable view of one band inside the pyramid.
+struct BandOut<'a> {
+    h: usize,
+    w: usize,
+    c: usize,
+    data: &'a mut [f32],
 }
 
 impl<'m> FusedBlock<'m> {
@@ -95,61 +156,80 @@ impl<'m> FusedBlock<'m> {
         ranges
     }
 
+    /// The block's band-pyramid geometry (band sizes are iteration-
+    /// invariant; one output row per iteration).
+    pub fn band_geom(&self) -> BandGeom {
+        let depth = self.b - self.a;
+        let ranges0 = self.ranges_for(0);
+        let out_shape = self.model.output_of(self.b - 1);
+        let mut dims = Vec::with_capacity(depth + 1);
+        for (idx, r0) in ranges0.iter().enumerate() {
+            let shape = if idx < depth {
+                self.model.input_of(self.a + idx)
+            } else {
+                out_shape
+            };
+            dims.push((r0.rows, shape.w as usize, shape.c as usize));
+        }
+        let mut offs = Vec::with_capacity(depth + 2);
+        offs.push(0usize);
+        for &(r, w, c) in &dims {
+            offs.push(offs.last().unwrap() + r * w * c);
+        }
+        BandGeom { dims, offs }
+    }
+
     /// Run the block over `source` (the full `v_a` map — *streamed*: only
-    /// `row_band` slices are read, never the whole map at once), calling
-    /// `sink(row_index, row_tensor)` for each produced final output row.
-    /// Returns execution stats.
-    pub fn run_streaming(
+    /// row bands are read, never the whole map at once) inside the
+    /// borrowed `cache`, calling `sink(row_index, row_data)` for each
+    /// produced final output row (`row_data` is the `w*c` row-major output
+    /// band). Zero heap allocations: every buffer the pyramid touches is
+    /// borrowed through `cache`.
+    pub fn run_streaming_in(
         &self,
-        source: &Tensor,
-        mut sink: impl FnMut(usize, &Tensor),
+        source: MapRef<'_>,
+        cache: HCache<'_>,
+        mut sink: impl FnMut(usize, &[f32]),
     ) -> BlockStats {
         let out_shape = self.model.output_of(self.b - 1);
         let h_out = out_shape.h as usize;
         let depth = self.b - self.a;
-        let mut stats = BlockStats::default();
-
-        // Preallocate band buffers (sizes are iteration-invariant).
-        let ranges0 = self.ranges_for(0);
-        let mut cache = HCache {
-            bands: (0..=depth)
-                .map(|idx| {
-                    let shape = if idx < depth {
-                        self.model.input_of(self.a + idx)
-                    } else {
-                        out_shape
-                    };
-                    Tensor::zeros(ranges0[idx].rows, shape.w as usize, shape.c as usize)
-                })
-                .collect(),
-            ranges: ranges0,
+        let mut stats = BlockStats {
+            cache_bytes: cache.bytes(),
+            ..BlockStats::default()
         };
-        stats.cache_bytes = cache.bytes();
+        let HCache { geom, storage, ranges } = cache;
 
-        // Perf iteration 1: reuse one ranges vector and the preallocated
-        // first band across iterations - zero allocations in the hot loop.
-        let mut ranges = cache.ranges.clone();
         for r in 0..h_out {
             ranges[depth] = BandRange { start: r as isize, rows: 1 };
             for idx in (0..depth).rev() {
                 ranges[idx] = required_input(&self.model.layers[self.a + idx], ranges[idx + 1]);
             }
             // Materialize the first band from the streamed source.
-            source.row_band_into(ranges[0].start, ranges[0].rows, &mut cache.bands[0]);
-            cache.ranges.copy_from_slice(&ranges);
+            source.read_band_into(
+                ranges[0].start,
+                ranges[0].rows,
+                &mut storage[geom.offs[0]..geom.offs[1]],
+            );
 
             for idx in 0..depth {
                 let li = self.a + idx;
                 let layer = &self.model.layers[li];
-                let out_rows = ranges[idx + 1].rows;
                 let h_map = if idx + 1 < depth {
                     self.model.input_of(li + 1).h as usize
                 } else {
                     h_out
                 };
-                let (head, tail) = cache.bands.split_at_mut(idx + 1);
-                let in_band = &head[idx];
-                let out_band = &mut tail[0];
+                let (head, tail) = storage.split_at_mut(geom.offs[idx + 1]);
+                let (_, in_w, in_c) = geom.dims[idx];
+                let (out_rows, out_w, out_c) = geom.dims[idx + 1];
+                let in_band = BandIn { w: in_w, c: in_c, data: &head[geom.offs[idx]..] };
+                let mut out_band = BandOut {
+                    h: out_rows,
+                    w: out_w,
+                    c: out_c,
+                    data: &mut tail[..out_rows * out_w * out_c],
+                };
                 // Only rows inside the real map are computed; rows that are
                 // the next layer's padding are zero-filled without work
                 // (keeps measured MACs aligned with Eq. 12–15 and skips
@@ -161,27 +241,53 @@ impl<'m> FusedBlock<'m> {
                     layer,
                     &self.params[li],
                     in_band,
-                    out_band,
+                    &mut out_band,
                     lo,
                     hi.max(lo),
                 );
                 // Zero rows that fall outside the real map: they are the
                 // next layer's padding rows and must be exactly 0.
-                zero_outside(out_band, r_out, h_map);
-                let _ = out_rows;
+                zero_outside(&mut out_band, r_out, h_map);
                 // Residual add from inside the block (stride-1 spans):
                 // src < current layer, so its band lives in `head`.
                 if let Some(src) = layer.residual_from {
                     if src >= self.a && src < self.b {
                         let src_idx = src - self.a;
-                        add_aligned(&head[src_idx], ranges[src_idx], out_band, ranges[idx + 1]);
+                        let (src_rows, src_w, src_c) = geom.dims[src_idx];
+                        let src_band = BandIn {
+                            w: src_w,
+                            c: src_c,
+                            data: &head[geom.offs[src_idx]
+                                ..geom.offs[src_idx] + src_rows * src_w * src_c],
+                        };
+                        add_aligned(src_band, ranges[src_idx], &mut out_band, ranges[idx + 1]);
                     }
                 }
             }
-            sink(r, &cache.bands[depth]);
+            let (out_rows, out_w, out_c) = geom.dims[depth];
+            let out_lo = geom.offs[depth];
+            sink(r, &storage[out_lo..out_lo + out_rows * out_w * out_c]);
             stats.iterations += 1;
         }
         stats
+    }
+
+    /// Convenience over [`Self::run_streaming_in`] with throwaway owned
+    /// scratch — the interpreted engine's path (the compiled path borrows
+    /// pool slices instead).
+    pub fn run_streaming(
+        &self,
+        source: &Tensor,
+        sink: impl FnMut(usize, &[f32]),
+    ) -> BlockStats {
+        let geom = self.band_geom();
+        let mut storage = vec![0.0f32; geom.total_elems()];
+        let mut ranges = vec![BandRange { start: 0, rows: 0 }; geom.dims.len()];
+        self.run_streaming_in(
+            source.as_map(),
+            HCache::new(&geom, &mut storage, &mut ranges),
+            sink,
+        )
     }
 
     /// Convenience: run the block and materialize the full output map.
@@ -192,7 +298,7 @@ impl<'m> FusedBlock<'m> {
         let co = out.c;
         let stats = self.run_streaming(source, |r, row| {
             let dst = r * wo * co;
-            out.data[dst..dst + wo * co].copy_from_slice(&row.data[..wo * co]);
+            out.data[dst..dst + wo * co].copy_from_slice(&row[..wo * co]);
         });
         (out, stats)
     }
@@ -204,8 +310,8 @@ impl<'m> FusedBlock<'m> {
 fn band_layer(
     layer: &Layer,
     params: &LayerParams,
-    in_band: &Tensor,
-    out_band: &mut Tensor,
+    in_band: BandIn<'_>,
+    out_band: &mut BandOut<'_>,
     row_lo: usize,
     row_hi: usize,
 ) -> u64 {
@@ -290,9 +396,9 @@ fn band_layer(
                 0
             };
             for oy in row_lo..row_hi {
-                let edge = |out_band: &mut Tensor, ox: usize| {
+                let edge = |data: &mut [f32], ox: usize| {
                     let base = (oy * wo + ox) * cout;
-                    out_band.data[base..base + cout].copy_from_slice(&params.bias);
+                    data[base..base + cout].copy_from_slice(&params.bias);
                     for ky in 0..k {
                         let sy = oy * s + ky;
                         for kx in 0..k {
@@ -303,14 +409,13 @@ fn band_layer(
                             let xoff = (sy * in_band.w + sx as usize) * cin;
                             let woff = (ky * k + kx) * cin;
                             for ci in 0..cin {
-                                out_band.data[base + ci] +=
-                                    in_band.data[xoff + ci] * w[woff + ci];
+                                data[base + ci] += in_band.data[xoff + ci] * w[woff + ci];
                             }
                         }
                     }
                 };
                 for ox in 0..ox_lo.min(wo) {
-                    edge(out_band, ox);
+                    edge(&mut *out_band.data, ox);
                 }
                 for ox in ox_lo..ox_hi {
                     let base = (oy * wo + ox) * cout;
@@ -331,7 +436,7 @@ fn band_layer(
                     }
                 }
                 for ox in ox_hi.max(ox_lo)..wo {
-                    edge(out_band, ox);
+                    edge(&mut *out_band.data, ox);
                 }
             }
             let slice = &mut out_band.data[row_lo * wo * cout..row_hi * wo * cout];
@@ -373,18 +478,24 @@ fn band_layer(
 }
 
 /// Zero band rows whose absolute index lies outside `[0, h_map)`.
-fn zero_outside(band: &mut Tensor, range: BandRange, h_map: usize) {
+fn zero_outside(band: &mut BandOut<'_>, range: BandRange, h_map: usize) {
+    let rowlen = band.w * band.c;
     for row in 0..range.rows {
         let abs = range.start + row as isize;
         if abs < 0 || abs as usize >= h_map {
-            let off = row * band.w * band.c;
-            band.data[off..off + band.w * band.c].fill(0.0);
+            let off = row * rowlen;
+            band.data[off..off + rowlen].fill(0.0);
         }
     }
 }
 
 /// `dst[rows of dst_range] += src[same absolute rows]` (residual add).
-fn add_aligned(src: &Tensor, src_range: BandRange, dst: &mut Tensor, dst_range: BandRange) {
+fn add_aligned(
+    src: BandIn<'_>,
+    src_range: BandRange,
+    dst: &mut BandOut<'_>,
+    dst_range: BandRange,
+) {
     debug_assert_eq!(src.w, dst.w);
     debug_assert_eq!(src.c, dst.c);
     let rowlen = dst.w * dst.c;
@@ -589,5 +700,38 @@ mod tests {
         let expect = run_vanilla(&m, &p, &x);
         let (got, _) = FusedBlock::new(&m, 0, 4, &p).run(&x);
         assert!(got.max_abs_diff(&expect) < 1e-4, "diff {}", got.max_abs_diff(&expect));
+    }
+
+    #[test]
+    fn borrowed_cache_matches_owned_scratch_bitwise() {
+        use crate::model::{Activation, Layer};
+        let m = ModelChain::new(
+            "pool-borrow",
+            TensorShape::new(14, 11, 3),
+            vec![
+                Layer::conv("c0", 3, 1, 1, 3, 5, Activation::Relu6),
+                Layer::dwconv("d1", 3, 2, 1, 5, Activation::Relu6),
+            ],
+        );
+        let p = params_for(&m);
+        let x = rand_input(m.shapes[0], 7);
+        let block = FusedBlock::new(&m, 0, 2, &p);
+        let (owned, owned_stats) = block.run(&x);
+
+        // Same block through an explicitly borrowed, oversized, dirty pool
+        // slice — the compiled executor's calling convention.
+        let geom = block.band_geom();
+        let mut pool = vec![3.5f32; geom.total_elems() + 32];
+        let mut ranges = vec![BandRange { start: 0, rows: 0 }; geom.dims.len()];
+        let mut got = Tensor::from_shape(m.output_of(1));
+        let (wo, co) = (got.w, got.c);
+        let stats = block.run_streaming_in(
+            x.as_map(),
+            HCache::new(&geom, &mut pool[..geom.total_elems()], &mut ranges),
+            |r, row| got.data[r * wo * co..(r + 1) * wo * co].copy_from_slice(&row[..wo * co]),
+        );
+        assert_eq!(got.data, owned.data, "borrowed cache diverged");
+        assert_eq!(stats, owned_stats);
+        assert_eq!(geom.bytes(), stats.cache_bytes);
     }
 }

@@ -13,12 +13,15 @@ mod pool;
 mod quant;
 mod tensor;
 
-pub use conv::{conv2d, dwconv2d};
-pub use dense::{dense, DenseIter};
-pub use fused_block::{FusedBlock, HCache};
-pub use pool::{avg_pool2d, global_avg_pool, max_pool2d, GlobalPoolIter};
+pub use conv::{conv2d, conv2d_into, dwconv2d, dwconv2d_into};
+pub use dense::{dense, dense_into, DenseIter};
+pub use fused_block::{BandGeom, BandRange, BlockStats, FusedBlock, HCache};
+pub use pool::{
+    accumulate_row_major, avg_pool2d, avg_pool2d_into, global_avg_pool, global_avg_pool_into,
+    max_pool2d, max_pool2d_into, scale_avg, GlobalPoolIter,
+};
 pub use quant::{qconv2d, QParams, QTensor};
-pub use tensor::Tensor;
+pub use tensor::{MapRef, Tensor};
 
 use crate::model::{Activation, Layer, LayerKind};
 

@@ -1,12 +1,23 @@
 //! Pooling ops: windowed avg/max, common global pooling, and the paper's
 //! iterative global pooling (Fig. 2).
 
-use super::Tensor;
+use super::{MapRef, Tensor};
 
 pub fn avg_pool2d(x: &Tensor, k: usize, stride: usize) -> Tensor {
     let ho = (x.h - k) / stride + 1;
     let wo = (x.w - k) / stride + 1;
     let mut out = Tensor::zeros(ho, wo, x.c);
+    avg_pool2d_into(x.as_map(), k, stride, &mut out.data);
+    out
+}
+
+/// Allocation-free [`avg_pool2d`] into a preallocated slice
+/// (bit-identical; the compiled executor's single-layer kernel).
+pub fn avg_pool2d_into(x: MapRef<'_>, k: usize, stride: usize, out: &mut [f32]) {
+    let ho = (x.h - k) / stride + 1;
+    let wo = (x.w - k) / stride + 1;
+    debug_assert_eq!(out.len(), ho * wo * x.c);
+    out.fill(0.0);
     let inv = 1.0 / (k * k) as f32;
     for oy in 0..ho {
         for ox in 0..wo {
@@ -15,20 +26,28 @@ pub fn avg_pool2d(x: &Tensor, k: usize, stride: usize) -> Tensor {
                     let xoff = ((oy * stride + ky) * x.w + ox * stride + kx) * x.c;
                     let base = (oy * wo + ox) * x.c;
                     for ci in 0..x.c {
-                        out.data[base + ci] += x.data[xoff + ci] * inv;
+                        out[base + ci] += x.data[xoff + ci] * inv;
                     }
                 }
             }
         }
     }
-    out
 }
 
 pub fn max_pool2d(x: &Tensor, k: usize, stride: usize) -> Tensor {
     let ho = (x.h - k) / stride + 1;
     let wo = (x.w - k) / stride + 1;
     let mut out = Tensor::zeros(ho, wo, x.c);
-    out.data.fill(f32::NEG_INFINITY);
+    max_pool2d_into(x.as_map(), k, stride, &mut out.data);
+    out
+}
+
+/// Allocation-free [`max_pool2d`] into a preallocated slice (bit-identical).
+pub fn max_pool2d_into(x: MapRef<'_>, k: usize, stride: usize, out: &mut [f32]) {
+    let ho = (x.h - k) / stride + 1;
+    let wo = (x.w - k) / stride + 1;
+    debug_assert_eq!(out.len(), ho * wo * x.c);
+    out.fill(f32::NEG_INFINITY);
     for oy in 0..ho {
         for ox in 0..wo {
             for ky in 0..k {
@@ -36,18 +55,26 @@ pub fn max_pool2d(x: &Tensor, k: usize, stride: usize) -> Tensor {
                     let xoff = ((oy * stride + ky) * x.w + ox * stride + kx) * x.c;
                     let base = (oy * wo + ox) * x.c;
                     for ci in 0..x.c {
-                        out.data[base + ci] = out.data[base + ci].max(x.data[xoff + ci]);
+                        out[base + ci] = out[base + ci].max(x.data[xoff + ci]);
                     }
                 }
             }
         }
     }
-    out
 }
 
 /// Common (whole-map) global average pooling: `[H,W,C] -> [C]`.
 pub fn global_avg_pool(x: &Tensor) -> Vec<f32> {
     let mut acc = vec![0.0f32; x.c];
+    global_avg_pool_into(x.as_map(), &mut acc);
+    acc
+}
+
+/// Allocation-free [`global_avg_pool`] into a preallocated `[C]` slice
+/// (bit-identical accumulation order).
+pub fn global_avg_pool_into(x: MapRef<'_>, acc: &mut [f32]) {
+    debug_assert_eq!(acc.len(), x.c);
+    acc.fill(0.0);
     for y in 0..x.h {
         for xx in 0..x.w {
             let off = (y * x.w + xx) * x.c;
@@ -56,11 +83,31 @@ pub fn global_avg_pool(x: &Tensor) -> Vec<f32> {
             }
         }
     }
-    let inv = 1.0 / (x.h * x.w) as f32;
+    scale_avg(acc, x.h * x.w);
+}
+
+/// Accumulate row-major HWC `data` (`len % acc.len() == 0`) into a
+/// `C`-sized accumulator — the **single** accumulation loop behind
+/// [`GlobalPoolIter::push_row_major`] and the compiled executor's
+/// pool-slice streaming ([`crate::exec::CompiledPlan`]). Bit-identity
+/// between the two paths is load-bearing; change both or neither.
+pub fn accumulate_row_major(acc: &mut [f32], data: &[f32]) {
+    debug_assert_eq!(data.len() % acc.len(), 0);
+    for px in data.chunks_exact(acc.len()) {
+        for (a, v) in acc.iter_mut().zip(px) {
+            *a += v;
+        }
+    }
+}
+
+/// Finish an average accumulation: scale by `1 / total_elems` in place —
+/// shared by [`GlobalPoolIter::finish`] and the compiled executor (same
+/// single multiply per element, so results are bit-identical).
+pub fn scale_avg(acc: &mut [f32], total_elems: usize) {
+    let inv = 1.0 / total_elems as f32;
     for v in acc.iter_mut() {
         *v *= inv;
     }
-    acc
 }
 
 /// Iterative global average pooling (paper Fig. 2): receives row bands and
@@ -84,15 +131,15 @@ impl GlobalPoolIter {
     /// Feed a row band `[rows, w, c]`.
     pub fn push_rows(&mut self, band: &Tensor) {
         assert_eq!(band.c, self.acc.len());
-        for y in 0..band.h {
-            for x in 0..band.w {
-                let off = (y * band.w + x) * band.c;
-                for ci in 0..band.c {
-                    self.acc[ci] += band.data[off + ci];
-                }
-            }
-        }
-        self.seen_elems += band.h * band.w;
+        self.push_row_major(&band.data);
+    }
+
+    /// Feed row-major HWC data directly from a slice (`len % c == 0`) —
+    /// the borrowed-band form the pool-slice executor streams with.
+    /// Accumulation order matches [`Self::push_rows`] bit-for-bit.
+    pub fn push_row_major(&mut self, data: &[f32]) {
+        accumulate_row_major(&mut self.acc, data);
+        self.seen_elems += data.len() / self.acc.len();
     }
 
     /// RAM held by the accumulator (the §7 footprint).
@@ -101,10 +148,10 @@ impl GlobalPoolIter {
     }
 
     /// Finish; panics if fed a different number of elements than declared.
-    pub fn finish(self) -> Vec<f32> {
+    pub fn finish(mut self) -> Vec<f32> {
         assert_eq!(self.seen_elems, self.total_elems, "short/over-fed pooling");
-        let inv = 1.0 / self.total_elems as f32;
-        self.acc.into_iter().map(|v| v * inv).collect()
+        scale_avg(&mut self.acc, self.total_elems);
+        self.acc
     }
 }
 

@@ -72,17 +72,12 @@ impl Tensor {
     /// iteration streaming read reuses one buffer (§Perf iteration 1).
     pub fn row_band_into(&self, y0: isize, rows: usize, dst: &mut Tensor) {
         debug_assert!(dst.w == self.w && dst.c == self.c && dst.h >= rows);
-        let rowlen = self.w * self.c;
-        for r in 0..rows {
-            let sy = y0 + r as isize;
-            let dsts = &mut dst.data[r * rowlen..(r + 1) * rowlen];
-            if sy < 0 || sy as usize >= self.h {
-                dsts.fill(0.0);
-                continue;
-            }
-            let src = sy as usize * rowlen;
-            dsts.copy_from_slice(&self.data[src..src + rowlen]);
-        }
+        MapRef::from(self).read_band_into(y0, rows, &mut dst.data);
+    }
+
+    /// Borrowed view of this tensor (pool-slice-friendly read surface).
+    pub fn as_map(&self) -> MapRef<'_> {
+        MapRef::from(self)
     }
 
     /// Max |a-b| against another tensor (test helper).
@@ -96,9 +91,64 @@ impl Tensor {
     }
 }
 
+/// Borrowed HWC map view: the read surface shared by owned [`Tensor`]s and
+/// pool slices, so the compiled executor ([`crate::exec::CompiledPlan`])
+/// can stream from an offset-assigned pool without materializing tensors.
+#[derive(Clone, Copy)]
+pub struct MapRef<'a> {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub data: &'a [f32],
+}
+
+impl<'a> From<&'a Tensor> for MapRef<'a> {
+    fn from(t: &'a Tensor) -> Self {
+        Self { h: t.h, w: t.w, c: t.c, data: &t.data }
+    }
+}
+
+impl<'a> MapRef<'a> {
+    /// View over a raw pool slice with explicit dims.
+    pub fn new(h: usize, w: usize, c: usize, data: &'a [f32]) -> Self {
+        debug_assert_eq!(data.len(), h * w * c);
+        Self { h, w, c, data }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Copy rows `[y0, y0+rows)` into `dst` (row-major, `rows * w * c`
+    /// leading elements), zero-filling rows outside `[0, h)` — the
+    /// streaming band read of the patch executor.
+    pub fn read_band_into(&self, y0: isize, rows: usize, dst: &mut [f32]) {
+        let rowlen = self.w * self.c;
+        debug_assert!(dst.len() >= rows * rowlen);
+        for r in 0..rows {
+            let sy = y0 + r as isize;
+            let dsts = &mut dst[r * rowlen..(r + 1) * rowlen];
+            if sy < 0 || sy as usize >= self.h {
+                dsts.fill(0.0);
+                continue;
+            }
+            let src = sy as usize * rowlen;
+            dsts.copy_from_slice(&self.data[src..src + rowlen]);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn mapref_band_matches_tensor_band() {
+        let t = Tensor::from_data(3, 2, 1, vec![1., 2., 3., 4., 5., 6.]);
+        let mut buf = vec![9.0; 6];
+        t.as_map().read_band_into(2, 3, &mut buf);
+        assert_eq!(buf, vec![5., 6., 0., 0., 0., 0.]);
+    }
 
     #[test]
     fn indexing_roundtrip() {

@@ -12,6 +12,7 @@ use std::path::Path;
 
 use crate::fusion::{CacheScheme, CostMemo};
 use crate::graph::{DagOptions, FusionDag};
+use crate::memory::{plan_layout, PoolBuffer, PoolLayout};
 use crate::model::ModelChain;
 use crate::util::error::{Context, Result};
 use crate::util::json::{escape, Json};
@@ -54,6 +55,12 @@ pub struct Plan {
     /// Latency estimate + board provenance (recorded whenever the solve
     /// ran under a [`Constraint::LatencyMs`] bound).
     pub latency: Option<PlanLatency>,
+    /// Static pool layout of the compiled schedule
+    /// ([`crate::memory::plan_layout`]): per-buffer offsets, pool size,
+    /// and the concurrent-footprint watermark — the deploy memory map.
+    /// `None` on plan JSON written before the compile-once refactor
+    /// (old files still load; the layout is recomputed at compile time).
+    pub pool: Option<PoolLayout>,
     /// The solved fusion setting (spans + encoded costs).
     pub setting: FusionSetting,
 }
@@ -115,6 +122,28 @@ impl Plan {
                 escape(&l.board),
                 l.estimate_ms
             ));
+        }
+        if let Some(p) = &self.pool {
+            out.push_str(&format!(
+                "  \"pool\": {{\"pool_bytes\": {}, \"watermark\": {}, \"buffers\": [\n",
+                p.pool_bytes, p.watermark
+            ));
+            let rows: Vec<String> = p
+                .buffers
+                .iter()
+                .map(|b| {
+                    format!(
+                        "    {{\"label\": \"{}\", \"offset\": {}, \"bytes\": {}, \"birth\": {}, \"death\": {}}}",
+                        escape(&b.label),
+                        b.offset,
+                        b.bytes,
+                        b.birth,
+                        b.death
+                    )
+                })
+                .collect();
+            out.push_str(&rows.join(",\n"));
+            out.push_str("\n  ]},\n");
         }
         out.push_str("  \"setting\": {\n");
         let path: Vec<String> = self.setting.path.iter().map(|e| e.to_string()).collect();
@@ -194,6 +223,45 @@ impl Plan {
             }
         };
 
+        // Pool-layout numbers must be non-negative integers: a negative
+        // or fractional value is corruption, not something to saturate
+        // into a plausible-looking offset.
+        let uint = |v: &Json, key: &str, ctx: &str| -> Result<u64> {
+            let f = v
+                .get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("plan json: {ctx} missing '{key}'"))?;
+            if f < 0.0 || f.fract() != 0.0 {
+                bail!("plan json: {ctx} has non-integer '{key}' = {f}");
+            }
+            Ok(f as u64)
+        };
+        let pool = match root.get("pool") {
+            None | Some(Json::Null) => None,
+            Some(v) => {
+                let pool_bytes = uint(v, "pool_bytes", "'pool'")?;
+                let watermark = uint(v, "watermark", "'pool'")?;
+                let bufs_v = v
+                    .get("buffers")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("plan json: 'pool' missing 'buffers'"))?;
+                let mut buffers = Vec::with_capacity(bufs_v.len());
+                for bv in bufs_v {
+                    let label = bv
+                        .get("label")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("plan json: pool buffer missing 'label'"))?
+                        .to_string();
+                    let offset = uint(bv, "offset", "pool buffer")?;
+                    let bytes = uint(bv, "bytes", "pool buffer")?;
+                    let birth = uint(bv, "birth", "pool buffer")? as usize;
+                    let death = uint(bv, "death", "pool buffer")? as usize;
+                    buffers.push(PoolBuffer { label, offset, bytes, birth, death });
+                }
+                Some(PoolLayout { buffers, pool_bytes, watermark })
+            }
+        };
+
         let setting_v = root
             .get("setting")
             .ok_or_else(|| anyhow!("plan json: missing 'setting'"))?;
@@ -248,6 +316,7 @@ impl Plan {
             scheme,
             max_depth,
             latency,
+            pool,
             setting: FusionSetting { path, spans, cost },
         };
         plan.validate()?;
@@ -278,6 +347,36 @@ impl Plan {
                 );
             }
             at = b;
+        }
+        if let Some(p) = &self.pool {
+            if p.pool_bytes < p.watermark || p.watermark == 0 {
+                bail!(
+                    "plan for '{}': pool layout is inconsistent (pool {} B < watermark {} B)",
+                    self.model,
+                    p.pool_bytes,
+                    p.watermark
+                );
+            }
+            for b in &p.buffers {
+                if b.offset + b.bytes > p.pool_bytes {
+                    bail!(
+                        "plan for '{}': pool buffer '{}' overruns the pool ({} + {} > {})",
+                        self.model,
+                        b.label,
+                        b.offset,
+                        b.bytes,
+                        p.pool_bytes
+                    );
+                }
+            }
+            if let Some((a, b)) = p.collision() {
+                bail!(
+                    "plan for '{}': pool buffers '{}' and '{}' overlap while both alive",
+                    self.model,
+                    a.label,
+                    b.label
+                );
+            }
         }
         Ok(())
     }
@@ -428,6 +527,9 @@ impl Planner {
             board: l.board.name.to_string(),
             estimate_ms: crate::mcu::estimate_latency_ms(&self.model, &setting, l.board).total_ms,
         });
+        // Compile-once memory map: offset-assign the full fused schedule
+        // so the plan file fully describes its static pool.
+        let pool = Some(plan_layout(&self.model, &setting));
         Plan {
             model: self.model.name.clone(),
             strategy: strategy_name.to_string(),
@@ -435,6 +537,7 @@ impl Planner {
             scheme: self.options.scheme,
             max_depth: self.options.max_depth,
             latency,
+            pool,
             setting,
         }
     }
@@ -605,6 +708,65 @@ mod tests {
         let back = Plan::from_json(&plan.to_json()).unwrap();
         assert_eq!(back, plan);
         assert_eq!(back.constraints.latency_bound().unwrap().board.name, "nucleo-f767zi");
+    }
+
+    #[test]
+    fn pool_layout_roundtrips_and_old_json_without_it_loads() {
+        let plan = Planner::for_model(zoo::quickstart()).plan().unwrap();
+        let pool = plan.pool.as_ref().expect("planner records the pool layout");
+        assert!(pool.pool_bytes >= pool.watermark);
+        assert!(!pool.buffers.is_empty());
+        // The layout survives the JSON round trip byte-for-byte.
+        let back = Plan::from_json(&plan.to_json()).unwrap();
+        assert_eq!(back.pool, plan.pool);
+        assert_eq!(back, plan);
+
+        // Pre-refactor plan JSON (no "pool" key) still loads: the layout
+        // is simply absent and gets recomputed at compile time.
+        let mut old = plan.clone();
+        old.pool = None;
+        let text = old.to_json();
+        assert!(!text.contains("\"pool\""), "{text}");
+        let loaded = Plan::from_json(&text).unwrap();
+        assert_eq!(loaded.pool, None);
+        assert_eq!(loaded.setting, plan.setting);
+
+        // A corrupted layout (buffer overrunning the pool) is rejected.
+        let mut bad = plan.clone();
+        if let Some(p) = bad.pool.as_mut() {
+            p.pool_bytes = 1;
+        }
+        assert!(bad.validate().is_err());
+
+        // Two live-overlapping buffers sharing pool space are rejected.
+        let mut collide = plan.clone();
+        let p = collide.pool.as_mut().unwrap();
+        assert!(p.buffers.len() >= 2, "quickstart layout has many buffers");
+        let (off, birth, death) =
+            (p.buffers[0].offset, p.buffers[0].birth, p.buffers[0].death);
+        p.buffers[1].offset = off;
+        p.buffers[1].birth = birth;
+        p.buffers[1].death = death;
+        assert!(collide.validate().is_err());
+
+        // Negative / fractional pool numbers are corruption, not data to
+        // saturate into plausible offsets.
+        let neg = plan.to_json().replacen("\"offset\": 0", "\"offset\": -8", 1);
+        assert_ne!(neg, plan.to_json(), "expected an offset-0 buffer to corrupt");
+        assert!(Plan::from_json(&neg).is_err());
+    }
+
+    #[test]
+    fn pool_watermark_matches_vanilla_closed_form() {
+        // For the vanilla setting the schedule watermark has a closed
+        // form: the Eq. 5 peak. The serialized layout must agree.
+        let m = zoo::kws_cnn();
+        let plan = Planner::for_model(m.clone())
+            .strategy(Vanilla)
+            .plan()
+            .unwrap();
+        let pool = plan.pool.as_ref().unwrap();
+        assert_eq!(pool.watermark, m.vanilla_peak_ram());
     }
 
     #[test]

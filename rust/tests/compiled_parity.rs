@@ -1,0 +1,130 @@
+//! Compiled-vs-interpreted parity: the compile-once executor
+//! (`exec::CompiledPlan`) must be **bit-identical** to the interpreted
+//! `exec::Engine` — same logits, same MAC count — across zoo models and
+//! every `PlanStrategy`, and its static pool must tell a consistent
+//! memory story (watermark == interpreted arena peak <= serialized
+//! `Plan` pool size).
+
+use msf_cnn::exec::Engine;
+use msf_cnn::memory::Arena;
+use msf_cnn::model::ModelChain;
+use msf_cnn::ops::{ParamGen, Tensor};
+use msf_cnn::optimizer::{strategy, Constraint, Constraints, Plan, Planner, PlanStrategy};
+use msf_cnn::zoo;
+
+fn input_for(m: &ModelChain, seed: u64) -> Tensor {
+    let s = m.shapes[0];
+    Tensor::from_data(
+        s.h as usize,
+        s.w as usize,
+        s.c as usize,
+        ParamGen::new(seed).fill(s.elems() as usize, 2.0),
+    )
+}
+
+/// Interpreted vs compiled on one plan; asserts the full parity contract.
+fn assert_parity(engine: &Engine, plan: &Plan, x: &Tensor, tag: &str) {
+    let mut arena = Arena::unbounded();
+    let interp = engine.run(&plan.setting, x, &mut arena).unwrap();
+    let compiled = engine.compile(&plan.setting);
+    let mut pool = compiled.make_pool();
+    let rep = compiled.run(x, &mut pool);
+
+    assert_eq!(rep.output, interp.output, "{tag}: logits diverged");
+    assert_eq!(rep.macs, interp.macs, "{tag}: MAC counts diverged");
+    assert_eq!(
+        rep.peak_ram, interp.peak_ram,
+        "{tag}: compiled watermark != interpreted arena peak"
+    );
+
+    // The serialized plan's memory map bounds what execution measured.
+    let layout = plan.pool.as_ref().expect("planner records the pool layout");
+    assert_eq!(layout.watermark, rep.peak_ram, "{tag}: layout watermark drifted");
+    assert!(
+        rep.peak_ram <= layout.pool_bytes,
+        "{tag}: measured pool peak {} exceeds static pool {}",
+        rep.peak_ram,
+        layout.pool_bytes
+    );
+
+    // A second run on the warm pool is deterministic (no state leaks
+    // between requests).
+    let rep2 = compiled.run(x, &mut pool);
+    assert_eq!(rep2.output, rep.output, "{tag}: warm rerun diverged");
+    assert_eq!(rep2.macs, rep.macs, "{tag}");
+}
+
+#[test]
+fn small_zoo_times_all_strategies_bit_identical() {
+    let strategies: [(&str, &dyn PlanStrategy); 5] = [
+        ("p1", &strategy::P1),
+        ("p2", &strategy::P2),
+        ("vanilla", &strategy::Vanilla),
+        ("head-fusion", &strategy::HeadFusion),
+        ("streamnet", &strategy::StreamNet),
+    ];
+    for name in ["quickstart", "tiny", "lenet", "kws"] {
+        let m = zoo::by_name(name).unwrap();
+        let engine = Engine::new(m.clone());
+        let x = input_for(&m, 17);
+        let mut planner = Planner::for_model(m.clone());
+        for (sname, s) in strategies {
+            let plan = planner.plan_with(s, Constraints::none()).unwrap();
+            assert_parity(&engine, &plan, &x, &format!("{name}/{sname}"));
+        }
+    }
+}
+
+#[test]
+fn paper_model_parity_on_fused_strategies() {
+    // MN2-vww5 is the expensive residual backbone; cover the two
+    // maximally-fused strategies (the vanilla/P2 paths are exercised on
+    // the small models above — running all five here would dominate the
+    // suite's wall clock for no extra coverage).
+    let m = zoo::mcunet_vww5();
+    let engine = Engine::new(m.clone());
+    let x = input_for(&m, 23);
+    let mut planner = Planner::for_model(m.clone());
+    for (sname, s) in [
+        ("p1", &strategy::P1 as &dyn PlanStrategy),
+        ("streamnet", &strategy::StreamNet),
+    ] {
+        let plan = planner.plan_with(s, Constraints::none()).unwrap();
+        assert_parity(&engine, &plan, &x, &format!("mn2-vww5/{sname}"));
+    }
+}
+
+#[test]
+fn budgeted_p2_plans_stay_bit_identical() {
+    // Constrained solves route through the same compiled path.
+    let m = zoo::quickstart();
+    let engine = Engine::new(m.clone());
+    let x = input_for(&m, 31);
+    let mut planner = Planner::for_model(m.clone());
+    for p_max in [4_000u64, 6_000, 12_000] {
+        let c = Constraints::none().with(Constraint::Ram(p_max));
+        if let Ok(plan) = planner.plan_with(&strategy::P2, c) {
+            assert_parity(&engine, &plan, &x, &format!("quickstart/p2@{p_max}"));
+        }
+    }
+}
+
+#[test]
+fn serialized_plan_roundtrip_serves_identically() {
+    // Save -> load -> compile must produce the same logits as the
+    // in-memory plan (the registry deploy path).
+    let m = zoo::tiny_cnn();
+    let engine = Engine::new(m.clone());
+    let x = input_for(&m, 41);
+    let plan = Planner::for_model(m.clone()).plan().unwrap();
+    let path = std::env::temp_dir().join("msfcnn-compiled-parity.plan.json");
+    plan.save(&path).unwrap();
+    let loaded = Plan::load(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(loaded.pool, plan.pool);
+
+    let c1 = engine.compile(&plan.setting);
+    let c2 = engine.compile(&loaded.setting);
+    let (mut p1, mut p2) = (c1.make_pool(), c2.make_pool());
+    assert_eq!(c1.run(&x, &mut p1).output, c2.run(&x, &mut p2).output);
+}

@@ -125,6 +125,39 @@ fn sixteen_kb_board_nearly_fits_mbv2_min_ram() {
 }
 
 #[test]
+fn compiled_pool_reconciles_with_analytic_and_interpreted_peaks() {
+    // The compile-once path must tell the same memory story: its
+    // watermark (known statically) equals the interpreted engine's
+    // measured arena peak, which in turn sits >= the analytic Eq. 5-6
+    // encoding for fused settings and == it for vanilla.
+    for name in ["quickstart", "tiny", "kws"] {
+        let m = zoo::by_name(name).unwrap();
+        let engine = Engine::new(m.clone());
+
+        let s = min_ram_setting(&m);
+        let compiled = engine.compile(&s);
+        assert!(
+            compiled.measured_peak() >= s.cost.peak_ram,
+            "{name}: compiled watermark {} below analytic {}",
+            compiled.measured_peak(),
+            s.cost.peak_ram
+        );
+        assert!(compiled.pool_bytes() >= compiled.measured_peak(), "{name}");
+        let mut arena = Arena::unbounded();
+        let r = engine.run(&s, &input_for(&m, 6), &mut arena).unwrap();
+        assert_eq!(compiled.measured_peak(), r.peak_ram, "{name}: watermark != arena peak");
+
+        // Vanilla: the compiled watermark is the Eq. 5 closed form.
+        let vanilla = Planner::for_model(m.clone())
+            .strategy(strategy::Vanilla)
+            .setting()
+            .unwrap();
+        let cv = engine.compile(&vanilla);
+        assert_eq!(cv.measured_peak(), m.vanilla_peak_ram(), "{name}");
+    }
+}
+
+#[test]
 fn oom_on_budget_that_is_too_small() {
     let m = zoo::quickstart();
     let engine = Engine::new(m.clone());

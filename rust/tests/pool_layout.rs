@@ -1,0 +1,247 @@
+//! Property coverage for `memory::planner`'s lifetime/offset assignment
+//! (seeded in-tree runner, `msf_cnn::util::prop`):
+//!
+//! 1. Offset-assigned buffers never overlap while both alive — including
+//!    residual-extended lifetimes and the death clamp on the final
+//!    tensor — and the vanilla pool is *exactly* the max concurrent
+//!    footprint (`pool_bytes == watermark`: offset assignment adds no
+//!    fragmentation on chain schedules).
+//! 2. The generalized fused-schedule layout (`plan_layout`) reproduces
+//!    the interpreted engine's measured arena peak as its watermark, on
+//!    random chains under both the min-RAM and vanilla strategies.
+
+use msf_cnn::exec::Engine;
+use msf_cnn::memory::{assign_offsets, max_concurrent, plan_layout, plan_pool, schedule_intervals};
+use msf_cnn::model::{Activation, Layer, ModelChain, TensorShape};
+use msf_cnn::ops::{ParamGen, Tensor};
+use msf_cnn::optimizer::{strategy, Constraints, Planner, PlanStrategy};
+use msf_cnn::util::prop::{check, Gen};
+use msf_cnn::{memory::Arena, zoo};
+
+/// Random small chain mixing plain convs with MBV2-style residual blocks
+/// (stride-1 expand/dw/project with a skip), optionally ending in the
+/// GlobalPool+Dense tail — every lifetime shape the planner handles.
+fn random_chain(g: &mut Gen) -> ModelChain {
+    let mut layers: Vec<Layer> = Vec::new();
+    let mut c = *g.pick(&[2u32, 3, 4]);
+    let mut h = g.u32_in(12, 20);
+    let mut w = g.u32_in(12, 20);
+    let input = TensorShape::new(h, w, c);
+    let blocks = g.usize_in(1, 3);
+    for bi in 0..blocks {
+        if g.bool() && h >= 6 && w >= 6 {
+            // Residual block: v_{expand-in} skips into the project output.
+            let e = c * 2;
+            let i0 = layers.len();
+            layers.push(Layer::pointwise(format!("e{bi}"), c, e, Activation::Relu6));
+            layers.push(Layer::dwconv(format!("d{bi}"), 3, 1, 1, e, Activation::Relu6));
+            layers.push(
+                Layer::pointwise(format!("p{bi}"), e, c, Activation::None).with_residual(i0),
+            );
+        } else {
+            let k = *g.pick(&[1u32, 3]);
+            let s = if k == 3 && h > 8 && w > 8 { *g.pick(&[1u32, 2]) } else { 1 };
+            let p = if k == 3 { 1 } else { 0 };
+            let cout = *g.pick(&[2u32, 4, 6]);
+            layers.push(Layer::conv(format!("c{bi}"), k, s, p, c, cout, Activation::Relu6));
+            c = cout;
+            h = (h + 2 * p - k) / s + 1;
+            w = (w + 2 * p - k) / s + 1;
+        }
+    }
+    if g.bool() {
+        layers.push(Layer::global_pool("gp", c));
+        layers.push(Layer::dense("fc", c, *g.pick(&[4u32, 10])));
+    }
+    ModelChain::new("prop", input, layers)
+}
+
+fn input_for(m: &ModelChain, seed: u64) -> Tensor {
+    let s = m.shapes[0];
+    Tensor::from_data(
+        s.h as usize,
+        s.w as usize,
+        s.c as usize,
+        ParamGen::new(seed).fill(s.elems() as usize, 2.0),
+    )
+}
+
+#[test]
+fn vanilla_pool_never_overlaps_and_is_exactly_the_watermark() {
+    check("vanilla-pool", 60, |g| {
+        let m = random_chain(g);
+        let n = m.num_layers();
+        let plan = plan_pool(&m);
+
+        // Pairwise: lifetime overlap => disjoint pool space.
+        for (i, a) in plan.buffers.iter().enumerate() {
+            for b in plan.buffers.iter().skip(i + 1) {
+                let live = !(a.death < b.birth || b.death < a.birth);
+                let space = a.offset < b.offset + b.bytes && b.offset < a.offset + a.bytes;
+                if live && space {
+                    return Err(format!("v{} and v{} collide", a.tensor, b.tensor));
+                }
+            }
+        }
+        // Death clamp: no buffer outlives the final layer step, and the
+        // output tensor v_n dies exactly at step n-1.
+        for b in &plan.buffers {
+            if b.death > n - 1 {
+                return Err(format!("v{} death {} past final step {}", b.tensor, b.death, n - 1));
+            }
+        }
+        if let Some(out) = plan.buffers.iter().find(|b| b.tensor == n) {
+            if out.death != n - 1 {
+                return Err(format!("v{n} death {} != clamped {}", out.death, n - 1));
+            }
+        }
+        // Residual-extended lifetimes: skip sources live to the consumer.
+        for (j, l) in m.layers.iter().enumerate() {
+            if let Some(src) = l.residual_from {
+                let buf = plan
+                    .buffers
+                    .iter()
+                    .find(|p| p.tensor == src)
+                    .ok_or_else(|| format!("stash source v{src} missing"))?;
+                if buf.death < j {
+                    return Err(format!("v{src} freed at {} before consumer {j}", buf.death));
+                }
+            }
+        }
+        // Zero fragmentation on the chain schedule: the pool is exactly
+        // the max concurrent footprint.
+        let items: Vec<(u64, usize, usize)> = plan
+            .buffers
+            .iter()
+            .map(|p| (p.bytes, p.birth, p.death + 1))
+            .collect();
+        let watermark = max_concurrent(&items);
+        if plan.pool_bytes != watermark {
+            return Err(format!(
+                "pool {} != max concurrent footprint {} on {}",
+                plan.pool_bytes,
+                watermark,
+                m.describe()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fused_layout_watermark_equals_interpreted_measured_peak() {
+    check("fused-layout-vs-engine", 25, |g| {
+        let m = random_chain(g);
+        let engine = Engine::new(m.clone());
+        let x = input_for(&m, g.seed);
+        let mut planner = Planner::for_model(m.clone());
+        for s in [&strategy::P1 as &dyn PlanStrategy, &strategy::Vanilla] {
+            let Ok(plan) = planner.plan_with(s, Constraints::none()) else {
+                continue;
+            };
+            let layout = plan_layout(&m, &plan.setting);
+            let mut arena = Arena::unbounded();
+            let r = engine
+                .run(&plan.setting, &x, &mut arena)
+                .map_err(|e| format!("{} oom: {e}", s.name()))?;
+            if layout.watermark != r.peak_ram {
+                return Err(format!(
+                    "{}: layout watermark {} != measured {} on {}",
+                    s.name(),
+                    layout.watermark,
+                    r.peak_ram,
+                    plan.setting.describe()
+                ));
+            }
+            if layout.pool_bytes < layout.watermark {
+                return Err(format!("{}: pool below watermark", s.name()));
+            }
+            // Half-open lifetime overlap => disjoint pool space.
+            for (i, a) in layout.buffers.iter().enumerate() {
+                for b in layout.buffers.iter().skip(i + 1) {
+                    let live = a.birth < b.death && b.birth < a.death;
+                    let space =
+                        a.offset < b.offset + b.bytes && b.offset < a.offset + a.bytes;
+                    if live && space {
+                        return Err(format!("'{}' and '{}' collide", a.label, b.label));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn runtime_lifetimes_cover_accounting_lifetimes() {
+    check("rt-lifetimes", 40, |g| {
+        let m = random_chain(g);
+        let setting = Planner::for_model(m.clone())
+            .setting()
+            .map_err(|e| format!("{e:#}"))?;
+        for s in schedule_intervals(&m, &setting) {
+            if s.birth >= s.death {
+                return Err(format!("'{}' has empty lifetime", s.label));
+            }
+            if s.rt_death < s.death {
+                return Err(format!("'{}' runtime lifetime shorter than accounting", s.label));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn generic_offset_assignment_is_collision_free() {
+    // Pure-interval property (no model): random half-open intervals.
+    check("assign-offsets", 120, |g| {
+        let n = g.usize_in(2, 12);
+        let items: Vec<(u64, usize, usize)> = (0..n)
+            .map(|_| {
+                let birth = g.usize_in(0, 20);
+                let len = g.usize_in(1, 10);
+                (g.usize_in(1, 512) as u64, birth, birth + len)
+            })
+            .collect();
+        let (offsets, total) = assign_offsets(&items);
+        let watermark = max_concurrent(&items);
+        if total < watermark {
+            return Err(format!("total {total} below watermark {watermark}"));
+        }
+        for i in 0..n {
+            for j in i + 1..n {
+                let (sb, bb, db) = items[i];
+                let (sj, bj, dj) = items[j];
+                let live = bb < dj && bj < db;
+                let space = offsets[i] < offsets[j] + sj && offsets[j] < offsets[i] + sb;
+                if live && space {
+                    return Err(format!("items {i} and {j} collide: {items:?} {offsets:?}"));
+                }
+                if offsets[i] + sb > total || offsets[j] + sj > total {
+                    return Err("buffer overruns total".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn zoo_models_layouts_are_exact_on_vanilla() {
+    // Deterministic anchor on the real zoo: vanilla watermark is the
+    // Eq. 5 closed form and the pool is fragmentation-free.
+    for name in ["quickstart", "tiny", "lenet", "kws", "mn2-vww5"] {
+        let m = zoo::by_name(name).unwrap();
+        let vanilla = Planner::for_model(m.clone())
+            .strategy(strategy::Vanilla)
+            .setting()
+            .unwrap();
+        let layout = plan_layout(&m, &vanilla);
+        assert_eq!(layout.watermark, m.vanilla_peak_ram(), "{name}");
+        assert_eq!(
+            plan_pool(&m).pool_bytes,
+            m.vanilla_peak_ram(),
+            "{name}: vanilla pool fragmented"
+        );
+    }
+}
