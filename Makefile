@@ -8,7 +8,7 @@
 
 CARGO ?= cargo
 
-.PHONY: verify build test bench-build clippy fmt doc bench artifacts clean
+.PHONY: verify build test bench-build clippy fmt doc bench bench-snapshot bench-smoke artifacts clean
 
 verify: build test bench-build clippy fmt doc
 
@@ -44,6 +44,23 @@ doc:
 
 bench:
 	$(CARGO) bench
+
+# Regenerate the committed perf snapshots (BENCH_infer.json /
+# BENCH_serve.json) at full fidelity, then gate them on the stable
+# schema (`msfcnn bench check` = the obs::export validators).
+bench-snapshot:
+	$(CARGO) bench --bench infer_hot
+	$(CARGO) bench --bench serve_load
+	$(CARGO) run --release --bin msfcnn -- bench check
+
+# Seconds-scale smoke pass (CI): validate the committed snapshots, rerun
+# both harnesses in smoke mode, and validate the fresh output — schema
+# drift fails on either side. Don't commit the smoke numbers.
+bench-smoke:
+	$(CARGO) run --release --bin msfcnn -- bench check
+	MSFCNN_BENCH_SMOKE=1 $(CARGO) bench --bench infer_hot
+	MSFCNN_BENCH_SMOKE=1 $(CARGO) bench --bench serve_load
+	$(CARGO) run --release --bin msfcnn -- bench check
 
 # Build-time Python: AOT-lower the JAX/Pallas model to HLO-text artifacts
 # (requires jax; the Rust suite skips artifact tests when absent).

@@ -1,11 +1,18 @@
 //! Per-request serving latency: interpreted engine (re-walks the setting,
 //! arena-allocates per run) vs the compile-once path (cold compile vs
-//! warm allocation-free run). Emits `BENCH_infer.json` at the repo root —
-//! the serving-hot-path perf trajectory CI and future PRs track.
+//! warm allocation-free run), now with per-step attribution of the warm
+//! path from `obs::profile_plan`. Emits `BENCH_infer.json` at the repo
+//! root through the stable `obs::export` schema — the serving-hot-path
+//! perf trajectory `msfcnn bench check` and CI gate on.
+//!
+//! Set `MSFCNN_BENCH_SMOKE=1` for a seconds-scale smoke run (CI): fewer
+//! iterations, same models, same snapshot schema.
 
 use msf_cnn::exec::Engine;
 use msf_cnn::memory::Arena;
 use msf_cnn::model::ModelChain;
+use msf_cnn::obs::export::{infer_snapshot, validate_infer_snapshot, InferRow};
+use msf_cnn::obs::profile_plan;
 use msf_cnn::ops::{ParamGen, Tensor};
 use msf_cnn::optimizer::Planner;
 use msf_cnn::util::bench::Bencher;
@@ -22,10 +29,13 @@ fn input_for(m: &ModelChain, seed: u64) -> Tensor {
 }
 
 fn main() {
-    let b = Bencher::default();
-    println!("== infer hot-path benches (interpreted vs compiled) ==");
+    let smoke = std::env::var("MSFCNN_BENCH_SMOKE").is_ok_and(|v| v != "0");
+    let b = if smoke { Bencher::quick() } else { Bencher::default() };
+    let profile_runs = if smoke { 5 } else { 50 };
+    let tag = if smoke { ", smoke" } else { "" };
+    println!("== infer hot-path benches (interpreted vs compiled{tag}) ==");
 
-    let mut rows: Vec<String> = Vec::new();
+    let mut rows: Vec<InferRow> = Vec::new();
     for name in ["quickstart", "kws"] {
         let m = zoo::by_name(name).unwrap();
         let engine = Engine::new(m.clone());
@@ -53,21 +63,36 @@ fn main() {
             out[0]
         });
 
-        rows.push(format!(
-            "    {{\"model\": \"{name}\", \"interpreted_us\": {:.1}, \"compile_cold_us\": {:.1}, \"compiled_warm_us\": {:.1}, \"warm_speedup\": {:.3}, \"pool_bytes\": {}, \"watermark_bytes\": {}}}",
-            interp.mean_us(),
-            cold.mean_us(),
-            warm.mean_us(),
-            interp.mean_us() / warm.mean_us(),
-            compiled.pool_bytes(),
-            compiled.measured_peak(),
-        ));
+        // Per-step attribution of the warm path: which compiled steps
+        // dominate, with p50/p95 per step.
+        let profile = profile_plan(&compiled, &x, profile_runs);
+        for s in profile.top_k(3) {
+            println!(
+                "  {name}: {:<18} {:>8.1} us mean  ({:.1}% of in-plan time)",
+                s.meta.label,
+                s.mean_us,
+                s.share * 100.0
+            );
+        }
+
+        rows.push(InferRow {
+            model: name.to_string(),
+            interpreted_us: interp.mean_us(),
+            compile_cold_us: cold.mean_us(),
+            compiled_warm_us: warm.mean_us(),
+            pool_bytes: compiled.pool_bytes(),
+            watermark_bytes: compiled.measured_peak(),
+            profile,
+        });
     }
 
-    let json = format!(
-        "{{\n  \"bench\": \"infer_hot\",\n  \"unit\": \"us-mean\",\n  \"results\": [\n{}\n  ]\n}}\n",
-        rows.join(",\n")
-    );
+    let json = infer_snapshot(&rows);
+    // Self-check against the stable schema before committing bytes to
+    // disk — a writer/validator drift fails the bench, not CI later.
+    if let Err(e) = validate_infer_snapshot(&json) {
+        eprintln!("BENCH_infer.json failed its own schema check: {e}");
+        std::process::exit(1);
+    }
     match std::fs::write("BENCH_infer.json", &json) {
         Ok(()) => println!("wrote BENCH_infer.json"),
         Err(e) => eprintln!("could not write BENCH_infer.json: {e}"),

@@ -1,0 +1,147 @@
+//! Serving load harness: concurrent submitter threads drive a live
+//! [`MultiModelServer`] across several zoo models and snapshot the
+//! serving telemetry — per-model throughput, latency percentiles (exact
+//! window + mergeable histograms), queue-wait vs execute splits, queue
+//! peaks, and rejection rates. Emits `BENCH_serve.json` at the repo root
+//! through the stable `obs::export` schema, the serving-load perf
+//! trajectory `msfcnn bench check` and CI gate on.
+//!
+//! Set `MSFCNN_BENCH_SMOKE=1` for a seconds-scale smoke run (CI): fewer
+//! requests, same models, same snapshot schema.
+
+use std::time::Instant;
+
+use msf_cnn::coordinator::{ModelSpec, MultiModelServer};
+use msf_cnn::obs::export::{
+    serve_snapshot, validate_serve_snapshot, ServeAggregate, ServeConfig, ServeRow,
+};
+use msf_cnn::obs::TraceLog;
+use msf_cnn::ops::ParamGen;
+use msf_cnn::optimizer::Planner;
+use msf_cnn::zoo;
+
+const MODELS: [&str; 3] = ["quickstart", "kws", "tiny"];
+
+fn main() {
+    let smoke = std::env::var("MSFCNN_BENCH_SMOKE").is_ok_and(|v| v != "0");
+    let per_thread = if smoke { 50 } else { 400 };
+    let threads = 4usize;
+    let tag = if smoke { " (smoke)" } else { "" };
+    println!("== serve load harness{tag}: {threads} threads x {per_thread} requests ==");
+
+    let mut specs = Vec::new();
+    let mut inputs: Vec<(String, Vec<f32>)> = Vec::new();
+    for name in MODELS {
+        let model = zoo::by_name(name).unwrap();
+        let setting = Planner::for_model(model.clone()).setting().unwrap();
+        let n = model.shapes[0].elems() as usize;
+        inputs.push((name.to_string(), ParamGen::new(9).fill(n, 2.0)));
+        specs.push(ModelSpec::engine(name, model, setting).with_queue(64, 8));
+    }
+
+    let server = MultiModelServer::start(specs).expect("server start");
+    let handle = server.handle();
+    let trace = TraceLog::default();
+    handle.set_trace_sink(trace.clone());
+
+    // Submitter threads round-robin the models; blocking `infer` keeps
+    // each thread at one in-flight request, so contention comes from the
+    // thread count, not an unbounded open loop.
+    let t0 = Instant::now();
+    let workers: Vec<_> = (0..threads)
+        .map(|t| {
+            let handle = handle.clone();
+            let inputs = inputs.clone();
+            std::thread::spawn(move || {
+                let mut ok = 0usize;
+                let mut rejected = 0usize;
+                for i in 0..per_thread {
+                    let (id, input) = &inputs[(t + i) % inputs.len()];
+                    match handle.infer(id, input.clone()) {
+                        Ok(_) => ok += 1,
+                        Err(_) => rejected += 1,
+                    }
+                }
+                (ok, rejected)
+            })
+        })
+        .collect();
+    let mut ok = 0usize;
+    let mut rejected = 0usize;
+    for w in workers {
+        let (o, r) = w.join().expect("submitter thread");
+        ok += o;
+        rejected += r;
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let offered = threads * per_thread;
+    println!(
+        "{ok}/{offered} ok ({rejected} rejected) in {wall_s:.2}s ({:.1} req/s)",
+        ok as f64 / wall_s.max(1e-9)
+    );
+
+    let metrics = handle.metrics();
+    let mut rows: Vec<ServeRow> = Vec::new();
+    for (id, m) in metrics.per_model() {
+        let hist = m.histogram();
+        let stats = m.stats();
+        rows.push(ServeRow {
+            model: id.to_string(),
+            completed: m.completed(),
+            rejections: m.rejections(),
+            shutdown_drops: m.shutdown_drops(),
+            throughput_rps: m.throughput_rps().unwrap_or(0.0),
+            mean_us: hist.mean_us().unwrap_or(0.0),
+            p50_us: stats.map_or_else(|| hist.quantile(0.50).unwrap_or(0.0), |s| s.p50_us),
+            p95_us: stats.map_or_else(|| hist.quantile(0.95).unwrap_or(0.0), |s| s.p95_us),
+            p99_us: stats.map_or_else(|| hist.quantile(0.99).unwrap_or(0.0), |s| s.p99_us),
+            max_us: hist.max_us().unwrap_or(0.0),
+            queue_wait_mean_us: m.queue_wait_mean_us().unwrap_or(0.0),
+            exec_mean_us: m.exec_mean_us().unwrap_or(0.0),
+            queue_peak: m.queue_peak(),
+        });
+        println!(
+            "  {id:<12} {:>6} done  p50 {:>8.0} us  p95 {:>8.0} us  wait {:>6.0} us  exec {:>6.0} us  peak {}",
+            m.completed(),
+            rows.last().unwrap().p50_us,
+            rows.last().unwrap().p95_us,
+            rows.last().unwrap().queue_wait_mean_us,
+            rows.last().unwrap().exec_mean_us,
+            m.queue_peak(),
+        );
+    }
+
+    // Fleet-wide aggregate from the merged per-model histograms — the
+    // mergeability the histogram exists for.
+    let merged = metrics.histogram();
+    let agg = ServeAggregate {
+        completed: metrics.completed(),
+        rejections: metrics.rejections(),
+        throughput_rps: metrics.completed() as f64 / wall_s.max(1e-9),
+        p50_us: merged.quantile(0.50).unwrap_or(0.0),
+        p95_us: merged.quantile(0.95).unwrap_or(0.0),
+        p99_us: merged.quantile(0.99).unwrap_or(0.0),
+    };
+
+    drop(handle);
+    server.shutdown();
+    println!("trace: {} control-plane event(s)", trace.len());
+
+    let cfg = ServeConfig {
+        threads,
+        requests: offered,
+        smoke,
+        models: MODELS.iter().map(|s| s.to_string()).collect(),
+    };
+    let json = serve_snapshot(&cfg, &rows, &agg);
+    // Self-check against the stable schema before committing bytes to
+    // disk — a writer/validator drift fails the bench, not CI later.
+    if let Err(e) = validate_serve_snapshot(&json) {
+        eprintln!("BENCH_serve.json failed its own schema check: {e}");
+        std::process::exit(1);
+    }
+    match std::fs::write("BENCH_serve.json", &json) {
+        Ok(()) => println!("wrote BENCH_serve.json"),
+        Err(e) => eprintln!("could not write BENCH_serve.json: {e}"),
+    }
+}

@@ -1,9 +1,21 @@
 //! Request metrics, per registered model: counts, latency percentiles,
-//! queue depth, backpressure rejections, and shutdown drops — plus
-//! aggregate views across the whole registry.
+//! queue-wait vs execute split, throughput, queue depth/peak,
+//! backpressure rejections, and shutdown drops — plus aggregate views
+//! across the whole registry.
+//!
+//! Two complementary latency stores coexist per model. An **exact ring**
+//! of the most recent [`SAMPLE_WINDOW`] samples gives tight percentiles
+//! over recent traffic ([`ModelMetrics::stats`]), while a fixed-bucket
+//! [`LatencyHistogram`] absorbs every sample ever recorded in O(1)
+//! memory and stays **mergeable** across models
+//! ([`Metrics::histogram`]) — the aggregation exact windows cannot do
+//! without re-shipping samples. `count` and `mean` are exact lifetime
+//! values in both views.
 
 use std::collections::BTreeMap;
-use std::time::Duration;
+use std::time::{Duration, Instant};
+
+use crate::obs::{nearest_rank, LatencyHistogram};
 
 /// Latency summary over a set of completed requests.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -11,6 +23,7 @@ pub struct LatencyStats {
     pub count: usize,
     pub mean_us: f64,
     pub p50_us: f64,
+    pub p95_us: f64,
     pub p99_us: f64,
     pub max_us: f64,
 }
@@ -21,15 +34,12 @@ fn stats_of(samples: &[f64]) -> Option<LatencyStats> {
     }
     let mut v = samples.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let pct = |p: f64| -> f64 {
-        let idx = ((v.len() as f64 - 1.0) * p).round() as usize;
-        v[idx]
-    };
     Some(LatencyStats {
         count: v.len(),
         mean_us: v.iter().sum::<f64>() / v.len() as f64,
-        p50_us: pct(0.50),
-        p99_us: pct(0.99),
+        p50_us: nearest_rank(&v, 0.50),
+        p95_us: nearest_rank(&v, 0.95),
+        p99_us: nearest_rank(&v, 0.99),
         max_us: *v.last().unwrap(),
     })
 }
@@ -45,25 +55,50 @@ const SAMPLE_WINDOW: usize = 4096;
 pub struct ModelMetrics {
     samples_us: Vec<f64>,
     next_sample: usize,
+    hist: LatencyHistogram,
     completed: usize,
     sum_us: f64,
+    /// Requests recorded with a queue-wait/execute split
+    /// ([`Self::record_timed`]); the split means divide by this, not by
+    /// `completed`, so split-less [`Self::record`] calls don't skew them.
+    timed: usize,
+    sum_queue_wait_us: f64,
+    sum_exec_us: f64,
+    first_done: Option<Instant>,
+    last_done: Option<Instant>,
     batches: usize,
     queue_full_rejections: usize,
     shutdown_drops: usize,
     queue_depth: usize,
+    queue_peak: usize,
 }
 
 impl ModelMetrics {
+    /// Record one completed request's end-to-end latency.
     pub fn record(&mut self, latency: Duration) {
         let us = latency.as_secs_f64() * 1e6;
         self.completed += 1;
         self.sum_us += us;
+        self.hist.record_us(us);
+        let now = Instant::now();
+        self.first_done.get_or_insert(now);
+        self.last_done = Some(now);
         if self.samples_us.len() < SAMPLE_WINDOW {
             self.samples_us.push(us);
         } else {
             self.samples_us[self.next_sample] = us;
             self.next_sample = (self.next_sample + 1) % SAMPLE_WINDOW;
         }
+    }
+
+    /// [`Self::record`] with the latency split into the time the request
+    /// waited in the bounded queue and the time its backend ran. The
+    /// end-to-end sample is `queue_wait + exec`.
+    pub fn record_timed(&mut self, queue_wait: Duration, exec: Duration) {
+        self.record(queue_wait + exec);
+        self.timed += 1;
+        self.sum_queue_wait_us += queue_wait.as_secs_f64() * 1e6;
+        self.sum_exec_us += exec.as_secs_f64() * 1e6;
     }
 
     pub fn record_batch(&mut self, _size: usize) {
@@ -82,6 +117,7 @@ impl ModelMetrics {
 
     pub(crate) fn queue_inc(&mut self) {
         self.queue_depth += 1;
+        self.queue_peak = self.queue_peak.max(self.queue_depth);
     }
 
     pub(crate) fn queue_dec(&mut self) {
@@ -92,6 +128,12 @@ impl ModelMetrics {
     /// model's executor).
     pub fn queue_depth(&self) -> usize {
         self.queue_depth
+    }
+
+    /// High-water mark of [`Self::queue_depth`] over the model's
+    /// lifetime.
+    pub fn queue_peak(&self) -> usize {
+        self.queue_peak
     }
 
     pub fn rejections(&self) -> usize {
@@ -110,6 +152,44 @@ impl ModelMetrics {
     /// capped by the sample window).
     pub fn completed(&self) -> usize {
         self.completed
+    }
+
+    /// Mean time completed requests spent queued before an executor
+    /// popped them (over [`Self::record_timed`] requests).
+    pub fn queue_wait_mean_us(&self) -> Option<f64> {
+        if self.timed > 0 {
+            Some(self.sum_queue_wait_us / self.timed as f64)
+        } else {
+            None
+        }
+    }
+
+    /// Mean backend execution time (over [`Self::record_timed`]
+    /// requests).
+    pub fn exec_mean_us(&self) -> Option<f64> {
+        if self.timed > 0 {
+            Some(self.sum_exec_us / self.timed as f64)
+        } else {
+            None
+        }
+    }
+
+    /// Completed requests per second over the model's active window
+    /// (first to last completion); `None` below 2 completions.
+    pub fn throughput_rps(&self) -> Option<f64> {
+        let (first, last) = (self.first_done?, self.last_done?);
+        let window = last.duration_since(first).as_secs_f64();
+        if self.completed >= 2 && window > 0.0 {
+            Some((self.completed - 1) as f64 / window)
+        } else {
+            None
+        }
+    }
+
+    /// The model's lifetime latency histogram (every sample ever
+    /// recorded; mergeable across models).
+    pub fn histogram(&self) -> &LatencyHistogram {
+        &self.hist
     }
 
     /// Latency summary: `count`/`mean_us` are exact lifetime values;
@@ -158,6 +238,22 @@ impl Metrics {
         self.models.values().map(ModelMetrics::batches).sum()
     }
 
+    /// Total requests completed across every model.
+    pub fn completed(&self) -> usize {
+        self.models.values().map(ModelMetrics::completed).sum()
+    }
+
+    /// The per-model lifetime histograms folded into one fleet-wide
+    /// histogram (identical fixed bucket bounds, so merging is exact
+    /// count addition).
+    pub fn histogram(&self) -> LatencyHistogram {
+        let mut merged = LatencyHistogram::new();
+        for m in self.models.values() {
+            merged.merge(&m.hist);
+        }
+        merged
+    }
+
     /// Latency stats pooled across every model (`count`/`mean_us` exact
     /// lifetime values, percentiles over the per-model sample windows).
     pub fn stats(&self) -> Option<LatencyStats> {
@@ -176,22 +272,45 @@ mod tests {
     use super::*;
 
     #[test]
-    fn percentiles_ordered() {
+    fn percentiles_pinned_on_known_samples() {
+        // 1..=100 µs: the ceil-based nearest rank is exact — p50 is the
+        // 50th sample, p95 the 95th, p99 the 99th.
         let mut m = Metrics::default();
         for i in 1..=100 {
             m.model_mut("a").record(Duration::from_micros(i));
         }
         let s = m.stats().unwrap();
         assert_eq!(s.count, 100);
-        assert!(s.p50_us <= s.p99_us);
-        assert!(s.p99_us <= s.max_us);
-        assert!((s.p50_us - 50.0).abs() <= 1.0);
+        assert_eq!(s.p50_us, 50.0);
+        assert_eq!(s.p95_us, 95.0);
+        assert_eq!(s.p99_us, 99.0);
+        assert_eq!(s.max_us, 100.0);
+
+        // Small windows must not round the rank down: p95 over 10
+        // samples is the 10th ((0.95 * 10).ceil() = 10), p50 the 5th.
+        let mut small = ModelMetrics::default();
+        for i in 1..=10 {
+            small.record(Duration::from_micros(i * 10));
+        }
+        let s = small.stats().unwrap();
+        assert_eq!(s.p50_us, 50.0);
+        assert_eq!(s.p95_us, 100.0);
+        assert_eq!(s.p99_us, 100.0);
+
+        // A single sample is every percentile.
+        let mut one = ModelMetrics::default();
+        one.record(Duration::from_micros(7));
+        let s = one.stats().unwrap();
+        assert_eq!((s.p50_us, s.p95_us, s.p99_us, s.max_us), (7.0, 7.0, 7.0, 7.0));
     }
 
     #[test]
     fn empty_stats_none() {
         assert!(Metrics::default().stats().is_none());
         assert!(ModelMetrics::default().stats().is_none());
+        assert!(ModelMetrics::default().throughput_rps().is_none());
+        assert!(ModelMetrics::default().queue_wait_mean_us().is_none());
+        assert_eq!(Metrics::default().histogram().count(), 0);
     }
 
     #[test]
@@ -210,6 +329,7 @@ mod tests {
         assert_eq!(m.rejections(), 1);
         assert_eq!(m.shutdown_drops(), 1);
         assert_eq!(m.batches(), 1);
+        assert_eq!(m.completed(), 3);
         assert_eq!(m.stats().unwrap().count, 3);
         let ids: Vec<&str> = m.per_model().map(|(id, _)| id).collect();
         assert_eq!(ids, vec!["a", "b"]);
@@ -228,19 +348,79 @@ mod tests {
         // Mean is exact over the lifetime: sum of 1..=total over total.
         let exact_mean = (1..=total as u64).sum::<u64>() as f64 / total as f64;
         assert!((s.mean_us - exact_mean).abs() < 1e-6, "{} vs {exact_mean}", s.mean_us);
-        // Percentiles come from the recent window only.
-        assert!(s.p50_us >= 1000.0);
+        // Percentiles come from the recent window only: every retained
+        // sample is one of the most recent SAMPLE_WINDOW, so even the
+        // window's minimum exceeds the evicted prefix.
+        assert!(s.p50_us > (total - SAMPLE_WINDOW) as f64);
+        assert!(s.p95_us >= s.p50_us && s.p99_us >= s.p95_us);
+        assert_eq!(s.max_us, total as f64);
+        // The histogram saw every sample, not just the window.
+        assert_eq!(m.histogram().count(), total as u64);
     }
 
     #[test]
-    fn queue_depth_saturates_at_zero() {
+    fn timed_records_split_wait_and_exec() {
+        let mut m = ModelMetrics::default();
+        m.record_timed(Duration::from_micros(30), Duration::from_micros(70));
+        m.record_timed(Duration::from_micros(10), Duration::from_micros(90));
+        assert_eq!(m.completed(), 2);
+        assert!((m.queue_wait_mean_us().unwrap() - 20.0).abs() < 1e-9);
+        assert!((m.exec_mean_us().unwrap() - 80.0).abs() < 1e-9);
+        // The end-to-end sample is the sum of the split.
+        let s = m.stats().unwrap();
+        assert!((s.mean_us - 100.0).abs() < 1e-9);
+        // Split-less records don't dilute the split means.
+        m.record(Duration::from_micros(500));
+        assert!((m.queue_wait_mean_us().unwrap() - 20.0).abs() < 1e-9);
+        assert_eq!(m.completed(), 3);
+    }
+
+    #[test]
+    fn histograms_merge_across_models() {
+        let mut m = Metrics::default();
+        for i in 1..=40 {
+            m.model_mut("a").record(Duration::from_micros(i));
+        }
+        for i in 1..=60 {
+            m.model_mut("b").record(Duration::from_micros(i * 100));
+        }
+        let h = m.histogram();
+        assert_eq!(h.count(), 100);
+        assert_eq!(
+            h.count(),
+            m.model("a").unwrap().histogram().count()
+                + m.model("b").unwrap().histogram().count()
+        );
+        // Quantiles of the merged view span both models' ranges.
+        assert!(h.quantile(0.99).unwrap() >= 1000.0);
+        assert!(h.quantile(0.05).unwrap() <= 100.0);
+    }
+
+    #[test]
+    fn queue_depth_saturates_at_zero_and_peak_is_sticky() {
         let mut m = ModelMetrics::default();
         m.queue_inc();
         m.queue_inc();
         m.queue_dec();
         assert_eq!(m.queue_depth(), 1);
+        assert_eq!(m.queue_peak(), 2);
         m.queue_dec();
         m.queue_dec();
         assert_eq!(m.queue_depth(), 0);
+        assert_eq!(m.queue_peak(), 2, "peak survives the drain");
+        m.queue_inc();
+        assert_eq!(m.queue_peak(), 2, "peak only moves on a new high-water mark");
+    }
+
+    #[test]
+    fn throughput_needs_an_active_window() {
+        let mut m = ModelMetrics::default();
+        m.record(Duration::from_micros(5));
+        assert!(m.throughput_rps().is_none(), "one completion has no window");
+        std::thread::sleep(Duration::from_millis(5));
+        m.record(Duration::from_micros(5));
+        let rps = m.throughput_rps().unwrap();
+        // 1 inter-completion interval over >= 5 ms.
+        assert!(rps > 0.0 && rps <= 220.0, "{rps}");
     }
 }

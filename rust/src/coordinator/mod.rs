@@ -23,11 +23,15 @@
 //! Specs describe AOT artifacts, in-memory fusion settings, or pre-solved
 //! serialized [`crate::optimizer::Plan`]s ([`ModelSpec::plan_file`]), so
 //! many zoo models can be served concurrently without a Python step.
-//! [`Metrics`] reports queue depth, latency percentiles, rejections, and
-//! shutdown drops per model, and survives hot swaps; shutdown drains
-//! queued requests with structured [`ServeError::ShuttingDown`] replies
-//! instead of dropping them. [`InferenceServer`] keeps the original
-//! single-model surface. Built on std threads/channels (offline
+//! [`Metrics`] reports queue depth/peak, latency percentiles (exact
+//! recent window + mergeable [`crate::obs::LatencyHistogram`]s),
+//! queue-wait vs execute splits, throughput, rejections, and shutdown
+//! drops per model, and survives hot swaps; shutdown drains queued
+//! requests with structured [`ServeError::ShuttingDown`] replies instead
+//! of dropping them. Control-plane transitions emit structured
+//! [`crate::obs::TraceEvent`]s into a pluggable sink
+//! ([`ServerHandle::set_trace_sink`]). [`InferenceServer`] keeps the
+//! original single-model surface. Built on std threads/channels (offline
 //! environment; DESIGN.md §Substitutions).
 
 mod metrics;
@@ -35,7 +39,7 @@ mod registry;
 mod server;
 
 pub use metrics::{LatencyStats, Metrics, ModelMetrics};
-pub use registry::{PlanEntry, PlanRegistry, ScanReport};
+pub use registry::{PlanEntry, PlanRegistry, ScanConflict, ScanReport};
 pub use server::{
     BoundHandle, InferenceServer, ModelSpec, MultiModelServer, Pending, ServeError,
     ServerConfig, ServerHandle,

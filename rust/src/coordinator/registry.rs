@@ -47,9 +47,23 @@ pub struct PlanEntry {
     pub file_len: u64,
 }
 
-/// What one [`PlanRegistry::scan`] observed, as model ids (and load
-/// failures as `(path, error)` pairs — a broken file never poisons the
-/// rest of the directory, and the previous good version stays live).
+/// Two plan files claiming the same model id in one scan: the registry
+/// deterministically prefers the `.plan.json` spelling (then the first
+/// path in sorted order) and skips the rest, but the collision is
+/// surfaced — a silently shadowed plan file is a deploy footgun.
+#[derive(Debug, Clone)]
+pub struct ScanConflict {
+    pub model_id: String,
+    /// The file the registry loaded for this id.
+    pub chosen: PathBuf,
+    /// The file it skipped.
+    pub skipped: PathBuf,
+}
+
+/// What one [`PlanRegistry::scan`] observed, as model ids (load failures
+/// as `(path, error)` pairs and id collisions as [`ScanConflict`]s — a
+/// broken or shadowed file never poisons the rest of the directory, and
+/// the previous good version stays live).
 #[derive(Debug, Default, Clone)]
 pub struct ScanReport {
     /// Models seen for the first time.
@@ -60,16 +74,20 @@ pub struct ScanReport {
     pub removed: Vec<String>,
     /// Files that could not be loaded or validated this scan.
     pub errors: Vec<(PathBuf, String)>,
+    /// Model ids claimed by more than one plan file this scan.
+    pub conflicts: Vec<ScanConflict>,
 }
 
 impl ScanReport {
-    /// True when the scan observed no change (errors included: a file
-    /// that turned unreadable is a change worth surfacing).
+    /// True when the scan observed no change (errors and conflicts
+    /// included: a file that turned unreadable or shadowed is a change
+    /// worth surfacing).
     pub fn is_empty(&self) -> bool {
         self.added.is_empty()
             && self.updated.is_empty()
             && self.removed.is_empty()
             && self.errors.is_empty()
+            && self.conflicts.is_empty()
     }
 }
 
@@ -159,15 +177,37 @@ impl PlanRegistry {
             .collect();
         files.sort();
 
+        // Group candidate files by model id so collisions resolve
+        // deterministically: `.plan.json` beats `.json`, then sorted
+        // order; every skipped file is reported as a conflict.
+        let mut by_id: BTreeMap<String, Vec<PathBuf>> = BTreeMap::new();
         for path in files {
             let Some(model_id) = model_id_of(&path) else { continue };
-            if !seen.insert(model_id.clone()) {
-                report.errors.push((
-                    path,
-                    format!("duplicate plan file for model id '{model_id}' (skipped)"),
-                ));
-                continue;
+            by_id.entry(model_id).or_default().push(path);
+        }
+        let mut chosen_files: Vec<(String, PathBuf)> = Vec::new();
+        for (model_id, mut candidates) in by_id {
+            let pick = candidates
+                .iter()
+                .position(|p| {
+                    p.file_name()
+                        .and_then(|n| n.to_str())
+                        .is_some_and(|n| n.ends_with(".plan.json"))
+                })
+                .unwrap_or(0);
+            let chosen = candidates.remove(pick);
+            for skipped in candidates {
+                report.conflicts.push(ScanConflict {
+                    model_id: model_id.clone(),
+                    chosen: chosen.clone(),
+                    skipped,
+                });
             }
+            chosen_files.push((model_id, chosen));
+        }
+
+        for (model_id, path) in chosen_files {
+            seen.insert(model_id.clone());
             let (mtime, file_len) = match std::fs::metadata(&path) {
                 Ok(md) => (md.modified().unwrap_or(SystemTime::UNIX_EPOCH), md.len()),
                 Err(e) => {
@@ -244,6 +284,17 @@ impl PlanRegistry {
                 Err(e) => return Err(crate::anyhow!("retiring '{id}': {e}")),
             }
         }
+        // One structured summary event per non-trivial sync pass, after
+        // the per-model Deploy/Swap/Retire events it caused.
+        if !report.is_empty() {
+            handle.emit(crate::obs::TraceEvent::RegistrySync {
+                added: report.added.clone(),
+                updated: report.updated.clone(),
+                removed: report.removed.clone(),
+                errors: report.errors.len(),
+                conflicts: report.conflicts.len(),
+            });
+        }
         Ok(report)
     }
 }
@@ -294,6 +345,32 @@ mod tests {
         let report = registry.scan().unwrap();
         assert_eq!(report.errors.len(), 1, "{report:?}");
         assert!(report.errors[0].1.contains("broken.plan.json"), "{report:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn conflicting_files_prefer_plan_json_and_are_reported() {
+        let dir = tmp_dir("conflict");
+        let plan = Planner::for_model(crate::zoo::tiny_cnn()).plan().unwrap();
+        // Both spellings claim model id "tiny"; `.plan.json` must win.
+        plan.save(dir.join("tiny.json")).unwrap();
+        plan.save(dir.join("tiny.plan.json")).unwrap();
+        let mut registry = PlanRegistry::open(&dir).unwrap();
+        let report = registry.scan().unwrap();
+        assert_eq!(report.added, vec!["tiny".to_string()]);
+        assert!(report.errors.is_empty(), "{report:?}");
+        assert_eq!(report.conflicts.len(), 1, "{report:?}");
+        let c = &report.conflicts[0];
+        assert_eq!(c.model_id, "tiny");
+        assert!(c.chosen.ends_with("tiny.plan.json"), "{c:?}");
+        assert!(c.skipped.ends_with("tiny.json"), "{c:?}");
+        assert!(!report.is_empty(), "conflicts count as an observed change");
+        assert!(registry.latest("tiny").unwrap().path.ends_with("tiny.plan.json"));
+        // A re-scan with nothing changed still reports the standing
+        // conflict — it is a property of the directory, not an event.
+        let again = registry.scan().unwrap();
+        assert!(again.added.is_empty() && again.updated.is_empty());
+        assert_eq!(again.conflicts.len(), 1);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

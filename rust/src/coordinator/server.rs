@@ -32,6 +32,8 @@ use std::time::{Duration, Instant};
 
 use crate::backend::{BackendSpec, InferBackend};
 use crate::model::ModelChain;
+use crate::obs::trace::NullSink;
+use crate::obs::{SharedSink, TraceEvent, TraceSink};
 use crate::optimizer::{FusionSetting, Plan};
 use crate::util::error::{Error, Result};
 
@@ -254,6 +256,7 @@ pub struct ServerHandle {
     metrics: Arc<Mutex<Metrics>>,
     stopping: Arc<AtomicBool>,
     workers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    trace: SharedSink,
 }
 
 impl ServerHandle {
@@ -324,6 +327,22 @@ impl ServerHandle {
         self.metrics.lock().unwrap().clone()
     }
 
+    /// Route control-plane lifecycle events (deploy / swap / retire /
+    /// drain / shutdown, plus registry-sync deltas) into `sink` —
+    /// [`crate::obs::TraceLog`] to buffer them,
+    /// [`crate::obs::StderrSink`] to print them live (`msfcnn serve
+    /// --trace`). The default sink discards events. Every handle clone
+    /// and executor thread shares the sink, so events from all of them
+    /// interleave in emission order.
+    pub fn set_trace_sink(&self, sink: impl TraceSink + 'static) {
+        *self.trace.lock().unwrap() = Box::new(sink);
+    }
+
+    /// Emit one event into the current trace sink.
+    pub(super) fn emit(&self, event: TraceEvent) {
+        self.trace.lock().unwrap().emit(event);
+    }
+
     /// Live model ids, sorted.
     pub fn model_ids(&self) -> Vec<String> {
         self.queues.read().unwrap().keys().cloned().collect()
@@ -345,7 +364,8 @@ impl ServerHandle {
         }
         let id = spec.id.clone();
         let entry = self.spawn_executor(spec)?;
-        queues.insert(id, entry);
+        queues.insert(id.clone(), entry);
+        self.emit(TraceEvent::Deploy { model_id: id });
         Ok(())
     }
 
@@ -367,7 +387,8 @@ impl ServerHandle {
         // Dropping the old entry's sender is the drain signal: the old
         // executor keeps executing buffered requests and exits once the
         // channel reports disconnected (all racing submit clones gone).
-        queues.insert(id, entry);
+        queues.insert(id.clone(), entry);
+        self.emit(TraceEvent::Swap { model_id: id });
         Ok(())
     }
 
@@ -381,7 +402,9 @@ impl ServerHandle {
             .unwrap()
             .remove(model_id)
             .map(|_| ())
-            .ok_or_else(|| ServeError::UnknownModel { model_id: model_id.into() })
+            .ok_or_else(|| ServeError::UnknownModel { model_id: model_id.into() })?;
+        self.emit(TraceEvent::Retire { model_id: model_id.into() });
+        Ok(())
     }
 
     /// Spawn the executor thread for `spec` and hand back its queue
@@ -395,9 +418,10 @@ impl ServerHandle {
         let inflight_w = inflight.clone();
         let metrics_w = self.metrics.clone();
         let stopping_w = self.stopping.clone();
+        let trace_w = self.trace.clone();
         let worker = std::thread::Builder::new()
             .name(format!("msfcnn-exec-{id}"))
-            .spawn(move || worker_loop(spec, rx, inflight_w, metrics_w, stopping_w))
+            .spawn(move || worker_loop(spec, rx, inflight_w, metrics_w, stopping_w, trace_w))
             .map_err(|e| ServeError::Failed {
                 model_id: id,
                 detail: format!("executor thread spawn: {e}"),
@@ -457,6 +481,7 @@ impl MultiModelServer {
                 metrics: Arc::new(Mutex::new(Metrics::default())),
                 stopping: Arc::new(AtomicBool::new(false)),
                 workers: Arc::new(Mutex::new(Vec::new())),
+                trace: Arc::new(Mutex::new(Box::new(NullSink))),
             },
         }
     }
@@ -497,6 +522,7 @@ impl MultiModelServer {
     /// clones stay valid for metrics but all further submits fail fast.
     pub fn shutdown(self) {
         self.handle.stopping.store(true, Ordering::SeqCst);
+        self.handle.emit(TraceEvent::Shutdown);
         self.handle.queues.write().unwrap().clear(); // drop the queue senders
         let workers: Vec<JoinHandle<()>> =
             self.handle.workers.lock().unwrap().drain(..).collect();
@@ -521,18 +547,22 @@ fn reply_shutdown(req: Request, metrics: &Mutex<Metrics>, id: &str) {
 /// structured replies and wait out any submit racing with the shutdown
 /// flag (its `inflight` increment is visible before its `stopping` check,
 /// so observing `inflight == 0` *before* an empty sweep proves no further
-/// request can arrive).
+/// request can arrive). Returns the number of requests shed with a
+/// structured `ShuttingDown` reply (reported in the executor's
+/// [`TraceEvent::Drain`]).
 fn drain_shutdown(
     rx: &std_mpsc::Receiver<Request>,
     inflight: &AtomicUsize,
     metrics: &Mutex<Metrics>,
     id: &str,
-) {
+) -> usize {
+    let mut drained = 0usize;
     loop {
         let quiescent = inflight.load(Ordering::SeqCst) == 0;
         let mut got = false;
         while let Ok(req) = rx.try_recv() {
             got = true;
+            drained += 1;
             reply_shutdown(req, metrics, id);
         }
         if quiescent && !got {
@@ -540,6 +570,7 @@ fn drain_shutdown(
         }
         std::thread::yield_now();
     }
+    drained
 }
 
 fn worker_loop(
@@ -548,9 +579,16 @@ fn worker_loop(
     inflight: Arc<AtomicUsize>,
     metrics: Arc<Mutex<Metrics>>,
     stopping: Arc<AtomicBool>,
+    trace: SharedSink,
 ) {
     let id = spec.id.clone();
     let batch_max = spec.batch_max.max(1);
+    let emit_drain = |drained: usize| {
+        trace
+            .lock()
+            .unwrap()
+            .emit(TraceEvent::Drain { model_id: id.clone(), drained });
+    };
 
     // The live backend is created *inside* the worker thread
     // (PJRT-style handles are not `Send`); the spec crossed instead.
@@ -577,7 +615,8 @@ fn worker_loop(
                         Err(std_mpsc::RecvTimeoutError::Disconnected) => break,
                     }
                 }
-                drain_shutdown(&rx, &inflight, &metrics, &id);
+                let drained = drain_shutdown(&rx, &inflight, &metrics, &id);
+                emit_drain(drained);
                 return;
             }
         };
@@ -616,17 +655,27 @@ fn worker_loop(
             }
         }
         for req in batch {
+            // Queue wait = submit to execution start; exec = backend run.
+            // The recorded end-to-end sample is their sum, so the split
+            // always reconciles with the total.
+            let queue_wait = req.enqueued.elapsed();
+            let exec_start = Instant::now();
             let res = backend.run(&req.input).map_err(|e| ServeError::Failed {
                 model_id: id.clone(),
                 detail: format!("{e:#}"),
             });
-            metrics.lock().unwrap().model_mut(&id).record(req.enqueued.elapsed());
+            metrics
+                .lock()
+                .unwrap()
+                .model_mut(&id)
+                .record_timed(queue_wait, exec_start.elapsed());
             let _ = req.reply.send(res);
         }
     }
     // Closes the submit/shutdown race: no request that made it into the
     // queue is ever dropped without a structured reply.
-    drain_shutdown(&rx, &inflight, &metrics, &id);
+    let drained = drain_shutdown(&rx, &inflight, &metrics, &id);
+    emit_drain(drained);
 }
 
 /// Single-model wrapper over [`MultiModelServer`]: serves one artifact

@@ -25,6 +25,7 @@ use crate::memory::{
     assign_offsets, layout_from_schedule, schedule_intervals, BufRole, PoolLayout,
 };
 use crate::model::{Layer, LayerKind, ModelChain};
+use crate::obs::{NoProfiler, StepMeta, StepProfiler};
 use crate::ops::{
     accumulate_row_major, avg_pool2d_into, conv2d_into, dense_into, dwconv2d_into,
     global_avg_pool_into, max_pool2d_into, scale_avg, BandGeom, BandRange, FusedBlock, HCache,
@@ -305,7 +306,28 @@ impl CompiledPlan {
     /// inside `pool`, writing the logits into `out`
     /// (length [`Self::output_len`]). Returns the MACs performed
     /// (identical to the interpreted engine's count).
+    ///
+    /// This is [`Self::run_profiled`] monomorphized with the no-op
+    /// [`NoProfiler`] — the profiling hooks compile to nothing, so the
+    /// warm hot path stays bit-identical and allocation-free.
     pub fn run_into(&self, input: MapRef<'_>, pool: &mut PlanPool, out: &mut [f32]) -> u64 {
+        self.run_profiled(input, pool, out, &mut NoProfiler)
+    }
+
+    /// [`Self::run_into`] with per-step instrumentation: `prof.begin(i)`
+    /// / `prof.end(i, macs)` bracket every compiled step. The profiler
+    /// is a **monomorphized** type parameter, not a trait object — with
+    /// [`NoProfiler`] the hooks vanish at compile time; with
+    /// [`crate::obs::StepRecorder`] each step's wall time and MACs feed
+    /// the [`crate::obs::StepProfile`] attribution
+    /// ([`crate::obs::profile_plan`] is the convenience wrapper).
+    pub fn run_profiled<P: StepProfiler>(
+        &self,
+        input: MapRef<'_>,
+        pool: &mut PlanPool,
+        out: &mut [f32],
+        prof: &mut P,
+    ) -> u64 {
         let s0 = self.model.shapes[0];
         assert!(
             input.h == s0.h as usize && input.w == s0.w as usize && input.c == s0.c as usize,
@@ -318,12 +340,106 @@ impl CompiledPlan {
             pool.data[self.range_of(id)].copy_from_slice(input.data);
         }
         let mut macs = 0u64;
-        for step in &self.steps {
-            macs += self.run_step(step, input, pool);
+        for (i, step) in self.steps.iter().enumerate() {
+            prof.begin(i);
+            let step_macs = self.run_step(step, input, pool);
+            prof.end(i, step_macs);
+            macs += step_macs;
         }
         let out_r = self.range_of(self.out_buf);
         out.copy_from_slice(&pool.data[out_r]);
         macs
+    }
+
+    /// Number of compiled steps ([`crate::obs::StepRecorder::new`]'s
+    /// argument; profiler hook indices are `0..num_steps`).
+    pub fn num_steps(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// Static per-step metadata — kind, label, model-layer range, and
+    /// bytes touched per run — keyed by step index, for attributing
+    /// profiled samples ([`crate::obs::StepProfile::from_recorder`]).
+    pub fn step_metas(&self) -> Vec<StepMeta> {
+        self.steps
+            .iter()
+            .enumerate()
+            .map(|(index, step)| match step {
+                Step::StashSave { src, dst } => StepMeta {
+                    index,
+                    kind: "stash",
+                    label: format!("stash v{}", self.stash_tensor_of(*dst)),
+                    layers: (self.stash_tensor_of(*dst), self.stash_tensor_of(*dst)),
+                    bytes: 4 * (self.src_elems(*src) + self.bufs[*dst].elems) as u64,
+                },
+                Step::Single { layer, src, out, residual } => {
+                    let l = &self.model.layers[*layer];
+                    let mut elems = self.src_elems(*src) + self.bufs[*out].elems;
+                    if let Some(stash) = residual {
+                        elems += self.bufs[*stash].elems;
+                    }
+                    StepMeta {
+                        index,
+                        kind: "single",
+                        label: format!("{}[{layer}]", kind_name(l.kind)),
+                        layers: (*layer, *layer + 1),
+                        bytes: 4 * elems as u64 + self.param_bytes(*layer, *layer + 1),
+                    }
+                }
+                Step::Fused { a, conv_end, src, bands, out, .. } => StepMeta {
+                    index,
+                    kind: "fused",
+                    label: format!("fused[{a}..{conv_end})"),
+                    layers: (*a, *conv_end),
+                    bytes: 4
+                        * (self.src_elems(*src)
+                            + self.bufs[*bands].elems
+                            + self.bufs[*out].elems) as u64
+                        + self.param_bytes(*a, *conv_end),
+                },
+                Step::FusedIter { a, conv_end, src, bands, pool_acc, dense, logits, .. } => {
+                    let end = dense.last().map_or(*conv_end + 1, |&(li, _)| li + 1);
+                    let elems = self.src_elems(*src)
+                        + self.bufs[*bands].elems
+                        + self.bufs[*pool_acc].elems
+                        + dense.iter().map(|&(_, acc)| self.bufs[acc].elems).sum::<usize>()
+                        + self.bufs[*logits].elems;
+                    StepMeta {
+                        index,
+                        kind: "fused-iter",
+                        label: format!("fused-iter[{a}..{end})"),
+                        layers: (*a, end),
+                        bytes: 4 * elems as u64 + self.param_bytes(*a, end),
+                    }
+                }
+            })
+            .collect()
+    }
+
+    /// f32 elements a step source reads.
+    fn src_elems(&self, src: Src) -> usize {
+        match src {
+            Src::Input => self.model.shapes[0].elems() as usize,
+            Src::Buf(id) => self.bufs[id].elems,
+        }
+    }
+
+    /// Parameter bytes of model layers `[a, b)` (f32 weights + biases).
+    fn param_bytes(&self, a: usize, b: usize) -> u64 {
+        self.params[a..b]
+            .iter()
+            .map(|p| 4 * (p.weights.len() + p.bias.len()) as u64)
+            .sum()
+    }
+
+    /// The boundary-tensor index a stash buffer snapshots (label help).
+    fn stash_tensor_of(&self, buf: usize) -> usize {
+        self.layout
+            .buffers
+            .get(buf)
+            .and_then(|b| b.label.strip_prefix("stash:v"))
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(buf)
     }
 
     /// Convenience wrapper: run and materialize a [`RunReport`]
@@ -539,6 +655,18 @@ impl CompiledPlan {
                 self.model.layer_macs(li)
             }
         }
+    }
+}
+
+/// Step-label name of a layer kind.
+fn kind_name(k: LayerKind) -> &'static str {
+    match k {
+        LayerKind::Conv2d => "conv2d",
+        LayerKind::DwConv2d => "dwconv2d",
+        LayerKind::AvgPool => "avg_pool",
+        LayerKind::MaxPool => "max_pool",
+        LayerKind::GlobalAvgPool => "global_avg_pool",
+        LayerKind::Dense => "dense",
     }
 }
 

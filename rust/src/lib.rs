@@ -168,6 +168,24 @@
 //! registry.sync(&handle).unwrap(); // deploy/swap/retire to match the dir
 //! server.shutdown();
 //! ```
+//!
+//! ## Observability
+//!
+//! The [`obs`] module threads measurement through both execution layers
+//! without touching the hot path. [`exec::CompiledPlan::run_profiled`]
+//! takes a monomorphized [`obs::StepProfiler`]; with the default
+//! [`obs::NoProfiler`] it compiles to exactly the allocation-free
+//! `run_into` loop (bit-identical logits and MACs), while
+//! [`obs::StepRecorder`] + [`obs::profile_plan`] attribute wall time to
+//! every compiled step (`msfcnn profile`, `report::table_steps`). On the
+//! serving side, [`coordinator::Metrics`] keeps per-model
+//! queue-wait/execute splits, throughput, and mergeable fixed-bucket
+//! [`obs::LatencyHistogram`]s next to its exact sample window, and the
+//! control plane emits structured [`obs::TraceEvent`]s (deploy / swap /
+//! retire / drain / registry sync) into a pluggable [`obs::TraceSink`].
+//! [`obs::export`] freezes all of it into versioned JSON snapshots
+//! (`BENCH_infer.json`, `BENCH_serve.json`, `msfcnn profile --json`)
+//! with validators that pin the schema.
 
 pub mod backend;
 pub mod coordinator;
@@ -177,6 +195,7 @@ pub mod graph;
 pub mod mcu;
 pub mod memory;
 pub mod model;
+pub mod obs;
 pub mod ops;
 pub mod optimizer;
 pub mod report;

@@ -5,10 +5,12 @@
 //! msfcnn optimize --model NAME [--f-max F|inf | --p-max-kb N]
 //!                 [--latency-budget MS [--board B]] [--baselines]
 //! msfcnn infer --plan FILE [--input FILE | --seed N]
+//! msfcnn profile --plan FILE [--runs N] [--seed N] [--top K] [--json FILE]
 //! msfcnn simulate --model NAME [--f-max F|inf | --p-max-kb N] [--board B]
-//! msfcnn tables [--which 1|2|3|5|5j|fig2|fig3|fig4|all]
+//! msfcnn tables [--which 1|2|3|5|5j|fig2|fig3|fig4|steps|all]
 //! msfcnn registry scan [--dir DIR]
-//! msfcnn serve --registry DIR [--requests N] [--watch-ms MS]
+//! msfcnn bench check [--infer FILE] [--serve FILE]
+//! msfcnn serve --registry DIR [--requests N] [--watch-ms MS] [--trace]
 //! msfcnn serve [--artifacts DIR] [--entry NAME] [--requests N]
 //! ```
 //!
@@ -34,10 +36,12 @@ USAGE:
   msfcnn optimize --model NAME [--f-max F|inf | --p-max-kb N] [--baselines] [--save FILE]
   msfcnn optimize --model NAME --latency-budget MS [--board BOARD] [--p-max-kb N] [--save FILE]
   msfcnn infer --plan FILE [--input FILE | --seed N]
+  msfcnn profile --plan FILE [--runs N] [--seed N] [--top K] [--json FILE]
   msfcnn simulate --model NAME [--f-max F|inf | --p-max-kb N] [--board BOARD] [--trace]
-  msfcnn tables [--which 1|2|3|5|5j|fig2|fig3|fig4|all]
+  msfcnn tables [--which 1|2|3|5|5j|fig2|fig3|fig4|steps|all]
   msfcnn registry scan [--dir DIR]
-  msfcnn serve --registry DIR [--requests N] [--watch-ms MS]
+  msfcnn bench check [--infer FILE] [--serve FILE]
+  msfcnn serve --registry DIR [--requests N] [--watch-ms MS] [--trace]
   msfcnn serve [--artifacts DIR] [--entry NAME] [--requests N]
   msfcnn serve --plan FILE [--id NAME] [--requests N]
 ";
@@ -143,8 +147,8 @@ fn main() -> Result<()> {
         print!("{USAGE}");
         return Ok(());
     };
-    // `registry` takes a positional subcommand before its flags.
-    let (args, subcommand) = if cmd == "registry" {
+    // `registry` and `bench` take a positional subcommand before flags.
+    let (args, subcommand) = if cmd == "registry" || cmd == "bench" {
         let sub = argv.get(1).cloned();
         (Args::parse(argv.get(2..).unwrap_or(&[]))?, sub)
     } else {
@@ -298,6 +302,37 @@ fn main() -> Result<()> {
                 );
             }
         }
+        "profile" => {
+            // Per-step attribution of a saved plan's compiled hot path:
+            // where the warm in-plan time goes, step by step, plus the
+            // top-k dominating steps kernel work should start from.
+            let path = args
+                .get("plan")
+                .ok_or_else(|| anyhow!("--plan FILE required\n\n{USAGE}"))?;
+            let plan = Plan::load(path)?;
+            let model = zoo::by_name(&plan.model)
+                .ok_or_else(|| anyhow!("plan model '{}' not in zoo", plan.model))?;
+            let runs = args.get_usize("runs", 30)?;
+            let top = args.get_usize("top", 3)?;
+            let seed = args.get_usize("seed", 42)? as u64;
+            let shape = model.shapes[0];
+            let input = Tensor::from_data(
+                shape.h as usize,
+                shape.w as usize,
+                shape.c as usize,
+                ParamGen::new(seed).fill(shape.elems() as usize, 2.0),
+            );
+            let compiled = Engine::new(model).compile(&plan.setting);
+            let profile = msf_cnn::obs::profile_plan(&compiled, &input, runs);
+            println!("{}", report::step_table(&profile));
+            println!("{}", report::top_k_table(&profile, top));
+            if let Some(f) = args.get("json") {
+                let doc = msf_cnn::obs::export::profile_snapshot(&profile);
+                msf_cnn::obs::export::validate_profile_snapshot(&doc)?;
+                std::fs::write(f, &doc).map_err(|e| anyhow!("writing --json {f}: {e}"))?;
+                println!("profile written to {f}");
+            }
+        }
         "simulate" => {
             let m = model_arg(&args)?;
             let mut planner = Planner::for_model(m.clone());
@@ -396,6 +431,9 @@ fn main() -> Result<()> {
                 let m = zoo::quickstart();
                 println!("{}", report::ablation_output_granularity(&m, 0, 3).1);
             }
+            if all || which == "steps" {
+                println!("{}", report::table_steps().1);
+            }
         }
         "registry" => {
             use msf_cnn::coordinator::PlanRegistry;
@@ -406,6 +444,14 @@ fn main() -> Result<()> {
                     let report = registry.scan()?;
                     for (path, err) in &report.errors {
                         eprintln!("WARN: {}: {err}", path.display());
+                    }
+                    for c in &report.conflicts {
+                        eprintln!(
+                            "WARN: {}: multiple files define '{}'; using {}",
+                            c.skipped.display(),
+                            c.model_id,
+                            c.chosen.display()
+                        );
                     }
                     println!("plan registry {dir}: {} model(s)", registry.len());
                     for e in registry.entries() {
@@ -431,6 +477,44 @@ fn main() -> Result<()> {
                 ),
             }
         }
+        "bench" => match subcommand.as_deref() {
+            Some("check") => {
+                // Schema gate over the committed perf snapshots: a
+                // drifted BENCH_*.json fails here (and in CI) instead of
+                // silently rotting the perf trajectory.
+                use msf_cnn::obs::export;
+                let checks: [(&str, fn(&str) -> Result<()>); 2] = [
+                    (
+                        args.get("infer").unwrap_or("BENCH_infer.json"),
+                        export::validate_infer_snapshot,
+                    ),
+                    (
+                        args.get("serve").unwrap_or("BENCH_serve.json"),
+                        export::validate_serve_snapshot,
+                    ),
+                ];
+                let mut failures = 0usize;
+                for (path, validate) in checks {
+                    let verdict = std::fs::read_to_string(path)
+                        .map_err(|e| anyhow!("reading {path}: {e}"))
+                        .and_then(|text| validate(&text));
+                    match verdict {
+                        Ok(()) => println!("{path}: ok (schema {})", export::BENCH_SCHEMA),
+                        Err(e) => {
+                            eprintln!("{path}: FAIL: {e}");
+                            failures += 1;
+                        }
+                    }
+                }
+                if failures > 0 {
+                    bail!("{failures} snapshot(s) failed the schema check");
+                }
+            }
+            other => bail!(
+                "unknown bench subcommand {:?} (expected: check)\n\n{USAGE}",
+                other.unwrap_or("<none>")
+            ),
+        },
         "serve" if args.has("registry") => {
             use msf_cnn::coordinator::{MultiModelServer, PlanRegistry};
             let dir = args.get("registry").unwrap();
@@ -440,9 +524,22 @@ fn main() -> Result<()> {
             let mut registry = PlanRegistry::open(dir)?;
             let server = MultiModelServer::new();
             let handle = server.handle();
+            if args.has("trace") {
+                // Control-plane lifecycle events (deploy/swap/retire/
+                // drain + registry sync deltas) go to stderr.
+                handle.set_trace_sink(msf_cnn::obs::StderrSink);
+            }
             let report = registry.sync(&handle)?;
             for (path, err) in &report.errors {
                 eprintln!("WARN: {}: {err}", path.display());
+            }
+            for c in &report.conflicts {
+                eprintln!(
+                    "WARN: {}: multiple files define '{}'; using {}",
+                    c.skipped.display(),
+                    c.model_id,
+                    c.chosen.display()
+                );
             }
             if registry.is_empty() {
                 bail!("no deployable plans in {dir}");
@@ -483,11 +580,12 @@ fn main() -> Result<()> {
                     let changes = registry.sync(&handle)?;
                     if !changes.is_empty() {
                         println!(
-                            "registry change: +{:?} ~{:?} -{:?} ({} error(s))",
+                            "registry change: +{:?} ~{:?} -{:?} ({} error(s), {} conflict(s))",
                             changes.added,
                             changes.updated,
                             changes.removed,
-                            changes.errors.len()
+                            changes.errors.len(),
+                            changes.conflicts.len()
                         );
                     }
                 }
@@ -500,9 +598,13 @@ fn main() -> Result<()> {
             );
             for (id, m) in handle.metrics().per_model() {
                 if let Some(stats) = m.stats() {
+                    let split = match (m.queue_wait_mean_us(), m.exec_mean_us()) {
+                        (Some(w), Some(x)) => format!("  | wait {w:.0} us  exec {x:.0} us"),
+                        _ => String::new(),
+                    };
                     println!(
-                        "  {id:<14} {} done | p50 {:>6.0} us  p99 {:>6.0} us",
-                        stats.count, stats.p50_us, stats.p99_us
+                        "  {id:<14} {} done | p50 {:>6.0} us  p95 {:>6.0} us  p99 {:>6.0} us{split}",
+                        stats.count, stats.p50_us, stats.p95_us, stats.p99_us
                     );
                 }
             }
@@ -546,10 +648,11 @@ fn main() -> Result<()> {
             let dt = t0.elapsed();
             if let Some(stats) = handle.metrics().stats() {
                 println!(
-                    "{ok}/{requests} ok in {:.2}s ({:.1} req/s); p50 {:.0}us p99 {:.0}us",
+                    "{ok}/{requests} ok in {:.2}s ({:.1} req/s); p50 {:.0}us p95 {:.0}us p99 {:.0}us",
                     dt.as_secs_f64(),
                     ok as f64 / dt.as_secs_f64(),
                     stats.p50_us,
+                    stats.p95_us,
                     stats.p99_us
                 );
             }

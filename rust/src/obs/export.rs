@@ -1,0 +1,472 @@
+//! Stable-schema JSON snapshot exporters + validators.
+//!
+//! The perf trajectory lives in two committed files at the repo root:
+//! `BENCH_infer.json` (hot-path latency with per-step attribution, from
+//! `benches/infer_hot.rs`) and `BENCH_serve.json` (serving load numbers,
+//! from `benches/serve_load.rs`). Both carry the schema tag
+//! [`BENCH_SCHEMA`]; the validators here are what the benches self-check
+//! against before writing, and what `msfcnn bench check` /
+//! `make bench-snapshot` / CI run afterwards — a snapshot whose shape
+//! drifts fails the gate instead of silently rotting the trajectory.
+//!
+//! The writers are hand-rolled (no serde in the offline build); the
+//! validators parse with [`crate::util::json`] and name the missing or
+//! mistyped field on failure.
+
+use crate::util::error::Result;
+use crate::util::json::{escape, Json};
+use crate::{anyhow, bail};
+
+use super::profile::StepProfile;
+
+/// Schema tag every committed `BENCH_*.json` carries. Bump only with a
+/// deliberate, documented format change.
+pub const BENCH_SCHEMA: &str = "msfcnn.bench/v1";
+
+/// Schema tag of standalone `msfcnn profile --json` snapshots.
+pub const PROFILE_SCHEMA: &str = "msfcnn.profile/v1";
+
+fn jstr(s: &str) -> String {
+    format!("\"{}\"", escape(s))
+}
+
+fn jnum(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.3}")
+    } else {
+        "0.0".to_string()
+    }
+}
+
+/// One model's row in `BENCH_infer.json`.
+#[derive(Debug, Clone)]
+pub struct InferRow {
+    pub model: String,
+    /// Interpreted engine (per-run re-walk + arena allocations), µs/run.
+    pub interpreted_us: f64,
+    /// One compile (schedule replay + offset assignment), µs.
+    pub compile_cold_us: f64,
+    /// Warm allocation-free compiled run, µs.
+    pub compiled_warm_us: f64,
+    pub pool_bytes: u64,
+    pub watermark_bytes: u64,
+    /// Per-step attribution of the warm path.
+    pub profile: StepProfile,
+}
+
+/// Serialize a [`StepProfile`]'s steps as a JSON array (shared by the
+/// infer snapshot and `msfcnn profile --json`).
+pub fn steps_json(profile: &StepProfile, indent: &str) -> String {
+    let rows: Vec<String> = profile
+        .steps
+        .iter()
+        .map(|s| {
+            format!(
+                "{indent}{{\"label\": {}, \"kind\": {}, \"layers\": [{}, {}], \"mean_us\": {}, \"p50_us\": {}, \"p95_us\": {}, \"share\": {:.5}, \"macs\": {}, \"bytes\": {}}}",
+                jstr(&s.meta.label),
+                jstr(s.meta.kind),
+                s.meta.layers.0,
+                s.meta.layers.1,
+                jnum(s.mean_us),
+                jnum(s.p50_us),
+                jnum(s.p95_us),
+                s.share,
+                s.macs,
+                s.meta.bytes,
+            )
+        })
+        .collect();
+    format!("[\n{}\n{}]", rows.join(",\n"), &indent[..indent.len().saturating_sub(2)])
+}
+
+/// Render `BENCH_infer.json`: hot-path latency trajectory with per-step
+/// attribution, stable schema [`BENCH_SCHEMA`].
+pub fn infer_snapshot(rows: &[InferRow]) -> String {
+    let body: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\n      \"model\": {},\n      \"interpreted_us\": {},\n      \"compile_cold_us\": {},\n      \"compiled_warm_us\": {},\n      \"warm_speedup\": {},\n      \"pool_bytes\": {},\n      \"watermark_bytes\": {},\n      \"profile_runs\": {},\n      \"total_step_us\": {},\n      \"steps\": {}\n    }}",
+                jstr(&r.model),
+                jnum(r.interpreted_us),
+                jnum(r.compile_cold_us),
+                jnum(r.compiled_warm_us),
+                jnum(r.interpreted_us / r.compiled_warm_us.max(1e-9)),
+                r.pool_bytes,
+                r.watermark_bytes,
+                r.profile.runs,
+                jnum(r.profile.total_mean_us),
+                steps_json(&r.profile, "        "),
+            )
+        })
+        .collect();
+    format!(
+        "{{\n  \"schema\": {},\n  \"bench\": \"infer_hot\",\n  \"unit\": \"us\",\n  \"results\": [\n{}\n  ]\n}}\n",
+        jstr(BENCH_SCHEMA),
+        body.join(",\n")
+    )
+}
+
+/// One model's row in `BENCH_serve.json`.
+#[derive(Debug, Clone)]
+pub struct ServeRow {
+    pub model: String,
+    pub completed: usize,
+    pub rejections: usize,
+    pub shutdown_drops: usize,
+    /// Completed requests per second over the model's active window.
+    pub throughput_rps: f64,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub max_us: f64,
+    /// Mean time requests spent queued before an executor popped them.
+    pub queue_wait_mean_us: f64,
+    /// Mean backend execution time.
+    pub exec_mean_us: f64,
+    /// High-water mark of the model's queue depth.
+    pub queue_peak: usize,
+}
+
+impl ServeRow {
+    /// Rejected / offered (completed + rejected) fraction.
+    pub fn rejection_rate(&self) -> f64 {
+        let offered = self.completed + self.rejections;
+        if offered == 0 {
+            0.0
+        } else {
+            self.rejections as f64 / offered as f64
+        }
+    }
+}
+
+/// Load-harness configuration recorded in the snapshot (so a committed
+/// number is comparable to its predecessor).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub threads: usize,
+    pub requests: usize,
+    pub smoke: bool,
+    pub models: Vec<String>,
+}
+
+/// Fleet-wide aggregate across every model in the run.
+#[derive(Debug, Clone)]
+pub struct ServeAggregate {
+    pub completed: usize,
+    pub rejections: usize,
+    pub throughput_rps: f64,
+    /// Percentiles from the merged per-model histograms
+    /// (bucket-resolution estimates).
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+}
+
+/// Render `BENCH_serve.json`: serving load numbers, stable schema
+/// [`BENCH_SCHEMA`].
+pub fn serve_snapshot(cfg: &ServeConfig, rows: &[ServeRow], agg: &ServeAggregate) -> String {
+    let models: Vec<String> = cfg.models.iter().map(|m| jstr(m)).collect();
+    let body: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"model\": {}, \"completed\": {}, \"rejections\": {}, \"shutdown_drops\": {}, \"rejection_rate\": {:.5}, \"throughput_rps\": {}, \"mean_us\": {}, \"p50_us\": {}, \"p95_us\": {}, \"p99_us\": {}, \"max_us\": {}, \"queue_wait_mean_us\": {}, \"exec_mean_us\": {}, \"queue_peak\": {}}}",
+                jstr(&r.model),
+                r.completed,
+                r.rejections,
+                r.shutdown_drops,
+                r.rejection_rate(),
+                jnum(r.throughput_rps),
+                jnum(r.mean_us),
+                jnum(r.p50_us),
+                jnum(r.p95_us),
+                jnum(r.p99_us),
+                jnum(r.max_us),
+                jnum(r.queue_wait_mean_us),
+                jnum(r.exec_mean_us),
+                r.queue_peak,
+            )
+        })
+        .collect();
+    format!(
+        "{{\n  \"schema\": {},\n  \"bench\": \"serve_load\",\n  \"unit\": \"us\",\n  \"config\": {{\"threads\": {}, \"requests\": {}, \"smoke\": {}, \"models\": [{}]}},\n  \"results\": [\n{}\n  ],\n  \"aggregate\": {{\"completed\": {}, \"rejections\": {}, \"throughput_rps\": {}, \"p50_us\": {}, \"p95_us\": {}, \"p99_us\": {}}}\n}}\n",
+        jstr(BENCH_SCHEMA),
+        cfg.threads,
+        cfg.requests,
+        cfg.smoke,
+        models.join(", "),
+        body.join(",\n"),
+        agg.completed,
+        agg.rejections,
+        jnum(agg.throughput_rps),
+        jnum(agg.p50_us),
+        jnum(agg.p95_us),
+        jnum(agg.p99_us),
+    )
+}
+
+/// Render a standalone per-step profile snapshot
+/// (`msfcnn profile --json`), schema [`PROFILE_SCHEMA`].
+pub fn profile_snapshot(profile: &StepProfile) -> String {
+    format!(
+        "{{\n  \"schema\": {},\n  \"model\": {},\n  \"setting\": {},\n  \"runs\": {},\n  \"total_step_us\": {},\n  \"steps\": {}\n}}\n",
+        jstr(PROFILE_SCHEMA),
+        jstr(&profile.model),
+        jstr(&profile.setting),
+        profile.runs,
+        jnum(profile.total_mean_us),
+        steps_json(profile, "    "),
+    )
+}
+
+// ---------------------------------------------------------------------
+// Validators
+// ---------------------------------------------------------------------
+
+fn need<'a>(v: &'a Json, key: &str, at: &str) -> Result<&'a Json> {
+    v.get(key).ok_or_else(|| anyhow!("snapshot schema: missing '{at}.{key}'"))
+}
+
+fn need_num(v: &Json, key: &str, at: &str) -> Result<f64> {
+    need(v, key, at)?
+        .as_f64()
+        .ok_or_else(|| anyhow!("snapshot schema: '{at}.{key}' is not a number"))
+}
+
+fn need_str<'a>(v: &'a Json, key: &str, at: &str) -> Result<&'a str> {
+    need(v, key, at)?
+        .as_str()
+        .ok_or_else(|| anyhow!("snapshot schema: '{at}.{key}' is not a string"))
+}
+
+fn need_arr<'a>(v: &'a Json, key: &str, at: &str) -> Result<&'a [Json]> {
+    need(v, key, at)?
+        .as_arr()
+        .ok_or_else(|| anyhow!("snapshot schema: '{at}.{key}' is not an array"))
+}
+
+fn check_header(root: &Json, bench: &str) -> Result<()> {
+    let schema = need_str(root, "schema", "$")?;
+    if schema != BENCH_SCHEMA {
+        bail!("snapshot schema: expected '{BENCH_SCHEMA}', found '{schema}'");
+    }
+    let b = need_str(root, "bench", "$")?;
+    if b != bench {
+        bail!("snapshot schema: expected bench '{bench}', found '{b}'");
+    }
+    need_str(root, "unit", "$")?;
+    Ok(())
+}
+
+fn check_steps(row: &Json, at: &str) -> Result<()> {
+    let steps = need_arr(row, "steps", at)?;
+    if steps.is_empty() {
+        bail!("snapshot schema: '{at}.steps' is empty");
+    }
+    for (i, s) in steps.iter().enumerate() {
+        let sat = format!("{at}.steps[{i}]");
+        need_str(s, "label", &sat)?;
+        need_str(s, "kind", &sat)?;
+        let layers = need_arr(s, "layers", &sat)?;
+        if layers.len() != 2 {
+            bail!("snapshot schema: '{sat}.layers' must have 2 entries");
+        }
+        for key in ["mean_us", "p50_us", "p95_us", "share", "macs", "bytes"] {
+            need_num(s, key, &sat)?;
+        }
+    }
+    Ok(())
+}
+
+/// Validate a `BENCH_infer.json` document against the stable schema.
+pub fn validate_infer_snapshot(text: &str) -> Result<()> {
+    let root = Json::parse(text).map_err(|e| anyhow!("BENCH_infer.json: {e}"))?;
+    check_header(&root, "infer_hot")?;
+    let results = need_arr(&root, "results", "$")?;
+    if results.is_empty() {
+        bail!("snapshot schema: '$.results' is empty");
+    }
+    for (i, row) in results.iter().enumerate() {
+        let at = format!("$.results[{i}]");
+        need_str(row, "model", &at)?;
+        for key in [
+            "interpreted_us",
+            "compile_cold_us",
+            "compiled_warm_us",
+            "warm_speedup",
+            "pool_bytes",
+            "watermark_bytes",
+            "profile_runs",
+            "total_step_us",
+        ] {
+            need_num(row, key, &at)?;
+        }
+        check_steps(row, &at)?;
+    }
+    Ok(())
+}
+
+/// Validate a `BENCH_serve.json` document against the stable schema.
+pub fn validate_serve_snapshot(text: &str) -> Result<()> {
+    let root = Json::parse(text).map_err(|e| anyhow!("BENCH_serve.json: {e}"))?;
+    check_header(&root, "serve_load")?;
+    let cfg = need(&root, "config", "$")?;
+    for key in ["threads", "requests"] {
+        need_num(cfg, key, "$.config")?;
+    }
+    need(cfg, "smoke", "$.config")?;
+    need_arr(cfg, "models", "$.config")?;
+    let results = need_arr(&root, "results", "$")?;
+    if results.is_empty() {
+        bail!("snapshot schema: '$.results' is empty");
+    }
+    for (i, row) in results.iter().enumerate() {
+        let at = format!("$.results[{i}]");
+        need_str(row, "model", &at)?;
+        for key in [
+            "completed",
+            "rejections",
+            "shutdown_drops",
+            "rejection_rate",
+            "throughput_rps",
+            "mean_us",
+            "p50_us",
+            "p95_us",
+            "p99_us",
+            "max_us",
+            "queue_wait_mean_us",
+            "exec_mean_us",
+            "queue_peak",
+        ] {
+            need_num(row, key, &at)?;
+        }
+    }
+    let agg = need(&root, "aggregate", "$")?;
+    for key in ["completed", "rejections", "throughput_rps", "p50_us", "p95_us", "p99_us"] {
+        need_num(agg, key, "$.aggregate")?;
+    }
+    Ok(())
+}
+
+/// Validate a `msfcnn profile --json` document.
+pub fn validate_profile_snapshot(text: &str) -> Result<()> {
+    let root = Json::parse(text).map_err(|e| anyhow!("profile snapshot: {e}"))?;
+    let schema = need_str(&root, "schema", "$")?;
+    if schema != PROFILE_SCHEMA {
+        bail!("snapshot schema: expected '{PROFILE_SCHEMA}', found '{schema}'");
+    }
+    need_str(&root, "model", "$")?;
+    need_str(&root, "setting", "$")?;
+    need_num(&root, "runs", "$")?;
+    need_num(&root, "total_step_us", "$")?;
+    check_steps(&root, "$")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::CompiledPlan;
+    use crate::obs::profile_plan;
+    use crate::ops::{ParamGen, Tensor};
+    use crate::optimizer::Planner;
+    use crate::zoo;
+
+    fn tiny_profile() -> StepProfile {
+        let m = zoo::tiny_cnn();
+        let setting = Planner::for_model(m.clone()).setting().unwrap();
+        let compiled = CompiledPlan::compile(m, setting);
+        let s = compiled.model().shapes[0];
+        let x = Tensor::from_data(
+            s.h as usize,
+            s.w as usize,
+            s.c as usize,
+            ParamGen::new(1).fill(s.elems() as usize, 2.0),
+        );
+        profile_plan(&compiled, &x, 3)
+    }
+
+    #[test]
+    fn infer_snapshot_roundtrips_through_its_validator() {
+        let p = tiny_profile();
+        let rows = vec![InferRow {
+            model: "tiny".into(),
+            interpreted_us: 100.0,
+            compile_cold_us: 50.0,
+            compiled_warm_us: 20.0,
+            pool_bytes: 4096,
+            watermark_bytes: 4000,
+            profile: p,
+        }];
+        let json = infer_snapshot(&rows);
+        validate_infer_snapshot(&json).unwrap();
+    }
+
+    #[test]
+    fn serve_snapshot_roundtrips_through_its_validator() {
+        let cfg = ServeConfig {
+            threads: 4,
+            requests: 100,
+            smoke: true,
+            models: vec!["tiny".into(), "kws".into()],
+        };
+        let rows = vec![ServeRow {
+            model: "tiny".into(),
+            completed: 90,
+            rejections: 10,
+            shutdown_drops: 0,
+            throughput_rps: 1234.5,
+            mean_us: 80.0,
+            p50_us: 75.0,
+            p95_us: 120.0,
+            p99_us: 150.0,
+            max_us: 200.0,
+            queue_wait_mean_us: 30.0,
+            exec_mean_us: 50.0,
+            queue_peak: 7,
+        }];
+        let agg = ServeAggregate {
+            completed: 90,
+            rejections: 10,
+            throughput_rps: 1234.5,
+            p50_us: 75.0,
+            p95_us: 120.0,
+            p99_us: 150.0,
+        };
+        let json = serve_snapshot(&cfg, &rows, &agg);
+        validate_serve_snapshot(&json).unwrap();
+        assert!((rows[0].rejection_rate() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn profile_snapshot_roundtrips_through_its_validator() {
+        let json = profile_snapshot(&tiny_profile());
+        validate_profile_snapshot(&json).unwrap();
+    }
+
+    #[test]
+    fn validators_reject_drift() {
+        // Wrong bench tag.
+        let p = tiny_profile();
+        let infer = infer_snapshot(&[InferRow {
+            model: "tiny".into(),
+            interpreted_us: 1.0,
+            compile_cold_us: 1.0,
+            compiled_warm_us: 1.0,
+            pool_bytes: 1,
+            watermark_bytes: 1,
+            profile: p,
+        }]);
+        assert!(validate_serve_snapshot(&infer).is_err(), "serve validator took infer doc");
+        // A removed field is schema drift.
+        let broken = infer.replace("\"compiled_warm_us\"", "\"renamed_field\"");
+        let err = validate_infer_snapshot(&broken).unwrap_err();
+        assert!(err.to_string().contains("compiled_warm_us"), "{err}");
+        // Empty results are drift too.
+        let empty = format!(
+            "{{\"schema\": \"{BENCH_SCHEMA}\", \"bench\": \"infer_hot\", \"unit\": \"us\", \"results\": []}}"
+        );
+        assert!(validate_infer_snapshot(&empty).is_err());
+    }
+}

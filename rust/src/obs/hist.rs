@@ -1,0 +1,213 @@
+//! Fixed-bucket latency histograms and the shared percentile rank.
+//!
+//! A long-running server cannot retain every latency sample; the
+//! coordinator keeps an exact recent-sample ring per model for tight
+//! percentiles *and* one of these histograms for lossless-count,
+//! O(1)-memory aggregation. Histograms with identical (compile-time)
+//! bucket bounds are **mergeable**: per-model histograms fold into a
+//! fleet-wide view by adding counts, which exact sample windows cannot
+//! do without re-shipping samples.
+
+/// Upper bounds (inclusive, microseconds) of the fixed buckets: a
+/// 1–2–5 ladder from 1 µs to 20 s. One extra overflow bucket catches
+/// everything beyond the last bound.
+pub const BUCKET_BOUNDS_US: [f64; 23] = [
+    1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0, 200.0, 500.0, 1e3, 2e3, 5e3, 1e4, 2e4, 5e4, 1e5,
+    2e5, 5e5, 1e6, 2e6, 5e6, 1e7, 2e7,
+];
+
+const N_BUCKETS: usize = BUCKET_BOUNDS_US.len() + 1;
+
+/// Ceil-based nearest-rank percentile over an ascending-sorted slice:
+/// the smallest sample such that at least `ceil(p * n)` samples are <=
+/// it (the textbook nearest-rank definition). The previous
+/// `((n - 1) * p).round()` index biased small windows low — e.g. p95 of
+/// 10 samples picked index 9 only by rounding luck; ceil makes the rank
+/// exact: p50 of 1..=100 is 50, p95 is 95, p99 is 99.
+pub fn nearest_rank(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of an empty sample set");
+    let rank = (p * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// A fixed-bucket latency histogram (microseconds). Cheap to clone,
+/// cheap to [`merge`](Self::merge), and bounded in memory regardless of
+/// how many samples it absorbs. Quantiles are bucket-resolution
+/// estimates: the upper bound of the bucket containing the rank,
+/// clamped to the observed max.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    counts: [u64; N_BUCKETS],
+    count: u64,
+    sum_us: f64,
+    min_us: f64,
+    max_us: f64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self {
+            counts: [0; N_BUCKETS],
+            count: 0,
+            sum_us: 0.0,
+            min_us: f64::INFINITY,
+            max_us: 0.0,
+        }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Index of the bucket holding `us`.
+    fn bucket_of(us: f64) -> usize {
+        BUCKET_BOUNDS_US
+            .iter()
+            .position(|&b| us <= b)
+            .unwrap_or(N_BUCKETS - 1)
+    }
+
+    /// Record one latency sample.
+    pub fn record_us(&mut self, us: f64) {
+        self.counts[Self::bucket_of(us)] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        self.min_us = self.min_us.min(us);
+        self.max_us = self.max_us.max(us);
+    }
+
+    /// Fold `other` into `self` (identical compile-time bucket bounds,
+    /// so merging is element-wise addition).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        self.min_us = self.min_us.min(other.min_us);
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    /// Total samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact mean over every recorded sample.
+    pub fn mean_us(&self) -> Option<f64> {
+        if self.count > 0 {
+            Some(self.sum_us / self.count as f64)
+        } else {
+            None
+        }
+    }
+
+    /// Largest recorded sample (exact).
+    pub fn max_us(&self) -> Option<f64> {
+        (self.count > 0).then_some(self.max_us)
+    }
+
+    /// Bucket-resolution quantile estimate: the upper bound of the
+    /// bucket containing the ceil-based nearest rank, clamped to the
+    /// exact observed `[min, max]` range (so `quantile(1.0)` is the true
+    /// max and estimates never exceed it).
+    pub fn quantile(&self, p: f64) -> Option<f64> {
+        if self.count == 0 {
+            return None;
+        }
+        let rank = ((p * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                let ub = BUCKET_BOUNDS_US.get(i).copied().unwrap_or(self.max_us);
+                return Some(ub.clamp(self.min_us, self.max_us));
+            }
+        }
+        Some(self.max_us)
+    }
+
+    /// Iterate `(upper_bound_us, count)` over the non-empty buckets (the
+    /// overflow bucket reports the observed max as its bound).
+    pub fn nonzero_buckets(&self) -> impl Iterator<Item = (f64, u64)> + '_ {
+        self.counts.iter().enumerate().filter(|(_, &c)| c > 0).map(|(i, &c)| {
+            (BUCKET_BOUNDS_US.get(i).copied().unwrap_or(self.max_us), c)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nearest_rank_pins_textbook_percentiles() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(nearest_rank(&v, 0.50), 50.0);
+        assert_eq!(nearest_rank(&v, 0.95), 95.0);
+        assert_eq!(nearest_rank(&v, 0.99), 99.0);
+        assert_eq!(nearest_rank(&v, 1.0), 100.0);
+        let small: Vec<f64> = (1..=10).map(|i| i as f64).collect();
+        assert_eq!(nearest_rank(&small, 0.50), 5.0);
+        assert_eq!(nearest_rank(&small, 0.95), 10.0);
+        assert_eq!(nearest_rank(&[7.0], 0.5), 7.0);
+    }
+
+    #[test]
+    fn histogram_counts_and_quantiles() {
+        let mut h = LatencyHistogram::new();
+        assert!(h.quantile(0.5).is_none());
+        for us in [3.0, 4.0, 4.5, 90.0, 450.0, 9e6] {
+            h.record_us(us);
+        }
+        assert_eq!(h.count(), 6);
+        // 3 of 6 samples land in the <=5us bucket: p50 reports its bound.
+        assert_eq!(h.quantile(0.5), Some(5.0));
+        // Estimates never leave the observed range.
+        assert_eq!(h.quantile(1.0), Some(9e6));
+        let lo = h.quantile(0.01).unwrap();
+        assert!(lo >= 3.0, "{lo}");
+        assert_eq!(h.max_us(), Some(9e6));
+        let mean = h.mean_us().unwrap();
+        assert!((mean - (3.0 + 4.0 + 4.5 + 90.0 + 450.0 + 9e6) / 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_is_count_addition() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        for i in 1..=50 {
+            a.record_us(i as f64);
+        }
+        for i in 51..=100 {
+            b.record_us(i as f64 * 10.0);
+        }
+        let mut merged = a.clone();
+        merged.merge(&b);
+        assert_eq!(merged.count(), 100);
+        assert_eq!(merged.max_us(), Some(1000.0));
+        // The merged median sits between the two halves.
+        let p50 = merged.quantile(0.5).unwrap();
+        assert!(p50 >= 50.0 && p50 <= 510.0, "{p50}");
+        // Merge equals recording everything into one histogram.
+        let mut direct = LatencyHistogram::new();
+        for i in 1..=50 {
+            direct.record_us(i as f64);
+        }
+        for i in 51..=100 {
+            direct.record_us(i as f64 * 10.0);
+        }
+        assert_eq!(direct.quantile(0.95), merged.quantile(0.95));
+        assert_eq!(direct.count(), merged.count());
+    }
+
+    #[test]
+    fn overflow_bucket_catches_huge_samples() {
+        let mut h = LatencyHistogram::new();
+        h.record_us(5e7);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.quantile(0.5), Some(5e7));
+    }
+}

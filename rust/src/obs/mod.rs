@@ -1,0 +1,37 @@
+//! `obs` — the end-to-end observability layer.
+//!
+//! Measurement has to exist before optimization can be honest: every
+//! claimed speedup should land as a before/after delta in a committed
+//! `BENCH_*.json` snapshot, and kernel work needs to know *which*
+//! compiled steps dominate. This module provides the four pieces that
+//! make that possible, shared by the execution layer, the serving
+//! coordinator, the benches, and the CLI:
+//!
+//! * [`profile`] — per-step profiling of [`crate::exec::CompiledPlan`]
+//!   runs: a zero-cost-when-disabled [`StepProfiler`] trait
+//!   (monomorphized; [`NoProfiler`] compiles to the exact unprofiled hot
+//!   path), a wall-clock [`StepRecorder`], and [`StepProfile`]
+//!   aggregation across runs into per-step mean/p50/p95, time shares,
+//!   and a top-k dominating-steps view.
+//! * [`hist`] — fixed-bucket, mergeable [`LatencyHistogram`]s (log-spaced
+//!   bounds), so serving percentiles can be combined across models and
+//!   processes without retaining raw samples, plus the ceil-based
+//!   [`nearest_rank`] percentile every exact window shares.
+//! * [`trace`] — structured control-plane lifecycle events
+//!   ([`TraceEvent`]: deploy/swap/retire/drain/shutdown + registry sync
+//!   deltas) behind a pluggable [`TraceSink`] ([`TraceLog`] buffers in
+//!   memory, [`StderrSink`] prints).
+//! * [`export`] — JSON snapshot exporters with a **stable schema**
+//!   (`msfcnn.bench/v1`) for `BENCH_infer.json` / `BENCH_serve.json` and
+//!   the matching validators `make bench-snapshot` and CI gate on.
+
+pub mod export;
+pub mod hist;
+pub mod profile;
+pub mod trace;
+
+pub use hist::{nearest_rank, LatencyHistogram};
+pub use profile::{
+    profile_plan, NoProfiler, StepMeta, StepProfile, StepProfiler, StepRecorder, StepStat,
+};
+pub use trace::{NullSink, SharedSink, StderrSink, TraceEvent, TraceLog, TraceSink};

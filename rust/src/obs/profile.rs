@@ -1,0 +1,281 @@
+//! Per-step profiling of compiled execution plans.
+//!
+//! [`StepProfiler`] is the instrumentation seam inside
+//! [`CompiledPlan::run_profiled`](crate::exec::CompiledPlan::run_profiled):
+//! the executor calls `begin(step)` / `end(step, macs)` around every
+//! compiled step. The trait is **monomorphized** — with [`NoProfiler`]
+//! both calls are empty `#[inline(always)]` bodies, so the unprofiled
+//! hot path compiles to exactly the allocation-free `run_into` loop
+//! (the parity test in `rust/tests/obs_profile.rs` pins bit-identical
+//! logits/MACs and an unchanged [`PlanPool`](crate::exec::PlanPool)
+//! allocation counter).
+//!
+//! [`StepRecorder`] is the measuring implementation: wall time per step
+//! per run, aggregated by [`StepProfile::from_recorder`] into per-step
+//! mean/p50/p95, time shares, and a top-k dominating-steps view — the
+//! per-step attribution `msfcnn profile`, `benches/infer_hot.rs`, and
+//! `report::table_steps` print.
+
+use std::time::Instant;
+
+use crate::exec::CompiledPlan;
+use crate::ops::Tensor;
+
+use super::hist::nearest_rank;
+
+/// Instrumentation hooks around every compiled step. Implementations
+/// must be cheap: `begin`/`end` run inside the serving hot path when
+/// profiling is on, and must compile to nothing when it is off
+/// ([`NoProfiler`]).
+pub trait StepProfiler {
+    /// Called immediately before step `idx` executes.
+    fn begin(&mut self, idx: usize);
+    /// Called immediately after step `idx`, with the MACs it performed.
+    fn end(&mut self, idx: usize, macs: u64);
+}
+
+/// The disabled profiler: both hooks are empty and `#[inline(always)]`,
+/// so `run_profiled::<NoProfiler>` monomorphizes to the exact unprofiled
+/// step loop — zero cost, bit-identical numerics, no allocations.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NoProfiler;
+
+impl StepProfiler for NoProfiler {
+    #[inline(always)]
+    fn begin(&mut self, _idx: usize) {}
+    #[inline(always)]
+    fn end(&mut self, _idx: usize, _macs: u64) {}
+}
+
+/// Wall-clock recorder: per-step latency samples across runs, plus the
+/// per-step MAC count (identical every run — the plan is static).
+/// Allocates its sample storage up front; recording itself only pushes
+/// into pre-created vectors.
+#[derive(Debug, Clone)]
+pub struct StepRecorder {
+    started: Option<Instant>,
+    samples_us: Vec<Vec<f64>>,
+    macs: Vec<u64>,
+}
+
+impl StepRecorder {
+    /// Recorder for a plan with `num_steps` compiled steps.
+    pub fn new(num_steps: usize) -> Self {
+        Self {
+            started: None,
+            samples_us: vec![Vec::new(); num_steps],
+            macs: vec![0; num_steps],
+        }
+    }
+
+    /// Completed runs recorded so far.
+    pub fn runs(&self) -> usize {
+        self.samples_us.first().map_or(0, Vec::len)
+    }
+
+    /// Latency samples (µs) of step `idx`, one per run.
+    pub fn samples_us(&self, idx: usize) -> &[f64] {
+        &self.samples_us[idx]
+    }
+
+    /// MACs step `idx` performed per run.
+    pub fn macs(&self, idx: usize) -> u64 {
+        self.macs[idx]
+    }
+}
+
+impl StepProfiler for StepRecorder {
+    fn begin(&mut self, _idx: usize) {
+        self.started = Some(Instant::now());
+    }
+
+    fn end(&mut self, idx: usize, macs: u64) {
+        let t0 = self.started.take().expect("StepProfiler::end without begin");
+        self.samples_us[idx].push(t0.elapsed().as_secs_f64() * 1e6);
+        self.macs[idx] = macs;
+    }
+}
+
+/// Static description of one compiled step, derived from the plan at
+/// compile time (independent of any run).
+#[derive(Debug, Clone)]
+pub struct StepMeta {
+    /// Position in the compiled step list.
+    pub index: usize,
+    /// Step kind tag: `"stash"`, `"single"`, `"fused"`, `"fused-iter"`.
+    pub kind: &'static str,
+    /// Human-readable label, e.g. `"conv2d[3]"` or `"fused[0..4)"`.
+    pub label: String,
+    /// Model-layer range `[start, end)` the step executes (stash steps
+    /// report the boundary tensor index as an empty range).
+    pub layers: (usize, usize),
+    /// Bytes the step touches per run: pool slices read + written plus
+    /// the parameters it streams (f32 storage convention).
+    pub bytes: u64,
+}
+
+/// Aggregated timing of one step across profiled runs.
+#[derive(Debug, Clone)]
+pub struct StepStat {
+    pub meta: StepMeta,
+    /// MACs per run (constant — the step list is static).
+    pub macs: u64,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub min_us: f64,
+    pub max_us: f64,
+    /// This step's fraction of the whole run's mean wall time.
+    pub share: f64,
+}
+
+/// Per-step attribution of a compiled plan, aggregated over `runs`
+/// profiled executions.
+#[derive(Debug, Clone)]
+pub struct StepProfile {
+    /// Canonical model name of the profiled plan.
+    pub model: String,
+    /// The fusion setting's span layout (`FusionSetting::describe`).
+    pub setting: String,
+    /// Profiled runs aggregated into each step's statistics.
+    pub runs: usize,
+    /// Sum of per-step mean latencies — the mean in-plan wall time.
+    pub total_mean_us: f64,
+    /// One entry per compiled step, in execution order.
+    pub steps: Vec<StepStat>,
+}
+
+impl StepProfile {
+    /// Aggregate a recorder's samples against the plan's step metadata.
+    /// Panics if the recorder has recorded no runs or belongs to a
+    /// different plan (step-count mismatch).
+    pub fn from_recorder(compiled: &CompiledPlan, rec: &StepRecorder) -> Self {
+        let metas = compiled.step_metas();
+        assert_eq!(metas.len(), rec.samples_us.len(), "recorder/plan step mismatch");
+        let runs = rec.runs();
+        assert!(runs > 0, "no profiled runs recorded");
+        let mut steps: Vec<StepStat> = metas
+            .into_iter()
+            .enumerate()
+            .map(|(i, meta)| {
+                let mut sorted = rec.samples_us(i).to_vec();
+                sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let mean = sorted.iter().sum::<f64>() / sorted.len() as f64;
+                StepStat {
+                    meta,
+                    macs: rec.macs(i),
+                    mean_us: mean,
+                    p50_us: nearest_rank(&sorted, 0.50),
+                    p95_us: nearest_rank(&sorted, 0.95),
+                    min_us: sorted[0],
+                    max_us: *sorted.last().unwrap(),
+                    share: 0.0,
+                }
+            })
+            .collect();
+        let total: f64 = steps.iter().map(|s| s.mean_us).sum();
+        for s in &mut steps {
+            s.share = if total > 0.0 { s.mean_us / total } else { 0.0 };
+        }
+        Self {
+            model: compiled.model().name.clone(),
+            setting: compiled.setting().describe(),
+            runs,
+            total_mean_us: total,
+            steps,
+        }
+    }
+
+    /// The `k` steps with the largest mean latency, descending — the
+    /// "where does the time go" view kernel work starts from.
+    pub fn top_k(&self, k: usize) -> Vec<&StepStat> {
+        let mut by_time: Vec<&StepStat> = self.steps.iter().collect();
+        by_time.sort_by(|a, b| b.mean_us.partial_cmp(&a.mean_us).unwrap());
+        by_time.truncate(k);
+        by_time
+    }
+
+    /// Total MACs of one run (sum over steps).
+    pub fn total_macs(&self) -> u64 {
+        self.steps.iter().map(|s| s.macs).sum()
+    }
+}
+
+/// Profile `compiled` over `runs` executions of `input`: one warm-up
+/// run (unprofiled — pool faulting and cache warm-up would otherwise
+/// skew the first sample), then `runs` profiled runs in a dedicated
+/// pool. Returns the aggregated per-step attribution.
+pub fn profile_plan(compiled: &CompiledPlan, input: &Tensor, runs: usize) -> StepProfile {
+    let runs = runs.max(1);
+    let mut pool = compiled.make_pool();
+    let mut out = vec![0.0f32; compiled.output_len()];
+    compiled.run_into(input.as_map(), &mut pool, &mut out);
+    let mut rec = StepRecorder::new(compiled.num_steps());
+    for _ in 0..runs {
+        compiled.run_profiled(input.as_map(), &mut pool, &mut out, &mut rec);
+    }
+    StepProfile::from_recorder(compiled, &rec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::ParamGen;
+    use crate::optimizer::Planner;
+    use crate::zoo;
+
+    fn profiled(model: crate::model::ModelChain, runs: usize) -> (StepProfile, CompiledPlan) {
+        let setting = Planner::for_model(model.clone()).setting().unwrap();
+        let compiled = CompiledPlan::compile(model, setting);
+        let s = compiled.model().shapes[0];
+        let x = Tensor::from_data(
+            s.h as usize,
+            s.w as usize,
+            s.c as usize,
+            ParamGen::new(7).fill(s.elems() as usize, 2.0),
+        );
+        (profile_plan(&compiled, &x, runs), compiled)
+    }
+
+    #[test]
+    fn profile_covers_every_step_and_shares_sum_to_one() {
+        let (p, compiled) = profiled(zoo::quickstart(), 12);
+        assert_eq!(p.steps.len(), compiled.num_steps());
+        assert_eq!(p.runs, 12);
+        assert!(p.total_mean_us > 0.0);
+        let share_sum: f64 = p.steps.iter().map(|s| s.share).sum();
+        assert!((share_sum - 1.0).abs() < 1e-9, "{share_sum}");
+        for s in &p.steps {
+            assert!(s.min_us <= s.p50_us && s.p50_us <= s.p95_us && s.p95_us <= s.max_us);
+            assert!(s.meta.bytes > 0, "step '{}' reports no bytes", s.meta.label);
+        }
+    }
+
+    #[test]
+    fn profiled_macs_match_unprofiled_run() {
+        let (p, compiled) = profiled(zoo::kws_cnn(), 3);
+        let s = compiled.model().shapes[0];
+        let x = Tensor::from_data(
+            s.h as usize,
+            s.w as usize,
+            s.c as usize,
+            ParamGen::new(7).fill(s.elems() as usize, 2.0),
+        );
+        let mut pool = compiled.make_pool();
+        let mut out = vec![0.0f32; compiled.output_len()];
+        let macs = compiled.run_into(x.as_map(), &mut pool, &mut out);
+        assert_eq!(p.total_macs(), macs);
+    }
+
+    #[test]
+    fn top_k_is_descending_and_truncated() {
+        let (p, _) = profiled(zoo::quickstart(), 5);
+        let top = p.top_k(2);
+        assert!(top.len() <= 2);
+        if top.len() == 2 {
+            assert!(top[0].mean_us >= top[1].mean_us);
+        }
+        let full = p.top_k(usize::MAX);
+        assert_eq!(full.len(), p.steps.len());
+    }
+}

@@ -1,0 +1,162 @@
+//! Structured control-plane trace events with a pluggable sink.
+//!
+//! The serving control plane ([`crate::coordinator::ServerHandle`])
+//! emits a [`TraceEvent`] for every lifecycle transition — deploy, swap,
+//! retire, executor drain, shutdown — and
+//! [`crate::coordinator::PlanRegistry::sync`] emits the registry deltas
+//! it applied. Events flow into whatever [`TraceSink`] the server was
+//! given: the default sink discards them (zero overhead beyond an
+//! `Arc` deref per event), [`TraceLog`] buffers them for tests and
+//! post-mortems, [`StderrSink`] prints them live (`msfcnn serve
+//! --trace`).
+
+use std::sync::{Arc, Mutex};
+
+/// One control-plane lifecycle event.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TraceEvent {
+    /// A model entered the live registry.
+    Deploy { model_id: String },
+    /// A live model was hot-swapped (old backend drains, new one serves).
+    Swap { model_id: String },
+    /// A model left the live registry (its queue drains to completion).
+    Retire { model_id: String },
+    /// A model's executor exited after draining its queue; `drained` is
+    /// the number of queued requests answered with a structured
+    /// `ShuttingDown` reply instead of executing.
+    Drain { model_id: String, drained: usize },
+    /// The whole server stopped accepting requests.
+    Shutdown,
+    /// One `PlanRegistry::sync` pass applied these deltas to the server.
+    RegistrySync {
+        added: Vec<String>,
+        updated: Vec<String>,
+        removed: Vec<String>,
+        /// Files that failed to load/validate this scan.
+        errors: usize,
+        /// Model ids claimed by more than one plan file this scan.
+        conflicts: usize,
+    },
+}
+
+impl TraceEvent {
+    /// The model this event concerns (`None` for server-wide events).
+    pub fn model_id(&self) -> Option<&str> {
+        match self {
+            TraceEvent::Deploy { model_id }
+            | TraceEvent::Swap { model_id }
+            | TraceEvent::Retire { model_id }
+            | TraceEvent::Drain { model_id, .. } => Some(model_id),
+            TraceEvent::Shutdown | TraceEvent::RegistrySync { .. } => None,
+        }
+    }
+}
+
+impl std::fmt::Display for TraceEvent {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TraceEvent::Deploy { model_id } => write!(f, "deploy '{model_id}'"),
+            TraceEvent::Swap { model_id } => write!(f, "swap '{model_id}'"),
+            TraceEvent::Retire { model_id } => write!(f, "retire '{model_id}'"),
+            TraceEvent::Drain { model_id, drained } => {
+                write!(f, "drain '{model_id}' ({drained} queued request(s) shed)")
+            }
+            TraceEvent::Shutdown => write!(f, "shutdown"),
+            TraceEvent::RegistrySync { added, updated, removed, errors, conflicts } => write!(
+                f,
+                "registry sync: +{added:?} ~{updated:?} -{removed:?} ({errors} error(s), {conflicts} conflict(s))"
+            ),
+        }
+    }
+}
+
+/// Where trace events go. Sinks must be `Send`: the server's executor
+/// threads emit drain events from their own threads.
+pub trait TraceSink: Send {
+    fn emit(&mut self, event: TraceEvent);
+}
+
+/// A sink shareable across the control plane and its executor threads.
+pub type SharedSink = Arc<Mutex<Box<dyn TraceSink>>>;
+
+/// The default sink: events are dropped.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NullSink;
+
+impl TraceSink for NullSink {
+    fn emit(&mut self, _event: TraceEvent) {}
+}
+
+/// Prints every event to stderr — the live view `msfcnn serve --trace`
+/// wires up.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct StderrSink;
+
+impl TraceSink for StderrSink {
+    fn emit(&mut self, event: TraceEvent) {
+        eprintln!("TRACE: {event}");
+    }
+}
+
+/// In-memory event buffer. Cloning shares the buffer, so a test (or a
+/// post-mortem reader) keeps a handle while the server owns the sink.
+#[derive(Debug, Default, Clone)]
+pub struct TraceLog {
+    events: Arc<Mutex<Vec<TraceEvent>>>,
+}
+
+impl TraceLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Snapshot of every event emitted so far, in emission order.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        self.events.lock().unwrap().clone()
+    }
+
+    /// Number of events emitted so far.
+    pub fn len(&self) -> usize {
+        self.events.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl TraceSink for TraceLog {
+    fn emit(&mut self, event: TraceEvent) {
+        self.events.lock().unwrap().push(event);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_clone_shares_the_buffer() {
+        let log = TraceLog::new();
+        let mut sink = log.clone();
+        sink.emit(TraceEvent::Deploy { model_id: "a".into() });
+        sink.emit(TraceEvent::Shutdown);
+        assert_eq!(log.len(), 2);
+        assert_eq!(log.events()[0].model_id(), Some("a"));
+        assert_eq!(log.events()[1], TraceEvent::Shutdown);
+    }
+
+    #[test]
+    fn events_render_for_logs() {
+        let e = TraceEvent::Drain { model_id: "kws".into(), drained: 3 };
+        assert!(e.to_string().contains("drain 'kws'"), "{e}");
+        let s = TraceEvent::RegistrySync {
+            added: vec!["a".into()],
+            updated: vec![],
+            removed: vec![],
+            errors: 1,
+            conflicts: 2,
+        };
+        assert!(s.to_string().contains("2 conflict(s)"), "{s}");
+    }
+}

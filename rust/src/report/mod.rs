@@ -6,12 +6,14 @@
 
 mod ablations;
 mod figures;
+mod profile;
 mod tables;
 
 pub use ablations::{
     ablation_cache_schemes, ablation_output_granularity, GranularityRow, SchemeRow,
 };
 pub use figures::{fig2_pooling, fig3_dense, fig4_series, FigRow};
+pub use profile::{step_table, table_steps, top_k_table};
 pub use tables::{
     table1, table2, table3, table5, table5_joint, Table1Row, Table2Row, Table3Row,
     Table5JointRow, Table5Row,

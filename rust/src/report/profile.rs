@@ -1,0 +1,112 @@
+//! Per-step attribution tables: render a [`StepProfile`] as the aligned
+//! text table `msfcnn profile` and `msfcnn tables --which steps` print.
+
+use crate::exec::CompiledPlan;
+use crate::obs::{profile_plan, StepProfile};
+use crate::ops::{ParamGen, Tensor};
+use crate::optimizer::Planner;
+use crate::zoo;
+
+/// Render one profile as an aligned per-step table: execution order,
+/// label, mean/p50/p95 latency, time share, MACs, and bytes touched.
+pub fn step_table(p: &StepProfile) -> String {
+    let rows: Vec<Vec<String>> = p
+        .steps
+        .iter()
+        .map(|s| {
+            vec![
+                s.meta.index.to_string(),
+                s.meta.label.clone(),
+                s.meta.kind.to_string(),
+                format!("{:.1}", s.mean_us),
+                format!("{:.1}", s.p50_us),
+                format!("{:.1}", s.p95_us),
+                format!("{:.1}%", s.share * 100.0),
+                s.macs.to_string(),
+                s.meta.bytes.to_string(),
+            ]
+        })
+        .collect();
+    let mut out = format!(
+        "{} [{}] — {} runs, mean in-plan {:.1} us, {} MACs/run\n",
+        p.model,
+        p.setting,
+        p.runs,
+        p.total_mean_us,
+        p.total_macs(),
+    );
+    out.push_str(&super::render(
+        &["#", "step", "kind", "mean us", "p50 us", "p95 us", "share", "MACs", "bytes"],
+        &rows,
+    ));
+    out
+}
+
+/// Render the top-`k` dominating steps of a profile, descending by mean
+/// latency — the "where does the time go" summary under the full table.
+pub fn top_k_table(p: &StepProfile, k: usize) -> String {
+    let rows: Vec<Vec<String>> = p
+        .top_k(k)
+        .iter()
+        .map(|s| {
+            vec![
+                s.meta.label.clone(),
+                format!("{:.1}", s.mean_us),
+                format!("{:.1}%", s.share * 100.0),
+            ]
+        })
+        .collect();
+    let mut out = format!("top {} steps by mean latency:\n", rows.len());
+    out.push_str(&super::render(&["step", "mean us", "share"], &rows));
+    out
+}
+
+/// Per-step attribution of a few small zoo models under their planned
+/// default settings (the `msfcnn tables --which steps` view). Returns
+/// the structured profiles plus the rendered tables.
+pub fn table_steps() -> (Vec<StepProfile>, String) {
+    let mut profiles = Vec::new();
+    let mut out = String::new();
+    for name in ["quickstart", "kws", "tiny"] {
+        let model = zoo::by_name(name).expect("zoo model");
+        let setting = Planner::for_model(model.clone()).setting().expect("plannable model");
+        let compiled = CompiledPlan::compile(model, setting);
+        let s = compiled.model().shapes[0];
+        let x = Tensor::from_data(
+            s.h as usize,
+            s.w as usize,
+            s.c as usize,
+            ParamGen::new(7).fill(s.elems() as usize, 2.0),
+        );
+        let p = profile_plan(&compiled, &x, 12);
+        out.push_str(&step_table(&p));
+        out.push('\n');
+        profiles.push(p);
+    }
+    (profiles, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_table_lists_every_step() {
+        let (profiles, text) = table_steps();
+        assert_eq!(profiles.len(), 3);
+        for p in &profiles {
+            assert!(text.contains(&p.model), "missing model header for {}", p.model);
+            for s in &p.steps {
+                assert!(text.contains(&s.meta.label), "missing step '{}'", s.meta.label);
+            }
+        }
+    }
+
+    #[test]
+    fn top_k_table_is_bounded() {
+        let (profiles, _) = table_steps();
+        let t = top_k_table(&profiles[0], 2);
+        // Header + table header + separator + at most 2 rows.
+        assert!(t.lines().count() <= 5, "{t}");
+    }
+}

@@ -1,0 +1,183 @@
+//! Observability integration: the profiled hot path is bit-identical to
+//! the unprofiled one (the PR's parity acceptance criterion), profiled
+//! runs stay allocation-free, control-plane trace events arrive in
+//! lifecycle order, and per-model metrics survive a hot swap.
+
+use msf_cnn::coordinator::{ModelSpec, MultiModelServer};
+use msf_cnn::exec::CompiledPlan;
+use msf_cnn::model::ModelChain;
+use msf_cnn::obs::{profile_plan, NoProfiler, StepRecorder, TraceEvent, TraceLog};
+use msf_cnn::ops::{ParamGen, Tensor};
+use msf_cnn::optimizer::Planner;
+use msf_cnn::zoo;
+
+fn compiled_for(model: ModelChain) -> CompiledPlan {
+    let setting = Planner::for_model(model.clone()).setting().expect("min-RAM plan");
+    CompiledPlan::compile(model, setting)
+}
+
+fn input_for(compiled: &CompiledPlan, seed: u64) -> Tensor {
+    let s = compiled.model().shapes[0];
+    Tensor::from_data(
+        s.h as usize,
+        s.w as usize,
+        s.c as usize,
+        ParamGen::new(seed).fill(s.elems() as usize, 2.0),
+    )
+}
+
+// ------------------------------------------------------------------ parity
+
+/// `run_profiled` with the no-op profiler must be *exactly* `run_into`:
+/// bit-identical logits, identical MAC counts, and an unchanged pool
+/// allocation counter — the zero-cost-when-disabled guarantee.
+#[test]
+fn noop_profiler_is_bit_identical_and_allocation_free() {
+    for model in [zoo::quickstart(), zoo::kws_cnn(), zoo::tiny_cnn()] {
+        let name = model.name.clone();
+        let compiled = compiled_for(model);
+        let x = input_for(&compiled, 11);
+
+        let mut pool_a = compiled.make_pool();
+        let mut out_a = vec![0.0f32; compiled.output_len()];
+        let macs_a = compiled.run_into(x.as_map(), &mut pool_a, &mut out_a);
+
+        let mut pool_b = compiled.make_pool();
+        let mut out_b = vec![0.0f32; compiled.output_len()];
+        let macs_b = compiled.run_profiled(x.as_map(), &mut pool_b, &mut out_b, &mut NoProfiler);
+
+        assert_eq!(macs_a, macs_b, "{name}: MACs diverge under NoProfiler");
+        assert_eq!(out_a, out_b, "{name}: logits diverge under NoProfiler");
+
+        // Warm re-runs never allocate or move the pool storage.
+        let allocs = pool_b.storage_allocs();
+        let ptr = pool_b.storage_ptr();
+        for _ in 0..3 {
+            compiled.run_profiled(x.as_map(), &mut pool_b, &mut out_b, &mut NoProfiler);
+        }
+        assert_eq!(pool_b.storage_allocs(), allocs, "{name}: warm profiled runs allocated");
+        assert_eq!(pool_b.storage_ptr(), ptr, "{name}: pool storage moved");
+        assert_eq!(out_a, out_b, "{name}: warm profiled rerun diverged");
+    }
+}
+
+/// The measuring recorder must not perturb numerics either — only time
+/// is observed, never data.
+#[test]
+fn recording_profiler_preserves_numerics_and_counts_every_step() {
+    let compiled = compiled_for(zoo::kws_cnn());
+    let x = input_for(&compiled, 29);
+
+    let mut pool = compiled.make_pool();
+    let mut out_plain = vec![0.0f32; compiled.output_len()];
+    let macs_plain = compiled.run_into(x.as_map(), &mut pool, &mut out_plain);
+
+    let mut rec = StepRecorder::new(compiled.num_steps());
+    let mut out_rec = vec![0.0f32; compiled.output_len()];
+    let macs_rec = compiled.run_profiled(x.as_map(), &mut pool, &mut out_rec, &mut rec);
+
+    assert_eq!(macs_plain, macs_rec);
+    assert_eq!(out_plain, out_rec);
+    assert_eq!(rec.runs(), 1);
+    for i in 0..compiled.num_steps() {
+        assert_eq!(rec.samples_us(i).len(), 1, "step {i} missed a sample");
+    }
+
+    // The aggregated attribution accounts for every MAC of the run.
+    let profile = profile_plan(&compiled, &x, 4);
+    assert_eq!(profile.total_macs(), macs_plain);
+    assert_eq!(profile.steps.len(), compiled.num_steps());
+}
+
+// ------------------------------------------------------------------- trace
+
+fn engine_spec(id: &str, model: ModelChain) -> ModelSpec {
+    let setting = Planner::for_model(model.clone()).setting().expect("min-RAM plan");
+    ModelSpec::engine(id, model, setting)
+}
+
+/// Deploy → swap → retire → shutdown arrive at the sink in lifecycle
+/// order, with executor drains attributed to their model.
+#[test]
+fn trace_events_follow_the_control_plane_lifecycle() {
+    let server = MultiModelServer::new();
+    let handle = server.handle();
+    let log = TraceLog::new();
+    handle.set_trace_sink(log.clone());
+
+    let tiny = zoo::tiny_cnn();
+    handle.deploy(engine_spec("tiny", tiny.clone())).unwrap();
+    handle.infer("tiny", ParamGen::new(3).fill(tiny.shapes[0].elems() as usize, 2.0)).unwrap();
+    handle.swap(engine_spec("tiny", tiny.clone())).unwrap();
+    handle.retire("tiny").unwrap();
+    drop(handle);
+    server.shutdown();
+
+    let events = log.events();
+    let kinds: Vec<&'static str> = events
+        .iter()
+        .map(|e| match e {
+            TraceEvent::Deploy { .. } => "deploy",
+            TraceEvent::Swap { .. } => "swap",
+            TraceEvent::Retire { .. } => "retire",
+            TraceEvent::Drain { .. } => "drain",
+            TraceEvent::Shutdown => "shutdown",
+            TraceEvent::RegistrySync { .. } => "sync",
+        })
+        .collect();
+    let pos = |k: &str| {
+        kinds
+            .iter()
+            .position(|&x| x == k)
+            .unwrap_or_else(|| panic!("no {k} event in {kinds:?}"))
+    };
+    assert!(pos("deploy") < pos("swap"), "{kinds:?}");
+    assert!(pos("swap") < pos("retire"), "{kinds:?}");
+    assert!(pos("retire") < pos("shutdown"), "{kinds:?}");
+    // Both the swapped-out and the retired executor drained.
+    let drains = events
+        .iter()
+        .filter(|e| matches!(e, TraceEvent::Drain { .. }))
+        .count();
+    assert!(drains >= 2, "expected both executors to drain, got {drains} in {kinds:?}");
+    for e in &events {
+        if let Some(id) = e.model_id() {
+            assert_eq!(id, "tiny");
+        }
+    }
+}
+
+// ----------------------------------------------------------------- metrics
+
+/// A hot swap replaces the backend, not the model's telemetry: counts
+/// keep accumulating across the generation change.
+#[test]
+fn metrics_survive_a_hot_swap() {
+    let tiny = zoo::tiny_cnn();
+    let server = MultiModelServer::start(vec![engine_spec("tiny", tiny.clone())]).unwrap();
+    let handle = server.handle();
+    let input = || ParamGen::new(5).fill(tiny.shapes[0].elems() as usize, 2.0);
+
+    for _ in 0..4 {
+        handle.infer("tiny", input()).unwrap();
+    }
+    let before = handle.metrics().model("tiny").map(|m| m.completed()).unwrap_or(0);
+    assert_eq!(before, 4);
+
+    handle.swap(engine_spec("tiny", tiny.clone())).unwrap();
+    for _ in 0..3 {
+        handle.infer("tiny", input()).unwrap();
+    }
+
+    let metrics = handle.metrics();
+    let m = metrics.model("tiny").expect("metrics survive the swap");
+    assert_eq!(m.completed(), 7, "completions reset across hot swap");
+    assert_eq!(m.histogram().count(), 7, "histogram reset across hot swap");
+    let stats = m.stats().expect("stats present");
+    assert_eq!(stats.count, 7);
+    assert!(stats.p50_us <= stats.p95_us && stats.p95_us <= stats.p99_us);
+    assert!(m.exec_mean_us().unwrap_or(0.0) > 0.0, "exec split missing after swap");
+
+    drop(handle);
+    server.shutdown();
+}
