@@ -2,15 +2,17 @@
 #
 # `make verify` is the regression gate: tier-1 (release build + tests)
 # plus bench compilation (`cargo bench --no-run`, so the perf-trajectory
-# benches can't silently rot), clippy -D warnings, rustfmt --check, and
-# rustdoc -D warnings when the components are installed. CI runs the same
-# target (.github/workflows/ci.yml), so the seed suite can't rot again.
+# benches can't silently rot), the static plan verifier over freshly
+# planned zoo artifacts (`make analysis` = `msfcnn verify --zoo`),
+# clippy -D warnings, rustfmt --check, and rustdoc -D warnings when the
+# components are installed. CI runs the same target
+# (.github/workflows/ci.yml), so the seed suite can't rot again.
 
 CARGO ?= cargo
 
-.PHONY: verify build test bench-build clippy fmt doc bench bench-snapshot bench-smoke artifacts clean
+.PHONY: verify build test bench-build analysis clippy fmt doc bench bench-snapshot bench-smoke artifacts clean
 
-verify: build test bench-build clippy fmt doc
+verify: build test bench-build analysis clippy fmt doc
 
 build:
 	$(CARGO) build --release
@@ -22,6 +24,12 @@ test:
 # runtime on every verify.
 bench-build:
 	$(CARGO) bench --no-run
+
+# Static plan analysis over freshly planned zoo artifacts: plan every
+# model x strategy pair, serialize, and run the verifier over the files
+# (`msfcnn verify` exits nonzero on any finding).
+analysis:
+	$(CARGO) run --release --bin msfcnn -- verify --zoo
 
 clippy:
 	@if $(CARGO) clippy --version >/dev/null 2>&1; then \

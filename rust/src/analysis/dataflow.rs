@@ -1,0 +1,396 @@
+//! Step-list dataflow passes: the symbolic walk over a compiled plan's
+//! access lists.
+//!
+//! Four passes over one [`AnalysisInput`]:
+//!
+//! * **structural** — buffer dims/extent/lifetime sanity, access extents
+//!   against buffer extents, accesses against the pool bound;
+//! * **hazard** — within each step, two accesses may not overlap in pool
+//!   space while both buffers are alive (the static form of the
+//!   executor's `two_muts`/`three_muts` invariants). Buffers whose
+//!   runtime lifetimes are disjoint may legally share pool bytes — e.g.
+//!   an iterative-tail's logits reusing the band pyramid's storage — so
+//!   only lifetime-overlapping pairs are constrained;
+//! * **lifetime** — a monotone clock over the access order: each access
+//!   advances the clock to its buffer's birth and must stay below the
+//!   buffer's death (steps never reach back to a freed buffer);
+//! * **def-before-use** — per-buffer [`IntervalSet`]s of defined pool
+//!   elements. Writes define their own range and *subtract* it from every
+//!   other buffer's set (pool bytes are shared, so an aliasing write
+//!   clobbers), reads report every uncovered gap, and the final output
+//!   must end fully defined. Scratch ranges (band pyramids, iterative
+//!   accumulators) are produced before the step's outputs, mirroring the
+//!   kernels' intra-step write order.
+
+use super::interval::IntervalSet;
+use super::{AnalysisInput, AnalysisReport, DefectClass, Finding};
+use crate::exec::{BufAccess, RtBufInfo};
+
+/// f32 pool elements are 4 bytes: findings report byte ranges.
+const ELEM_BYTES: u64 = 4;
+
+fn byte_range(start: usize, end: usize) -> (u64, u64) {
+    (start as u64 * ELEM_BYTES, end as u64 * ELEM_BYTES)
+}
+
+/// Absolute pool element range of one access (saturating: structurally
+/// broken inputs must produce findings, not overflow panics).
+fn abs_range(buf: &RtBufInfo, acc: &BufAccess) -> (usize, usize) {
+    let start = buf.off.saturating_add(acc.start);
+    (start, start.saturating_add(acc.len))
+}
+
+fn structural_pass(input: &AnalysisInput, report: &mut AnalysisReport) {
+    for b in &input.buffers {
+        let (h, w, c) = b.dims;
+        if h * w * c != b.elems {
+            report.push(
+                Finding::new(
+                    DefectClass::ShapeMismatch,
+                    format!("dims {h}x{w}x{c} = {} elems but the buffer holds {}", h * w * c, b.elems),
+                )
+                .on_buffer(&b.label),
+            );
+        }
+        if b.elems == 0 {
+            continue;
+        }
+        let end = b.off.saturating_add(b.elems);
+        if end > input.pool_elems {
+            let (lo, hi) = byte_range(b.off, end);
+            report.push(
+                Finding::new(
+                    DefectClass::OutOfPool,
+                    format!(
+                        "buffer ends at element {end} but the pool holds {}",
+                        input.pool_elems
+                    ),
+                )
+                .on_buffer(&b.label)
+                .in_bytes(lo, hi),
+            );
+        }
+        if b.birth >= b.death {
+            report.push(
+                Finding::new(
+                    DefectClass::LifetimeViolation,
+                    format!("lifetime [{}, {}) is empty", b.birth, b.death),
+                )
+                .on_buffer(&b.label),
+            );
+        }
+    }
+    for step in &input.steps {
+        let accesses = step.reads.iter().chain(&step.scratch).chain(&step.writes);
+        for acc in accesses {
+            let Some(b) = input.buffers.get(acc.buf) else {
+                report.push(
+                    Finding::new(
+                        DefectClass::OutOfPool,
+                        format!(
+                            "access names buffer #{} but the table holds {}",
+                            acc.buf,
+                            input.buffers.len()
+                        ),
+                    )
+                    .at_step(step.index),
+                );
+                continue;
+            };
+            let end = acc.start.saturating_add(acc.len);
+            if end > b.elems {
+                let (lo, hi) = byte_range(acc.start, end);
+                report.push(
+                    Finding::new(
+                        DefectClass::ShapeMismatch,
+                        format!(
+                            "access [{}, {end}) exceeds the buffer's {} elements",
+                            acc.start, b.elems
+                        ),
+                    )
+                    .at_step(step.index)
+                    .on_buffer(&b.label)
+                    .in_bytes(lo, hi),
+                );
+            }
+        }
+    }
+}
+
+fn hazard_pass(input: &AnalysisInput, report: &mut AnalysisReport) {
+    for step in &input.steps {
+        if step.in_place_safe {
+            continue;
+        }
+        // Access list in kernel order, tagged with its role.
+        let mut accesses: Vec<(&'static str, &BufAccess)> = Vec::new();
+        accesses.extend(step.reads.iter().map(|a| ("read", a)));
+        accesses.extend(step.scratch.iter().map(|a| ("scratch", a)));
+        accesses.extend(step.writes.iter().map(|a| ("write", a)));
+        for (i, &(role_a, a)) in accesses.iter().enumerate() {
+            for &(role_b, b) in accesses.iter().skip(i + 1) {
+                if role_a == "read" && role_b == "read" {
+                    continue; // two reads never race
+                }
+                let (Some(ba), Some(bb)) =
+                    (input.buffers.get(a.buf), input.buffers.get(b.buf))
+                else {
+                    continue; // structural pass already reported it
+                };
+                if a.buf != b.buf {
+                    // Distinct buffers with disjoint runtime lifetimes may
+                    // legally share pool bytes (the dead one's contents
+                    // are gone by construction).
+                    let live = ba.birth < bb.death && bb.birth < ba.death;
+                    if !live {
+                        continue;
+                    }
+                }
+                let (sa, ea) = abs_range(ba, a);
+                let (sb, eb) = abs_range(bb, b);
+                if sa < eb && sb < ea {
+                    let (lo, hi) = byte_range(sa.max(sb), ea.min(eb));
+                    report.push(
+                        Finding::new(
+                            DefectClass::Hazard,
+                            format!(
+                                "{role_a} of '{}' overlaps {role_b} of '{}' while both are \
+                                 alive (kernel not declared in-place-safe)",
+                                ba.label, bb.label
+                            ),
+                        )
+                        .at_step(step.index)
+                        .on_buffer(&ba.label)
+                        .in_bytes(lo, hi),
+                    );
+                }
+            }
+        }
+    }
+}
+
+fn lifetime_pass(input: &AnalysisInput, report: &mut AnalysisReport) {
+    // Steps run in order and every buffer access implies "its birth has
+    // happened": the clock is the latest birth seen so far. A buffer
+    // whose death is at or before the clock was freed by the schedule
+    // before this access could run.
+    let mut clock = 0usize;
+    for step in &input.steps {
+        let accesses = step.reads.iter().chain(&step.scratch).chain(&step.writes);
+        for acc in accesses {
+            let Some(b) = input.buffers.get(acc.buf) else { continue };
+            if acc.len == 0 || b.birth >= b.death {
+                continue; // empty access / structurally-reported lifetime
+            }
+            clock = clock.max(b.birth);
+            if clock >= b.death {
+                let (s, e) = abs_range(b, acc);
+                let (lo, hi) = byte_range(s, e);
+                report.push(
+                    Finding::new(
+                        DefectClass::LifetimeViolation,
+                        format!(
+                            "accessed at schedule tick {clock}, outside its lifetime [{}, {})",
+                            b.birth, b.death
+                        ),
+                    )
+                    .at_step(step.index)
+                    .on_buffer(&b.label)
+                    .in_bytes(lo, hi),
+                );
+            }
+        }
+    }
+}
+
+fn defined_pass(input: &AnalysisInput, report: &mut AnalysisReport) {
+    let mut defined: Vec<IntervalSet> = vec![IntervalSet::new(); input.buffers.len()];
+    if let Some(pid) = input.predefined {
+        if let Some(b) = input.buffers.get(pid) {
+            defined[pid].insert(b.off, b.off + b.elems);
+        }
+    }
+    for step in &input.steps {
+        for acc in &step.reads {
+            let Some(b) = input.buffers.get(acc.buf) else { continue };
+            let (s, e) = abs_range(b, acc);
+            for (gs, ge) in defined[acc.buf].uncovered(s, e) {
+                let (lo, hi) = byte_range(gs, ge);
+                report.push(
+                    Finding::new(
+                        DefectClass::DefBeforeUse,
+                        format!("reads {} element(s) never written", ge - gs),
+                    )
+                    .at_step(step.index)
+                    .on_buffer(&b.label)
+                    .in_bytes(lo, hi),
+                );
+            }
+        }
+        // Scratch before writes: within a step the scratch pyramid is
+        // produced first and the output last, so an output that legally
+        // aliases a by-then-dead scratch buffer must subtract *after* the
+        // scratch insert, not before.
+        for acc in step.scratch.iter().chain(&step.writes) {
+            let Some(_) = input.buffers.get(acc.buf) else { continue };
+            let b = &input.buffers[acc.buf];
+            let (s, e) = abs_range(b, acc);
+            for (j, set) in defined.iter_mut().enumerate() {
+                if j == acc.buf {
+                    set.insert(s, e);
+                } else {
+                    set.subtract(s, e);
+                }
+            }
+        }
+    }
+    match input.buffers.get(input.output) {
+        Some(b) => {
+            for (gs, ge) in defined[input.output].uncovered(b.off, b.off + b.elems) {
+                let (lo, hi) = byte_range(gs, ge);
+                report.push(
+                    Finding::new(
+                        DefectClass::DefBeforeUse,
+                        "final output element(s) never written".to_string(),
+                    )
+                    .on_buffer(&b.label)
+                    .in_bytes(lo, hi),
+                );
+            }
+        }
+        None => report.push(Finding::new(
+            DefectClass::OutOfPool,
+            format!(
+                "output names buffer #{} but the table holds {}",
+                input.output,
+                input.buffers.len()
+            ),
+        )),
+    }
+}
+
+/// Structural + alias/hazard checking only — the invariant set
+/// [`crate::exec::CompiledPlan`] asserts once at compile-time-of-plan
+/// (promoting the hot path's `two_muts`/`three_muts` `debug_assert!`s to
+/// an ahead-of-time proof; the debug asserts stay as belt-and-braces).
+pub fn check_step_hazards(input: &AnalysisInput) -> AnalysisReport {
+    let mut report = AnalysisReport::new();
+    structural_pass(input, &mut report);
+    hazard_pass(input, &mut report);
+    report.steps_checked = input.steps.len();
+    report.buffers_checked = input.buffers.len();
+    report
+}
+
+/// The full symbolic walk: structural, hazard, lifetime-conformance, and
+/// def-before-use passes over one compiled step list. Collects **all**
+/// defects.
+pub fn verify_dataflow(input: &AnalysisInput) -> AnalysisReport {
+    let mut report = AnalysisReport::new();
+    structural_pass(input, &mut report);
+    hazard_pass(input, &mut report);
+    lifetime_pass(input, &mut report);
+    defined_pass(input, &mut report);
+    report.steps_checked = input.steps.len();
+    report.buffers_checked = input.buffers.len();
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{CompiledPlan, StepAccess};
+    use crate::optimizer::{strategy, Constraints, Planner};
+    use crate::zoo;
+
+    fn vanilla_input(name: &str) -> AnalysisInput {
+        let m = zoo::by_name(name).unwrap();
+        let setting = Planner::for_model(m.clone())
+            .plan_with(&strategy::Vanilla, Constraints::none())
+            .unwrap()
+            .setting;
+        AnalysisInput::from_compiled(&CompiledPlan::compile(m, setting))
+    }
+
+    fn classes(report: &AnalysisReport) -> Vec<DefectClass> {
+        report.findings.iter().map(|f| f.class).collect()
+    }
+
+    #[test]
+    fn clean_compiled_plans_have_no_findings() {
+        for name in ["quickstart", "tiny", "kws"] {
+            let input = vanilla_input(name);
+            let report = verify_dataflow(&input);
+            assert!(report.is_clean(), "{name}:\n{}", report.render());
+        }
+    }
+
+    #[test]
+    fn reordered_steps_are_def_before_use() {
+        let mut input = vanilla_input("quickstart");
+        assert!(input.steps.len() >= 2);
+        input.steps.swap(0, 1);
+        let report = verify_dataflow(&input);
+        assert!(
+            classes(&report).contains(&DefectClass::DefBeforeUse),
+            "{}",
+            report.render()
+        );
+    }
+
+    #[test]
+    fn missing_input_copy_is_def_before_use() {
+        let mut input = vanilla_input("quickstart");
+        assert!(input.predefined.is_some(), "vanilla plans materialize v0");
+        input.predefined = None;
+        let report = verify_dataflow(&input);
+        assert!(
+            classes(&report).contains(&DefectClass::DefBeforeUse),
+            "{}",
+            report.render()
+        );
+    }
+
+    #[test]
+    fn aliased_read_write_is_a_hazard() {
+        let mut input = vanilla_input("quickstart");
+        // Force the first step's output on top of its own input.
+        let (rbuf, wbuf) = {
+            let s: &StepAccess = &input.steps[0];
+            (s.reads[0].buf, s.writes[0].buf)
+        };
+        input.buffers[wbuf].off = input.buffers[rbuf].off;
+        let report = verify_dataflow(&input);
+        assert!(classes(&report).contains(&DefectClass::Hazard), "{}", report.render());
+
+        // The same overlap is sanctioned by the in-place-safe flag.
+        let mut safe = input.clone();
+        for s in &mut safe.steps {
+            s.in_place_safe = true;
+        }
+        let report = verify_dataflow(&safe);
+        assert!(!classes(&report).contains(&DefectClass::Hazard), "{}", report.render());
+    }
+
+    #[test]
+    fn truncated_lifetime_and_shrunk_buffer_are_flagged() {
+        let mut input = vanilla_input("quickstart");
+        let out = input.output;
+        input.buffers[out].death = input.buffers[out].birth;
+        let report = verify_dataflow(&input);
+        assert!(
+            classes(&report).contains(&DefectClass::LifetimeViolation),
+            "{}",
+            report.render()
+        );
+
+        let mut shrunk = vanilla_input("quickstart");
+        shrunk.buffers[out].elems /= 2;
+        let report = verify_dataflow(&shrunk);
+        assert!(
+            classes(&report).contains(&DefectClass::ShapeMismatch),
+            "{}",
+            report.render()
+        );
+    }
+}

@@ -1,0 +1,173 @@
+//! Byte/element interval sets — the dataflow lattice of the static
+//! verifier.
+//!
+//! [`IntervalSet`] tracks which element ranges of the execution pool hold
+//! defined data. Writes [`IntervalSet::insert`] their range, aliasing
+//! writes [`IntervalSet::subtract`] it from every other buffer's set
+//! (pool bytes are shared), and reads ask for the
+//! [`IntervalSet::uncovered`] gaps — each gap is a def-before-use defect.
+
+/// A set of disjoint half-open `[start, end)` runs over `usize`
+/// coordinates, kept sorted and coalesced.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct IntervalSet {
+    /// Sorted, non-adjacent, non-empty runs.
+    runs: Vec<(usize, usize)>,
+}
+
+impl IntervalSet {
+    /// The empty set.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// True when no run is present.
+    pub fn is_empty(&self) -> bool {
+        self.runs.is_empty()
+    }
+
+    /// Total covered length across all runs.
+    pub fn covered_len(&self) -> usize {
+        self.runs.iter().map(|&(s, e)| e - s).sum()
+    }
+
+    /// Insert `[start, end)`, merging with any overlapping or adjacent
+    /// runs. Empty ranges are ignored.
+    pub fn insert(&mut self, start: usize, end: usize) {
+        if start >= end {
+            return;
+        }
+        let mut merged = (start, end);
+        let mut out: Vec<(usize, usize)> = Vec::with_capacity(self.runs.len() + 1);
+        let mut placed = false;
+        for &(rs, re) in &self.runs {
+            if re < merged.0 {
+                // Strictly before (and not adjacent): keep as-is.
+                out.push((rs, re));
+            } else if rs > merged.1 {
+                // Strictly after: flush the merged run once, keep the rest.
+                if !placed {
+                    out.push(merged);
+                    placed = true;
+                }
+                out.push((rs, re));
+            } else {
+                // Overlapping or adjacent: absorb into the merged run.
+                merged.0 = merged.0.min(rs);
+                merged.1 = merged.1.max(re);
+            }
+        }
+        if !placed {
+            out.push(merged);
+        }
+        self.runs = out;
+    }
+
+    /// Remove `[start, end)` from the set (a write elsewhere clobbered
+    /// these coordinates).
+    pub fn subtract(&mut self, start: usize, end: usize) {
+        if start >= end || self.runs.is_empty() {
+            return;
+        }
+        let mut out: Vec<(usize, usize)> = Vec::with_capacity(self.runs.len() + 1);
+        for &(rs, re) in &self.runs {
+            if re <= start || rs >= end {
+                out.push((rs, re));
+                continue;
+            }
+            if rs < start {
+                out.push((rs, start));
+            }
+            if re > end {
+                out.push((end, re));
+            }
+        }
+        self.runs = out;
+    }
+
+    /// True when `[start, end)` is fully covered (empty ranges trivially
+    /// are).
+    pub fn covers(&self, start: usize, end: usize) -> bool {
+        self.uncovered(start, end).is_empty()
+    }
+
+    /// The sub-ranges of `[start, end)` *not* covered by the set, in
+    /// ascending order — the def-before-use gaps of a read.
+    pub fn uncovered(&self, start: usize, end: usize) -> Vec<(usize, usize)> {
+        let mut gaps = Vec::new();
+        if start >= end {
+            return gaps;
+        }
+        let mut at = start;
+        for &(rs, re) in &self.runs {
+            if re <= at {
+                continue;
+            }
+            if rs >= end {
+                break;
+            }
+            if rs > at {
+                gaps.push((at, rs.min(end)));
+            }
+            at = at.max(re);
+            if at >= end {
+                break;
+            }
+        }
+        if at < end {
+            gaps.push((at, end));
+        }
+        gaps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_merges_overlapping_and_adjacent_runs() {
+        let mut s = IntervalSet::new();
+        s.insert(10, 20);
+        s.insert(30, 40);
+        assert_eq!(s.covered_len(), 20);
+        // Adjacent on the left edge merges.
+        s.insert(20, 25);
+        assert!(s.covers(10, 25));
+        // Bridging run coalesces everything into one.
+        s.insert(24, 31);
+        assert!(s.covers(10, 40));
+        assert_eq!(s.covered_len(), 30);
+        // Empty inserts are no-ops.
+        s.insert(50, 50);
+        assert_eq!(s.covered_len(), 30);
+    }
+
+    #[test]
+    fn subtract_splits_and_trims_runs() {
+        let mut s = IntervalSet::new();
+        s.insert(0, 100);
+        s.subtract(40, 60);
+        assert!(s.covers(0, 40));
+        assert!(s.covers(60, 100));
+        assert!(!s.covers(39, 41));
+        assert_eq!(s.uncovered(0, 100), vec![(40, 60)]);
+        // Subtracting past the edges trims without panicking.
+        s.subtract(90, 200);
+        assert_eq!(s.uncovered(0, 100), vec![(40, 60), (90, 100)]);
+        s.subtract(0, 1000);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn uncovered_reports_every_gap_in_order() {
+        let mut s = IntervalSet::new();
+        s.insert(10, 20);
+        s.insert(30, 40);
+        assert_eq!(s.uncovered(0, 50), vec![(0, 10), (20, 30), (40, 50)]);
+        assert_eq!(s.uncovered(12, 18), vec![]);
+        assert_eq!(s.uncovered(15, 35), vec![(20, 30)]);
+        // Queries over an empty set are one whole gap.
+        assert_eq!(IntervalSet::new().uncovered(5, 9), vec![(5, 9)]);
+    }
+}

@@ -1,0 +1,225 @@
+//! Pool-layout checks: integrity of a serialized [`PoolLayout`] and
+//! cross-checking it against the layout the planner would rebuild from
+//! the same `(model, setting)` pair.
+//!
+//! These passes work on accounting bytes (the unit the layout is
+//! serialized in), independent of the compiled f32 step list — they are
+//! what [`crate::optimizer::Plan::validate`] runs on every plan read
+//! back from disk, so a hand-edited or corrupted memory map is rejected
+//! before a registry can deploy it.
+
+use super::{AnalysisReport, DefectClass, Finding};
+use crate::memory::{max_concurrent, PoolLayout};
+
+/// Self-consistency of one serialized layout: non-degenerate buffers,
+/// every buffer inside `pool_bytes`, exhaustive live/space collision
+/// checking (every offending pair, not just the first), and a watermark
+/// recomputation that must equal the serialized value.
+pub fn verify_layout(layout: &PoolLayout) -> AnalysisReport {
+    let mut report = AnalysisReport::new();
+    report.buffers_checked = layout.buffers.len();
+
+    if layout.buffers.is_empty() {
+        report.push(Finding::new(
+            DefectClass::LayoutDivergence,
+            "layout has no buffers (every real schedule allocates at least the output)",
+        ));
+    }
+    for b in &layout.buffers {
+        if b.bytes == 0 {
+            report.push(
+                Finding::new(DefectClass::LayoutDivergence, "zero-byte buffer serialized")
+                    .on_buffer(&b.label),
+            );
+        }
+        if b.birth >= b.death {
+            report.push(
+                Finding::new(
+                    DefectClass::LifetimeViolation,
+                    format!("lifetime [{}, {}) is empty", b.birth, b.death),
+                )
+                .on_buffer(&b.label)
+                .in_bytes(b.offset, b.offset + b.bytes),
+            );
+        }
+        if b.offset + b.bytes > layout.pool_bytes {
+            report.push(
+                Finding::new(
+                    DefectClass::OutOfPool,
+                    format!(
+                        "buffer ends at byte {} but the pool holds {}",
+                        b.offset + b.bytes,
+                        layout.pool_bytes
+                    ),
+                )
+                .on_buffer(&b.label)
+                .in_bytes(b.offset, b.offset + b.bytes),
+            );
+        }
+    }
+    for (a, b) in layout.collisions() {
+        let lo = a.offset.max(b.offset);
+        let hi = (a.offset + a.bytes).min(b.offset + b.bytes);
+        report.push(
+            Finding::new(
+                DefectClass::LayoutCollision,
+                format!(
+                    "overlaps '{}' while both are alive (ticks [{}, {}) vs [{}, {}))",
+                    b.label, a.birth, a.death, b.birth, b.death
+                ),
+            )
+            .on_buffer(&a.label)
+            .in_bytes(lo, hi),
+        );
+    }
+
+    let items: Vec<(u64, usize, usize)> =
+        layout.buffers.iter().map(|b| (b.bytes, b.birth, b.death)).collect();
+    let recomputed = max_concurrent(&items);
+    if recomputed != layout.watermark {
+        report.push(Finding::new(
+            DefectClass::WatermarkMismatch,
+            format!(
+                "serialized watermark {} B but the buffer intervals peak at {recomputed} B",
+                layout.watermark
+            ),
+        ));
+    }
+    if layout.pool_bytes < layout.watermark {
+        report.push(Finding::new(
+            DefectClass::WatermarkMismatch,
+            format!(
+                "pool of {} B cannot hold the {} B watermark",
+                layout.pool_bytes, layout.watermark
+            ),
+        ));
+    }
+    report
+}
+
+/// Compare a serialized layout against the one the planner rebuilds from
+/// the plan's `(model, setting)` — a self-consistent but *divergent*
+/// layout (e.g. every offset shifted into a grown pool) passes
+/// [`verify_layout`] yet no longer describes the schedule the executor
+/// will replay, so it must still be rejected.
+pub(super) fn cross_check_layout(
+    stored: &PoolLayout,
+    expected: &PoolLayout,
+    report: &mut AnalysisReport,
+) {
+    if stored.pool_bytes != expected.pool_bytes {
+        report.push(Finding::new(
+            DefectClass::LayoutDivergence,
+            format!(
+                "serialized pool is {} B but the schedule needs {} B",
+                stored.pool_bytes, expected.pool_bytes
+            ),
+        ));
+    }
+    if stored.watermark != expected.watermark {
+        report.push(Finding::new(
+            DefectClass::WatermarkMismatch,
+            format!(
+                "serialized watermark {} B but the schedule peaks at {} B",
+                stored.watermark, expected.watermark
+            ),
+        ));
+    }
+    if stored.buffers.len() != expected.buffers.len() {
+        report.push(Finding::new(
+            DefectClass::LayoutDivergence,
+            format!(
+                "serialized layout has {} buffer(s) but the schedule allocates {}",
+                stored.buffers.len(),
+                expected.buffers.len()
+            ),
+        ));
+        return; // per-buffer zip below would misattribute every entry
+    }
+    for (s, e) in stored.buffers.iter().zip(&expected.buffers) {
+        if s != e {
+            report.push(
+                Finding::new(
+                    DefectClass::LayoutDivergence,
+                    format!(
+                        "serialized as {} B at offset {} alive [{}, {}), but the schedule \
+                         places '{}' with {} B at offset {} alive [{}, {})",
+                        s.bytes, s.offset, s.birth, s.death, e.label, e.bytes, e.offset, e.birth,
+                        e.death
+                    ),
+                )
+                .on_buffer(&s.label)
+                .in_bytes(s.offset, s.offset + s.bytes),
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::plan_layout;
+    use crate::optimizer::{strategy, Constraints, Planner};
+    use crate::zoo;
+
+    fn fresh_layout(name: &str) -> PoolLayout {
+        let m = zoo::by_name(name).unwrap();
+        let setting = Planner::for_model(m.clone())
+            .plan_with(&strategy::P1, Constraints::none())
+            .unwrap()
+            .setting;
+        plan_layout(&m, &setting)
+    }
+
+    fn classes(report: &AnalysisReport) -> Vec<DefectClass> {
+        report.findings.iter().map(|f| f.class).collect()
+    }
+
+    #[test]
+    fn fresh_layouts_verify_clean() {
+        for name in ["quickstart", "lenet", "kws"] {
+            let layout = fresh_layout(name);
+            let report = verify_layout(&layout);
+            assert!(report.is_clean(), "{name}:\n{}", report.render());
+            assert_eq!(report.buffers_checked, layout.buffers.len());
+        }
+    }
+
+    #[test]
+    fn corrupted_watermark_and_shrunk_pool_are_flagged() {
+        let mut layout = fresh_layout("quickstart");
+        layout.watermark += 1;
+        let report = verify_layout(&layout);
+        assert!(
+            classes(&report).contains(&DefectClass::WatermarkMismatch),
+            "{}",
+            report.render()
+        );
+
+        let mut small = fresh_layout("quickstart");
+        small.pool_bytes = 1;
+        let report = verify_layout(&small);
+        let found = classes(&report);
+        assert!(found.contains(&DefectClass::OutOfPool), "{}", report.render());
+        assert!(found.contains(&DefectClass::WatermarkMismatch), "{}", report.render());
+    }
+
+    #[test]
+    fn cross_check_rejects_self_consistent_divergence() {
+        let original = fresh_layout("quickstart");
+        // Shift every buffer up by 8 bytes into a grown pool and keep the
+        // watermark recomputable: verify_layout alone stays happy...
+        let mut shifted = original.clone();
+        for b in &mut shifted.buffers {
+            b.offset += 8;
+        }
+        shifted.pool_bytes += 8;
+        assert!(verify_layout(&shifted).is_clean());
+        // ...but the cross-check catches the divergence per buffer.
+        let mut report = AnalysisReport::new();
+        cross_check_layout(&shifted, &original, &mut report);
+        let found = classes(&report);
+        assert!(found.contains(&DefectClass::LayoutDivergence), "{}", report.render());
+        assert!(report.findings.iter().any(|f| f.bytes.is_some() && !f.buffer.is_empty()));
+    }
+}

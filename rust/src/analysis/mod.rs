@@ -1,0 +1,405 @@
+//! Static plan verifier: byte-interval dataflow analysis over compiled
+//! plans and pool layouts, without executing a single MAC.
+//!
+//! The optimizer's whole promise is that a fusion setting is *safe to run
+//! in a fixed RAM budget* — this module proves it ahead of time instead
+//! of trusting the hot path's `debug_assert!`s. It symbolically walks a
+//! [`crate::exec::CompiledPlan`]'s step list ([`verify_dataflow`]) and a
+//! serialized [`crate::memory::PoolLayout`] ([`verify_layout`]) checking:
+//!
+//! * **def-before-use** — no step reads pool elements never written
+//!   (aliasing writes clobber: a write to shared pool bytes undefines
+//!   every other buffer mapped there);
+//! * **alias/hazard** — a step's input and output ranges may not overlap
+//!   while both buffers are alive, unless the kernel is declared
+//!   in-place-safe (the static form of the executor's
+//!   `two_muts`/`three_muts` split invariants);
+//! * **lifetime conformance** — every access falls inside its buffer's
+//!   declared `[alloc, free)` interval and inside the pool;
+//! * **shape/size agreement** — step access extents against buffer
+//!   extents, dims against element counts;
+//! * **watermark recomputation** — the serialized layout's watermark must
+//!   equal the max concurrent footprint of its own lifetimes, and the
+//!   serialized layout itself must match a fresh schedule replay
+//!   ([`verify_plan`]'s cross-check).
+//!
+//! Findings are structured [`Finding`]s (defect class, step index, buffer
+//! name, byte range) collected into an [`AnalysisReport`] — **all**
+//! defects, not just the first. The verifier gates deployment end to end:
+//! [`crate::exec::CompiledPlan`] asserts [`check_step_hazards`] at
+//! compile-time-of-plan, [`crate::optimizer::Plan::validate`] runs
+//! [`verify_layout`] on parse, [`crate::coordinator::PlanRegistry`] runs
+//! [`verify_plan_file`] per scanned file (rejected plans are never
+//! deployed), and `msfcnn verify` exposes the same gate on the CLI.
+
+mod dataflow;
+mod interval;
+mod layout;
+
+pub use dataflow::{check_step_hazards, verify_dataflow};
+pub use interval::IntervalSet;
+pub use layout::verify_layout;
+
+use std::path::Path;
+
+use crate::exec::{CompiledPlan, RtBufInfo, StepAccess};
+use crate::model::{LayerKind, ModelChain};
+use crate::optimizer::{FusionSetting, Plan};
+use crate::util::error::Result;
+
+/// What kind of defect a [`Finding`] reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DefectClass {
+    /// A step reads pool elements no prior step (or the input copy)
+    /// wrote, or the final output is never fully produced.
+    DefBeforeUse,
+    /// Two accesses of one step overlap in pool space while both buffers
+    /// are alive, and the kernel is not declared in-place-safe.
+    Hazard,
+    /// An access or buffer extends past the pool, or names a buffer
+    /// outside the table.
+    OutOfPool,
+    /// An access outside its buffer's `[alloc, free)` interval, or an
+    /// empty lifetime.
+    LifetimeViolation,
+    /// Step access extents or buffer dims disagree with the buffer's
+    /// element count.
+    ShapeMismatch,
+    /// The serialized watermark does not equal the recomputed concurrent
+    /// peak, or the pool is smaller than the watermark.
+    WatermarkMismatch,
+    /// Two lifetime-overlapping layout buffers share pool bytes.
+    LayoutCollision,
+    /// The serialized layout diverges from a fresh schedule replay of the
+    /// plan's own setting (hand-edited or stale memory map).
+    LayoutDivergence,
+    /// The fusion setting itself cannot be compiled (broken span chain,
+    /// unfusable span, missing iterative-tail pool, non-positive cost).
+    MalformedSetting,
+}
+
+impl DefectClass {
+    /// Stable kebab-case identifier (diagnostic rendering, CLI output).
+    pub fn name(self) -> &'static str {
+        match self {
+            DefectClass::DefBeforeUse => "def-before-use",
+            DefectClass::Hazard => "hazard",
+            DefectClass::OutOfPool => "out-of-pool",
+            DefectClass::LifetimeViolation => "lifetime-violation",
+            DefectClass::ShapeMismatch => "shape-mismatch",
+            DefectClass::WatermarkMismatch => "watermark-mismatch",
+            DefectClass::LayoutCollision => "layout-collision",
+            DefectClass::LayoutDivergence => "layout-divergence",
+            DefectClass::MalformedSetting => "malformed-setting",
+        }
+    }
+}
+
+/// One structured diagnostic: defect class plus whatever location is
+/// known — step index, buffer name, pool byte range — and a
+/// human-readable detail line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Finding {
+    pub class: DefectClass,
+    /// Compiled step index the defect was observed at, when step-local.
+    pub step: Option<usize>,
+    /// Label of the offending buffer (empty when not buffer-local).
+    pub buffer: String,
+    /// Offending pool byte range `[lo, hi)`, when known.
+    pub bytes: Option<(u64, u64)>,
+    pub detail: String,
+}
+
+impl Finding {
+    /// A bare finding of `class`; attach location with the builder
+    /// methods.
+    pub fn new(class: DefectClass, detail: impl Into<String>) -> Self {
+        Self { class, step: None, buffer: String::new(), bytes: None, detail: detail.into() }
+    }
+
+    /// Attach the compiled step index.
+    #[must_use]
+    pub fn at_step(mut self, step: usize) -> Self {
+        self.step = Some(step);
+        self
+    }
+
+    /// Attach the offending buffer's label.
+    #[must_use]
+    pub fn on_buffer(mut self, label: impl Into<String>) -> Self {
+        self.buffer = label.into();
+        self
+    }
+
+    /// Attach the offending pool byte range `[lo, hi)`.
+    #[must_use]
+    pub fn in_bytes(mut self, lo: u64, hi: u64) -> Self {
+        self.bytes = Some((lo, hi));
+        self
+    }
+
+    /// One-line rendering:
+    /// `[class] step N buffer 'label' bytes [lo..hi): detail`.
+    pub fn render(&self) -> String {
+        let mut s = format!("[{}]", self.class.name());
+        if let Some(i) = self.step {
+            s.push_str(&format!(" step {i}"));
+        }
+        if !self.buffer.is_empty() {
+            s.push_str(&format!(" buffer '{}'", self.buffer));
+        }
+        if let Some((lo, hi)) = self.bytes {
+            s.push_str(&format!(" bytes [{lo}..{hi})"));
+        }
+        s.push_str(": ");
+        s.push_str(&self.detail);
+        s
+    }
+}
+
+/// Every defect one analysis pass found, plus how much it covered — the
+/// verifier's product, renderable for CLI / registry diagnostics.
+#[derive(Debug, Clone, Default)]
+pub struct AnalysisReport {
+    /// All findings, in discovery order (never truncated to the first).
+    pub findings: Vec<Finding>,
+    /// Compiled steps the pass walked.
+    pub steps_checked: usize,
+    /// Buffers the pass examined.
+    pub buffers_checked: usize,
+}
+
+impl AnalysisReport {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// True when no defect was found.
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Append one finding.
+    pub fn push(&mut self, finding: Finding) {
+        self.findings.push(finding);
+    }
+
+    /// Fold another pass's findings and coverage counters into this one.
+    pub fn merge(&mut self, other: AnalysisReport) {
+        self.findings.extend(other.findings);
+        self.steps_checked += other.steps_checked;
+        self.buffers_checked += other.buffers_checked;
+    }
+
+    /// All findings, one rendered line each.
+    pub fn render(&self) -> String {
+        self.findings.iter().map(|f| f.render()).collect::<Vec<_>>().join("\n")
+    }
+}
+
+/// The symbolic view of a compiled plan the dataflow passes consume:
+/// buffer table (runtime offsets + lifetimes), per-step access lists, and
+/// the distinguished input/output buffers. Built by
+/// [`AnalysisInput::from_compiled`]; tests mutate it directly to inject
+/// defects.
+#[derive(Debug, Clone)]
+pub struct AnalysisInput {
+    /// f32 elements of the runtime pool.
+    pub pool_elems: usize,
+    /// Buffer table ([`crate::exec::CompiledPlan::runtime_buffers`]).
+    pub buffers: Vec<RtBufInfo>,
+    /// Per-step access lists ([`crate::exec::CompiledPlan::step_accesses`]).
+    pub steps: Vec<StepAccess>,
+    /// Buffer pre-defined before step 0 (the external-input copy), if
+    /// any.
+    pub predefined: Option<usize>,
+    /// Buffer the logits are read from after the last step.
+    pub output: usize,
+}
+
+impl AnalysisInput {
+    /// Extract the symbolic view of `plan`.
+    pub fn from_compiled(plan: &CompiledPlan) -> Self {
+        Self {
+            pool_elems: plan.pool_elem_len(),
+            buffers: plan.runtime_buffers(),
+            steps: plan.step_accesses(),
+            predefined: plan.input_buffer(),
+            output: plan.output_buffer(),
+        }
+    }
+}
+
+/// Structural span-chain validation: everything that must hold before
+/// `CompiledPlan::compile` can run without panicking. Returns `true` when
+/// the setting is compilable.
+fn check_setting(
+    model: &ModelChain,
+    setting: &FusionSetting,
+    report: &mut AnalysisReport,
+) -> bool {
+    let before = report.findings.len();
+    let malformed = |d: String| Finding::new(DefectClass::MalformedSetting, d);
+    if setting.spans.is_empty() {
+        report.push(malformed("setting has no spans".to_string()));
+    }
+    let mut at = 0usize;
+    for (i, &(a, b, iter_tail)) in setting.spans.iter().enumerate() {
+        if a != at || b <= a || b > model.num_layers() {
+            report.push(malformed(format!(
+                "span {i} = [{a}, {b}) does not continue from layer {at} inside the model's {} layers",
+                model.num_layers()
+            )));
+            break;
+        }
+        at = b;
+        if b - a <= 1 {
+            continue;
+        }
+        if iter_tail {
+            let Some(gp) = (a..b)
+                .find(|&li| matches!(model.layers[li].kind, LayerKind::GlobalAvgPool))
+            else {
+                report.push(malformed(format!(
+                    "iterative-tail span {i} = [{a}, {b}) has no GlobalAvgPool to rewrite (§7)"
+                )));
+                continue;
+            };
+            if !model.layers[gp + 1..b].iter().all(|l| matches!(l.kind, LayerKind::Dense)) {
+                report.push(malformed(format!(
+                    "iterative-tail span {i} = [{a}, {b}) has non-Dense layers after the global pool at {gp}"
+                )));
+            }
+            if !model.fusable_span(a, gp) {
+                report.push(malformed(format!(
+                    "span {i}: conv pyramid [{a}, {gp}) ahead of the iterative tail is not fusable"
+                )));
+            }
+        } else if !model.fusable_span(a, b) {
+            report.push(malformed(format!("span {i} = [{a}, {b}) is not fusable")));
+        }
+    }
+    if report.findings.len() == before && at != model.num_layers() {
+        report.push(malformed(format!(
+            "spans cover layers 0..{at} but the model has {} layers",
+            model.num_layers()
+        )));
+    }
+    report.findings.len() == before
+}
+
+/// Full static verification of a serialized [`Plan`] against its model:
+/// span-chain structure, the serialized pool layout in isolation
+/// ([`verify_layout`]), a cross-check of that layout against a fresh
+/// schedule replay (any divergence means the memory map on disk is not
+/// the one execution would use), and the compiled step list's dataflow
+/// ([`verify_dataflow`]).
+pub fn verify_plan(plan: &Plan, model: &ModelChain) -> AnalysisReport {
+    let mut report = AnalysisReport::new();
+    let compilable = check_setting(model, &plan.setting, &mut report);
+    if plan.setting.cost.peak_ram == 0 {
+        report.push(Finding::new(
+            DefectClass::MalformedSetting,
+            "non-positive peak_ram (cost was negative, zero, or lost in parsing)",
+        ));
+    }
+    if let Some(pool) = &plan.pool {
+        report.merge(verify_layout(pool));
+        if compilable {
+            let expected = crate::memory::plan_layout(model, &plan.setting);
+            layout::cross_check_layout(pool, &expected, &mut report);
+        }
+    }
+    if compilable {
+        let compiled = CompiledPlan::compile(model.clone(), plan.setting.clone());
+        report.merge(verify_dataflow(&AnalysisInput::from_compiled(&compiled)));
+    }
+    report
+}
+
+/// [`verify_dataflow`] + [`verify_layout`] over an already-compiled plan
+/// (both the runtime step list and the accounting layout it carries).
+pub fn verify_compiled(plan: &CompiledPlan) -> AnalysisReport {
+    let mut report = verify_dataflow(&AnalysisInput::from_compiled(plan));
+    report.merge(verify_layout(plan.layout()));
+    report
+}
+
+/// Load a plan JSON and statically verify it: the one deploy-time gate
+/// shared by `msfcnn verify`, [`crate::coordinator::PlanRegistry`] scans,
+/// and [`crate::coordinator::ModelSpec::plan_file`]. `Err` means the file
+/// could not even be analyzed (unreadable, unparseable — including a pool
+/// layout [`Plan::validate`] rejects at parse — or a non-zoo model);
+/// `Ok` carries the plan plus its [`AnalysisReport`], whose findings the
+/// caller must treat as a rejection.
+pub fn verify_plan_file(path: impl AsRef<Path>) -> Result<(Plan, AnalysisReport)> {
+    let path = path.as_ref();
+    let plan = Plan::load(path)?;
+    let model = crate::zoo::by_name(&plan.model)
+        .ok_or_else(|| crate::anyhow!("plan model '{}' is not a zoo model", plan.model))?;
+    let report = verify_plan(&plan, &model);
+    Ok((plan, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::Planner;
+    use crate::zoo;
+
+    #[test]
+    fn finding_renders_every_location_part() {
+        let f = Finding::new(DefectClass::DefBeforeUse, "reads 4 element(s) never written")
+            .at_step(3)
+            .on_buffer("bands:0..4")
+            .in_bytes(128, 144);
+        assert_eq!(
+            f.render(),
+            "[def-before-use] step 3 buffer 'bands:0..4' bytes [128..144): \
+             reads 4 element(s) never written"
+        );
+        let bare = Finding::new(DefectClass::WatermarkMismatch, "off by 8");
+        assert_eq!(bare.render(), "[watermark-mismatch]: off by 8");
+    }
+
+    #[test]
+    fn fresh_plans_verify_clean() {
+        let m = zoo::quickstart();
+        let plan = Planner::for_model(m.clone()).plan().unwrap();
+        let report = verify_plan(&plan, &m);
+        assert!(report.is_clean(), "{}", report.render());
+        assert!(report.steps_checked > 0);
+        assert!(report.buffers_checked > 0);
+    }
+
+    #[test]
+    fn malformed_settings_are_flagged_not_panicked() {
+        let m = zoo::quickstart();
+        let mut plan = Planner::for_model(m.clone()).plan().unwrap();
+        // Break the span chain: the verifier must report, not panic in
+        // the compiler it guards.
+        plan.setting.spans[0].0 = 1;
+        let report = verify_plan(&plan, &m);
+        assert!(report
+            .findings
+            .iter()
+            .any(|f| f.class == DefectClass::MalformedSetting));
+
+        // An iterative-tail span without a GlobalAvgPool would panic
+        // `conv_end_of`; the verifier flags it instead.
+        let mut iter = Planner::for_model(m.clone()).plan().unwrap();
+        if let Some(first) = iter.setting.spans.first_mut() {
+            if first.1 - first.0 > 1 {
+                first.2 = true;
+            }
+        }
+        let report = verify_plan(&iter, &m);
+        if iter.setting.spans.first().is_some_and(|s| s.2) {
+            assert!(
+                report.findings.iter().any(|f| f.class == DefectClass::MalformedSetting),
+                "{}",
+                report.render()
+            );
+        }
+    }
+}

@@ -39,7 +39,7 @@ mod registry;
 mod server;
 
 pub use metrics::{LatencyStats, Metrics, ModelMetrics};
-pub use registry::{PlanEntry, PlanRegistry, ScanConflict, ScanReport};
+pub use registry::{PlanEntry, PlanRegistry, PlanVerdict, ScanConflict, ScanReport};
 pub use server::{
     BoundHandle, InferenceServer, ModelSpec, MultiModelServer, Pending, ServeError,
     ServerConfig, ServerHandle,

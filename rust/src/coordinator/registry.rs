@@ -60,6 +60,26 @@ pub struct ScanConflict {
     pub skipped: PathBuf,
 }
 
+/// Static-analysis verdict of one plan file the scanner loaded
+/// ([`crate::analysis::verify_plan_file`]): clean files deploy, files
+/// with findings are rejected and land in [`ScanReport::errors`] too —
+/// the verdict is *why*, one rendered diagnostic per defect, so
+/// `serve --registry` can log the rejection cause.
+#[derive(Debug, Clone)]
+pub struct PlanVerdict {
+    pub model_id: String,
+    pub path: PathBuf,
+    /// Rendered findings (`[class] step N buffer 'x' bytes [a..b): …`);
+    /// empty for a clean plan.
+    pub findings: Vec<String>,
+}
+
+impl PlanVerdict {
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+}
+
 /// What one [`PlanRegistry::scan`] observed, as model ids (load failures
 /// as `(path, error)` pairs and id collisions as [`ScanConflict`]s — a
 /// broken or shadowed file never poisons the rest of the directory, and
@@ -76,6 +96,9 @@ pub struct ScanReport {
     pub errors: Vec<(PathBuf, String)>,
     /// Model ids claimed by more than one plan file this scan.
     pub conflicts: Vec<ScanConflict>,
+    /// Static-analysis verdict of every file (re)loaded this scan —
+    /// unchanged files are not re-verified.
+    pub verdicts: Vec<PlanVerdict>,
 }
 
 impl ScanReport {
@@ -161,10 +184,11 @@ impl PlanRegistry {
 
     /// Re-scan the directory: load new files, reload files whose
     /// `(mtime, size)` changed (bumping their version), and drop models
-    /// whose file disappeared. Plans are validated against the zoo at
-    /// load — a file that fails to parse or validate lands in
-    /// [`ScanReport::errors`] and the previous good version (if any)
-    /// stays live.
+    /// whose file disappeared. Every (re)loaded plan runs through the
+    /// static verifier ([`crate::analysis::verify_plan_file`]) — a file
+    /// that fails to parse, validate, or analyze cleanly lands in
+    /// [`ScanReport::errors`] (with its [`PlanVerdict`] saying why) and
+    /// the previous good version (if any) stays live.
     pub fn scan(&mut self) -> Result<ScanReport> {
         let mut report = ScanReport::default();
         let mut seen: BTreeSet<String> = BTreeSet::new();
@@ -221,8 +245,27 @@ impl PlanRegistry {
                     continue; // unchanged
                 }
             }
-            match super::server::load_validated_plan(&path) {
-                Ok(plan) => {
+            match crate::analysis::verify_plan_file(&path) {
+                Ok((plan, analysis)) => {
+                    report.verdicts.push(PlanVerdict {
+                        model_id: model_id.clone(),
+                        path: path.clone(),
+                        findings: analysis.findings.iter().map(|f| f.render()).collect(),
+                    });
+                    if !analysis.is_clean() {
+                        // Never deploy a plan with findings: the error
+                        // keeps the previous good version live, the
+                        // verdict above says why.
+                        report.errors.push((
+                            path,
+                            format!(
+                                "rejected by static analysis ({} finding(s)): {}",
+                                analysis.findings.len(),
+                                analysis.findings[0].render()
+                            ),
+                        ));
+                        continue;
+                    }
                     let history = self.versions.entry(model_id.clone()).or_default();
                     let version = history.last().map_or(1, |e| e.version + 1);
                     let fresh = history.is_empty();

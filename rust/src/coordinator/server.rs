@@ -102,15 +102,20 @@ impl ModelSpec {
     }
 }
 
-/// Load + validate one plan file: parse, resolve the model against the
-/// zoo, and check span coverage — the one registration-time gate shared
-/// by [`ModelSpec::plan_file`] and the
-/// [`crate::coordinator::PlanRegistry`] scanner.
+/// Load + statically verify one plan file
+/// ([`crate::analysis::verify_plan_file`]): parse, resolve the model
+/// against the zoo, and run the full analyzer — the registration-time
+/// gate behind [`ModelSpec::plan_file`]. A plan with findings is never
+/// registered; the error carries every rendered diagnostic.
 pub(super) fn load_validated_plan(path: &Path) -> Result<Plan> {
-    let plan = Plan::load(path)?;
-    let model = crate::zoo::by_name(&plan.model)
-        .ok_or_else(|| crate::anyhow!("plan model '{}' is not a zoo model", plan.model))?;
-    plan.validate_for(&model)?;
+    let (plan, report) = crate::analysis::verify_plan_file(path)?;
+    if !report.is_clean() {
+        return Err(crate::anyhow!(
+            "plan {} rejected by static analysis:\n{}",
+            path.display(),
+            report.render()
+        ));
+    }
     Ok(plan)
 }
 

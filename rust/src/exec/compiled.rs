@@ -53,6 +53,64 @@ struct RtBuf {
     dims: (usize, usize, usize),
 }
 
+/// Schedule-derived identity of a runtime buffer (label + lifetime),
+/// kept alongside the offset table for the static verifier's reports.
+#[derive(Debug, Clone)]
+struct BufMeta {
+    label: String,
+    birth: usize,
+    /// Runtime free tick (exclusive) — the `rt_death` the offsets were
+    /// assigned under.
+    rt_death: usize,
+}
+
+/// One buffer slice a compiled step touches: `len` f32 elements starting
+/// at element `start` *within* buffer `buf` (index into
+/// [`CompiledPlan::runtime_buffers`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BufAccess {
+    pub buf: usize,
+    pub start: usize,
+    pub len: usize,
+}
+
+/// The full access set of one compiled step — the symbolic footprint the
+/// static verifier ([`crate::analysis`]) checks without executing.
+/// `reads` are consumed, `scratch` ranges are produced *before* the
+/// step's `writes` (band pyramids, iterative accumulators), and
+/// `in_place_safe` sanctions read/write overlap for kernels declared
+/// safe to operate in place (none of the current kernels are).
+#[derive(Debug, Clone)]
+pub struct StepAccess {
+    pub index: usize,
+    /// Step kind tag (same vocabulary as [`crate::obs::StepMeta`]).
+    pub kind: &'static str,
+    pub label: String,
+    /// True when the step streams the external input tensor (never
+    /// pooled, so it carries no [`BufAccess`]).
+    pub reads_external_input: bool,
+    pub reads: Vec<BufAccess>,
+    pub writes: Vec<BufAccess>,
+    pub scratch: Vec<BufAccess>,
+    pub in_place_safe: bool,
+}
+
+/// Public, label-carrying view of one runtime pool buffer
+/// ([`CompiledPlan::runtime_buffers`]): f32 element offset/extent plus
+/// the lifetime interval its offset was assigned under.
+#[derive(Debug, Clone)]
+pub struct RtBufInfo {
+    pub label: String,
+    /// f32 element offset into the pool.
+    pub off: usize,
+    pub elems: usize,
+    /// `(h, w, c)`; vectors are `(1, 1, len)`.
+    pub dims: (usize, usize, usize),
+    /// Alive during schedule ticks `[birth, death)`.
+    pub birth: usize,
+    pub death: usize,
+}
+
 /// One compiled execution step.
 enum Step {
     /// Copy the current boundary into a residual stash slice.
@@ -117,6 +175,7 @@ pub struct CompiledPlan {
     setting: FusionSetting,
     layout: PoolLayout,
     bufs: Vec<RtBuf>,
+    buf_meta: Vec<BufMeta>,
     pool_elems: usize,
     ranges_scratch: usize,
     steps: Vec<Step>,
@@ -165,6 +224,10 @@ impl CompiledPlan {
             .iter()
             .zip(&rt_offs)
             .map(|(s, &off)| RtBuf { off: off as usize, elems: s.elems, dims: s.dims })
+            .collect();
+        let buf_meta: Vec<BufMeta> = sched
+            .iter()
+            .map(|s| BufMeta { label: s.label.clone(), birth: s.birth, rt_death: s.rt_death })
             .collect();
 
         let find = |role: BufRole| -> usize {
@@ -241,19 +304,35 @@ impl CompiledPlan {
         };
         let out_len = bufs[out_buf].elems;
 
-        Self {
+        let plan = Self {
             model,
             params,
             setting,
             layout,
             bufs,
+            buf_meta,
             pool_elems: pool_elems as usize,
             ranges_scratch,
             steps,
             input_buf,
             out_buf,
             out_len,
-        }
+        };
+
+        // Analyzer-backed promotion of the hot path's `two_muts`/
+        // `three_muts` `debug_assert!`s: prove once, at
+        // compile-time-of-plan, that no step's pool slices can alias (the
+        // debug asserts stay in the split helpers as belt-and-braces; the
+        // per-run hot path is untouched).
+        let hazards = crate::analysis::check_step_hazards(
+            &crate::analysis::AnalysisInput::from_compiled(&plan),
+        );
+        assert!(
+            hazards.is_clean(),
+            "compiled plan violates pool aliasing invariants:\n{}",
+            hazards.render()
+        );
+        plan
     }
 
     /// The accounting pool layout (offsets, pool size, watermark) — what
@@ -414,6 +493,106 @@ impl CompiledPlan {
                 }
             })
             .collect()
+    }
+
+    /// Pool size in f32 elements (the runtime storage bound every
+    /// [`BufAccess`] must fall inside).
+    pub fn pool_elem_len(&self) -> usize {
+        self.pool_elems
+    }
+
+    /// The pool buffer pre-populated with the external input before the
+    /// step list runs (`None` when a fused head streams the input
+    /// instead) — the verifier's only predefined range.
+    pub fn input_buffer(&self) -> Option<usize> {
+        self.input_buf
+    }
+
+    /// The pool buffer the logits are copied out of after the last step.
+    pub fn output_buffer(&self) -> usize {
+        self.out_buf
+    }
+
+    /// Label-carrying view of the runtime pool buffers, indexed by the
+    /// `buf` field of every [`BufAccess`].
+    pub fn runtime_buffers(&self) -> Vec<RtBufInfo> {
+        self.bufs
+            .iter()
+            .zip(&self.buf_meta)
+            .map(|(b, m)| RtBufInfo {
+                label: m.label.clone(),
+                off: b.off,
+                elems: b.elems,
+                dims: b.dims,
+                birth: m.birth,
+                death: m.rt_death,
+            })
+            .collect()
+    }
+
+    /// The symbolic access set of every compiled step, in execution
+    /// order — what [`crate::analysis::verify_dataflow`] walks instead
+    /// of running the kernels.
+    pub fn step_accesses(&self) -> Vec<StepAccess> {
+        self.step_metas()
+            .into_iter()
+            .zip(&self.steps)
+            .map(|(meta, step)| {
+                let mut acc = StepAccess {
+                    index: meta.index,
+                    kind: meta.kind,
+                    label: meta.label,
+                    reads_external_input: false,
+                    reads: Vec::new(),
+                    writes: Vec::new(),
+                    scratch: Vec::new(),
+                    in_place_safe: false,
+                };
+                match step {
+                    Step::StashSave { src, dst } => {
+                        self.src_access(*src, &mut acc);
+                        acc.writes.push(self.full_access(*dst));
+                    }
+                    Step::Single { src, out, residual, .. } => {
+                        self.src_access(*src, &mut acc);
+                        if let Some(stash) = residual {
+                            acc.reads.push(self.full_access(*stash));
+                        }
+                        acc.writes.push(self.full_access(*out));
+                    }
+                    Step::Fused { src, bands, out, .. } => {
+                        self.src_access(*src, &mut acc);
+                        acc.scratch.push(self.full_access(*bands));
+                        acc.writes.push(self.full_access(*out));
+                    }
+                    Step::FusedIter { src, bands, pool_acc, dense, logits, .. } => {
+                        self.src_access(*src, &mut acc);
+                        acc.scratch.push(self.full_access(*bands));
+                        acc.scratch.push(self.full_access(*pool_acc));
+                        for &(_, dense_acc) in dense {
+                            acc.scratch.push(self.full_access(dense_acc));
+                        }
+                        acc.writes.push(self.full_access(*logits));
+                    }
+                }
+                acc
+            })
+            .collect()
+    }
+
+    /// Whole-buffer access (every current kernel touches its buffers in
+    /// full).
+    fn full_access(&self, buf: usize) -> BufAccess {
+        BufAccess { buf, start: 0, len: self.bufs[buf].elems }
+    }
+
+    /// Record a step source: either the external input flag or a
+    /// whole-buffer pool read.
+    fn src_access(&self, src: Src, acc: &mut StepAccess) {
+        match src {
+            Src::Input => acc.reads_external_input = true,
+            Src::Buf(id) => acc.reads.push(self.full_access(id)),
+        }
     }
 
     /// f32 elements a step source reads.

@@ -13,5 +13,5 @@
 mod compiled;
 mod engine;
 
-pub use compiled::{CompiledPlan, PlanPool};
+pub use compiled::{BufAccess, CompiledPlan, PlanPool, RtBufInfo, StepAccess};
 pub use engine::{Engine, RunReport, SpanStat};

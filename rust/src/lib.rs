@@ -186,7 +186,28 @@
 //! [`obs::export`] freezes all of it into versioned JSON snapshots
 //! (`BENCH_infer.json`, `BENCH_serve.json`, `msfcnn profile --json`)
 //! with validators that pin the schema.
+//!
+//! ## Static analysis
+//!
+//! On-MCU failures are unrecoverable, so a plan must be provably
+//! well-formed *before* it is deployed — not discovered broken by the
+//! hot path's `debug_assert!`s. The [`analysis`] module is a static
+//! verifier that symbolically checks a compiled plan + pool layout
+//! without executing a single MAC: byte-interval dataflow over the step
+//! list (def-before-use, alias/hazard, lifetime conformance, shape/size
+//! agreement) plus layout integrity (exhaustive collision checking,
+//! watermark recomputation, divergence against a fresh schedule
+//! replay). Findings are structured diagnostics — step index, buffer
+//! name, byte range, defect class — collected exhaustively into an
+//! [`analysis::AnalysisReport`]. The gate is wired end to end:
+//! [`exec::CompiledPlan`] asserts the hazard invariants once at
+//! compile-time-of-plan, [`optimizer::Plan::validate`] analyzes every
+//! serialized layout at parse, [`coordinator::PlanRegistry`] refuses to
+//! deploy any file with findings (the scan's
+//! [`coordinator::PlanVerdict`]s say why), and `msfcnn verify` exposes
+//! the same verifier on the CLI (nonzero exit on findings).
 
+pub mod analysis;
 pub mod backend;
 pub mod coordinator;
 pub mod exec;

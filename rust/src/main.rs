@@ -8,6 +8,7 @@
 //! msfcnn profile --plan FILE [--runs N] [--seed N] [--top K] [--json FILE]
 //! msfcnn simulate --model NAME [--f-max F|inf | --p-max-kb N] [--board B]
 //! msfcnn tables [--which 1|2|3|5|5j|fig2|fig3|fig4|steps|all]
+//! msfcnn verify [--plan FILE | --dir DIR | --zoo]
 //! msfcnn registry scan [--dir DIR]
 //! msfcnn bench check [--infer FILE] [--serve FILE]
 //! msfcnn serve --registry DIR [--requests N] [--watch-ms MS] [--trace]
@@ -39,6 +40,7 @@ USAGE:
   msfcnn profile --plan FILE [--runs N] [--seed N] [--top K] [--json FILE]
   msfcnn simulate --model NAME [--f-max F|inf | --p-max-kb N] [--board BOARD] [--trace]
   msfcnn tables [--which 1|2|3|5|5j|fig2|fig3|fig4|steps|all]
+  msfcnn verify [--plan FILE | --dir DIR | --zoo]
   msfcnn registry scan [--dir DIR]
   msfcnn bench check [--infer FILE] [--serve FILE]
   msfcnn serve --registry DIR [--requests N] [--watch-ms MS] [--trace]
@@ -139,6 +141,35 @@ fn model_arg(args: &Args) -> Result<msf_cnn::model::ModelChain> {
     zoo::by_name(name).ok_or_else(|| {
         anyhow!("unknown model '{name}' (known: {})", zoo::MODEL_NAMES.join(", "))
     })
+}
+
+/// Statically verify one plan file for `msfcnn verify`: print its
+/// verdict and return the number of defects charged against it (an
+/// unanalyzable file counts as one).
+fn verify_one(path: &std::path::Path) -> Result<usize> {
+    match msf_cnn::analysis::verify_plan_file(path) {
+        Ok((_plan, report)) => {
+            if report.is_clean() {
+                println!(
+                    "{}: ok ({} buffer(s), {} step(s) checked)",
+                    path.display(),
+                    report.buffers_checked,
+                    report.steps_checked
+                );
+                Ok(0)
+            } else {
+                eprintln!("{}: {} finding(s)", path.display(), report.findings.len());
+                for f in &report.findings {
+                    eprintln!("  {}", f.render());
+                }
+                Ok(report.findings.len())
+            }
+        }
+        Err(e) => {
+            eprintln!("{}: FAIL: {e:#}", path.display());
+            Ok(1)
+        }
+    }
 }
 
 fn main() -> Result<()> {
@@ -435,6 +466,74 @@ fn main() -> Result<()> {
                 println!("{}", report::table_steps().1);
             }
         }
+        "verify" => {
+            // The static plan verifier as a CLI gate: analyze plan
+            // JSON(s) without executing them; nonzero exit on findings.
+            let mut checked = 0usize;
+            let mut defects = 0usize;
+            if let Some(path) = args.get("plan") {
+                checked += 1;
+                defects += verify_one(std::path::Path::new(path))?;
+            } else if let Some(dir) = args.get("dir") {
+                let mut files: Vec<std::path::PathBuf> = std::fs::read_dir(dir)
+                    .map_err(|e| anyhow!("reading {dir}: {e}"))?
+                    .filter_map(|e| e.ok())
+                    .map(|e| e.path())
+                    .filter(|p| {
+                        p.is_file()
+                            && p.extension().and_then(|x| x.to_str()) == Some("json")
+                    })
+                    .collect();
+                files.sort();
+                if files.is_empty() {
+                    bail!("no plan JSON files in {dir}");
+                }
+                for path in files {
+                    checked += 1;
+                    defects += verify_one(&path)?;
+                }
+            } else if args.has("zoo") {
+                // Plan the whole zoo across every strategy, write the
+                // artifacts to a temp dir, and verify each — the CI
+                // `analysis` gate (`make analysis`).
+                let strategies: [(&str, &dyn PlanStrategy); 5] = [
+                    ("p1", &strategy::P1),
+                    ("p2", &strategy::P2),
+                    ("vanilla", &strategy::Vanilla),
+                    ("head-fusion", &strategy::HeadFusion),
+                    ("streamnet", &strategy::StreamNet),
+                ];
+                let dir = std::env::temp_dir()
+                    .join(format!("msfcnn-verify-zoo-{}", std::process::id()));
+                let _ = std::fs::remove_dir_all(&dir);
+                std::fs::create_dir_all(&dir)
+                    .map_err(|e| anyhow!("creating {}: {e}", dir.display()))?;
+                for name in zoo::MODEL_NAMES {
+                    let m = zoo::by_name(name).expect("zoo name");
+                    let mut planner = Planner::for_model(m);
+                    for (sname, s) in strategies {
+                        let plan = match planner.plan_with(s, Constraints::none()) {
+                            Ok(p) => p,
+                            Err(e) => {
+                                eprintln!("WARN: {name} x {sname}: infeasible, skipped ({e:#})");
+                                continue;
+                            }
+                        };
+                        let path = dir.join(format!("{name}--{sname}.plan.json"));
+                        plan.save(&path)?;
+                        checked += 1;
+                        defects += verify_one(&path)?;
+                    }
+                }
+                let _ = std::fs::remove_dir_all(&dir);
+            } else {
+                bail!("verify needs --plan FILE, --dir DIR, or --zoo\n\n{USAGE}");
+            }
+            if defects > 0 {
+                bail!("{defects} finding(s) across {checked} plan(s)");
+            }
+            println!("verify: {checked} plan(s) clean");
+        }
         "registry" => {
             use msf_cnn::coordinator::PlanRegistry;
             match subcommand.as_deref() {
@@ -452,6 +551,20 @@ fn main() -> Result<()> {
                             c.model_id,
                             c.chosen.display()
                         );
+                    }
+                    // Static-analysis verdict per (re)loaded file: why a
+                    // plan was rejected, finding by finding.
+                    for v in &report.verdicts {
+                        if !v.is_clean() {
+                            eprintln!(
+                                "WARN: {} ('{}') rejected by static analysis:",
+                                v.path.display(),
+                                v.model_id
+                            );
+                            for f in &v.findings {
+                                eprintln!("  {f}");
+                            }
+                        }
                     }
                     println!("plan registry {dir}: {} model(s)", registry.len());
                     for e in registry.entries() {
@@ -540,6 +653,20 @@ fn main() -> Result<()> {
                     c.model_id,
                     c.chosen.display()
                 );
+            }
+            // Say *why* a plan was rejected: the scan's static-analysis
+            // verdicts, one rendered finding per line.
+            for v in &report.verdicts {
+                if !v.is_clean() {
+                    eprintln!(
+                        "WARN: {} ('{}') rejected by static analysis:",
+                        v.path.display(),
+                        v.model_id
+                    );
+                    for f in &v.findings {
+                        eprintln!("  {f}");
+                    }
+                }
             }
             if registry.is_empty() {
                 bail!("no deployable plans in {dir}");

@@ -480,21 +480,31 @@ pub struct PoolLayout {
 
 impl PoolLayout {
     /// First pair of buffers that are alive at the same tick **and**
-    /// overlap in pool space — `None` for a sound layout. Layouts built
-    /// by [`assign_offsets`] are collision-free by construction; this is
-    /// the integrity check for layouts read back from disk
-    /// ([`crate::optimizer::Plan::validate`]).
+    /// overlap in pool space — `None` for a sound layout. Thin wrapper
+    /// over [`PoolLayout::collisions`] for callers that only need a
+    /// yes/no probe.
     pub fn collision(&self) -> Option<(&PoolBuffer, &PoolBuffer)> {
+        self.collisions().into_iter().next()
+    }
+
+    /// **Every** pair of buffers that are alive at the same tick and
+    /// overlap in pool space — empty for a sound layout. Layouts built
+    /// by [`assign_offsets`] are collision-free by construction; this is
+    /// the integrity check for layouts read back from disk (run by the
+    /// static verifier behind [`crate::optimizer::Plan::validate`] and
+    /// `msfcnn verify`, which reports all defects, not just the first).
+    pub fn collisions(&self) -> Vec<(&PoolBuffer, &PoolBuffer)> {
+        let mut pairs = Vec::new();
         for (i, a) in self.buffers.iter().enumerate() {
             for b in self.buffers.iter().skip(i + 1) {
                 let live = a.birth < b.death && b.birth < a.death;
                 let space = a.offset < b.offset + b.bytes && b.offset < a.offset + a.bytes;
                 if live && space {
-                    return Some((a, b));
+                    pairs.push((a, b));
                 }
             }
         }
-        None
+        pairs
     }
 }
 
@@ -630,6 +640,41 @@ mod tests {
             assert_eq!(layout.watermark, m.vanilla_peak_ram(), "{name}");
             assert!(layout.pool_bytes >= layout.watermark, "{name}");
         }
+    }
+
+    #[test]
+    fn collisions_reports_every_offending_pair() {
+        let buf = |label: &str, offset: u64, bytes: u64, birth: usize, death: usize| PoolBuffer {
+            label: label.to_string(),
+            offset,
+            bytes,
+            birth,
+            death,
+        };
+        // a/b/c all live over [0, 4) and all packed at offset 0: three
+        // colliding pairs. d lives later and may legally reuse the bytes.
+        let layout = PoolLayout {
+            buffers: vec![
+                buf("a", 0, 100, 0, 4),
+                buf("b", 0, 80, 1, 4),
+                buf("c", 50, 60, 0, 2),
+                buf("d", 0, 100, 4, 6),
+            ],
+            pool_bytes: 110,
+            watermark: 240,
+        };
+        let pairs = layout.collisions();
+        assert_eq!(pairs.len(), 3);
+        let names: Vec<(&str, &str)> =
+            pairs.iter().map(|(a, b)| (a.label.as_str(), b.label.as_str())).collect();
+        assert_eq!(names, vec![("a", "b"), ("a", "c"), ("b", "c")]);
+        // The old single-probe API surfaces the first of them.
+        let first = layout.collision().unwrap();
+        assert_eq!((first.0.label.as_str(), first.1.label.as_str()), ("a", "b"));
+        // Fresh layouts stay collision-free through the exhaustive check.
+        let m = zoo::quickstart();
+        let fused = Planner::for_model(m.clone()).setting().unwrap();
+        assert!(plan_layout(&m, &fused).collisions().is_empty());
     }
 
     #[test]

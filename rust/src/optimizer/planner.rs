@@ -325,9 +325,10 @@ impl Plan {
 
     /// Structural validation: spans must partition the layer chain in
     /// execution order (an iterative-tail span may only end the chain),
-    /// and the recorded peak RAM must be a positive byte count (a zero
+    /// the recorded peak RAM must be a positive byte count (a zero
     /// here means a negative or missing cost was saturated away during
-    /// parsing — no real plan runs in 0 bytes).
+    /// parsing — no real plan runs in 0 bytes), and a serialized pool
+    /// layout must pass [`crate::analysis::verify_layout`] in full.
     pub fn validate(&self) -> Result<()> {
         if self.setting.spans.is_empty() {
             bail!("plan for '{}' has no spans", self.model);
@@ -349,32 +350,15 @@ impl Plan {
             at = b;
         }
         if let Some(p) = &self.pool {
-            if p.pool_bytes < p.watermark || p.watermark == 0 {
+            // Full static layout analysis (exhaustive collisions, bounds,
+            // lifetimes, watermark recomputation) — every finding, not
+            // just the first, rendered into the rejection.
+            let report = crate::analysis::verify_layout(p);
+            if !report.is_clean() {
                 bail!(
-                    "plan for '{}': pool layout is inconsistent (pool {} B < watermark {} B)",
+                    "plan for '{}': pool layout failed static analysis:\n{}",
                     self.model,
-                    p.pool_bytes,
-                    p.watermark
-                );
-            }
-            for b in &p.buffers {
-                if b.offset + b.bytes > p.pool_bytes {
-                    bail!(
-                        "plan for '{}': pool buffer '{}' overruns the pool ({} + {} > {})",
-                        self.model,
-                        b.label,
-                        b.offset,
-                        b.bytes,
-                        p.pool_bytes
-                    );
-                }
-            }
-            if let Some((a, b)) = p.collision() {
-                bail!(
-                    "plan for '{}': pool buffers '{}' and '{}' overlap while both alive",
-                    self.model,
-                    a.label,
-                    b.label
+                    report.render()
                 );
             }
         }
