@@ -26,8 +26,9 @@ bench-build:
 	$(CARGO) bench --no-run
 
 # Static plan analysis over freshly planned zoo artifacts: plan every
-# model x strategy pair, serialize, and run the verifier over the files
-# (`msfcnn verify` exits nonzero on any finding).
+# model x strategy pair, serialize both the f32 plan and its quantized
+# int8 twin, and run the verifier over the files (`msfcnn verify` exits
+# nonzero on any finding — including mixed-width pool byte math).
 analysis:
 	$(CARGO) run --release --bin msfcnn -- verify --zoo
 

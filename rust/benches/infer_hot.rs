@@ -1,7 +1,9 @@
 //! Per-request serving latency: interpreted engine (re-walks the setting,
 //! arena-allocates per run) vs the compile-once path (cold compile vs
-//! warm allocation-free run), now with per-step attribution of the warm
-//! path from `obs::profile_plan`. Emits `BENCH_infer.json` at the repo
+//! warm allocation-free run), with per-step attribution of the warm path
+//! from `obs::profile_plan` and — since schema v2 — the int8 compiled
+//! twin (`qexec::QCompiledPlan`): warm latency, pool size/watermark, and
+//! logit error vs the f32 path. Emits `BENCH_infer.json` at the repo
 //! root through the stable `obs::export` schema — the serving-hot-path
 //! perf trajectory `msfcnn bench check` and CI gate on.
 //!
@@ -15,6 +17,7 @@ use msf_cnn::obs::export::{infer_snapshot, validate_infer_snapshot, InferRow};
 use msf_cnn::obs::profile_plan;
 use msf_cnn::ops::{ParamGen, Tensor};
 use msf_cnn::optimizer::Planner;
+use msf_cnn::qexec::{calibrate_default, QCompiledPlan};
 use msf_cnn::util::bench::Bencher;
 use msf_cnn::zoo;
 
@@ -63,6 +66,28 @@ fn main() {
             out[0]
         });
 
+        // Int8 twin: same setting lowered through qexec — warm latency,
+        // byte-granular pool footprint, and logit error vs f32.
+        let spec = calibrate_default(&m, engine.params());
+        let quant = QCompiledPlan::compile(m.clone(), setting.clone(), spec);
+        let mut qpool = quant.make_pool();
+        let mut qout = vec![0.0f32; quant.output_len()];
+        let qwarm = b.run(&format!("quant-warm/{name}"), || {
+            quant.run_into(x.as_map(), &mut qpool, &mut qout);
+            qout[0]
+        });
+        let max_abs = qout
+            .iter()
+            .zip(&out)
+            .map(|(a, c)| (a - c).abs() as f64)
+            .fold(0.0f64, f64::max);
+        println!(
+            "  {name}: int8 pool {} B (watermark {} B) vs f32-accounted {} B; max-abs err {max_abs:.4}",
+            quant.pool_bytes(),
+            quant.measured_peak(),
+            compiled.pool_bytes(),
+        );
+
         // Per-step attribution of the warm path: which compiled steps
         // dominate, with p50/p95 per step.
         let profile = profile_plan(&compiled, &x, profile_runs);
@@ -82,6 +107,10 @@ fn main() {
             compiled_warm_us: warm.mean_us(),
             pool_bytes: compiled.pool_bytes(),
             watermark_bytes: compiled.measured_peak(),
+            quant_warm_us: qwarm.mean_us(),
+            quant_pool_bytes: quant.pool_bytes(),
+            quant_watermark_bytes: quant.measured_peak(),
+            quant_max_abs_err: max_abs,
             profile,
         });
     }

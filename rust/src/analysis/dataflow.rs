@@ -26,11 +26,10 @@ use super::interval::IntervalSet;
 use super::{AnalysisInput, AnalysisReport, DefectClass, Finding};
 use crate::exec::{BufAccess, RtBufInfo};
 
-/// f32 pool elements are 4 bytes: findings report byte ranges.
-const ELEM_BYTES: u64 = 4;
-
-fn byte_range(start: usize, end: usize) -> (u64, u64) {
-    (start as u64 * ELEM_BYTES, end as u64 * ELEM_BYTES)
+/// Findings report byte ranges: pool unit indices scale by the input's
+/// declared unit width (4 B f32 elements, 1 B int8 pool bytes).
+fn byte_range(unit: u64, start: usize, end: usize) -> (u64, u64) {
+    (start as u64 * unit, end as u64 * unit)
 }
 
 /// Absolute pool element range of one access (saturating: structurally
@@ -57,7 +56,7 @@ fn structural_pass(input: &AnalysisInput, report: &mut AnalysisReport) {
         }
         let end = b.off.saturating_add(b.elems);
         if end > input.pool_elems {
-            let (lo, hi) = byte_range(b.off, end);
+            let (lo, hi) = byte_range(input.unit_bytes, b.off, end);
             report.push(
                 Finding::new(
                     DefectClass::OutOfPool,
@@ -99,7 +98,7 @@ fn structural_pass(input: &AnalysisInput, report: &mut AnalysisReport) {
             };
             let end = acc.start.saturating_add(acc.len);
             if end > b.elems {
-                let (lo, hi) = byte_range(acc.start, end);
+                let (lo, hi) = byte_range(input.unit_bytes, acc.start, end);
                 report.push(
                     Finding::new(
                         DefectClass::ShapeMismatch,
@@ -149,7 +148,7 @@ fn hazard_pass(input: &AnalysisInput, report: &mut AnalysisReport) {
                 let (sa, ea) = abs_range(ba, a);
                 let (sb, eb) = abs_range(bb, b);
                 if sa < eb && sb < ea {
-                    let (lo, hi) = byte_range(sa.max(sb), ea.min(eb));
+                    let (lo, hi) = byte_range(input.unit_bytes, sa.max(sb), ea.min(eb));
                     report.push(
                         Finding::new(
                             DefectClass::Hazard,
@@ -185,7 +184,7 @@ fn lifetime_pass(input: &AnalysisInput, report: &mut AnalysisReport) {
             clock = clock.max(b.birth);
             if clock >= b.death {
                 let (s, e) = abs_range(b, acc);
-                let (lo, hi) = byte_range(s, e);
+                let (lo, hi) = byte_range(input.unit_bytes, s, e);
                 report.push(
                     Finding::new(
                         DefectClass::LifetimeViolation,
@@ -215,7 +214,7 @@ fn defined_pass(input: &AnalysisInput, report: &mut AnalysisReport) {
             let Some(b) = input.buffers.get(acc.buf) else { continue };
             let (s, e) = abs_range(b, acc);
             for (gs, ge) in defined[acc.buf].uncovered(s, e) {
-                let (lo, hi) = byte_range(gs, ge);
+                let (lo, hi) = byte_range(input.unit_bytes, gs, ge);
                 report.push(
                     Finding::new(
                         DefectClass::DefBeforeUse,
@@ -247,7 +246,7 @@ fn defined_pass(input: &AnalysisInput, report: &mut AnalysisReport) {
     match input.buffers.get(input.output) {
         Some(b) => {
             for (gs, ge) in defined[input.output].uncovered(b.off, b.off + b.elems) {
-                let (lo, hi) = byte_range(gs, ge);
+                let (lo, hi) = byte_range(input.unit_bytes, gs, ge);
                 report.push(
                     Finding::new(
                         DefectClass::DefBeforeUse,

@@ -42,6 +42,26 @@ pub fn verify_layout(layout: &PoolLayout) -> AnalysisReport {
                 .in_bytes(b.offset, b.offset + b.bytes),
             );
         }
+        // Byte math vs declared element width (Eq. 5/6 mixed-width
+        // pricing: 1 B activations, 4 B accumulators). `elems == 0`
+        // means the width predates serialization (legacy layouts) — no
+        // claim to check.
+        if b.elems > 0 && b.bytes != b.elems * b.elem_bytes as u64 {
+            report.push(
+                Finding::new(
+                    DefectClass::WidthMismatch,
+                    format!(
+                        "{} B serialized but {} element(s) x {} byte(s) = {} B declared",
+                        b.bytes,
+                        b.elems,
+                        b.elem_bytes,
+                        b.elems * b.elem_bytes as u64
+                    ),
+                )
+                .on_buffer(&b.label)
+                .in_bytes(b.offset, b.offset + b.bytes),
+            );
+        }
         if b.offset + b.bytes > layout.pool_bytes {
             report.push(
                 Finding::new(
@@ -137,7 +157,15 @@ pub(super) fn cross_check_layout(
         return; // per-buffer zip below would misattribute every entry
     }
     for (s, e) in stored.buffers.iter().zip(&expected.buffers) {
-        if s != e {
+        // Placement must match exactly; widths only when the stored
+        // layout declares them (legacy pre-width JSON carries elems 0).
+        let placement_ok = s.label == e.label
+            && s.offset == e.offset
+            && s.bytes == e.bytes
+            && s.birth == e.birth
+            && s.death == e.death;
+        let width_ok = s.elems == 0 || (s.elems == e.elems && s.elem_bytes == e.elem_bytes);
+        if !placement_ok || !width_ok {
             report.push(
                 Finding::new(
                     DefectClass::LayoutDivergence,
@@ -202,6 +230,31 @@ mod tests {
         let found = classes(&report);
         assert!(found.contains(&DefectClass::OutOfPool), "{}", report.render());
         assert!(found.contains(&DefectClass::WatermarkMismatch), "{}", report.render());
+    }
+
+    #[test]
+    fn width_mismatch_is_flagged_and_names_the_buffer() {
+        let mut layout = fresh_layout("quickstart");
+        // An "f32 plan claiming int8-sized pools": widen the declared
+        // element bytes without growing the serialized byte size.
+        let victim = layout.buffers[0].label.clone();
+        layout.buffers[0].elem_bytes *= 4;
+        let report = verify_layout(&layout);
+        let f = report
+            .findings
+            .iter()
+            .find(|f| f.class == DefectClass::WidthMismatch)
+            .unwrap_or_else(|| panic!("no width finding:\n{}", report.render()));
+        assert_eq!(f.buffer, victim);
+        assert!(f.render().contains("width-mismatch"));
+
+        // Undeclared widths (legacy layouts) make no claim to check.
+        let mut legacy = fresh_layout("quickstart");
+        for b in &mut legacy.buffers {
+            b.elems = 0;
+            b.elem_bytes = 0;
+        }
+        assert!(verify_layout(&legacy).is_clean());
     }
 
     #[test]

@@ -68,6 +68,10 @@ pub enum DefectClass {
     /// The serialized watermark does not equal the recomputed concurrent
     /// peak, or the pool is smaller than the watermark.
     WatermarkMismatch,
+    /// A layout buffer's byte size disagrees with its declared element
+    /// width (`bytes != elems * elem_bytes`) — e.g. an f32 plan claiming
+    /// int8-sized pools.
+    WidthMismatch,
     /// Two lifetime-overlapping layout buffers share pool bytes.
     LayoutCollision,
     /// The serialized layout diverges from a fresh schedule replay of the
@@ -88,6 +92,7 @@ impl DefectClass {
             DefectClass::LifetimeViolation => "lifetime-violation",
             DefectClass::ShapeMismatch => "shape-mismatch",
             DefectClass::WatermarkMismatch => "watermark-mismatch",
+            DefectClass::WidthMismatch => "width-mismatch",
             DefectClass::LayoutCollision => "layout-collision",
             DefectClass::LayoutDivergence => "layout-divergence",
             DefectClass::MalformedSetting => "malformed-setting",
@@ -204,7 +209,7 @@ impl AnalysisReport {
 /// defects.
 #[derive(Debug, Clone)]
 pub struct AnalysisInput {
-    /// f32 elements of the runtime pool.
+    /// Units (see `unit_bytes`) of the runtime pool.
     pub pool_elems: usize,
     /// Buffer table ([`crate::exec::CompiledPlan::runtime_buffers`]).
     pub buffers: Vec<RtBufInfo>,
@@ -215,6 +220,11 @@ pub struct AnalysisInput {
     pub predefined: Option<usize>,
     /// Buffer the logits are read from after the last step.
     pub output: usize,
+    /// Bytes per pool unit the offsets/extents above are expressed in: 4
+    /// for the f32 [`CompiledPlan`] (element-indexed), 1 for the
+    /// byte-indexed int8 [`crate::qexec::QCompiledPlan`]. Diagnostics
+    /// scale finding byte ranges by this.
+    pub unit_bytes: u64,
 }
 
 impl AnalysisInput {
@@ -226,6 +236,19 @@ impl AnalysisInput {
             steps: plan.step_accesses(),
             predefined: plan.input_buffer(),
             output: plan.output_buffer(),
+            unit_bytes: 4,
+        }
+    }
+
+    /// Extract the symbolic (byte-granular) view of an int8 `plan`.
+    pub fn from_qcompiled(plan: &crate::qexec::QCompiledPlan) -> Self {
+        Self {
+            pool_elems: plan.pool_byte_len(),
+            buffers: plan.runtime_buffers(),
+            steps: plan.step_accesses(),
+            predefined: plan.input_buffer(),
+            output: plan.output_buffer(),
+            unit_bytes: 1,
         }
     }
 }
@@ -314,6 +337,30 @@ pub fn verify_plan(plan: &Plan, model: &ModelChain) -> AnalysisReport {
         let compiled = CompiledPlan::compile(model.clone(), plan.setting.clone());
         report.merge(verify_dataflow(&AnalysisInput::from_compiled(&compiled)));
     }
+    if let Some(spec) = &plan.quant {
+        let n = model.num_layers();
+        if spec.tensors.len() != n + 1 || spec.weights.len() != n {
+            report.push(Finding::new(
+                DefectClass::ShapeMismatch,
+                format!(
+                    "quant spec has {} tensor / {} weight params but the model needs {} / {}",
+                    spec.tensors.len(),
+                    spec.weights.len(),
+                    n + 1,
+                    n
+                ),
+            ));
+        } else if compilable {
+            // Prove the quantized lowering too: byte-granular dataflow
+            // over the int8 step list and its mixed-width pool.
+            let q = crate::qexec::QCompiledPlan::compile(
+                model.clone(),
+                plan.setting.clone(),
+                spec.clone(),
+            );
+            report.merge(verify_dataflow(&AnalysisInput::from_qcompiled(&q)));
+        }
+    }
     report
 }
 
@@ -329,14 +376,17 @@ pub fn verify_compiled(plan: &CompiledPlan) -> AnalysisReport {
 /// shared by `msfcnn verify`, [`crate::coordinator::PlanRegistry`] scans,
 /// and [`crate::coordinator::ModelSpec::plan_file`]. `Err` means the file
 /// could not even be analyzed (unreadable, unparseable — including a pool
-/// layout [`Plan::validate`] rejects at parse — or a non-zoo model);
-/// `Ok` carries the plan plus its [`AnalysisReport`], whose findings the
-/// caller must treat as a rejection.
+/// layout [`Plan::validate`] rejects at parse — or an unresolvable
+/// model); `Ok` carries the plan plus its [`AnalysisReport`], whose
+/// findings the caller must treat as a rejection.
+///
+/// Artifact-backed plans (`plan.artifact` set) resolve their model
+/// through the referenced [`crate::runtime`] directory instead of the
+/// zoo.
 pub fn verify_plan_file(path: impl AsRef<Path>) -> Result<(Plan, AnalysisReport)> {
     let path = path.as_ref();
     let plan = Plan::load(path)?;
-    let model = crate::zoo::by_name(&plan.model)
-        .ok_or_else(|| crate::anyhow!("plan model '{}' is not a zoo model", plan.model))?;
+    let model = plan.resolve_model()?;
     let report = verify_plan(&plan, &model);
     Ok((plan, report))
 }

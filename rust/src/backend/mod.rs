@@ -22,9 +22,9 @@ use crate::exec::{CompiledPlan, Engine, PlanPool};
 use crate::model::ModelChain;
 use crate::ops::MapRef;
 use crate::optimizer::{FusionSetting, Plan};
+use crate::qexec::{QCompiledPlan, QPlanPool};
 use crate::runtime::Runtime;
 use crate::util::error::Result;
-use crate::zoo;
 
 /// A live inference backend serving one plan.
 pub trait InferBackend {
@@ -76,15 +76,18 @@ impl EngineBackend {
         Self { compiled, pool, measured: None }
     }
 
-    /// Backend for a serialized [`Plan`], resolving the model by name
-    /// through [`zoo::by_name`].
+    /// Backend for a serialized [`Plan`], resolving the model through
+    /// [`Plan::resolve_model`] — the zoo by name, or the referenced
+    /// artifact directory for artifact-backed plans (whose engine then
+    /// carries the AOT weights, not the deterministic generator's).
     pub fn from_plan(plan: &Plan) -> Result<Self> {
-        let model = zoo::by_name(&plan.model).ok_or_else(|| {
-            anyhow!(
-                "plan model '{}' is not a zoo model; use EngineBackend::for_model",
-                plan.model
-            )
-        })?;
+        if let Some(art) = &plan.artifact {
+            let model = plan.resolve_model()?;
+            plan.validate_for(&model)?;
+            let engine = Engine::quickstart_from_artifacts(&art.dir)?;
+            return Ok(Self::with_engine(engine, plan.setting.clone()));
+        }
+        let model = plan.resolve_model()?;
         Self::for_model(model, plan)
     }
 
@@ -148,6 +151,80 @@ impl InferBackend for EngineBackend {
     }
 }
 
+/// [`InferBackend`] over the int8 compiled executor
+/// ([`crate::qexec::QCompiledPlan`]): serves a quantized [`Plan`]
+/// (`plan.quant` set) from a warm [`QPlanPool`].
+///
+/// The f32 trait surface is preserved — `run` quantizes the input into
+/// the pool's preallocated staging buffer, executes entirely in
+/// i8/i32, and dequantizes the logits on copy-out — so the coordinator
+/// serves quantized and f32 plans interchangeably. The warm hot path
+/// performs zero heap allocations beyond the reply vector.
+pub struct QuantBackend {
+    compiled: QCompiledPlan,
+    pool: QPlanPool,
+    measured: Option<u64>,
+}
+
+impl QuantBackend {
+    /// Backend for a quantized serialized [`Plan`]: resolves the model
+    /// ([`Plan::resolve_model`]), validates plan/spec arity, lowers into
+    /// the int8 compiled form, and allocates the warm pool.
+    pub fn from_plan(plan: &Plan) -> Result<Self> {
+        let spec = plan
+            .quant
+            .clone()
+            .ok_or_else(|| anyhow!("plan '{}' carries no quant spec", plan.model))?;
+        let model = plan.resolve_model()?;
+        plan.validate_for(&model)?;
+        let compiled = QCompiledPlan::compile(model, plan.setting.clone(), spec);
+        let pool = compiled.make_pool();
+        Ok(Self { compiled, pool, measured: None })
+    }
+
+    /// The int8 compiled form this backend serves.
+    pub fn compiled(&self) -> &QCompiledPlan {
+        &self.compiled
+    }
+}
+
+impl InferBackend for QuantBackend {
+    fn kind(&self) -> &'static str {
+        "qexec"
+    }
+
+    fn run(&mut self, input: &[f32]) -> Result<Vec<f32>> {
+        let shape = self.compiled.model().shapes[0];
+        if input.len() as u64 != shape.elems() {
+            return Err(anyhow!(
+                "input length {} != expected {} for {shape}",
+                input.len(),
+                shape.elems()
+            ));
+        }
+        let x = MapRef::new(
+            shape.h as usize,
+            shape.w as usize,
+            shape.c as usize,
+            input,
+        );
+        let mut out = vec![0.0f32; self.compiled.output_len()];
+        self.compiled.run_into(x, &mut self.pool, &mut out);
+        self.measured = Some(self.compiled.measured_peak());
+        Ok(out)
+    }
+
+    fn peak_ram(&self) -> u64 {
+        self.compiled.setting().cost.peak_ram
+    }
+
+    /// Int8 pool watermark — by construction equal to the analytic
+    /// Eq. 5/6 peak of the served setting's schedule.
+    fn measured_peak(&self) -> Option<u64> {
+        self.measured
+    }
+}
+
 /// [`InferBackend`] over the AOT-artifact runtime: serves one manifest
 /// entry point.
 pub struct ArtifactBackend {
@@ -199,7 +276,10 @@ pub enum BackendSpec {
     Engine { model: ModelChain, setting: FusionSetting },
     /// An AOT artifact entry run by the [`Runtime`].
     Artifact { dir: PathBuf, entry: String },
-    /// A pre-solved serialized [`Plan`] (model resolved via the zoo).
+    /// A pre-solved serialized [`Plan`] (model resolved via the zoo or
+    /// the plan's artifact reference). Plans carrying a quant spec are
+    /// served by the int8 [`QuantBackend`]; plain ones by the f32
+    /// [`EngineBackend`].
     Plan { plan: Plan },
 }
 
@@ -214,6 +294,9 @@ impl BackendSpec {
             BackendSpec::Artifact { dir, entry } => {
                 Ok(Box::new(ArtifactBackend::open(dir, entry.clone())?))
             }
+            BackendSpec::Plan { plan } if plan.quant.is_some() => {
+                Ok(Box::new(QuantBackend::from_plan(plan)?))
+            }
             BackendSpec::Plan { plan } => Ok(Box::new(EngineBackend::from_plan(plan)?)),
         }
     }
@@ -224,6 +307,7 @@ mod tests {
     use super::*;
     use crate::optimizer::Planner;
     use crate::ops::ParamGen;
+    use crate::zoo;
 
     fn quickstart_plan() -> Plan {
         Planner::for_model(zoo::quickstart()).plan().unwrap()
@@ -267,7 +351,53 @@ mod tests {
         let mut plan = quickstart_plan();
         plan.model = "not-a-zoo-model".into();
         let err = BackendSpec::Plan { plan }.connect().unwrap_err();
-        assert!(err.to_string().contains("not a zoo model"), "{err}");
+        assert!(err.to_string().contains("unknown model"), "{err}");
+    }
+
+    #[test]
+    fn quantized_plan_connects_to_the_int8_backend() {
+        let plan = {
+            let m = zoo::quickstart();
+            let params: Vec<crate::ops::LayerParams> = m
+                .layers
+                .iter()
+                .enumerate()
+                .map(|(i, l)| crate::ops::LayerParams::for_layer(l, i))
+                .collect();
+            let spec = crate::qexec::calibrate_default(&m, &params);
+            quickstart_plan().with_quant(spec)
+        };
+        let mut q = BackendSpec::Plan { plan: plan.clone() }.connect().unwrap();
+        assert_eq!(q.kind(), "qexec");
+
+        let x = ParamGen::new(3).fill(32 * 32 * 3, 2.0);
+        let qlogits = q.run(&x).unwrap();
+        assert_eq!(qlogits.len(), 10);
+
+        // Same plan without the spec: f32 engine. Logits must agree
+        // within quantization tolerance.
+        let mut fplan = plan.clone();
+        fplan.quant = None;
+        let mut f = BackendSpec::Plan { plan: fplan }.connect().unwrap();
+        assert_eq!(f.kind(), "engine");
+        let flogits = f.run(&x).unwrap();
+        let scale = plan.quant.as_ref().unwrap().tensors.last().unwrap().scale;
+        let tol = 10.0 * scale + 0.15;
+        for (a, b) in qlogits.iter().zip(&flogits) {
+            assert!((a - b).abs() <= tol, "int8 {a} vs f32 {b} (tol {tol})");
+        }
+
+        // Both executors account the same static schedule, so the int8
+        // pool watermark equals the f32 plan's (int8-priced) watermark.
+        let qpeak = q.measured_peak().expect("tracked run");
+        let fpeak = f.measured_peak().expect("tracked run");
+        assert_eq!(qpeak, fpeak);
+    }
+
+    #[test]
+    fn quant_backend_requires_a_spec() {
+        let err = QuantBackend::from_plan(&quickstart_plan()).unwrap_err();
+        assert!(err.to_string().contains("no quant spec"), "{err}");
     }
 
     #[test]

@@ -22,7 +22,7 @@
 use std::ops::Range;
 
 use crate::memory::{
-    assign_offsets, layout_from_schedule, schedule_intervals, BufRole, PoolLayout,
+    assign_offsets, layout_from_schedule, schedule_intervals, BufRole, PoolLayout, ScheduledBuf,
 };
 use crate::model::{Layer, LayerKind, ModelChain};
 use crate::obs::{NoProfiler, StepMeta, StepProfiler};
@@ -35,12 +35,13 @@ use crate::optimizer::FusionSetting;
 
 use super::RunReport;
 
-/// Where a step reads its boundary input from.
+/// Where a step reads its boundary input from. Crate-visible: the int8
+/// [`crate::qexec::QCompiledPlan`] executes the same lowered step list.
 #[derive(Debug, Clone, Copy)]
-enum Src {
+pub(crate) enum Src {
     /// The external input tensor (fused heads stream it; never pooled).
     Input,
-    /// A pool buffer (index into `CompiledPlan::bufs`).
+    /// A pool buffer (schedule index, shared by every lowering).
     Buf(usize),
 }
 
@@ -111,8 +112,11 @@ pub struct RtBufInfo {
     pub death: usize,
 }
 
-/// One compiled execution step.
-enum Step {
+/// One compiled execution step. Buffer fields are **schedule indices**
+/// (offset-independent), so the same lowered list drives both the f32
+/// [`CompiledPlan`] and the int8 [`crate::qexec::QCompiledPlan`] against
+/// their own offset tables.
+pub(crate) enum Step {
     /// Copy the current boundary into a residual stash slice.
     StashSave { src: Src, dst: usize },
     /// Single (unfused) layer via the allocation-free `*_into` kernels.
@@ -133,6 +137,102 @@ enum Step {
         dense: Vec<(usize, usize)>,
         logits: usize,
     },
+}
+
+/// Product of the shared step lowering: the step list plus the
+/// distinguished buffers, all as schedule indices.
+pub(crate) struct Lowered {
+    pub(crate) steps: Vec<Step>,
+    /// `v_0` pool buffer to copy the external input into (only when the
+    /// first span is a single layer; fused heads stream the input).
+    pub(crate) input_buf: Option<usize>,
+    pub(crate) out_buf: usize,
+    /// Band-range scratch entries the deepest fused step needs.
+    pub(crate) ranges_scratch: usize,
+}
+
+/// Lower `(model, setting)` against its schedule into the step list both
+/// compiled executors share. Buffer references are indices into `sched`;
+/// each executor resolves them through its own offset assignment (f32
+/// element offsets vs int8 byte offsets).
+pub(crate) fn lower_steps(
+    model: &ModelChain,
+    params: &[LayerParams],
+    setting: &FusionSetting,
+    sched: &[ScheduledBuf],
+) -> Lowered {
+    let find = |role: BufRole| -> usize {
+        sched
+            .iter()
+            .position(|s| s.role == role)
+            .unwrap_or_else(|| panic!("schedule is missing buffer {role:?}"))
+    };
+
+    let first_fused = setting.spans.first().map(|&(a, b, _)| b - a > 1).unwrap_or(false);
+    let input_buf = if first_fused { None } else { Some(find(BufRole::Input)) };
+    let mut cur: Src = match input_buf {
+        Some(id) => Src::Buf(id),
+        None => Src::Input,
+    };
+    let mut steps: Vec<Step> = Vec::new();
+    let mut ranges_scratch = 0usize;
+    let mut stash_ids: Vec<Option<usize>> = vec![None; model.num_layers() + 1];
+
+    for (si, &(a, b, iter_tail)) in setting.spans.iter().enumerate() {
+        let fused = b - a > 1;
+
+        // Same (shared) stash decision as the engine / schedule walk.
+        if crate::memory::stash_needed(model, a, b, fused) {
+            let dst = find(BufRole::Stash { tensor: a });
+            stash_ids[a] = Some(dst);
+            steps.push(Step::StashSave { src: cur, dst });
+        }
+
+        if fused {
+            let conv_end = crate::memory::conv_end_of(model, a, b, iter_tail);
+            let bands = find(BufRole::Bands { a, b: conv_end });
+            let geom = FusedBlock::new(model, a, conv_end, params).band_geom();
+            debug_assert_eq!(
+                geom.total_elems(),
+                sched[bands].elems,
+                "band geometry / schedule divergence"
+            );
+            ranges_scratch = ranges_scratch.max(geom.dims.len());
+            if iter_tail {
+                let pool_acc = find(BufRole::PoolAcc { span: si });
+                let dense: Vec<(usize, usize)> = (conv_end + 1..b)
+                    .map(|li| (li, find(BufRole::DenseAcc { layer: li })))
+                    .collect();
+                let logits = find(BufRole::Logits);
+                steps.push(Step::FusedIter {
+                    a,
+                    conv_end,
+                    src: cur,
+                    bands,
+                    geom,
+                    pool_acc,
+                    dense,
+                    logits,
+                });
+                cur = Src::Buf(logits);
+            } else {
+                let out = find(BufRole::Boundary { tensor: b });
+                steps.push(Step::Fused { a, conv_end, src: cur, bands, out, geom });
+                cur = Src::Buf(out);
+            }
+        } else {
+            let out = find(BufRole::Boundary { tensor: b });
+            let residual = model.layers[a].residual_from.and_then(|src| stash_ids[src].take());
+            steps.push(Step::Single { layer: a, src: cur, out, residual });
+            cur = Src::Buf(out);
+        }
+    }
+
+    let out_buf = match cur {
+        Src::Buf(id) => id,
+        Src::Input => unreachable!("setting with no spans"),
+    };
+    Lowered { steps, input_buf, out_buf, ranges_scratch }
 }
 
 /// The per-serving-slot mutable state of a compiled plan: one fixed f32
@@ -230,78 +330,8 @@ impl CompiledPlan {
             .map(|s| BufMeta { label: s.label.clone(), birth: s.birth, rt_death: s.rt_death })
             .collect();
 
-        let find = |role: BufRole| -> usize {
-            sched
-                .iter()
-                .position(|s| s.role == role)
-                .unwrap_or_else(|| panic!("schedule is missing buffer {role:?}"))
-        };
-
-        let first_fused = setting.spans.first().map(|&(a, b, _)| b - a > 1).unwrap_or(false);
-        let input_buf = if first_fused { None } else { Some(find(BufRole::Input)) };
-        let mut cur: Src = match input_buf {
-            Some(id) => Src::Buf(id),
-            None => Src::Input,
-        };
-        let mut steps: Vec<Step> = Vec::new();
-        let mut ranges_scratch = 0usize;
-        let mut stash_ids: Vec<Option<usize>> = vec![None; model.num_layers() + 1];
-
-        for (si, &(a, b, iter_tail)) in setting.spans.iter().enumerate() {
-            let fused = b - a > 1;
-
-            // Same (shared) stash decision as the engine / schedule walk.
-            if crate::memory::stash_needed(&model, a, b, fused) {
-                let dst = find(BufRole::Stash { tensor: a });
-                stash_ids[a] = Some(dst);
-                steps.push(Step::StashSave { src: cur, dst });
-            }
-
-            if fused {
-                let conv_end = crate::memory::conv_end_of(&model, a, b, iter_tail);
-                let bands = find(BufRole::Bands { a, b: conv_end });
-                let geom = FusedBlock::new(&model, a, conv_end, &params).band_geom();
-                debug_assert_eq!(
-                    geom.total_elems(),
-                    bufs[bands].elems,
-                    "band geometry / schedule divergence"
-                );
-                ranges_scratch = ranges_scratch.max(geom.dims.len());
-                if iter_tail {
-                    let pool_acc = find(BufRole::PoolAcc { span: si });
-                    let dense: Vec<(usize, usize)> = (conv_end + 1..b)
-                        .map(|li| (li, find(BufRole::DenseAcc { layer: li })))
-                        .collect();
-                    let logits = find(BufRole::Logits);
-                    steps.push(Step::FusedIter {
-                        a,
-                        conv_end,
-                        src: cur,
-                        bands,
-                        geom,
-                        pool_acc,
-                        dense,
-                        logits,
-                    });
-                    cur = Src::Buf(logits);
-                } else {
-                    let out = find(BufRole::Boundary { tensor: b });
-                    steps.push(Step::Fused { a, conv_end, src: cur, bands, out, geom });
-                    cur = Src::Buf(out);
-                }
-            } else {
-                let out = find(BufRole::Boundary { tensor: b });
-                let residual =
-                    model.layers[a].residual_from.and_then(|src| stash_ids[src].take());
-                steps.push(Step::Single { layer: a, src: cur, out, residual });
-                cur = Src::Buf(out);
-            }
-        }
-
-        let out_buf = match cur {
-            Src::Buf(id) => id,
-            Src::Input => unreachable!("setting with no spans"),
-        };
+        let Lowered { steps, input_buf, out_buf, ranges_scratch } =
+            lower_steps(&model, &params, &setting, &sched);
         let out_len = bufs[out_buf].elems;
 
         let plan = Self {

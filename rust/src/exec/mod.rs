@@ -14,4 +14,5 @@ mod compiled;
 mod engine;
 
 pub use compiled::{BufAccess, CompiledPlan, PlanPool, RtBufInfo, StepAccess};
+pub(crate) use compiled::{lower_steps, Lowered, Src, Step};
 pub use engine::{Engine, RunReport, SpanStat};

@@ -187,6 +187,38 @@
 //! (`BENCH_infer.json`, `BENCH_serve.json`, `msfcnn profile --json`)
 //! with validators that pin the schema.
 //!
+//! ## Quantized execution
+//!
+//! The f32 engine *prices* RAM at int8 widths (the paper's Eq. 5/6
+//! accounting); [`qexec`] executes that regime for real. A calibration
+//! pass ([`qexec::calibrate_default`]) observes per-tensor ranges over a
+//! deterministic input, and [`qexec::QCompiledPlan`] lowers the same
+//! step list as [`exec::CompiledPlan`] onto an int8 byte pool —
+//! activations at 1 byte per element, i32 accumulators at 4 — using the
+//! fused-requantize kernel twins in [`ops::quant`]. The measured pool
+//! watermark equals the analytic Eq. 5/6 peak exactly, warm serving is
+//! allocation-free end to end (input quantization included), and the
+//! [`optimizer::Plan`] JSON carries the `quant` block so a deploy
+//! artifact is self-contained:
+//!
+//! ```no_run
+//! use msf_cnn::exec::Engine;
+//! use msf_cnn::ops::Tensor;
+//! use msf_cnn::optimizer::Planner;
+//! use msf_cnn::qexec::{calibrate_default, QCompiledPlan};
+//! use msf_cnn::zoo;
+//!
+//! let m = zoo::quickstart();
+//! let setting = Planner::for_model(m.clone()).setting().unwrap();
+//! let spec = calibrate_default(&m, Engine::new(m.clone()).params());
+//! let q = QCompiledPlan::compile(m, setting, spec);   // compile once
+//! let mut pool = q.make_pool();                       // only allocations
+//! let x = Tensor::zeros(32, 32, 3);
+//! let mut logits = vec![0.0; q.output_len()];
+//! q.run_into(x.as_map(), &mut pool, &mut logits);     // int8 end to end
+//! assert_eq!(q.measured_peak(), q.layout().watermark); // Eq. 5/6, exact
+//! ```
+//!
 //! ## Static analysis
 //!
 //! On-MCU failures are unrecoverable, so a plan must be provably
@@ -219,6 +251,7 @@ pub mod model;
 pub mod obs;
 pub mod ops;
 pub mod optimizer;
+pub mod qexec;
 pub mod report;
 pub mod runtime;
 pub mod util;

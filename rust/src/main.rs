@@ -4,7 +4,7 @@
 //! msfcnn zoo [--model NAME]
 //! msfcnn optimize --model NAME [--f-max F|inf | --p-max-kb N]
 //!                 [--latency-budget MS [--board B]] [--baselines]
-//! msfcnn infer --plan FILE [--input FILE | --seed N]
+//! msfcnn infer --plan FILE [--input FILE | --seed N] [--quant]
 //! msfcnn profile --plan FILE [--runs N] [--seed N] [--top K] [--json FILE]
 //! msfcnn simulate --model NAME [--f-max F|inf | --p-max-kb N] [--board B]
 //! msfcnn tables [--which 1|2|3|5|5j|fig2|fig3|fig4|steps|all]
@@ -36,7 +36,7 @@ USAGE:
   msfcnn zoo [--model NAME]
   msfcnn optimize --model NAME [--f-max F|inf | --p-max-kb N] [--baselines] [--save FILE]
   msfcnn optimize --model NAME --latency-budget MS [--board BOARD] [--p-max-kb N] [--save FILE]
-  msfcnn infer --plan FILE [--input FILE | --seed N]
+  msfcnn infer --plan FILE [--input FILE | --seed N] [--quant]
   msfcnn profile --plan FILE [--runs N] [--seed N] [--top K] [--json FILE]
   msfcnn simulate --model NAME [--f-max F|inf | --p-max-kb N] [--board BOARD] [--trace]
   msfcnn tables [--which 1|2|3|5|5j|fig2|fig3|fig4|steps|all]
@@ -268,8 +268,7 @@ fn main() -> Result<()> {
                 .get("plan")
                 .ok_or_else(|| anyhow!("--plan FILE required\n\n{USAGE}"))?;
             let plan = Plan::load(path)?;
-            let model = zoo::by_name(&plan.model)
-                .ok_or_else(|| anyhow!("plan model '{}' not in zoo", plan.model))?;
+            let model = plan.resolve_model()?;
             let shape = model.shapes[0];
             let n = shape.elems() as usize;
             let data: Vec<f32> = match args.get("input") {
@@ -332,6 +331,41 @@ fn main() -> Result<()> {
                     p.watermark
                 );
             }
+            if args.has("quant") {
+                // Int8 side-by-side: same plan lowered through qexec.
+                // The spec rides in the plan when it ships one;
+                // otherwise calibrate on the fly (deterministic input).
+                let spec = match &plan.quant {
+                    Some(s) => s.clone(),
+                    None => msf_cnn::qexec::calibrate_default(&model, engine.params()),
+                };
+                let q = msf_cnn::qexec::QCompiledPlan::compile(
+                    model.clone(),
+                    plan.setting.clone(),
+                    spec,
+                );
+                let mut qpool = q.make_pool();
+                let mut qout = vec![0.0f32; q.output_len()];
+                let t_q = std::time::Instant::now();
+                q.run_into(input.as_map(), &mut qpool, &mut qout);
+                let q_ms = t_q.elapsed().as_secs_f64() * 1e3;
+                let k = qout.len().min(10);
+                println!("int8 logits[..{k}] = {:?}", &qout[..k]);
+                let mut max_abs = 0.0f32;
+                let mut sq = 0.0f64;
+                for (a, b) in qout.iter().zip(&r.output) {
+                    let d = (a - b).abs();
+                    max_abs = max_abs.max(d);
+                    sq += (d as f64) * (d as f64);
+                }
+                let rmse = (sq / qout.len().max(1) as f64).sqrt();
+                println!("int8 vs f32: max-abs {max_abs:.5}, RMSE {rmse:.5}");
+                println!(
+                    "int8 pool peak {:.3} kB | f32 measured peak {:.3} kB (both = Eq. 5-6 watermark) | int8 run {q_ms:.2} ms",
+                    report::kb(q.measured_peak()),
+                    report::kb(r.peak_ram),
+                );
+            }
         }
         "profile" => {
             // Per-step attribution of a saved plan's compiled hot path:
@@ -341,8 +375,7 @@ fn main() -> Result<()> {
                 .get("plan")
                 .ok_or_else(|| anyhow!("--plan FILE required\n\n{USAGE}"))?;
             let plan = Plan::load(path)?;
-            let model = zoo::by_name(&plan.model)
-                .ok_or_else(|| anyhow!("plan model '{}' not in zoo", plan.model))?;
+            let model = plan.resolve_model()?;
             let runs = args.get_usize("runs", 30)?;
             let top = args.get_usize("top", 3)?;
             let seed = args.get_usize("seed", 42)? as u64;
@@ -510,6 +543,16 @@ fn main() -> Result<()> {
                     .map_err(|e| anyhow!("creating {}: {e}", dir.display()))?;
                 for name in zoo::MODEL_NAMES {
                     let m = zoo::by_name(name).expect("zoo name");
+                    // One calibration per model serves every strategy's
+                    // quantized variant: boundary tensors are identical
+                    // under any fusion setting.
+                    let params: Vec<msf_cnn::ops::LayerParams> = m
+                        .layers
+                        .iter()
+                        .enumerate()
+                        .map(|(i, l)| msf_cnn::ops::LayerParams::for_layer(l, i))
+                        .collect();
+                    let spec = msf_cnn::qexec::calibrate_default(&m, &params);
                     let mut planner = Planner::for_model(m);
                     for (sname, s) in strategies {
                         let plan = match planner.plan_with(s, Constraints::none()) {
@@ -523,6 +566,13 @@ fn main() -> Result<()> {
                         plan.save(&path)?;
                         checked += 1;
                         defects += verify_one(&path)?;
+                        // The int8 twin: same setting + calibrated spec,
+                        // proved over byte-granular mixed-width intervals.
+                        let qplan = plan.with_quant(spec.clone());
+                        let qpath = dir.join(format!("{name}--{sname}--int8.plan.json"));
+                        qplan.save(&qpath)?;
+                        checked += 1;
+                        defects += verify_one(&qpath)?;
                     }
                 }
                 let _ = std::fs::remove_dir_all(&dir);
@@ -694,8 +744,7 @@ fn main() -> Result<()> {
                         break;
                     }
                     let Some(entry) = registry.latest(&id) else { continue };
-                    let model = zoo::by_name(&entry.plan.model)
-                        .ok_or_else(|| anyhow!("model '{}' left the zoo", entry.plan.model))?;
+                    let model = entry.plan.resolve_model()?;
                     let input = gen.fill(model.shapes[0].elems() as usize, 2.0);
                     sent += 1;
                     if handle.infer(&id, input).is_ok() {
@@ -748,8 +797,7 @@ fn main() -> Result<()> {
                 Some(path) => {
                     let plan = Plan::load(path)?;
                     let id = args.get("id").unwrap_or(&plan.model).to_string();
-                    let model = zoo::by_name(&plan.model)
-                        .ok_or_else(|| anyhow!("plan model '{}' not in zoo", plan.model))?;
+                    let model = plan.resolve_model()?;
                     let input_len = model.shapes[0].elems() as usize;
                     println!("serving {}", plan.describe());
                     (ModelSpec::plan(id, plan), input_len)

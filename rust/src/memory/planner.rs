@@ -456,11 +456,22 @@ pub fn schedule_intervals(model: &ModelChain, setting: &FusionSetting) -> Vec<Sc
 }
 
 /// One buffer of a serialized pool layout.
+///
+/// `bytes` is the accounting byte size; `elems`/`elem_bytes` declare the
+/// element width behind it (`bytes == elems * elem_bytes`): 1 byte per
+/// activation element, 4 per i32/f32 accumulator element — the mixed
+/// widths of Eq. 5/6 pricing, checked by
+/// [`crate::analysis::verify_layout`]. Layouts parsed from pre-width
+/// JSON carry `elems == 0` ("width undeclared"), which skips the check.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct PoolBuffer {
     pub label: String,
     pub offset: u64,
     pub bytes: u64,
+    /// Element count behind `bytes` (0 = undeclared, legacy layouts).
+    pub elems: u64,
+    /// Bytes per element (1 activations, 4 accumulators; 0 = undeclared).
+    pub elem_bytes: u32,
     /// Alive during ticks `[birth, death)` of the schedule replay.
     pub birth: usize,
     pub death: usize,
@@ -522,12 +533,22 @@ pub fn layout_from_schedule(sched: &[ScheduledBuf]) -> PoolLayout {
         .iter()
         .zip(&offsets)
         .filter(|(s, _)| s.bytes > 0)
-        .map(|(s, &offset)| PoolBuffer {
-            label: s.label.clone(),
-            offset,
-            bytes: s.bytes,
-            birth: s.birth,
-            death: s.death,
+        .map(|(s, &offset)| {
+            debug_assert_eq!(
+                s.bytes % s.elems.max(1) as u64,
+                0,
+                "{}: accounting bytes not a whole element width",
+                s.label
+            );
+            PoolBuffer {
+                label: s.label.clone(),
+                offset,
+                bytes: s.bytes,
+                elems: s.elems as u64,
+                elem_bytes: (s.bytes / s.elems.max(1) as u64) as u32,
+                birth: s.birth,
+                death: s.death,
+            }
         })
         .collect();
     PoolLayout { buffers, pool_bytes, watermark }
@@ -648,6 +669,8 @@ mod tests {
             label: label.to_string(),
             offset,
             bytes,
+            elems: bytes,
+            elem_bytes: 1,
             birth,
             death,
         };
@@ -675,6 +698,23 @@ mod tests {
         let m = zoo::quickstart();
         let fused = Planner::for_model(m.clone()).setting().unwrap();
         assert!(plan_layout(&m, &fused).collisions().is_empty());
+    }
+
+    #[test]
+    fn layout_declares_mixed_element_widths() {
+        // Eq. 5/6 pricing: activations at 1 byte/element, accumulator
+        // stashes at 4 — the layout carries both, consistently.
+        let m = zoo::kws_cnn();
+        let setting = Planner::for_model(m.clone()).setting().unwrap();
+        let layout = plan_layout(&m, &setting);
+        for b in &layout.buffers {
+            assert_eq!(b.bytes, b.elems * b.elem_bytes as u64, "{}", b.label);
+            assert!(b.elem_bytes == 1 || b.elem_bytes == 4, "{}: {}", b.label, b.elem_bytes);
+        }
+        assert!(layout.buffers.iter().any(|b| b.elem_bytes == 1));
+        // The classifier head (gap/dense/logits accumulators) is f32/i32
+        // priced at 4 bytes per element.
+        assert!(layout.buffers.iter().any(|b| b.elem_bytes == 4));
     }
 
     #[test]

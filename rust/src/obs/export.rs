@@ -20,8 +20,9 @@ use crate::{anyhow, bail};
 use super::profile::StepProfile;
 
 /// Schema tag every committed `BENCH_*.json` carries. Bump only with a
-/// deliberate, documented format change.
-pub const BENCH_SCHEMA: &str = "msfcnn.bench/v1";
+/// deliberate, documented format change. v2 added the int8 columns
+/// (`quant_*`) to the infer snapshot alongside the quantized executor.
+pub const BENCH_SCHEMA: &str = "msfcnn.bench/v2";
 
 /// Schema tag of standalone `msfcnn profile --json` snapshots.
 pub const PROFILE_SCHEMA: &str = "msfcnn.profile/v1";
@@ -50,6 +51,14 @@ pub struct InferRow {
     pub compiled_warm_us: f64,
     pub pool_bytes: u64,
     pub watermark_bytes: u64,
+    /// Warm allocation-free int8 ([`crate::qexec::QCompiledPlan`]) run, µs.
+    pub quant_warm_us: f64,
+    /// Int8 pool size in bytes (byte-granular offset assignment).
+    pub quant_pool_bytes: u64,
+    /// Int8 pool watermark — the analytic Eq. 5/6 peak, measured.
+    pub quant_watermark_bytes: u64,
+    /// Max-abs logit error of the int8 path vs the f32 compiled path.
+    pub quant_max_abs_err: f64,
     /// Per-step attribution of the warm path.
     pub profile: StepProfile,
 }
@@ -86,7 +95,7 @@ pub fn infer_snapshot(rows: &[InferRow]) -> String {
         .iter()
         .map(|r| {
             format!(
-                "    {{\n      \"model\": {},\n      \"interpreted_us\": {},\n      \"compile_cold_us\": {},\n      \"compiled_warm_us\": {},\n      \"warm_speedup\": {},\n      \"pool_bytes\": {},\n      \"watermark_bytes\": {},\n      \"profile_runs\": {},\n      \"total_step_us\": {},\n      \"steps\": {}\n    }}",
+                "    {{\n      \"model\": {},\n      \"interpreted_us\": {},\n      \"compile_cold_us\": {},\n      \"compiled_warm_us\": {},\n      \"warm_speedup\": {},\n      \"pool_bytes\": {},\n      \"watermark_bytes\": {},\n      \"quant_warm_us\": {},\n      \"quant_speedup\": {},\n      \"quant_pool_bytes\": {},\n      \"quant_watermark_bytes\": {},\n      \"quant_max_abs_err\": {},\n      \"profile_runs\": {},\n      \"total_step_us\": {},\n      \"steps\": {}\n    }}",
                 jstr(&r.model),
                 jnum(r.interpreted_us),
                 jnum(r.compile_cold_us),
@@ -94,6 +103,11 @@ pub fn infer_snapshot(rows: &[InferRow]) -> String {
                 jnum(r.interpreted_us / r.compiled_warm_us.max(1e-9)),
                 r.pool_bytes,
                 r.watermark_bytes,
+                jnum(r.quant_warm_us),
+                jnum(r.compiled_warm_us / r.quant_warm_us.max(1e-9)),
+                r.quant_pool_bytes,
+                r.quant_watermark_bytes,
+                format!("{:.6}", r.quant_max_abs_err),
                 r.profile.runs,
                 jnum(r.profile.total_mean_us),
                 steps_json(&r.profile, "        "),
@@ -298,6 +312,11 @@ pub fn validate_infer_snapshot(text: &str) -> Result<()> {
             "warm_speedup",
             "pool_bytes",
             "watermark_bytes",
+            "quant_warm_us",
+            "quant_speedup",
+            "quant_pool_bytes",
+            "quant_watermark_bytes",
+            "quant_max_abs_err",
             "profile_runs",
             "total_step_us",
         ] {
@@ -397,6 +416,10 @@ mod tests {
             compiled_warm_us: 20.0,
             pool_bytes: 4096,
             watermark_bytes: 4000,
+            quant_warm_us: 12.0,
+            quant_pool_bytes: 1100,
+            quant_watermark_bytes: 1000,
+            quant_max_abs_err: 0.03,
             profile: p,
         }];
         let json = infer_snapshot(&rows);
@@ -456,6 +479,10 @@ mod tests {
             compiled_warm_us: 1.0,
             pool_bytes: 1,
             watermark_bytes: 1,
+            quant_warm_us: 1.0,
+            quant_pool_bytes: 1,
+            quant_watermark_bytes: 1,
+            quant_max_abs_err: 0.0,
             profile: p,
         }]);
         assert!(validate_serve_snapshot(&infer).is_err(), "serve validator took infer doc");
@@ -463,6 +490,13 @@ mod tests {
         let broken = infer.replace("\"compiled_warm_us\"", "\"renamed_field\"");
         let err = validate_infer_snapshot(&broken).unwrap_err();
         assert!(err.to_string().contains("compiled_warm_us"), "{err}");
+        // Missing int8 columns are drift.
+        let no_quant = infer.replace("\"quant_warm_us\"", "\"legacy_field\"");
+        let err = validate_infer_snapshot(&no_quant).unwrap_err();
+        assert!(err.to_string().contains("quant_warm_us"), "{err}");
+        // Pre-quantization v1 snapshots fail the v2 gate.
+        let v1 = infer.replace("msfcnn.bench/v2", "msfcnn.bench/v1");
+        assert!(validate_infer_snapshot(&v1).is_err(), "v1 snapshot passed the v2 gate");
         // Empty results are drift too.
         let empty = format!(
             "{{\"schema\": \"{BENCH_SCHEMA}\", \"bench\": \"infer_hot\", \"unit\": \"us\", \"results\": []}}"

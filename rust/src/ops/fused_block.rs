@@ -37,7 +37,9 @@ pub struct BandRange {
 }
 
 /// Input rows of `layer` needed to produce output rows `out`.
-fn required_input(layer: &Layer, out: BandRange) -> BandRange {
+/// Shared with the quantized band executor ([`crate::qexec`]) so both
+/// walk the identical receptive-field recursion.
+pub(crate) fn required_input(layer: &Layer, out: BandRange) -> BandRange {
     let s = layer.stride as isize;
     let p = layer.padding as isize;
     BandRange {

@@ -2,9 +2,11 @@
 //! the paper builds on microTVM, rebuilt here so fused execution can be
 //! *measured* (numerics + tracked RAM), not just predicted.
 //!
-//! Everything is f32 HWC single-image (numerics match the L1/L2 Python
-//! oracles; the int8 *sizing* used by the analytical model is a property
-//! of [`crate::model::ModelChain::elem_bytes`], not of these kernels).
+//! The reference kernels are f32 HWC single-image (numerics match the
+//! L1/L2 Python oracles). Each hot `*_into` kernel also has an int8 twin
+//! in [`quant`] (i8 in, i32 accumulate, fused requantize epilogue) — the
+//! regime [`crate::model::ModelChain::elem_bytes`]' analytic sizing
+//! assumes, executed for real by [`crate::qexec`].
 
 mod conv;
 mod dense;
@@ -20,7 +22,13 @@ pub use pool::{
     accumulate_row_major, avg_pool2d, avg_pool2d_into, global_avg_pool, global_avg_pool_into,
     max_pool2d, max_pool2d_into, scale_avg, GlobalPoolIter,
 };
-pub use quant::{qconv2d, QParams, QTensor};
+pub use quant::{
+    dequantize_into, get_i32, qavg_pool2d_into, qconv2d, qconv2d_into, qdense_into,
+    qdwconv2d_into, qgap_accumulate, qgap_finish, qgap_reset, qmax_pool2d_into, qresidual_add,
+    quantize_into, set_i32, QLayerParams, QMapRef, QParams, QTensor, QuantSpec,
+};
+pub(crate) use fused_block::required_input;
+pub(crate) use quant::qact;
 pub use tensor::{MapRef, Tensor};
 
 use crate::model::{Activation, Layer, LayerKind};

@@ -3,11 +3,25 @@
 //!
 //! Symmetric-affine per-tensor scheme (TFLite-style): `real = scale ·
 //! (q - zero_point)`, int8 activations/weights, i32 accumulators, with a
-//! requantization step after each op. The executor runs f32 for oracle
-//! exactness; this module proves the int8 path stays within quantization
-//! error of it, which is what licenses `elem_bytes = 1` in Eq. 5.
+//! requantization step after each op. Two layers of machinery live here:
+//!
+//! * the original oracle-side types ([`QParams`], [`QTensor`], the
+//!   allocating [`qconv2d`]) that *prove* the int8 path stays within
+//!   quantization error of the f32 executor — what licenses
+//!   `elem_bytes = 1` in Eq. 5; and
+//! * the allocation-free `q*_into` kernel twins of the f32 `*_into`
+//!   family (i8 in, i32 accumulate, fused requantize-to-i8 epilogue that
+//!   folds the activation clamp — no per-element dequantize round trip),
+//!   which [`crate::qexec::QCompiledPlan`] wires to pool slices so a
+//!   whole plan executes end-to-end in int8 storage.
+//!
+//! Weight layouts are byte-for-byte the f32 layouts (`[k,k,cin,cout]`
+//! conv, `[k,k,c]` depthwise, `[din][dout]` dense); biases stay f32 and
+//! are folded into the epilogue, TinyEngine-style.
 
-use super::Tensor;
+use crate::model::Activation;
+
+use super::{LayerParams, Tensor};
 
 /// Per-tensor affine quantization parameters.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -47,6 +61,370 @@ impl QParams {
     #[inline]
     pub fn dequantize(&self, q: i8) -> f32 {
         (q as i32 - self.zero_point) as f32 * self.scale
+    }
+}
+
+/// Full quantization configuration of one plan: a [`QParams`] per
+/// boundary tensor `v_0..v_n` (observed by a calibration pass,
+/// [`crate::qexec::calibrate`]) and one per layer's weights. Serialized
+/// into [`crate::optimizer::Plan`] JSON so a quantized deploy artifact
+/// fully determines its own numerics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantSpec {
+    /// `tensors[i]` quantizes boundary tensor `v_i` (`num_layers + 1`).
+    pub tensors: Vec<QParams>,
+    /// `weights[i]` quantizes layer `i`'s weight array (`num_layers`).
+    pub weights: Vec<QParams>,
+}
+
+/// One layer's parameters in the quantized regime: int8 weights (same
+/// memory layout as the f32 array they were quantized from) plus the f32
+/// bias folded into the requantization epilogue.
+#[derive(Debug, Clone)]
+pub struct QLayerParams {
+    pub w_q: Vec<i8>,
+    pub w_qp: QParams,
+    pub bias: Vec<f32>,
+}
+
+impl QLayerParams {
+    /// Quantize `p`'s weights under `w_qp` (the spec entry a calibration
+    /// pass observed for this layer).
+    pub fn from_params(p: &LayerParams, w_qp: QParams) -> Self {
+        Self {
+            w_q: p.weights.iter().map(|&v| w_qp.quantize(v)).collect(),
+            w_qp,
+            bias: p.bias.clone(),
+        }
+    }
+}
+
+/// Borrowed int8 HWC map view — the i8 twin of [`super::MapRef`], the
+/// read surface [`crate::qexec::QCompiledPlan`] streams pool slices
+/// through.
+#[derive(Clone, Copy)]
+pub struct QMapRef<'a> {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub data: &'a [i8],
+}
+
+impl<'a> QMapRef<'a> {
+    /// View over a raw pool slice with explicit dims.
+    pub fn new(h: usize, w: usize, c: usize, data: &'a [i8]) -> Self {
+        debug_assert_eq!(data.len(), h * w * c);
+        Self { h, w, c, data }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Copy rows `[y0, y0+rows)` into `dst`, filling rows outside
+    /// `[0, h)` with `fill` — the quantized twin of
+    /// [`super::MapRef::read_band_into`]. Padding rows carry the owning
+    /// tensor's *zero point*, so a conv's `(x - zp)` contribution over
+    /// them is exactly 0, matching the f32 path's zero padding.
+    pub fn read_band_into(&self, y0: isize, rows: usize, dst: &mut [i8], fill: i8) {
+        let rowlen = self.w * self.c;
+        debug_assert!(dst.len() >= rows * rowlen);
+        for r in 0..rows {
+            let sy = y0 + r as isize;
+            let dsts = &mut dst[r * rowlen..(r + 1) * rowlen];
+            if sy < 0 || sy as usize >= self.h {
+                dsts.fill(fill);
+                continue;
+            }
+            let src = sy as usize * rowlen;
+            dsts.copy_from_slice(&self.data[src..src + rowlen]);
+        }
+    }
+}
+
+/// The requantization epilogue's activation fold: clamp `real` exactly
+/// as the f32 kernels' post-activation would, *before* quantizing.
+#[inline]
+pub(crate) fn qact(real: f32, act: Activation) -> f32 {
+    match act {
+        Activation::None => real,
+        Activation::Relu => real.max(0.0),
+        Activation::Relu6 => real.clamp(0.0, 6.0),
+    }
+}
+
+/// Quantize an f32 slice into an i8 slice under `qp` (same lengths).
+pub fn quantize_into(src: &[f32], qp: QParams, dst: &mut [i8]) {
+    debug_assert_eq!(src.len(), dst.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = qp.quantize(s);
+    }
+}
+
+/// Dequantize an i8 slice into an f32 slice under `qp` (same lengths).
+pub fn dequantize_into(src: &[i8], qp: QParams, dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = qp.dequantize(s);
+    }
+}
+
+/// Read the `idx`-th little-endian i32 packed into a byte pool slice
+/// (i32 accumulator stashes live inside the int8 pool; alignment-free).
+#[inline]
+pub fn get_i32(buf: &[i8], idx: usize) -> i32 {
+    let o = idx * 4;
+    i32::from_le_bytes([buf[o] as u8, buf[o + 1] as u8, buf[o + 2] as u8, buf[o + 3] as u8])
+}
+
+/// Write the `idx`-th little-endian i32 into a byte pool slice.
+#[inline]
+pub fn set_i32(buf: &mut [i8], idx: usize, v: i32) {
+    let b = v.to_le_bytes();
+    let o = idx * 4;
+    buf[o] = b[0] as i8;
+    buf[o + 1] = b[1] as i8;
+    buf[o + 2] = b[2] as i8;
+    buf[o + 3] = b[3] as i8;
+}
+
+/// int8 twin of [`super::conv2d_into`]: i8 in, i32 accumulation of
+/// `(x - zp_x)(w - zp_w)`, one fused f32 epilogue per output element
+/// (`acc · s_x·s_w + bias`, activation clamp, requantize) — no
+/// intermediate dequantized map ever exists.
+#[allow(clippy::too_many_arguments)]
+pub fn qconv2d_into(
+    x: QMapRef<'_>,
+    x_qp: QParams,
+    p: &QLayerParams,
+    k: usize,
+    stride: usize,
+    padding: usize,
+    cout: usize,
+    act: Activation,
+    out_qp: QParams,
+    out: &mut [i8],
+) {
+    let cin = x.c;
+    let ho = (x.h + 2 * padding - k) / stride + 1;
+    let wo = (x.w + 2 * padding - k) / stride + 1;
+    debug_assert!(out.len() >= ho * wo * cout, "output buffer too small");
+    let zx = x_qp.zero_point;
+    let zw = p.w_qp.zero_point;
+    let real_scale = x_qp.scale * p.w_qp.scale;
+
+    for oy in 0..ho {
+        for ox in 0..wo {
+            for co in 0..cout {
+                let mut acc: i32 = 0;
+                for ky in 0..k {
+                    let sy = (oy * stride + ky) as isize - padding as isize;
+                    if sy < 0 || sy as usize >= x.h {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let sx = (ox * stride + kx) as isize - padding as isize;
+                        if sx < 0 || sx as usize >= x.w {
+                            continue;
+                        }
+                        let xoff = ((sy as usize) * x.w + sx as usize) * cin;
+                        let woff = (ky * k + kx) * cin * cout;
+                        for ci in 0..cin {
+                            let xv = x.data[xoff + ci] as i32 - zx;
+                            let wv = p.w_q[woff + ci * cout + co] as i32 - zw;
+                            acc += xv * wv;
+                        }
+                    }
+                }
+                let real = qact(acc as f32 * real_scale + p.bias[co], act);
+                out[(oy * wo + ox) * cout + co] = out_qp.quantize(real);
+            }
+        }
+    }
+}
+
+/// int8 twin of [`super::dwconv2d_into`] (`[k,k,c]` weight layout).
+#[allow(clippy::too_many_arguments)]
+pub fn qdwconv2d_into(
+    x: QMapRef<'_>,
+    x_qp: QParams,
+    p: &QLayerParams,
+    k: usize,
+    stride: usize,
+    padding: usize,
+    act: Activation,
+    out_qp: QParams,
+    out: &mut [i8],
+) {
+    let c = x.c;
+    let ho = (x.h + 2 * padding - k) / stride + 1;
+    let wo = (x.w + 2 * padding - k) / stride + 1;
+    debug_assert!(out.len() >= ho * wo * c, "output buffer too small");
+    let zx = x_qp.zero_point;
+    let zw = p.w_qp.zero_point;
+    let real_scale = x_qp.scale * p.w_qp.scale;
+
+    for oy in 0..ho {
+        for ox in 0..wo {
+            for ci in 0..c {
+                let mut acc: i32 = 0;
+                for ky in 0..k {
+                    let sy = (oy * stride + ky) as isize - padding as isize;
+                    if sy < 0 || sy as usize >= x.h {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let sx = (ox * stride + kx) as isize - padding as isize;
+                        if sx < 0 || sx as usize >= x.w {
+                            continue;
+                        }
+                        let xoff = ((sy as usize) * x.w + sx as usize) * c;
+                        let woff = (ky * k + kx) * c;
+                        let xv = x.data[xoff + ci] as i32 - zx;
+                        let wv = p.w_q[woff + ci] as i32 - zw;
+                        acc += xv * wv;
+                    }
+                }
+                let real = qact(acc as f32 * real_scale + p.bias[ci], act);
+                out[(oy * wo + ox) * c + ci] = out_qp.quantize(real);
+            }
+        }
+    }
+}
+
+/// int8 twin of [`super::avg_pool2d_into`] (unpadded): i32 window sum of
+/// raw q values, one epilogue per output element.
+pub fn qavg_pool2d_into(
+    x: QMapRef<'_>,
+    x_qp: QParams,
+    k: usize,
+    stride: usize,
+    out_qp: QParams,
+    out: &mut [i8],
+) {
+    let c = x.c;
+    let ho = (x.h - k) / stride + 1;
+    let wo = (x.w - k) / stride + 1;
+    debug_assert!(out.len() >= ho * wo * c, "output buffer too small");
+    let count = (k * k) as f32;
+    let zx = x_qp.zero_point as f32;
+    for oy in 0..ho {
+        for ox in 0..wo {
+            for ci in 0..c {
+                let mut sum: i32 = 0;
+                for ky in 0..k {
+                    for kx in 0..k {
+                        let xoff = ((oy * stride + ky) * x.w + ox * stride + kx) * c;
+                        sum += x.data[xoff + ci] as i32;
+                    }
+                }
+                let real = (sum as f32 - count * zx) * x_qp.scale / count;
+                out[(oy * wo + ox) * c + ci] = out_qp.quantize(real);
+            }
+        }
+    }
+}
+
+/// int8 twin of [`super::max_pool2d_into`]: max over raw q values (the
+/// max is monotone under one affine map), then a single requantize.
+pub fn qmax_pool2d_into(
+    x: QMapRef<'_>,
+    x_qp: QParams,
+    k: usize,
+    stride: usize,
+    out_qp: QParams,
+    out: &mut [i8],
+) {
+    let c = x.c;
+    let ho = (x.h - k) / stride + 1;
+    let wo = (x.w - k) / stride + 1;
+    debug_assert!(out.len() >= ho * wo * c, "output buffer too small");
+    for oy in 0..ho {
+        for ox in 0..wo {
+            for ci in 0..c {
+                let mut m: i8 = i8::MIN;
+                for ky in 0..k {
+                    for kx in 0..k {
+                        let xoff = ((oy * stride + ky) * x.w + ox * stride + kx) * c;
+                        m = m.max(x.data[xoff + ci]);
+                    }
+                }
+                out[(oy * wo + ox) * c + ci] = out_qp.quantize(x_qp.dequantize(m));
+            }
+        }
+    }
+}
+
+/// int8 twin of [`super::dense_into`] (`[din][dout]` weight layout):
+/// one i32 dot product + fused epilogue per output scalar, written
+/// straight to i8 — dense accumulators never materialize.
+pub fn qdense_into(
+    x: &[i8],
+    x_qp: QParams,
+    p: &QLayerParams,
+    dout: usize,
+    out_qp: QParams,
+    out: &mut [i8],
+) {
+    debug_assert!(out.len() >= dout, "output buffer too small");
+    let zx = x_qp.zero_point;
+    let zw = p.w_qp.zero_point;
+    let real_scale = x_qp.scale * p.w_qp.scale;
+    for (j, o) in out.iter_mut().take(dout).enumerate() {
+        let mut acc: i32 = 0;
+        for (i, &xq) in x.iter().enumerate() {
+            let xv = xq as i32 - zx;
+            let wv = p.w_q[i * dout + j] as i32 - zw;
+            acc += xv * wv;
+        }
+        *o = out_qp.quantize(acc as f32 * real_scale + p.bias[j]);
+    }
+}
+
+/// Zero the i32 global-pool accumulator region (`4*c` leading bytes of
+/// `acc`) — the quantized twin of `acc.fill(0.0)`.
+pub fn qgap_reset(acc: &mut [i8], c: usize) {
+    debug_assert!(acc.len() >= 4 * c, "accumulator region too small");
+    acc[..4 * c].fill(0);
+}
+
+/// Add one row-major row of raw q values into the i32 accumulator
+/// region — the quantized twin of [`super::accumulate_row_major`].
+pub fn qgap_accumulate(acc: &mut [i8], row: &[i8], c: usize) {
+    debug_assert_eq!(row.len() % c, 0, "row not channel-aligned");
+    for chunk in row.chunks_exact(c) {
+        for (ci, &v) in chunk.iter().enumerate() {
+            set_i32(acc, ci, get_i32(acc, ci) + v as i32);
+        }
+    }
+}
+
+/// Finish a global average pool: turn each channel's raw-q i32 sum over
+/// `n_pixels` into `scale·(sum/n − zp)`, requantized under `out_qp`
+/// into the first `c` bytes of `acc` (the i8 payload convention of
+/// [`crate::qexec::QPlanPool`] buffers).
+pub fn qgap_finish(acc: &mut [i8], c: usize, n_pixels: usize, x_qp: QParams, out_qp: QParams) {
+    debug_assert!(acc.len() >= 4 * c && n_pixels > 0);
+    let n = n_pixels as f32;
+    let zx = x_qp.zero_point as f32;
+    for ci in 0..c {
+        // Reads of entry `ci` (bytes [4ci, 4ci+4)) always stay ahead of
+        // the payload writes (byte ci), so the in-place finish is safe.
+        let sum = get_i32(acc, ci);
+        let real = (sum as f32 - n * zx) * x_qp.scale / n;
+        acc[ci] = out_qp.quantize(real);
+    }
+}
+
+/// Cross-span residual add on i8 payloads: `out += stash` in real
+/// space, requantized back under `out`'s own parameters (the one place
+/// the quantized path multiplies by a scale outside an epilogue —
+/// exactly one dequant/requant pair per skip connection, matching the
+/// f32 engine's post-kernel add).
+pub fn qresidual_add(out: &mut [i8], out_qp: QParams, stash: &[i8], stash_qp: QParams) {
+    for (o, &s) in out.iter_mut().zip(stash) {
+        let real = out_qp.dequantize(*o) + stash_qp.dequantize(s);
+        *o = out_qp.quantize(real);
     }
 }
 
@@ -103,45 +481,23 @@ pub fn qconv2d(
     out_qp: QParams,
     relu6: bool,
 ) -> QTensor {
-    let cin = x.c;
     let ho = (x.h + 2 * padding - k) / stride + 1;
     let wo = (x.w + 2 * padding - k) / stride + 1;
     let mut out = vec![0i8; ho * wo * cout];
-    let x_zp = x.qp.zero_point;
-    let w_zp = w_qp.zero_point;
-    let real_scale = x.qp.scale * w_qp.scale;
-
-    for oy in 0..ho {
-        for ox in 0..wo {
-            for co in 0..cout {
-                let mut acc: i32 = 0;
-                for ky in 0..k {
-                    let sy = (oy * stride + ky) as isize - padding as isize;
-                    if sy < 0 || sy as usize >= x.h {
-                        continue;
-                    }
-                    for kx in 0..k {
-                        let sx = (ox * stride + kx) as isize - padding as isize;
-                        if sx < 0 || sx as usize >= x.w {
-                            continue;
-                        }
-                        let xoff = ((sy as usize) * x.w + sx as usize) * cin;
-                        let woff = (ky * k + kx) * cin * cout;
-                        for ci in 0..cin {
-                            let xv = x.data[xoff + ci] as i32 - x_zp;
-                            let wv = w_q[woff + ci * cout + co] as i32 - w_zp;
-                            acc += xv * wv;
-                        }
-                    }
-                }
-                let mut real = acc as f32 * real_scale + bias[co];
-                if relu6 {
-                    real = real.clamp(0.0, 6.0);
-                }
-                out[(oy * wo + ox) * cout + co] = out_qp.quantize(real);
-            }
-        }
-    }
+    let p = QLayerParams { w_q: w_q.to_vec(), w_qp, bias: bias.to_vec() };
+    let act = if relu6 { Activation::Relu6 } else { Activation::None };
+    qconv2d_into(
+        QMapRef::new(x.h, x.w, x.c, &x.data),
+        x.qp,
+        &p,
+        k,
+        stride,
+        padding,
+        cout,
+        act,
+        out_qp,
+        &mut out,
+    );
     QTensor { h: ho, w: wo, c: cout, data: out, qp: out_qp }
 }
 
@@ -149,7 +505,7 @@ pub fn qconv2d(
 mod tests {
     use super::*;
     use crate::model::Activation;
-    use crate::ops::{conv2d, ParamGen};
+    use crate::ops::{avg_pool2d, conv2d, dense, dwconv2d, max_pool2d, ParamGen};
 
     #[test]
     fn quantize_roundtrip_error_bounded() {
@@ -215,5 +571,149 @@ mod tests {
         for v in &deq.data {
             assert!((v - 1.0).abs() < 0.03, "{v}");
         }
+    }
+
+    fn quantized_pair(seed: u64, n_x: usize, n_w: usize, n_b: usize) -> (Tensor, Vec<f32>, Vec<f32>) {
+        let mut g = ParamGen::new(seed);
+        (
+            Tensor::from_data(1, 1, n_x, g.fill(n_x, 2.0)),
+            g.fill(n_w, 0.5),
+            g.fill(n_b, 0.1),
+        )
+    }
+
+    #[test]
+    fn qdwconv_into_matches_f32_within_quant_error() {
+        let mut g = ParamGen::new(9);
+        let x = Tensor::from_data(9, 9, 4, g.fill(9 * 9 * 4, 2.0));
+        let w = g.fill(3 * 3 * 4, 0.6);
+        let b = g.fill(4, 0.1);
+        let f = dwconv2d(&x, &w, &b, 3, 1, 1, Activation::Relu6);
+
+        let xq = QTensor::quantize(&x);
+        let w_qp = QParams::observe(&w);
+        let p = QLayerParams::from_params(&LayerParams { weights: w, bias: b }, w_qp);
+        let out_qp = QParams::observe(&f.data);
+        let mut out = vec![0i8; f.elems()];
+        qdwconv2d_into(
+            QMapRef::new(9, 9, 4, &xq.data),
+            xq.qp,
+            &p,
+            3,
+            1,
+            1,
+            Activation::Relu6,
+            out_qp,
+            &mut out,
+        );
+        let mut deq = vec![0.0f32; out.len()];
+        dequantize_into(&out, out_qp, &mut deq);
+        let max_err = deq
+            .iter()
+            .zip(&f.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        let tol = 6.0 * out_qp.scale + 0.05;
+        assert!(max_err < tol, "max_err {max_err} vs tol {tol}");
+    }
+
+    #[test]
+    fn qpool_twins_match_f32_within_quant_error() {
+        let mut g = ParamGen::new(11);
+        let x = Tensor::from_data(8, 8, 3, g.fill(8 * 8 * 3, 3.0));
+        let xq = QTensor::quantize(&x);
+        let xm = QMapRef::new(8, 8, 3, &xq.data);
+
+        let favg = avg_pool2d(&x, 2, 2);
+        let aqp = QParams::observe(&favg.data);
+        let mut qa = vec![0i8; favg.elems()];
+        qavg_pool2d_into(xm, xq.qp, 2, 2, aqp, &mut qa);
+        for (q, f) in qa.iter().zip(&favg.data) {
+            assert!((aqp.dequantize(*q) - f).abs() < 2.0 * aqp.scale + 2.0 * xq.qp.scale);
+        }
+
+        let fmax = max_pool2d(&x, 2, 2);
+        let mqp = QParams::observe(&fmax.data);
+        let mut qm = vec![0i8; fmax.elems()];
+        qmax_pool2d_into(xm, xq.qp, 2, 2, mqp, &mut qm);
+        for (q, f) in qm.iter().zip(&fmax.data) {
+            assert!((mqp.dequantize(*q) - f).abs() < 2.0 * mqp.scale + 2.0 * xq.qp.scale);
+        }
+    }
+
+    #[test]
+    fn qdense_into_matches_f32_within_quant_error() {
+        let (x, w, b) = quantized_pair(13, 24, 24 * 10, 10);
+        let f = dense(&x.data, &w, &b, 10);
+        let xq = QTensor::quantize(&x);
+        let w_qp = QParams::observe(&w);
+        let p = QLayerParams::from_params(&LayerParams { weights: w, bias: b }, w_qp);
+        let out_qp = QParams::observe(&f);
+        let mut out = vec![0i8; 10];
+        qdense_into(&xq.data, xq.qp, &p, 10, out_qp, &mut out);
+        for (q, fv) in out.iter().zip(&f) {
+            let err = (out_qp.dequantize(*q) - fv).abs();
+            let tol = 6.0 * out_qp.scale + 0.05;
+            assert!(err < tol, "err {err} vs tol {tol}");
+        }
+    }
+
+    #[test]
+    fn i32_pool_packing_roundtrips() {
+        let mut buf = vec![0i8; 16];
+        for (i, v) in [0, -1, i32::MAX, i32::MIN].into_iter().enumerate() {
+            set_i32(&mut buf, i, v);
+        }
+        assert_eq!(get_i32(&buf, 0), 0);
+        assert_eq!(get_i32(&buf, 1), -1);
+        assert_eq!(get_i32(&buf, 2), i32::MAX);
+        assert_eq!(get_i32(&buf, 3), i32::MIN);
+    }
+
+    #[test]
+    fn qgap_streaming_matches_direct_mean() {
+        let mut g = ParamGen::new(17);
+        let x = Tensor::from_data(5, 4, 3, g.fill(60, 2.0));
+        let xq = QTensor::quantize(&x);
+        let mean: Vec<f32> = (0..3)
+            .map(|ci| {
+                (0..5)
+                    .flat_map(|y| (0..4).map(move |xx| (y, xx)))
+                    .map(|(y, xx)| x.at(y, xx, ci))
+                    .sum::<f32>()
+                    / 20.0
+            })
+            .collect();
+        let out_qp = QParams::observe(&mean);
+        let mut acc = vec![0i8; 12];
+        qgap_reset(&mut acc, 3);
+        for row in xq.data.chunks_exact(4 * 3) {
+            qgap_accumulate(&mut acc, row, 3);
+        }
+        qgap_finish(&mut acc, 3, 20, xq.qp, out_qp);
+        for (ci, m) in mean.iter().enumerate() {
+            let err = (out_qp.dequantize(acc[ci]) - m).abs();
+            assert!(err < 2.0 * out_qp.scale + 2.0 * xq.qp.scale, "ch {ci}: {err}");
+        }
+    }
+
+    #[test]
+    fn band_read_fills_padding_with_zero_point() {
+        let data: Vec<i8> = vec![1, 2, 3, 4, 5, 6];
+        let m = QMapRef::new(3, 2, 1, &data);
+        let mut buf = vec![9i8; 6];
+        m.read_band_into(2, 3, &mut buf, -7);
+        assert_eq!(buf, vec![5, 6, -7, -7, -7, -7]);
+    }
+
+    #[test]
+    fn qresidual_add_matches_real_addition() {
+        let a_qp = QParams::from_range(-2.0, 2.0);
+        let b_qp = QParams::from_range(-1.0, 1.0);
+        let mut out = vec![a_qp.quantize(0.5), a_qp.quantize(-1.0)];
+        let stash = vec![b_qp.quantize(0.25), b_qp.quantize(0.75)];
+        qresidual_add(&mut out, a_qp, &stash, b_qp);
+        assert!((a_qp.dequantize(out[0]) - 0.75).abs() < 2.0 * a_qp.scale + b_qp.scale);
+        assert!((a_qp.dequantize(out[1]) + 0.25).abs() < 2.0 * a_qp.scale + b_qp.scale);
     }
 }

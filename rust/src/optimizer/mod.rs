@@ -33,7 +33,7 @@ pub mod strategy;
 
 pub use batch::{PlanBatch, PlanJob, PlanObjective, PlanOutcome};
 pub use exhaustive::{exhaustive_p1, exhaustive_p2};
-pub use planner::{Plan, PlanLatency, Planner};
+pub use planner::{Plan, PlanArtifact, PlanLatency, Planner};
 pub use setting::{FusionSetting, SettingCost};
 pub use strategy::{Constraint, Constraints, LatencyBound, PlanStrategy};
 

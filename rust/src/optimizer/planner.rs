@@ -14,6 +14,7 @@ use crate::fusion::{CacheScheme, CostMemo};
 use crate::graph::{DagOptions, FusionDag};
 use crate::memory::{plan_layout, PoolBuffer, PoolLayout};
 use crate::model::ModelChain;
+use crate::ops::{QParams, QuantSpec};
 use crate::util::error::{Context, Result};
 use crate::util::json::{escape, Json};
 use crate::{anyhow, bail};
@@ -32,6 +33,18 @@ pub struct PlanLatency {
     /// Estimated inference latency in milliseconds
     /// ([`crate::mcu::estimate_latency_ms`]).
     pub estimate_ms: f64,
+}
+
+/// Reference to a [`crate::runtime`] artifact directory backing a plan:
+/// the model (and, at serving time, its parameters) resolve through the
+/// AOT manifest instead of the zoo, so a plan file can ship alongside
+/// compiled artifacts as one self-contained deploy bundle.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlanArtifact {
+    /// Artifact directory holding `manifest.json` (+ `weights.json`).
+    pub dir: String,
+    /// Manifest entry this plan executes (must exist in the manifest).
+    pub entry: String,
 }
 
 /// A solved, serializable fusion plan: the concrete [`FusionSetting`] plus
@@ -61,6 +74,16 @@ pub struct Plan {
     /// `None` on plan JSON written before the compile-once refactor
     /// (old files still load; the layout is recomputed at compile time).
     pub pool: Option<PoolLayout>,
+    /// Calibrated per-tensor/per-weight quantization parameters
+    /// ([`crate::qexec::calibrate`]). `Some` marks this as a quantized
+    /// deploy artifact: serving lowers it through
+    /// [`crate::qexec::QCompiledPlan`] (int8 pool) instead of the f32
+    /// [`crate::exec::CompiledPlan`].
+    pub quant: Option<QuantSpec>,
+    /// When set, the model resolves through this [`crate::runtime`]
+    /// artifact directory ([`Plan::resolve_model`]) instead of
+    /// [`crate::zoo::by_name`].
+    pub artifact: Option<PlanArtifact>,
     /// The solved fusion setting (spans + encoded costs).
     pub setting: FusionSetting,
 }
@@ -123,6 +146,13 @@ impl Plan {
                 l.estimate_ms
             ));
         }
+        if let Some(a) = &self.artifact {
+            out.push_str(&format!(
+                "  \"artifact\": {{\"dir\": \"{}\", \"entry\": \"{}\"}},\n",
+                escape(&a.dir),
+                escape(&a.entry)
+            ));
+        }
         if let Some(p) = &self.pool {
             out.push_str(&format!(
                 "  \"pool\": {{\"pool_bytes\": {}, \"watermark\": {}, \"buffers\": [\n",
@@ -133,10 +163,12 @@ impl Plan {
                 .iter()
                 .map(|b| {
                     format!(
-                        "    {{\"label\": \"{}\", \"offset\": {}, \"bytes\": {}, \"birth\": {}, \"death\": {}}}",
+                        "    {{\"label\": \"{}\", \"offset\": {}, \"bytes\": {}, \"elems\": {}, \"elem_bytes\": {}, \"birth\": {}, \"death\": {}}}",
                         escape(&b.label),
                         b.offset,
                         b.bytes,
+                        b.elems,
+                        b.elem_bytes,
                         b.birth,
                         b.death
                     )
@@ -144,6 +176,18 @@ impl Plan {
                 .collect();
             out.push_str(&rows.join(",\n"));
             out.push_str("\n  ]},\n");
+        }
+        if let Some(q) = &self.quant {
+            fn qrow(p: &QParams) -> String {
+                format!("{{\"scale\": {}, \"zero_point\": {}}}", p.scale, p.zero_point)
+            }
+            let tensors: Vec<String> = q.tensors.iter().map(qrow).collect();
+            let weights: Vec<String> = q.weights.iter().map(qrow).collect();
+            out.push_str(&format!(
+                "  \"quant\": {{\n    \"tensors\": [{}],\n    \"weights\": [{}]\n  }},\n",
+                tensors.join(", "),
+                weights.join(", ")
+            ));
         }
         out.push_str("  \"setting\": {\n");
         let path: Vec<String> = self.setting.path.iter().map(|e| e.to_string()).collect();
@@ -254,11 +298,73 @@ impl Plan {
                         .to_string();
                     let offset = uint(bv, "offset", "pool buffer")?;
                     let bytes = uint(bv, "bytes", "pool buffer")?;
+                    // Width fields arrived with the quantized-execution
+                    // schema; absent means "undeclared" (legacy layouts),
+                    // which verify_layout treats as making no width claim.
+                    let elems = match bv.get("elems") {
+                        None | Some(Json::Null) => 0,
+                        Some(_) => uint(bv, "elems", "pool buffer")?,
+                    };
+                    let elem_bytes = match bv.get("elem_bytes") {
+                        None | Some(Json::Null) => 0,
+                        Some(_) => uint(bv, "elem_bytes", "pool buffer")? as u32,
+                    };
                     let birth = uint(bv, "birth", "pool buffer")? as usize;
                     let death = uint(bv, "death", "pool buffer")? as usize;
-                    buffers.push(PoolBuffer { label, offset, bytes, birth, death });
+                    buffers.push(PoolBuffer { label, offset, bytes, elems, elem_bytes, birth, death });
                 }
                 Some(PoolLayout { buffers, pool_bytes, watermark })
+            }
+        };
+
+        let artifact = match root.get("artifact") {
+            None | Some(Json::Null) => None,
+            Some(v) => {
+                let field = |key: &str| -> Result<String> {
+                    Ok(v.get(key)
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("plan json: 'artifact' missing '{key}'"))?
+                        .to_string())
+                };
+                Some(PlanArtifact { dir: field("dir")?, entry: field("entry")? })
+            }
+        };
+
+        let quant = match root.get("quant") {
+            None | Some(Json::Null) => None,
+            Some(v) => {
+                let parse_params = |key: &str| -> Result<Vec<QParams>> {
+                    v.get(key)
+                        .and_then(Json::as_arr)
+                        .ok_or_else(|| anyhow!("plan json: 'quant' missing '{key}'"))?
+                        .iter()
+                        .map(|e| {
+                            let scale = e
+                                .get("scale")
+                                .and_then(Json::as_f64)
+                                .ok_or_else(|| {
+                                    anyhow!("plan json: 'quant.{key}' entry missing 'scale'")
+                                })? as f32;
+                            if !(scale > 0.0 && scale.is_finite()) {
+                                bail!("plan json: 'quant.{key}' scale {scale} is not positive finite");
+                            }
+                            let zp = e
+                                .get("zero_point")
+                                .and_then(Json::as_f64)
+                                .ok_or_else(|| {
+                                    anyhow!("plan json: 'quant.{key}' entry missing 'zero_point'")
+                                })?;
+                            if zp.fract() != 0.0 || !(-128.0..=127.0).contains(&zp) {
+                                bail!("plan json: 'quant.{key}' zero_point {zp} is not an i8 value");
+                            }
+                            Ok(QParams { scale, zero_point: zp as i32 })
+                        })
+                        .collect()
+                };
+                Some(QuantSpec {
+                    tensors: parse_params("tensors")?,
+                    weights: parse_params("weights")?,
+                })
             }
         };
 
@@ -317,6 +423,8 @@ impl Plan {
             max_depth,
             latency,
             pool,
+            quant,
+            artifact,
             setting: FusionSetting { path, spans, cost },
         };
         plan.validate()?;
@@ -365,7 +473,8 @@ impl Plan {
         Ok(())
     }
 
-    /// Validate against a concrete model (span coverage of all layers).
+    /// Validate against a concrete model (span coverage of all layers,
+    /// quant spec arity).
     pub fn validate_for(&self, model: &ModelChain) -> Result<()> {
         self.validate()?;
         let end = self.setting.spans.last().map(|&(_, b, _)| b).unwrap_or(0);
@@ -377,7 +486,58 @@ impl Plan {
                 model.num_layers()
             );
         }
+        if let Some(q) = &self.quant {
+            let n = model.num_layers();
+            if q.tensors.len() != n + 1 || q.weights.len() != n {
+                bail!(
+                    "plan for '{}': quant spec has {} tensor / {} weight params but model '{}' needs {} / {}",
+                    self.model,
+                    q.tensors.len(),
+                    q.weights.len(),
+                    model.name,
+                    n + 1,
+                    n
+                );
+            }
+        }
         Ok(())
+    }
+
+    /// Attach a calibrated [`QuantSpec`] (builder-style), marking this
+    /// plan as an int8 deploy artifact: serving routes it through
+    /// [`crate::qexec::QCompiledPlan`] and the spec rides along in the
+    /// plan JSON, so the artifact fully determines its own numerics.
+    pub fn with_quant(mut self, spec: QuantSpec) -> Plan {
+        self.quant = Some(spec);
+        self
+    }
+
+    /// Resolve the model this plan executes. Artifact-backed plans
+    /// (`artifact` set) load through the referenced [`crate::runtime`]
+    /// directory — the entry must exist in its `manifest.json`; plain
+    /// plans resolve `model` via [`crate::zoo::by_name`].
+    pub fn resolve_model(&self) -> Result<ModelChain> {
+        if let Some(art) = &self.artifact {
+            let manifest = crate::runtime::ArtifactManifest::load(
+                Path::new(&art.dir).join("manifest.json"),
+            )
+            .with_context(|| format!("plan '{}': loading artifact manifest", self.model))?;
+            if !manifest.entries.contains_key(&art.entry) {
+                bail!(
+                    "plan '{}': artifact dir '{}' has no entry '{}' (entries: {})",
+                    self.model,
+                    art.dir,
+                    art.entry,
+                    manifest.entries.keys().cloned().collect::<Vec<_>>().join(", ")
+                );
+            }
+            let engine = crate::exec::Engine::quickstart_from_artifacts(&art.dir)
+                .with_context(|| format!("plan '{}': loading artifact-backed model", self.model))?;
+            Ok(engine.model().clone())
+        } else {
+            crate::zoo::by_name(&self.model)
+                .ok_or_else(|| anyhow!("plan references unknown model '{}'", self.model))
+        }
     }
 
     /// Write the plan JSON to `path`.
@@ -522,6 +682,8 @@ impl Planner {
             max_depth: self.options.max_depth,
             latency,
             pool,
+            quant: None,
+            artifact: None,
             setting,
         }
     }
@@ -815,5 +977,90 @@ mod tests {
         assert!(Plan::from_json("not json").is_err());
         assert!(Plan::from_json("{}").is_err());
         assert!(Plan::load("/nonexistent/plan.json").is_err());
+    }
+
+    #[test]
+    fn quant_spec_and_buffer_widths_roundtrip_through_json() {
+        let m = zoo::quickstart();
+        let params: Vec<crate::ops::LayerParams> = m
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| crate::ops::LayerParams::for_layer(l, i))
+            .collect();
+        let spec = crate::qexec::calibrate_default(&m, &params);
+        let plan = Planner::for_model(m.clone()).plan().unwrap().with_quant(spec);
+        plan.validate_for(&m).unwrap();
+
+        let text = plan.to_json();
+        assert!(text.contains("\"quant\""), "{text}");
+        let back = Plan::from_json(&text).unwrap();
+        assert_eq!(back, plan, "quant spec or widths lost in the round trip");
+
+        // The serialized layout carries the mixed Eq. 5/6 element widths.
+        let pool = back.pool.as_ref().unwrap();
+        assert!(pool.buffers.iter().all(|b| b.elems > 0));
+        assert!(pool.buffers.iter().any(|b| b.elem_bytes == 1));
+        assert!(pool.buffers.iter().any(|b| b.elem_bytes == 4));
+
+        // Wrong-arity quant specs are rejected against the model.
+        let mut bad = plan.clone();
+        bad.quant.as_mut().unwrap().tensors.pop();
+        assert!(bad.validate_for(&m).is_err());
+
+        // Corrupt quant numbers are parse errors, not silent saturation.
+        let mut zp_broken = plan.clone();
+        zp_broken.quant.as_mut().unwrap().tensors[0].zero_point = 900;
+        assert!(Plan::from_json(&zp_broken.to_json()).is_err());
+    }
+
+    #[test]
+    fn width_inconsistent_pool_is_rejected_naming_the_buffer() {
+        let mut plan = Planner::for_model(zoo::quickstart()).plan().unwrap();
+        let victim = {
+            let p = plan.pool.as_mut().unwrap();
+            // Claim f32-wide elements behind an int8-sized byte count.
+            p.buffers[0].elem_bytes *= 4;
+            p.buffers[0].label.clone()
+        };
+        let err = format!("{:#}", plan.validate().unwrap_err());
+        assert!(err.contains("width-mismatch"), "{err}");
+        assert!(err.contains(&victim), "finding must name '{victim}':\n{err}");
+    }
+
+    #[test]
+    fn artifact_backed_plans_roundtrip_and_resolve() {
+        let mut plan = Planner::for_model(zoo::quickstart()).plan().unwrap();
+        plan.artifact =
+            Some(PlanArtifact { dir: "artifacts".to_string(), entry: "model_vanilla".to_string() });
+        let back = Plan::from_json(&plan.to_json()).unwrap();
+        assert_eq!(back, plan, "artifact reference lost in the round trip");
+
+        // Plain plans resolve through the zoo by canonical name.
+        let zoo_plan = Planner::for_model(zoo::tiny_cnn()).plan().unwrap();
+        assert_eq!(zoo_plan.resolve_model().unwrap().name, zoo::tiny_cnn().name);
+
+        // A dangling artifact directory is an error, not a zoo fallback.
+        let mut dangling = zoo_plan.clone();
+        dangling.artifact = Some(PlanArtifact {
+            dir: "/nonexistent/artifacts".to_string(),
+            entry: "model_vanilla".to_string(),
+        });
+        assert!(dangling.resolve_model().is_err());
+
+        // Full resolution when the AOT artifacts have been built.
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        let built = std::path::Path::new(dir).join("manifest.json").exists()
+            && std::path::Path::new(dir).join("weights.json").exists();
+        if built {
+            let mut real = Planner::for_model(zoo::quickstart()).plan().unwrap();
+            real.artifact =
+                Some(PlanArtifact { dir: dir.to_string(), entry: "model_vanilla".to_string() });
+            assert_eq!(real.resolve_model().unwrap().name, "quickstart");
+            // Entries absent from the manifest are rejected by name.
+            real.artifact.as_mut().unwrap().entry = "no_such_entry".to_string();
+            let err = format!("{:#}", real.resolve_model().unwrap_err());
+            assert!(err.contains("no_such_entry"), "{err}");
+        }
     }
 }

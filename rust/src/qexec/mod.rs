@@ -1,0 +1,42 @@
+//! `qexec` — end-to-end int8 compiled execution.
+//!
+//! The f32 stack ([`crate::exec`]) *prices* RAM as if activations were
+//! int8 (the paper's Eq. 5/6 accounting, `elem_bytes = 1`) while
+//! executing in f32. This module closes that gap: it lowers a
+//! `(ModelChain, FusionSetting)` into a [`QCompiledPlan`] whose pool is
+//! an actual byte array — activations stored at 1 byte per element, i32
+//! accumulator stashes at 4 — so the measured pool watermark **is** the
+//! analytic Eq. 5/6 peak, not a scaled proxy of it.
+//!
+//! Pipeline:
+//!
+//! 1. **Calibrate** ([`calibrate`] / [`calibrate_default`]): a vanilla
+//!    f32 forward pass observes every boundary tensor's dynamic range
+//!    and derives per-tensor asymmetric [`crate::ops::QParams`]
+//!    (`real = scale · (q − zp)`), plus per-layer weight params.
+//! 2. **Compile** ([`QCompiledPlan::compile`]): the same schedule replay
+//!    and step lowering as the f32 [`crate::exec::CompiledPlan`], but
+//!    offsets are assigned over byte-granular intervals and every kernel
+//!    is the int8 twin from [`crate::ops::quant`] — i8 in, i32
+//!    accumulate, fused requantize-to-i8 epilogue folding the ReLU
+//!    clamps. No per-element dequantize anywhere between the input
+//!    quantization and the logits dequantization.
+//! 3. **Serve** ([`QCompiledPlan::run_into`] over a warm
+//!    [`QPlanPool`]): allocation-free, including the f32→i8 input
+//!    quantization (preallocated staging buffer).
+//!
+//! Parity oracle: the interpreted f32 [`crate::exec::Engine`]. Compiled
+//! int8 logits must land within quantization tolerance of the f32
+//! output, and the measured int8 pool peak must equal the interpreted
+//! arena peak exactly — asserted across the model zoo in
+//! `tests/qexec_parity.rs` and proved statically by
+//! `msfcnn verify --zoo` via [`crate::analysis`]'s byte-width-aware
+//! dataflow pass.
+
+mod calibrate;
+mod qband;
+mod qcompiled;
+
+pub use calibrate::{calibrate, calibrate_default};
+pub use qband::QFusedBlock;
+pub use qcompiled::{QCompiledPlan, QPlanPool};

@@ -1,0 +1,459 @@
+//! Quantized band executor: the int8 twin of [`crate::ops::FusedBlock`].
+//!
+//! Walks the identical receptive-field recursion (shared
+//! [`crate::ops::required_input`]) over an i8 band pyramid: every band
+//! holds its boundary tensor's values quantized under that tensor's own
+//! [`QParams`] (`spec.tensors[a + band_idx]`), i32 accumulation inside
+//! each layer, one fused requantize epilogue per output element. Padding
+//! rows carry the owning tensor's *zero point* (so `(x - zp)` over them
+//! is exactly 0 — the quantized image of the f32 path's zero rows), and
+//! internal residual adds dequant-add-requant row-aligned, mirroring the
+//! f32 `add_aligned`. MACs are counted with the same analytic formulas as
+//! the f32 block, so Eq. 12–15 reconciliation carries over unchanged.
+
+use crate::model::{Layer, LayerKind, ModelChain};
+use crate::ops::{
+    qact, required_input, BandGeom, BandRange, QLayerParams, QMapRef, QParams, QuantSpec,
+};
+
+/// Read-only view of one i8 band inside the pyramid.
+#[derive(Clone, Copy)]
+struct QBandIn<'a> {
+    w: usize,
+    c: usize,
+    data: &'a [i8],
+}
+
+/// Mutable view of one i8 band inside the pyramid.
+struct QBandOut<'a> {
+    h: usize,
+    w: usize,
+    c: usize,
+    data: &'a mut [i8],
+}
+
+/// Executes layers `[a, b)` of `model` patch-by-patch in int8.
+pub struct QFusedBlock<'m> {
+    model: &'m ModelChain,
+    a: usize,
+    b: usize,
+    params: &'m [QLayerParams],
+    spec: &'m QuantSpec,
+}
+
+impl<'m> QFusedBlock<'m> {
+    /// `params[i]`/`spec.tensors[i]` use absolute model indexing, same as
+    /// the f32 block's `params`.
+    pub fn new(
+        model: &'m ModelChain,
+        a: usize,
+        b: usize,
+        params: &'m [QLayerParams],
+        spec: &'m QuantSpec,
+    ) -> Self {
+        assert!(model.fusable_span(a, b), "span [{a},{b}) is not fusable");
+        Self { model, a, b, params, spec }
+    }
+
+    /// Run the block over `source` (streamed row bands, never the whole
+    /// map) inside borrowed i8 `storage` shaped by `geom` (the same
+    /// [`BandGeom`] the f32 block computes — one i8 element per byte),
+    /// calling `sink(row_index, row_data)` for each final output row.
+    /// Returns MACs performed. Zero heap allocations.
+    pub fn run_streaming_in(
+        &self,
+        source: QMapRef<'_>,
+        geom: &BandGeom,
+        storage: &mut [i8],
+        ranges: &mut [BandRange],
+        mut sink: impl FnMut(usize, &[i8]),
+    ) -> u64 {
+        let out_shape = self.model.output_of(self.b - 1);
+        let h_out = out_shape.h as usize;
+        let depth = self.b - self.a;
+        assert!(storage.len() >= geom.total_elems(), "band storage too small");
+        assert_eq!(ranges.len(), geom.dims.len(), "range scratch length mismatch");
+        let mut macs = 0u64;
+
+        for r in 0..h_out {
+            ranges[depth] = BandRange { start: r as isize, rows: 1 };
+            for idx in (0..depth).rev() {
+                ranges[idx] = required_input(&self.model.layers[self.a + idx], ranges[idx + 1]);
+            }
+            // Materialize the first band; padding rows are the input
+            // tensor's zero point, not raw 0.
+            source.read_band_into(
+                ranges[0].start,
+                ranges[0].rows,
+                &mut storage[geom.offs[0]..geom.offs[1]],
+                self.spec.tensors[self.a].zero_point as i8,
+            );
+
+            for idx in 0..depth {
+                let li = self.a + idx;
+                let layer = &self.model.layers[li];
+                let h_map = if idx + 1 < depth {
+                    self.model.input_of(li + 1).h as usize
+                } else {
+                    h_out
+                };
+                let (head, tail) = storage.split_at_mut(geom.offs[idx + 1]);
+                let (_, in_w, in_c) = geom.dims[idx];
+                let (out_rows, out_w, out_c) = geom.dims[idx + 1];
+                let in_band = QBandIn { w: in_w, c: in_c, data: &head[geom.offs[idx]..] };
+                let mut out_band = QBandOut {
+                    h: out_rows,
+                    w: out_w,
+                    c: out_c,
+                    data: &mut tail[..out_rows * out_w * out_c],
+                };
+                let in_qp = self.spec.tensors[li];
+                let out_qp = self.spec.tensors[li + 1];
+                let r_out = ranges[idx + 1];
+                let lo = (-r_out.start).max(0) as usize;
+                let hi = (h_map as isize - r_out.start).clamp(0, r_out.rows as isize) as usize;
+                macs += qband_layer(
+                    layer,
+                    &self.params[li],
+                    in_qp,
+                    out_qp,
+                    in_band,
+                    &mut out_band,
+                    lo,
+                    hi.max(lo),
+                );
+                // Rows outside the real map are the next layer's padding:
+                // fill with *this* tensor's zero point.
+                zp_outside(&mut out_band, r_out, h_map, out_qp.zero_point as i8);
+                if let Some(src) = layer.residual_from {
+                    if src >= self.a && src < self.b {
+                        let src_idx = src - self.a;
+                        let (sr, sw, sc) = geom.dims[src_idx];
+                        let src_band = QBandIn {
+                            w: sw,
+                            c: sc,
+                            data: &head[geom.offs[src_idx]..geom.offs[src_idx] + sr * sw * sc],
+                        };
+                        qadd_aligned(
+                            src_band,
+                            self.spec.tensors[src],
+                            ranges[src_idx],
+                            &mut out_band,
+                            out_qp,
+                            ranges[idx + 1],
+                        );
+                    }
+                }
+            }
+            let (out_rows, out_w, out_c) = geom.dims[depth];
+            let out_lo = geom.offs[depth];
+            sink(r, &storage[out_lo..out_lo + out_rows * out_w * out_c]);
+        }
+        macs
+    }
+}
+
+/// Compute band-local output rows `[row_lo, row_hi)` of `layer`: i32
+/// accumulate `(x - zp_x)(w - zp_w)`, fused requantize epilogue. Vertical
+/// padding is pre-materialized in the band (zero-point rows contribute
+/// 0); horizontal padding is a skipped contribution, also exactly 0.
+/// Returns MACs (same analytic formulas as the f32 `band_layer`).
+#[allow(clippy::too_many_arguments)]
+fn qband_layer(
+    layer: &Layer,
+    params: &QLayerParams,
+    x_qp: QParams,
+    out_qp: QParams,
+    in_band: QBandIn<'_>,
+    out_band: &mut QBandOut<'_>,
+    row_lo: usize,
+    row_hi: usize,
+) -> u64 {
+    let k = layer.k as usize;
+    let s = layer.stride as usize;
+    let p = layer.padding as usize;
+    let cin = in_band.c;
+    let wo = (in_band.w + 2 * p - k) / s + 1;
+    debug_assert!(out_band.w == wo && out_band.h >= row_hi);
+    let cout = out_band.c;
+    let zx = x_qp.zero_point;
+    let zw = params.w_qp.zero_point;
+    let rs = x_qp.scale * params.w_qp.scale;
+
+    match layer.kind {
+        LayerKind::Conv2d if k == 1 && p == 0 && s == 1 => {
+            // Pointwise fast path with the quantized image of the f32
+            // relu-sparsity skip: inputs at the zero point contribute 0.
+            let w = &params.w_q;
+            for oy in row_lo..row_hi {
+                for ox in 0..wo {
+                    let xoff = (oy * in_band.w + ox) * cin;
+                    let base = (oy * wo + ox) * cout;
+                    for co in 0..cout {
+                        let mut acc: i32 = 0;
+                        for ci in 0..cin {
+                            let xq = in_band.data[xoff + ci] as i32;
+                            if xq == zx {
+                                continue;
+                            }
+                            acc += (xq - zx) * (w[ci * cout + co] as i32 - zw);
+                        }
+                        let real = qact(acc as f32 * rs + params.bias[co], layer.act);
+                        out_band.data[base + co] = out_qp.quantize(real);
+                    }
+                }
+            }
+            ((row_hi - row_lo) * wo * cout * cin) as u64
+        }
+        LayerKind::Conv2d => {
+            let w = &params.w_q;
+            for oy in row_lo..row_hi {
+                for ox in 0..wo {
+                    let base = (oy * wo + ox) * cout;
+                    for co in 0..cout {
+                        let mut acc: i32 = 0;
+                        for ky in 0..k {
+                            let sy = oy * s + ky; // vertical pad already in band
+                            for kx in 0..k {
+                                let sx = (ox * s + kx) as isize - p as isize;
+                                if sx < 0 || sx as usize >= in_band.w {
+                                    continue;
+                                }
+                                let xoff = (sy * in_band.w + sx as usize) * cin;
+                                let woff = (ky * k + kx) * cin * cout;
+                                for ci in 0..cin {
+                                    let xv = in_band.data[xoff + ci] as i32 - zx;
+                                    let wv = w[woff + ci * cout + co] as i32 - zw;
+                                    acc += xv * wv;
+                                }
+                            }
+                        }
+                        let real = qact(acc as f32 * rs + params.bias[co], layer.act);
+                        out_band.data[base + co] = out_qp.quantize(real);
+                    }
+                }
+            }
+            ((row_hi - row_lo) * wo * cout * k * k * cin) as u64
+        }
+        LayerKind::DwConv2d => {
+            let w = &params.w_q;
+            for oy in row_lo..row_hi {
+                for ox in 0..wo {
+                    let base = (oy * wo + ox) * cout;
+                    for ci in 0..cin {
+                        let mut acc: i32 = 0;
+                        for ky in 0..k {
+                            let sy = oy * s + ky;
+                            for kx in 0..k {
+                                let sx = (ox * s + kx) as isize - p as isize;
+                                if sx < 0 || sx as usize >= in_band.w {
+                                    continue;
+                                }
+                                let xoff = (sy * in_band.w + sx as usize) * cin;
+                                let woff = (ky * k + kx) * cin;
+                                acc += (in_band.data[xoff + ci] as i32 - zx)
+                                    * (w[woff + ci] as i32 - zw);
+                            }
+                        }
+                        let real = qact(acc as f32 * rs + params.bias[ci], layer.act);
+                        out_band.data[base + ci] = out_qp.quantize(real);
+                    }
+                }
+            }
+            ((row_hi - row_lo) * wo * cout * k * k) as u64
+        }
+        LayerKind::AvgPool | LayerKind::MaxPool => {
+            let is_avg = matches!(layer.kind, LayerKind::AvgPool);
+            let count = (k * k) as f32;
+            let zxf = x_qp.zero_point as f32;
+            for oy in row_lo..row_hi {
+                for ox in 0..wo {
+                    let base = (oy * wo + ox) * cout;
+                    for ci in 0..cout {
+                        if is_avg {
+                            let mut sum: i32 = 0;
+                            for ky in 0..k {
+                                let sy = oy * s + ky;
+                                for kx in 0..k {
+                                    let sx = ox * s + kx; // pools are unpadded here
+                                    sum += in_band.data[(sy * in_band.w + sx) * cin + ci] as i32;
+                                }
+                            }
+                            let real = (sum as f32 - count * zxf) * x_qp.scale / count;
+                            out_band.data[base + ci] = out_qp.quantize(real);
+                        } else {
+                            let mut m: i8 = i8::MIN;
+                            for ky in 0..k {
+                                let sy = oy * s + ky;
+                                for kx in 0..k {
+                                    let sx = ox * s + kx;
+                                    m = m.max(in_band.data[(sy * in_band.w + sx) * cin + ci]);
+                                }
+                            }
+                            out_band.data[base + ci] = out_qp.quantize(x_qp.dequantize(m));
+                        }
+                    }
+                }
+            }
+            ((row_hi - row_lo) * wo * cout * k * k) as u64
+        }
+        _ => unreachable!("non-streamable layer inside fused block"),
+    }
+}
+
+/// Fill band rows whose absolute index lies outside `[0, h_map)` with the
+/// band tensor's zero point (the quantized image of `zero_outside`).
+fn zp_outside(band: &mut QBandOut<'_>, range: BandRange, h_map: usize, zp: i8) {
+    let rowlen = band.w * band.c;
+    for row in 0..range.rows {
+        let abs = range.start + row as isize;
+        if abs < 0 || abs as usize >= h_map {
+            let off = row * rowlen;
+            band.data[off..off + rowlen].fill(zp);
+        }
+    }
+}
+
+/// Row-aligned residual add on i8 payloads: dequant both sides, add in
+/// real space, requantize under the destination tensor's parameters.
+fn qadd_aligned(
+    src: QBandIn<'_>,
+    src_qp: QParams,
+    src_range: BandRange,
+    dst: &mut QBandOut<'_>,
+    dst_qp: QParams,
+    dst_range: BandRange,
+) {
+    debug_assert_eq!(src.w, dst.w);
+    debug_assert_eq!(src.c, dst.c);
+    let rowlen = dst.w * dst.c;
+    for row in 0..dst_range.rows {
+        let abs = dst_range.start + row as isize;
+        let s_row = abs - src_range.start;
+        if s_row < 0 || s_row as usize >= src_range.rows {
+            continue; // outside the stashed band: padding rows, add 0
+        }
+        let soff = s_row as usize * rowlen;
+        let doff = row * rowlen;
+        for i in 0..rowlen {
+            let real = dst_qp.dequantize(dst.data[doff + i]) + src_qp.dequantize(src.data[soff + i]);
+            dst.data[doff + i] = dst_qp.quantize(real);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Activation, Layer, TensorShape};
+    use crate::ops::{quantize_into, FusedBlock, LayerParams, ParamGen, Tensor};
+    use crate::qexec::calibrate;
+
+    fn params_for(model: &ModelChain) -> Vec<LayerParams> {
+        model.layers.iter().enumerate().map(|(i, l)| LayerParams::for_layer(l, i)).collect()
+    }
+
+    fn rand_input(shape: TensorShape, seed: u64) -> Tensor {
+        let mut g = ParamGen::new(seed);
+        let n = shape.elems() as usize;
+        Tensor::from_data(shape.h as usize, shape.w as usize, shape.c as usize, g.fill(n, 2.0))
+    }
+
+    /// Run both blocks over the full span and compare dequantized output
+    /// against f32 within a small multiple of the output step.
+    fn assert_block_parity(m: &ModelChain, seed: u64) {
+        let p = params_for(m);
+        let x = rand_input(m.shapes[0], seed);
+        let depth = m.num_layers();
+        let block = FusedBlock::new(m, 0, depth, &p);
+        let (f32_out, f32_stats) = block.run(&x);
+
+        let spec = calibrate(m, &p, &x);
+        let qp: Vec<_> = p
+            .iter()
+            .zip(&spec.weights)
+            .map(|(lp, &wq)| QLayerParams::from_params(lp, wq))
+            .collect();
+        let qblock = QFusedBlock::new(m, 0, depth, &qp, &spec);
+        let geom = block.band_geom();
+        let mut storage = vec![0i8; geom.total_elems()];
+        let mut ranges = vec![BandRange { start: 0, rows: 0 }; geom.dims.len()];
+        let mut xq = vec![0i8; x.elems()];
+        quantize_into(&x.data, spec.tensors[0], &mut xq);
+        let out_shape = m.output_of(depth - 1);
+        let (wo, co) = (out_shape.w as usize, out_shape.c as usize);
+        let mut got = vec![0i8; out_shape.elems() as usize / 1];
+        let macs = qblock.run_streaming_in(
+            QMapRef::new(x.h, x.w, x.c, &xq),
+            &geom,
+            &mut storage,
+            &mut ranges,
+            |r, row| got[r * wo * co..(r + 1) * wo * co].copy_from_slice(&row[..wo * co]),
+        );
+        assert_eq!(macs, f32_stats.macs, "quantized MAC count diverged from f32");
+
+        let out_qp = spec.tensors[depth];
+        let tol = 8.0 * out_qp.scale + 0.1;
+        let mut max_err = 0.0f32;
+        for (q, f) in got.iter().zip(&f32_out.data) {
+            max_err = max_err.max((out_qp.dequantize(*q) - f).abs());
+        }
+        assert!(max_err < tol, "{}: max_err {max_err} vs tol {tol}", m.name);
+    }
+
+    #[test]
+    fn qfused_matches_f32_block_with_padding_and_dw() {
+        let m = ModelChain::new(
+            "t",
+            TensorShape::new(16, 16, 4),
+            vec![
+                Layer::conv("c0", 3, 2, 1, 4, 8, Activation::Relu6),
+                Layer::dwconv("d1", 3, 1, 1, 8, Activation::Relu6),
+                Layer::pointwise("p2", 8, 6, Activation::None),
+            ],
+        );
+        assert_block_parity(&m, 2);
+    }
+
+    #[test]
+    fn qfused_matches_f32_block_with_pool_member() {
+        let m = ModelChain::new(
+            "t",
+            TensorShape::new(12, 12, 2),
+            vec![
+                Layer::conv("c0", 3, 1, 0, 2, 4, Activation::Relu),
+                Layer::avg_pool("pl", 2, 2, 4),
+            ],
+        );
+        assert_block_parity(&m, 3);
+    }
+
+    #[test]
+    fn qfused_handles_internal_residual() {
+        let m = ModelChain::new(
+            "res",
+            TensorShape::new(10, 10, 6),
+            vec![
+                Layer::pointwise("expand", 6, 12, Activation::Relu6),
+                Layer::dwconv("dw", 3, 1, 1, 12, Activation::Relu6),
+                Layer::pointwise("project", 12, 6, Activation::None).with_residual(0),
+            ],
+        );
+        assert_block_parity(&m, 4);
+    }
+
+    #[test]
+    fn qfused_deep_stride_chain() {
+        let m = ModelChain::new(
+            "deep",
+            TensorShape::new(33, 29, 3),
+            vec![
+                Layer::conv("c0", 3, 2, 1, 3, 4, Activation::Relu6),
+                Layer::conv("c1", 3, 1, 0, 4, 4, Activation::Relu6),
+                Layer::conv("c2", 3, 2, 1, 4, 8, Activation::None),
+                Layer::conv("c3", 1, 1, 0, 8, 5, Activation::Relu6),
+            ],
+        );
+        assert_block_parity(&m, 6);
+    }
+}

@@ -1,0 +1,827 @@
+//! Compile-once int8 execution: the quantized twin of
+//! [`crate::exec::CompiledPlan`].
+//!
+//! Consumes the **same** lowered step list (shared
+//! [`crate::exec::lower_steps`] over the same schedule replay), but
+//! offset-assigns a *byte*-granular runtime pool: activations at 1 byte
+//! per element, i32 accumulator stashes at 4 — exactly the mixed widths
+//! of the Eq. 5/6 accounting. That makes this the regime where runtime
+//! storage and analytic accounting finally coincide: the measured pool
+//! watermark ([`QCompiledPlan::measured_peak`]) *is* the accounting
+//! watermark, equal to the interpreted engine's arena peak.
+//!
+//! Payload convention: the i8 payload of a buffer occupies its leading
+//! `elems` bytes. 4-byte-wide buffers (global-pool / dense accumulators,
+//! logits) use their full extent as i32 scratch while accumulating and
+//! collapse into the i8 payload at their epilogue
+//! ([`crate::ops::qgap_finish`]); the dense chain writes i8 payloads
+//! directly — no f32 tensor ever materializes between the input
+//! quantization and the logits dequantization.
+
+use std::ops::Range;
+
+use crate::exec::{lower_steps, BufAccess, Lowered, RtBufInfo, Src, Step, StepAccess};
+use crate::memory::{assign_offsets, layout_from_schedule, schedule_intervals, PoolLayout};
+use crate::model::{Layer, LayerKind, ModelChain};
+use crate::ops::{
+    dequantize_into, qavg_pool2d_into, qconv2d_into, qdense_into, qdwconv2d_into,
+    qgap_accumulate, qgap_finish, qgap_reset, qmax_pool2d_into, qresidual_add, quantize_into,
+    BandRange, LayerParams, MapRef, QLayerParams, QMapRef, QParams, QuantSpec,
+};
+use crate::optimizer::FusionSetting;
+
+use super::qband::QFusedBlock;
+
+/// Runtime view of one pool buffer: byte offset, full byte extent, and
+/// the i8 payload element count at its head.
+#[derive(Debug, Clone, Copy)]
+struct QRtBuf {
+    off: usize,
+    /// Full byte extent (accounting bytes — equal to runtime bytes in
+    /// the int8 regime).
+    bytes: usize,
+    /// i8 payload elements at the buffer's head (`== bytes` for
+    /// activations, `bytes / 4` for accumulator-backed buffers).
+    elems: usize,
+    /// `(h, w, c)` of the payload; vectors are `(1, 1, len)`.
+    dims: (usize, usize, usize),
+}
+
+/// Schedule-derived identity (label + runtime lifetime) of a buffer.
+#[derive(Debug, Clone)]
+struct QBufMeta {
+    label: String,
+    birth: usize,
+    rt_death: usize,
+}
+
+/// The per-serving-slot mutable state of a quantized plan: the int8 byte
+/// pool, a preallocated input-quantization staging buffer, and the
+/// band-range scratch. Created once ([`QCompiledPlan::make_pool`]); the
+/// warm hot path — including the f32→i8 input quantization — never
+/// allocates again.
+pub struct QPlanPool {
+    data: Vec<i8>,
+    input_q: Vec<i8>,
+    ranges: Vec<BandRange>,
+    storage_allocs: u64,
+}
+
+impl QPlanPool {
+    /// Heap allocations since creation (pool + input staging + range
+    /// scratch = 3). Constant after [`QCompiledPlan::make_pool`]; tests
+    /// pin this across warm runs.
+    pub fn storage_allocs(&self) -> u64 {
+        self.storage_allocs
+    }
+
+    /// Bytes of int8 pool storage.
+    pub fn bytes(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Stable address of the backing storage (test hook).
+    pub fn storage_ptr(&self) -> *const i8 {
+        self.data.as_ptr()
+    }
+}
+
+/// A `(model, setting, quant spec)` triple compiled into a static int8
+/// step list + byte pool layout. Immutable after compilation; all
+/// per-run state lives in a [`QPlanPool`].
+pub struct QCompiledPlan {
+    model: ModelChain,
+    qparams: Vec<QLayerParams>,
+    spec: QuantSpec,
+    setting: FusionSetting,
+    layout: PoolLayout,
+    bufs: Vec<QRtBuf>,
+    buf_meta: Vec<QBufMeta>,
+    pool_bytes_rt: usize,
+    ranges_scratch: usize,
+    steps: Vec<Step>,
+    input_buf: Option<usize>,
+    out_buf: usize,
+    out_len: usize,
+}
+
+impl QCompiledPlan {
+    /// Compile with deterministic per-layer parameters (same generator
+    /// as [`crate::exec::Engine::new`], so the f32 parity oracle uses
+    /// the exact weights these int8 weights were quantized from).
+    pub fn compile(model: ModelChain, setting: FusionSetting, spec: QuantSpec) -> Self {
+        let params: Vec<LayerParams> = model
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| LayerParams::for_layer(l, i))
+            .collect();
+        Self::with_params(model, params, setting, spec)
+    }
+
+    /// Compile with explicit f32 parameters; weights are quantized under
+    /// `spec.weights[i]` (the calibration observation), **not**
+    /// re-observed — so a serialized spec fully determines numerics.
+    pub fn with_params(
+        model: ModelChain,
+        params: Vec<LayerParams>,
+        setting: FusionSetting,
+        spec: QuantSpec,
+    ) -> Self {
+        assert_eq!(params.len(), model.num_layers(), "params/layers mismatch");
+        assert_eq!(
+            spec.tensors.len(),
+            model.num_layers() + 1,
+            "quant spec tensors/model mismatch"
+        );
+        assert_eq!(spec.weights.len(), model.num_layers(), "quant spec weights/model mismatch");
+        assert!(!setting.spans.is_empty(), "empty fusion setting");
+
+        let sched = schedule_intervals(&model, &setting);
+        // Accounting layout — identical to the f32 plan's and to what
+        // `optimizer::Plan` serializes.
+        let layout = layout_from_schedule(&sched);
+
+        // Runtime byte layout: in the int8 regime runtime storage bytes
+        // equal accounting bytes per buffer; only the lifetimes differ
+        // (`rt_death` extends the iterative-tail read-back chain), so
+        // `pool_bytes_rt` may exceed the accounting watermark by
+        // fragmentation + extension, never the per-buffer sizing.
+        let rt_items: Vec<(u64, usize, usize)> =
+            sched.iter().map(|s| (s.bytes, s.birth, s.rt_death)).collect();
+        let (rt_offs, pool_bytes_rt) = assign_offsets(&rt_items);
+        let bufs: Vec<QRtBuf> = sched
+            .iter()
+            .zip(&rt_offs)
+            .map(|(s, &off)| QRtBuf {
+                off: off as usize,
+                bytes: s.bytes as usize,
+                elems: s.elems,
+                dims: s.dims,
+            })
+            .collect();
+        let buf_meta: Vec<QBufMeta> = sched
+            .iter()
+            .map(|s| QBufMeta { label: s.label.clone(), birth: s.birth, rt_death: s.rt_death })
+            .collect();
+
+        let qparams: Vec<QLayerParams> = params
+            .iter()
+            .zip(&spec.weights)
+            .map(|(p, &wq)| QLayerParams::from_params(p, wq))
+            .collect();
+
+        let Lowered { steps, input_buf, out_buf, ranges_scratch } =
+            lower_steps(&model, &params, &setting, &sched);
+        let out_len = bufs[out_buf].elems;
+
+        let plan = Self {
+            model,
+            qparams,
+            spec,
+            setting,
+            layout,
+            bufs,
+            buf_meta,
+            pool_bytes_rt: pool_bytes_rt as usize,
+            ranges_scratch,
+            steps,
+            input_buf,
+            out_buf,
+            out_len,
+        };
+
+        // Same compile-time promotion as the f32 plan: prove byte-level
+        // disjointness of every step's pool slices before the first run.
+        let hazards = crate::analysis::check_step_hazards(
+            &crate::analysis::AnalysisInput::from_qcompiled(&plan),
+        );
+        assert!(
+            hazards.is_clean(),
+            "quantized plan violates pool aliasing invariants:\n{}",
+            hazards.render()
+        );
+        plan
+    }
+
+    /// The accounting pool layout — byte-identical to the f32
+    /// [`crate::exec::CompiledPlan::layout`] for the same setting.
+    pub fn layout(&self) -> &PoolLayout {
+        &self.layout
+    }
+
+    /// The compiled fusion setting.
+    pub fn setting(&self) -> &FusionSetting {
+        &self.setting
+    }
+
+    /// The compiled model.
+    pub fn model(&self) -> &ModelChain {
+        &self.model
+    }
+
+    /// The quantization spec this plan executes under.
+    pub fn spec(&self) -> &QuantSpec {
+        &self.spec
+    }
+
+    /// Length of the final logits vector.
+    pub fn output_len(&self) -> usize {
+        self.out_len
+    }
+
+    /// Quantization parameters of the logits payload
+    /// ([`Self::run_into_i8`]'s output tensor).
+    pub fn logits_qp(&self) -> QParams {
+        self.spec.tensors[self.model.num_layers()]
+    }
+
+    /// Measured peak of every run: the max concurrent accounting
+    /// footprint. In the int8 regime the runtime buffers *are* sized in
+    /// accounting bytes, so this is exactly the analytic Eq. 5/6 peak —
+    /// and equal to the interpreted engine's arena high-water mark.
+    pub fn measured_peak(&self) -> u64 {
+        self.layout.watermark
+    }
+
+    /// Static pool size in accounting bytes.
+    pub fn pool_bytes(&self) -> u64 {
+        self.layout.pool_bytes
+    }
+
+    /// Runtime byte pool length (>= [`Self::pool_bytes`] only through
+    /// the iterative-tail lifetime extension; sizing is identical).
+    pub fn pool_byte_len(&self) -> usize {
+        self.pool_bytes_rt
+    }
+
+    /// The pool buffer pre-populated with the quantized input before the
+    /// step list runs, if any (fused heads stream it instead).
+    pub fn input_buffer(&self) -> Option<usize> {
+        self.input_buf
+    }
+
+    /// The pool buffer the logits payload is read from after the last
+    /// step.
+    pub fn output_buffer(&self) -> usize {
+        self.out_buf
+    }
+
+    /// Allocate the per-slot execution pool — the only allocations of
+    /// the quantized path; every subsequent run is allocation-free.
+    pub fn make_pool(&self) -> QPlanPool {
+        QPlanPool {
+            data: vec![0i8; self.pool_bytes_rt],
+            input_q: vec![0i8; self.model.shapes[0].elems() as usize],
+            ranges: vec![BandRange { start: 0, rows: 0 }; self.ranges_scratch],
+            storage_allocs: 3,
+        }
+    }
+
+    /// Allocation-free int8 inference with f32 endpoints: quantize
+    /// `input` (into the pool's preallocated staging buffer), run the
+    /// step list entirely in int8, dequantize the logits into `out`.
+    /// Returns MACs performed (identical count to the f32 executors).
+    pub fn run_into(&self, input: MapRef<'_>, pool: &mut QPlanPool, out: &mut [f32]) -> u64 {
+        assert_eq!(out.len(), self.out_len, "output buffer length mismatch");
+        let macs = self.run_quantized(input, pool);
+        let r = self.payload_of(self.out_buf);
+        dequantize_into(&pool.data[r], self.logits_qp(), out);
+        macs
+    }
+
+    /// [`Self::run_into`] without the final dequantization: raw i8
+    /// logits under [`Self::logits_qp`].
+    pub fn run_into_i8(&self, input: MapRef<'_>, pool: &mut QPlanPool, out: &mut [i8]) -> u64 {
+        assert_eq!(out.len(), self.out_len, "output buffer length mismatch");
+        let macs = self.run_quantized(input, pool);
+        let r = self.payload_of(self.out_buf);
+        out.copy_from_slice(&pool.data[r]);
+        macs
+    }
+
+    fn run_quantized(&self, input: MapRef<'_>, pool: &mut QPlanPool) -> u64 {
+        let s0 = self.model.shapes[0];
+        assert!(
+            input.h == s0.h as usize && input.w == s0.w as usize && input.c == s0.c as usize,
+            "input shape mismatch"
+        );
+        assert_eq!(pool.data.len(), self.pool_bytes_rt, "pool belongs to a different plan");
+        quantize_into(input.data, self.spec.tensors[0], &mut pool.input_q);
+        if let Some(id) = self.input_buf {
+            let r = self.payload_of(id);
+            pool.data[r].copy_from_slice(&pool.input_q);
+        }
+        let mut macs = 0u64;
+        for step in &self.steps {
+            macs += self.run_step(step, pool);
+        }
+        macs
+    }
+
+    /// Full byte extent of buffer `id` in the runtime pool.
+    fn full_of(&self, id: usize) -> Range<usize> {
+        let b = &self.bufs[id];
+        b.off..b.off + b.bytes
+    }
+
+    /// Leading i8 payload of buffer `id`.
+    fn payload_of(&self, id: usize) -> Range<usize> {
+        let b = &self.bufs[id];
+        b.off..b.off + b.elems
+    }
+
+    fn qmap_of<'p>(&self, id: usize, data: &'p [i8]) -> QMapRef<'p> {
+        let d = self.bufs[id].dims;
+        QMapRef::new(d.0, d.1, d.2, data)
+    }
+
+    fn run_step(&self, step: &Step, pool: &mut QPlanPool) -> u64 {
+        match step {
+            Step::StashSave { src, dst } => {
+                match *src {
+                    // A stash from the streamed input snapshots the
+                    // quantized staging buffer (tensors[0] payload).
+                    Src::Input => {
+                        let r = self.payload_of(*dst);
+                        pool.data[r].copy_from_slice(&pool.input_q);
+                    }
+                    Src::Buf(sid) => {
+                        let n = self.bufs[*dst].elems;
+                        let (s, d) =
+                            two_muts_i8(&mut pool.data, self.full_of(sid), self.full_of(*dst));
+                        d[..n].copy_from_slice(&s[..n]);
+                    }
+                }
+                0
+            }
+
+            Step::Single { layer, src, out, residual } => {
+                let l = &self.model.layers[*layer];
+                let p = &self.qparams[*layer];
+                let x_qp = self.spec.tensors[*layer];
+                let out_qp = self.spec.tensors[*layer + 1];
+                let out_r = self.full_of(*out);
+                let macs = match *src {
+                    Src::Input => unreachable!("single-layer step reading the external input"),
+                    Src::Buf(sid) => {
+                        let (src_s, out_s) =
+                            two_muts_i8(&mut pool.data, self.full_of(sid), out_r.clone());
+                        let x = self.qmap_of(sid, &src_s[..self.bufs[sid].elems]);
+                        self.single_kernel(l, p, *layer, x, x_qp, out_qp, out_s)
+                    }
+                };
+                if let Some(stash_id) = residual {
+                    let stash_qp =
+                        self.spec.tensors[l.residual_from.expect("residual step without source")];
+                    let n = self.bufs[*out].elems;
+                    let (st, o) = two_muts_i8(&mut pool.data, self.full_of(*stash_id), out_r);
+                    qresidual_add(&mut o[..n], out_qp, &st[..n], stash_qp);
+                }
+                macs
+            }
+
+            Step::Fused { a, conv_end, src, bands, out, geom } => {
+                let block =
+                    QFusedBlock::new(&self.model, *a, *conv_end, &self.qparams, &self.spec);
+                let depth = conv_end - a;
+                let bands_r = self.full_of(*bands);
+                let out_r = self.full_of(*out);
+                let (_, wo, co) = self.bufs[*out].dims;
+                match *src {
+                    Src::Input => {
+                        let QPlanPool { data, input_q, ranges, .. } = pool;
+                        let (bands_s, out_s) = two_muts_i8(data, bands_r, out_r);
+                        let s0 = self.model.shapes[0];
+                        let x =
+                            QMapRef::new(s0.h as usize, s0.w as usize, s0.c as usize, input_q);
+                        block.run_streaming_in(x, geom, bands_s, &mut ranges[..depth + 1], |r, row| {
+                            out_s[r * wo * co..(r + 1) * wo * co].copy_from_slice(&row[..wo * co]);
+                        })
+                    }
+                    Src::Buf(sid) => {
+                        let QPlanPool { data, ranges, .. } = pool;
+                        let [src_s, bands_s, out_s] =
+                            three_muts_i8(data, [self.full_of(sid), bands_r, out_r]);
+                        let x = self.qmap_of(sid, &src_s[..self.bufs[sid].elems]);
+                        block.run_streaming_in(x, geom, bands_s, &mut ranges[..depth + 1], |r, row| {
+                            out_s[r * wo * co..(r + 1) * wo * co].copy_from_slice(&row[..wo * co]);
+                        })
+                    }
+                }
+            }
+
+            Step::FusedIter { a, conv_end, src, bands, geom, pool_acc, dense, logits } => {
+                let block =
+                    QFusedBlock::new(&self.model, *a, *conv_end, &self.qparams, &self.spec);
+                let depth = conv_end - a;
+                let out_shape = self.model.output_of(*conv_end - 1);
+                let c_last = out_shape.c as usize;
+                let bands_r = self.full_of(*bands);
+                let acc_r = self.full_of(*pool_acc);
+
+                // Phase 1: stream rows into the i32 global-pool
+                // accumulator (raw-q sums; the epilogue folds the scale).
+                let mut macs = match *src {
+                    Src::Input => {
+                        let QPlanPool { data, input_q, ranges, .. } = pool;
+                        let (bands_s, acc_s) = two_muts_i8(data, bands_r, acc_r.clone());
+                        qgap_reset(acc_s, c_last);
+                        let s0 = self.model.shapes[0];
+                        let x =
+                            QMapRef::new(s0.h as usize, s0.w as usize, s0.c as usize, input_q);
+                        block.run_streaming_in(
+                            x,
+                            geom,
+                            bands_s,
+                            &mut ranges[..depth + 1],
+                            |_r, row| qgap_accumulate(acc_s, row, c_last),
+                        )
+                    }
+                    Src::Buf(sid) => {
+                        let QPlanPool { data, ranges, .. } = pool;
+                        let [src_s, bands_s, acc_s] =
+                            three_muts_i8(data, [self.full_of(sid), bands_r, acc_r.clone()]);
+                        qgap_reset(acc_s, c_last);
+                        let x = self.qmap_of(sid, &src_s[..self.bufs[sid].elems]);
+                        block.run_streaming_in(
+                            x,
+                            geom,
+                            bands_s,
+                            &mut ranges[..depth + 1],
+                            |_r, row| qgap_accumulate(acc_s, row, c_last),
+                        )
+                    }
+                };
+                // finish(): i32 sums collapse into the i8 payload.
+                qgap_finish(
+                    &mut pool.data[acc_r],
+                    c_last,
+                    out_shape.h as usize * out_shape.w as usize,
+                    self.spec.tensors[*conv_end],
+                    self.spec.tensors[*conv_end + 1],
+                );
+                macs += out_shape.elems();
+
+                // Phase 2: iterative dense chain, i8 payload to i8
+                // payload (the i32 accumulator is a per-scalar register).
+                let mut prev = *pool_acc;
+                for &(li, acc_id) in dense {
+                    let p = &self.qparams[li];
+                    let dout = self.model.layers[li].cout as usize;
+                    let din = self.bufs[prev].elems;
+                    let (x_s, y_s) =
+                        two_muts_i8(&mut pool.data, self.full_of(prev), self.full_of(acc_id));
+                    qdense_into(
+                        &x_s[..din],
+                        self.spec.tensors[li],
+                        p,
+                        dout,
+                        self.spec.tensors[li + 1],
+                        y_s,
+                    );
+                    macs += (din * dout) as u64;
+                    prev = acc_id;
+                }
+
+                // Phase 3: logits payload copy.
+                let n = self.bufs[*logits].elems;
+                let (v_s, l_s) =
+                    two_muts_i8(&mut pool.data, self.full_of(prev), self.full_of(*logits));
+                l_s[..n].copy_from_slice(&v_s[..n]);
+                macs
+            }
+        }
+    }
+
+    /// Single unfused layer through the allocation-free int8 kernels —
+    /// same MAC accounting as the f32 executors.
+    #[allow(clippy::too_many_arguments)]
+    fn single_kernel(
+        &self,
+        l: &Layer,
+        p: &QLayerParams,
+        li: usize,
+        x: QMapRef<'_>,
+        x_qp: QParams,
+        out_qp: QParams,
+        out: &mut [i8],
+    ) -> u64 {
+        match l.kind {
+            LayerKind::Conv2d => {
+                qconv2d_into(
+                    x,
+                    x_qp,
+                    p,
+                    l.k as usize,
+                    l.stride as usize,
+                    l.padding as usize,
+                    l.cout as usize,
+                    l.act,
+                    out_qp,
+                    out,
+                );
+                self.model.layer_macs(li)
+            }
+            LayerKind::DwConv2d => {
+                qdwconv2d_into(
+                    x,
+                    x_qp,
+                    p,
+                    l.k as usize,
+                    l.stride as usize,
+                    l.padding as usize,
+                    l.act,
+                    out_qp,
+                    out,
+                );
+                self.model.layer_macs(li)
+            }
+            LayerKind::AvgPool => {
+                qavg_pool2d_into(x, x_qp, l.k as usize, l.stride as usize, out_qp, out);
+                self.model.layer_macs(li)
+            }
+            LayerKind::MaxPool => {
+                qmax_pool2d_into(x, x_qp, l.k as usize, l.stride as usize, out_qp, out);
+                self.model.layer_macs(li)
+            }
+            LayerKind::GlobalAvgPool => {
+                let c = x.c;
+                qgap_reset(out, c);
+                qgap_accumulate(out, x.data, c);
+                qgap_finish(out, c, x.h * x.w, x_qp, out_qp);
+                x.elems() as u64
+            }
+            LayerKind::Dense => {
+                qdense_into(x.data, x_qp, p, l.cout as usize, out_qp, out);
+                self.model.layer_macs(li)
+            }
+        }
+    }
+
+    /// Label-carrying view of the runtime pool buffers, byte-granular:
+    /// `off`/`elems` are byte offsets/extents (`unit_bytes = 1`), and
+    /// every buffer's *full* extent is exposed — i32 accumulator regions
+    /// included.
+    pub fn runtime_buffers(&self) -> Vec<RtBufInfo> {
+        self.bufs
+            .iter()
+            .zip(&self.buf_meta)
+            .map(|(b, m)| RtBufInfo {
+                label: m.label.clone(),
+                off: b.off,
+                elems: b.bytes,
+                // Payload dims only describe the full extent for 1-byte
+                // buffers; accumulator-backed extents are opaque bytes.
+                dims: if b.dims.0 * b.dims.1 * b.dims.2 == b.bytes {
+                    b.dims
+                } else {
+                    (1, 1, b.bytes)
+                },
+                birth: m.birth,
+                death: m.rt_death,
+            })
+            .collect()
+    }
+
+    /// The symbolic access set of every step, in execution order, with
+    /// conservative full-byte-extent accesses (payload writes are
+    /// over-approximated to the owning buffer's whole region — safe for
+    /// both the hazard and def-before-use passes, since reads are
+    /// over-approximated identically).
+    pub fn step_accesses(&self) -> Vec<StepAccess> {
+        self.steps
+            .iter()
+            .enumerate()
+            .map(|(index, step)| {
+                let (kind, label) = match step {
+                    Step::StashSave { dst, .. } => {
+                        ("stash", format!("q-{}", self.buf_meta[*dst].label))
+                    }
+                    Step::Single { layer, .. } => ("single", format!("q-single[{layer}]")),
+                    Step::Fused { a, conv_end, .. } => {
+                        ("fused", format!("q-fused[{a}..{conv_end})"))
+                    }
+                    Step::FusedIter { a, conv_end, dense, .. } => {
+                        let end = dense.last().map_or(*conv_end + 1, |&(li, _)| li + 1);
+                        ("fused-iter", format!("q-fused-iter[{a}..{end})"))
+                    }
+                };
+                let mut acc = StepAccess {
+                    index,
+                    kind,
+                    label,
+                    reads_external_input: false,
+                    reads: Vec::new(),
+                    writes: Vec::new(),
+                    scratch: Vec::new(),
+                    in_place_safe: false,
+                };
+                match step {
+                    Step::StashSave { src, dst } => {
+                        self.src_access(*src, &mut acc);
+                        acc.writes.push(self.full_access(*dst));
+                    }
+                    Step::Single { src, out, residual, .. } => {
+                        self.src_access(*src, &mut acc);
+                        if let Some(stash) = residual {
+                            acc.reads.push(self.full_access(*stash));
+                        }
+                        acc.writes.push(self.full_access(*out));
+                    }
+                    Step::Fused { src, bands, out, .. } => {
+                        self.src_access(*src, &mut acc);
+                        acc.scratch.push(self.full_access(*bands));
+                        acc.writes.push(self.full_access(*out));
+                    }
+                    Step::FusedIter { src, bands, pool_acc, dense, logits, .. } => {
+                        self.src_access(*src, &mut acc);
+                        acc.scratch.push(self.full_access(*bands));
+                        acc.scratch.push(self.full_access(*pool_acc));
+                        for &(_, dense_acc) in dense {
+                            acc.scratch.push(self.full_access(dense_acc));
+                        }
+                        acc.writes.push(self.full_access(*logits));
+                    }
+                }
+                acc
+            })
+            .collect()
+    }
+
+    fn full_access(&self, buf: usize) -> BufAccess {
+        BufAccess { buf, start: 0, len: self.bufs[buf].bytes }
+    }
+
+    fn src_access(&self, src: Src, acc: &mut StepAccess) {
+        match src {
+            // The streamed input lives in the staging buffer outside the
+            // pool — no pool bytes are read.
+            Src::Input => acc.reads_external_input = true,
+            Src::Buf(id) => acc.reads.push(self.full_access(id)),
+        }
+    }
+}
+
+/// Two disjoint mutable slices out of one i8 backing slice.
+fn two_muts_i8(data: &mut [i8], a: Range<usize>, b: Range<usize>) -> (&mut [i8], &mut [i8]) {
+    if a.start <= b.start {
+        debug_assert!(a.end <= b.start, "pool ranges overlap");
+        let (l, r) = data.split_at_mut(b.start);
+        (&mut l[a.start..a.end], &mut r[..b.end - b.start])
+    } else {
+        let (bs, as_) = two_muts_i8(data, b, a);
+        (as_, bs)
+    }
+}
+
+/// Three disjoint mutable slices out of one i8 backing slice (any order).
+fn three_muts_i8(data: &mut [i8], r: [Range<usize>; 3]) -> [&mut [i8]; 3] {
+    let mut idx = [0usize, 1, 2];
+    idx.sort_by_key(|&i| r[i].start);
+    let (lo, mid, hi) = (r[idx[0]].clone(), r[idx[1]].clone(), r[idx[2]].clone());
+    debug_assert!(lo.end <= mid.start && mid.end <= hi.start, "pool ranges overlap");
+    let (l, rest) = data.split_at_mut(mid.start);
+    let (m, h) = rest.split_at_mut(hi.start - mid.start);
+    let s_lo = &mut l[lo.start..lo.end];
+    let s_mid = &mut m[..mid.end - mid.start];
+    let s_hi = &mut h[..hi.end - hi.start];
+    let mut out: [Option<&mut [i8]>; 3] = [None, None, None];
+    out[idx[0]] = Some(s_lo);
+    out[idx[1]] = Some(s_mid);
+    out[idx[2]] = Some(s_hi);
+    out.map(|o| o.expect("all three slots assigned"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::Engine;
+    use crate::memory::Arena;
+    use crate::ops::{ParamGen, Tensor};
+    use crate::optimizer::{strategy, Constraints, Planner};
+    use crate::qexec::calibrate_default;
+    use crate::zoo;
+
+    fn rand_input(m: &ModelChain, seed: u64) -> Tensor {
+        let s = m.shapes[0];
+        Tensor::from_data(
+            s.h as usize,
+            s.w as usize,
+            s.c as usize,
+            ParamGen::new(seed).fill(s.elems() as usize, 2.0),
+        )
+    }
+
+    #[test]
+    fn qcompiled_matches_f32_engine_within_quant_tolerance() {
+        let m = zoo::quickstart();
+        let engine = Engine::new(m.clone());
+        let spec = calibrate_default(&m, engine.params());
+        let mut planner = Planner::for_model(m.clone());
+        let fused = planner.setting().unwrap();
+        let vanilla =
+            planner.plan_with(&strategy::Vanilla, Constraints::none()).unwrap().setting;
+        let x = rand_input(&m, 21);
+        for setting in [vanilla, fused] {
+            let mut arena = Arena::unbounded();
+            let interp = engine.run(&setting, &x, &mut arena).unwrap();
+            let q = QCompiledPlan::compile(m.clone(), setting.clone(), spec.clone());
+            let mut pool = q.make_pool();
+            let mut out = vec![0.0f32; q.output_len()];
+            let macs = q.run_into(x.as_map(), &mut pool, &mut out);
+            assert_eq!(macs, interp.macs, "{}", setting.describe());
+            let tol = 10.0 * q.logits_qp().scale + 0.15;
+            for (a, b) in out.iter().zip(&interp.output) {
+                assert!((a - b).abs() < tol, "{}: {a} vs {b}", setting.describe());
+            }
+        }
+    }
+
+    #[test]
+    fn qpool_peak_equals_interpreted_arena_peak() {
+        // The int8 regime is where measured == analytic: the pool's
+        // accounting watermark equals the engine's arena high-water mark
+        // for every setting, and the vanilla closed form exactly.
+        let m = zoo::kws_cnn();
+        let engine = Engine::new(m.clone());
+        let spec = calibrate_default(&m, engine.params());
+        let x = rand_input(&m, 5);
+        let mut planner = Planner::for_model(m.clone());
+        let fused = planner.setting().unwrap();
+        let vanilla =
+            planner.plan_with(&strategy::Vanilla, Constraints::none()).unwrap().setting;
+        for setting in [vanilla.clone(), fused] {
+            let mut arena = Arena::unbounded();
+            let interp = engine.run(&setting, &x, &mut arena).unwrap();
+            let q = QCompiledPlan::compile(m.clone(), setting.clone(), spec.clone());
+            assert_eq!(q.measured_peak(), interp.peak_ram, "{}", setting.describe());
+        }
+        let q = QCompiledPlan::compile(m.clone(), vanilla, spec);
+        assert_eq!(q.measured_peak(), m.vanilla_peak_ram());
+    }
+
+    #[test]
+    fn warm_hot_path_performs_zero_allocations() {
+        let m = zoo::tiny_cnn();
+        let setting = Planner::for_model(m.clone()).setting().unwrap();
+        let spec = calibrate_default(&m, Engine::new(m.clone()).params());
+        let q = QCompiledPlan::compile(m.clone(), setting, spec);
+        let mut pool = q.make_pool();
+        let allocs0 = pool.storage_allocs();
+        let ptr0 = pool.storage_ptr();
+        let bytes0 = pool.bytes();
+        let x = rand_input(&m, 7);
+        let mut out = vec![0.0f32; q.output_len()];
+        let mut first: Option<Vec<f32>> = None;
+        for _ in 0..50 {
+            q.run_into(x.as_map(), &mut pool, &mut out);
+            match &first {
+                None => first = Some(out.clone()),
+                Some(f) => assert_eq!(&out, f, "warm pool reuse changed the output"),
+            }
+        }
+        assert_eq!(pool.storage_allocs(), allocs0, "hot path allocated");
+        assert_eq!(pool.storage_ptr(), ptr0, "pool storage moved");
+        assert_eq!(pool.bytes(), bytes0, "pool storage resized");
+    }
+
+    #[test]
+    fn residual_model_compiles_and_matches() {
+        let m = zoo::mcunet_vww5();
+        let engine = Engine::new(m.clone());
+        let spec = calibrate_default(&m, engine.params());
+        let setting = Planner::for_model(m.clone()).setting().unwrap();
+        let x = rand_input(&m, 9);
+        let mut arena = Arena::unbounded();
+        let interp = engine.run(&setting, &x, &mut arena).unwrap();
+        let q = QCompiledPlan::compile(m.clone(), setting, spec);
+        let mut pool = q.make_pool();
+        let mut out = vec![0.0f32; q.output_len()];
+        let macs = q.run_into(x.as_map(), &mut pool, &mut out);
+        assert_eq!(macs, interp.macs);
+        assert_eq!(q.measured_peak(), interp.peak_ram);
+        let tol = 10.0 * q.logits_qp().scale + 0.25;
+        for (a, b) in out.iter().zip(&interp.output) {
+            assert!((a - b).abs() < tol, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn i8_logits_round_trip_through_logits_qp() {
+        let m = zoo::quickstart();
+        let setting = Planner::for_model(m.clone()).setting().unwrap();
+        let spec = calibrate_default(&m, Engine::new(m.clone()).params());
+        let q = QCompiledPlan::compile(m.clone(), setting, spec);
+        let mut pool = q.make_pool();
+        let x = rand_input(&m, 13);
+        let mut f_out = vec![0.0f32; q.output_len()];
+        let mut i_out = vec![0i8; q.output_len()];
+        q.run_into(x.as_map(), &mut pool, &mut f_out);
+        q.run_into_i8(x.as_map(), &mut pool, &mut i_out);
+        let qp = q.logits_qp();
+        for (f, i) in f_out.iter().zip(&i_out) {
+            assert_eq!(*f, qp.dequantize(*i));
+        }
+    }
+}

@@ -1,0 +1,192 @@
+//! Int8-vs-f32 parity for the quantized compiled executor
+//! (`qexec::QCompiledPlan`) against its oracle, the interpreted f32
+//! `exec::Engine`: logits within quantization tolerance, identical MAC
+//! counts, and — the PR's RAM contract — a **measured** int8 pool peak
+//! exactly equal to the analytic Eq. 5/6 peak (the interpreted arena
+//! high-water mark; the Eq. 5 closed form for vanilla settings). The
+//! warm hot path is also pinned allocation-free.
+
+use msf_cnn::exec::Engine;
+use msf_cnn::memory::Arena;
+use msf_cnn::model::ModelChain;
+use msf_cnn::ops::{LayerParams, ParamGen, QuantSpec, Tensor};
+use msf_cnn::optimizer::{strategy, Constraints, FusionSetting, Plan, Planner, PlanStrategy};
+use msf_cnn::qexec::{calibrate_default, QCompiledPlan};
+use msf_cnn::zoo;
+
+fn strategies() -> [(&'static str, &'static dyn PlanStrategy); 5] {
+    [
+        ("p1", &strategy::P1),
+        ("p2", &strategy::P2),
+        ("vanilla", &strategy::Vanilla),
+        ("head-fusion", &strategy::HeadFusion),
+        ("streamnet", &strategy::StreamNet),
+    ]
+}
+
+fn input_for(m: &ModelChain, seed: u64) -> Tensor {
+    let s = m.shapes[0];
+    Tensor::from_data(
+        s.h as usize,
+        s.w as usize,
+        s.c as usize,
+        ParamGen::new(seed).fill(s.elems() as usize, 2.0),
+    )
+}
+
+fn params_for(m: &ModelChain) -> Vec<LayerParams> {
+    m.layers.iter().enumerate().map(|(i, l)| LayerParams::for_layer(l, i)).collect()
+}
+
+/// Int8 compiled vs interpreted f32 on one setting: logits within
+/// `10·scale + slack`, equal MACs, and the measured int8 pool peak equal
+/// to the interpreted arena peak (both are the Eq. 5/6 accounting).
+fn assert_quant_parity(
+    m: &ModelChain,
+    setting: &FusionSetting,
+    spec: &QuantSpec,
+    x: &Tensor,
+    tag: &str,
+    slack: f32,
+) {
+    let engine = Engine::new(m.clone());
+    let mut arena = Arena::unbounded();
+    let interp = engine.run(setting, x, &mut arena).unwrap();
+
+    let q = QCompiledPlan::compile(m.clone(), setting.clone(), spec.clone());
+    let mut pool = q.make_pool();
+    let mut out = vec![0.0f32; q.output_len()];
+    let macs = q.run_into(x.as_map(), &mut pool, &mut out);
+
+    assert_eq!(macs, interp.macs, "{tag}: MAC counts diverged");
+    let tol = 10.0 * q.logits_qp().scale + slack;
+    for (i, (a, b)) in out.iter().zip(&interp.output).enumerate() {
+        assert!(
+            (a - b).abs() <= tol,
+            "{tag}: logit {i}: int8 {a} vs f32 {b} (tol {tol})"
+        );
+    }
+    assert_eq!(
+        q.measured_peak(),
+        interp.peak_ram,
+        "{tag}: int8 pool watermark != interpreted arena peak"
+    );
+}
+
+#[test]
+fn small_zoo_times_all_strategies_within_quant_tolerance() {
+    for name in ["quickstart", "tiny", "lenet", "kws"] {
+        let m = zoo::by_name(name).unwrap();
+        let spec = calibrate_default(&m, &params_for(&m));
+        let x = input_for(&m, 17);
+        let mut planner = Planner::for_model(m.clone());
+        for (sname, s) in strategies() {
+            let setting = planner.plan_with(s, Constraints::none()).unwrap().setting;
+            assert_quant_parity(&m, &setting, &spec, &x, &format!("{name}/{sname}"), 0.15);
+        }
+    }
+}
+
+#[test]
+fn paper_model_parity_on_fused_strategies() {
+    // The residual backbone; the deeper chain accumulates more
+    // requantization error, hence the wider slack (same envelope the
+    // f32 compiled-parity suite uses for model selection).
+    let m = zoo::mcunet_vww5();
+    let spec = calibrate_default(&m, &params_for(&m));
+    let x = input_for(&m, 23);
+    let mut planner = Planner::for_model(m.clone());
+    for (sname, s) in [
+        ("p1", &strategy::P1 as &dyn PlanStrategy),
+        ("streamnet", &strategy::StreamNet),
+    ] {
+        let setting = planner.plan_with(s, Constraints::none()).unwrap().setting;
+        assert_quant_parity(&m, &setting, &spec, &x, &format!("mn2-vww5/{sname}"), 0.25);
+    }
+}
+
+#[test]
+fn vanilla_int8_pool_peak_equals_eq5_closed_form() {
+    // For the vanilla setting the Eq. 5 peak has a closed form; the
+    // int8 pool must *measure* exactly that, not a scaled proxy.
+    for name in ["quickstart", "tiny", "lenet", "kws"] {
+        let m = zoo::by_name(name).unwrap();
+        let spec = calibrate_default(&m, &params_for(&m));
+        let vanilla = Planner::for_model(m.clone())
+            .plan_with(&strategy::Vanilla, Constraints::none())
+            .unwrap()
+            .setting;
+        let q = QCompiledPlan::compile(m.clone(), vanilla, spec);
+        assert_eq!(q.measured_peak(), m.vanilla_peak_ram(), "{name}");
+    }
+}
+
+#[test]
+fn warm_hot_path_performs_zero_pool_allocations() {
+    let m = zoo::kws_cnn();
+    let spec = calibrate_default(&m, &params_for(&m));
+    let setting = Planner::for_model(m.clone()).setting().unwrap();
+    let q = QCompiledPlan::compile(m.clone(), setting, spec);
+
+    let mut pool = q.make_pool();
+    let allocs = pool.storage_allocs();
+    let ptr = pool.storage_ptr();
+    let bytes = pool.bytes();
+
+    let x = input_for(&m, 7);
+    let mut out = vec![0.0f32; q.output_len()];
+    q.run_into(x.as_map(), &mut pool, &mut out);
+    let first = out.clone();
+    for _ in 0..50 {
+        q.run_into(x.as_map(), &mut pool, &mut out);
+        assert_eq!(out, first, "warm rerun diverged");
+    }
+    // Pinned: the warm path never grows, reallocates, or re-creates the
+    // pool's storage — same allocation count, same base pointer, same
+    // byte size as right after `make_pool`.
+    assert_eq!(pool.storage_allocs(), allocs, "hot path allocated");
+    assert_eq!(pool.storage_ptr(), ptr, "pool storage reallocated");
+    assert_eq!(pool.bytes(), bytes, "pool storage resized");
+}
+
+#[test]
+fn serialized_quant_plan_serves_identically() {
+    // Save -> load -> compile must reproduce the int8 execution
+    // bit-for-bit: the QuantSpec round-trips exactly through plan JSON.
+    let m = zoo::tiny_cnn();
+    let spec = calibrate_default(&m, &params_for(&m));
+    let plan = Planner::for_model(m.clone()).plan().unwrap().with_quant(spec.clone());
+    let path = std::env::temp_dir().join("msfcnn-qexec-parity.plan.json");
+    plan.save(&path).unwrap();
+    let loaded = Plan::load(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    let loaded_spec = loaded.quant.clone().expect("quant spec survives the round trip");
+    assert_eq!(loaded_spec, spec);
+
+    let q1 = QCompiledPlan::compile(m.clone(), plan.setting.clone(), spec);
+    let q2 = QCompiledPlan::compile(m.clone(), loaded.setting.clone(), loaded_spec);
+    let x = input_for(&m, 41);
+    let (mut p1, mut p2) = (q1.make_pool(), q2.make_pool());
+    let mut o1 = vec![0i8; q1.output_len()];
+    let mut o2 = vec![0i8; q2.output_len()];
+    q1.run_into_i8(x.as_map(), &mut p1, &mut o1);
+    q2.run_into_i8(x.as_map(), &mut p2, &mut o2);
+    assert_eq!(o1, o2, "round-tripped plan produced different i8 logits");
+}
+
+#[test]
+#[ignore = "full zoo x strategy sweep (minutes); run with --ignored"]
+fn full_zoo_times_all_strategies_within_quant_tolerance() {
+    for name in zoo::MODEL_NAMES {
+        let m = zoo::by_name(name).unwrap();
+        let spec = calibrate_default(&m, &params_for(&m));
+        let x = input_for(&m, 17);
+        let mut planner = Planner::for_model(m.clone());
+        for (sname, s) in strategies() {
+            let Ok(plan) = planner.plan_with(s, Constraints::none()) else {
+                continue; // infeasible pairs are covered by `verify --zoo`
+            };
+            assert_quant_parity(&m, &plan.setting, &spec, &x, &format!("{name}/{sname}"), 0.25);
+        }
+    }
+}
