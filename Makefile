@@ -27,10 +27,13 @@ bench-build:
 
 # Static plan analysis over freshly planned zoo artifacts: plan every
 # model x strategy pair, serialize both the f32 plan and its quantized
-# int8 twin, and run the verifier over the files (`msfcnn verify` exits
-# nonzero on any finding — including mixed-width pool byte math).
+# int8 twin, and run both verifier domains over the files — byte-interval
+# dataflow plus the numeric value-range pass. `msfcnn verify` exits
+# nonzero on any Error-severity finding (warnings are reported, and the
+# structured report lands in target/ANALYSIS_zoo.json under the
+# self-validated msfcnn.analysis/v1 schema).
 analysis:
-	$(CARGO) run --release --bin msfcnn -- verify --zoo
+	$(CARGO) run --release --bin msfcnn -- verify --zoo --json target/ANALYSIS_zoo.json
 
 clippy:
 	@if $(CARGO) clippy --version >/dev/null 2>&1; then \
@@ -64,12 +67,15 @@ bench-snapshot:
 
 # Seconds-scale smoke pass (CI): validate the committed snapshots, rerun
 # both harnesses in smoke mode, and validate the fresh output — schema
-# drift fails on either side. Don't commit the smoke numbers.
+# drift fails on either side. Don't commit the smoke numbers. The final
+# step exercises the msfcnn.analysis/v1 exporter the same way (the CLI
+# self-validates the document before writing it).
 bench-smoke:
 	$(CARGO) run --release --bin msfcnn -- bench check
 	MSFCNN_BENCH_SMOKE=1 $(CARGO) bench --bench infer_hot
 	MSFCNN_BENCH_SMOKE=1 $(CARGO) bench --bench serve_load
 	$(CARGO) run --release --bin msfcnn -- bench check
+	$(CARGO) run --release --bin msfcnn -- verify --zoo --json target/ANALYSIS_smoke.json
 
 # Build-time Python: AOT-lower the JAX/Pallas model to HLO-text artifacts
 # (requires jax; the Rust suite skips artifact tests when absent).

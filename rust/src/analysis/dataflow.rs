@@ -28,13 +28,13 @@ use crate::exec::{BufAccess, RtBufInfo};
 
 /// Findings report byte ranges: pool unit indices scale by the input's
 /// declared unit width (4 B f32 elements, 1 B int8 pool bytes).
-fn byte_range(unit: u64, start: usize, end: usize) -> (u64, u64) {
+pub(super) fn byte_range(unit: u64, start: usize, end: usize) -> (u64, u64) {
     (start as u64 * unit, end as u64 * unit)
 }
 
 /// Absolute pool element range of one access (saturating: structurally
 /// broken inputs must produce findings, not overflow panics).
-fn abs_range(buf: &RtBufInfo, acc: &BufAccess) -> (usize, usize) {
+pub(super) fn abs_range(buf: &RtBufInfo, acc: &BufAccess) -> (usize, usize) {
     let start = buf.off.saturating_add(acc.start);
     (start, start.saturating_add(acc.len))
 }

@@ -1,0 +1,252 @@
+//! Dead-store lint: a warning-severity pass over the same byte-interval
+//! dataflow the hard verifier walks.
+//!
+//! A dead store is a write whose bytes are clobbered (by a later write
+//! or scratch production aliasing the same pool bytes) or abandoned (the
+//! plan ends) before any read consumes them. On a sound plan this never
+//! happens — every boundary tensor is read by its consumer step, every
+//! stash by its residual add, and the final output is the plan's
+//! product — so a [`DefectClass::DeadStore`] finding flags wasted
+//! kernel work and pool bytes: a scheduling or lowering inefficiency,
+//! not a memory-safety violation. Accordingly findings are
+//! [`super::Severity::Warn`] and never block deployment.
+//!
+//! The walk tracks written-but-unread absolute pool byte runs, each
+//! tagged with the step that produced it. Reads consume same-buffer
+//! runs; scratch productions and writes clobber overlapping runs of
+//! *any* buffer (pool bytes are shared); writes then open a new run.
+//! Scratch ranges open no runs of their own: a kernel's scratch is
+//! produced and consumed within the step, so tracking it would only
+//! manufacture noise. Findings are attributed to the step and buffer
+//! that performed the dead write, with the dead byte range.
+
+use super::dataflow::{abs_range, byte_range};
+use super::{AnalysisInput, AnalysisReport, DefectClass, Finding};
+
+/// A written-but-not-yet-read absolute pool byte run, tagged with its
+/// producing step and buffer for attribution.
+#[derive(Debug, Clone, Copy)]
+struct StoreRun {
+    start: usize,
+    end: usize,
+    step: usize,
+    buf: usize,
+}
+
+/// Remove `[s, e)` from every run of buffer `buf`, splitting partial
+/// overlaps: these bytes were read, so they are no longer dead-store
+/// candidates.
+fn consume(runs: &mut Vec<StoreRun>, buf: usize, s: usize, e: usize) {
+    let mut next = Vec::with_capacity(runs.len());
+    for r in runs.drain(..) {
+        if r.buf != buf || e <= r.start || r.end <= s {
+            next.push(r);
+            continue;
+        }
+        if r.start < s {
+            next.push(StoreRun { end: s, ..r });
+        }
+        if e < r.end {
+            next.push(StoreRun { start: e, ..r });
+        }
+    }
+    *runs = next;
+}
+
+/// Clobber `[s, e)` across every run regardless of buffer (pool bytes
+/// are shared): each overlapped portion is a dead store, reported
+/// against the run's original writer.
+fn clobber(
+    runs: &mut Vec<StoreRun>,
+    s: usize,
+    e: usize,
+    clobber_step: usize,
+    input: &AnalysisInput,
+    report: &mut AnalysisReport,
+) {
+    let mut next = Vec::with_capacity(runs.len());
+    for r in runs.drain(..) {
+        if e <= r.start || r.end <= s {
+            next.push(r);
+            continue;
+        }
+        let (ds, de) = (r.start.max(s), r.end.min(e));
+        flag(&StoreRun { start: ds, end: de, ..r }, Some(clobber_step), input, report);
+        if r.start < s {
+            next.push(StoreRun { end: s, ..r });
+        }
+        if e < r.end {
+            next.push(StoreRun { start: e, ..r });
+        }
+    }
+    *runs = next;
+}
+
+fn flag(run: &StoreRun, clobbered_at: Option<usize>, input: &AnalysisInput, report: &mut AnalysisReport) {
+    let label = input
+        .buffers
+        .get(run.buf)
+        .map_or("?", |b| b.label.as_str());
+    let detail = match clobbered_at {
+        Some(at) => format!("store is overwritten at step {at} before any read"),
+        None => "store is never read before the plan ends".to_string(),
+    };
+    let (lo, hi) = byte_range(input.unit_bytes, run.start, run.end);
+    report.push(
+        Finding::new(DefectClass::DeadStore, detail)
+            .warn()
+            .at_step(run.step)
+            .on_buffer(label)
+            .in_bytes(lo, hi),
+    );
+}
+
+/// The dead-store lint: walk the compiled step list in order, tracking
+/// written-but-unread pool byte runs, and emit a warning-severity
+/// [`DefectClass::DeadStore`] finding for every store that is clobbered
+/// or abandoned unread. Sound plans produce an empty report.
+pub fn lint_dead_stores(input: &AnalysisInput) -> AnalysisReport {
+    let mut report = AnalysisReport::new();
+    let mut runs: Vec<StoreRun> = Vec::new();
+
+    for step in &input.steps {
+        // Reads first: an in-place step legally consumes before writing.
+        for acc in &step.reads {
+            let Some(b) = input.buffers.get(acc.buf) else { continue };
+            if acc.len == 0 {
+                continue;
+            }
+            let (s, e) = abs_range(b, acc);
+            consume(&mut runs, acc.buf, s, e);
+        }
+        // Scratch productions clobber but open no runs; writes clobber
+        // then open their own run. Kernel order: scratch before writes.
+        for (is_write, acc) in step
+            .scratch
+            .iter()
+            .map(|a| (false, a))
+            .chain(step.writes.iter().map(|a| (true, a)))
+        {
+            let Some(b) = input.buffers.get(acc.buf) else { continue };
+            if acc.len == 0 {
+                continue;
+            }
+            let (s, e) = abs_range(b, acc);
+            clobber(&mut runs, s, e, step.index, input, &mut report);
+            if is_write {
+                runs.push(StoreRun { start: s, end: e, step: step.index, buf: acc.buf });
+            }
+        }
+    }
+
+    // The final output is the plan's product: consumed by definition.
+    if let Some(b) = input.buffers.get(input.output) {
+        consume(&mut runs, input.output, b.off, b.off + b.elems);
+    }
+    for r in &runs {
+        flag(r, None, input, &mut report);
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{BufAccess, CompiledPlan, StepAccess};
+    use crate::optimizer::{strategy, Constraints, Planner};
+    use crate::zoo;
+
+    fn vanilla_input(name: &str) -> AnalysisInput {
+        let m = zoo::by_name(name).unwrap();
+        let setting = Planner::for_model(m.clone())
+            .plan_with(&strategy::Vanilla, Constraints::none())
+            .unwrap()
+            .setting;
+        AnalysisInput::from_compiled(&CompiledPlan::compile(m, setting))
+    }
+
+    #[test]
+    fn sound_plans_have_no_dead_stores() {
+        for name in ["quickstart", "tiny", "kws", "lenet"] {
+            let report = lint_dead_stores(&vanilla_input(name));
+            assert!(report.is_clean(), "{name}:\n{}", report.render());
+        }
+    }
+
+    /// A synthetic step that rewrites an already-written boundary before
+    /// its consumer runs makes the *original* store dead.
+    #[test]
+    fn clobbered_store_is_flagged_against_its_writer() {
+        let mut input = vanilla_input("quickstart");
+        let first_write = input.steps[0].writes[0];
+        let redundant = StepAccess {
+            index: input.steps[0].index,
+            kind: "synthetic",
+            label: "redundant rewrite".to_string(),
+            reads_external_input: false,
+            reads: vec![],
+            writes: vec![first_write],
+            scratch: vec![],
+            in_place_safe: false,
+        };
+        input.steps.insert(1, redundant);
+        let report = lint_dead_stores(&input);
+        let dead: Vec<_> = report
+            .findings
+            .iter()
+            .filter(|f| f.class == DefectClass::DeadStore)
+            .collect();
+        assert_eq!(dead.len(), 1, "{}", report.render());
+        assert_eq!(dead[0].step, Some(input.steps[0].index), "attributed to the writer");
+        assert_eq!(dead[0].severity, crate::analysis::Severity::Warn);
+        assert!(!report.has_errors(), "dead stores are warnings");
+    }
+
+    /// A write whose bytes nothing ever reads is flagged at plan end.
+    #[test]
+    fn abandoned_store_is_flagged() {
+        let mut input = vanilla_input("quickstart");
+        let nbufs = input.buffers.len();
+        // Give the orphan its own buffer past everything else so no
+        // later access touches it.
+        let pool_end = input.pool_elems;
+        input.pool_elems += 16;
+        input.buffers.push(crate::exec::RtBufInfo {
+            label: "orphan".to_string(),
+            off: pool_end,
+            elems: 16,
+            dims: (1, 1, 16),
+            birth: 0,
+            death: usize::MAX,
+        });
+        let last_index = input.steps.last().unwrap().index;
+        input.steps.push(StepAccess {
+            index: last_index + 1,
+            kind: "synthetic",
+            label: "orphan write".to_string(),
+            reads_external_input: false,
+            reads: vec![],
+            writes: vec![BufAccess { buf: nbufs, start: 0, len: 16 }],
+            scratch: vec![],
+            in_place_safe: false,
+        });
+        let report = lint_dead_stores(&input);
+        assert_eq!(report.warn_count(), 1, "{}", report.render());
+        let f = &report.findings[0];
+        assert_eq!(f.class, DefectClass::DeadStore);
+        assert!(f.detail.contains("never read"), "{}", f.render());
+        assert_eq!(f.buffer, "orphan");
+    }
+
+    #[test]
+    fn partial_consume_keeps_the_unread_remainder() {
+        let mut runs = vec![StoreRun { start: 0, end: 100, step: 3, buf: 7 }];
+        consume(&mut runs, 7, 20, 60);
+        assert_eq!(runs.len(), 2);
+        assert_eq!((runs[0].start, runs[0].end), (0, 20));
+        assert_eq!((runs[1].start, runs[1].end), (60, 100));
+        // A different buffer's read does not consume.
+        consume(&mut runs, 8, 0, 100);
+        assert_eq!(runs.len(), 2);
+    }
+}

@@ -1,9 +1,12 @@
-//! Static plan verifier: byte-interval dataflow analysis over compiled
-//! plans and pool layouts, without executing a single MAC.
+//! Static plan verifier: two abstract domains over compiled plans and
+//! pool layouts, without executing a single MAC.
 //!
 //! The optimizer's whole promise is that a fusion setting is *safe to run
 //! in a fixed RAM budget* — this module proves it ahead of time instead
-//! of trusting the hot path's `debug_assert!`s. It symbolically walks a
+//! of trusting the hot path's `debug_assert!`s. Two abstract domains
+//! cover the two ways an int8 deploy can be wrong:
+//!
+//! **Byte intervals** (memory safety): a symbolic walk over a
 //! [`crate::exec::CompiledPlan`]'s step list ([`verify_dataflow`]) and a
 //! serialized [`crate::memory::PoolLayout`] ([`verify_layout`]) checking:
 //!
@@ -21,24 +24,40 @@
 //! * **watermark recomputation** — the serialized layout's watermark must
 //!   equal the max concurrent footprint of its own lifetimes, and the
 //!   serialized layout itself must match a fresh schedule replay
-//!   ([`verify_plan`]'s cross-check).
+//!   ([`verify_plan`]'s cross-check);
+//! * **dead stores** ([`lint_dead_stores`], warning severity) — a step
+//!   writes pool bytes that are clobbered or abandoned before any read.
 //!
-//! Findings are structured [`Finding`]s (defect class, step index, buffer
-//! name, byte range) collected into an [`AnalysisReport`] — **all**
-//! defects, not just the first. The verifier gates deployment end to end:
+//! **Value intervals** (numeric safety, [`verify_ranges`]): interval
+//! abstract interpretation over a [`crate::qexec::QCompiledPlan`]'s
+//! per-layer numeric metadata, proving the i32 accumulator cannot
+//! overflow under worst-case `|x−zx|·|w−zw|` products, that calibration
+//! is well-formed (no degenerate scales, in-range zero points), and that
+//! the requantization epilogue's representable range covers the
+//! certainly-achievable value range (saturation risk, warning severity).
+//!
+//! Findings are structured [`Finding`]s (defect class, [`Severity`],
+//! step index, buffer name, byte range) collected into an
+//! [`AnalysisReport`] — **all** defects, not just the first. `Error`
+//! findings block deployment; `Warn` findings are surfaced but never
+//! fail a verify or a deploy. The gate is wired end to end:
 //! [`crate::exec::CompiledPlan`] asserts [`check_step_hazards`] at
 //! compile-time-of-plan, [`crate::optimizer::Plan::validate`] runs
 //! [`verify_layout`] on parse, [`crate::coordinator::PlanRegistry`] runs
-//! [`verify_plan_file`] per scanned file (rejected plans are never
+//! [`verify_plan_file`] per scanned file (plans with errors are never
 //! deployed), and `msfcnn verify` exposes the same gate on the CLI.
 
 mod dataflow;
 mod interval;
 mod layout;
+mod lint;
+pub mod ranges;
 
 pub use dataflow::{check_step_hazards, verify_dataflow};
 pub use interval::IntervalSet;
 pub use layout::verify_layout;
+pub use lint::lint_dead_stores;
+pub use ranges::{verify_ranges, NumericInput};
 
 use std::path::Path;
 
@@ -80,9 +99,45 @@ pub enum DefectClass {
     /// The fusion setting itself cannot be compiled (broken span chain,
     /// unfusable span, missing iterative-tail pool, non-positive cost).
     MalformedSetting,
+    /// A step's i32 accumulator can overflow under worst-case
+    /// `|x−zx|·|w−zw|` products given its MAC count per output element.
+    AccumulatorOverflow,
+    /// A quantization scale that is non-finite, non-positive, or so
+    /// close to zero the affine map collapses.
+    DegenerateScale,
+    /// A zero point outside the representable int8 range `[-128, 127]`.
+    ZeroPointRange,
+    /// The requantization epilogue's representable output range covers
+    /// too little of the certainly-achievable value range — a large
+    /// fraction of outputs would clamp (warning severity).
+    SaturationRisk,
+    /// A step writes pool bytes that are clobbered or abandoned before
+    /// any read consumes them (warning severity).
+    DeadStore,
 }
 
 impl DefectClass {
+    /// Every defect class, in declaration order — keep in sync with the
+    /// enum (the [`Self::from_name`] round-trip test is exhaustive over
+    /// this list).
+    pub const ALL: [DefectClass; 15] = [
+        DefectClass::DefBeforeUse,
+        DefectClass::Hazard,
+        DefectClass::OutOfPool,
+        DefectClass::LifetimeViolation,
+        DefectClass::ShapeMismatch,
+        DefectClass::WatermarkMismatch,
+        DefectClass::WidthMismatch,
+        DefectClass::LayoutCollision,
+        DefectClass::LayoutDivergence,
+        DefectClass::MalformedSetting,
+        DefectClass::AccumulatorOverflow,
+        DefectClass::DegenerateScale,
+        DefectClass::ZeroPointRange,
+        DefectClass::SaturationRisk,
+        DefectClass::DeadStore,
+    ];
+
     /// Stable kebab-case identifier (diagnostic rendering, CLI output).
     pub fn name(self) -> &'static str {
         match self {
@@ -96,6 +151,35 @@ impl DefectClass {
             DefectClass::LayoutCollision => "layout-collision",
             DefectClass::LayoutDivergence => "layout-divergence",
             DefectClass::MalformedSetting => "malformed-setting",
+            DefectClass::AccumulatorOverflow => "accumulator-overflow",
+            DefectClass::DegenerateScale => "degenerate-scale",
+            DefectClass::ZeroPointRange => "zero-point-range",
+            DefectClass::SaturationRisk => "saturation-risk",
+            DefectClass::DeadStore => "dead-store",
+        }
+    }
+
+    /// Parse a [`Self::name`] back; `None` for unknown identifiers.
+    pub fn from_name(name: &str) -> Option<Self> {
+        Self::ALL.into_iter().find(|c| c.name() == name)
+    }
+}
+
+/// How severe a [`Finding`] is: `Error` findings block deployment
+/// (`verify` exits nonzero, the registry refuses the plan), `Warn`
+/// findings are surfaced and logged but never fail a gate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    Error,
+    Warn,
+}
+
+impl Severity {
+    /// Stable lowercase identifier (JSON export, rendering).
+    pub fn name(self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warn => "warn",
         }
     }
 }
@@ -106,6 +190,8 @@ impl DefectClass {
 #[derive(Debug, Clone, PartialEq)]
 pub struct Finding {
     pub class: DefectClass,
+    /// Deploy-blocking (`Error`, the default) or advisory (`Warn`).
+    pub severity: Severity,
     /// Compiled step index the defect was observed at, when step-local.
     pub step: Option<usize>,
     /// Label of the offending buffer (empty when not buffer-local).
@@ -116,10 +202,24 @@ pub struct Finding {
 }
 
 impl Finding {
-    /// A bare finding of `class`; attach location with the builder
-    /// methods.
+    /// A bare `Error`-severity finding of `class`; attach location with
+    /// the builder methods (downgrade with [`Self::warn`]).
     pub fn new(class: DefectClass, detail: impl Into<String>) -> Self {
-        Self { class, step: None, buffer: String::new(), bytes: None, detail: detail.into() }
+        Self {
+            class,
+            severity: Severity::Error,
+            step: None,
+            buffer: String::new(),
+            bytes: None,
+            detail: detail.into(),
+        }
+    }
+
+    /// Downgrade to `Warn` severity (surfaced, never deploy-blocking).
+    #[must_use]
+    pub fn warn(mut self) -> Self {
+        self.severity = Severity::Warn;
+        self
     }
 
     /// Attach the compiled step index.
@@ -144,9 +244,13 @@ impl Finding {
     }
 
     /// One-line rendering:
-    /// `[class] step N buffer 'label' bytes [lo..hi): detail`.
+    /// `[class] step N buffer 'label' bytes [lo..hi): detail` for
+    /// errors; warnings render distinctly as `[warn:class] …`.
     pub fn render(&self) -> String {
-        let mut s = format!("[{}]", self.class.name());
+        let mut s = match self.severity {
+            Severity::Error => format!("[{}]", self.class.name()),
+            Severity::Warn => format!("[warn:{}]", self.class.name()),
+        };
         if let Some(i) = self.step {
             s.push_str(&format!(" step {i}"));
         }
@@ -179,9 +283,25 @@ impl AnalysisReport {
         Self::default()
     }
 
-    /// True when no defect was found.
+    /// True when no defect was found (warnings included).
     pub fn is_clean(&self) -> bool {
         self.findings.is_empty()
+    }
+
+    /// True when any `Error`-severity finding is present — the
+    /// deploy-blocking condition (warnings alone never block).
+    pub fn has_errors(&self) -> bool {
+        self.findings.iter().any(|f| f.severity == Severity::Error)
+    }
+
+    /// Number of `Error`-severity findings.
+    pub fn error_count(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Error).count()
+    }
+
+    /// Number of `Warn`-severity findings.
+    pub fn warn_count(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Warn).count()
     }
 
     /// Append one finding.
@@ -335,7 +455,9 @@ pub fn verify_plan(plan: &Plan, model: &ModelChain) -> AnalysisReport {
     }
     if compilable {
         let compiled = CompiledPlan::compile(model.clone(), plan.setting.clone());
-        report.merge(verify_dataflow(&AnalysisInput::from_compiled(&compiled)));
+        let input = AnalysisInput::from_compiled(&compiled);
+        report.merge(verify_dataflow(&input));
+        report.merge(lint_dead_stores(&input));
     }
     if let Some(spec) = &plan.quant {
         let n = model.num_layers();
@@ -352,13 +474,19 @@ pub fn verify_plan(plan: &Plan, model: &ModelChain) -> AnalysisReport {
             ));
         } else if compilable {
             // Prove the quantized lowering too: byte-granular dataflow
-            // over the int8 step list and its mixed-width pool.
+            // over the int8 step list and its mixed-width pool, the
+            // dead-store lint, and the numeric value-range pass
+            // (accumulator overflow, calibration well-formedness,
+            // saturation risk).
             let q = crate::qexec::QCompiledPlan::compile(
                 model.clone(),
                 plan.setting.clone(),
                 spec.clone(),
             );
-            report.merge(verify_dataflow(&AnalysisInput::from_qcompiled(&q)));
+            let input = AnalysisInput::from_qcompiled(&q);
+            report.merge(verify_dataflow(&input));
+            report.merge(lint_dead_stores(&input));
+            report.merge(verify_ranges(&NumericInput::from_qcompiled(&q)));
         }
     }
     report

@@ -1,0 +1,375 @@
+//! Value-interval abstract interpretation over quantized plans — the
+//! numeric-safety domain of the static verifier.
+//!
+//! Where [`super::verify_dataflow`] proves a plan's *memory* behavior
+//! over byte intervals, this pass proves its *arithmetic* over value
+//! intervals: for every layer a [`crate::qexec::QCompiledPlan`] step
+//! executes ([`crate::qexec::QCompiledPlan::step_numerics`]), it
+//! propagates worst-case bounds through exactly the computation the
+//! concrete kernels in [`crate::ops`] perform — i32 accumulation of
+//! `(x − zx)(w − zw)` products, the `acc·s_x·s_w + bias` epilogue, the
+//! activation fold, the requantize clamp — and checks:
+//!
+//! * **accumulator overflow** ([`DefectClass::AccumulatorOverflow`],
+//!   error): the worst-case `|x−zx|·|w−zw|` product times the MAC count
+//!   per output element must fit in i32; pooling layers' raw-q sums
+//!   likewise. Computed in wide integers so a corrupted zero point
+//!   widens the bound instead of wrapping it.
+//! * **calibration well-formedness**
+//!   ([`DefectClass::DegenerateScale`] /
+//!   [`DefectClass::ZeroPointRange`], errors): every tensor and weight
+//!   scale must be finite and above [`QParams::MIN_SCALE`], every zero
+//!   point inside `[-128, 127]`.
+//! * **saturation risk** ([`DefectClass::SaturationRisk`], warning):
+//!   where the achievable pre-requantize range is *certain* — a Relu6
+//!   fold bounds outputs to `[0, 6]` regardless of calibration, and a
+//!   residual add sums two already-clamped representable ranges — the
+//!   output tensor's representable range must cover most of it. The
+//!   finding reports the estimated clipped fraction. Unbounded
+//!   activations (`None`, `Relu`) are skipped: their worst-case range
+//!   is vacuously wide, and a calibrated range much tighter than the
+//!   worst case is the *normal* product of calibration, not a defect.
+//!
+//! The pass consumes only plan metadata ([`NumericInput`], mutable in
+//! tests for defect injection) and never executes a MAC. Its soundness
+//! against the concrete kernels is parity-tested by running adversarial
+//! inputs through [`crate::ops`] and asserting measured extrema fall
+//! inside [`unit_real_bounds`].
+
+use crate::model::{Activation, LayerKind};
+use crate::ops::QParams;
+use crate::qexec::{QCompiledPlan, QStepNumerics, QUnitNumerics};
+
+use super::{AnalysisReport, DefectClass, Finding};
+
+/// Warn when the requantization epilogue would clip more than this
+/// fraction of the certainly-achievable value range. Very high on
+/// purpose: a calibrated range legitimately sits well inside the
+/// worst-case bound (a Relu6 layer whose outputs peak at 0.5 covers
+/// ~8% of `[0, 6]` and is perfectly sound), so only near-total
+/// clipping — the signature of an order-of-magnitude scale corruption —
+/// is worth a warning.
+pub const SATURATION_CLIP_THRESHOLD: f64 = 0.995;
+
+/// The symbolic view the value-range pass consumes: per-step, per-layer
+/// numeric metadata extracted from a compiled quantized plan. Built by
+/// [`NumericInput::from_qcompiled`]; tests mutate it directly to inject
+/// numeric defects that [`crate::optimizer::Plan`] parsing or
+/// [`crate::qexec::QCompiledPlan::compile`] would reject earlier.
+#[derive(Debug, Clone)]
+pub struct NumericInput {
+    /// Numeric metadata of every compiled step, in execution order.
+    pub steps: Vec<QStepNumerics>,
+}
+
+impl NumericInput {
+    /// Extract the numeric view of a compiled quantized plan.
+    pub fn from_qcompiled(plan: &QCompiledPlan) -> Self {
+        Self { steps: plan.step_numerics() }
+    }
+}
+
+/// Worst-case i32 accumulator bounds of one unit, in wide integers:
+/// `macs_per_out` terms each bounded by the extreme `(x−zx)(w−zw)`
+/// products (conv / depthwise / dense) or by the raw q range (average
+/// and global pooling sums). `None` for max pooling, which accumulates
+/// nothing. Zero is always included — padding taps contribute exactly 0.
+pub fn unit_acc_bounds(u: &QUnitNumerics) -> Option<(i128, i128)> {
+    let m = u.macs_per_out as i128;
+    match u.kind {
+        LayerKind::Conv2d | LayerKind::DwConv2d | LayerKind::Dense => {
+            let w = u.w_qp?;
+            let (xl, xh) = u.x_qp.q_dev_bounds();
+            let (wl, wh) = w.q_dev_bounds();
+            let products = [xl * wl, xl * wh, xh * wl, xh * wh];
+            let p_lo = *products.iter().min().expect("non-empty") as i128;
+            let p_hi = *products.iter().max().expect("non-empty") as i128;
+            Some((m * p_lo.min(0), m * p_hi.max(0)))
+        }
+        LayerKind::AvgPool | LayerKind::GlobalAvgPool => Some((m * -128, m * 127)),
+        LayerKind::MaxPool => None,
+    }
+}
+
+/// The proven post-activation, pre-requantize real interval of one
+/// unit's outputs — the abstract transfer function the parity tests
+/// check the concrete kernels against. Finite for every layer kind:
+/// accumulator bounds are finite, pooling outputs stay inside the input
+/// tensor's representable range, and the activation fold clamps.
+pub fn unit_real_bounds(u: &QUnitNumerics) -> (f64, f64) {
+    let (lo, hi) = match u.kind {
+        LayerKind::Conv2d | LayerKind::DwConv2d | LayerKind::Dense => {
+            let (acc_lo, acc_hi) = unit_acc_bounds(u).expect("weighted kind");
+            let rs = u.x_qp.scale as f64
+                * u.w_qp.map_or(1.0, |w| w.scale as f64);
+            (
+                acc_lo as f64 * rs + u.bias_lo as f64,
+                acc_hi as f64 * rs + u.bias_hi as f64,
+            )
+        }
+        // Mean and max of q values stay inside the input's q range, so
+        // outputs stay inside the input's representable real range.
+        LayerKind::AvgPool | LayerKind::MaxPool | LayerKind::GlobalAvgPool => {
+            let (rlo, rhi) = u.x_qp.representable();
+            (rlo as f64, rhi as f64)
+        }
+    };
+    match u.act {
+        Activation::None => (lo, hi),
+        Activation::Relu => (lo.max(0.0), hi.max(0.0)),
+        Activation::Relu6 => (lo.clamp(0.0, 6.0), hi.clamp(0.0, 6.0)),
+    }
+}
+
+/// Fraction of `[a_lo, a_hi]` outside `[r_lo, r_hi]` (0 when the
+/// achievable interval is empty or fully covered).
+fn clipped_fraction(a_lo: f64, a_hi: f64, r_lo: f64, r_hi: f64) -> f64 {
+    let width = a_hi - a_lo;
+    if width <= 0.0 {
+        return 0.0;
+    }
+    let over = (a_hi - r_hi).max(0.0) + (r_lo - a_lo).max(0.0);
+    (over / width).min(1.0)
+}
+
+/// Calibration well-formedness of one `QParams`: scale must be usable,
+/// zero point representable.
+fn check_qp(
+    qp: QParams,
+    what: &str,
+    step: usize,
+    buffer: &str,
+    report: &mut AnalysisReport,
+) {
+    if qp.is_degenerate() {
+        report.push(
+            Finding::new(
+                DefectClass::DegenerateScale,
+                format!(
+                    "{what} scale {:e} is degenerate (non-finite, non-positive, or below {:e})",
+                    qp.scale,
+                    QParams::MIN_SCALE
+                ),
+            )
+            .at_step(step)
+            .on_buffer(buffer),
+        );
+    }
+    if !(-128..=127).contains(&qp.zero_point) {
+        report.push(
+            Finding::new(
+                DefectClass::ZeroPointRange,
+                format!("{what} zero point {} outside [-128, 127]", qp.zero_point),
+            )
+            .at_step(step)
+            .on_buffer(buffer),
+        );
+    }
+}
+
+/// Saturation check over a *certain* achievable interval: warn when the
+/// output tensor's representable range (widened by half a quantization
+/// step — the rounding slack of a single requantize) covers less than
+/// `1 - SATURATION_CLIP_THRESHOLD` of it.
+fn check_saturation(
+    a_lo: f64,
+    a_hi: f64,
+    out_qp: QParams,
+    what: &str,
+    step: usize,
+    buffer: &str,
+    report: &mut AnalysisReport,
+) {
+    if out_qp.is_degenerate() {
+        return; // already an error; the range below would be garbage
+    }
+    let (r_lo, r_hi) = out_qp.representable();
+    let slack = out_qp.scale as f64 * 0.5;
+    let frac = clipped_fraction(a_lo, a_hi, r_lo as f64 - slack, r_hi as f64 + slack);
+    if frac > SATURATION_CLIP_THRESHOLD {
+        report.push(
+            Finding::new(
+                DefectClass::SaturationRisk,
+                format!(
+                    "{what}: representable [{:.4}, {:.4}] clips an estimated {:.1}% of the \
+                     achievable range [{a_lo:.4}, {a_hi:.4}]",
+                    r_lo,
+                    r_hi,
+                    frac * 100.0
+                ),
+            )
+            .warn()
+            .at_step(step)
+            .on_buffer(buffer),
+        );
+    }
+}
+
+/// The value-range pass: accumulator-overflow freedom, calibration
+/// well-formedness, and saturation risk over every step of a quantized
+/// plan. Collects **all** defects; overflow and calibration findings
+/// are `Error` severity, saturation findings `Warn`.
+pub fn verify_ranges(input: &NumericInput) -> AnalysisReport {
+    let mut report = AnalysisReport::new();
+    // Each model layer appears in exactly one unit, with `tensors[li]`
+    // as its input — so checking every unit's input (and the final
+    // unit's output) covers each boundary tensor exactly once.
+    let last_unit = input
+        .steps
+        .iter()
+        .flat_map(|s| s.units.iter().map(move |u| (s.index, u)))
+        .max_by_key(|(_, u)| u.layer);
+
+    for step in &input.steps {
+        for u in &step.units {
+            let li = u.layer;
+            check_qp(u.x_qp, &format!("layer {li} input tensor v{li}"), step.index, &u.buffer, &mut report);
+            if let Some(w) = u.w_qp {
+                check_qp(w, &format!("layer {li} weights"), step.index, &u.buffer, &mut report);
+            }
+
+            if let Some((acc_lo, acc_hi)) = unit_acc_bounds(u) {
+                if acc_lo < i32::MIN as i128 || acc_hi > i32::MAX as i128 {
+                    report.push(
+                        Finding::new(
+                            DefectClass::AccumulatorOverflow,
+                            format!(
+                                "layer {li} ({:?}): worst-case accumulator in [{acc_lo}, \
+                                 {acc_hi}] over {} accumulation term(s) per output exceeds \
+                                 the i32 range [{}, {}]",
+                                u.kind,
+                                u.macs_per_out,
+                                i32::MIN,
+                                i32::MAX
+                            ),
+                        )
+                        .at_step(step.index)
+                        .on_buffer(&u.buffer),
+                    );
+                }
+            }
+
+            // Saturation only where the achievable range is certain: a
+            // Relu6 fold bounds any calibration's outputs to [0, 6].
+            if u.act == Activation::Relu6 {
+                let (a_lo, a_hi) = unit_real_bounds(u);
+                check_saturation(
+                    a_lo,
+                    a_hi,
+                    u.out_qp,
+                    &format!("layer {li} relu6 epilogue"),
+                    step.index,
+                    &u.buffer,
+                    &mut report,
+                );
+            }
+
+            // Residual add: both operands are clamped to their tensors'
+            // representable ranges, so the sum range is certain too —
+            // the double-requant must be able to express it.
+            if let Some(res) = u.residual_qp {
+                if !u.out_qp.is_degenerate() && !res.is_degenerate() {
+                    let (o_lo, o_hi) = u.out_qp.representable();
+                    let (s_lo, s_hi) = res.representable();
+                    check_saturation(
+                        o_lo as f64 + s_lo as f64,
+                        o_hi as f64 + s_hi as f64,
+                        u.out_qp,
+                        &format!("layer {li} residual add"),
+                        step.index,
+                        &u.buffer,
+                        &mut report,
+                    );
+                }
+            }
+        }
+    }
+
+    if let Some((step, u)) = last_unit {
+        let li = u.layer;
+        check_qp(
+            u.out_qp,
+            &format!("layer {li} output tensor v{}", li + 1),
+            step,
+            &u.buffer,
+            &mut report,
+        );
+    }
+
+    report.steps_checked = input.steps.len();
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::Engine;
+    use crate::optimizer::Planner;
+    use crate::qexec::calibrate_default;
+    use crate::zoo;
+
+    fn numeric_input(name: &str) -> NumericInput {
+        let m = zoo::by_name(name).unwrap();
+        let spec = calibrate_default(&m, Engine::new(m.clone()).params());
+        let setting = Planner::for_model(m.clone()).setting().unwrap();
+        NumericInput::from_qcompiled(&QCompiledPlan::compile(m, setting, spec))
+    }
+
+    #[test]
+    fn calibrated_zoo_plans_prove_numerically_clean() {
+        for name in ["quickstart", "tiny", "kws", "lenet"] {
+            let input = numeric_input(name);
+            let report = verify_ranges(&input);
+            assert!(report.is_clean(), "{name}:\n{}", report.render());
+            assert!(report.steps_checked > 0);
+        }
+    }
+
+    #[test]
+    fn every_boundary_tensor_is_covered_exactly_once() {
+        let input = numeric_input("quickstart");
+        let mut layers: Vec<usize> = input
+            .steps
+            .iter()
+            .flat_map(|s| s.units.iter().map(|u| u.layer))
+            .collect();
+        layers.sort_unstable();
+        let n = layers.len();
+        assert_eq!(layers, (0..n).collect::<Vec<_>>(), "each layer exactly once");
+    }
+
+    #[test]
+    fn clipped_fraction_is_a_fraction() {
+        assert_eq!(clipped_fraction(0.0, 10.0, 0.0, 10.0), 0.0);
+        assert!((clipped_fraction(0.0, 10.0, 0.0, 5.0) - 0.5).abs() < 1e-12);
+        assert_eq!(clipped_fraction(0.0, 10.0, 20.0, 30.0), 1.0);
+        assert_eq!(clipped_fraction(5.0, 5.0, 0.0, 1.0), 0.0, "empty interval");
+    }
+
+    #[test]
+    fn degenerate_scale_and_bad_zero_point_are_flagged() {
+        let mut input = numeric_input("quickstart");
+        let u = &mut input.steps[0].units[0];
+        u.x_qp.scale = 0.0;
+        u.w_qp.as_mut().unwrap().zero_point = 300;
+        let report = verify_ranges(&input);
+        let classes: Vec<_> = report.findings.iter().map(|f| f.class).collect();
+        assert!(classes.contains(&DefectClass::DegenerateScale), "{}", report.render());
+        assert!(classes.contains(&DefectClass::ZeroPointRange), "{}", report.render());
+        assert!(report.has_errors());
+    }
+
+    #[test]
+    fn huge_mac_count_overflows_the_accumulator_bound() {
+        let mut input = numeric_input("quickstart");
+        let u = &mut input.steps[0].units[0];
+        // 2^31 / 255² ≈ 33k: anything well past that must be flagged.
+        u.macs_per_out = 10_000_000;
+        let report = verify_ranges(&input);
+        assert!(
+            report.findings.iter().any(|f| f.class == DefectClass::AccumulatorOverflow),
+            "{}",
+            report.render()
+        );
+    }
+}

@@ -61,22 +61,33 @@ pub struct ScanConflict {
 }
 
 /// Static-analysis verdict of one plan file the scanner loaded
-/// ([`crate::analysis::verify_plan_file`]): clean files deploy, files
-/// with findings are rejected and land in [`ScanReport::errors`] too —
-/// the verdict is *why*, one rendered diagnostic per defect, so
-/// `serve --registry` can log the rejection cause.
+/// ([`crate::analysis::verify_plan_file`]): files without
+/// `Error`-severity findings deploy (warnings are carried in the
+/// verdict and logged), files with errors are rejected and land in
+/// [`ScanReport::errors`] too — the verdict is *why*, one rendered
+/// diagnostic per defect, so `serve --registry` can log the cause.
 #[derive(Debug, Clone)]
 pub struct PlanVerdict {
     pub model_id: String,
     pub path: PathBuf,
-    /// Rendered findings (`[class] step N buffer 'x' bytes [a..b): …`);
-    /// empty for a clean plan.
+    /// Rendered findings (`[class] step N buffer 'x' bytes [a..b): …`,
+    /// warnings prefixed `[warn:class]`); empty for a clean plan.
     pub findings: Vec<String>,
+    /// `Error`-severity findings among `findings` — nonzero means the
+    /// file was rejected.
+    pub errors: usize,
 }
 
 impl PlanVerdict {
+    /// No findings at all (warnings included).
     pub fn is_clean(&self) -> bool {
         self.findings.is_empty()
+    }
+
+    /// Deployable: free of `Error`-severity findings (possibly with
+    /// logged warnings).
+    pub fn is_deployable(&self) -> bool {
+        self.errors == 0
     }
 }
 
@@ -251,17 +262,25 @@ impl PlanRegistry {
                         model_id: model_id.clone(),
                         path: path.clone(),
                         findings: analysis.findings.iter().map(|f| f.render()).collect(),
+                        errors: analysis.error_count(),
                     });
-                    if !analysis.is_clean() {
-                        // Never deploy a plan with findings: the error
-                        // keeps the previous good version live, the
-                        // verdict above says why.
+                    if analysis.has_errors() {
+                        // Never deploy a plan with error-severity
+                        // findings: the error keeps the previous good
+                        // version live, the verdict above says why.
+                        // Warning-only plans deploy (the verdict carries
+                        // the warnings for the caller to log).
+                        let first = analysis
+                            .findings
+                            .iter()
+                            .find(|f| f.severity == crate::analysis::Severity::Error)
+                            .expect("has_errors");
                         report.errors.push((
                             path,
                             format!(
-                                "rejected by static analysis ({} finding(s)): {}",
-                                analysis.findings.len(),
-                                analysis.findings[0].render()
+                                "rejected by static analysis ({} error(s)): {}",
+                                analysis.error_count(),
+                                first.render()
                             ),
                         ));
                         continue;

@@ -105,16 +105,21 @@ impl ModelSpec {
 /// Load + statically verify one plan file
 /// ([`crate::analysis::verify_plan_file`]): parse, resolve the model
 /// against the zoo, and run the full analyzer — the registration-time
-/// gate behind [`ModelSpec::plan_file`]. A plan with findings is never
-/// registered; the error carries every rendered diagnostic.
+/// gate behind [`ModelSpec::plan_file`]. A plan with `Error`-severity
+/// findings is never registered; the error carries every rendered
+/// diagnostic. Warning-only findings are logged to stderr and do not
+/// block registration.
 pub(super) fn load_validated_plan(path: &Path) -> Result<Plan> {
     let (plan, report) = crate::analysis::verify_plan_file(path)?;
-    if !report.is_clean() {
+    if report.has_errors() {
         return Err(crate::anyhow!(
             "plan {} rejected by static analysis:\n{}",
             path.display(),
             report.render()
         ));
+    }
+    for f in &report.findings {
+        eprintln!("plan {}: {}", path.display(), f.render());
     }
     Ok(plan)
 }

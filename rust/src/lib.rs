@@ -224,20 +224,32 @@
 //! On-MCU failures are unrecoverable, so a plan must be provably
 //! well-formed *before* it is deployed — not discovered broken by the
 //! hot path's `debug_assert!`s. The [`analysis`] module is a static
-//! verifier that symbolically checks a compiled plan + pool layout
-//! without executing a single MAC: byte-interval dataflow over the step
-//! list (def-before-use, alias/hazard, lifetime conformance, shape/size
-//! agreement) plus layout integrity (exhaustive collision checking,
-//! watermark recomputation, divergence against a fresh schedule
-//! replay). Findings are structured diagnostics — step index, buffer
-//! name, byte range, defect class — collected exhaustively into an
-//! [`analysis::AnalysisReport`]. The gate is wired end to end:
+//! verifier with two abstract domains, neither of which executes a MAC:
+//!
+//! * **Memory** — byte-interval dataflow over the compiled step list
+//!   (def-before-use, alias/hazard, lifetime conformance, shape/size
+//!   agreement, dead-store lint) plus layout integrity (exhaustive
+//!   collision checking, watermark recomputation, divergence against a
+//!   fresh schedule replay).
+//! * **Numerics** — value-interval abstract interpretation over a
+//!   quantized plan's per-step arithmetic
+//!   ([`analysis::verify_ranges`]): worst-case i32 accumulator bounds
+//!   (overflow freedom), calibration well-formedness (degenerate
+//!   scales, out-of-range zero points), and requant saturation risk.
+//!
+//! Findings are structured diagnostics — step index, buffer name, byte
+//! range, defect class, severity — collected exhaustively into an
+//! [`analysis::AnalysisReport`]. `Error` findings block deployment;
+//! `Warn` findings (saturation risk, dead stores) are rendered
+//! distinctly, logged, and never block. The gate is wired end to end:
 //! [`exec::CompiledPlan`] asserts the hazard invariants once at
 //! compile-time-of-plan, [`optimizer::Plan::validate`] analyzes every
 //! serialized layout at parse, [`coordinator::PlanRegistry`] refuses to
-//! deploy any file with findings (the scan's
-//! [`coordinator::PlanVerdict`]s say why), and `msfcnn verify` exposes
-//! the same verifier on the CLI (nonzero exit on findings).
+//! deploy any file with errors (the scan's
+//! [`coordinator::PlanVerdict`]s say why, warnings included), and
+//! `msfcnn verify` exposes the same verifier on the CLI — nonzero exit
+//! on errors, `--json FILE` exporting every report under the validated
+//! `msfcnn.analysis/v1` schema ([`obs::export`]).
 
 pub mod analysis;
 pub mod backend;

@@ -8,7 +8,7 @@
 //! msfcnn profile --plan FILE [--runs N] [--seed N] [--top K] [--json FILE]
 //! msfcnn simulate --model NAME [--f-max F|inf | --p-max-kb N] [--board B]
 //! msfcnn tables [--which 1|2|3|5|5j|fig2|fig3|fig4|steps|all]
-//! msfcnn verify [--plan FILE | --dir DIR | --zoo]
+//! msfcnn verify [--plan FILE | --dir DIR | --zoo] [--json FILE]
 //! msfcnn registry scan [--dir DIR]
 //! msfcnn bench check [--infer FILE] [--serve FILE]
 //! msfcnn serve --registry DIR [--requests N] [--watch-ms MS] [--trace]
@@ -40,7 +40,7 @@ USAGE:
   msfcnn profile --plan FILE [--runs N] [--seed N] [--top K] [--json FILE]
   msfcnn simulate --model NAME [--f-max F|inf | --p-max-kb N] [--board BOARD] [--trace]
   msfcnn tables [--which 1|2|3|5|5j|fig2|fig3|fig4|steps|all]
-  msfcnn verify [--plan FILE | --dir DIR | --zoo]
+  msfcnn verify [--plan FILE | --dir DIR | --zoo] [--json FILE]
   msfcnn registry scan [--dir DIR]
   msfcnn bench check [--infer FILE] [--serve FILE]
   msfcnn serve --registry DIR [--requests N] [--watch-ms MS] [--trace]
@@ -144,26 +144,39 @@ fn model_arg(args: &Args) -> Result<msf_cnn::model::ModelChain> {
 }
 
 /// Statically verify one plan file for `msfcnn verify`: print its
-/// verdict and return the number of defects charged against it (an
-/// unanalyzable file counts as one).
-fn verify_one(path: &std::path::Path) -> Result<usize> {
+/// verdict, collect its report into `rows` (for `--json` export), and
+/// return the number of `Error`-severity findings charged against it
+/// (an unanalyzable file counts as one). Warnings are printed but never
+/// counted against the exit code.
+fn verify_one(
+    path: &std::path::Path,
+    rows: &mut Vec<(String, msf_cnn::analysis::AnalysisReport)>,
+) -> Result<usize> {
+    let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("plan").to_string();
     match msf_cnn::analysis::verify_plan_file(path) {
         Ok((_plan, report)) => {
-            if report.is_clean() {
+            let errors = report.error_count();
+            let warnings = report.warn_count();
+            if errors == 0 {
+                let warn_note = if warnings > 0 {
+                    format!(", {warnings} warning(s)")
+                } else {
+                    String::new()
+                };
                 println!(
-                    "{}: ok ({} buffer(s), {} step(s) checked)",
+                    "{}: ok ({} buffer(s), {} step(s) checked{warn_note})",
                     path.display(),
                     report.buffers_checked,
                     report.steps_checked
                 );
-                Ok(0)
             } else {
-                eprintln!("{}: {} finding(s)", path.display(), report.findings.len());
-                for f in &report.findings {
-                    eprintln!("  {}", f.render());
-                }
-                Ok(report.findings.len())
+                eprintln!("{}: {errors} error(s), {warnings} warning(s)", path.display());
             }
+            for f in &report.findings {
+                eprintln!("  {}", f.render());
+            }
+            rows.push((name, report));
+            Ok(errors)
         }
         Err(e) => {
             eprintln!("{}: FAIL: {e:#}", path.display());
@@ -501,12 +514,16 @@ fn main() -> Result<()> {
         }
         "verify" => {
             // The static plan verifier as a CLI gate: analyze plan
-            // JSON(s) without executing them; nonzero exit on findings.
+            // JSON(s) without executing them; nonzero exit on
+            // `Error`-severity findings (warnings are surfaced but never
+            // fail the gate). `--json FILE` exports every analyzed
+            // plan's structured report under `msfcnn.analysis/v1`.
             let mut checked = 0usize;
-            let mut defects = 0usize;
+            let mut errors = 0usize;
+            let mut rows: Vec<(String, msf_cnn::analysis::AnalysisReport)> = Vec::new();
             if let Some(path) = args.get("plan") {
                 checked += 1;
-                defects += verify_one(std::path::Path::new(path))?;
+                errors += verify_one(std::path::Path::new(path), &mut rows)?;
             } else if let Some(dir) = args.get("dir") {
                 let mut files: Vec<std::path::PathBuf> = std::fs::read_dir(dir)
                     .map_err(|e| anyhow!("reading {dir}: {e}"))?
@@ -523,7 +540,7 @@ fn main() -> Result<()> {
                 }
                 for path in files {
                     checked += 1;
-                    defects += verify_one(&path)?;
+                    errors += verify_one(&path, &mut rows)?;
                 }
             } else if args.has("zoo") {
                 // Plan the whole zoo across every strategy, write the
@@ -565,24 +582,43 @@ fn main() -> Result<()> {
                         let path = dir.join(format!("{name}--{sname}.plan.json"));
                         plan.save(&path)?;
                         checked += 1;
-                        defects += verify_one(&path)?;
+                        errors += verify_one(&path, &mut rows)?;
                         // The int8 twin: same setting + calibrated spec,
-                        // proved over byte-granular mixed-width intervals.
+                        // proved over byte-granular mixed-width intervals
+                        // plus the numeric value-range pass (accumulator
+                        // overflow, calibration well-formedness,
+                        // saturation risk).
                         let qplan = plan.with_quant(spec.clone());
                         let qpath = dir.join(format!("{name}--{sname}--int8.plan.json"));
                         qplan.save(&qpath)?;
                         checked += 1;
-                        defects += verify_one(&qpath)?;
+                        errors += verify_one(&qpath, &mut rows)?;
                     }
                 }
                 let _ = std::fs::remove_dir_all(&dir);
             } else {
                 bail!("verify needs --plan FILE, --dir DIR, or --zoo\n\n{USAGE}");
             }
-            if defects > 0 {
-                bail!("{defects} finding(s) across {checked} plan(s)");
+            // Export before gating so a failing run still leaves the
+            // structured report behind for diagnosis.
+            if let Some(f) = args.get("json") {
+                if rows.is_empty() {
+                    bail!("--json {f}: no analyzable plans to export");
+                }
+                let doc = msf_cnn::obs::export::analysis_snapshot(&rows);
+                msf_cnn::obs::export::validate_analysis_snapshot(&doc)?;
+                std::fs::write(f, &doc).map_err(|e| anyhow!("writing --json {f}: {e}"))?;
+                println!("analysis report written to {f}");
             }
-            println!("verify: {checked} plan(s) clean");
+            if errors > 0 {
+                bail!("{errors} error(s) across {checked} plan(s)");
+            }
+            let warnings: usize = rows.iter().map(|(_, r)| r.warn_count()).sum();
+            if warnings > 0 {
+                println!("verify: {checked} plan(s) deployable ({warnings} warning(s))");
+            } else {
+                println!("verify: {checked} plan(s) clean");
+            }
         }
         "registry" => {
             use msf_cnn::coordinator::PlanRegistry;
@@ -603,17 +639,28 @@ fn main() -> Result<()> {
                         );
                     }
                     // Static-analysis verdict per (re)loaded file: why a
-                    // plan was rejected, finding by finding.
+                    // plan was rejected (or deployed with warnings),
+                    // finding by finding.
                     for v in &report.verdicts {
-                        if !v.is_clean() {
+                        if v.is_clean() {
+                            continue;
+                        }
+                        if v.is_deployable() {
+                            eprintln!(
+                                "WARN: {} ('{}') deployed with {} warning(s):",
+                                v.path.display(),
+                                v.model_id,
+                                v.findings.len()
+                            );
+                        } else {
                             eprintln!(
                                 "WARN: {} ('{}') rejected by static analysis:",
                                 v.path.display(),
                                 v.model_id
                             );
-                            for f in &v.findings {
-                                eprintln!("  {f}");
-                            }
+                        }
+                        for f in &v.findings {
+                            eprintln!("  {f}");
                         }
                     }
                     println!("plan registry {dir}: {} model(s)", registry.len());
@@ -704,18 +751,29 @@ fn main() -> Result<()> {
                     c.chosen.display()
                 );
             }
-            // Say *why* a plan was rejected: the scan's static-analysis
-            // verdicts, one rendered finding per line.
+            // Say *why* a plan was rejected (or deployed with
+            // warnings): the scan's static-analysis verdicts, one
+            // rendered finding per line.
             for v in &report.verdicts {
-                if !v.is_clean() {
+                if v.is_clean() {
+                    continue;
+                }
+                if v.is_deployable() {
+                    eprintln!(
+                        "WARN: {} ('{}') deployed with {} warning(s):",
+                        v.path.display(),
+                        v.model_id,
+                        v.findings.len()
+                    );
+                } else {
                     eprintln!(
                         "WARN: {} ('{}') rejected by static analysis:",
                         v.path.display(),
                         v.model_id
                     );
-                    for f in &v.findings {
-                        eprintln!("  {f}");
-                    }
+                }
+                for f in &v.findings {
+                    eprintln!("  {f}");
                 }
             }
             if registry.is_empty() {

@@ -8,6 +8,8 @@
 //! against before writing, and what `msfcnn bench check` /
 //! `make bench-snapshot` / CI run afterwards — a snapshot whose shape
 //! drifts fails the gate instead of silently rotting the trajectory.
+//! `msfcnn verify --json` exports the static verifier's findings the
+//! same way under [`ANALYSIS_SCHEMA`].
 //!
 //! The writers are hand-rolled (no serde in the offline build); the
 //! validators parse with [`crate::util::json`] and name the missing or
@@ -26,6 +28,11 @@ pub const BENCH_SCHEMA: &str = "msfcnn.bench/v2";
 
 /// Schema tag of standalone `msfcnn profile --json` snapshots.
 pub const PROFILE_SCHEMA: &str = "msfcnn.profile/v1";
+
+/// Schema tag of `msfcnn verify --json` snapshots: the static
+/// verifier's structured [`crate::analysis::AnalysisReport`]s, one row
+/// per analyzed plan.
+pub const ANALYSIS_SCHEMA: &str = "msfcnn.analysis/v1";
 
 fn jstr(s: &str) -> String {
     format!("\"{}\"", escape(s))
@@ -235,6 +242,60 @@ pub fn profile_snapshot(profile: &StepProfile) -> String {
     )
 }
 
+/// Render a `msfcnn verify --json` snapshot, schema [`ANALYSIS_SCHEMA`]:
+/// one row per analyzed plan (`(display name, report)` pairs) carrying
+/// severity-split counts, coverage counters, and every structured
+/// finding. `step` and `bytes` are `null` when the finding is not
+/// step- or range-local.
+pub fn analysis_snapshot(rows: &[(String, crate::analysis::AnalysisReport)]) -> String {
+    let body: Vec<String> = rows
+        .iter()
+        .map(|(plan, r)| {
+            let findings: Vec<String> = r
+                .findings
+                .iter()
+                .map(|f| {
+                    let step = f.step.map_or("null".to_string(), |s| s.to_string());
+                    let bytes = f
+                        .bytes
+                        .map_or("null".to_string(), |(lo, hi)| format!("[{lo}, {hi}]"));
+                    format!(
+                        "        {{\"class\": {}, \"severity\": {}, \"step\": {step}, \"buffer\": {}, \"bytes\": {bytes}, \"detail\": {}}}",
+                        jstr(f.class.name()),
+                        jstr(f.severity.name()),
+                        jstr(&f.buffer),
+                        jstr(&f.detail),
+                    )
+                })
+                .collect();
+            let findings_json = if findings.is_empty() {
+                "[]".to_string()
+            } else {
+                format!("[\n{}\n      ]", findings.join(",\n"))
+            };
+            format!(
+                "    {{\n      \"plan\": {},\n      \"errors\": {},\n      \"warnings\": {},\n      \"steps_checked\": {},\n      \"buffers_checked\": {},\n      \"findings\": {}\n    }}",
+                jstr(plan),
+                r.error_count(),
+                r.warn_count(),
+                r.steps_checked,
+                r.buffers_checked,
+                findings_json,
+            )
+        })
+        .collect();
+    let errors: usize = rows.iter().map(|(_, r)| r.error_count()).sum();
+    let warnings: usize = rows.iter().map(|(_, r)| r.warn_count()).sum();
+    format!(
+        "{{\n  \"schema\": {},\n  \"plans\": {},\n  \"errors\": {},\n  \"warnings\": {},\n  \"results\": [\n{}\n  ]\n}}\n",
+        jstr(ANALYSIS_SCHEMA),
+        rows.len(),
+        errors,
+        warnings,
+        body.join(",\n")
+    )
+}
+
 // ---------------------------------------------------------------------
 // Validators
 // ---------------------------------------------------------------------
@@ -383,6 +444,50 @@ pub fn validate_profile_snapshot(text: &str) -> Result<()> {
     check_steps(&root, "$")
 }
 
+/// Validate a `msfcnn verify --json` document against [`ANALYSIS_SCHEMA`].
+pub fn validate_analysis_snapshot(text: &str) -> Result<()> {
+    let root = Json::parse(text).map_err(|e| anyhow!("analysis snapshot: {e}"))?;
+    let schema = need_str(&root, "schema", "$")?;
+    if schema != ANALYSIS_SCHEMA {
+        bail!("snapshot schema: expected '{ANALYSIS_SCHEMA}', found '{schema}'");
+    }
+    for key in ["plans", "errors", "warnings"] {
+        need_num(&root, key, "$")?;
+    }
+    let results = need_arr(&root, "results", "$")?;
+    if results.is_empty() {
+        bail!("snapshot schema: '$.results' is empty");
+    }
+    if results.len() as f64 != need_num(&root, "plans", "$")? {
+        bail!("snapshot schema: '$.plans' disagrees with '$.results' length");
+    }
+    for (i, row) in results.iter().enumerate() {
+        let at = format!("$.results[{i}]");
+        need_str(row, "plan", &at)?;
+        for key in ["errors", "warnings", "steps_checked", "buffers_checked"] {
+            need_num(row, key, &at)?;
+        }
+        let findings = need_arr(row, "findings", &at)?;
+        for (j, f) in findings.iter().enumerate() {
+            let fat = format!("{at}.findings[{j}]");
+            let class = need_str(f, "class", &fat)?;
+            if crate::analysis::DefectClass::from_name(class).is_none() {
+                bail!("snapshot schema: '{fat}.class' is not a known defect class: '{class}'");
+            }
+            let sev = need_str(f, "severity", &fat)?;
+            if sev != "error" && sev != "warn" {
+                bail!("snapshot schema: '{fat}.severity' must be 'error' or 'warn', found '{sev}'");
+            }
+            need_str(f, "buffer", &fat)?;
+            need_str(f, "detail", &fat)?;
+            // Optional locations are still required keys: null or value.
+            need(f, "step", &fat)?;
+            need(f, "bytes", &fat)?;
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -466,6 +571,61 @@ mod tests {
     fn profile_snapshot_roundtrips_through_its_validator() {
         let json = profile_snapshot(&tiny_profile());
         validate_profile_snapshot(&json).unwrap();
+    }
+
+    #[test]
+    fn analysis_snapshot_roundtrips_through_its_validator() {
+        use crate::analysis::{AnalysisReport, DefectClass, Finding};
+        let mut clean = AnalysisReport::new();
+        clean.steps_checked = 4;
+        clean.buffers_checked = 6;
+        let mut dirty = AnalysisReport::new();
+        dirty.steps_checked = 2;
+        dirty.buffers_checked = 3;
+        dirty.push(
+            Finding::new(DefectClass::AccumulatorOverflow, "bound exceeds i32")
+                .at_step(1)
+                .on_buffer("v1"),
+        );
+        dirty.push(
+            Finding::new(DefectClass::DeadStore, "store is never read")
+                .warn()
+                .at_step(0)
+                .on_buffer("buf0")
+                .in_bytes(0, 63),
+        );
+        let rows = vec![("clean.json".to_string(), clean), ("dirty.json".to_string(), dirty)];
+        let json = analysis_snapshot(&rows);
+        validate_analysis_snapshot(&json).unwrap();
+        assert!(json.contains("\"errors\": 1"), "{json}");
+        assert!(json.contains("\"warnings\": 1"), "{json}");
+        assert!(json.contains("\"severity\": \"warn\""), "{json}");
+        assert!(json.contains("\"bytes\": [0, 63]"), "{json}");
+    }
+
+    #[test]
+    fn analysis_validator_rejects_drift() {
+        use crate::analysis::{AnalysisReport, DefectClass, Finding};
+        let mut report = AnalysisReport::new();
+        report.steps_checked = 1;
+        report.buffers_checked = 1;
+        report.push(Finding::new(DefectClass::DeadStore, "x").warn().at_step(0));
+        let json = analysis_snapshot(&[("p.json".to_string(), report)]);
+        // A renamed field is schema drift.
+        let broken = json.replace("\"steps_checked\"", "\"renamed_field\"");
+        let err = validate_analysis_snapshot(&broken).unwrap_err();
+        assert!(err.to_string().contains("steps_checked"), "{err}");
+        // A defect class the binary does not know is drift.
+        let unknown = json.replace("\"dead-store\"", "\"made-up-class\"");
+        assert!(validate_analysis_snapshot(&unknown).is_err());
+        // A schema version bump fails the v1 gate.
+        let v2 = json.replace("msfcnn.analysis/v1", "msfcnn.analysis/v2");
+        assert!(validate_analysis_snapshot(&v2).is_err());
+        // Empty results are drift too.
+        let empty = format!(
+            "{{\"schema\": \"{ANALYSIS_SCHEMA}\", \"plans\": 0, \"errors\": 0, \"warnings\": 0, \"results\": []}}"
+        );
+        assert!(validate_analysis_snapshot(&empty).is_err());
     }
 
     #[test]

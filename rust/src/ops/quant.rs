@@ -62,6 +62,40 @@ impl QParams {
     pub fn dequantize(&self, q: i8) -> f32 {
         (q as i32 - self.zero_point) as f32 * self.scale
     }
+
+    /// Smallest scale the verifier treats as non-degenerate. Calibration
+    /// never produces less ([`Self::from_range`] floors the span at
+    /// `f32::EPSILON`, giving `scale >= EPSILON / 255 ≈ 4.7e-10`), so
+    /// anything below is a corrupted or hand-edited spec.
+    pub const MIN_SCALE: f32 = 1e-12;
+
+    /// True when the scale cannot drive a meaningful affine map:
+    /// non-finite, non-positive, or below [`Self::MIN_SCALE`]. Such a
+    /// spec quantizes everything to a clamp edge.
+    pub fn is_degenerate(&self) -> bool {
+        !self.scale.is_finite() || self.scale < Self::MIN_SCALE
+    }
+
+    /// Worst-case bounds of the zero-point-corrected term `q - zp` over
+    /// the full int8 range `q ∈ [-128, 127]` — the per-operand factor of
+    /// the accumulator overflow bound (i64: an out-of-range zero point
+    /// must widen the bound, not wrap it).
+    pub fn q_dev_bounds(&self) -> (i64, i64) {
+        (-128 - self.zero_point as i64, 127 - self.zero_point as i64)
+    }
+
+    /// Largest magnitude of `|q - zp|` over the full int8 range.
+    pub fn max_abs_q_dev(&self) -> i64 {
+        let (lo, hi) = self.q_dev_bounds();
+        lo.abs().max(hi.abs())
+    }
+
+    /// The real-valued interval this tensor can represent:
+    /// `[dequantize(-128), dequantize(127)]` — what the requantization
+    /// epilogue clamps into.
+    pub fn representable(&self) -> (f32, f32) {
+        (self.dequantize(-128), self.dequantize(127))
+    }
 }
 
 /// Full quantization configuration of one plan: a [`QParams`] per
@@ -524,6 +558,23 @@ mod tests {
         assert_eq!(qp.quantize(-1.0), -128);
         assert_eq!(qp.quantize(3.0), 127);
         assert!((qp.dequantize(qp.quantize(0.0))).abs() < qp.scale);
+    }
+
+    #[test]
+    fn worst_case_bound_helpers_match_definitions() {
+        let qp = QParams::from_range(-1.0, 3.0);
+        let (lo, hi) = qp.q_dev_bounds();
+        assert_eq!(lo, -128 - qp.zero_point as i64);
+        assert_eq!(hi, 127 - qp.zero_point as i64);
+        assert_eq!(qp.max_abs_q_dev(), lo.abs().max(hi.abs()));
+        let (rlo, rhi) = qp.representable();
+        assert!(rlo <= -1.0 + qp.scale && rhi >= 3.0 - qp.scale, "{rlo}..{rhi}");
+        assert!(!qp.is_degenerate());
+        assert!(QParams { scale: 0.0, zero_point: 0 }.is_degenerate());
+        assert!(QParams { scale: f32::NAN, zero_point: 0 }.is_degenerate());
+        assert!(QParams { scale: 1e-13, zero_point: 0 }.is_degenerate());
+        // An out-of-range zero point widens the deviation bound past 255.
+        assert!(QParams { scale: 1.0, zero_point: 300 }.max_abs_q_dev() > 255);
     }
 
     #[test]

@@ -462,7 +462,7 @@ impl Plan {
             // lifetimes, watermark recomputation) — every finding, not
             // just the first, rendered into the rejection.
             let report = crate::analysis::verify_layout(p);
-            if !report.is_clean() {
+            if report.has_errors() {
                 bail!(
                     "plan for '{}': pool layout failed static analysis:\n{}",
                     self.model,

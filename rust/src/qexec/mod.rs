@@ -39,4 +39,4 @@ mod qcompiled;
 
 pub use calibrate::{calibrate, calibrate_default};
 pub use qband::QFusedBlock;
-pub use qcompiled::{QCompiledPlan, QPlanPool};
+pub use qcompiled::{QCompiledPlan, QPlanPool, QStepNumerics, QUnitNumerics};

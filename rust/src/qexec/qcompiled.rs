@@ -22,7 +22,7 @@ use std::ops::Range;
 
 use crate::exec::{lower_steps, BufAccess, Lowered, RtBufInfo, Src, Step, StepAccess};
 use crate::memory::{assign_offsets, layout_from_schedule, schedule_intervals, PoolLayout};
-use crate::model::{Layer, LayerKind, ModelChain};
+use crate::model::{Activation, Layer, LayerKind, ModelChain};
 use crate::ops::{
     dequantize_into, qavg_pool2d_into, qconv2d_into, qdense_into, qdwconv2d_into,
     qgap_accumulate, qgap_finish, qgap_reset, qmax_pool2d_into, qresidual_add, quantize_into,
@@ -53,6 +53,53 @@ struct QBufMeta {
     label: String,
     birth: usize,
     rt_death: usize,
+}
+
+/// One layer's worth of numeric metadata inside a compiled step — the
+/// unit of the value-range abstract interpretation
+/// ([`crate::analysis::verify_ranges`]). Carries exactly what the
+/// concrete kernel consumes: the quantization parameters of its input /
+/// weight / output tensors, the activation fold, the bias range, and
+/// the accumulation count per output element.
+#[derive(Debug, Clone)]
+pub struct QUnitNumerics {
+    /// Model layer index this unit executes.
+    pub layer: usize,
+    pub kind: LayerKind,
+    /// Activation folded into the requantization epilogue.
+    pub act: Activation,
+    /// Label of the pool buffer this unit's outputs land in
+    /// (diagnostics).
+    pub buffer: String,
+    /// i32 accumulation terms per output element: `k²·cin` for conv,
+    /// `k²` for depthwise and pools (raw-q sums), `h·w` pixels for the
+    /// global pool, `din` for dense. Max pooling accumulates nothing.
+    pub macs_per_out: u64,
+    /// Input tensor parameters (`spec.tensors[layer]`).
+    pub x_qp: QParams,
+    /// Weight parameters (`spec.weights[layer]`); `None` for weightless
+    /// pool layers.
+    pub w_qp: Option<QParams>,
+    /// Output tensor parameters (`spec.tensors[layer + 1]`).
+    pub out_qp: QParams,
+    /// `[min, max]` of the f32 bias folded into the epilogue (0 when
+    /// the layer carries no bias).
+    pub bias_lo: f32,
+    pub bias_hi: f32,
+    /// Parameters of the residual stash added after this layer's
+    /// epilogue (`spec.tensors[residual_from]`), when one exists.
+    pub residual_qp: Option<QParams>,
+}
+
+/// Numeric metadata of one compiled step: every layer it executes, in
+/// kernel order ([`QCompiledPlan::step_numerics`]).
+#[derive(Debug, Clone)]
+pub struct QStepNumerics {
+    /// Step index in execution order.
+    pub index: usize,
+    /// Step label (matches [`QCompiledPlan::step_accesses`]).
+    pub label: String,
+    pub units: Vec<QUnitNumerics>,
 }
 
 /// The per-serving-slot mutable state of a quantized plan: the int8 byte
@@ -645,6 +692,111 @@ impl QCompiledPlan {
                     }
                 }
                 acc
+            })
+            .collect()
+    }
+
+    /// One layer's numeric metadata; residual parameters attach at the
+    /// call site (only `Step::Single` carries a residual add).
+    fn unit_numerics(&self, li: usize, buffer: String) -> QUnitNumerics {
+        let l = &self.model.layers[li];
+        let s_in = self.model.shapes[li];
+        let k = l.k as u64;
+        let macs_per_out = match l.kind {
+            LayerKind::Conv2d => k * k * s_in.c as u64,
+            LayerKind::DwConv2d | LayerKind::AvgPool | LayerKind::MaxPool => k * k,
+            LayerKind::GlobalAvgPool => s_in.h as u64 * s_in.w as u64,
+            LayerKind::Dense => s_in.elems(),
+        };
+        let w_qp = match l.kind {
+            LayerKind::Conv2d | LayerKind::DwConv2d | LayerKind::Dense => {
+                Some(self.spec.weights[li])
+            }
+            _ => None,
+        };
+        let bias = &self.qparams[li].bias;
+        let (bias_lo, bias_hi) = if bias.is_empty() {
+            (0.0, 0.0)
+        } else {
+            bias.iter()
+                .fold((f32::INFINITY, f32::NEG_INFINITY), |(lo, hi), &b| (lo.min(b), hi.max(b)))
+        };
+        QUnitNumerics {
+            layer: li,
+            kind: l.kind,
+            act: l.act,
+            buffer,
+            macs_per_out,
+            x_qp: self.spec.tensors[li],
+            w_qp,
+            out_qp: self.spec.tensors[li + 1],
+            bias_lo,
+            bias_hi,
+            residual_qp: None,
+        }
+    }
+
+    /// The numeric metadata of every step, in execution order — exactly
+    /// the quantization parameters and per-output-element accumulation
+    /// geometry the kernels in [`crate::ops`] consume, so the
+    /// value-range pass ([`crate::analysis::verify_ranges`]) analyzes
+    /// the same arithmetic the hot path executes. Fused bands run the
+    /// same per-layer kernel math as unfused layers (padding rows carry
+    /// the zero point, contributing exactly 0), so one unit per layer
+    /// covers both lowerings.
+    pub fn step_numerics(&self) -> Vec<QStepNumerics> {
+        self.steps
+            .iter()
+            .enumerate()
+            .map(|(index, step)| {
+                let (label, units) = match step {
+                    Step::StashSave { dst, .. } => {
+                        (format!("q-{}", self.buf_meta[*dst].label), Vec::new())
+                    }
+                    Step::Single { layer, out, residual, .. } => {
+                        let mut u =
+                            self.unit_numerics(*layer, self.buf_meta[*out].label.clone());
+                        if residual.is_some() {
+                            let src = self.model.layers[*layer]
+                                .residual_from
+                                .expect("residual step without source");
+                            u.residual_qp = Some(self.spec.tensors[src]);
+                        }
+                        (format!("q-single[{layer}]"), vec![u])
+                    }
+                    Step::Fused { a, conv_end, bands, out, .. } => {
+                        let units = (*a..*conv_end)
+                            .map(|li| {
+                                let dst = if li + 1 == *conv_end { *out } else { *bands };
+                                self.unit_numerics(li, self.buf_meta[dst].label.clone())
+                            })
+                            .collect();
+                        (format!("q-fused[{a}..{conv_end})"), units)
+                    }
+                    Step::FusedIter { a, conv_end, bands, pool_acc, dense, .. } => {
+                        let mut units: Vec<QUnitNumerics> = (*a..*conv_end)
+                            .map(|li| {
+                                self.unit_numerics(li, self.buf_meta[*bands].label.clone())
+                            })
+                            .collect();
+                        // The rewritten global pool (layer `conv_end`)
+                        // accumulates into the i32 pool accumulator.
+                        units.push(
+                            self.unit_numerics(
+                                *conv_end,
+                                self.buf_meta[*pool_acc].label.clone(),
+                            ),
+                        );
+                        for &(li, acc_id) in dense {
+                            units.push(
+                                self.unit_numerics(li, self.buf_meta[acc_id].label.clone()),
+                            );
+                        }
+                        let end = dense.last().map_or(*conv_end + 1, |&(li, _)| li + 1);
+                        (format!("q-fused-iter[{a}..{end})"), units)
+                    }
+                };
+                QStepNumerics { index, label, units }
             })
             .collect()
     }

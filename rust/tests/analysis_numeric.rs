@@ -1,0 +1,314 @@
+//! Numeric-soundness verifier integration: the small-model zoo × every
+//! strategy proves its int8 twins free of accumulator overflow with
+//! well-formed calibration, each injected numeric defect class is
+//! pinned to its finding (step index + buffer name), a saturation-risk
+//! warning never blocks registry deploy, the abstract value ranges
+//! bound what the concrete int8 kernels actually produce, and the
+//! defect-class taxonomy round-trips exhaustively.
+
+use std::path::PathBuf;
+
+use msf_cnn::analysis::{self, ranges, DefectClass, NumericInput, Severity};
+use msf_cnn::coordinator::{MultiModelServer, PlanRegistry};
+use msf_cnn::model::{Layer, ModelChain, TensorShape};
+use msf_cnn::ops::{LayerParams, ParamGen, Tensor};
+use msf_cnn::optimizer::{strategy, Constraints, Planner, PlanStrategy};
+use msf_cnn::qexec::{calibrate_default, QCompiledPlan};
+use msf_cnn::zoo;
+
+const STRATEGIES: [(&str, &dyn PlanStrategy); 5] = [
+    ("p1", &strategy::P1),
+    ("p2", &strategy::P2),
+    ("vanilla", &strategy::Vanilla),
+    ("head-fusion", &strategy::HeadFusion),
+    ("streamnet", &strategy::StreamNet),
+];
+
+/// The models small enough to calibrate (one f32 inference each) inside
+/// a debug-build test; `msfcnn verify --zoo` covers the full zoo in
+/// release as the CI `make analysis` gate.
+const SMALL_MODELS: [&str; 4] = ["quickstart", "tiny", "lenet", "kws"];
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("msfcnn-an-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn params_for(m: &ModelChain) -> Vec<LayerParams> {
+    m.layers.iter().enumerate().map(|(i, l)| LayerParams::for_layer(l, i)).collect()
+}
+
+fn calibrated_spec(m: &ModelChain) -> msf_cnn::ops::QuantSpec {
+    calibrate_default(m, &params_for(m))
+}
+
+// ------------------------------------------------------- clean int8 matrix
+
+/// Every plannable `(small model, strategy)` pair's int8 twin verifies
+/// with zero findings: no accumulator can overflow, every calibration
+/// parameter is well-formed, no requant epilogue is at saturation risk,
+/// and no store is dead — the numeric pass has no false positives on
+/// honestly calibrated plans.
+#[test]
+fn small_zoo_int8_matrix_verifies_numerically_clean() {
+    let mut verified = 0usize;
+    for name in SMALL_MODELS {
+        let m = zoo::by_name(name).unwrap();
+        let spec = calibrated_spec(&m);
+        let mut planner = Planner::for_model(m.clone());
+        for (sname, s) in STRATEGIES {
+            let plan = match planner.plan_with(s, Constraints::none()) {
+                Ok(p) => p,
+                Err(_) => continue, // infeasible pair: nothing to verify
+            };
+            let qplan = plan.with_quant(spec.clone());
+            let report = analysis::verify_plan(&qplan, &m);
+            assert!(report.is_clean(), "{name} x {sname} int8:\n{}", report.render());
+            assert!(report.steps_checked > 0, "{name} x {sname}: no steps walked");
+            verified += 1;
+        }
+    }
+    assert!(verified >= 2 * SMALL_MODELS.len(), "matrix mostly infeasible: {verified}");
+}
+
+// -------------------------------------------------------- defect injection
+
+/// A model whose dense reduction is long enough that the worst-case
+/// `|x-zx|·|w-zw|` sum provably exceeds i32 — the overflow finding names
+/// the step and the buffer the accumulator feeds.
+#[test]
+fn genuine_accumulator_overflow_is_flagged_with_location() {
+    // 200000 taps x |dev| <= 255*255 could reach ~1.3e10 >> i32::MAX;
+    // even the most favorable zero points leave 200000*128*128 ~ 3.3e9.
+    let m = ModelChain::new(
+        "ovf",
+        TensorShape::new(1, 1, 200_000),
+        vec![Layer::dense("fc", 200_000, 8)],
+    );
+    let spec = calibrated_spec(&m);
+    let plan = Planner::for_model(m.clone())
+        .plan_with(&strategy::Vanilla, Constraints::none())
+        .unwrap()
+        .with_quant(spec);
+    let report = analysis::verify_plan(&plan, &m);
+    assert!(report.has_errors(), "overflow not flagged:\n{}", report.render());
+    let f = report
+        .findings
+        .iter()
+        .find(|f| f.class == DefectClass::AccumulatorOverflow)
+        .unwrap_or_else(|| panic!("no overflow finding:\n{}", report.render()));
+    assert_eq!(f.severity, Severity::Error);
+    assert!(f.step.is_some(), "overflow finding names no step: {}", f.render());
+    assert!(!f.buffer.is_empty(), "overflow finding names no buffer: {}", f.render());
+}
+
+/// Calibration corruptions of an in-memory numeric view land in their
+/// own classes: a collapsed scale is `degenerate-scale`, an impossible
+/// zero point is `zero-point-range`, both located at the unit's step.
+#[test]
+fn corrupted_calibration_is_flagged_by_class() {
+    let m = zoo::by_name("quickstart").unwrap();
+    let spec = calibrated_spec(&m);
+    let setting = Planner::for_model(m.clone()).setting().unwrap();
+    let q = QCompiledPlan::compile(m, setting, spec);
+    let good = NumericInput::from_qcompiled(&q);
+    assert!(ranges::verify_ranges(&good).is_clean());
+
+    let mut input = good.clone();
+    input.steps[0].units[0].x_qp.scale = 0.0;
+    let report = ranges::verify_ranges(&input);
+    let f = report
+        .findings
+        .iter()
+        .find(|f| f.class == DefectClass::DegenerateScale)
+        .unwrap_or_else(|| panic!("no degenerate-scale finding:\n{}", report.render()));
+    assert_eq!(f.step, Some(input.steps[0].index));
+
+    let mut input = good.clone();
+    if let Some(w) = input.steps[0].units[0].w_qp.as_mut() {
+        w.zero_point = 300;
+    }
+    let report = ranges::verify_ranges(&input);
+    assert!(
+        report.findings.iter().any(|f| f.class == DefectClass::ZeroPointRange),
+        "no zero-point-range finding:\n{}",
+        report.render()
+    );
+}
+
+/// A requant scale collapsed by three orders of magnitude (still legal:
+/// positive, parseable, non-degenerate) puts the epilogue at saturation
+/// risk — flagged as a warning with the estimated clipped fraction, and
+/// never as a deploy-blocking error. The corruption survives the JSON
+/// round trip, so `verify_plan_file` catches it on disk too.
+#[test]
+fn saturating_requant_scale_warns_without_blocking() {
+    let dir = tmp_dir("satwarn");
+    let m = zoo::by_name("quickstart").unwrap();
+    let mut spec = calibrated_spec(&m);
+    // Tensor v1 is the first Relu6 conv's output: the worst case there
+    // is certain ([0, 6]), so the shrunken representable range clips an
+    // estimated ~99.9% of it.
+    spec.tensors[1].scale /= 1000.0;
+    let plan = Planner::for_model(m.clone()).plan().unwrap().with_quant(spec);
+
+    let report = analysis::verify_plan(&plan, &m);
+    assert!(!report.has_errors(), "warning escalated to error:\n{}", report.render());
+    assert!(report.warn_count() >= 1, "no saturation warning:\n{}", report.render());
+    for f in report.findings.iter().filter(|f| f.severity == Severity::Warn) {
+        assert_eq!(f.class, DefectClass::SaturationRisk, "{}", f.render());
+        assert!(f.detail.contains('%'), "no clipped fraction estimate: {}", f.render());
+    }
+
+    let path = dir.join("quickstart.plan.json");
+    plan.save(&path).unwrap();
+    let (_, from_disk) = analysis::verify_plan_file(&path).unwrap();
+    assert!(!from_disk.has_errors(), "{}", from_disk.render());
+    assert!(
+        from_disk.findings.iter().any(|f| f.class == DefectClass::SaturationRisk),
+        "corruption lost in the JSON round trip:\n{}",
+        from_disk.render()
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ------------------------------------------------------ deploy-time gates
+
+/// Registry sync deploys a plan whose only findings are warnings: the
+/// verdict carries them (`!is_clean()` but `is_deployable()`), nothing
+/// lands in `ScanReport::errors`, and the model serves.
+#[test]
+fn registry_sync_deploys_warn_only_plans() {
+    let dir = tmp_dir("warndeploy");
+    let m = zoo::by_name("quickstart").unwrap();
+    let mut spec = calibrated_spec(&m);
+    spec.tensors[1].scale /= 1000.0;
+    let plan = Planner::for_model(m.clone()).plan().unwrap().with_quant(spec);
+    plan.save(dir.join("quickstart.plan.json")).unwrap();
+
+    let mut registry = PlanRegistry::open(&dir).unwrap();
+    let server = MultiModelServer::new();
+    let handle = server.handle();
+    let report = registry.sync(&handle).unwrap();
+
+    assert_eq!(report.added, vec!["quickstart".to_string()], "{report:?}");
+    assert!(report.errors.is_empty(), "warning blocked deploy: {report:?}");
+    assert_eq!(report.verdicts.len(), 1);
+    let v = &report.verdicts[0];
+    assert!(!v.is_clean(), "warnings missing from the verdict: {v:?}");
+    assert!(v.is_deployable(), "{v:?}");
+    assert!(
+        v.findings.iter().any(|f| f.contains("[warn:saturation-risk]")),
+        "verdict does not render the warning distinctly: {v:?}"
+    );
+    assert!(handle.model_ids().contains(&"quickstart".to_string()), "model not serving");
+
+    drop(handle);
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// --------------------------------------------------- range/kernel parity
+
+/// The abstract interpretation is sound against the concrete kernels:
+/// dequantized logits from adversarial inputs stay inside the final
+/// unit's proven real-value bounds intersected with its representable
+/// range (one quantization step of slack for rounding).
+#[test]
+fn abstract_ranges_bound_measured_kernel_extrema() {
+    for name in ["quickstart", "tiny", "kws"] {
+        let m = zoo::by_name(name).unwrap();
+        let spec = calibrated_spec(&m);
+        let setting = Planner::for_model(m.clone()).setting().unwrap();
+        let q = QCompiledPlan::compile(m.clone(), setting, spec);
+
+        let numerics = NumericInput::from_qcompiled(&q);
+        let last = numerics
+            .steps
+            .iter()
+            .flat_map(|s| s.units.iter())
+            .max_by_key(|u| u.layer)
+            .expect("a final unit");
+        let (a_lo, a_hi) = ranges::unit_real_bounds(last);
+        let (r_lo, r_hi) = last.out_qp.representable();
+        let slack = last.out_qp.scale as f64;
+        let lo = a_lo.max(r_lo as f64) - slack;
+        let hi = a_hi.min(r_hi as f64) + slack;
+
+        let s = m.shapes[0];
+        let n = s.elems() as usize;
+        let mut pool = q.make_pool();
+        let mut out = vec![0.0f32; q.output_len()];
+        let mut adversarial: Vec<Vec<f32>> = vec![
+            vec![1e6; n],
+            vec![-1e6; n],
+            (0..n).map(|i| if i % 2 == 0 { 1e6 } else { -1e6 }).collect(),
+        ];
+        for seed in [1u64, 7, 17, 42] {
+            adversarial.push(ParamGen::new(seed).fill(n, 100.0));
+        }
+        for data in adversarial {
+            let x = Tensor::from_data(s.h as usize, s.w as usize, s.c as usize, data);
+            q.run_into(x.as_map(), &mut pool, &mut out);
+            for &y in &out {
+                assert!(
+                    (y as f64) >= lo && (y as f64) <= hi,
+                    "{name}: logit {y} escapes proven range [{lo}, {hi}]"
+                );
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------- taxonomy round-trip
+
+/// Every defect class round-trips through its stable name, the names
+/// are unique (they key JSON exports and grep-able diagnostics), and
+/// unknown names stay unknown.
+#[test]
+fn defect_class_names_round_trip_exhaustively() {
+    assert_eq!(DefectClass::ALL.len(), 15);
+    let mut seen = std::collections::BTreeSet::new();
+    for c in DefectClass::ALL {
+        let name = c.name();
+        assert!(seen.insert(name), "duplicate defect-class name '{name}'");
+        assert_eq!(DefectClass::from_name(name), Some(c), "'{name}' does not round-trip");
+    }
+    assert_eq!(DefectClass::from_name("made-up-class"), None);
+    assert_eq!(DefectClass::from_name(""), None);
+    assert_eq!(Severity::Error.name(), "error");
+    assert_eq!(Severity::Warn.name(), "warn");
+}
+
+// ------------------------------------------------------ hot-path parity
+
+/// Running the numeric pass changes nothing at runtime: warm int8 runs
+/// stay allocation-free and bit-identical after `verify_ranges` has
+/// walked the plan's numeric view.
+#[test]
+fn numeric_pass_keeps_quantized_hot_path_allocation_free_and_bit_identical() {
+    let m = zoo::by_name("tiny").unwrap();
+    let spec = calibrated_spec(&m);
+    let setting = Planner::for_model(m.clone()).setting().unwrap();
+    let q = QCompiledPlan::compile(m.clone(), setting, spec);
+    assert!(ranges::verify_ranges(&NumericInput::from_qcompiled(&q)).is_clean());
+
+    let s = m.shapes[0];
+    let x = Tensor::from_data(
+        s.h as usize,
+        s.w as usize,
+        s.c as usize,
+        ParamGen::new(17).fill(s.elems() as usize, 2.0),
+    );
+    let mut pool = q.make_pool();
+    let allocs0 = pool.storage_allocs();
+    let mut out_a = vec![0.0f32; q.output_len()];
+    let mut out_b = vec![0.0f32; q.output_len()];
+    q.run_into(x.as_map(), &mut pool, &mut out_a);
+    assert!(ranges::verify_ranges(&NumericInput::from_qcompiled(&q)).is_clean());
+    q.run_into(x.as_map(), &mut pool, &mut out_b);
+    assert_eq!(out_a, out_b, "warm rerun diverged around the numeric pass");
+    assert_eq!(pool.storage_allocs(), allocs0, "hot path allocated");
+}
