@@ -58,22 +58,27 @@ bench:
 	$(CARGO) bench
 
 # Regenerate the committed perf snapshots (BENCH_infer.json /
-# BENCH_serve.json) at full fidelity, then gate them on the stable
-# schema (`msfcnn bench check` = the obs::export validators).
+# BENCH_serve.json / BENCH_kernels.json) at full fidelity, then gate
+# them on the stable schema (`msfcnn bench check` = the obs::export
+# validators).
 bench-snapshot:
 	$(CARGO) bench --bench infer_hot
 	$(CARGO) bench --bench serve_load
+	$(CARGO) bench --bench kernels
 	$(CARGO) run --release --bin msfcnn -- bench check
 
 # Seconds-scale smoke pass (CI): validate the committed snapshots, rerun
-# both harnesses in smoke mode, and validate the fresh output — schema
-# drift fails on either side. Don't commit the smoke numbers. The final
-# step exercises the msfcnn.analysis/v1 exporter the same way (the CLI
-# self-validates the document before writing it).
+# the harnesses in smoke mode, and validate the fresh output — schema
+# drift fails on either side. The kernels bench doubles as a parity
+# smoke run: it asserts naive-vs-optimized bit-identity (f32) / exact
+# identity (int8) before timing anything. Don't commit the smoke
+# numbers. The final step exercises the msfcnn.analysis/v1 exporter the
+# same way (the CLI self-validates the document before writing it).
 bench-smoke:
 	$(CARGO) run --release --bin msfcnn -- bench check
 	MSFCNN_BENCH_SMOKE=1 $(CARGO) bench --bench infer_hot
 	MSFCNN_BENCH_SMOKE=1 $(CARGO) bench --bench serve_load
+	MSFCNN_BENCH_SMOKE=1 $(CARGO) bench --bench kernels
 	$(CARGO) run --release --bin msfcnn -- bench check
 	$(CARGO) run --release --bin msfcnn -- verify --zoo --json target/ANALYSIS_smoke.json
 

@@ -1,0 +1,348 @@
+//! Per-kernel microbenchmarks: the engineered interior/halo kernels
+//! against their retained naive twins in `ops::reference`, f32 and int8,
+//! on representative layer shapes. Every pair is parity-checked before
+//! timing — bit-identical for f32, exactly identical for int8 — so a
+//! committed speedup can never come from a numerics change. Emits
+//! `BENCH_kernels.json` at the repo root through the stable
+//! `obs::export` schema; `msfcnn bench check` and CI validate it.
+//!
+//! Set `MSFCNN_BENCH_SMOKE=1` for a seconds-scale smoke run (CI): fewer
+//! iterations, same shapes, same parity asserts, same snapshot schema.
+
+use msf_cnn::model::Activation;
+use msf_cnn::obs::export::{kernels_snapshot, validate_kernels_snapshot, KernelRow};
+use msf_cnn::ops::reference as naive;
+use msf_cnn::ops::{
+    avg_pool2d_into, conv2d_into, dense_into, dwconv2d_into, max_pool2d_into, qavg_pool2d_into,
+    qconv2d_into, qdense_into, qdwconv2d_into, qmax_pool2d_into, quantize_into, LayerParams,
+    MapRef, ParamGen, QLayerParams, QMapRef, QParams,
+};
+use msf_cnn::util::bench::Bencher;
+
+/// Quantized operand set shared by the int8 twins of one f32 case.
+struct QCase {
+    xq: Vec<i8>,
+    x_qp: QParams,
+    qp: QLayerParams,
+    out_qp: QParams,
+}
+
+fn quantize_case(xf: &[f32], w: &[f32], bias: &[f32], out_f32: &[f32]) -> QCase {
+    let x_qp = QParams::observe(xf);
+    let mut xq = vec![0i8; xf.len()];
+    quantize_into(xf, x_qp, &mut xq);
+    let p = LayerParams { weights: w.to_vec(), bias: bias.to_vec() };
+    let qp = QLayerParams::from_params(&p, QParams::observe(w));
+    QCase { xq, x_qp, qp, out_qp: QParams::observe(out_f32) }
+}
+
+fn main() {
+    let smoke = std::env::var("MSFCNN_BENCH_SMOKE").is_ok_and(|v| v != "0");
+    let b = if smoke { Bencher::quick() } else { Bencher::default() };
+    let tag = if smoke { ", smoke" } else { "" };
+    println!("== kernel benches (naive reference vs interior/halo{tag}) ==");
+
+    let mut rows: Vec<KernelRow> = Vec::new();
+    let mut gen = ParamGen::new(0xBEEF);
+
+    // conv2d 32x32x8, k3 s1 p1, cout 16 — the canonical fused-block body.
+    {
+        let (h, w_in, cin, k, s, p, cout) = (32usize, 32, 8, 3, 1, 1, 16);
+        let shape = format!("{h}x{w_in}x{cin} k{k} s{s} p{p} co{cout}");
+        let xf = gen.fill(h * w_in * cin, 2.0);
+        let w = gen.fill(k * k * cin * cout, 0.5);
+        let bias = gen.fill(cout, 0.1);
+        let x = MapRef::new(h, w_in, cin, &xf);
+        let (ho, wo) = ((h + 2 * p - k) / s + 1, (w_in + 2 * p - k) / s + 1);
+        let macs = (ho * wo * k * k * cin * cout) as u64;
+        let mut out_ref = vec![0.0f32; ho * wo * cout];
+        let mut out_opt = vec![0.0f32; ho * wo * cout];
+        naive::conv2d_naive(x, &w, &bias, k, s, p, cout, Activation::Relu, &mut out_ref);
+        conv2d_into(x, &w, &bias, k, s, p, cout, Activation::Relu, &mut out_opt);
+        assert_eq!(out_ref, out_opt, "conv2d f32 parity");
+        let naive_r = b.run("conv2d/f32/naive", || {
+            naive::conv2d_naive(x, &w, &bias, k, s, p, cout, Activation::Relu, &mut out_ref);
+            out_ref[0]
+        });
+        let opt_r = b.run("conv2d/f32/opt", || {
+            conv2d_into(x, &w, &bias, k, s, p, cout, Activation::Relu, &mut out_opt);
+            out_opt[0]
+        });
+        rows.push(KernelRow {
+            kernel: "conv2d".into(),
+            dtype: "f32".into(),
+            shape: shape.clone(),
+            naive_us: naive_r.mean_us(),
+            opt_us: opt_r.mean_us(),
+            macs,
+            parity: "bit-identical".into(),
+        });
+
+        let q = quantize_case(&xf, &w, &bias, &out_ref);
+        let xq = QMapRef::new(h, w_in, cin, &q.xq);
+        let mut qout_ref = vec![0i8; ho * wo * cout];
+        let mut qout_opt = vec![0i8; ho * wo * cout];
+        naive::qconv2d_naive(
+            xq, q.x_qp, &q.qp, k, s, p, cout, Activation::Relu, q.out_qp, &mut qout_ref,
+        );
+        qconv2d_into(
+            xq, q.x_qp, &q.qp, k, s, p, cout, Activation::Relu, q.out_qp, &mut qout_opt,
+        );
+        assert_eq!(qout_ref, qout_opt, "qconv2d int8 parity");
+        let naive_r = b.run("conv2d/int8/naive", || {
+            naive::qconv2d_naive(
+                xq, q.x_qp, &q.qp, k, s, p, cout, Activation::Relu, q.out_qp, &mut qout_ref,
+            );
+            qout_ref[0]
+        });
+        let opt_r = b.run("conv2d/int8/opt", || {
+            qconv2d_into(
+                xq, q.x_qp, &q.qp, k, s, p, cout, Activation::Relu, q.out_qp, &mut qout_opt,
+            );
+            qout_opt[0]
+        });
+        rows.push(KernelRow {
+            kernel: "qconv2d".into(),
+            dtype: "int8".into(),
+            shape,
+            naive_us: naive_r.mean_us(),
+            opt_us: opt_r.mean_us(),
+            macs,
+            parity: "exact".into(),
+        });
+    }
+
+    // dwconv2d 32x32x16, k3 s1 p1 — the depthwise half of MobileNet blocks.
+    {
+        let (h, w_in, c, k, s, p) = (32usize, 32, 16, 3, 1, 1);
+        let shape = format!("{h}x{w_in}x{c} k{k} s{s} p{p}");
+        let xf = gen.fill(h * w_in * c, 2.0);
+        let w = gen.fill(k * k * c, 0.5);
+        let bias = gen.fill(c, 0.1);
+        let x = MapRef::new(h, w_in, c, &xf);
+        let (ho, wo) = ((h + 2 * p - k) / s + 1, (w_in + 2 * p - k) / s + 1);
+        let macs = (ho * wo * k * k * c) as u64;
+        let mut out_ref = vec![0.0f32; ho * wo * c];
+        let mut out_opt = vec![0.0f32; ho * wo * c];
+        naive::dwconv2d_naive(x, &w, &bias, k, s, p, Activation::Relu6, &mut out_ref);
+        dwconv2d_into(x, &w, &bias, k, s, p, Activation::Relu6, &mut out_opt);
+        assert_eq!(out_ref, out_opt, "dwconv2d f32 parity");
+        let naive_r = b.run("dwconv2d/f32/naive", || {
+            naive::dwconv2d_naive(x, &w, &bias, k, s, p, Activation::Relu6, &mut out_ref);
+            out_ref[0]
+        });
+        let opt_r = b.run("dwconv2d/f32/opt", || {
+            dwconv2d_into(x, &w, &bias, k, s, p, Activation::Relu6, &mut out_opt);
+            out_opt[0]
+        });
+        rows.push(KernelRow {
+            kernel: "dwconv2d".into(),
+            dtype: "f32".into(),
+            shape: shape.clone(),
+            naive_us: naive_r.mean_us(),
+            opt_us: opt_r.mean_us(),
+            macs,
+            parity: "bit-identical".into(),
+        });
+
+        let q = quantize_case(&xf, &w, &bias, &out_ref);
+        let xq = QMapRef::new(h, w_in, c, &q.xq);
+        let mut qout_ref = vec![0i8; ho * wo * c];
+        let mut qout_opt = vec![0i8; ho * wo * c];
+        naive::qdwconv2d_naive(
+            xq, q.x_qp, &q.qp, k, s, p, Activation::Relu6, q.out_qp, &mut qout_ref,
+        );
+        qdwconv2d_into(xq, q.x_qp, &q.qp, k, s, p, Activation::Relu6, q.out_qp, &mut qout_opt);
+        assert_eq!(qout_ref, qout_opt, "qdwconv2d int8 parity");
+        let naive_r = b.run("dwconv2d/int8/naive", || {
+            naive::qdwconv2d_naive(
+                xq, q.x_qp, &q.qp, k, s, p, Activation::Relu6, q.out_qp, &mut qout_ref,
+            );
+            qout_ref[0]
+        });
+        let opt_r = b.run("dwconv2d/int8/opt", || {
+            qdwconv2d_into(
+                xq, q.x_qp, &q.qp, k, s, p, Activation::Relu6, q.out_qp, &mut qout_opt,
+            );
+            qout_opt[0]
+        });
+        rows.push(KernelRow {
+            kernel: "qdwconv2d".into(),
+            dtype: "int8".into(),
+            shape,
+            naive_us: naive_r.mean_us(),
+            opt_us: opt_r.mean_us(),
+            macs,
+            parity: "exact".into(),
+        });
+    }
+
+    // avg/max pool 32x32x16, k2 s2 — pure memory-bound sweeps.
+    {
+        let (h, w_in, c, k, s) = (32usize, 32, 16, 2, 2);
+        let shape = format!("{h}x{w_in}x{c} k{k} s{s}");
+        let xf = gen.fill(h * w_in * c, 2.0);
+        let x = MapRef::new(h, w_in, c, &xf);
+        let (ho, wo) = ((h - k) / s + 1, (w_in - k) / s + 1);
+        let mut out_ref = vec![0.0f32; ho * wo * c];
+        let mut out_opt = vec![0.0f32; ho * wo * c];
+        for (name, is_avg) in [("avg_pool", true), ("max_pool", false)] {
+            if is_avg {
+                naive::avg_pool2d_naive(x, k, s, &mut out_ref);
+                avg_pool2d_into(x, k, s, &mut out_opt);
+            } else {
+                naive::max_pool2d_naive(x, k, s, &mut out_ref);
+                max_pool2d_into(x, k, s, &mut out_opt);
+            }
+            assert_eq!(out_ref, out_opt, "{name} f32 parity");
+            let naive_r = b.run(&format!("{name}/f32/naive"), || {
+                if is_avg {
+                    naive::avg_pool2d_naive(x, k, s, &mut out_ref);
+                } else {
+                    naive::max_pool2d_naive(x, k, s, &mut out_ref);
+                }
+                out_ref[0]
+            });
+            let opt_r = b.run(&format!("{name}/f32/opt"), || {
+                if is_avg {
+                    avg_pool2d_into(x, k, s, &mut out_opt);
+                } else {
+                    max_pool2d_into(x, k, s, &mut out_opt);
+                }
+                out_opt[0]
+            });
+            rows.push(KernelRow {
+                kernel: name.into(),
+                dtype: "f32".into(),
+                shape: shape.clone(),
+                naive_us: naive_r.mean_us(),
+                opt_us: opt_r.mean_us(),
+                macs: 0,
+                parity: "bit-identical".into(),
+            });
+        }
+
+        let x_qp = QParams::observe(&xf);
+        let mut xq_d = vec![0i8; xf.len()];
+        quantize_into(&xf, x_qp, &mut xq_d);
+        let xq = QMapRef::new(h, w_in, c, &xq_d);
+        let mut qout_ref = vec![0i8; ho * wo * c];
+        let mut qout_opt = vec![0i8; ho * wo * c];
+        for (name, is_avg) in [("qavg_pool", true), ("qmax_pool", false)] {
+            if is_avg {
+                naive::qavg_pool2d_naive(xq, x_qp, k, s, x_qp, &mut qout_ref);
+                qavg_pool2d_into(xq, x_qp, k, s, x_qp, &mut qout_opt);
+            } else {
+                naive::qmax_pool2d_naive(xq, x_qp, k, s, x_qp, &mut qout_ref);
+                qmax_pool2d_into(xq, x_qp, k, s, x_qp, &mut qout_opt);
+            }
+            assert_eq!(qout_ref, qout_opt, "{name} int8 parity");
+            let naive_r = b.run(&format!("{name}/int8/naive"), || {
+                if is_avg {
+                    naive::qavg_pool2d_naive(xq, x_qp, k, s, x_qp, &mut qout_ref);
+                } else {
+                    naive::qmax_pool2d_naive(xq, x_qp, k, s, x_qp, &mut qout_ref);
+                }
+                qout_ref[0]
+            });
+            let opt_r = b.run(&format!("{name}/int8/opt"), || {
+                if is_avg {
+                    qavg_pool2d_into(xq, x_qp, k, s, x_qp, &mut qout_opt);
+                } else {
+                    qmax_pool2d_into(xq, x_qp, k, s, x_qp, &mut qout_opt);
+                }
+                qout_opt[0]
+            });
+            rows.push(KernelRow {
+                kernel: name.into(),
+                dtype: "int8".into(),
+                shape: shape.clone(),
+                naive_us: naive_r.mean_us(),
+                opt_us: opt_r.mean_us(),
+                macs: 0,
+                parity: "exact".into(),
+            });
+        }
+    }
+
+    // dense 256 -> 64 — the classifier tail.
+    {
+        let (din, dout) = (256usize, 64);
+        let shape = format!("{din}->{dout}");
+        let xf = gen.fill(din, 2.0);
+        let w = gen.fill(din * dout, 0.5);
+        let bias = gen.fill(dout, 0.1);
+        let macs = (din * dout) as u64;
+        let mut out_ref = vec![0.0f32; dout];
+        let mut out_opt = vec![0.0f32; dout];
+        naive::dense_naive(&xf, &w, &bias, dout, &mut out_ref);
+        dense_into(&xf, &w, &bias, dout, &mut out_opt);
+        assert_eq!(out_ref, out_opt, "dense f32 parity");
+        let naive_r = b.run("dense/f32/naive", || {
+            naive::dense_naive(&xf, &w, &bias, dout, &mut out_ref);
+            out_ref[0]
+        });
+        let opt_r = b.run("dense/f32/opt", || {
+            dense_into(&xf, &w, &bias, dout, &mut out_opt);
+            out_opt[0]
+        });
+        rows.push(KernelRow {
+            kernel: "dense".into(),
+            dtype: "f32".into(),
+            shape: shape.clone(),
+            naive_us: naive_r.mean_us(),
+            opt_us: opt_r.mean_us(),
+            macs,
+            parity: "bit-identical".into(),
+        });
+
+        let q = quantize_case(&xf, &w, &bias, &out_ref);
+        let mut qout_ref = vec![0i8; dout];
+        let mut qout_opt = vec![0i8; dout];
+        naive::qdense_naive(&q.xq, q.x_qp, &q.qp, dout, q.out_qp, &mut qout_ref);
+        qdense_into(&q.xq, q.x_qp, &q.qp, dout, q.out_qp, &mut qout_opt);
+        assert_eq!(qout_ref, qout_opt, "qdense int8 parity");
+        let naive_r = b.run("dense/int8/naive", || {
+            naive::qdense_naive(&q.xq, q.x_qp, &q.qp, dout, q.out_qp, &mut qout_ref);
+            qout_ref[0]
+        });
+        let opt_r = b.run("dense/int8/opt", || {
+            qdense_into(&q.xq, q.x_qp, &q.qp, dout, q.out_qp, &mut qout_opt);
+            qout_opt[0]
+        });
+        rows.push(KernelRow {
+            kernel: "qdense".into(),
+            dtype: "int8".into(),
+            shape,
+            naive_us: naive_r.mean_us(),
+            opt_us: opt_r.mean_us(),
+            macs,
+            parity: "exact".into(),
+        });
+    }
+
+    for r in &rows {
+        println!(
+            "  {:<10} {:<5} {:<24} {:>8.1} -> {:>8.1} us  ({:.2}x, {})",
+            r.kernel,
+            r.dtype,
+            r.shape,
+            r.naive_us,
+            r.opt_us,
+            r.naive_us / r.opt_us.max(1e-9),
+            r.parity,
+        );
+    }
+
+    let json = kernels_snapshot(&rows, smoke);
+    // Self-check against the stable schema before committing bytes to
+    // disk — a writer/validator drift fails the bench, not CI later.
+    if let Err(e) = validate_kernels_snapshot(&json) {
+        eprintln!("BENCH_kernels.json failed its own schema check: {e}");
+        std::process::exit(1);
+    }
+    match std::fs::write("BENCH_kernels.json", &json) {
+        Ok(()) => println!("wrote BENCH_kernels.json"),
+        Err(e) => eprintln!("could not write BENCH_kernels.json: {e}"),
+    }
+}

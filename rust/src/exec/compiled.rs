@@ -29,7 +29,7 @@ use crate::obs::{NoProfiler, StepMeta, StepProfiler};
 use crate::ops::{
     accumulate_row_major, avg_pool2d_into, conv2d_into, dense_into, dwconv2d_into,
     global_avg_pool_into, max_pool2d_into, scale_avg, BandGeom, BandRange, FusedBlock, HCache,
-    LayerParams, MapRef, Tensor,
+    LayerParams, MapRef, Tensor, UnitProfiler,
 };
 use crate::optimizer::FusionSetting;
 
@@ -451,7 +451,7 @@ impl CompiledPlan {
         let mut macs = 0u64;
         for (i, step) in self.steps.iter().enumerate() {
             prof.begin(i);
-            let step_macs = self.run_step(step, input, pool);
+            let step_macs = self.run_step(step, input, pool, prof);
             prof.end(i, step_macs);
             macs += step_macs;
         }
@@ -520,6 +520,42 @@ impl CompiledPlan {
                         layers: (*a, end),
                         bytes: 4 * elems as u64 + self.param_bytes(*a, end),
                     }
+                }
+            })
+            .collect()
+    }
+
+    /// Static labels of the sub-step **units** inside every compiled
+    /// step, keyed `[step][unit]` — the naming side of the
+    /// [`crate::ops::UnitProfiler`] brackets that
+    /// [`crate::ops::FusedBlock::run_streaming_units`] and the
+    /// fused-iter tail emit. Fused steps expose one unit per block
+    /// layer plus the copy-out sink; fused-iter steps expose the block
+    /// layers, the global-pool unit (streamed accumulate + final
+    /// scale), each trailing dense layer, and the logits copy.
+    /// Stash/single steps have no interior units (empty vec).
+    pub fn step_unit_labels(&self) -> Vec<Vec<String>> {
+        self.steps
+            .iter()
+            .map(|step| match step {
+                Step::StashSave { .. } | Step::Single { .. } => Vec::new(),
+                Step::Fused { a, conv_end, .. } => {
+                    let mut labels: Vec<String> = (*a..*conv_end)
+                        .map(|li| format!("{}[{li}]", kind_name(self.model.layers[li].kind)))
+                        .collect();
+                    labels.push("copy-out".to_string());
+                    labels
+                }
+                Step::FusedIter { a, conv_end, dense, .. } => {
+                    let mut labels: Vec<String> = (*a..*conv_end)
+                        .map(|li| format!("{}[{li}]", kind_name(self.model.layers[li].kind)))
+                        .collect();
+                    labels.push(format!("gap[{conv_end}]"));
+                    for &(li, _) in dense {
+                        labels.push(format!("dense[{li}]"));
+                    }
+                    labels.push("logits".to_string());
+                    labels
                 }
             })
             .collect()
@@ -675,7 +711,13 @@ impl CompiledPlan {
         MapRef::new(d.0, d.1, d.2, data)
     }
 
-    fn run_step(&self, step: &Step, input: MapRef<'_>, pool: &mut PlanPool) -> u64 {
+    fn run_step<U: UnitProfiler>(
+        &self,
+        step: &Step,
+        input: MapRef<'_>,
+        pool: &mut PlanPool,
+        prof: &mut U,
+    ) -> u64 {
         match step {
             Step::StashSave { src, dst } => {
                 let dst_r = self.range_of(*dst);
@@ -725,20 +767,30 @@ impl CompiledPlan {
                     Src::Input => {
                         let (bands_s, out_s) = two_muts(&mut pool.data, bands_r, out_r);
                         let cache = HCache::new(geom, bands_s, &mut pool.ranges[..depth + 1]);
-                        block.run_streaming_in(input, cache, |r, row| {
-                            out_s[r * wo * co..(r + 1) * wo * co]
-                                .copy_from_slice(&row[..wo * co]);
-                        })
+                        block.run_streaming_units(
+                            input,
+                            cache,
+                            |r, row| {
+                                out_s[r * wo * co..(r + 1) * wo * co]
+                                    .copy_from_slice(&row[..wo * co]);
+                            },
+                            prof,
+                        )
                     }
                     Src::Buf(sid) => {
                         let [src_s, bands_s, out_s] =
                             three_muts(&mut pool.data, [self.range_of(sid), bands_r, out_r]);
                         let x = self.map_of(sid, src_s);
                         let cache = HCache::new(geom, bands_s, &mut pool.ranges[..depth + 1]);
-                        block.run_streaming_in(x, cache, |r, row| {
-                            out_s[r * wo * co..(r + 1) * wo * co]
-                                .copy_from_slice(&row[..wo * co]);
-                        })
+                        block.run_streaming_units(
+                            x,
+                            cache,
+                            |r, row| {
+                                out_s[r * wo * co..(r + 1) * wo * co]
+                                    .copy_from_slice(&row[..wo * co]);
+                            },
+                            prof,
+                        )
                     }
                 };
                 stats.macs
@@ -760,9 +812,14 @@ impl CompiledPlan {
                         acc_s.fill(0.0);
                         let cache = HCache::new(geom, bands_s, &mut pool.ranges[..depth + 1]);
                         block
-                            .run_streaming_in(input, cache, |_r, row| {
-                                accumulate_row_major(&mut *acc_s, row);
-                            })
+                            .run_streaming_units(
+                                input,
+                                cache,
+                                |_r, row| {
+                                    accumulate_row_major(&mut *acc_s, row);
+                                },
+                                prof,
+                            )
                             .macs
                     }
                     Src::Buf(sid) => {
@@ -774,36 +831,49 @@ impl CompiledPlan {
                         let x = self.map_of(sid, src_s);
                         let cache = HCache::new(geom, bands_s, &mut pool.ranges[..depth + 1]);
                         block
-                            .run_streaming_in(x, cache, |_r, row| {
-                                accumulate_row_major(&mut *acc_s, row);
-                            })
+                            .run_streaming_units(
+                                x,
+                                cache,
+                                |_r, row| {
+                                    accumulate_row_major(&mut *acc_s, row);
+                                },
+                                prof,
+                            )
                             .macs
                     }
                 };
                 // finish(): the shared in-place scale — bit-identical to
-                // GlobalPoolIter::finish.
+                // GlobalPoolIter::finish. Folded into unit `depth` (the
+                // "gap" row the accumulate sink already timed into).
+                prof.unit_begin();
                 scale_avg(
                     &mut pool.data[acc_r.clone()],
                     out_shape.h as usize * out_shape.w as usize,
                 );
                 macs += out_shape.elems();
+                prof.unit_end(depth, out_shape.elems());
 
                 // Phase 2: iterative dense chain, one accumulator per
                 // trailing Dense layer (same order as DenseIter).
                 let mut prev_r = acc_r;
-                for &(li, acc_id) in dense {
+                for (di, &(li, acc_id)) in dense.iter().enumerate() {
                     let p = &self.params[li];
                     let dout = self.model.layers[li].cout as usize;
                     let next_r = self.range_of(acc_id);
+                    prof.unit_begin();
                     let (x_s, y_s) = two_muts(&mut pool.data, prev_r.clone(), next_r.clone());
                     dense_into(x_s, &p.weights, &p.bias, dout, y_s);
-                    macs += (x_s.len() * dout) as u64;
+                    let dmacs = (x_s.len() * dout) as u64;
+                    macs += dmacs;
+                    prof.unit_end(depth + 1 + di, dmacs);
                     prev_r = next_r;
                 }
 
                 // Phase 3: logits copy.
+                prof.unit_begin();
                 let (v_s, l_s) = two_muts(&mut pool.data, prev_r, self.range_of(*logits));
                 l_s.copy_from_slice(v_s);
+                prof.unit_end(depth + 1 + dense.len(), 0);
                 macs
             }
         }

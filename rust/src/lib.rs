@@ -177,15 +177,19 @@
 //! [`obs::NoProfiler`] it compiles to exactly the allocation-free
 //! `run_into` loop (bit-identical logits and MACs), while
 //! [`obs::StepRecorder`] + [`obs::profile_plan`] attribute wall time to
-//! every compiled step (`msfcnn profile`, `report::table_steps`). On the
+//! every compiled step (`msfcnn profile`, `report::table_steps`) — and,
+//! inside fused spans, to every sub-step **unit** (block layer,
+//! copy-out sink, global-pool / dense / logits tail stage) through the
+//! [`ops::UnitProfiler`] brackets, so a fused step is no longer an
+//! opaque span ([`obs::UnitStat`]). On the
 //! serving side, [`coordinator::Metrics`] keeps per-model
 //! queue-wait/execute splits, throughput, and mergeable fixed-bucket
 //! [`obs::LatencyHistogram`]s next to its exact sample window, and the
 //! control plane emits structured [`obs::TraceEvent`]s (deploy / swap /
 //! retire / drain / registry sync) into a pluggable [`obs::TraceSink`].
 //! [`obs::export`] freezes all of it into versioned JSON snapshots
-//! (`BENCH_infer.json`, `BENCH_serve.json`, `msfcnn profile --json`)
-//! with validators that pin the schema.
+//! (`BENCH_infer.json`, `BENCH_serve.json`, `BENCH_kernels.json`,
+//! `msfcnn profile --json`) with validators that pin the schema.
 //!
 //! ## Quantized execution
 //!
@@ -218,6 +222,25 @@
 //! q.run_into(x.as_map(), &mut pool, &mut logits);     // int8 end to end
 //! assert_eq!(q.measured_peak(), q.layout().watermark); // Eq. 5/6, exact
 //! ```
+//!
+//! ## Kernel engineering
+//!
+//! Both kernel families — the f32 `*_into` kernels in [`ops`] and their
+//! int8 `q*_into` twins — are structured around an **interior/halo
+//! decomposition**: output pixels whose receptive field is fully inside
+//! the input run a branch-free contiguous sweep (the zero-padding
+//! predicate is hoisted out of the per-pixel loops), thin borders keep
+//! the guarded path, and the epilogue (bias + activation for f32,
+//! requantize-clamp for int8) is folded into the accumulation sweep so
+//! no second full pass over the output remains. The f32 kernels
+//! preserve the exact per-element accumulation order — the compiled
+//! path stays pinned **bit-identical** to the interpreted engine —
+//! while the int8 kernels exploit associative i32 accumulation with
+//! blocked channel accumulators and zero-point skipping. The original
+//! naive loop nests are retained in [`ops::reference`] as parity
+//! oracles: `rust/tests/kernel_parity.rs` fuzzes shapes, strides, and
+//! paddings against them, and `benches/kernels.rs` times both variants
+//! into the committed `BENCH_kernels.json` trajectory.
 //!
 //! ## Static analysis
 //!

@@ -10,7 +10,7 @@
 //! msfcnn tables [--which 1|2|3|5|5j|fig2|fig3|fig4|steps|all]
 //! msfcnn verify [--plan FILE | --dir DIR | --zoo] [--json FILE]
 //! msfcnn registry scan [--dir DIR]
-//! msfcnn bench check [--infer FILE] [--serve FILE]
+//! msfcnn bench check [--infer FILE] [--serve FILE] [--kernels FILE]
 //! msfcnn serve --registry DIR [--requests N] [--watch-ms MS] [--trace]
 //! msfcnn serve [--artifacts DIR] [--entry NAME] [--requests N]
 //! ```
@@ -42,7 +42,7 @@ USAGE:
   msfcnn tables [--which 1|2|3|5|5j|fig2|fig3|fig4|steps|all]
   msfcnn verify [--plan FILE | --dir DIR | --zoo] [--json FILE]
   msfcnn registry scan [--dir DIR]
-  msfcnn bench check [--infer FILE] [--serve FILE]
+  msfcnn bench check [--infer FILE] [--serve FILE] [--kernels FILE]
   msfcnn serve --registry DIR [--requests N] [--watch-ms MS] [--trace]
   msfcnn serve [--artifacts DIR] [--entry NAME] [--requests N]
   msfcnn serve --plan FILE [--id NAME] [--requests N]
@@ -693,7 +693,7 @@ fn main() -> Result<()> {
                 // drifted BENCH_*.json fails here (and in CI) instead of
                 // silently rotting the perf trajectory.
                 use msf_cnn::obs::export;
-                let checks: [(&str, fn(&str) -> Result<()>); 2] = [
+                let checks: [(&str, fn(&str) -> Result<()>); 3] = [
                     (
                         args.get("infer").unwrap_or("BENCH_infer.json"),
                         export::validate_infer_snapshot,
@@ -701,6 +701,10 @@ fn main() -> Result<()> {
                     (
                         args.get("serve").unwrap_or("BENCH_serve.json"),
                         export::validate_serve_snapshot,
+                    ),
+                    (
+                        args.get("kernels").unwrap_or("BENCH_kernels.json"),
+                        export::validate_kernels_snapshot,
                     ),
                 ];
                 let mut failures = 0usize;

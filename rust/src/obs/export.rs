@@ -1,9 +1,11 @@
 //! Stable-schema JSON snapshot exporters + validators.
 //!
-//! The perf trajectory lives in two committed files at the repo root:
+//! The perf trajectory lives in three committed files at the repo root:
 //! `BENCH_infer.json` (hot-path latency with per-step attribution, from
-//! `benches/infer_hot.rs`) and `BENCH_serve.json` (serving load numbers,
-//! from `benches/serve_load.rs`). Both carry the schema tag
+//! `benches/infer_hot.rs`), `BENCH_serve.json` (serving load numbers,
+//! from `benches/serve_load.rs`), and `BENCH_kernels.json` (per-kernel
+//! naive-vs-engineered microbenchmarks with parity tags, from
+//! `benches/kernels.rs`). All carry the schema tag
 //! [`BENCH_SCHEMA`]; the validators here are what the benches self-check
 //! against before writing, and what `msfcnn bench check` /
 //! `make bench-snapshot` / CI run afterwards — a snapshot whose shape
@@ -71,14 +73,34 @@ pub struct InferRow {
 }
 
 /// Serialize a [`StepProfile`]'s steps as a JSON array (shared by the
-/// infer snapshot and `msfcnn profile --json`).
+/// infer snapshot and `msfcnn profile --json`). Fused steps with a
+/// recorded per-unit breakdown carry a `units` array (stage label,
+/// per-run mean, in-step share, MACs); stash/single steps omit the key.
 pub fn steps_json(profile: &StepProfile, indent: &str) -> String {
     let rows: Vec<String> = profile
         .steps
         .iter()
         .map(|s| {
+            let units = if s.units.is_empty() {
+                String::new()
+            } else {
+                let us: Vec<String> = s
+                    .units
+                    .iter()
+                    .map(|u| {
+                        format!(
+                            "{{\"label\": {}, \"mean_us\": {}, \"share\": {:.5}, \"macs\": {}}}",
+                            jstr(&u.label),
+                            jnum(u.mean_us),
+                            u.share,
+                            u.macs,
+                        )
+                    })
+                    .collect();
+                format!(", \"units\": [{}]", us.join(", "))
+            };
             format!(
-                "{indent}{{\"label\": {}, \"kind\": {}, \"layers\": [{}, {}], \"mean_us\": {}, \"p50_us\": {}, \"p95_us\": {}, \"share\": {:.5}, \"macs\": {}, \"bytes\": {}}}",
+                "{indent}{{\"label\": {}, \"kind\": {}, \"layers\": [{}, {}], \"mean_us\": {}, \"p50_us\": {}, \"p95_us\": {}, \"share\": {:.5}, \"macs\": {}, \"bytes\": {}{units}}}",
                 jstr(&s.meta.label),
                 jstr(s.meta.kind),
                 s.meta.layers.0,
@@ -228,6 +250,56 @@ pub fn serve_snapshot(cfg: &ServeConfig, rows: &[ServeRow], agg: &ServeAggregate
     )
 }
 
+/// One kernel's row in `BENCH_kernels.json`: the engineered hot kernel
+/// timed against its retained naive twin in
+/// [`crate::ops::reference`], plus the parity contract the bench
+/// asserted before timing.
+#[derive(Debug, Clone)]
+pub struct KernelRow {
+    /// Kernel name, e.g. `"conv2d"`, `"qdwconv2d"`.
+    pub kernel: String,
+    /// `"f32"` or `"int8"`.
+    pub dtype: String,
+    /// Human-readable problem size, e.g. `"32x32x8 k3 s1 p1 co16"`.
+    pub shape: String,
+    /// Naive reference kernel, µs/call.
+    pub naive_us: f64,
+    /// Engineered interior/halo kernel, µs/call.
+    pub opt_us: f64,
+    /// MACs per call (0 for pools/copies).
+    pub macs: u64,
+    /// Parity contract asserted before timing: `"bit-identical"` (f32)
+    /// or `"exact"` (int8).
+    pub parity: String,
+}
+
+/// Render `BENCH_kernels.json`: per-kernel naive-vs-engineered
+/// microbenchmark trajectory, stable schema [`BENCH_SCHEMA`].
+pub fn kernels_snapshot(rows: &[KernelRow], smoke: bool) -> String {
+    let body: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"kernel\": {}, \"dtype\": {}, \"shape\": {}, \"naive_us\": {}, \"opt_us\": {}, \"speedup\": {}, \"macs\": {}, \"parity\": {}}}",
+                jstr(&r.kernel),
+                jstr(&r.dtype),
+                jstr(&r.shape),
+                jnum(r.naive_us),
+                jnum(r.opt_us),
+                jnum(r.naive_us / r.opt_us.max(1e-9)),
+                r.macs,
+                jstr(&r.parity),
+            )
+        })
+        .collect();
+    format!(
+        "{{\n  \"schema\": {},\n  \"bench\": \"kernels\",\n  \"unit\": \"us\",\n  \"smoke\": {},\n  \"results\": [\n{}\n  ]\n}}\n",
+        jstr(BENCH_SCHEMA),
+        smoke,
+        body.join(",\n")
+    )
+}
+
 /// Render a standalone per-step profile snapshot
 /// (`msfcnn profile --json`), schema [`PROFILE_SCHEMA`].
 pub fn profile_snapshot(profile: &StepProfile) -> String {
@@ -351,6 +423,20 @@ fn check_steps(row: &Json, at: &str) -> Result<()> {
         for key in ["mean_us", "p50_us", "p95_us", "share", "macs", "bytes"] {
             need_num(s, key, &sat)?;
         }
+        // Per-unit breakdown is optional (stash/single steps have none),
+        // but when present every entry must be fully formed.
+        if let Some(units) = s.get("units") {
+            let units = units
+                .as_arr()
+                .ok_or_else(|| anyhow!("snapshot schema: '{sat}.units' is not an array"))?;
+            for (j, u) in units.iter().enumerate() {
+                let uat = format!("{sat}.units[{j}]");
+                need_str(u, "label", &uat)?;
+                for key in ["mean_us", "share", "macs"] {
+                    need_num(u, key, &uat)?;
+                }
+            }
+        }
     }
     Ok(())
 }
@@ -426,6 +512,33 @@ pub fn validate_serve_snapshot(text: &str) -> Result<()> {
     let agg = need(&root, "aggregate", "$")?;
     for key in ["completed", "rejections", "throughput_rps", "p50_us", "p95_us", "p99_us"] {
         need_num(agg, key, "$.aggregate")?;
+    }
+    Ok(())
+}
+
+/// Validate a `BENCH_kernels.json` document against the stable schema.
+pub fn validate_kernels_snapshot(text: &str) -> Result<()> {
+    let root = Json::parse(text).map_err(|e| anyhow!("BENCH_kernels.json: {e}"))?;
+    check_header(&root, "kernels")?;
+    need(&root, "smoke", "$")?;
+    let results = need_arr(&root, "results", "$")?;
+    if results.is_empty() {
+        bail!("snapshot schema: '$.results' is empty");
+    }
+    for (i, row) in results.iter().enumerate() {
+        let at = format!("$.results[{i}]");
+        for key in ["kernel", "dtype", "shape", "parity"] {
+            need_str(row, key, &at)?;
+        }
+        for key in ["naive_us", "opt_us", "speedup", "macs"] {
+            need_num(row, key, &at)?;
+        }
+        let parity = need_str(row, "parity", &at)?;
+        if parity != "bit-identical" && parity != "exact" {
+            bail!(
+                "snapshot schema: '{at}.parity' must be 'bit-identical' or 'exact', found '{parity}'"
+            );
+        }
     }
     Ok(())
 }
@@ -571,6 +684,61 @@ mod tests {
     fn profile_snapshot_roundtrips_through_its_validator() {
         let json = profile_snapshot(&tiny_profile());
         validate_profile_snapshot(&json).unwrap();
+    }
+
+    #[test]
+    fn steps_json_carries_per_unit_breakdown() {
+        let p = tiny_profile();
+        assert!(
+            p.steps.iter().any(|s| !s.units.is_empty()),
+            "tiny plan recorded no fused units"
+        );
+        let json = profile_snapshot(&p);
+        assert!(json.contains("\"units\": ["), "{json}");
+        // A mistyped unit entry is schema drift.
+        let broken = json.replace("\"units\": [{\"label\"", "\"units\": [{\"renamed\"");
+        assert!(validate_profile_snapshot(&broken).is_err());
+    }
+
+    #[test]
+    fn kernels_snapshot_roundtrips_and_rejects_drift() {
+        let rows = vec![
+            KernelRow {
+                kernel: "conv2d".into(),
+                dtype: "f32".into(),
+                shape: "32x32x8 k3 s1 p1 co16".into(),
+                naive_us: 120.0,
+                opt_us: 60.0,
+                macs: 1_179_648,
+                parity: "bit-identical".into(),
+            },
+            KernelRow {
+                kernel: "qconv2d".into(),
+                dtype: "int8".into(),
+                shape: "32x32x8 k3 s1 p1 co16".into(),
+                naive_us: 90.0,
+                opt_us: 30.0,
+                macs: 1_179_648,
+                parity: "exact".into(),
+            },
+        ];
+        let json = kernels_snapshot(&rows, false);
+        validate_kernels_snapshot(&json).unwrap();
+        assert!(json.contains("\"speedup\": 2.000"), "{json}");
+        // A renamed field is schema drift.
+        let broken = json.replace("\"opt_us\"", "\"renamed_field\"");
+        let err = validate_kernels_snapshot(&broken).unwrap_err();
+        assert!(err.to_string().contains("opt_us"), "{err}");
+        // An unknown parity contract is drift.
+        let bad_parity = json.replace("\"bit-identical\"", "\"approximate\"");
+        assert!(validate_kernels_snapshot(&bad_parity).is_err());
+        // The infer validator must not accept a kernels doc.
+        assert!(validate_infer_snapshot(&json).is_err());
+        // Empty results are drift too.
+        let empty = format!(
+            "{{\"schema\": \"{BENCH_SCHEMA}\", \"bench\": \"kernels\", \"unit\": \"us\", \"smoke\": false, \"results\": []}}"
+        );
+        assert!(validate_kernels_snapshot(&empty).is_err());
     }
 
     #[test]

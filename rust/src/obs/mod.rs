@@ -33,5 +33,6 @@ pub mod trace;
 pub use hist::{nearest_rank, LatencyHistogram};
 pub use profile::{
     profile_plan, NoProfiler, StepMeta, StepProfile, StepProfiler, StepRecorder, StepStat,
+    UnitStat,
 };
 pub use trace::{NullSink, SharedSink, StderrSink, TraceEvent, TraceLog, TraceSink};

@@ -19,7 +19,7 @@
 use std::time::Instant;
 
 use crate::exec::CompiledPlan;
-use crate::ops::Tensor;
+use crate::ops::{Tensor, UnitProfiler};
 
 use super::hist::nearest_rank;
 
@@ -27,18 +27,30 @@ use super::hist::nearest_rank;
 /// must be cheap: `begin`/`end` run inside the serving hot path when
 /// profiling is on, and must compile to nothing when it is off
 /// ([`NoProfiler`]).
-pub trait StepProfiler {
+///
+/// [`UnitProfiler`] is a supertrait: a step profiler also observes the
+/// per-unit brackets *inside* fused steps (block layers, the copy-out
+/// sink, iterative-tail stages), so fused spans are attributable
+/// per layer instead of appearing as one opaque step.
+pub trait StepProfiler: UnitProfiler {
     /// Called immediately before step `idx` executes.
     fn begin(&mut self, idx: usize);
     /// Called immediately after step `idx`, with the MACs it performed.
     fn end(&mut self, idx: usize, macs: u64);
 }
 
-/// The disabled profiler: both hooks are empty and `#[inline(always)]`,
+/// The disabled profiler: all hooks are empty and `#[inline(always)]`,
 /// so `run_profiled::<NoProfiler>` monomorphizes to the exact unprofiled
 /// step loop — zero cost, bit-identical numerics, no allocations.
 #[derive(Debug, Default, Clone, Copy)]
 pub struct NoProfiler;
+
+impl UnitProfiler for NoProfiler {
+    #[inline(always)]
+    fn unit_begin(&mut self) {}
+    #[inline(always)]
+    fn unit_end(&mut self, _unit: usize, _macs: u64) {}
+}
 
 impl StepProfiler for NoProfiler {
     #[inline(always)]
@@ -50,12 +62,20 @@ impl StepProfiler for NoProfiler {
 /// Wall-clock recorder: per-step latency samples across runs, plus the
 /// per-step MAC count (identical every run — the plan is static).
 /// Allocates its sample storage up front; recording itself only pushes
-/// into pre-created vectors.
+/// into pre-created vectors (per-unit rows grow lazily on the first
+/// profiled run, then stay put).
 #[derive(Debug, Clone)]
 pub struct StepRecorder {
     started: Option<Instant>,
     samples_us: Vec<Vec<f64>>,
     macs: Vec<u64>,
+    /// Step currently between `begin` and `end` — routes unit brackets.
+    cur_step: usize,
+    unit_started: Option<Instant>,
+    /// Per step, per unit: total µs across all rows and runs.
+    unit_us: Vec<Vec<f64>>,
+    /// Per step, per unit: total MACs across all rows and runs.
+    unit_macs: Vec<Vec<u64>>,
 }
 
 impl StepRecorder {
@@ -65,6 +85,10 @@ impl StepRecorder {
             started: None,
             samples_us: vec![Vec::new(); num_steps],
             macs: vec![0; num_steps],
+            cur_step: 0,
+            unit_started: None,
+            unit_us: vec![Vec::new(); num_steps],
+            unit_macs: vec![Vec::new(); num_steps],
         }
     }
 
@@ -84,8 +108,30 @@ impl StepRecorder {
     }
 }
 
+impl UnitProfiler for StepRecorder {
+    fn unit_begin(&mut self) {
+        self.unit_started = Some(Instant::now());
+    }
+
+    fn unit_end(&mut self, unit: usize, macs: u64) {
+        let t0 = self.unit_started.take().expect("unit_end without unit_begin");
+        let us = t0.elapsed().as_secs_f64() * 1e6;
+        let step_us = &mut self.unit_us[self.cur_step];
+        if step_us.len() <= unit {
+            step_us.resize(unit + 1, 0.0);
+        }
+        step_us[unit] += us;
+        let step_macs = &mut self.unit_macs[self.cur_step];
+        if step_macs.len() <= unit {
+            step_macs.resize(unit + 1, 0);
+        }
+        step_macs[unit] += macs;
+    }
+}
+
 impl StepProfiler for StepRecorder {
-    fn begin(&mut self, _idx: usize) {
+    fn begin(&mut self, idx: usize) {
+        self.cur_step = idx;
         self.started = Some(Instant::now());
     }
 
@@ -114,6 +160,24 @@ pub struct StepMeta {
     pub bytes: u64,
 }
 
+/// Aggregated timing of one **unit** — a sub-step stage inside a fused
+/// span (block layer, copy-out sink, gap / dense / logits tail stage).
+/// Unit times are measured by the [`UnitProfiler`] brackets and summed
+/// across all streamed rows of a run, so `mean_us` is the per-run total
+/// of that stage, directly comparable to its step's `mean_us`.
+#[derive(Debug, Clone)]
+pub struct UnitStat {
+    /// Stage label from [`CompiledPlan::step_unit_labels`], e.g.
+    /// `"conv2d[1]"`, `"gap[3]"`, `"copy-out"`.
+    pub label: String,
+    /// Mean per-run wall time of this stage (µs).
+    pub mean_us: f64,
+    /// MACs this stage performs per run (constant across runs).
+    pub macs: u64,
+    /// Fraction of the step's summed unit time spent in this stage.
+    pub share: f64,
+}
+
 /// Aggregated timing of one step across profiled runs.
 #[derive(Debug, Clone)]
 pub struct StepStat {
@@ -127,6 +191,9 @@ pub struct StepStat {
     pub max_us: f64,
     /// This step's fraction of the whole run's mean wall time.
     pub share: f64,
+    /// Per-unit breakdown of fused spans (empty for stash/single steps,
+    /// or when the profiler recorded no unit brackets).
+    pub units: Vec<UnitStat>,
 }
 
 /// Per-step attribution of a compiled plan, aggregated over `runs`
@@ -170,12 +237,38 @@ impl StepProfile {
                     min_us: sorted[0],
                     max_us: *sorted.last().unwrap(),
                     share: 0.0,
+                    units: Vec::new(),
                 }
             })
             .collect();
         let total: f64 = steps.iter().map(|s| s.mean_us).sum();
         for s in &mut steps {
             s.share = if total > 0.0 { s.mean_us / total } else { 0.0 };
+        }
+        // Per-unit attribution inside fused spans: the recorder holds
+        // *totals* across rows and runs per unit index; divide by runs
+        // for per-run means (MAC totals divide exactly — unit MACs are
+        // constant per run).
+        let unit_labels = compiled.step_unit_labels();
+        for (i, s) in steps.iter_mut().enumerate() {
+            let us = &rec.unit_us[i];
+            if us.is_empty() {
+                continue;
+            }
+            let unit_total: f64 = us.iter().sum();
+            s.units = us
+                .iter()
+                .enumerate()
+                .map(|(u, &t)| UnitStat {
+                    label: unit_labels[i]
+                        .get(u)
+                        .cloned()
+                        .unwrap_or_else(|| format!("unit[{u}]")),
+                    mean_us: t / runs as f64,
+                    macs: rec.unit_macs[i].get(u).copied().unwrap_or(0) / runs as u64,
+                    share: if unit_total > 0.0 { t / unit_total } else { 0.0 },
+                })
+                .collect();
         }
         Self {
             model: compiled.model().name.clone(),
@@ -265,6 +358,30 @@ mod tests {
         let mut out = vec![0.0f32; compiled.output_len()];
         let macs = compiled.run_into(x.as_map(), &mut pool, &mut out);
         assert_eq!(p.total_macs(), macs);
+    }
+
+    #[test]
+    fn fused_steps_expose_per_unit_attribution() {
+        let (p, compiled) = profiled(zoo::kws_cnn(), 4);
+        let labels = compiled.step_unit_labels();
+        assert_eq!(labels.len(), p.steps.len());
+        let mut saw_fused = false;
+        for (s, ls) in p.steps.iter().zip(&labels) {
+            if s.meta.kind == "fused" || s.meta.kind == "fused-iter" {
+                saw_fused = true;
+                assert_eq!(s.units.len(), ls.len(), "step '{}'", s.meta.label);
+                for (u, l) in s.units.iter().zip(ls) {
+                    assert_eq!(&u.label, l);
+                }
+                let share_sum: f64 = s.units.iter().map(|u| u.share).sum();
+                assert!((share_sum - 1.0).abs() < 1e-9, "{share_sum}");
+                let unit_macs: u64 = s.units.iter().map(|u| u.macs).sum();
+                assert_eq!(unit_macs, s.macs, "step '{}'", s.meta.label);
+            } else {
+                assert!(s.units.is_empty(), "step '{}'", s.meta.label);
+            }
+        }
+        assert!(saw_fused, "kws plan has no fused step");
     }
 
     #[test]

@@ -25,10 +25,45 @@ pub fn conv2d(
     out
 }
 
+/// First output index whose whole `k`-tap window starts inside the map
+/// (`o*stride - padding >= 0`), clamped to `n_out`.
+#[inline]
+pub(crate) fn interior_lo(stride: usize, padding: usize, n_out: usize) -> usize {
+    ((padding + stride - 1) / stride).min(n_out)
+}
+
+/// One past the last output index whose whole `k`-tap window ends inside
+/// a map of extent `n_in` (`o*stride - padding + k <= n_in`), clamped to
+/// `n_out`. Empty (0) when even output 0's window overruns the map.
+#[inline]
+pub(crate) fn interior_hi(
+    n_in: usize,
+    k: usize,
+    stride: usize,
+    padding: usize,
+    n_out: usize,
+) -> usize {
+    if n_in + padding >= k {
+        ((n_in + padding - k) / stride + 1).min(n_out)
+    } else {
+        0
+    }
+}
+
 /// Allocation-free [`conv2d`]: writes the `[ho, wo, cout]` output row-major
-/// into `out` (a preallocated pool slice). Identical loop/op order to
-/// `conv2d`, so results are bit-identical — the compiled executor's
+/// into `out` (a preallocated pool slice) — the compiled executor's
 /// single-layer kernel.
+///
+/// Interior/halo decomposition: output pixels whose whole `k×k` window
+/// lands inside the map take a branch-free path (the `k·cin` window row
+/// is one contiguous slice, walked against contiguous `cout`-wide weight
+/// rows), while the thin padded borders keep the guarded per-tap path
+/// (moved verbatim to [`super::reference::conv2d_naive`]). Both paths
+/// accumulate per output element in the same `(ky, kx, ci)` order and
+/// fold the activation clamp into the per-pixel epilogue, so results
+/// stay **bit-identical** to the naive reference — f32 summation order
+/// is load-bearing (the compiled path is pinned bit-identical to the
+/// interpreted engine).
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d_into(
     x: MapRef<'_>,
@@ -48,35 +83,78 @@ pub fn conv2d_into(
     let wo = (x.w + 2 * padding - k) / stride + 1;
     debug_assert_eq!(out.len(), ho * wo * cout);
 
-    for oy in 0..ho {
-        for ox in 0..wo {
-            let base = (oy * wo + ox) * cout;
-            let acc = &mut out[base..base + cout];
-            acc.copy_from_slice(b);
-            for ky in 0..k {
-                let sy = (oy * stride + ky) as isize - padding as isize;
-                if sy < 0 || sy as usize >= x.h {
+    let oy_lo = interior_lo(stride, padding, ho);
+    let oy_hi = interior_hi(x.h, k, stride, padding, ho);
+    let ox_lo = interior_lo(stride, padding, wo);
+    let ox_hi = interior_hi(x.w, k, stride, padding, wo);
+
+    // Halo path: per-tap bounds predicate, same loop nest as the naive
+    // reference, activation fused per pixel (elementwise — identical to
+    // the reference's trailing pass).
+    let guarded = |acc: &mut [f32], oy: usize, ox: usize| {
+        acc.copy_from_slice(b);
+        for ky in 0..k {
+            let sy = (oy * stride + ky) as isize - padding as isize;
+            if sy < 0 || sy as usize >= x.h {
+                continue;
+            }
+            for kx in 0..k {
+                let sx = (ox * stride + kx) as isize - padding as isize;
+                if sx < 0 || sx as usize >= x.w {
                     continue;
                 }
-                for kx in 0..k {
-                    let sx = (ox * stride + kx) as isize - padding as isize;
-                    if sx < 0 || sx as usize >= x.w {
-                        continue;
-                    }
-                    let xoff = ((sy as usize) * x.w + sx as usize) * cin;
-                    let woff = (ky * k + kx) * cin * cout;
-                    for ci in 0..cin {
-                        let xv = x.data[xoff + ci];
-                        let wrow = &w[woff + ci * cout..woff + (ci + 1) * cout];
-                        for (a, wv) in acc.iter_mut().zip(wrow) {
-                            *a += xv * wv;
-                        }
+                let xoff = ((sy as usize) * x.w + sx as usize) * cin;
+                let woff = (ky * k + kx) * cin * cout;
+                for ci in 0..cin {
+                    let xv = x.data[xoff + ci];
+                    let wrow = &w[woff + ci * cout..woff + (ci + 1) * cout];
+                    for (a, wv) in acc.iter_mut().zip(wrow) {
+                        *a += xv * wv;
                     }
                 }
             }
         }
+        activate(acc, act);
+    };
+
+    for oy in 0..ho {
+        let row_base = oy * wo;
+        if oy < oy_lo || oy >= oy_hi {
+            for ox in 0..wo {
+                let base = (row_base + ox) * cout;
+                guarded(&mut out[base..base + cout], oy, ox);
+            }
+            continue;
+        }
+        let y0 = oy * stride - padding;
+        for ox in 0..ox_lo {
+            let base = (row_base + ox) * cout;
+            guarded(&mut out[base..base + cout], oy, ox);
+        }
+        for ox in ox_lo..ox_hi {
+            let base = (row_base + ox) * cout;
+            let acc = &mut out[base..base + cout];
+            acc.copy_from_slice(b);
+            let x0 = ox * stride - padding;
+            for ky in 0..k {
+                let xrow = ((y0 + ky) * x.w + x0) * cin;
+                let wrow = ky * k * cin;
+                // The k horizontal taps collapse into one contiguous
+                // k·cin walk; tap order stays (kx, ci) lexicographic.
+                for (t, &xv) in x.data[xrow..xrow + k * cin].iter().enumerate() {
+                    let ws = &w[(wrow + t) * cout..(wrow + t + 1) * cout];
+                    for (a, wv) in acc.iter_mut().zip(ws) {
+                        *a += xv * wv;
+                    }
+                }
+            }
+            activate(acc, act);
+        }
+        for ox in ox_hi.max(ox_lo)..wo {
+            let base = (row_base + ox) * cout;
+            guarded(&mut out[base..base + cout], oy, ox);
+        }
     }
-    activate(out, act);
 }
 
 /// Depthwise conv2d. `w` is `[k,k,c]` flattened, `b` is `[c]`.
@@ -97,6 +175,13 @@ pub fn dwconv2d(
 }
 
 /// Allocation-free [`dwconv2d`] into a preallocated slice (bit-identical).
+///
+/// Same interior/halo decomposition as [`conv2d_into`]: branch-free
+/// interior pixels walk `k` contiguous `k·c` window rows against the
+/// matching weight rows; halo pixels keep the guarded per-tap path; the
+/// activation folds into the per-pixel epilogue. Accumulation order per
+/// element is `(ky, kx)` in both paths — bit-identical to
+/// [`super::reference::dwconv2d_naive`].
 #[allow(clippy::too_many_arguments)]
 pub fn dwconv2d_into(
     x: MapRef<'_>,
@@ -115,30 +200,71 @@ pub fn dwconv2d_into(
     let wo = (x.w + 2 * padding - k) / stride + 1;
     debug_assert_eq!(out.len(), ho * wo * c);
 
-    for oy in 0..ho {
-        for ox in 0..wo {
-            let base = (oy * wo + ox) * c;
-            out[base..base + c].copy_from_slice(b);
-            for ky in 0..k {
-                let sy = (oy * stride + ky) as isize - padding as isize;
-                if sy < 0 || sy as usize >= x.h {
+    let oy_lo = interior_lo(stride, padding, ho);
+    let oy_hi = interior_hi(x.h, k, stride, padding, ho);
+    let ox_lo = interior_lo(stride, padding, wo);
+    let ox_hi = interior_hi(x.w, k, stride, padding, wo);
+
+    let guarded = |acc: &mut [f32], oy: usize, ox: usize| {
+        acc.copy_from_slice(b);
+        for ky in 0..k {
+            let sy = (oy * stride + ky) as isize - padding as isize;
+            if sy < 0 || sy as usize >= x.h {
+                continue;
+            }
+            for kx in 0..k {
+                let sx = (ox * stride + kx) as isize - padding as isize;
+                if sx < 0 || sx as usize >= x.w {
                     continue;
                 }
-                for kx in 0..k {
-                    let sx = (ox * stride + kx) as isize - padding as isize;
-                    if sx < 0 || sx as usize >= x.w {
-                        continue;
-                    }
-                    let xoff = ((sy as usize) * x.w + sx as usize) * c;
-                    let woff = (ky * k + kx) * c;
-                    for ci in 0..c {
-                        out[base + ci] += x.data[xoff + ci] * w[woff + ci];
-                    }
+                let xoff = ((sy as usize) * x.w + sx as usize) * c;
+                let woff = (ky * k + kx) * c;
+                let xs = &x.data[xoff..xoff + c];
+                let ws = &w[woff..woff + c];
+                for ((a, xv), wv) in acc.iter_mut().zip(xs).zip(ws) {
+                    *a += xv * wv;
                 }
             }
         }
+        activate(acc, act);
+    };
+
+    for oy in 0..ho {
+        let row_base = oy * wo;
+        if oy < oy_lo || oy >= oy_hi {
+            for ox in 0..wo {
+                let base = (row_base + ox) * c;
+                guarded(&mut out[base..base + c], oy, ox);
+            }
+            continue;
+        }
+        let y0 = oy * stride - padding;
+        for ox in 0..ox_lo {
+            let base = (row_base + ox) * c;
+            guarded(&mut out[base..base + c], oy, ox);
+        }
+        for ox in ox_lo..ox_hi {
+            let base = (row_base + ox) * c;
+            let acc = &mut out[base..base + c];
+            acc.copy_from_slice(b);
+            let x0 = ox * stride - padding;
+            for ky in 0..k {
+                let xrow = ((y0 + ky) * x.w + x0) * c;
+                let wrow = ky * k * c;
+                for (kx, win) in x.data[xrow..xrow + k * c].chunks_exact(c).enumerate() {
+                    let ws = &w[wrow + kx * c..wrow + (kx + 1) * c];
+                    for ((a, xv), wv) in acc.iter_mut().zip(win).zip(ws) {
+                        *a += xv * wv;
+                    }
+                }
+            }
+            activate(acc, act);
+        }
+        for ox in ox_hi.max(ox_lo)..wo {
+            let base = (row_base + ox) * c;
+            guarded(&mut out[base..base + c], oy, ox);
+        }
     }
-    activate(out, act);
 }
 
 #[cfg(test)]

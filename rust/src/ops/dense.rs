@@ -11,13 +11,13 @@ pub fn dense(x: &[f32], w: &[f32], b: &[f32], dout: usize) -> Vec<f32> {
 /// Allocation-free [`dense`] into a preallocated `[dout]` slice — same
 /// accumulation order as `dense` and the element-wise [`DenseIter`] chain,
 /// so all three are bit-identical. The compiled executor's classifier /
-/// iterative-tail kernel.
+/// iterative-tail kernel. Weight rows are walked with `chunks_exact` so
+/// the inner matvec is a pair of bounds-check-free slice zips.
 pub fn dense_into(x: &[f32], w: &[f32], b: &[f32], dout: usize, out: &mut [f32]) {
     debug_assert_eq!(w.len(), x.len() * dout);
     debug_assert_eq!(out.len(), dout);
     out.copy_from_slice(b);
-    for (i, &xi) in x.iter().enumerate() {
-        let row = &w[i * dout..(i + 1) * dout];
+    for (row, &xi) in w.chunks_exact(dout).zip(x) {
         for (yj, wj) in out.iter_mut().zip(row) {
             *yj += xi * wj;
         }

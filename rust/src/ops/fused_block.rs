@@ -28,6 +28,32 @@ use crate::model::{Layer, LayerKind, ModelChain};
 
 use super::{activate, LayerParams, MapRef, Tensor};
 
+/// Observer of per-unit execution inside a fused span. One "unit" is one
+/// block layer's band sweep (plus its zero-fill / residual bookkeeping);
+/// the copy-out sink and the compiled executor's iterative-tail stages
+/// (global pool finish, dense layers, logits copy) get unit indices of
+/// their own. [`crate::obs::StepRecorder`] implements this to break an
+/// opaque `fused[..)` profile step into per-layer latency rows; the hot
+/// path passes [`NoUnitProfiler`] and pays nothing.
+pub trait UnitProfiler {
+    /// A unit's work is about to start.
+    fn unit_begin(&mut self);
+    /// The unit with index `unit` finished; `macs` is the work it did in
+    /// this bracket (summed across streaming iterations by the observer).
+    fn unit_end(&mut self, unit: usize, macs: u64);
+}
+
+/// Zero-cost [`UnitProfiler`]: every hook is an empty `#[inline(always)]`
+/// body, so the unprofiled hot path compiles as if no hooks existed.
+pub struct NoUnitProfiler;
+
+impl UnitProfiler for NoUnitProfiler {
+    #[inline(always)]
+    fn unit_begin(&mut self) {}
+    #[inline(always)]
+    fn unit_end(&mut self, _unit: usize, _macs: u64) {}
+}
+
 /// Row range in *unpadded* coordinates of a boundary tensor; `start` may be
 /// negative / extend past the map (zero padding rows).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -191,7 +217,23 @@ impl<'m> FusedBlock<'m> {
         &self,
         source: MapRef<'_>,
         cache: HCache<'_>,
+        sink: impl FnMut(usize, &[f32]),
+    ) -> BlockStats {
+        self.run_streaming_units(source, cache, sink, &mut NoUnitProfiler)
+    }
+
+    /// [`Self::run_streaming_in`] with per-unit observation: block layer
+    /// `idx` is bracketed as unit `idx` (including its zero-fill and
+    /// residual bookkeeping) and the sink as unit `depth`, every
+    /// streaming iteration — so a [`UnitProfiler`] accumulates where the
+    /// time inside the fused span actually goes. With
+    /// [`NoUnitProfiler`] this *is* the hot path (the hooks vanish).
+    pub fn run_streaming_units<U: UnitProfiler>(
+        &self,
+        source: MapRef<'_>,
+        cache: HCache<'_>,
         mut sink: impl FnMut(usize, &[f32]),
+        prof: &mut U,
     ) -> BlockStats {
         let out_shape = self.model.output_of(self.b - 1);
         let h_out = out_shape.h as usize;
@@ -239,7 +281,8 @@ impl<'m> FusedBlock<'m> {
                 let r_out = ranges[idx + 1];
                 let lo = (-r_out.start).max(0) as usize;
                 let hi = (h_map as isize - r_out.start).clamp(0, r_out.rows as isize) as usize;
-                stats.macs += band_layer(
+                prof.unit_begin();
+                let layer_macs = band_layer(
                     layer,
                     &self.params[li],
                     in_band,
@@ -247,6 +290,7 @@ impl<'m> FusedBlock<'m> {
                     lo,
                     hi.max(lo),
                 );
+                stats.macs += layer_macs;
                 // Zero rows that fall outside the real map: they are the
                 // next layer's padding rows and must be exactly 0.
                 zero_outside(&mut out_band, r_out, h_map);
@@ -265,10 +309,13 @@ impl<'m> FusedBlock<'m> {
                         add_aligned(src_band, ranges[src_idx], &mut out_band, ranges[idx + 1]);
                     }
                 }
+                prof.unit_end(idx, layer_macs);
             }
             let (out_rows, out_w, out_c) = geom.dims[depth];
             let out_lo = geom.offs[depth];
+            prof.unit_begin();
             sink(r, &storage[out_lo..out_lo + out_rows * out_w * out_c]);
+            prof.unit_end(depth, 0);
             stats.iterations += 1;
         }
         stats
@@ -329,7 +376,9 @@ fn band_layer(
         LayerKind::Conv2d if k == 1 && p == 0 && s == 1 => {
             // Perf iteration 2: pointwise fast path - a row-level GEMV
             // with no window bookkeeping. The MBV2/MCUNet expand/project
-            // layers put most MACs here.
+            // layers put most MACs here. Activation folds into the
+            // per-pixel epilogue (elementwise — identical to a trailing
+            // full-slice pass).
             let w = &params.weights; // [cin][cout]
             for oy in row_lo..row_hi {
                 for ox in 0..wo {
@@ -347,18 +396,24 @@ fn band_layer(
                             *a += xv * wv;
                         }
                     }
+                    activate(acc, layer.act);
                 }
             }
-            let slice = &mut out_band.data[row_lo * wo * cout..row_hi * wo * cout];
-            activate(slice, layer.act);
             ((row_hi - row_lo) * wo * cout * cin) as u64
         }
         LayerKind::Conv2d => {
+            // Vertical padding is pre-materialized in the band, so only a
+            // horizontal interior/halo split is needed: interior columns
+            // walk the contiguous k·cin window row branch-free (same
+            // (ky, kx, ci) accumulation order — bit-identical), the two
+            // padded edges keep the guarded path.
             let w = &params.weights;
+            let ox_lo = super::conv::interior_lo(s, p, wo);
+            let ox_hi = super::conv::interior_hi(in_band.w, k, s, p, wo);
             for oy in row_lo..row_hi {
-                for ox in 0..wo {
+                let edge = |data: &mut [f32], ox: usize| {
                     let base = (oy * wo + ox) * cout;
-                    out_band.data[base..base + cout].copy_from_slice(&params.bias);
+                    data[base..base + cout].copy_from_slice(&params.bias);
                     for ky in 0..k {
                         let sy = oy * s + ky; // vertical pad already in band
                         for kx in 0..k {
@@ -371,18 +426,38 @@ fn band_layer(
                             for ci in 0..cin {
                                 let xv = in_band.data[xoff + ci];
                                 let wrow = &w[woff + ci * cout..woff + (ci + 1) * cout];
-                                for (acc, wv) in
-                                    out_band.data[base..base + cout].iter_mut().zip(wrow)
-                                {
+                                for (acc, wv) in data[base..base + cout].iter_mut().zip(wrow) {
                                     *acc += xv * wv;
                                 }
                             }
                         }
                     }
+                    activate(&mut data[base..base + cout], layer.act);
+                };
+                for ox in 0..ox_lo {
+                    edge(&mut *out_band.data, ox);
+                }
+                for ox in ox_lo..ox_hi {
+                    let base = (oy * wo + ox) * cout;
+                    let acc = &mut out_band.data[base..base + cout];
+                    acc.copy_from_slice(&params.bias);
+                    let x0 = ox * s - p;
+                    for ky in 0..k {
+                        let xrow = ((oy * s + ky) * in_band.w + x0) * cin;
+                        let wrow = ky * k * cin;
+                        for (t, &xv) in in_band.data[xrow..xrow + k * cin].iter().enumerate() {
+                            let ws = &w[(wrow + t) * cout..(wrow + t + 1) * cout];
+                            for (a, wv) in acc.iter_mut().zip(ws) {
+                                *a += xv * wv;
+                            }
+                        }
+                    }
+                    activate(acc, layer.act);
+                }
+                for ox in ox_hi.max(ox_lo)..wo {
+                    edge(&mut *out_band.data, ox);
                 }
             }
-            let slice = &mut out_band.data[row_lo * wo * cout..row_hi * wo * cout];
-            activate(slice, layer.act);
             ((row_hi - row_lo) * wo * cout * k * k * cin) as u64
         }
         LayerKind::DwConv2d => {
@@ -391,12 +466,8 @@ fn band_layer(
             // per-element bounds branch from the k*k inner loop.
             let w = &params.weights;
             // Interior: ox*s + kx - p in [0, w) for all kx in [0, k).
-            let ox_lo = (p + s - 1) / s; // first ox with ox*s - p >= 0
-            let ox_hi = if in_band.w + p >= k {
-                ((in_band.w + p - k) / s + 1).min(wo)
-            } else {
-                0
-            };
+            let ox_lo = super::conv::interior_lo(s, p, wo);
+            let ox_hi = super::conv::interior_hi(in_band.w, k, s, p, wo);
             for oy in row_lo..row_hi {
                 let edge = |data: &mut [f32], ox: usize| {
                     let base = (oy * wo + ox) * cout;
@@ -415,19 +486,20 @@ fn band_layer(
                             }
                         }
                     }
+                    activate(&mut data[base..base + cout], layer.act);
                 };
-                for ox in 0..ox_lo.min(wo) {
+                for ox in 0..ox_lo {
                     edge(&mut *out_band.data, ox);
                 }
                 for ox in ox_lo..ox_hi {
                     let base = (oy * wo + ox) * cout;
-                    out_band.data[base..base + cout].copy_from_slice(&params.bias);
+                    let acc = &mut out_band.data[base..base + cout];
+                    acc.copy_from_slice(&params.bias);
                     let x0 = ox * s - p;
                     for ky in 0..k {
                         let sy = oy * s + ky;
                         let row = (sy * in_band.w + x0) * cin;
                         let wrow = ky * k * cin;
-                        let acc = &mut out_band.data[base..base + cout];
                         for kx in 0..k {
                             let xs = &in_band.data[row + kx * cin..row + (kx + 1) * cin];
                             let ws = &w[wrow + kx * cin..wrow + (kx + 1) * cin];
@@ -436,37 +508,35 @@ fn band_layer(
                             }
                         }
                     }
+                    activate(acc, layer.act);
                 }
                 for ox in ox_hi.max(ox_lo)..wo {
                     edge(&mut *out_band.data, ox);
                 }
             }
-            let slice = &mut out_band.data[row_lo * wo * cout..row_hi * wo * cout];
-            activate(slice, layer.act);
             ((row_hi - row_lo) * wo * cout * k * k) as u64
         }
         LayerKind::AvgPool | LayerKind::MaxPool => {
+            // Pools are unpadded here, so every window row is one
+            // contiguous k·cin slice — row-slice iteration as in
+            // `avg_pool2d_into`, no per-element channel offsets.
             let is_avg = matches!(layer.kind, LayerKind::AvgPool);
             let inv = 1.0 / (k * k) as f32;
             for oy in row_lo..row_hi {
                 for ox in 0..wo {
                     let base = (oy * wo + ox) * cout;
-                    for ci in 0..cout {
-                        out_band.data[base + ci] =
-                            if is_avg { 0.0 } else { f32::NEG_INFINITY };
-                    }
+                    let acc = &mut out_band.data[base..base + cout];
+                    acc.fill(if is_avg { 0.0 } else { f32::NEG_INFINITY });
                     for ky in 0..k {
-                        let sy = oy * s + ky;
-                        for kx in 0..k {
-                            let sx = ox * s + kx; // pools are unpadded here
-                            let xoff = (sy * in_band.w + sx) * cin;
-                            for ci in 0..cout {
-                                let v = in_band.data[xoff + ci];
-                                let acc = &mut out_band.data[base + ci];
-                                if is_avg {
-                                    *acc += v * inv;
-                                } else {
-                                    *acc = acc.max(v);
+                        let row = ((oy * s + ky) * in_band.w + ox * s) * cin;
+                        for win in in_band.data[row..row + k * cin].chunks_exact(cin) {
+                            if is_avg {
+                                for (a, v) in acc.iter_mut().zip(win) {
+                                    *a += v * inv;
+                                }
+                            } else {
+                                for (a, v) in acc.iter_mut().zip(win) {
+                                    *a = a.max(*v);
                                 }
                             }
                         }

@@ -7,17 +7,26 @@
 //! in [`quant`] (i8 in, i32 accumulate, fused requantize epilogue) — the
 //! regime [`crate::model::ModelChain::elem_bytes`]' analytic sizing
 //! assumes, executed for real by [`crate::qexec`].
+//!
+//! The hot kernels are engineered around an interior/halo decomposition
+//! (branch-free contiguous interior sweeps, guarded borders, epilogues
+//! fused into the accumulation pass); [`reference`] retains the original
+//! naive loop nests as the parity oracle for both numeric contracts
+//! (f32 bit-identity, int8 exact identity).
 
 mod conv;
 mod dense;
 mod fused_block;
 mod pool;
 mod quant;
+pub mod reference;
 mod tensor;
 
 pub use conv::{conv2d, conv2d_into, dwconv2d, dwconv2d_into};
 pub use dense::{dense, dense_into, DenseIter};
-pub use fused_block::{BandGeom, BandRange, BlockStats, FusedBlock, HCache};
+pub use fused_block::{
+    BandGeom, BandRange, BlockStats, FusedBlock, HCache, NoUnitProfiler, UnitProfiler,
+};
 pub use pool::{
     accumulate_row_major, avg_pool2d, avg_pool2d_into, global_avg_pool, global_avg_pool_into,
     max_pool2d, max_pool2d_into, scale_avg, GlobalPoolIter,
@@ -27,8 +36,9 @@ pub use quant::{
     qdwconv2d_into, qgap_accumulate, qgap_finish, qgap_reset, qmax_pool2d_into, qresidual_add,
     quantize_into, set_i32, QLayerParams, QMapRef, QParams, QTensor, QuantSpec,
 };
+pub(crate) use conv::{interior_hi, interior_lo};
 pub(crate) use fused_block::required_input;
-pub(crate) use quant::qact;
+pub(crate) use quant::{qact, QBLOCK};
 pub use tensor::{MapRef, Tensor};
 
 use crate::model::{Activation, Layer, LayerKind};

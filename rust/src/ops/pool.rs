@@ -13,20 +13,29 @@ pub fn avg_pool2d(x: &Tensor, k: usize, stride: usize) -> Tensor {
 
 /// Allocation-free [`avg_pool2d`] into a preallocated slice
 /// (bit-identical; the compiled executor's single-layer kernel).
+///
+/// Pool windows never cross padding (unpadded contract), so every pixel
+/// is "interior": each of the `k` window rows is one contiguous `k·c`
+/// slice walked with `chunks_exact(c)` instead of recomputing a channel
+/// offset per element. Tap order stays `(ky, kx)` and each tap still
+/// does one multiply-add, so results match
+/// [`super::reference::avg_pool2d_naive`] bit-for-bit.
 pub fn avg_pool2d_into(x: MapRef<'_>, k: usize, stride: usize, out: &mut [f32]) {
     let ho = (x.h - k) / stride + 1;
     let wo = (x.w - k) / stride + 1;
-    debug_assert_eq!(out.len(), ho * wo * x.c);
-    out.fill(0.0);
+    let c = x.c;
+    debug_assert_eq!(out.len(), ho * wo * c);
     let inv = 1.0 / (k * k) as f32;
     for oy in 0..ho {
         for ox in 0..wo {
+            let base = (oy * wo + ox) * c;
+            let acc = &mut out[base..base + c];
+            acc.fill(0.0);
             for ky in 0..k {
-                for kx in 0..k {
-                    let xoff = ((oy * stride + ky) * x.w + ox * stride + kx) * x.c;
-                    let base = (oy * wo + ox) * x.c;
-                    for ci in 0..x.c {
-                        out[base + ci] += x.data[xoff + ci] * inv;
+                let row = ((oy * stride + ky) * x.w + ox * stride) * c;
+                for win in x.data[row..row + k * c].chunks_exact(c) {
+                    for (a, v) in acc.iter_mut().zip(win) {
+                        *a += v * inv;
                     }
                 }
             }
@@ -43,19 +52,24 @@ pub fn max_pool2d(x: &Tensor, k: usize, stride: usize) -> Tensor {
 }
 
 /// Allocation-free [`max_pool2d`] into a preallocated slice (bit-identical).
+///
+/// Row-slice iteration as in [`avg_pool2d_into`]; `f32::max` per tap in
+/// the same `(ky, kx)` order as [`super::reference::max_pool2d_naive`].
 pub fn max_pool2d_into(x: MapRef<'_>, k: usize, stride: usize, out: &mut [f32]) {
     let ho = (x.h - k) / stride + 1;
     let wo = (x.w - k) / stride + 1;
-    debug_assert_eq!(out.len(), ho * wo * x.c);
-    out.fill(f32::NEG_INFINITY);
+    let c = x.c;
+    debug_assert_eq!(out.len(), ho * wo * c);
     for oy in 0..ho {
         for ox in 0..wo {
+            let base = (oy * wo + ox) * c;
+            let acc = &mut out[base..base + c];
+            acc.fill(f32::NEG_INFINITY);
             for ky in 0..k {
-                for kx in 0..k {
-                    let xoff = ((oy * stride + ky) * x.w + ox * stride + kx) * x.c;
-                    let base = (oy * wo + ox) * x.c;
-                    for ci in 0..x.c {
-                        out[base + ci] = out[base + ci].max(x.data[xoff + ci]);
+                let row = ((oy * stride + ky) * x.w + ox * stride) * c;
+                for win in x.data[row..row + k * c].chunks_exact(c) {
+                    for (a, v) in acc.iter_mut().zip(win) {
+                        *a = a.max(*v);
                     }
                 }
             }

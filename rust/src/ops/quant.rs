@@ -222,10 +222,24 @@ pub fn set_i32(buf: &mut [i8], idx: usize, v: i32) {
     buf[o + 3] = b[3] as i8;
 }
 
+/// Output-channel / channel block width of the int8 interior kernels:
+/// a `[i32; QBLOCK]` stack accumulator lets each loaded input byte feed
+/// a whole block of output channels (the TinyEngine-style reuse that
+/// makes int8 conv memory-bound on weights, not activations). i32
+/// accumulation is associative, so any block width is exact.
+pub(crate) const QBLOCK: usize = 64;
+
 /// int8 twin of [`super::conv2d_into`]: i8 in, i32 accumulation of
 /// `(x - zp_x)(w - zp_w)`, one fused f32 epilogue per output element
 /// (`acc · s_x·s_w + bias`, activation clamp, requantize) — no
 /// intermediate dequantized map ever exists.
+///
+/// Interior/halo decomposition as in the f32 twin, but the interior is
+/// restructured output-channel-blocked ([`QBLOCK`]-wide i32 stack
+/// accumulators): each input byte is loaded once and swept across the
+/// block's weight row, with an exact `x == zero_point` skip (that
+/// term's contribution is 0). i32 sums are associative, so results are
+/// **exactly identical** to [`super::reference::qconv2d_naive`].
 #[allow(clippy::too_many_arguments)]
 pub fn qconv2d_into(
     x: QMapRef<'_>,
@@ -247,37 +261,97 @@ pub fn qconv2d_into(
     let zw = p.w_qp.zero_point;
     let real_scale = x_qp.scale * p.w_qp.scale;
 
-    for oy in 0..ho {
-        for ox in 0..wo {
-            for co in 0..cout {
-                let mut acc: i32 = 0;
-                for ky in 0..k {
-                    let sy = (oy * stride + ky) as isize - padding as isize;
-                    if sy < 0 || sy as usize >= x.h {
+    let oy_lo = super::conv::interior_lo(stride, padding, ho);
+    let oy_hi = super::conv::interior_hi(x.h, k, stride, padding, ho);
+    let ox_lo = super::conv::interior_lo(stride, padding, wo);
+    let ox_hi = super::conv::interior_hi(x.w, k, stride, padding, wo);
+
+    let guarded = |out_px: &mut [i8], oy: usize, ox: usize| {
+        for co in 0..cout {
+            let mut acc: i32 = 0;
+            for ky in 0..k {
+                let sy = (oy * stride + ky) as isize - padding as isize;
+                if sy < 0 || sy as usize >= x.h {
+                    continue;
+                }
+                for kx in 0..k {
+                    let sx = (ox * stride + kx) as isize - padding as isize;
+                    if sx < 0 || sx as usize >= x.w {
                         continue;
                     }
-                    for kx in 0..k {
-                        let sx = (ox * stride + kx) as isize - padding as isize;
-                        if sx < 0 || sx as usize >= x.w {
+                    let xoff = ((sy as usize) * x.w + sx as usize) * cin;
+                    let woff = (ky * k + kx) * cin * cout;
+                    for ci in 0..cin {
+                        let xv = x.data[xoff + ci] as i32 - zx;
+                        let wv = p.w_q[woff + ci * cout + co] as i32 - zw;
+                        acc += xv * wv;
+                    }
+                }
+            }
+            let real = qact(acc as f32 * real_scale + p.bias[co], act);
+            out_px[co] = out_qp.quantize(real);
+        }
+    };
+
+    let mut acc = [0i32; QBLOCK];
+    for oy in 0..ho {
+        let row_base = oy * wo;
+        if oy < oy_lo || oy >= oy_hi {
+            for ox in 0..wo {
+                let base = (row_base + ox) * cout;
+                guarded(&mut out[base..base + cout], oy, ox);
+            }
+            continue;
+        }
+        let y0 = oy * stride - padding;
+        for ox in 0..ox_lo {
+            let base = (row_base + ox) * cout;
+            guarded(&mut out[base..base + cout], oy, ox);
+        }
+        for ox in ox_lo..ox_hi {
+            let base = (row_base + ox) * cout;
+            let x0 = ox * stride - padding;
+            let mut co0 = 0;
+            while co0 < cout {
+                let bl = QBLOCK.min(cout - co0);
+                let accs = &mut acc[..bl];
+                accs.fill(0);
+                for ky in 0..k {
+                    let xrow = ((y0 + ky) * x.w + x0) * cin;
+                    let wrow = ky * k * cin;
+                    for (t, &xq) in x.data[xrow..xrow + k * cin].iter().enumerate() {
+                        let xv = xq as i32 - zx;
+                        if xv == 0 {
                             continue;
                         }
-                        let xoff = ((sy as usize) * x.w + sx as usize) * cin;
-                        let woff = (ky * k + kx) * cin * cout;
-                        for ci in 0..cin {
-                            let xv = x.data[xoff + ci] as i32 - zx;
-                            let wv = p.w_q[woff + ci * cout + co] as i32 - zw;
-                            acc += xv * wv;
+                        let woff = (wrow + t) * cout + co0;
+                        let ws = &p.w_q[woff..woff + bl];
+                        for (a, &wq) in accs.iter_mut().zip(ws) {
+                            *a += xv * (wq as i32 - zw);
                         }
                     }
                 }
-                let real = qact(acc as f32 * real_scale + p.bias[co], act);
-                out[(oy * wo + ox) * cout + co] = out_qp.quantize(real);
+                for (j, &a) in accs.iter().enumerate() {
+                    let real = qact(a as f32 * real_scale + p.bias[co0 + j], act);
+                    out[base + co0 + j] = out_qp.quantize(real);
+                }
+                co0 += bl;
             }
+        }
+        for ox in ox_hi.max(ox_lo)..wo {
+            let base = (row_base + ox) * cout;
+            guarded(&mut out[base..base + cout], oy, ox);
         }
     }
 }
 
 /// int8 twin of [`super::dwconv2d_into`] (`[k,k,c]` weight layout).
+///
+/// Interior pixels run channel-blocked: a [`QBLOCK`]-wide i32 stack
+/// accumulator sweeps contiguous input/weight channel slices per tap,
+/// so the per-channel scalar loop (and its per-tap bounds predicate)
+/// only survives on the halo. Exactly identical to
+/// [`super::reference::qdwconv2d_naive`].
 #[allow(clippy::too_many_arguments)]
 pub fn qdwconv2d_into(
     x: QMapRef<'_>,
@@ -298,36 +372,88 @@ pub fn qdwconv2d_into(
     let zw = p.w_qp.zero_point;
     let real_scale = x_qp.scale * p.w_qp.scale;
 
-    for oy in 0..ho {
-        for ox in 0..wo {
-            for ci in 0..c {
-                let mut acc: i32 = 0;
-                for ky in 0..k {
-                    let sy = (oy * stride + ky) as isize - padding as isize;
-                    if sy < 0 || sy as usize >= x.h {
+    let oy_lo = super::conv::interior_lo(stride, padding, ho);
+    let oy_hi = super::conv::interior_hi(x.h, k, stride, padding, ho);
+    let ox_lo = super::conv::interior_lo(stride, padding, wo);
+    let ox_hi = super::conv::interior_hi(x.w, k, stride, padding, wo);
+
+    let guarded = |out_px: &mut [i8], oy: usize, ox: usize| {
+        for ci in 0..c {
+            let mut acc: i32 = 0;
+            for ky in 0..k {
+                let sy = (oy * stride + ky) as isize - padding as isize;
+                if sy < 0 || sy as usize >= x.h {
+                    continue;
+                }
+                for kx in 0..k {
+                    let sx = (ox * stride + kx) as isize - padding as isize;
+                    if sx < 0 || sx as usize >= x.w {
                         continue;
                     }
+                    let xoff = ((sy as usize) * x.w + sx as usize) * c;
+                    let woff = (ky * k + kx) * c;
+                    let xv = x.data[xoff + ci] as i32 - zx;
+                    let wv = p.w_q[woff + ci] as i32 - zw;
+                    acc += xv * wv;
+                }
+            }
+            let real = qact(acc as f32 * real_scale + p.bias[ci], act);
+            out_px[ci] = out_qp.quantize(real);
+        }
+    };
+
+    let mut acc = [0i32; QBLOCK];
+    for oy in 0..ho {
+        let row_base = oy * wo;
+        if oy < oy_lo || oy >= oy_hi {
+            for ox in 0..wo {
+                let base = (row_base + ox) * c;
+                guarded(&mut out[base..base + c], oy, ox);
+            }
+            continue;
+        }
+        let y0 = oy * stride - padding;
+        for ox in 0..ox_lo {
+            let base = (row_base + ox) * c;
+            guarded(&mut out[base..base + c], oy, ox);
+        }
+        for ox in ox_lo..ox_hi {
+            let base = (row_base + ox) * c;
+            let x0 = ox * stride - padding;
+            let mut c0 = 0;
+            while c0 < c {
+                let bl = QBLOCK.min(c - c0);
+                let accs = &mut acc[..bl];
+                accs.fill(0);
+                for ky in 0..k {
+                    let xrow = ((y0 + ky) * x.w + x0) * c;
+                    let wrow = ky * k * c;
                     for kx in 0..k {
-                        let sx = (ox * stride + kx) as isize - padding as isize;
-                        if sx < 0 || sx as usize >= x.w {
-                            continue;
+                        let xs = &x.data[xrow + kx * c + c0..xrow + kx * c + c0 + bl];
+                        let ws = &p.w_q[wrow + kx * c + c0..wrow + kx * c + c0 + bl];
+                        for ((a, &xq), &wq) in accs.iter_mut().zip(xs).zip(ws) {
+                            *a += (xq as i32 - zx) * (wq as i32 - zw);
                         }
-                        let xoff = ((sy as usize) * x.w + sx as usize) * c;
-                        let woff = (ky * k + kx) * c;
-                        let xv = x.data[xoff + ci] as i32 - zx;
-                        let wv = p.w_q[woff + ci] as i32 - zw;
-                        acc += xv * wv;
                     }
                 }
-                let real = qact(acc as f32 * real_scale + p.bias[ci], act);
-                out[(oy * wo + ox) * c + ci] = out_qp.quantize(real);
+                for (j, &a) in accs.iter().enumerate() {
+                    let real = qact(a as f32 * real_scale + p.bias[c0 + j], act);
+                    out[base + c0 + j] = out_qp.quantize(real);
+                }
+                c0 += bl;
             }
+        }
+        for ox in ox_hi.max(ox_lo)..wo {
+            let base = (row_base + ox) * c;
+            guarded(&mut out[base..base + c], oy, ox);
         }
     }
 }
 
 /// int8 twin of [`super::avg_pool2d_into`] (unpadded): i32 window sum of
-/// raw q values, one epilogue per output element.
+/// raw q values over contiguous row slices in [`QBLOCK`]-wide channel
+/// blocks, one epilogue per output element. Exactly identical to
+/// [`super::reference::qavg_pool2d_naive`].
 pub fn qavg_pool2d_into(
     x: QMapRef<'_>,
     x_qp: QParams,
@@ -342,25 +468,38 @@ pub fn qavg_pool2d_into(
     debug_assert!(out.len() >= ho * wo * c, "output buffer too small");
     let count = (k * k) as f32;
     let zx = x_qp.zero_point as f32;
+    let mut acc = [0i32; QBLOCK];
     for oy in 0..ho {
         for ox in 0..wo {
-            for ci in 0..c {
-                let mut sum: i32 = 0;
+            let base = (oy * wo + ox) * c;
+            let mut c0 = 0;
+            while c0 < c {
+                let bl = QBLOCK.min(c - c0);
+                let accs = &mut acc[..bl];
+                accs.fill(0);
                 for ky in 0..k {
+                    let row = ((oy * stride + ky) * x.w + ox * stride) * c;
                     for kx in 0..k {
-                        let xoff = ((oy * stride + ky) * x.w + ox * stride + kx) * c;
-                        sum += x.data[xoff + ci] as i32;
+                        let xs = &x.data[row + kx * c + c0..row + kx * c + c0 + bl];
+                        for (a, &xq) in accs.iter_mut().zip(xs) {
+                            *a += xq as i32;
+                        }
                     }
                 }
-                let real = (sum as f32 - count * zx) * x_qp.scale / count;
-                out[(oy * wo + ox) * c + ci] = out_qp.quantize(real);
+                for (j, &sum) in accs.iter().enumerate() {
+                    let real = (sum as f32 - count * zx) * x_qp.scale / count;
+                    out[base + c0 + j] = out_qp.quantize(real);
+                }
+                c0 += bl;
             }
         }
     }
 }
 
 /// int8 twin of [`super::max_pool2d_into`]: max over raw q values (the
-/// max is monotone under one affine map), then a single requantize.
+/// max is monotone under one affine map) in [`QBLOCK`]-wide channel
+/// blocks over contiguous row slices, then a single requantize. Exactly
+/// identical to [`super::reference::qmax_pool2d_naive`].
 pub fn qmax_pool2d_into(
     x: QMapRef<'_>,
     x_qp: QParams,
@@ -373,25 +512,39 @@ pub fn qmax_pool2d_into(
     let ho = (x.h - k) / stride + 1;
     let wo = (x.w - k) / stride + 1;
     debug_assert!(out.len() >= ho * wo * c, "output buffer too small");
+    let mut acc = [i8::MIN; QBLOCK];
     for oy in 0..ho {
         for ox in 0..wo {
-            for ci in 0..c {
-                let mut m: i8 = i8::MIN;
+            let base = (oy * wo + ox) * c;
+            let mut c0 = 0;
+            while c0 < c {
+                let bl = QBLOCK.min(c - c0);
+                let accs = &mut acc[..bl];
+                accs.fill(i8::MIN);
                 for ky in 0..k {
+                    let row = ((oy * stride + ky) * x.w + ox * stride) * c;
                     for kx in 0..k {
-                        let xoff = ((oy * stride + ky) * x.w + ox * stride + kx) * c;
-                        m = m.max(x.data[xoff + ci]);
+                        let xs = &x.data[row + kx * c + c0..row + kx * c + c0 + bl];
+                        for (a, &xq) in accs.iter_mut().zip(xs) {
+                            *a = (*a).max(xq);
+                        }
                     }
                 }
-                out[(oy * wo + ox) * c + ci] = out_qp.quantize(x_qp.dequantize(m));
+                for (j, &m) in accs.iter().enumerate() {
+                    out[base + c0 + j] = out_qp.quantize(x_qp.dequantize(m));
+                }
+                c0 += bl;
             }
         }
     }
 }
 
 /// int8 twin of [`super::dense_into`] (`[din][dout]` weight layout):
-/// one i32 dot product + fused epilogue per output scalar, written
-/// straight to i8 — dense accumulators never materialize.
+/// i32 accumulation over [`QBLOCK`]-wide output blocks (each input byte
+/// is loaded once per block and swept across a contiguous weight-row
+/// slice, with an exact `x == zero_point` skip), fused epilogue written
+/// straight to i8 — dense accumulators never materialize. Exactly
+/// identical to [`super::reference::qdense_naive`].
 pub fn qdense_into(
     x: &[i8],
     x_qp: QParams,
@@ -404,14 +557,26 @@ pub fn qdense_into(
     let zx = x_qp.zero_point;
     let zw = p.w_qp.zero_point;
     let real_scale = x_qp.scale * p.w_qp.scale;
-    for (j, o) in out.iter_mut().take(dout).enumerate() {
-        let mut acc: i32 = 0;
+    let mut acc = [0i32; QBLOCK];
+    let mut j0 = 0;
+    while j0 < dout {
+        let bl = QBLOCK.min(dout - j0);
+        let accs = &mut acc[..bl];
+        accs.fill(0);
         for (i, &xq) in x.iter().enumerate() {
             let xv = xq as i32 - zx;
-            let wv = p.w_q[i * dout + j] as i32 - zw;
-            acc += xv * wv;
+            if xv == 0 {
+                continue;
+            }
+            let ws = &p.w_q[i * dout + j0..i * dout + j0 + bl];
+            for (a, &wq) in accs.iter_mut().zip(ws) {
+                *a += xv * (wq as i32 - zw);
+            }
         }
-        *o = out_qp.quantize(acc as f32 * real_scale + p.bias[j]);
+        for (j, &a) in accs.iter().enumerate() {
+            out[j0 + j] = out_qp.quantize(a as f32 * real_scale + p.bias[j0 + j]);
+        }
+        j0 += bl;
     }
 }
 

@@ -1,0 +1,355 @@
+//! Retained naive reference kernels — the pre-interior/halo loop nests.
+//!
+//! When the hot `*_into` / `q*_into` kernels were restructured around the
+//! interior/halo decomposition (branch-free interiors, fused epilogues),
+//! their original per-pixel guarded loops moved here verbatim. They are
+//! the parity oracles: `rust/tests/kernel_parity.rs` fuzzes shapes,
+//! strides, and paddings and asserts the optimized kernels are
+//! **bit-identical** (f32) / **exactly identical** (int8) to these, and
+//! `benches/kernels.rs` times both variants so the committed
+//! `BENCH_kernels.json` carries a real before/after delta per kernel
+//! shape.
+//!
+//! The f32 references accumulate per output element in `(ky, kx, ci)`
+//! order with one trailing `activate` pass — exactly the order the
+//! optimized kernels preserve (f32 addition is not associative, and the
+//! compiled path is pinned bit-identical to the interpreted engine). The
+//! int8 references accumulate in i32, where any summation order yields
+//! the same integer — the optimized twins exploit that freely.
+
+use crate::model::Activation;
+
+use super::{activate, qact, MapRef, QLayerParams, QMapRef, QParams};
+
+/// Naive [`super::conv2d_into`]: per-pixel guarded taps, trailing
+/// activation pass. Bit-identical to the optimized kernel.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_naive(
+    x: MapRef<'_>,
+    w: &[f32],
+    b: &[f32],
+    k: usize,
+    stride: usize,
+    padding: usize,
+    cout: usize,
+    act: Activation,
+    out: &mut [f32],
+) {
+    let cin = x.c;
+    let ho = (x.h + 2 * padding - k) / stride + 1;
+    let wo = (x.w + 2 * padding - k) / stride + 1;
+    debug_assert_eq!(out.len(), ho * wo * cout);
+    for oy in 0..ho {
+        for ox in 0..wo {
+            let base = (oy * wo + ox) * cout;
+            let acc = &mut out[base..base + cout];
+            acc.copy_from_slice(b);
+            for ky in 0..k {
+                let sy = (oy * stride + ky) as isize - padding as isize;
+                if sy < 0 || sy as usize >= x.h {
+                    continue;
+                }
+                for kx in 0..k {
+                    let sx = (ox * stride + kx) as isize - padding as isize;
+                    if sx < 0 || sx as usize >= x.w {
+                        continue;
+                    }
+                    let xoff = ((sy as usize) * x.w + sx as usize) * cin;
+                    let woff = (ky * k + kx) * cin * cout;
+                    for ci in 0..cin {
+                        let xv = x.data[xoff + ci];
+                        let wrow = &w[woff + ci * cout..woff + (ci + 1) * cout];
+                        for (a, wv) in acc.iter_mut().zip(wrow) {
+                            *a += xv * wv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    activate(out, act);
+}
+
+/// Naive [`super::dwconv2d_into`] (bit-identical oracle).
+#[allow(clippy::too_many_arguments)]
+pub fn dwconv2d_naive(
+    x: MapRef<'_>,
+    w: &[f32],
+    b: &[f32],
+    k: usize,
+    stride: usize,
+    padding: usize,
+    act: Activation,
+    out: &mut [f32],
+) {
+    let c = x.c;
+    let ho = (x.h + 2 * padding - k) / stride + 1;
+    let wo = (x.w + 2 * padding - k) / stride + 1;
+    debug_assert_eq!(out.len(), ho * wo * c);
+    for oy in 0..ho {
+        for ox in 0..wo {
+            let base = (oy * wo + ox) * c;
+            out[base..base + c].copy_from_slice(b);
+            for ky in 0..k {
+                let sy = (oy * stride + ky) as isize - padding as isize;
+                if sy < 0 || sy as usize >= x.h {
+                    continue;
+                }
+                for kx in 0..k {
+                    let sx = (ox * stride + kx) as isize - padding as isize;
+                    if sx < 0 || sx as usize >= x.w {
+                        continue;
+                    }
+                    let xoff = ((sy as usize) * x.w + sx as usize) * c;
+                    let woff = (ky * k + kx) * c;
+                    for ci in 0..c {
+                        out[base + ci] += x.data[xoff + ci] * w[woff + ci];
+                    }
+                }
+            }
+        }
+    }
+    activate(out, act);
+}
+
+/// Naive [`super::avg_pool2d_into`]: per-element offset recomputation in
+/// four nested loops (bit-identical oracle).
+pub fn avg_pool2d_naive(x: MapRef<'_>, k: usize, stride: usize, out: &mut [f32]) {
+    let ho = (x.h - k) / stride + 1;
+    let wo = (x.w - k) / stride + 1;
+    debug_assert_eq!(out.len(), ho * wo * x.c);
+    out.fill(0.0);
+    let inv = 1.0 / (k * k) as f32;
+    for oy in 0..ho {
+        for ox in 0..wo {
+            for ky in 0..k {
+                for kx in 0..k {
+                    let xoff = ((oy * stride + ky) * x.w + ox * stride + kx) * x.c;
+                    let base = (oy * wo + ox) * x.c;
+                    for ci in 0..x.c {
+                        out[base + ci] += x.data[xoff + ci] * inv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Naive [`super::max_pool2d_into`] (bit-identical oracle).
+pub fn max_pool2d_naive(x: MapRef<'_>, k: usize, stride: usize, out: &mut [f32]) {
+    let ho = (x.h - k) / stride + 1;
+    let wo = (x.w - k) / stride + 1;
+    debug_assert_eq!(out.len(), ho * wo * x.c);
+    out.fill(f32::NEG_INFINITY);
+    for oy in 0..ho {
+        for ox in 0..wo {
+            for ky in 0..k {
+                for kx in 0..k {
+                    let xoff = ((oy * stride + ky) * x.w + ox * stride + kx) * x.c;
+                    let base = (oy * wo + ox) * x.c;
+                    for ci in 0..x.c {
+                        out[base + ci] = out[base + ci].max(x.data[xoff + ci]);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Naive [`super::dense_into`] (bit-identical oracle).
+pub fn dense_naive(x: &[f32], w: &[f32], b: &[f32], dout: usize, out: &mut [f32]) {
+    debug_assert_eq!(w.len(), x.len() * dout);
+    debug_assert_eq!(out.len(), dout);
+    out.copy_from_slice(b);
+    for (i, &xi) in x.iter().enumerate() {
+        let row = &w[i * dout..(i + 1) * dout];
+        for (yj, wj) in out.iter_mut().zip(row) {
+            *yj += xi * wj;
+        }
+    }
+}
+
+/// Naive [`super::qconv2d_into`]: one scalar i32 accumulator per output
+/// channel, guarded taps (exact-identity oracle).
+#[allow(clippy::too_many_arguments)]
+pub fn qconv2d_naive(
+    x: QMapRef<'_>,
+    x_qp: QParams,
+    p: &QLayerParams,
+    k: usize,
+    stride: usize,
+    padding: usize,
+    cout: usize,
+    act: Activation,
+    out_qp: QParams,
+    out: &mut [i8],
+) {
+    let cin = x.c;
+    let ho = (x.h + 2 * padding - k) / stride + 1;
+    let wo = (x.w + 2 * padding - k) / stride + 1;
+    debug_assert!(out.len() >= ho * wo * cout, "output buffer too small");
+    let zx = x_qp.zero_point;
+    let zw = p.w_qp.zero_point;
+    let real_scale = x_qp.scale * p.w_qp.scale;
+    for oy in 0..ho {
+        for ox in 0..wo {
+            for co in 0..cout {
+                let mut acc: i32 = 0;
+                for ky in 0..k {
+                    let sy = (oy * stride + ky) as isize - padding as isize;
+                    if sy < 0 || sy as usize >= x.h {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let sx = (ox * stride + kx) as isize - padding as isize;
+                        if sx < 0 || sx as usize >= x.w {
+                            continue;
+                        }
+                        let xoff = ((sy as usize) * x.w + sx as usize) * cin;
+                        let woff = (ky * k + kx) * cin * cout;
+                        for ci in 0..cin {
+                            let xv = x.data[xoff + ci] as i32 - zx;
+                            let wv = p.w_q[woff + ci * cout + co] as i32 - zw;
+                            acc += xv * wv;
+                        }
+                    }
+                }
+                let real = qact(acc as f32 * real_scale + p.bias[co], act);
+                out[(oy * wo + ox) * cout + co] = out_qp.quantize(real);
+            }
+        }
+    }
+}
+
+/// Naive [`super::qdwconv2d_into`] (exact-identity oracle).
+#[allow(clippy::too_many_arguments)]
+pub fn qdwconv2d_naive(
+    x: QMapRef<'_>,
+    x_qp: QParams,
+    p: &QLayerParams,
+    k: usize,
+    stride: usize,
+    padding: usize,
+    act: Activation,
+    out_qp: QParams,
+    out: &mut [i8],
+) {
+    let c = x.c;
+    let ho = (x.h + 2 * padding - k) / stride + 1;
+    let wo = (x.w + 2 * padding - k) / stride + 1;
+    debug_assert!(out.len() >= ho * wo * c, "output buffer too small");
+    let zx = x_qp.zero_point;
+    let zw = p.w_qp.zero_point;
+    let real_scale = x_qp.scale * p.w_qp.scale;
+    for oy in 0..ho {
+        for ox in 0..wo {
+            for ci in 0..c {
+                let mut acc: i32 = 0;
+                for ky in 0..k {
+                    let sy = (oy * stride + ky) as isize - padding as isize;
+                    if sy < 0 || sy as usize >= x.h {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let sx = (ox * stride + kx) as isize - padding as isize;
+                        if sx < 0 || sx as usize >= x.w {
+                            continue;
+                        }
+                        let xoff = ((sy as usize) * x.w + sx as usize) * c;
+                        let woff = (ky * k + kx) * c;
+                        let xv = x.data[xoff + ci] as i32 - zx;
+                        let wv = p.w_q[woff + ci] as i32 - zw;
+                        acc += xv * wv;
+                    }
+                }
+                let real = qact(acc as f32 * real_scale + p.bias[ci], act);
+                out[(oy * wo + ox) * c + ci] = out_qp.quantize(real);
+            }
+        }
+    }
+}
+
+/// Naive [`super::qavg_pool2d_into`] (exact-identity oracle).
+pub fn qavg_pool2d_naive(
+    x: QMapRef<'_>,
+    x_qp: QParams,
+    k: usize,
+    stride: usize,
+    out_qp: QParams,
+    out: &mut [i8],
+) {
+    let c = x.c;
+    let ho = (x.h - k) / stride + 1;
+    let wo = (x.w - k) / stride + 1;
+    debug_assert!(out.len() >= ho * wo * c, "output buffer too small");
+    let count = (k * k) as f32;
+    let zx = x_qp.zero_point as f32;
+    for oy in 0..ho {
+        for ox in 0..wo {
+            for ci in 0..c {
+                let mut sum: i32 = 0;
+                for ky in 0..k {
+                    for kx in 0..k {
+                        let xoff = ((oy * stride + ky) * x.w + ox * stride + kx) * c;
+                        sum += x.data[xoff + ci] as i32;
+                    }
+                }
+                let real = (sum as f32 - count * zx) * x_qp.scale / count;
+                out[(oy * wo + ox) * c + ci] = out_qp.quantize(real);
+            }
+        }
+    }
+}
+
+/// Naive [`super::qmax_pool2d_into`] (exact-identity oracle).
+pub fn qmax_pool2d_naive(
+    x: QMapRef<'_>,
+    x_qp: QParams,
+    k: usize,
+    stride: usize,
+    out_qp: QParams,
+    out: &mut [i8],
+) {
+    let c = x.c;
+    let ho = (x.h - k) / stride + 1;
+    let wo = (x.w - k) / stride + 1;
+    debug_assert!(out.len() >= ho * wo * c, "output buffer too small");
+    for oy in 0..ho {
+        for ox in 0..wo {
+            for ci in 0..c {
+                let mut m: i8 = i8::MIN;
+                for ky in 0..k {
+                    for kx in 0..k {
+                        let xoff = ((oy * stride + ky) * x.w + ox * stride + kx) * c;
+                        m = m.max(x.data[xoff + ci]);
+                    }
+                }
+                out[(oy * wo + ox) * c + ci] = out_qp.quantize(x_qp.dequantize(m));
+            }
+        }
+    }
+}
+
+/// Naive [`super::qdense_into`] (exact-identity oracle).
+pub fn qdense_naive(
+    x: &[i8],
+    x_qp: QParams,
+    p: &QLayerParams,
+    dout: usize,
+    out_qp: QParams,
+    out: &mut [i8],
+) {
+    debug_assert!(out.len() >= dout, "output buffer too small");
+    let zx = x_qp.zero_point;
+    let zw = p.w_qp.zero_point;
+    let real_scale = x_qp.scale * p.w_qp.scale;
+    for (j, o) in out.iter_mut().take(dout).enumerate() {
+        let mut acc: i32 = 0;
+        for (i, &xq) in x.iter().enumerate() {
+            let xv = xq as i32 - zx;
+            let wv = p.w_q[i * dout + j] as i32 - zw;
+            acc += xv * wv;
+        }
+        *o = out_qp.quantize(acc as f32 * real_scale + p.bias[j]);
+    }
+}

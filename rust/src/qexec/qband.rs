@@ -13,7 +13,8 @@
 
 use crate::model::{Layer, LayerKind, ModelChain};
 use crate::ops::{
-    qact, required_input, BandGeom, BandRange, QLayerParams, QMapRef, QParams, QuantSpec,
+    interior_hi, interior_lo, qact, required_input, BandGeom, BandRange, QBLOCK, QLayerParams,
+    QMapRef, QParams, QuantSpec,
 };
 
 /// Read-only view of one i8 band inside the pyramid.
@@ -158,6 +159,14 @@ impl<'m> QFusedBlock<'m> {
 /// padding is pre-materialized in the band (zero-point rows contribute
 /// 0); horizontal padding is a skipped contribution, also exactly 0.
 /// Returns MACs (same analytic formulas as the f32 `band_layer`).
+///
+/// Interior columns (whole window inside the band width) run blocked
+/// like the standalone `q*_into` kernels: a `QBLOCK`-wide i32 stack
+/// accumulator sweeps contiguous weight/input slices so each
+/// loaded byte feeds a whole block of output channels, with an exact
+/// `x == zero_point` skip. Only the two padded edge columns keep the
+/// guarded per-channel scalar path. i32 accumulation is associative, so
+/// the restructure is exactly identical to the scalar loops.
 #[allow(clippy::too_many_arguments)]
 fn qband_layer(
     layer: &Layer,
@@ -184,34 +193,53 @@ fn qband_layer(
         LayerKind::Conv2d if k == 1 && p == 0 && s == 1 => {
             // Pointwise fast path with the quantized image of the f32
             // relu-sparsity skip: inputs at the zero point contribute 0.
+            // Output-channel-blocked: each input byte loads once per
+            // block and sweeps a contiguous weight-row slice.
             let w = &params.w_q;
+            let mut acc = [0i32; QBLOCK];
             for oy in row_lo..row_hi {
                 for ox in 0..wo {
                     let xoff = (oy * in_band.w + ox) * cin;
                     let base = (oy * wo + ox) * cout;
-                    for co in 0..cout {
-                        let mut acc: i32 = 0;
+                    let mut co0 = 0;
+                    while co0 < cout {
+                        let bl = QBLOCK.min(cout - co0);
+                        let accs = &mut acc[..bl];
+                        accs.fill(0);
                         for ci in 0..cin {
-                            let xq = in_band.data[xoff + ci] as i32;
-                            if xq == zx {
+                            let xv = in_band.data[xoff + ci] as i32 - zx;
+                            if xv == 0 {
                                 continue;
                             }
-                            acc += (xq - zx) * (w[ci * cout + co] as i32 - zw);
+                            let ws = &w[ci * cout + co0..ci * cout + co0 + bl];
+                            for (a, &wq) in accs.iter_mut().zip(ws) {
+                                *a += xv * (wq as i32 - zw);
+                            }
                         }
-                        let real = qact(acc as f32 * rs + params.bias[co], layer.act);
-                        out_band.data[base + co] = out_qp.quantize(real);
+                        for (j, &a) in accs.iter().enumerate() {
+                            let real = qact(a as f32 * rs + params.bias[co0 + j], layer.act);
+                            out_band.data[base + co0 + j] = out_qp.quantize(real);
+                        }
+                        co0 += bl;
                     }
                 }
             }
             ((row_hi - row_lo) * wo * cout * cin) as u64
         }
         LayerKind::Conv2d => {
+            // Vertical padding is pre-materialized in the band, so only
+            // the horizontal interior/edge split is needed; interior
+            // columns run output-channel-blocked over the contiguous
+            // k·cin window row.
             let w = &params.w_q;
+            let ox_lo = interior_lo(s, p, wo);
+            let ox_hi = interior_hi(in_band.w, k, s, p, wo);
+            let mut acc = [0i32; QBLOCK];
             for oy in row_lo..row_hi {
-                for ox in 0..wo {
+                let edge = |data: &mut [i8], ox: usize| {
                     let base = (oy * wo + ox) * cout;
                     for co in 0..cout {
-                        let mut acc: i32 = 0;
+                        let mut sum: i32 = 0;
                         for ky in 0..k {
                             let sy = oy * s + ky; // vertical pad already in band
                             for kx in 0..k {
@@ -224,24 +252,66 @@ fn qband_layer(
                                 for ci in 0..cin {
                                     let xv = in_band.data[xoff + ci] as i32 - zx;
                                     let wv = w[woff + ci * cout + co] as i32 - zw;
-                                    acc += xv * wv;
+                                    sum += xv * wv;
                                 }
                             }
                         }
-                        let real = qact(acc as f32 * rs + params.bias[co], layer.act);
-                        out_band.data[base + co] = out_qp.quantize(real);
+                        let real = qact(sum as f32 * rs + params.bias[co], layer.act);
+                        data[base + co] = out_qp.quantize(real);
                     }
+                };
+                for ox in 0..ox_lo {
+                    edge(&mut *out_band.data, ox);
+                }
+                for ox in ox_lo..ox_hi {
+                    let base = (oy * wo + ox) * cout;
+                    let x0 = ox * s - p;
+                    let mut co0 = 0;
+                    while co0 < cout {
+                        let bl = QBLOCK.min(cout - co0);
+                        let accs = &mut acc[..bl];
+                        accs.fill(0);
+                        for ky in 0..k {
+                            let xrow = ((oy * s + ky) * in_band.w + x0) * cin;
+                            let wrow = ky * k * cin;
+                            for (t, &xq) in in_band.data[xrow..xrow + k * cin].iter().enumerate()
+                            {
+                                let xv = xq as i32 - zx;
+                                if xv == 0 {
+                                    continue;
+                                }
+                                let woff = (wrow + t) * cout + co0;
+                                let ws = &w[woff..woff + bl];
+                                for (a, &wq) in accs.iter_mut().zip(ws) {
+                                    *a += xv * (wq as i32 - zw);
+                                }
+                            }
+                        }
+                        for (j, &a) in accs.iter().enumerate() {
+                            let real = qact(a as f32 * rs + params.bias[co0 + j], layer.act);
+                            out_band.data[base + co0 + j] = out_qp.quantize(real);
+                        }
+                        co0 += bl;
+                    }
+                }
+                for ox in ox_hi.max(ox_lo)..wo {
+                    edge(&mut *out_band.data, ox);
                 }
             }
             ((row_hi - row_lo) * wo * cout * k * k * cin) as u64
         }
         LayerKind::DwConv2d => {
+            // Channel-blocked interior over contiguous per-tap slices;
+            // guarded per-channel scalar path on the padded edges.
             let w = &params.w_q;
+            let ox_lo = interior_lo(s, p, wo);
+            let ox_hi = interior_hi(in_band.w, k, s, p, wo);
+            let mut acc = [0i32; QBLOCK];
             for oy in row_lo..row_hi {
-                for ox in 0..wo {
+                let edge = |data: &mut [i8], ox: usize| {
                     let base = (oy * wo + ox) * cout;
                     for ci in 0..cin {
-                        let mut acc: i32 = 0;
+                        let mut sum: i32 = 0;
                         for ky in 0..k {
                             let sy = oy * s + ky;
                             for kx in 0..k {
@@ -251,47 +321,101 @@ fn qband_layer(
                                 }
                                 let xoff = (sy * in_band.w + sx as usize) * cin;
                                 let woff = (ky * k + kx) * cin;
-                                acc += (in_band.data[xoff + ci] as i32 - zx)
+                                sum += (in_band.data[xoff + ci] as i32 - zx)
                                     * (w[woff + ci] as i32 - zw);
                             }
                         }
-                        let real = qact(acc as f32 * rs + params.bias[ci], layer.act);
-                        out_band.data[base + ci] = out_qp.quantize(real);
+                        let real = qact(sum as f32 * rs + params.bias[ci], layer.act);
+                        data[base + ci] = out_qp.quantize(real);
                     }
+                };
+                for ox in 0..ox_lo {
+                    edge(&mut *out_band.data, ox);
+                }
+                for ox in ox_lo..ox_hi {
+                    let base = (oy * wo + ox) * cout;
+                    let x0 = ox * s - p;
+                    let mut c0 = 0;
+                    while c0 < cin {
+                        let bl = QBLOCK.min(cin - c0);
+                        let accs = &mut acc[..bl];
+                        accs.fill(0);
+                        for ky in 0..k {
+                            let xrow = ((oy * s + ky) * in_band.w + x0) * cin;
+                            let wrow = ky * k * cin;
+                            for kx in 0..k {
+                                let xo = xrow + kx * cin + c0;
+                                let wo2 = wrow + kx * cin + c0;
+                                let xs = &in_band.data[xo..xo + bl];
+                                let ws = &w[wo2..wo2 + bl];
+                                for ((a, &xq), &wq) in accs.iter_mut().zip(xs).zip(ws) {
+                                    *a += (xq as i32 - zx) * (wq as i32 - zw);
+                                }
+                            }
+                        }
+                        for (j, &a) in accs.iter().enumerate() {
+                            let real = qact(a as f32 * rs + params.bias[c0 + j], layer.act);
+                            out_band.data[base + c0 + j] = out_qp.quantize(real);
+                        }
+                        c0 += bl;
+                    }
+                }
+                for ox in ox_hi.max(ox_lo)..wo {
+                    edge(&mut *out_band.data, ox);
                 }
             }
             ((row_hi - row_lo) * wo * cout * k * k) as u64
         }
         LayerKind::AvgPool | LayerKind::MaxPool => {
+            // Pools are unpadded here: every window row is one contiguous
+            // k·cin slice, swept in channel blocks (i32 sums for avg,
+            // raw-q maxes for max).
             let is_avg = matches!(layer.kind, LayerKind::AvgPool);
             let count = (k * k) as f32;
             let zxf = x_qp.zero_point as f32;
+            let mut sums = [0i32; QBLOCK];
+            let mut maxs = [i8::MIN; QBLOCK];
             for oy in row_lo..row_hi {
                 for ox in 0..wo {
                     let base = (oy * wo + ox) * cout;
-                    for ci in 0..cout {
+                    let mut c0 = 0;
+                    while c0 < cout {
+                        let bl = QBLOCK.min(cout - c0);
                         if is_avg {
-                            let mut sum: i32 = 0;
+                            let accs = &mut sums[..bl];
+                            accs.fill(0);
                             for ky in 0..k {
-                                let sy = oy * s + ky;
+                                let row = ((oy * s + ky) * in_band.w + ox * s) * cin;
                                 for kx in 0..k {
-                                    let sx = ox * s + kx; // pools are unpadded here
-                                    sum += in_band.data[(sy * in_band.w + sx) * cin + ci] as i32;
+                                    let xo = row + kx * cin + c0;
+                                    for (a, &xq) in accs.iter_mut().zip(&in_band.data[xo..xo + bl])
+                                    {
+                                        *a += xq as i32;
+                                    }
                                 }
                             }
-                            let real = (sum as f32 - count * zxf) * x_qp.scale / count;
-                            out_band.data[base + ci] = out_qp.quantize(real);
+                            for (j, &sum) in accs.iter().enumerate() {
+                                let real = (sum as f32 - count * zxf) * x_qp.scale / count;
+                                out_band.data[base + c0 + j] = out_qp.quantize(real);
+                            }
                         } else {
-                            let mut m: i8 = i8::MIN;
+                            let accs = &mut maxs[..bl];
+                            accs.fill(i8::MIN);
                             for ky in 0..k {
-                                let sy = oy * s + ky;
+                                let row = ((oy * s + ky) * in_band.w + ox * s) * cin;
                                 for kx in 0..k {
-                                    let sx = ox * s + kx;
-                                    m = m.max(in_band.data[(sy * in_band.w + sx) * cin + ci]);
+                                    let xo = row + kx * cin + c0;
+                                    for (a, &xq) in accs.iter_mut().zip(&in_band.data[xo..xo + bl])
+                                    {
+                                        *a = (*a).max(xq);
+                                    }
                                 }
                             }
-                            out_band.data[base + ci] = out_qp.quantize(x_qp.dequantize(m));
+                            for (j, &m) in accs.iter().enumerate() {
+                                out_band.data[base + c0 + j] = out_qp.quantize(x_qp.dequantize(m));
+                            }
                         }
+                        c0 += bl;
                     }
                 }
             }

@@ -9,24 +9,36 @@ use crate::zoo;
 
 /// Render one profile as an aligned per-step table: execution order,
 /// label, mean/p50/p95 latency, time share, MACs, and bytes touched.
+/// Fused spans are followed by indented per-unit sub-rows (one per
+/// block layer / tail stage) so the span's interior is attributable.
 pub fn step_table(p: &StepProfile) -> String {
-    let rows: Vec<Vec<String>> = p
-        .steps
-        .iter()
-        .map(|s| {
-            vec![
-                s.meta.index.to_string(),
-                s.meta.label.clone(),
-                s.meta.kind.to_string(),
-                format!("{:.1}", s.mean_us),
-                format!("{:.1}", s.p50_us),
-                format!("{:.1}", s.p95_us),
-                format!("{:.1}%", s.share * 100.0),
-                s.macs.to_string(),
-                s.meta.bytes.to_string(),
-            ]
-        })
-        .collect();
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    for s in &p.steps {
+        rows.push(vec![
+            s.meta.index.to_string(),
+            s.meta.label.clone(),
+            s.meta.kind.to_string(),
+            format!("{:.1}", s.mean_us),
+            format!("{:.1}", s.p50_us),
+            format!("{:.1}", s.p95_us),
+            format!("{:.1}%", s.share * 100.0),
+            s.macs.to_string(),
+            s.meta.bytes.to_string(),
+        ]);
+        for u in &s.units {
+            rows.push(vec![
+                String::new(),
+                format!("  - {}", u.label),
+                "unit".to_string(),
+                format!("{:.1}", u.mean_us),
+                String::new(),
+                String::new(),
+                format!("{:.1}%", u.share * 100.0),
+                u.macs.to_string(),
+                String::new(),
+            ]);
+        }
+    }
     let mut out = format!(
         "{} [{}] — {} runs, mean in-plan {:.1} us, {} MACs/run\n",
         p.model,
@@ -98,6 +110,10 @@ mod tests {
             assert!(text.contains(&p.model), "missing model header for {}", p.model);
             for s in &p.steps {
                 assert!(text.contains(&s.meta.label), "missing step '{}'", s.meta.label);
+                for u in &s.units {
+                    let sub = format!("- {}", u.label);
+                    assert!(text.contains(&sub), "missing unit row '{}'", u.label);
+                }
             }
         }
     }

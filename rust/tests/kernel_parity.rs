@@ -1,0 +1,263 @@
+//! Randomized shape/stride/padding parity fuzzing: the engineered
+//! interior/halo kernels against the retained naive loop nests in
+//! `ops::reference`. The f32 pairs must be **bit-identical** (the
+//! compiled path is pinned bit-identical to the interpreted engine, so
+//! the restructure may not change a single ulp); the int8 pairs must be
+//! **exactly identical** (i32 accumulation is associative, so the
+//! blocked/unrolled twins must land on the same integers).
+//!
+//! Deterministic xorshift-driven sweeps plus an explicit degenerate
+//! list: kernels larger than the input, padding >= kernel, exact-fit
+//! 1x1 outputs (empty interior), stride > kernel, and channel counts
+//! crossing the int8 blocking width.
+
+use msf_cnn::model::Activation;
+use msf_cnn::ops::reference as naive;
+use msf_cnn::ops::{
+    avg_pool2d_into, conv2d_into, dense_into, dwconv2d_into, max_pool2d_into, qavg_pool2d_into,
+    qconv2d_into, qdense_into, qdwconv2d_into, qmax_pool2d_into, MapRef, ParamGen, QLayerParams,
+    QMapRef, QParams,
+};
+
+/// Tiny deterministic xorshift64 for shape draws (no `rand` in-tree).
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Self {
+        Self(seed.wrapping_mul(0x9E3779B97F4A7C15) | 1)
+    }
+
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x
+    }
+
+    /// Uniform in `[lo, hi]` inclusive.
+    fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + (self.next() as usize) % (hi - lo + 1)
+    }
+
+    fn act(&mut self) -> Activation {
+        match self.range(0, 2) {
+            0 => Activation::None,
+            1 => Activation::Relu,
+            _ => Activation::Relu6,
+        }
+    }
+
+    fn i8s(&mut self, n: usize) -> Vec<i8> {
+        (0..n).map(|_| self.next() as i8).collect()
+    }
+}
+
+/// A conv-shaped case: `(h, w, c, k, stride, padding, cout)`. The draw
+/// keeps `h + 2p >= k` and `w + 2p >= k` so the output is non-empty;
+/// everything else (padding >= k, stride > k, 1x1 outputs, kernels
+/// wider than the input) is in range.
+fn conv_case(rng: &mut Rng) -> (usize, usize, usize, usize, usize, usize, usize) {
+    loop {
+        let k = rng.range(1, 5);
+        let h = rng.range(1, 9);
+        let w = rng.range(1, 9);
+        let s = rng.range(1, 4);
+        let p = rng.range(0, k + 1);
+        if h + 2 * p < k || w + 2 * p < k {
+            continue;
+        }
+        let c = rng.range(1, 8);
+        let cout = rng.range(1, 12);
+        return (h, w, c, k, s, p, cout);
+    }
+}
+
+fn conv_out(h: usize, w: usize, k: usize, s: usize, p: usize) -> (usize, usize) {
+    ((h + 2 * p - k) / s + 1, (w + 2 * p - k) / s + 1)
+}
+
+/// Degenerate conv-shaped cases the sweep might miss, by construction:
+/// kernel wider than the input, padding >= kernel, exact-fit 1x1 output
+/// (no interior at all), stride larger than the kernel.
+const DEGENERATE: &[(usize, usize, usize, usize, usize, usize, usize)] = &[
+    (2, 2, 3, 5, 1, 4, 7),  // k > input, heavy padding
+    (4, 4, 2, 3, 1, 3, 5),  // padding >= k
+    (3, 3, 4, 3, 1, 0, 66), // exact-fit 1x1 output, cout crosses QBLOCK
+    (7, 7, 3, 2, 3, 1, 4),  // stride > k
+    (1, 9, 2, 1, 1, 0, 3),  // single-row map, 1x1 kernel
+    (9, 1, 2, 3, 2, 2, 130), // single-column map, cout > 2*QBLOCK
+];
+
+fn f32_conv_parity(case: (usize, usize, usize, usize, usize, usize, usize), seed: u64) {
+    let (h, w, c, k, s, p, cout) = case;
+    let mut gen = ParamGen::new(seed);
+    let mut rng = Rng::new(seed ^ 0xC0FFEE);
+    let act = rng.act();
+    let xf = gen.fill(h * w * c, 2.0);
+    let x = MapRef::new(h, w, c, &xf);
+    let (ho, wo) = conv_out(h, w, k, s, p);
+
+    let wt = gen.fill(k * k * c * cout, 0.8);
+    let bias = gen.fill(cout, 0.2);
+    let mut a = vec![7.75f32; ho * wo * cout];
+    let mut b = vec![-3.25f32; ho * wo * cout];
+    naive::conv2d_naive(x, &wt, &bias, k, s, p, cout, act, &mut a);
+    conv2d_into(x, &wt, &bias, k, s, p, cout, act, &mut b);
+    assert_eq!(a, b, "conv2d {case:?} act {act:?}");
+
+    let dwt = gen.fill(k * k * c, 0.8);
+    let dbias = gen.fill(c, 0.2);
+    let mut a = vec![7.75f32; ho * wo * c];
+    let mut b = vec![-3.25f32; ho * wo * c];
+    naive::dwconv2d_naive(x, &dwt, &dbias, k, s, p, act, &mut a);
+    dwconv2d_into(x, &dwt, &dbias, k, s, p, act, &mut b);
+    assert_eq!(a, b, "dwconv2d {case:?} act {act:?}");
+}
+
+fn int8_conv_parity(case: (usize, usize, usize, usize, usize, usize, usize), seed: u64) {
+    let (h, w, c, k, s, p, cout) = case;
+    let mut gen = ParamGen::new(seed);
+    let mut rng = Rng::new(seed ^ 0xFACADE);
+    let act = rng.act();
+    let x_qp = QParams::from_range(-3.0, 3.0);
+    let out_qp = QParams::from_range(-6.0, 6.0);
+    let xq_d = rng.i8s(h * w * c);
+    let x = QMapRef::new(h, w, c, &xq_d);
+    let (ho, wo) = conv_out(h, w, k, s, p);
+
+    let qp = QLayerParams {
+        w_q: rng.i8s(k * k * c * cout),
+        w_qp: QParams::from_range(-1.0, 1.0),
+        bias: gen.fill(cout, 0.2),
+    };
+    let mut a = vec![0x55i8; ho * wo * cout];
+    let mut b = vec![-0x55i8; ho * wo * cout];
+    naive::qconv2d_naive(x, x_qp, &qp, k, s, p, cout, act, out_qp, &mut a);
+    qconv2d_into(x, x_qp, &qp, k, s, p, cout, act, out_qp, &mut b);
+    assert_eq!(a, b, "qconv2d {case:?} act {act:?}");
+
+    let dqp = QLayerParams {
+        w_q: rng.i8s(k * k * c),
+        w_qp: QParams::from_range(-1.0, 1.0),
+        bias: gen.fill(c, 0.2),
+    };
+    let mut a = vec![0x55i8; ho * wo * c];
+    let mut b = vec![-0x55i8; ho * wo * c];
+    naive::qdwconv2d_naive(x, x_qp, &dqp, k, s, p, act, out_qp, &mut a);
+    qdwconv2d_into(x, x_qp, &dqp, k, s, p, act, out_qp, &mut b);
+    assert_eq!(a, b, "qdwconv2d {case:?} act {act:?}");
+}
+
+#[test]
+fn fuzz_conv_kernels_f32_bit_identical() {
+    for seed in 0..60u64 {
+        let mut rng = Rng::new(seed);
+        f32_conv_parity(conv_case(&mut rng), seed + 1000);
+    }
+}
+
+#[test]
+fn fuzz_conv_kernels_int8_exact() {
+    for seed in 0..60u64 {
+        let mut rng = Rng::new(seed ^ 0xABCD);
+        let mut case = conv_case(&mut rng);
+        // Force some channel counts across the int8 blocking width.
+        if seed % 7 == 0 {
+            case.6 = 63 + (seed as usize % 5); // 63..=67 straddles QBLOCK=64
+        }
+        int8_conv_parity(case, seed + 2000);
+    }
+}
+
+#[test]
+fn degenerate_conv_shapes_stay_identical() {
+    for (i, &case) in DEGENERATE.iter().enumerate() {
+        f32_conv_parity(case, 3000 + i as u64);
+        int8_conv_parity(case, 4000 + i as u64);
+    }
+}
+
+#[test]
+fn fuzz_pool_kernels_f32_bit_identical() {
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(seed ^ 0x9A9A);
+        let k = rng.range(1, 4);
+        let h = rng.range(k, k + 7);
+        let w = rng.range(k, k + 7);
+        let s = rng.range(1, k + 2); // stride > k in range
+        let c = rng.range(1, 9);
+        let mut gen = ParamGen::new(seed + 5000);
+        let xf = gen.fill(h * w * c, 2.0);
+        let x = MapRef::new(h, w, c, &xf);
+        let (ho, wo) = ((h - k) / s + 1, (w - k) / s + 1);
+        let mut a = vec![7.75f32; ho * wo * c];
+        let mut b = vec![-3.25f32; ho * wo * c];
+        naive::avg_pool2d_naive(x, k, s, &mut a);
+        avg_pool2d_into(x, k, s, &mut b);
+        assert_eq!(a, b, "avg_pool {h}x{w}x{c} k{k} s{s}");
+        naive::max_pool2d_naive(x, k, s, &mut a);
+        max_pool2d_into(x, k, s, &mut b);
+        assert_eq!(a, b, "max_pool {h}x{w}x{c} k{k} s{s}");
+    }
+}
+
+#[test]
+fn fuzz_pool_kernels_int8_exact() {
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(seed ^ 0x7E7E);
+        let k = rng.range(1, 4);
+        let h = rng.range(k, k + 7);
+        let w = rng.range(k, k + 7);
+        let s = rng.range(1, k + 2);
+        // Straddle the blocking width on some draws.
+        let c = if seed % 5 == 0 { 63 + (seed as usize % 4) } else { rng.range(1, 9) };
+        let x_qp = QParams::from_range(-3.0, 3.0);
+        let out_qp = QParams::from_range(-4.0, 4.0);
+        let xq_d = rng.i8s(h * w * c);
+        let x = QMapRef::new(h, w, c, &xq_d);
+        let (ho, wo) = ((h - k) / s + 1, (w - k) / s + 1);
+        let mut a = vec![0x55i8; ho * wo * c];
+        let mut b = vec![-0x55i8; ho * wo * c];
+        naive::qavg_pool2d_naive(x, x_qp, k, s, out_qp, &mut a);
+        qavg_pool2d_into(x, x_qp, k, s, out_qp, &mut b);
+        assert_eq!(a, b, "qavg_pool {h}x{w}x{c} k{k} s{s}");
+        naive::qmax_pool2d_naive(x, x_qp, k, s, out_qp, &mut a);
+        qmax_pool2d_into(x, x_qp, k, s, out_qp, &mut b);
+        assert_eq!(a, b, "qmax_pool {h}x{w}x{c} k{k} s{s}");
+    }
+}
+
+#[test]
+fn fuzz_dense_kernels_stay_identical() {
+    for seed in 0..30u64 {
+        let mut rng = Rng::new(seed ^ 0x2468);
+        let din = rng.range(1, 200);
+        // Cross the int8 blocking width on some draws.
+        let dout = if seed % 4 == 0 { 60 + (seed as usize % 10) } else { rng.range(1, 40) };
+        let mut gen = ParamGen::new(seed + 6000);
+        let xf = gen.fill(din, 2.0);
+        let wt = gen.fill(din * dout, 0.5);
+        let bias = gen.fill(dout, 0.2);
+        let mut a = vec![7.75f32; dout];
+        let mut b = vec![-3.25f32; dout];
+        naive::dense_naive(&xf, &wt, &bias, dout, &mut a);
+        dense_into(&xf, &wt, &bias, dout, &mut b);
+        assert_eq!(a, b, "dense {din}->{dout}");
+
+        let x_qp = QParams::from_range(-3.0, 3.0);
+        let out_qp = QParams::from_range(-8.0, 8.0);
+        let xq = rng.i8s(din);
+        let qp = QLayerParams {
+            w_q: rng.i8s(din * dout),
+            w_qp: QParams::from_range(-1.0, 1.0),
+            bias,
+        };
+        let mut a = vec![0x55i8; dout];
+        let mut b = vec![-0x55i8; dout];
+        naive::qdense_naive(&xq, x_qp, &qp, dout, out_qp, &mut a);
+        qdense_into(&xq, x_qp, &qp, dout, out_qp, &mut b);
+        assert_eq!(a, b, "qdense {din}->{dout}");
+    }
+}
